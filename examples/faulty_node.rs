@@ -1,0 +1,109 @@
+//! Fault robustness demo (paper §III-G in miniature).
+//!
+//! Runs the same 36-process best-effort allocation twice — healthy, and
+//! with one severely degraded node (the `lac-417` profile) — and shows
+//! that the median process and median QoS barely move while the faulty
+//! node's own clique degrades dramatically.
+//!
+//! ```sh
+//! cargo run --release --example faulty_node
+//! ```
+
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::sim::{
+    healthy_profiles, profiles_with_faulty, AsyncMode, Engine, ModeTiming, SimConfig,
+};
+use ebcomm::stats::quantile;
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{fmt_ns, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+const PROCS: usize = 36;
+const FAULTY_NODE: usize = 14;
+
+fn run(faulty: bool) -> ebcomm::sim::SimResult<GraphColoringShard> {
+    let topo = Topology::new(PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(0xFA017);
+    let shards: Vec<_> = (0..PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(
+        AsyncMode::BestEffort,
+        ModeTiming::graph_coloring(PROCS),
+        800 * MILLI,
+    );
+    cfg.seed = 0xFA017;
+    cfg.send_buffer = 64;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        200 * MILLI,
+        150 * MILLI,
+        100 * MILLI,
+        4,
+    ));
+    let profiles = if faulty {
+        profiles_with_faulty(&topo, FAULTY_NODE)
+    } else {
+        healthy_profiles(&topo)
+    };
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+fn main() {
+    println!("36 best-effort processes, one per node; node {FAULTY_NODE} degraded in run 2\n");
+    let healthy = run(false);
+    let faulty = run(true);
+
+    let med = |v: &Vec<u64>| {
+        let mut s = v.clone();
+        s.sort_unstable();
+        s[s.len() / 2]
+    };
+    println!("== per-process update counts ==");
+    println!(
+        "healthy:  median {:>7}   node-{FAULTY_NODE} {:>7}",
+        med(&healthy.updates),
+        healthy.updates[FAULTY_NODE]
+    );
+    println!(
+        "faulty:   median {:>7}   node-{FAULTY_NODE} {:>7}   (its own rate collapses; the median barely moves)",
+        med(&faulty.updates),
+        faulty.updates[FAULTY_NODE]
+    );
+
+    println!("\n== QoS: median vs p99 across snapshot windows ==");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>12}",
+        "metric", "med healthy", "med faulty", "p99 healthy", "p99 faulty"
+    );
+    for metric in MetricName::ALL {
+        let h = healthy.qos.values(metric);
+        let f = faulty.qos.values(metric);
+        let fmt = |v: f64| match metric {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => fmt_ns(v),
+            _ => format!("{v:.3}"),
+        };
+        println!(
+            "{:<26} {:>12} {:>12} {:>12} {:>12}",
+            metric.label(),
+            fmt(quantile(&h, 0.5)),
+            fmt(quantile(&f, 0.5)),
+            fmt(quantile(&h, 0.99)),
+            fmt(quantile(&f, 0.99)),
+        );
+    }
+    println!(
+        "\nThe degraded node wrecks the tails (p99) but the medians hold — the\n\
+         best-effort collective is decoupled from its worst performer (paper SIII-G)."
+    );
+}

@@ -1,0 +1,125 @@
+//! Quickstart: the ebcomm public API in five minutes.
+//!
+//! 1. best-effort channels (inlet/outlet, bounded lossy buffers,
+//!    instrumentation) on real threads;
+//! 2. a simulated 8-process cluster running the graph-coloring benchmark
+//!    under synchronous vs best-effort communication;
+//! 3. the QoS metric suite over a snapshot window.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use ebcomm::conduit::{thread_duct, ChannelConfig, InletLike, OutletLike};
+use ebcomm::exec::threads::{run_threads, ThreadExecConfig};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::SnapshotSchedule;
+use ebcomm::sim::{heterogeneous_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{fmt_ns, MILLI, SECOND};
+use ebcomm::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoringShard};
+
+fn main() {
+    // ---- 1. Best-effort channels -------------------------------------
+    println!("== best-effort channels ==");
+    let (inlet, outlet) = thread_duct::<&str>(ChannelConfig::benchmarking());
+    inlet.put("salutations");
+    inlet.put("from");
+    // Buffer capacity is 2: the third message is dropped, not queued —
+    // the sender never blocks, the receiver never waits.
+    let outcome = inlet.put("ebcomm");
+    println!("third send into a full buffer: {outcome:?}");
+    println!("received: {:?}", outlet.pull_all());
+    let t = inlet.stats().tranche();
+    println!(
+        "instrumentation: {} attempted, {} delivered\n",
+        t.attempted_sends, t.successful_sends
+    );
+
+    // ---- 2. Synchronous vs best-effort on a simulated cluster --------
+    println!("== 8 simulated processes, graph coloring, 1 virtual second ==");
+    let run = |mode: AsyncMode| {
+        let topo = Topology::new(8, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(42);
+        let shards: Vec<_> = (0..8)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 64,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(8), SECOND);
+        cfg.send_buffer = 64;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            200 * MILLI,
+            200 * MILLI,
+            100 * MILLI,
+            4,
+        ));
+        let profiles = heterogeneous_profiles(&topo, 42, 0.2);
+        let result = Engine::new(cfg, topo.clone(), profiles, shards).run();
+        let conflicts = global_conflicts(&topo, &result.shards);
+        (result, conflicts)
+    };
+    for mode in [AsyncMode::Sync, AsyncMode::BestEffort] {
+        let (result, conflicts) = run(mode);
+        println!(
+            "{:<32} {:>8.0} updates/s/cpu, {:>4} conflicts left, {:>5.3} failure rate",
+            mode.label(),
+            result.update_rate_per_cpu_hz(),
+            conflicts,
+            result.overall_failure_rate()
+        );
+        if mode == AsyncMode::BestEffort {
+            println!("\n== QoS snapshot medians (best-effort run) ==");
+            for metric in ebcomm::qos::MetricName::ALL {
+                let v = result.qos.median(metric);
+                let shown = match metric {
+                    ebcomm::qos::MetricName::SimstepPeriod
+                    | ebcomm::qos::MetricName::WalltimeLatency => fmt_ns(v),
+                    _ => format!("{v:.3}"),
+                };
+                println!("  {:<26} {shown}", metric.label());
+            }
+        }
+    }
+
+    // ---- 3. The same workload on real hardware threads ---------------
+    println!("\n== 2 real threads, 150 ms wall ==");
+    let topo = Topology::new(2, PlacementKind::SingleNode);
+    let mut rng = Xoshiro256::new(7);
+    let shards: Vec<_> = (0..2)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 64,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let result = run_threads(
+        ThreadExecConfig {
+            mode: AsyncMode::BestEffort,
+            run_for: Duration::from_millis(150),
+            ..Default::default()
+        },
+        shards,
+    );
+    println!(
+        "real threads: {:.0} updates/s/thread, {} conflicts left",
+        result.update_rate_per_cpu_hz(),
+        global_conflicts(&topo, &result.shards)
+    );
+}

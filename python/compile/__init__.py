@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT bridge.
+
+Never imported at simulation time — `make artifacts` runs `aot.py` once and
+the Rust coordinator consumes the lowered HLO text from `artifacts/`.
+"""

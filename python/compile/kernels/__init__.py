@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the benchmark compute hot-spots.
+
+* `graph_coloring.gc_update` — red-black CFL tile update.
+* `cell_update.cell_update` — digital-evolution genome evaluation.
+* `ref` — pure-jnp oracles both are tested against.
+"""
+
+from . import cell_update, graph_coloring, ref  # noqa: F401

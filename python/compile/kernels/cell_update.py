@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: digital-evolution cell-state recurrence.
+
+The compute hot-spot of the compute-intensive benchmark: batched genome
+evaluation for every cell on a shard —
+
+    new_state = tanh(gain * (state + nbr_mean) + bias)
+    harvest   = 0.5 * (1 + new_state[:, 0])
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): cells are independent, so
+the batch dimension is tiled into VMEM-sized blocks via the BlockSpec grid
+below (block = 128 cells x D lanes, padding the tail block). The recurrence
+is elementwise (VPU); `tanh` maps onto the transcendental unit. At the
+paper's 3600-cells-per-process scale one block wave fits VMEM ~17x over,
+leaving headroom for double-buffering the HBM streams. Interpret mode is
+used throughout (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Cells per VMEM block (grid tiles the batch dimension).
+BLOCK_N = 128
+
+
+def _cell_kernel(state_ref, coef_ref, nbr_ref, out_state_ref, out_harvest_ref):
+    state = state_ref[...]
+    nbr = nbr_ref[...]
+    coef = coef_ref[...]
+    d = state.shape[-1]
+    gain = coef[:, :d]
+    bias = coef[:, d:]
+    new_state = jnp.tanh(gain * (state + nbr) + bias)
+    out_state_ref[...] = new_state
+    out_harvest_ref[...] = 0.5 * (1.0 + new_state[:, 0])
+
+
+@jax.jit
+def cell_update(state, coef, nbr_mean):
+    """Batched cell recurrence via the Pallas kernel.
+
+    Args:
+      state: f32[N, D]; coef: f32[N, 2D] (gains then biases);
+      nbr_mean: f32[N, D].
+
+    Returns (new_state f32[N, D], harvest f32[N]).
+    """
+    n, d = state.shape
+    grid = (pl.cdiv(n, BLOCK_N),)
+    return pl.pallas_call(
+        _cell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, 2 * d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(state, coef, nbr_mean)

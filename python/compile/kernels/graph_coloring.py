@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: red-black CFL graph-coloring tile update.
+
+The compute hot-spot of the communication-intensive benchmark: one full
+simstep (both checkerboard phases) over an ``H x W`` vertex tile resident
+in VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole tile — colors
+(i32), probability table (f32, K=3), per-vertex uniforms and the four
+ghost borders — fits comfortably in VMEM for every shard size the paper
+uses (2048 simels → ~56 KiB at f32), so the kernel runs as a single VMEM-
+resident block and the HBM↔VMEM schedule is one load + one store per
+operand. All work is elementwise/vector (VPU); there is no matmul here, so
+the MXU is intentionally idle. Interpret mode (`interpret=True`) is used
+throughout — the CPU PJRT plugin cannot execute Mosaic custom-calls.
+
+Semantics are bit-compatible with the Rust native sweep
+(`GraphColoringShard::sweep_with_uniforms`) up to f32 rounding; the update
+rule documentation lives in `ref.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _phase(colors, probs, u, checker, phase, gn, ge, gs, gw, b):
+    """One parity phase, on values (not refs)."""
+    k = probs.shape[-1]
+    north = jnp.concatenate([gn[None, :], colors[:-1, :]], axis=0)
+    south = jnp.concatenate([colors[1:, :], gs[None, :]], axis=0)
+    west = jnp.concatenate([gw[:, None], colors[:, :-1]], axis=1)
+    east = jnp.concatenate([colors[:, 1:], ge[:, None]], axis=1)
+    conflict = (
+        (north == colors) | (south == colors) | (west == colors) | (east == colors)
+    )
+
+    onehot = (jnp.arange(k)[None, None, :] == colors[:, :, None]).astype(probs.dtype)
+    p_fail = (1.0 - b) * probs + (b / (k - 1)) * (1.0 - onehot)
+    cum = jnp.cumsum(p_fail, axis=-1)
+    newcol = jnp.sum((u[:, :, None] >= cum).astype(jnp.int32), axis=-1)
+    newcol = jnp.clip(newcol, 0, k - 1)
+
+    on_parity = checker == phase
+    active = on_parity & conflict
+    settled = on_parity & ~conflict
+    colors = jnp.where(active, newcol, colors)
+    probs = jnp.where(
+        active[:, :, None], p_fail, jnp.where(settled[:, :, None], onehot, probs)
+    )
+    return colors, probs
+
+
+def _gc_kernel(
+    parity_ref,
+    colors_ref,
+    probs_ref,
+    u_ref,
+    gn_ref,
+    ge_ref,
+    gs_ref,
+    gw_ref,
+    out_colors_ref,
+    out_probs_ref,
+    *,
+    b,
+):
+    colors = colors_ref[...]
+    probs = probs_ref[...]
+    u = u_ref[...]
+    gn = gn_ref[...]
+    ge = ge_ref[...]
+    gs = gs_ref[...]
+    gw = gw_ref[...]
+    parity = parity_ref[0]
+
+    h, w = colors.shape
+    rr = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    cc = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    checker = (rr + cc + parity) % 2
+
+    # Red phase, then black phase against the fresh red colors.
+    colors, probs = _phase(colors, probs, u, checker, 0, gn, ge, gs, gw, b)
+    colors, probs = _phase(colors, probs, u, checker, 1, gn, ge, gs, gw, b)
+
+    out_colors_ref[...] = colors
+    out_probs_ref[...] = probs
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def gc_update(parity, colors, probs, u, gn, ge, gs, gw, b=ref.CFL_B):
+    """One simstep over a tile via the Pallas kernel.
+
+    Args:
+      parity: i32[1] — global parity offset of the tile origin.
+      colors: i32[H, W]; probs: f32[H, W, K]; u: f32[H, W];
+      gn/gs: i32[W]; ge/gw: i32[H] ghost borders (-1 = unknown).
+
+    Returns (new_colors i32[H, W], new_probs f32[H, W, K]).
+    """
+    h, w = colors.shape
+    k = probs.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_gc_kernel, b=b),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), jnp.int32),
+            jax.ShapeDtypeStruct((h, w, k), jnp.float32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(parity, colors, probs, u, gn, ge, gs, gw)

@@ -1,0 +1,109 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each function here is a straightforward, kernel-free implementation of the
+same computation as its Pallas counterpart. pytest asserts allclose between
+kernel and oracle across shapes and dtypes (python/tests/test_kernels.py).
+
+Conventions shared with the Rust coordinator (rust/src/workloads/):
+
+* graph coloring: red-black sweep over an ``H x W`` tile of an
+  `(offset + r + c) % 2` checkerboard; CFL failure update
+  ``p <- (1-b) p + b/(K-1) (1 - e_cur)``; success collapse ``p <- e_cur``;
+  resampling picks ``#{k : cumsum(p)[k] <= u}`` (clipped) — exactly the
+  Rust ``acc`` loop. Ghost colors are -1 when unknown (never conflicts).
+* digital evolution: per-cell recurrence
+  ``s' = tanh(gain * (s + nbr_mean) + bias)`` with
+  ``harvest = 0.5 * (1 + s'[0])``.
+"""
+
+import jax.numpy as jnp
+
+# Paper parameter (SII-B).
+CFL_B = 0.1
+
+
+def _neighbor_views(colors, gn, ge, gs, gw):
+    """Stack the four neighbor color grids (N, E, S, W) for a tile.
+
+    Border rows/columns come from the ghost vectors; interior neighbors
+    from the tile itself.
+    """
+    north = jnp.concatenate([gn[None, :], colors[:-1, :]], axis=0)
+    south = jnp.concatenate([colors[1:, :], gs[None, :]], axis=0)
+    west = jnp.concatenate([gw[:, None], colors[:, :-1]], axis=1)
+    east = jnp.concatenate([colors[:, 1:], ge[:, None]], axis=1)
+    return jnp.stack([north, east, south, west], axis=0)
+
+
+def gc_conflicts(colors, gn, ge, gs, gw):
+    """Boolean conflict mask: does each vertex share a color with any
+    visible neighbor? Unknown ghosts are -1 and never match."""
+    nbrs = _neighbor_views(colors, gn, ge, gs, gw)
+    return jnp.any(nbrs == colors[None, :, :], axis=0)
+
+
+def gc_phase(colors, probs, u, parity_mask, gn, ge, gs, gw, b=CFL_B):
+    """One parity phase of the red-black CFL sweep.
+
+    Args:
+      colors: i32[H, W] current colors.
+      probs: f32[H, W, K] per-vertex color distributions.
+      u: f32[H, W] uniform draws (one per vertex; consumed on conflict).
+      parity_mask: bool[H, W] — vertices updated this phase.
+      gn/ge/gs/gw: i32 ghost vectors (N: [W], E: [H], S: [W], W: [H]).
+
+    Returns (new_colors, new_probs).
+    """
+    k = probs.shape[-1]
+    conflict = gc_conflicts(colors, gn, ge, gs, gw)
+    onehot = jnp.equal(jnp.arange(k)[None, None, :], colors[:, :, None]).astype(probs.dtype)
+    p_fail = (1.0 - b) * probs + (b / (k - 1)) * (1.0 - onehot)
+    cum = jnp.cumsum(p_fail, axis=-1)
+    newcol = jnp.sum((u[:, :, None] >= cum).astype(jnp.int32), axis=-1)
+    newcol = jnp.clip(newcol, 0, k - 1)
+
+    active = parity_mask & conflict
+    settled = parity_mask & ~conflict
+    colors_out = jnp.where(active, newcol, colors)
+    probs_out = jnp.where(
+        active[:, :, None],
+        p_fail,
+        jnp.where(settled[:, :, None], onehot, probs),
+    )
+    return colors_out, probs_out
+
+
+def gc_update(colors, probs, u, parity_off, gn, ge, gs, gw, b=CFL_B):
+    """One full simstep: red phase then black phase (fresh red colors)."""
+    h, w = colors.shape
+    rr = jnp.arange(h)[:, None]
+    cc = jnp.arange(w)[None, :]
+    checker = (rr + cc + parity_off) % 2
+    for phase in (0, 1):
+        mask = checker == phase
+        colors, probs = gc_phase(colors, probs, u, mask, gn, ge, gs, gw, b)
+    return colors, probs
+
+
+def gc_conflict_count(colors, gn, ge, gs, gw):
+    """Scalar conflict count over the tile (post-update quality signal)."""
+    return jnp.sum(gc_conflicts(colors, gn, ge, gs, gw).astype(jnp.int32))
+
+
+def cell_update(state, coef, nbr_mean):
+    """Digital-evolution cell recurrence (mirrors
+    ``DishtinyShard::eval_cell``).
+
+    Args:
+      state: f32[N, D] current cell states.
+      coef: f32[N, 2D] genome coefficients — gains then biases.
+      nbr_mean: f32[N, D] mean neighbor state per cell.
+
+    Returns (new_state f32[N, D], harvest f32[N]).
+    """
+    d = state.shape[-1]
+    gain = coef[:, :d]
+    bias = coef[:, d:]
+    new_state = jnp.tanh(gain * (state + nbr_mean) + bias)
+    harvest = 0.5 * (1.0 + new_state[:, 0])
+    return new_state, harvest

@@ -1,0 +1,49 @@
+"""L2: shard-update compute graphs, composed from the L1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text for the Rust
+coordinator. Each takes/returns plain arrays (no pytrees beyond tuples) so
+the PJRT calling convention on the Rust side stays trivial.
+
+Contract with `rust/src/runtime/executor.rs`: inputs and outputs are f32 or
+i32 tensors only (the `xla` crate's literal API has no u8/bool), and every
+function is lowered with `return_tuple=True`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cell_update as cu
+from .kernels import graph_coloring as gc
+from .kernels import ref
+
+
+def gc_shard_update(parity, colors, probs, u, gn, ge, gs, gw):
+    """One graph-coloring simstep over a tile + post-update conflict count.
+
+    Args:
+      parity: i32[1]; colors: i32[H, W]; probs: f32[H, W, K]; u: f32[H, W];
+      gn/gs: i32[W]; ge/gw: i32[H].
+
+    Returns:
+      (new_colors i32[H, W], new_probs f32[H, W, K], conflicts i32[]).
+    """
+    new_colors, new_probs = gc.gc_update(parity, colors, probs, u, gn, ge, gs, gw)
+    conflicts = ref.gc_conflict_count(new_colors, gn, ge, gs, gw)
+    return new_colors, new_probs, conflicts
+
+
+def de_shard_update(state, coef, nbr_mean, resource, inflow):
+    """One digital-evolution compute phase over a shard's cells.
+
+    Runs the genome-evaluation kernel and applies the harvest to each
+    cell's resource pool.
+
+    Args:
+      state: f32[N, D]; coef: f32[N, 2D]; nbr_mean: f32[N, D];
+      resource: f32[N]; inflow: f32[1] (scalar resource inflow rate).
+
+    Returns:
+      (new_state f32[N, D], new_resource f32[N], mean_harvest f32[]).
+    """
+    new_state, harvest = cu.cell_update(state, coef, nbr_mean)
+    new_resource = resource + inflow[0] * harvest
+    return new_state, new_resource, jnp.mean(harvest)

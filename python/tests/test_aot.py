@@ -1,0 +1,59 @@
+"""AOT bridge tests: lowering, manifest format, HLO text validity."""
+
+import os
+
+import jax
+import pytest
+
+from compile import aot
+
+
+def test_variant_inventory_covers_experiment_geometries():
+    names = [name for name, _, _, _ in aot.all_variants()]
+    # Paper benchmark geometry: 2048 simels -> 32x64; QoS geometry: 1x1.
+    assert "gc_update_32x64" in names
+    assert "gc_update_1x1" in names
+    # Paper DE geometry: 3600 cells.
+    assert "cell_update_3600" in names
+    assert len(names) == len(set(names)), "artifact names must be unique"
+
+
+def test_lowering_produces_parseable_hlo_text():
+    # Lower the smallest GC variant and sanity-check the HLO text.
+    name, fn, args, _ = aot.gc_variant(1, 1)
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True => root instruction is a tuple
+    assert "tuple(" in text
+
+
+def test_shape_str_format():
+    import jax.numpy as jnp
+
+    assert aot.shape_str(aot.spec((4, 4), jnp.int32)) == "i32[4,4]"
+    assert aot.shape_str(aot.spec((3,), jnp.float32)) == "f32[3]"
+    assert aot.shape_str(aot.spec((), jnp.int32)) == "i32[]"
+
+
+def test_main_writes_artifacts_and_manifest(tmp_path, monkeypatch):
+    # Restrict to the smallest variants to keep the test fast.
+    monkeypatch.setattr(aot, "GC_TILES", [(1, 1)])
+    monkeypatch.setattr(aot, "DE_CELLS", [16])
+    monkeypatch.setattr("sys.argv", ["aot", "--out-dir", str(tmp_path)])
+    assert aot.main() == 0
+
+    manifest = (tmp_path / "manifest.txt").read_text()
+    lines = [l for l in manifest.splitlines() if l and not l.startswith("#")]
+    assert len(lines) == 2
+    for line in lines:
+        name, fname, ins, outs = line.split("\t")
+        assert (tmp_path / fname).exists()
+        text = (tmp_path / fname).read_text()
+        assert "HloModule" in text
+        assert ins and outs
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

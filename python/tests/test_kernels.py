@@ -1,0 +1,195 @@
+"""Kernel vs oracle correctness — the core L1 signal.
+
+Hypothesis sweeps tile/batch geometries and input distributions; every
+case asserts the Pallas kernel (interpret mode) matches the pure-jnp
+oracle exactly (integer outputs) or to f32 tolerance (float outputs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cell_update as cu
+from compile.kernels import graph_coloring as gc
+from compile.kernels import ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def mk_gc_inputs(rng, h, w, k, uniform_probs=False):
+    colors = jnp.asarray(rng.integers(0, k, (h, w)), jnp.int32)
+    if uniform_probs:
+        probs = jnp.full((h, w, k), 1.0 / k, jnp.float32)
+    else:
+        raw = rng.random((h, w, k)).astype(np.float32) + 1e-3
+        probs = jnp.asarray(raw / raw.sum(axis=-1, keepdims=True))
+    u = jnp.asarray(rng.random((h, w)), jnp.float32)
+    gn = jnp.asarray(rng.integers(-1, k, (w,)), jnp.int32)
+    gs = jnp.asarray(rng.integers(-1, k, (w,)), jnp.int32)
+    ge = jnp.asarray(rng.integers(-1, k, (h,)), jnp.int32)
+    gw = jnp.asarray(rng.integers(-1, k, (h,)), jnp.int32)
+    return colors, probs, u, gn, ge, gs, gw
+
+
+@given(
+    h=st.integers(1, 10),
+    w=st.integers(1, 10),
+    k=st.integers(2, 5),
+    parity=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gc_kernel_matches_ref(h, w, k, parity, seed):
+    rng = np.random.default_rng(seed)
+    colors, probs, u, gn, ge, gs, gw = mk_gc_inputs(rng, h, w, k)
+    kc, kp = gc.gc_update(jnp.asarray([parity], jnp.int32), colors, probs, u, gn, ge, gs, gw)
+    rc, rp = ref.gc_update(colors, probs, u, parity, gn, ge, gs, gw)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(rp), atol=1e-6)
+
+
+@given(
+    h=st.integers(1, 8),
+    w=st.integers(1, 8),
+    parity=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gc_probs_stay_normalized_and_colors_in_range(h, w, parity, seed):
+    rng = np.random.default_rng(seed)
+    k = 3
+    colors, probs, u, gn, ge, gs, gw = mk_gc_inputs(rng, h, w, k)
+    kc, kp = gc.gc_update(jnp.asarray([parity], jnp.int32), colors, probs, u, gn, ge, gs, gw)
+    kc, kp = np.asarray(kc), np.asarray(kp)
+    assert ((kc >= 0) & (kc < k)).all()
+    np.testing.assert_allclose(kp.sum(axis=-1), 1.0, atol=1e-5)
+    assert (kp >= -1e-7).all()
+
+
+def test_gc_unknown_ghosts_never_conflict():
+    # Lone vertex, all ghosts unknown: must settle (collapse to one-hot).
+    k = 3
+    colors = jnp.asarray([[1]], jnp.int32)
+    probs = jnp.full((1, 1, k), 1.0 / k, jnp.float32)
+    u = jnp.asarray([[0.99]], jnp.float32)
+    unk = jnp.asarray([-1], jnp.int32)
+    kc, kp = gc.gc_update(jnp.asarray([0], jnp.int32), colors, probs, u, unk, unk, unk, unk)
+    assert int(kc[0, 0]) == 1
+    np.testing.assert_allclose(np.asarray(kp)[0, 0], [0.0, 1.0, 0.0], atol=1e-7)
+
+
+def test_gc_conflicting_ghost_forces_update():
+    # Lone vertex whose east ghost matches it: the CFL failure update must
+    # fire (prob of current color decays).
+    k = 3
+    colors = jnp.asarray([[2]], jnp.int32)
+    probs = jnp.full((1, 1, k), 1.0 / k, jnp.float32)
+    u = jnp.asarray([[0.0]], jnp.float32)  # u=0 -> pick color 0
+    same = jnp.asarray([2], jnp.int32)
+    unk = jnp.asarray([-1], jnp.int32)
+    kc, kp = gc.gc_update(jnp.asarray([0], jnp.int32), colors, probs, u, unk, same, unk, unk)
+    assert int(kc[0, 0]) == 0
+    expected_cur = (1 - ref.CFL_B) * (1.0 / k)
+    np.testing.assert_allclose(float(np.asarray(kp)[0, 0, 2]), expected_cur, atol=1e-6)
+
+
+def test_gc_red_phase_feeds_black_phase():
+    # Two adjacent vertices in conflict: red resolves first, black then
+    # sees the *new* red color (not the stale one) — checkerboard
+    # sequencing, the property that prevents resample storms.
+    k = 3
+    colors = jnp.asarray([[0, 0]], jnp.int32)
+    probs = jnp.asarray(np.full((1, 2, k), 1.0 / k, np.float32))
+    # red vertex (0,0): u small -> color 0 after decay? cum of p_fail:
+    # pick u so red moves to color 1; black vertex then compares against 1.
+    u = jnp.asarray([[0.5, 0.5]], jnp.float32)
+    unk1 = jnp.asarray([-1], jnp.int32)
+    unk2 = jnp.asarray([-1, -1], jnp.int32)
+    kc, _ = gc.gc_update(jnp.asarray([0], jnp.int32), colors, probs, u, unk2, unk1, unk2, unk1)
+    rc, _ = ref.gc_update(colors, probs, u, 0, unk2, unk1, unk2, unk1)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    # After the sweep the pair must not both hold color 0 anymore unless
+    # both moved to the same new color — the ref defines truth here; the
+    # point is kernel == ref through the two-phase dependency.
+
+
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cell_kernel_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    state = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    coef = jnp.asarray(rng.normal(0, 0.5, (n, 2 * d)), jnp.float32)
+    nbr = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    ks, kh = cu.cell_update(state, coef, nbr)
+    rs, rh = ref.cell_update(state, coef, nbr)
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kh), np.asarray(rh), atol=1e-6)
+
+
+@given(n=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_cell_kernel_outputs_bounded(n, seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    state = jnp.asarray(rng.normal(0, 3, (n, d)), jnp.float32)
+    coef = jnp.asarray(rng.normal(0, 2, (n, 2 * d)), jnp.float32)
+    nbr = jnp.asarray(rng.normal(0, 3, (n, d)), jnp.float32)
+    ks, kh = cu.cell_update(state, coef, nbr)
+    ks, kh = np.asarray(ks), np.asarray(kh)
+    assert (np.abs(ks) <= 1.0 + 1e-6).all(), "tanh output bound"
+    assert ((kh >= -1e-6) & (kh <= 1.0 + 1e-6)).all(), "harvest in [0,1]"
+
+
+def test_cell_kernel_batch_block_boundary():
+    # Exactly at, below, and above the BLOCK_N grid boundary.
+    rng = np.random.default_rng(7)
+    for n in (cu.BLOCK_N - 1, cu.BLOCK_N, cu.BLOCK_N + 1, 2 * cu.BLOCK_N + 3):
+        d = 8
+        state = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+        coef = jnp.asarray(rng.normal(0, 0.5, (n, 2 * d)), jnp.float32)
+        nbr = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+        ks, kh = cu.cell_update(state, coef, nbr)
+        rs, rh = ref.cell_update(state, coef, nbr)
+        np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(kh), np.asarray(rh), atol=1e-6)
+
+
+def test_gc_paper_tile_2048_simels():
+    # The paper's benchmarking geometry (2048 simels -> 32x64 tile).
+    rng = np.random.default_rng(11)
+    colors, probs, u, gn, ge, gs, gw = mk_gc_inputs(rng, 32, 64, 3, uniform_probs=True)
+    kc, kp = gc.gc_update(jnp.asarray([1], jnp.int32), colors, probs, u, gn, ge, gs, gw)
+    rc, rp = ref.gc_update(colors, probs, u, 1, gn, ge, gs, gw)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(kp), np.asarray(rp), atol=1e-6)
+
+
+def test_gc_repeated_updates_reduce_conflicts():
+    # Driving the kernel for many steps must actually solve the tile
+    # (closed torus via self-wrap ghosts is rust-side; here isolated tile
+    # with unknown ghosts suffices: interior must settle).
+    rng = np.random.default_rng(13)
+    h = w = 8
+    k = 3
+    colors, probs, u, gn, ge, gs, gw = mk_gc_inputs(rng, h, w, k, uniform_probs=True)
+    unk_w = jnp.full((w,), -1, jnp.int32)
+    unk_h = jnp.full((h,), -1, jnp.int32)
+    parity = jnp.asarray([0], jnp.int32)
+    initial = int(ref.gc_conflict_count(colors, unk_w, unk_h, unk_w, unk_h))
+    best = initial
+    for step in range(1200):
+        u = jnp.asarray(rng.random((h, w)), jnp.float32)
+        colors, probs = gc.gc_update(parity, colors, probs, u, unk_w, unk_h, unk_w, unk_h)
+        if (step + 1) % 100 == 0:
+            best = min(best, int(ref.gc_conflict_count(colors, unk_w, unk_h, unk_w, unk_h)))
+            if best == 0:
+                break
+    # Convergence is almost-sure but the hitting time is random; within
+    # 1200 sweeps the interior must have (nearly) settled.
+    assert best <= 2, f"interior failed to settle: best={best} (initial={initial})"
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,91 @@
+"""L2 model-level tests: shapes, composition, and semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.model as model
+from compile.kernels import ref
+
+settings.register_profile("model", deadline=None, max_examples=15)
+settings.load_profile("model")
+
+
+def test_gc_shard_update_shapes_and_dtypes():
+    h, w, k = 4, 4, 3
+    rng = np.random.default_rng(0)
+    out = model.gc_shard_update(
+        jnp.asarray([0], jnp.int32),
+        jnp.asarray(rng.integers(0, k, (h, w)), jnp.int32),
+        jnp.full((h, w, k), 1.0 / k, jnp.float32),
+        jnp.asarray(rng.random((h, w)), jnp.float32),
+        jnp.asarray(rng.integers(-1, k, (w,)), jnp.int32),
+        jnp.asarray(rng.integers(-1, k, (h,)), jnp.int32),
+        jnp.asarray(rng.integers(-1, k, (w,)), jnp.int32),
+        jnp.asarray(rng.integers(-1, k, (h,)), jnp.int32),
+    )
+    colors, probs, conflicts = out
+    assert colors.shape == (h, w) and colors.dtype == jnp.int32
+    assert probs.shape == (h, w, k) and probs.dtype == jnp.float32
+    assert conflicts.shape == () and conflicts.dtype == jnp.int32
+
+
+def test_gc_conflict_count_is_post_update():
+    # A tile certain to settle this update (all ghosts unknown, interior
+    # conflict-free) must report zero conflicts.
+    h = w = 2
+    k = 3
+    colors = jnp.asarray([[0, 1], [1, 0]], jnp.int32)
+    out = model.gc_shard_update(
+        jnp.asarray([0], jnp.int32),
+        colors,
+        jnp.full((h, w, k), 1.0 / k, jnp.float32),
+        jnp.zeros((h, w), jnp.float32),
+        jnp.full((w,), -1, jnp.int32),
+        jnp.full((h,), -1, jnp.int32),
+        jnp.full((w,), -1, jnp.int32),
+        jnp.full((h,), -1, jnp.int32),
+    )
+    assert int(out[2]) == 0
+
+
+@given(n=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_de_shard_update_resource_accounting(n, seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    state = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    coef = jnp.asarray(rng.normal(0, 0.5, (n, 2 * d)), jnp.float32)
+    nbr = jnp.asarray(rng.normal(0, 1, (n, d)), jnp.float32)
+    resource = jnp.asarray(rng.random((n,)), jnp.float32)
+    inflow = jnp.asarray([0.05], jnp.float32)
+
+    new_state, new_resource, mean_harvest = model.de_shard_update(
+        state, coef, nbr, resource, inflow
+    )
+    rs, rh = ref.cell_update(state, coef, nbr)
+    np.testing.assert_allclose(np.asarray(new_state), np.asarray(rs), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(new_resource), np.asarray(resource) + 0.05 * np.asarray(rh), atol=1e-6
+    )
+    np.testing.assert_allclose(float(mean_harvest), float(np.mean(np.asarray(rh))), atol=1e-6)
+    # resource only grows (harvest >= 0)
+    assert (np.asarray(new_resource) >= np.asarray(resource) - 1e-6).all()
+
+
+def test_de_zero_inflow_preserves_resource():
+    rng = np.random.default_rng(3)
+    n, d = 32, 8
+    resource = jnp.asarray(rng.random((n,)), jnp.float32)
+    _, new_resource, _ = model.de_shard_update(
+        jnp.zeros((n, d), jnp.float32),
+        jnp.zeros((n, 2 * d), jnp.float32),
+        jnp.zeros((n, d), jnp.float32),
+        resource,
+        jnp.asarray([0.0], jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(new_resource), np.asarray(resource), atol=1e-7)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

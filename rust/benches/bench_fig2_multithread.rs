@@ -1,0 +1,84 @@
+//! Paper Fig. 2 (a, b, c): multithread benchmarks.
+//!
+//! Per-thread update rate and graph-coloring solution quality at 1/4/16/64
+//! threads across asynchronicity modes 0–4, plus the digital-evolution
+//! update rates — the paper's §III-A evaluation. Compressed scales by
+//! default; `EBCOMM_FULL=1` for paper fidelity (5×5 s replicates at the
+//! paper's simel counts).
+
+use ebcomm::coordinator::experiment::BenchmarkExperiment;
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::run_benchmark;
+use ebcomm::sim::AsyncMode;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+
+    // ---- Fig. 2a/2b: graph coloring ----
+    let exp = BenchmarkExperiment::fig2_multithread_gc();
+    eprintln!("[fig2ab] running {} ...", exp.name);
+    let gc = run_benchmark(&exp);
+    println!(
+        "{}",
+        report::benchmark_table(
+            "Fig 2a — multithread graph coloring, per-thread update rate (/s)",
+            &gc,
+            &exp.cpu_counts,
+            &exp.modes,
+            false
+        )
+    );
+    println!(
+        "{}",
+        report::benchmark_table(
+            "Fig 2b — multithread graph coloring, conflicts remaining (lower better)",
+            &gc,
+            &exp.cpu_counts,
+            &exp.modes,
+            true
+        )
+    );
+    let h = report::headline(&gc, 64);
+    println!(
+        "Fig2 GC headline @64 threads: mode3/mode0 speedup {:.2}x (paper: ~2x at 64 threads), significant={}\n",
+        h.speedup_mode3_vs_mode0, h.significant
+    );
+    report::benchmark_csv(&gc).write_to("results/fig2ab_gc.csv").unwrap();
+
+    // Paper shape check: mode-4 rate should degrade with thread count
+    // (cache crowding) — the surprising SIII-A observation.
+    let m4_1 = ebcomm::stats::mean(&gc.rates(AsyncMode::NoComm, 1));
+    let m4_64 = ebcomm::stats::mean(&gc.rates(AsyncMode::NoComm, 64));
+    println!(
+        "shape: GC mode-4 per-thread rate 64t/1t = {:.2} (paper: ~0.10 — severe contention)\n",
+        m4_64 / m4_1
+    );
+
+    // ---- Fig. 2c: digital evolution ----
+    let exp = BenchmarkExperiment::fig2_multithread_de();
+    eprintln!("[fig2c] running {} ...", exp.name);
+    let de = run_benchmark(&exp);
+    println!(
+        "{}",
+        report::benchmark_table(
+            "Fig 2c — multithread digital evolution, per-thread update rate (/s)",
+            &de,
+            &exp.cpu_counts,
+            &exp.modes,
+            false
+        )
+    );
+    let m4_1 = ebcomm::stats::mean(&de.rates(AsyncMode::NoComm, 1));
+    let m4_64 = ebcomm::stats::mean(&de.rates(AsyncMode::NoComm, 64));
+    let m3_64 = ebcomm::stats::mean(&de.rates(AsyncMode::BestEffort, 64));
+    let m0_64 = ebcomm::stats::mean(&de.rates(AsyncMode::Sync, 64));
+    println!(
+        "shape: DE mode-4 64t/1t = {:.2} (paper: 0.61); mode-3 64t/1t = {:.2} (paper: ~0.43); mode3/mode0 = {:.2}x (paper: ~2.1x)",
+        m4_64 / m4_1,
+        m3_64 / m4_1,
+        m3_64 / m0_64
+    );
+    report::benchmark_csv(&de).write_to("results/fig2c_de.csv").unwrap();
+
+    eprintln!("bench_fig2_multithread done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,209 @@
+//! Hot-path microbenchmarks (§Perf deliverable).
+//!
+//! Criterion is unavailable offline, so this is a self-contained harness:
+//! warmup + N timed iterations, reporting mean/median/p95 per operation.
+//! Covers the L3 hot paths (duct ops, workload steps, DES event
+//! throughput) and the PJRT dispatch path.
+
+use std::time::Instant;
+
+use ebcomm::conduit::{thread_duct, ChannelConfig, InletLike, OutletLike};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::util::rng::{Rng, Xoshiro256};
+use ebcomm::util::{fmt_ns, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+use ebcomm::workloads::ShardWorkload;
+
+/// Time `op` over `iters` iterations (after `warmup`), returning ns/iter
+/// samples batched per `batch` iterations.
+fn time_batched(
+    warmup: usize,
+    batches: usize,
+    batch: usize,
+    mut op: impl FnMut(),
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        op();
+    }
+    let mut samples = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..batch {
+            op();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    samples
+}
+
+fn report(name: &str, samples: &[f64]) {
+    let mean = ebcomm::stats::mean(samples);
+    let med = ebcomm::stats::median(samples);
+    let p95 = ebcomm::stats::quantile(samples, 0.95);
+    println!(
+        "{name:<44} mean {:>10}  median {:>10}  p95 {:>10}",
+        fmt_ns(mean),
+        fmt_ns(med),
+        fmt_ns(p95)
+    );
+}
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==");
+
+    // Duct send+pull round trip.
+    {
+        let (inlet, outlet) = thread_duct::<u64>(ChannelConfig::qos());
+        let mut i = 0u64;
+        let s = time_batched(10_000, 50, 10_000, || {
+            inlet.put(i);
+            i = i.wrapping_add(1);
+            std::hint::black_box(outlet.pull_all());
+        });
+        report("thread duct put + pull_all (1 msg)", &s);
+    }
+
+    // Pooled-message duct traffic (64-entry border pools).
+    {
+        let (inlet, outlet) = thread_duct::<Vec<u8>>(ChannelConfig::qos());
+        let msg: Vec<u8> = vec![1; 64];
+        let s = time_batched(1_000, 50, 2_000, || {
+            inlet.put(msg.clone());
+            std::hint::black_box(outlet.pull_all());
+        });
+        report("thread duct put + pull_all (64B pooled)", &s);
+    }
+
+    // Graph-coloring step, QoS geometry (1 simel).
+    {
+        let topo = Topology::new(2, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(1);
+        let mut shard = GraphColoringShard::new(
+            GcConfig {
+                simels_per_proc: 1,
+                ..GcConfig::default()
+            },
+            &topo,
+            0,
+            &mut rng,
+        );
+        let s = time_batched(5_000, 50, 5_000, || {
+            std::hint::black_box(shard.step(&mut rng));
+        });
+        report("GC shard step (1 simel)", &s);
+    }
+
+    // Graph-coloring step, benchmark geometry (2048 simels).
+    {
+        let topo = Topology::new(2, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(2);
+        let mut shard = GraphColoringShard::new(
+            GcConfig {
+                simels_per_proc: 2048,
+                ..GcConfig::default()
+            },
+            &topo,
+            0,
+            &mut rng,
+        );
+        let s = time_batched(20, 30, 50, || {
+            std::hint::black_box(shard.step(&mut rng));
+        });
+        report("GC shard step (2048 simels)", &s);
+    }
+
+    // DES event throughput: 16-proc best-effort run, events/second.
+    {
+        let s = time_batched(0, 5, 1, || {
+            let topo = Topology::new(16, PlacementKind::OnePerNode);
+            let mut rng = Xoshiro256::new(3);
+            let shards: Vec<_> = (0..16)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig {
+                            simels_per_proc: 1,
+                            ..GcConfig::default()
+                        },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let mut cfg = SimConfig::new(
+                AsyncMode::BestEffort,
+                ModeTiming::graph_coloring(16),
+                100 * MILLI,
+            );
+            cfg.send_buffer = 64;
+            let profiles = healthy_profiles(&topo);
+            let result = Engine::new(cfg, topo, profiles, shards).run();
+            std::hint::black_box(result.updates);
+        });
+        // Each run simulates ~16 procs x ~10k updates.
+        let topo = Topology::new(16, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(3);
+        let shards: Vec<_> = (0..16)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(16),
+            100 * MILLI,
+        );
+        cfg.send_buffer = 64;
+        let profiles = healthy_profiles(&topo);
+        let result = Engine::new(cfg, topo, profiles, shards).run();
+        let total_updates: u64 = result.updates.iter().sum();
+        let wall_per_run = ebcomm::stats::mean(&s);
+        let updates_per_sec = total_updates as f64 / (wall_per_run / 1e9);
+        report("DES end-to-end run (16p, 100ms virtual)", &s);
+        println!(
+            "{:<44} {:>10.0} simsteps/s wall ({} simsteps/run)",
+            "DES simstep throughput", updates_per_sec, total_updates
+        );
+    }
+
+    // PJRT kernel dispatch (requires artifacts; skipped otherwise).
+    {
+        use ebcomm::runtime::{ArtifactManifest, HostTensor, RuntimeClient};
+        match ArtifactManifest::load(ArtifactManifest::default_dir()) {
+            Err(e) => println!("PJRT dispatch bench skipped: {e:#}"),
+            Ok(manifest) => {
+                let rt = RuntimeClient::cpu().unwrap();
+                let spec = manifest.require("gc_update_8x8").unwrap();
+                let kernel = rt.load_hlo_text("gc_update_8x8", &spec.file).unwrap();
+                let mut rng = Xoshiro256::new(4);
+                let colors: Vec<i32> = (0..64).map(|_| rng.below(3) as i32).collect();
+                let probs: Vec<f32> = vec![1.0 / 3.0; 64 * 3];
+                let u: Vec<f32> = (0..64).map(|_| rng.next_f64() as f32).collect();
+                let ghost: Vec<i32> = vec![-1; 8];
+                let inputs = [
+                    HostTensor::i32(vec![0], &[1]),
+                    HostTensor::i32(colors, &[8, 8]),
+                    HostTensor::f32(probs, &[8, 8, 3]),
+                    HostTensor::f32(u, &[8, 8]),
+                    HostTensor::i32(ghost.clone(), &[8]),
+                    HostTensor::i32(ghost.clone(), &[8]),
+                    HostTensor::i32(ghost.clone(), &[8]),
+                    HostTensor::i32(ghost, &[8]),
+                ];
+                let s = time_batched(20, 30, 50, || {
+                    std::hint::black_box(kernel.run(&inputs).unwrap());
+                });
+                report("PJRT dispatch gc_update_8x8 (end to end)", &s);
+            }
+        }
+    }
+}

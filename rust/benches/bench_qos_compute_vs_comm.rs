@@ -1,0 +1,93 @@
+//! Paper §III-C (Suppl. Figs. 28–43, Tables XVIII–XIX): QoS vs added
+//! compute work.
+//!
+//! Two processes on two nodes, one simel per CPU, sweeping 0 → 16.7M added
+//! work units per update (35 ns each, mt19937-call-equivalent). Expected
+//! shapes: simstep period grows linearly once work dominates; simstep
+//! latency falls toward 1 update; walltime latency floors near the link
+//! latency then tracks the period; clumpiness decays from ~0.96 to 0;
+//! delivery failures absent throughout.
+
+use ebcomm::coordinator::experiment::QosExperiment;
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::run_qos;
+use ebcomm::qos::MetricName;
+use ebcomm::stats::{mean, median, ols, quantile_regression};
+use ebcomm::util::fmt_ns;
+use ebcomm::workloads::workunit::PAPER_WORK_SWEEP;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut sweep = Vec::new();
+    for &work in &PAPER_WORK_SWEEP {
+        eprintln!("[qos-work] {work} units ...");
+        let exp = QosExperiment::compute_vs_comm(work);
+        let res = run_qos(&exp);
+        println!(
+            "{}",
+            report::qos_summary(&format!("{work} added work units"), &res)
+        );
+        report::qos_csv(&res)
+            .write_to(format!("results/qos_work_{work}.csv"))
+            .unwrap();
+        sweep.push((work, res));
+    }
+
+    // Regressions of each metric against log(work+1) — the paper's
+    // Suppl. Tables XVIII (means/OLS) and XIX (medians/quantile).
+    println!("== SIII-C regressions vs ln(work + 1) ==");
+    println!(
+        "{:<26} {:>13} {:>8} {:>13} {:>8}",
+        "metric", "OLS slope", "p", "QR slope", "p"
+    );
+    for metric in MetricName::ALL {
+        let (mut x, mut ym, mut yq) = (Vec::new(), Vec::new(), Vec::new());
+        for (work, res) in &sweep {
+            for r in &res.replicates {
+                x.push(((*work + 1) as f64).ln());
+                ym.push(r.qos.mean(metric));
+                yq.push(r.qos.median(metric));
+            }
+        }
+        let o = ols(&x, &ym);
+        let q = quantile_regression(&x, &yq, 0x3C);
+        let (oe, op) = o.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        let (qe, qp) = q.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        println!(
+            "{:<26} {:>13.4e} {:>8.4} {:>13.4e} {:>8.4}",
+            metric.label(),
+            oe,
+            op,
+            qe,
+            qp
+        );
+    }
+
+    // Paper point-value comparisons.
+    let low = &sweep[0].1;
+    let high = &sweep[PAPER_WORK_SWEEP.len() - 1].1;
+    println!("\n== paper-vs-measured point checks ==");
+    println!(
+        "period @0 work: median {} (paper ~14.7us) | @16.7M: median {} (paper ~507ms)",
+        fmt_ns(median(&low.all_values(MetricName::SimstepPeriod))),
+        fmt_ns(median(&high.all_values(MetricName::SimstepPeriod))),
+    );
+    println!(
+        "simstep latency @0 work: median {:.1} updates (paper ~42.5) | @16.7M: {:.2} (paper 1.00)",
+        median(&low.all_values(MetricName::SimstepLatency)),
+        median(&high.all_values(MetricName::SimstepLatency)),
+    );
+    println!(
+        "clumpiness @0 work: mean {:.2} (paper 0.96) | @16.7M: mean {:.2} (paper 0.00)",
+        mean(&low.all_values(MetricName::DeliveryClumpiness)),
+        mean(&high.all_values(MetricName::DeliveryClumpiness)),
+    );
+    println!(
+        "failure rate across sweep: max mean {:.4} (paper: no failures observed)",
+        sweep
+            .iter()
+            .map(|(_, r)| mean(&r.all_values(MetricName::DeliveryFailureRate)))
+            .fold(0.0f64, f64::max)
+    );
+    eprintln!("bench_qos_compute_vs_comm done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,65 @@
+//! Paper §III-D (Suppl. Figs. 44–59, Tables XX–XXI): QoS intranode vs
+//! internode process placement.
+//!
+//! Two processes on one node vs two nodes. Expected shapes: internode
+//! simstep period ~56 % slower (14.5 vs 9 µs); simstep latency ~1 update
+//! intranode vs ~40 internode; walltime latency ~7 µs vs ~550 µs (~50×);
+//! clumpiness ~0.01 vs ~0.96; delivery failure ~0.3 intranode vs ~0.0
+//! internode (the paper's counterintuitive result).
+
+use ebcomm::coordinator::experiment::QosExperiment;
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::run_qos;
+use ebcomm::qos::MetricName;
+use ebcomm::stats::{mean, median};
+use ebcomm::util::fmt_ns;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    eprintln!("[qos-placement] intranode ...");
+    let intra = run_qos(&QosExperiment::intranode());
+    eprintln!("[qos-placement] internode ...");
+    let inter = run_qos(&QosExperiment::internode());
+
+    println!("{}", report::qos_summary("intranode (2 procs, 1 node)", &intra));
+    println!("{}", report::qos_summary("internode (2 procs, 2 nodes)", &inter));
+    println!(
+        "{}",
+        report::qos_comparison(
+            "SIII-D placement regressions",
+            ("intranode", &intra),
+            ("internode", &inter)
+        )
+    );
+
+    println!("== paper-vs-measured point checks ==");
+    println!(
+        "period: intranode median {} (paper 9.08us) | internode {} (paper 14.4us)",
+        fmt_ns(median(&intra.all_values(MetricName::SimstepPeriod))),
+        fmt_ns(median(&inter.all_values(MetricName::SimstepPeriod))),
+    );
+    println!(
+        "walltime latency: intranode median {} (paper 6.94us) | internode {} (paper 551us)",
+        fmt_ns(median(&intra.all_values(MetricName::WalltimeLatency))),
+        fmt_ns(median(&inter.all_values(MetricName::WalltimeLatency))),
+    );
+    println!(
+        "simstep latency: intranode median {:.2} (paper 0.75) | internode {:.1} (paper 37.4)",
+        median(&intra.all_values(MetricName::SimstepLatency)),
+        median(&inter.all_values(MetricName::SimstepLatency)),
+    );
+    println!(
+        "clumpiness: intranode mean {:.3} (paper 0.014) | internode mean {:.2} (paper 0.96)",
+        mean(&intra.all_values(MetricName::DeliveryClumpiness)),
+        mean(&inter.all_values(MetricName::DeliveryClumpiness)),
+    );
+    println!(
+        "failure rate: intranode mean {:.2} (paper 0.33) | internode mean {:.2} (paper 0.00)",
+        mean(&intra.all_values(MetricName::DeliveryFailureRate)),
+        mean(&inter.all_values(MetricName::DeliveryFailureRate)),
+    );
+
+    report::qos_csv(&intra).write_to("results/qos_intranode.csv").unwrap();
+    report::qos_csv(&inter).write_to("results/qos_internode.csv").unwrap();
+    eprintln!("bench_qos_intra_vs_inter done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,64 @@
+//! Paper §III-E (Suppl. Figs. 60–75, Tables XXII–XXIII): QoS
+//! multithreading vs multiprocessing (same node, 2 CPUs).
+//!
+//! Expected shapes: threading ~2× faster simstep period (4.6 vs 9 µs);
+//! comparable median latencies with extreme outliers on the threading
+//! side; threading clumpier (median ~0.54 vs ~0.03); no thread drops vs
+//! ~0.38 process drops.
+
+use ebcomm::coordinator::experiment::QosExperiment;
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::run_qos;
+use ebcomm::qos::MetricName;
+use ebcomm::stats::{mean, median};
+use ebcomm::util::fmt_ns;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    eprintln!("[qos-backend] multithreading ...");
+    let thr = run_qos(&QosExperiment::multithread_pair());
+    eprintln!("[qos-backend] multiprocessing ...");
+    let proc = run_qos(&QosExperiment::multiprocess_pair());
+
+    println!("{}", report::qos_summary("multithreading (mutex shared memory)", &thr));
+    println!("{}", report::qos_summary("multiprocessing (intranode MPI model)", &proc));
+    println!(
+        "{}",
+        report::qos_comparison(
+            "SIII-E backend regressions",
+            ("threads", &thr),
+            ("processes", &proc)
+        )
+    );
+
+    println!("== paper-vs-measured point checks ==");
+    println!(
+        "period: threads median {} (paper 4.64us) | processes {} (paper 9.04us)",
+        fmt_ns(median(&thr.all_values(MetricName::SimstepPeriod))),
+        fmt_ns(median(&proc.all_values(MetricName::SimstepPeriod))),
+    );
+    println!(
+        "walltime latency: threads median {} (paper ~5us) | processes {} (paper ~8us)",
+        fmt_ns(median(&thr.all_values(MetricName::WalltimeLatency))),
+        fmt_ns(median(&proc.all_values(MetricName::WalltimeLatency))),
+    );
+    println!(
+        "walltime latency means (outlier-sensitive): threads {} (paper 451us!) | processes {} (paper 8.56us)",
+        fmt_ns(mean(&thr.all_values(MetricName::WalltimeLatency))),
+        fmt_ns(mean(&proc.all_values(MetricName::WalltimeLatency))),
+    );
+    println!(
+        "clumpiness: threads median {:.2} (paper 0.54) | processes median {:.2} (paper 0.03)",
+        median(&thr.all_values(MetricName::DeliveryClumpiness)),
+        median(&proc.all_values(MetricName::DeliveryClumpiness)),
+    );
+    println!(
+        "failure rate: threads mean {:.2} (paper 0.00) | processes mean {:.2} (paper 0.38)",
+        mean(&thr.all_values(MetricName::DeliveryFailureRate)),
+        mean(&proc.all_values(MetricName::DeliveryFailureRate)),
+    );
+
+    report::qos_csv(&thr).write_to("results/qos_threads.csv").unwrap();
+    report::qos_csv(&proc).write_to("results/qos_processes.csv").unwrap();
+    eprintln!("bench_qos_thread_vs_proc done in {:.1}s", t0.elapsed().as_secs_f64());
+}

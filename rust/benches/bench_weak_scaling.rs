@@ -1,0 +1,74 @@
+//! Paper §III-F (Figs. 4–8, Suppl. Figs. 9–27, Tables II–XVII): weak
+//! scaling of quality of service.
+//!
+//! 16/64/256 processes × {1, 4} CPUs/node × {1, 2048} simels/CPU. For each
+//! metric, OLS (means) and quantile (medians) regressions against log₄
+//! processor count, complete and piecewise-rightmost (64→256). Expected
+//! shape: median QoS essentially stable from 64 → 256 processes; means
+//! may drift with outliers under heterogeneous (4 CPU/node) allocations.
+
+use ebcomm::coordinator::experiment::QosExperiment;
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::run_qos;
+use ebcomm::qos::MetricName;
+use ebcomm::stats::{median, quantile_regression};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let proc_counts = [16usize, 64, 256];
+    let conditions = [(1usize, 1usize), (1, 2048), (4, 1), (4, 2048)];
+
+    for (cpus_per_node, simels) in conditions {
+        println!(
+            "########  {cpus_per_node} CPU(s)/node, {simels} simel(s)/CPU  ########"
+        );
+        let mut points = Vec::new();
+        for &procs in &proc_counts {
+            eprintln!("[weak-scaling] {procs} procs, {cpus_per_node} cpn, {simels} simels ...");
+            let exp = QosExperiment::weak_scaling(procs, cpus_per_node, simels);
+            let res = run_qos(&exp);
+            report::qos_csv(&res)
+                .write_to(format!(
+                    "results/weak_scaling_p{procs}_c{cpus_per_node}_s{simels}.csv"
+                ))
+                .unwrap();
+            points.push((procs, res));
+        }
+        for metric in MetricName::ALL {
+            println!(
+                "{}",
+                report::scaling_regression(
+                    &format!("SIII-F {cpus_per_node}cpn/{simels}simels"),
+                    &points,
+                    metric
+                )
+            );
+        }
+        // Headline stability check (paper conclusion): median QoS at 64
+        // vs 256 procs.
+        let stable_64 = &points[1].1;
+        let stable_256 = &points[2].1;
+        println!("median stability 64 -> 256 procs:");
+        for metric in MetricName::ALL {
+            let m64 = median(&stable_64.all_values(metric));
+            let m256 = median(&stable_256.all_values(metric));
+            // Significance of the rightmost piece via quantile regression.
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            for (procs, res) in &points[1..] {
+                for r in &res.replicates {
+                    x.push((*procs as f64).ln() / 4.0f64.ln());
+                    y.push(r.qos.median(metric));
+                }
+            }
+            let sig = quantile_regression(&x, &y, 0xF)
+                .map(|f| f.significant())
+                .unwrap_or(false);
+            println!(
+                "  {:<26} {m64:>12.4e} -> {m256:>12.4e}  (significant change: {sig})",
+                metric.label()
+            );
+        }
+        println!();
+    }
+    eprintln!("bench_weak_scaling done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,99 @@
+//! Aggregation: batch arbitrarily many small packets into one message.
+//!
+//! The digital-evolution workload's spawn and cell-cell communication
+//! layers dispatch "arbitrarily many" variable-size packets, handled every
+//! 16 updates with "Conduit's built-in aggregation support for
+//! inter-process transfer" (paper §II-A). An [`Aggregator`] accumulates
+//! addressed packets between flushes; each flush emits one batch per
+//! destination channel.
+
+use std::collections::BTreeMap;
+
+/// Accumulates `(destination, packet)` pairs between flushes.
+#[derive(Clone, Debug)]
+pub struct Aggregator<T> {
+    pending: BTreeMap<usize, Vec<T>>,
+    /// Total packets accumulated since the last flush.
+    count: usize,
+    /// Optional cap on buffered packets per destination; beyond it the
+    /// oldest packets are discarded (aggregation buffers are best-effort
+    /// too — unbounded accumulation on a stalled channel is exactly the
+    /// snowball failure mode §II-F2 describes).
+    per_dest_cap: usize,
+}
+
+impl<T> Aggregator<T> {
+    pub fn new(per_dest_cap: usize) -> Self {
+        assert!(per_dest_cap >= 1);
+        Self {
+            pending: BTreeMap::new(),
+            count: 0,
+            per_dest_cap,
+        }
+    }
+
+    /// Queue a packet for `dest`. Returns `true` if an old packet was
+    /// evicted to make room.
+    pub fn push(&mut self, dest: usize, packet: T) -> bool {
+        let q = self.pending.entry(dest).or_default();
+        q.push(packet);
+        self.count += 1;
+        if q.len() > self.per_dest_cap {
+            q.remove(0);
+            self.count -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Packets currently pending across all destinations.
+    pub fn pending_count(&self) -> usize {
+        self.count
+    }
+
+    /// Emit one `(dest, batch)` message per destination and reset.
+    pub fn flush(&mut self) -> Vec<(usize, Vec<T>)> {
+        self.count = 0;
+        std::mem::take(&mut self.pending).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_by_destination() {
+        let mut agg = Aggregator::new(16);
+        agg.push(2, "x");
+        agg.push(1, "y");
+        agg.push(2, "z");
+        assert_eq!(agg.pending_count(), 3);
+        let batches = agg.flush();
+        assert_eq!(batches, vec![(1, vec!["y"]), (2, vec!["x", "z"])]);
+        assert_eq!(agg.pending_count(), 0);
+        assert!(agg.flush().is_empty());
+    }
+
+    #[test]
+    fn per_dest_cap_evicts_oldest() {
+        let mut agg = Aggregator::new(2);
+        assert!(!agg.push(0, 1));
+        assert!(!agg.push(0, 2));
+        assert!(agg.push(0, 3), "third push must evict");
+        assert_eq!(agg.pending_count(), 2);
+        assert_eq!(agg.flush(), vec![(0, vec![2, 3])]);
+    }
+
+    #[test]
+    fn count_tracks_across_destinations() {
+        let mut agg = Aggregator::new(4);
+        for d in 0..5 {
+            for p in 0..3 {
+                agg.push(d, p);
+            }
+        }
+        assert_eq!(agg.pending_count(), 15);
+    }
+}

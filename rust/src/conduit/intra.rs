@@ -1,0 +1,122 @@
+//! Intra-thread duct: serial-modality transport with no locking.
+//!
+//! Conduit's design goal of "uniform inter-operation of serial, parallel,
+//! and distributed modalities" (paper §I) means the same Inlet/Outlet API
+//! must also service elements co-resident on a single thread. This backend
+//! uses `RefCell` storage — zero synchronization cost, same semantics and
+//! instrumentation as the other ducts.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use super::stats::ChannelStats;
+use super::{ChannelConfig, SendOutcome};
+use crate::util::ring::{PushOutcome, RingBuffer};
+
+struct Shared<T> {
+    buffer: RefCell<RingBuffer<T>>,
+    stats: Arc<ChannelStats>,
+}
+
+/// Sender endpoint of an intra-thread duct (not `Send`).
+pub struct IntraInlet<T> {
+    shared: Rc<Shared<T>>,
+}
+
+/// Receiver endpoint of an intra-thread duct (not `Send`).
+pub struct IntraOutlet<T> {
+    shared: Rc<Shared<T>>,
+}
+
+/// Create a connected same-thread inlet/outlet pair.
+pub fn intra_duct<T>(config: ChannelConfig) -> (IntraInlet<T>, IntraOutlet<T>) {
+    let shared = Rc::new(Shared {
+        buffer: RefCell::new(RingBuffer::new(config.capacity, config.overflow)),
+        stats: ChannelStats::new(),
+    });
+    (
+        IntraInlet {
+            shared: Rc::clone(&shared),
+        },
+        IntraOutlet { shared },
+    )
+}
+
+impl<T> IntraInlet<T> {
+    /// Best-effort put. Never blocks.
+    pub fn put(&self, msg: T) -> SendOutcome {
+        let outcome = match self.shared.buffer.borrow_mut().push(msg) {
+            PushOutcome::Stored => SendOutcome::Accepted,
+            PushOutcome::Displaced => SendOutcome::Displaced,
+            PushOutcome::Rejected => SendOutcome::Dropped,
+        };
+        self.shared
+            .stats
+            .on_send_attempt(outcome.delivered_to_channel());
+        outcome
+    }
+
+    pub fn stats(&self) -> &ChannelStats {
+        &self.shared.stats
+    }
+}
+
+impl<T> IntraOutlet<T> {
+    /// Drain every buffered message.
+    pub fn pull_all(&self) -> Vec<T> {
+        let msgs = self.shared.buffer.borrow_mut().drain_all();
+        self.shared.stats.on_pull(msgs.len() as u64);
+        msgs
+    }
+
+    /// Keep only the freshest message.
+    pub fn pull_latest(&self) -> Option<T> {
+        let mut buf = self.shared.buffer.borrow_mut();
+        let n = buf.len() as u64;
+        buf.skip_to_latest();
+        let latest = buf.pop();
+        drop(buf);
+        self.shared.stats.on_pull(n);
+        latest
+    }
+
+    pub fn stats(&self) -> &ChannelStats {
+        &self.shared.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (inlet, outlet) = intra_duct::<&str>(ChannelConfig::qos());
+        inlet.put("a");
+        inlet.put("b");
+        assert_eq!(outlet.pull_all(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn latest_skips_backlog() {
+        let (inlet, outlet) = intra_duct::<u32>(ChannelConfig::qos());
+        for i in 0..10 {
+            inlet.put(i);
+        }
+        assert_eq!(outlet.pull_latest(), Some(9));
+        assert!(outlet.pull_all().is_empty());
+        let t = outlet.stats().tranche();
+        assert_eq!(t.messages_received, 10, "skipped messages still count as received");
+    }
+
+    #[test]
+    fn drops_counted() {
+        let (inlet, _outlet) = intra_duct::<u32>(ChannelConfig::benchmarking());
+        inlet.put(0);
+        inlet.put(1);
+        assert_eq!(inlet.put(2), SendOutcome::Dropped);
+        let t = inlet.stats().tranche();
+        assert_eq!(t.attempted_sends - t.successful_sends, 1);
+    }
+}

@@ -1,0 +1,142 @@
+//! Best-effort communication channels (the Conduit-equivalent public API).
+//!
+//! A *conduit* is a directed, typed, bounded, best-effort message channel
+//! between two simulation elements. Its two endpoints are an [`Inlet`]
+//! (sender side) and an [`Outlet`] (receiver side). Delivery is
+//! best-effort: the runtime "strives to minimize message latency and loss,
+//! but guarantees elimination of neither" (paper §I). Messages that *are*
+//! delivered retain contentual integrity.
+//!
+//! Two in-process duct backends are provided:
+//!
+//! * [`thread_duct`] — shared-memory `Mutex<RingBuffer>` transport, the
+//!   multithreading backend of §III-E ("inter-thread communication via
+//!   shared memory access mediated by a `std::mutex`"). Never drops when
+//!   configured with `Overflow::Overwrite` latest-value semantics.
+//! * [`intra_duct`] — same semantics, no mutex, for co-located elements
+//!   serviced by one thread (serial modality).
+//!
+//! The simulated inter-process (MPI-model) transport lives in
+//! [`crate::sim`], which reuses the same [`stats::ChannelStats`]
+//! instrumentation and [`crate::util::ring::RingBuffer`] storage so the
+//! QoS layer is backend-agnostic.
+//!
+//! [`pooling`] and [`aggregation`] provide the message-consolidation
+//! helpers the paper's workloads rely on (§II-A).
+
+pub mod aggregation;
+pub mod intra;
+pub mod pooling;
+pub mod stats;
+pub mod thread;
+
+pub use stats::{ChannelStats, CounterTranche};
+
+use crate::util::ring::Overflow;
+
+/// Outcome of a best-effort send.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendOutcome {
+    /// Message accepted into the channel.
+    Accepted,
+    /// Message accepted, displacing the oldest buffered message
+    /// (latest-value channels).
+    Displaced,
+    /// Message dropped: the send buffer was full (MPI-model channels).
+    Dropped,
+}
+
+impl SendOutcome {
+    /// Did the message enter the channel at all?
+    pub fn delivered_to_channel(self) -> bool {
+        !matches!(self, SendOutcome::Dropped)
+    }
+}
+
+/// Configuration for a conduit.
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelConfig {
+    /// Buffer capacity in messages. The paper uses 2 for the benchmarking
+    /// experiments and 64 for the QoS experiments (§II-F).
+    pub capacity: usize,
+    /// Overflow policy: `Reject` models the MPI send buffer (drops);
+    /// `Overwrite` models shared-memory latest-value exchange (no drops).
+    pub overflow: Overflow,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            capacity: 64,
+            overflow: Overflow::Reject,
+        }
+    }
+}
+
+impl ChannelConfig {
+    /// Benchmark-experiment configuration (buffer size 2, §II-F1).
+    pub fn benchmarking() -> Self {
+        Self {
+            capacity: 2,
+            overflow: Overflow::Reject,
+        }
+    }
+
+    /// QoS-experiment configuration (buffer size 64, §II-F2).
+    pub fn qos() -> Self {
+        Self {
+            capacity: 64,
+            overflow: Overflow::Reject,
+        }
+    }
+
+    /// Shared-memory latest-value configuration (multithread backend).
+    pub fn latest_value() -> Self {
+        Self {
+            capacity: 1,
+            overflow: Overflow::Overwrite,
+        }
+    }
+}
+
+/// Generic sender endpoint.
+pub trait InletLike<T> {
+    /// Best-effort put. Never blocks.
+    fn put(&self, msg: T) -> SendOutcome;
+    /// Instrumentation handle.
+    fn stats(&self) -> &ChannelStats;
+}
+
+/// Generic receiver endpoint.
+pub trait OutletLike<T> {
+    /// Drain every currently buffered message (bulk consumption;
+    /// `MPI_Testsome`-equivalent).
+    fn pull_all(&self) -> Vec<T>;
+    /// Keep only the freshest message, discarding the backlog.
+    fn pull_latest(&self) -> Option<T>;
+    /// Instrumentation handle.
+    fn stats(&self) -> &ChannelStats;
+}
+
+pub use intra::{intra_duct, IntraInlet, IntraOutlet};
+pub use thread::{thread_duct, ThreadInlet, ThreadOutlet};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_presets_match_paper() {
+        assert_eq!(ChannelConfig::benchmarking().capacity, 2);
+        assert_eq!(ChannelConfig::qos().capacity, 64);
+        assert_eq!(ChannelConfig::latest_value().capacity, 1);
+        assert_eq!(ChannelConfig::latest_value().overflow, Overflow::Overwrite);
+    }
+
+    #[test]
+    fn send_outcome_delivery() {
+        assert!(SendOutcome::Accepted.delivered_to_channel());
+        assert!(SendOutcome::Displaced.delivered_to_channel());
+        assert!(!SendOutcome::Dropped.delivered_to_channel());
+    }
+}

@@ -1,0 +1,121 @@
+//! Pooling: consolidate per-element values into one message per update.
+//!
+//! The paper's workloads use Conduit's "built-in pooling support" to merge
+//! the per-simel payloads crossing a process pair into a single MPI
+//! message each update (§II-A, §II-B: "we used Conduit's built-in pooling
+//! feature to consolidate color information into a single MPI message
+//! between pairs of communicating processes each update").
+//!
+//! A [`Pool`] has a fixed set of *slots* (one per border simulation
+//! element). Each update, every slot is filled and the pool flushes one
+//! `Vec<T>` message. On the receiving side [`unpool`] redistributes the
+//! payload to per-slot values.
+
+/// Fixed-slot pooled message builder.
+#[derive(Clone, Debug)]
+pub struct Pool<T> {
+    slots: Vec<Option<T>>,
+}
+
+impl<T: Clone> Pool<T> {
+    /// Create a pool with `n_slots` element slots.
+    pub fn new(n_slots: usize) -> Self {
+        Self {
+            slots: vec![None; n_slots],
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Fill slot `i`; returns the previous value if the slot was already
+    /// filled this round (double-fill indicates a workload bug upstream).
+    pub fn fill(&mut self, i: usize, value: T) -> Option<T> {
+        self.slots[i].replace(value)
+    }
+
+    /// True once every slot is filled.
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(Option::is_some)
+    }
+
+    /// Emit the pooled message and reset all slots. Panics if incomplete —
+    /// pooled layers are handled on a fixed cadence, so an incomplete
+    /// flush is a logic error, not a runtime condition.
+    pub fn flush(&mut self) -> Vec<T> {
+        assert!(self.is_complete(), "pool flushed while incomplete");
+        self.slots.iter_mut().map(|s| s.take().unwrap()).collect()
+    }
+
+    /// Non-panicking flush for best-effort layers: emits whatever subset is
+    /// filled (with slot indices) and resets.
+    pub fn flush_partial(&mut self) -> Vec<(usize, T)> {
+        let mut out = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(v) = slot.take() {
+                out.push((i, v));
+            }
+        }
+        out
+    }
+}
+
+/// Redistribute a pooled message to per-slot values. Returns `None` when
+/// the payload arity does not match (corrupt/foreign message — best-effort
+/// receivers skip it).
+pub fn unpool<T>(payload: Vec<T>, expected_slots: usize) -> Option<Vec<T>> {
+    if payload.len() == expected_slots {
+        Some(payload)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_flush_roundtrip() {
+        let mut pool = Pool::new(3);
+        assert!(!pool.is_complete());
+        pool.fill(0, 10);
+        pool.fill(2, 30);
+        pool.fill(1, 20);
+        assert!(pool.is_complete());
+        assert_eq!(pool.flush(), vec![10, 20, 30]);
+        assert!(!pool.is_complete());
+    }
+
+    #[test]
+    fn double_fill_returns_previous() {
+        let mut pool = Pool::new(1);
+        assert_eq!(pool.fill(0, 1), None);
+        assert_eq!(pool.fill(0, 2), Some(1));
+        assert_eq!(pool.flush(), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete")]
+    fn incomplete_flush_panics() {
+        let mut pool: Pool<u8> = Pool::new(2);
+        pool.fill(0, 1);
+        pool.flush();
+    }
+
+    #[test]
+    fn partial_flush_keeps_indices() {
+        let mut pool = Pool::new(4);
+        pool.fill(1, "b");
+        pool.fill(3, "d");
+        assert_eq!(pool.flush_partial(), vec![(1, "b"), (3, "d")]);
+        assert_eq!(pool.flush_partial(), vec![]);
+    }
+
+    #[test]
+    fn unpool_checks_arity() {
+        assert_eq!(unpool(vec![1, 2, 3], 3), Some(vec![1, 2, 3]));
+        assert_eq!(unpool(vec![1, 2], 3), None);
+    }
+}

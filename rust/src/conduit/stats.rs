@@ -1,0 +1,189 @@
+//! Per-channel instrumentation counters.
+//!
+//! The paper's QoS methodology (§II-D/E) derives every metric from counter
+//! *tranches*: two reads of monotonically increasing counters bracketing an
+//! unimpeded snapshot window. This module holds those counters.
+//!
+//! Counters are atomics so that the same type serves both the real-thread
+//! executor (concurrent writers) and the single-threaded discrete-event
+//! simulator (relaxed ordering, negligible cost). Instrumentation mirrors
+//! the Conduit library's compile-time-switchable Inlet/Outlet wrappers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonic event counters for one directed channel endpoint pair.
+///
+/// "Inlet" counters are written by the sending side, "outlet" counters by
+/// the receiving side. A `ChannelStats` instance is shared (via `Arc`)
+/// between the endpoint wrappers and any snapshot readers.
+#[derive(Debug, Default)]
+pub struct ChannelStats {
+    /// Send attempts (inlet).
+    pub attempted_sends: AtomicU64,
+    /// Sends accepted into the channel (inlet). `attempted - successful`
+    /// sends were dropped because the send buffer was full.
+    pub successful_sends: AtomicU64,
+    /// Pull attempts (outlet), laden or not.
+    pub pull_attempts: AtomicU64,
+    /// Pull attempts that retrieved >= 1 message (outlet).
+    pub laden_pulls: AtomicU64,
+    /// Total messages retrieved by pulls (outlet).
+    pub messages_received: AtomicU64,
+    /// Round-trip touch counter (see [`crate::qos::metrics`]): increments
+    /// by two per completed round trip with the partner element.
+    pub touches: AtomicU64,
+}
+
+impl ChannelStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    #[inline]
+    pub fn on_send_attempt(&self, accepted: bool) {
+        self.attempted_sends.fetch_add(1, Ordering::Relaxed);
+        if accepted {
+            self.successful_sends.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn on_pull(&self, n_messages: u64) {
+        self.pull_attempts.fetch_add(1, Ordering::Relaxed);
+        if n_messages > 0 {
+            self.laden_pulls.fetch_add(1, Ordering::Relaxed);
+            self.messages_received.fetch_add(n_messages, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn set_touches(&self, value: u64) {
+        self.touches.store(value, Ordering::Relaxed);
+    }
+
+    /// Read a consistent-enough tranche of every counter. (Counters are
+    /// independently monotone; the paper accepts minor "motion blur" from
+    /// non-instantaneous reads, §II-E.)
+    pub fn tranche(&self) -> CounterTranche {
+        CounterTranche {
+            attempted_sends: self.attempted_sends.load(Ordering::Relaxed),
+            successful_sends: self.successful_sends.load(Ordering::Relaxed),
+            pull_attempts: self.pull_attempts.load(Ordering::Relaxed),
+            laden_pulls: self.laden_pulls.load(Ordering::Relaxed),
+            messages_received: self.messages_received.load(Ordering::Relaxed),
+            touches: self.touches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time read of [`ChannelStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterTranche {
+    pub attempted_sends: u64,
+    pub successful_sends: u64,
+    pub pull_attempts: u64,
+    pub laden_pulls: u64,
+    pub messages_received: u64,
+    pub touches: u64,
+}
+
+impl CounterTranche {
+    /// Elementwise difference `after - before` (saturating, to tolerate
+    /// observation "motion blur" without panicking; the paper notes such
+    /// minor invariant violations are possible and acceptable, §II-E).
+    pub fn delta(&self, before: &CounterTranche) -> CounterTranche {
+        CounterTranche {
+            attempted_sends: self.attempted_sends.saturating_sub(before.attempted_sends),
+            successful_sends: self
+                .successful_sends
+                .saturating_sub(before.successful_sends),
+            pull_attempts: self.pull_attempts.saturating_sub(before.pull_attempts),
+            laden_pulls: self.laden_pulls.saturating_sub(before.laden_pulls),
+            messages_received: self
+                .messages_received
+                .saturating_sub(before.messages_received),
+            touches: self.touches.saturating_sub(before.touches),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_attempt_accounting() {
+        let s = ChannelStats::new();
+        s.on_send_attempt(true);
+        s.on_send_attempt(false);
+        s.on_send_attempt(true);
+        let t = s.tranche();
+        assert_eq!(t.attempted_sends, 3);
+        assert_eq!(t.successful_sends, 2);
+    }
+
+    #[test]
+    fn pull_accounting_laden_vs_empty() {
+        let s = ChannelStats::new();
+        s.on_pull(0);
+        s.on_pull(3);
+        s.on_pull(0);
+        s.on_pull(1);
+        let t = s.tranche();
+        assert_eq!(t.pull_attempts, 4);
+        assert_eq!(t.laden_pulls, 2);
+        assert_eq!(t.messages_received, 4);
+    }
+
+    #[test]
+    fn tranche_delta() {
+        let s = ChannelStats::new();
+        s.on_send_attempt(true);
+        let before = s.tranche();
+        s.on_send_attempt(true);
+        s.on_send_attempt(false);
+        s.on_pull(2);
+        let after = s.tranche();
+        let d = after.delta(&before);
+        assert_eq!(d.attempted_sends, 2);
+        assert_eq!(d.successful_sends, 1);
+        assert_eq!(d.messages_received, 2);
+        assert_eq!(d.laden_pulls, 1);
+    }
+
+    #[test]
+    fn delta_saturates_rather_than_panics() {
+        let a = CounterTranche {
+            attempted_sends: 5,
+            ..Default::default()
+        };
+        let b = CounterTranche {
+            attempted_sends: 9,
+            ..Default::default()
+        };
+        assert_eq!(a.delta(&b).attempted_sends, 0);
+    }
+
+    #[test]
+    fn concurrent_updates_are_consistent() {
+        let s = ChannelStats::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    s.on_send_attempt(true);
+                    s.on_pull(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let t = s.tranche();
+        assert_eq!(t.attempted_sends, 4000);
+        assert_eq!(t.successful_sends, 4000);
+        assert_eq!(t.messages_received, 4000);
+    }
+}

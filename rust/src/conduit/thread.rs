@@ -1,0 +1,208 @@
+//! Shared-memory inter-thread duct (`Mutex<RingBuffer>` transport).
+//!
+//! This is the multithreading backend the paper benchmarks in §III-A and
+//! characterizes in §III-E: "inter-thread communication occurring via
+//! shared memory access mediated by a C++ `std::mutex`". With the default
+//! latest-value configuration there is no send buffer to fill, so delivery
+//! failures cannot occur (§III-E.5) — but pulls contend on the mutex, and
+//! arrival can be clumpy when the reader is descheduled.
+
+use std::sync::{Arc, Mutex};
+
+use super::stats::ChannelStats;
+use super::{ChannelConfig, InletLike, OutletLike, SendOutcome};
+use crate::util::ring::{PushOutcome, RingBuffer};
+#[cfg(test)]
+use crate::util::ring::Overflow;
+
+struct Shared<T> {
+    buffer: Mutex<RingBuffer<T>>,
+    stats: Arc<ChannelStats>,
+}
+
+/// Sender endpoint of a thread duct.
+pub struct ThreadInlet<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiver endpoint of a thread duct.
+pub struct ThreadOutlet<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a connected inlet/outlet pair over a mutex-guarded ring buffer.
+pub fn thread_duct<T>(config: ChannelConfig) -> (ThreadInlet<T>, ThreadOutlet<T>) {
+    let shared = Arc::new(Shared {
+        buffer: Mutex::new(RingBuffer::new(config.capacity, config.overflow)),
+        stats: ChannelStats::new(),
+    });
+    (
+        ThreadInlet {
+            shared: Arc::clone(&shared),
+        },
+        ThreadOutlet { shared },
+    )
+}
+
+impl<T> InletLike<T> for ThreadInlet<T> {
+    fn put(&self, msg: T) -> SendOutcome {
+        let outcome = {
+            let mut buf = self.shared.buffer.lock().unwrap();
+            buf.push(msg)
+        };
+        let outcome = match outcome {
+            PushOutcome::Stored => SendOutcome::Accepted,
+            PushOutcome::Displaced => SendOutcome::Displaced,
+            PushOutcome::Rejected => SendOutcome::Dropped,
+        };
+        self.shared
+            .stats
+            .on_send_attempt(outcome.delivered_to_channel());
+        outcome
+    }
+
+    fn stats(&self) -> &ChannelStats {
+        &self.shared.stats
+    }
+}
+
+impl<T> OutletLike<T> for ThreadOutlet<T> {
+    fn pull_all(&self) -> Vec<T> {
+        let msgs = {
+            let mut buf = self.shared.buffer.lock().unwrap();
+            buf.drain_all()
+        };
+        self.shared.stats.on_pull(msgs.len() as u64);
+        msgs
+    }
+
+    fn pull_latest(&self) -> Option<T> {
+        let (latest, n) = {
+            let mut buf = self.shared.buffer.lock().unwrap();
+            let n = buf.len() as u64;
+            buf.skip_to_latest();
+            (buf.pop(), n)
+        };
+        self.shared.stats.on_pull(n);
+        latest
+    }
+
+    fn stats(&self) -> &ChannelStats {
+        &self.shared.stats
+    }
+}
+
+// Explicit Send/Sync: endpoints move across threads; the Mutex guards T.
+unsafe impl<T: Send> Send for ThreadInlet<T> {}
+unsafe impl<T: Send> Send for ThreadOutlet<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, prop_assert, Config};
+
+    #[test]
+    fn roundtrip_preserves_order() {
+        let (inlet, outlet) = thread_duct::<u32>(ChannelConfig::qos());
+        for i in 0..5 {
+            assert_eq!(inlet.put(i), SendOutcome::Accepted);
+        }
+        assert_eq!(outlet.pull_all(), vec![0, 1, 2, 3, 4]);
+        assert!(outlet.pull_all().is_empty());
+    }
+
+    #[test]
+    fn latest_value_never_drops() {
+        let (inlet, outlet) = thread_duct::<u32>(ChannelConfig::latest_value());
+        for i in 0..100 {
+            assert!(inlet.put(i).delivered_to_channel());
+        }
+        assert_eq!(outlet.pull_latest(), Some(99));
+        let t = inlet.stats().tranche();
+        assert_eq!(t.attempted_sends, 100);
+        assert_eq!(t.successful_sends, 100, "shared memory backend never drops");
+    }
+
+    #[test]
+    fn reject_buffer_drops_when_full() {
+        let (inlet, outlet) = thread_duct::<u32>(ChannelConfig::benchmarking());
+        assert_eq!(inlet.put(1), SendOutcome::Accepted);
+        assert_eq!(inlet.put(2), SendOutcome::Accepted);
+        assert_eq!(inlet.put(3), SendOutcome::Dropped);
+        let t = inlet.stats().tranche();
+        assert_eq!(t.attempted_sends, 3);
+        assert_eq!(t.successful_sends, 2);
+        assert_eq!(outlet.pull_all(), vec![1, 2]);
+    }
+
+    #[test]
+    fn pull_instrumentation() {
+        let (inlet, outlet) = thread_duct::<u8>(ChannelConfig::qos());
+        outlet.pull_all(); // empty pull
+        inlet.put(1);
+        inlet.put(2);
+        outlet.pull_all(); // laden pull, 2 messages
+        let t = outlet.stats().tranche();
+        assert_eq!(t.pull_attempts, 2);
+        assert_eq!(t.laden_pulls, 1);
+        assert_eq!(t.messages_received, 2);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let (inlet, outlet) = thread_duct::<u64>(ChannelConfig::qos());
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000u64 {
+                inlet.put(i);
+            }
+            inlet
+        });
+        let mut got = Vec::new();
+        while got.len() < 1 {
+            got.extend(outlet.pull_all());
+        }
+        let inlet = producer.join().unwrap();
+        loop {
+            let batch = outlet.pull_all();
+            if batch.is_empty() {
+                break;
+            }
+            got.extend(batch);
+        }
+        // Everything accepted must come out, in order.
+        let t = inlet.stats().tranche();
+        assert_eq!(got.len() as u64, t.successful_sends);
+        assert!(got.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn prop_message_conservation() {
+        // delivered + dropped == attempted for arbitrary interleavings.
+        forall(Config::default().cases(128), |g| {
+            let cap = g.usize_in(1, 16);
+            let (inlet, outlet) = thread_duct::<u64>(ChannelConfig {
+                capacity: cap,
+                overflow: Overflow::Reject,
+            });
+            let ops = g.usize_in(1, 200);
+            let mut delivered = 0u64;
+            for i in 0..ops {
+                if g.chance(0.6) {
+                    inlet.put(i as u64);
+                } else {
+                    delivered += outlet.pull_all().len() as u64;
+                }
+            }
+            delivered += outlet.pull_all().len() as u64;
+            let t = inlet.stats().tranche();
+            prop_assert(
+                delivered == t.successful_sends,
+                format!("delivered={delivered} successful={}", t.successful_sends),
+            )?;
+            prop_assert(
+                t.successful_sends <= t.attempted_sends,
+                "successful > attempted",
+            )
+        });
+    }
+}

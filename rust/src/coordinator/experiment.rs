@@ -1,0 +1,331 @@
+//! Experiment definitions for every table and figure in the paper.
+//!
+//! Each preset mirrors a paper treatment (see DESIGN.md §4 for the
+//! experiment index). Paper-scale parameters (5 s benchmark windows, five
+//! 1-minute-spaced QoS snapshots, 5–10 replicates) are expensive under
+//! simulation, so every preset also has a *compressed* variant preserving
+//! the treatment structure at reduced virtual runtime; benches run
+//! compressed by default and full scale with `EBCOMM_FULL=1`.
+
+use crate::net::PlacementKind;
+use crate::qos::SnapshotSchedule;
+use crate::sim::{AsyncMode, CommBackend, ContentionModel, ModeTiming};
+use crate::util::{Nanos, MILLI, SECOND};
+
+/// Which benchmark workload an experiment runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    GraphColoring,
+    DigitalEvolution,
+}
+
+impl Workload {
+    pub fn label(self) -> &'static str {
+        match self {
+            Workload::GraphColoring => "graph coloring",
+            Workload::DigitalEvolution => "digital evolution",
+        }
+    }
+}
+
+/// Is full-scale (paper-fidelity) execution requested?
+pub fn full_scale() -> bool {
+    std::env::var("EBCOMM_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A performance-benchmark experiment (Figs. 2–3).
+#[derive(Clone, Debug)]
+pub struct BenchmarkExperiment {
+    pub name: &'static str,
+    pub workload: Workload,
+    /// CPU counts swept (paper: 1, 4, 16, 64).
+    pub cpu_counts: Vec<usize>,
+    pub modes: Vec<AsyncMode>,
+    /// Threads on one node (true) vs one process per node (false).
+    pub multithread: bool,
+    pub replicates: usize,
+    /// Virtual run window per replicate (paper: 5 s).
+    pub run_for: Nanos,
+    /// Simulation elements per CPU (paper: 2048 GC / 3600 DE).
+    pub simels_per_cpu: usize,
+    /// Scale nominal per-simel cost by this factor — lets compressed runs
+    /// host fewer real simels at unchanged virtual workload profile.
+    pub cost_scale: f64,
+    pub send_buffer: usize,
+    pub seed: u64,
+}
+
+impl BenchmarkExperiment {
+    fn base(name: &'static str, workload: Workload, multithread: bool) -> Self {
+        let full = full_scale();
+        let (simels, cost_scale) = match (workload, full) {
+            (Workload::GraphColoring, true) => (2048, 1.0),
+            (Workload::GraphColoring, false) => (256, 8.0),
+            (Workload::DigitalEvolution, true) => (3600, 1.0),
+            (Workload::DigitalEvolution, false) => (400, 9.0),
+        };
+        Self {
+            name,
+            workload,
+            cpu_counts: vec![1, 4, 16, 64],
+            modes: AsyncMode::ALL.to_vec(),
+            multithread,
+            replicates: if full { 5 } else { 3 },
+            run_for: if full { 5 * SECOND } else { SECOND },
+            simels_per_cpu: simels,
+            cost_scale,
+            send_buffer: 2,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Fig. 2a/2b: multithread graph coloring.
+    pub fn fig2_multithread_gc() -> Self {
+        Self::base("fig2ab_multithread_graph_coloring", Workload::GraphColoring, true)
+    }
+
+    /// Fig. 2c: multithread digital evolution.
+    pub fn fig2_multithread_de() -> Self {
+        Self::base("fig2c_multithread_digital_evolution", Workload::DigitalEvolution, true)
+    }
+
+    /// Fig. 3a/3b: multiprocess graph coloring (distinct nodes).
+    pub fn fig3_multiprocess_gc() -> Self {
+        Self::base("fig3ab_multiprocess_graph_coloring", Workload::GraphColoring, false)
+    }
+
+    /// Fig. 3c: multiprocess digital evolution.
+    pub fn fig3_multiprocess_de() -> Self {
+        Self::base("fig3c_multiprocess_digital_evolution", Workload::DigitalEvolution, false)
+    }
+
+    pub fn placement(&self) -> PlacementKind {
+        if self.multithread {
+            PlacementKind::SingleNode
+        } else {
+            PlacementKind::OnePerNode
+        }
+    }
+
+    pub fn backend(&self) -> CommBackend {
+        if self.multithread {
+            CommBackend::SharedMemory
+        } else {
+            CommBackend::Mpi
+        }
+    }
+
+    pub fn contention(&self) -> ContentionModel {
+        if !self.multithread {
+            return ContentionModel::none();
+        }
+        match self.workload {
+            Workload::GraphColoring => ContentionModel::graph_coloring_threads(),
+            Workload::DigitalEvolution => ContentionModel::digital_evolution_threads(),
+        }
+    }
+
+    pub fn timing(&self, n_cpus: usize) -> ModeTiming {
+        let mut t = match self.workload {
+            Workload::GraphColoring => ModeTiming::graph_coloring(n_cpus),
+            Workload::DigitalEvolution => ModeTiming::digital_evolution(n_cpus),
+        };
+        // Compressed runs scale the mode-2 epoch (paper: 1 s of a 5 s
+        // window) to a fifth of the virtual window so fixed-barrier
+        // behaviour — including the startup-skew race — is exercised.
+        if !full_scale() {
+            t.fixed_epoch = (self.run_for / 5).max(1);
+            t.fixed_skew_max =
+                ((n_cpus as f64 / 64.0).min(1.0) * t.fixed_epoch as f64) as u64;
+        }
+        t
+    }
+}
+
+/// A quality-of-service experiment (§III-C..G).
+#[derive(Clone, Debug)]
+pub struct QosExperiment {
+    pub name: &'static str,
+    pub n_procs: usize,
+    pub placement: PlacementKind,
+    pub backend: CommBackend,
+    /// Simulation elements per CPU (1 = maximal communication intensity).
+    pub simels_per_cpu: usize,
+    pub cost_scale: f64,
+    pub added_work_units: u64,
+    pub replicates: usize,
+    pub send_buffer: usize,
+    pub schedule: SnapshotSchedule,
+    pub run_for: Nanos,
+    /// Node index hosting the faulty profile, if any (§III-G).
+    pub faulty_node: Option<usize>,
+    pub seed: u64,
+}
+
+impl QosExperiment {
+    fn base(name: &'static str, n_procs: usize, placement: PlacementKind) -> Self {
+        let full = full_scale();
+        let (schedule, run_for) = if full {
+            (SnapshotSchedule::paper(), 301 * SECOND)
+        } else {
+            (
+                SnapshotSchedule::compressed(500 * MILLI, 500 * MILLI, 100 * MILLI, 5),
+                2_600 * MILLI,
+            )
+        };
+        Self {
+            name,
+            n_procs,
+            placement,
+            backend: CommBackend::Mpi,
+            simels_per_cpu: 1,
+            cost_scale: 1.0,
+            added_work_units: 0,
+            replicates: if full { 10 } else { 3 },
+            send_buffer: 64,
+            schedule,
+            run_for,
+            faulty_node: None,
+            seed: 0x0905,
+        }
+    }
+
+    /// §III-C: compute-vs-communication sweep point (2 procs, 2 nodes,
+    /// 1 simel/CPU, `work` added units).
+    pub fn compute_vs_comm(work: u64) -> Self {
+        let mut e = Self::base("qos_compute_vs_comm", 2, PlacementKind::OnePerNode);
+        e.added_work_units = work;
+        // Heavy-work points need longer virtual windows than the
+        // compressed default to complete even a handful of updates.
+        if !full_scale() && work >= 262_144 {
+            e.schedule = SnapshotSchedule::compressed(2 * SECOND, 2 * SECOND, SECOND, 3);
+            e.run_for = 9 * SECOND;
+            e.replicates = 2;
+        }
+        e
+    }
+
+    /// §III-D: two processes on one node (intranode MPI).
+    pub fn intranode() -> Self {
+        Self::base("qos_intranode", 2, PlacementKind::SingleNode)
+    }
+
+    /// §III-D: two processes on distinct nodes (internode MPI).
+    pub fn internode() -> Self {
+        Self::base("qos_internode", 2, PlacementKind::OnePerNode)
+    }
+
+    /// §III-E: two threads on one node (shared-memory backend).
+    pub fn multithread_pair() -> Self {
+        let mut e = Self::base("qos_multithread", 2, PlacementKind::SingleNode);
+        e.backend = CommBackend::SharedMemory;
+        e
+    }
+
+    /// §III-E: two processes on one node (MPI backend). Alias of
+    /// [`Self::intranode`] with its own name for the report.
+    pub fn multiprocess_pair() -> Self {
+        let mut e = Self::base("qos_multiprocess", 2, PlacementKind::SingleNode);
+        e.name = "qos_multiprocess";
+        e
+    }
+
+    /// §III-F: weak-scaling point.
+    pub fn weak_scaling(n_procs: usize, cpus_per_node: usize, simels: usize) -> Self {
+        let placement = if cpus_per_node == 1 {
+            PlacementKind::OnePerNode
+        } else {
+            PlacementKind::PerNode(cpus_per_node)
+        };
+        let mut e = Self::base("qos_weak_scaling", n_procs, placement);
+        if simels > 1 && !full_scale() {
+            e.simels_per_cpu = 256;
+            e.cost_scale = simels as f64 / 256.0;
+        } else {
+            e.simels_per_cpu = simels;
+        }
+        e.replicates = if full_scale() { 10 } else { 2 };
+        e
+    }
+
+    /// §III-G: 256-process allocation with or without the faulty node.
+    pub fn faulty_allocation(include_faulty: bool) -> Self {
+        let mut e = Self::weak_scaling(256, 4, 1);
+        e.name = if include_faulty {
+            "qos_with_lac417"
+        } else {
+            "qos_without_lac417"
+        };
+        // Place the degraded node mid-allocation (paper: lac-417).
+        e.faulty_node = include_faulty.then_some(17);
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_presets_cover_paper_sweep() {
+        let e = BenchmarkExperiment::fig3_multiprocess_gc();
+        assert_eq!(e.cpu_counts, vec![1, 4, 16, 64]);
+        assert_eq!(e.modes.len(), 5);
+        assert_eq!(e.send_buffer, 2, "paper benchmarking buffer size");
+        assert!(!e.multithread);
+        assert_eq!(e.placement(), PlacementKind::OnePerNode);
+        assert_eq!(e.backend(), CommBackend::Mpi);
+    }
+
+    #[test]
+    fn multithread_presets_use_shared_memory_and_contention() {
+        let e = BenchmarkExperiment::fig2_multithread_gc();
+        assert!(e.multithread);
+        assert_eq!(e.backend(), CommBackend::SharedMemory);
+        assert!(e.contention().factor(64) > 5.0);
+        let de = BenchmarkExperiment::fig2_multithread_de();
+        assert!(de.contention().factor(64) < 3.0, "DE contends less");
+    }
+
+    #[test]
+    fn virtual_workload_profile_preserved_under_compression() {
+        // simels * cost_scale must equal the paper's full-scale product.
+        let e = BenchmarkExperiment::fig3_multiprocess_gc();
+        let product = e.simels_per_cpu as f64 * e.cost_scale;
+        assert_eq!(product, 2048.0);
+        let d = BenchmarkExperiment::fig2_multithread_de();
+        assert_eq!(d.simels_per_cpu as f64 * d.cost_scale, 3600.0);
+    }
+
+    #[test]
+    fn qos_presets_match_paper_parameters() {
+        let e = QosExperiment::compute_vs_comm(4096);
+        assert_eq!(e.n_procs, 2);
+        assert_eq!(e.simels_per_cpu, 1, "1 simel/CPU maximizes comm intensity");
+        assert_eq!(e.send_buffer, 64, "QoS experiments need buffer 64");
+        assert_eq!(e.added_work_units, 4096);
+
+        assert_eq!(QosExperiment::intranode().placement, PlacementKind::SingleNode);
+        assert_eq!(QosExperiment::internode().placement, PlacementKind::OnePerNode);
+        assert_eq!(
+            QosExperiment::multithread_pair().backend,
+            CommBackend::SharedMemory
+        );
+    }
+
+    #[test]
+    fn weak_scaling_placements() {
+        let e = QosExperiment::weak_scaling(64, 4, 2048);
+        assert_eq!(e.placement, PlacementKind::PerNode(4));
+        assert_eq!(e.simels_per_cpu as f64 * e.cost_scale, 2048.0);
+        let h = QosExperiment::weak_scaling(256, 1, 1);
+        assert_eq!(h.placement, PlacementKind::OnePerNode);
+        assert_eq!(h.simels_per_cpu, 1);
+    }
+
+    #[test]
+    fn faulty_allocation_toggles_node() {
+        assert!(QosExperiment::faulty_allocation(true).faulty_node.is_some());
+        assert!(QosExperiment::faulty_allocation(false).faulty_node.is_none());
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment orchestration: configs for every paper table/figure,
+//! replicate sweeps, and report rendering.
+
+pub mod experiment;
+pub mod report;
+pub mod runner;
+
+pub use experiment::{BenchmarkExperiment, QosExperiment, Workload};
+pub use runner::{run_benchmark, run_qos};

@@ -1,0 +1,331 @@
+//! Paper-style report rendering: figure bars with bootstrap CIs,
+//! regression tables, significance calls.
+
+use crate::qos::MetricName;
+use crate::sim::AsyncMode;
+use crate::stats::{bootstrap_mean_ci95, mean, median, ols, quantile_regression};
+use crate::util::csv::CsvTable;
+use crate::util::fmt_ns;
+
+use super::runner::{BenchmarkResults, QosResults};
+
+/// Render a Fig-2/3-style table: per-CPU update rate (or quality) by mode
+/// and CPU count, with bootstrapped 95 % CIs.
+pub fn benchmark_table(
+    title: &str,
+    results: &BenchmarkResults,
+    cpu_counts: &[usize],
+    modes: &[AsyncMode],
+    quality: bool,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<34} {:>10} {:>12} {:>12} {:>12}\n",
+        "mode",
+        "cpus",
+        if quality { "quality" } else { "rate/cpu" },
+        "ci95_lo",
+        "ci95_hi"
+    ));
+    for &mode in modes {
+        for &cpus in cpu_counts {
+            let vals = if quality {
+                results.qualities(mode, cpus)
+            } else {
+                results.rates(mode, cpus)
+            };
+            if vals.is_empty() {
+                continue;
+            }
+            let ci = bootstrap_mean_ci95(&vals, 0xC1);
+            out.push_str(&format!(
+                "{:<34} {:>10} {:>12.2} {:>12.2} {:>12.2}\n",
+                mode.label(),
+                cpus,
+                ci.estimate,
+                ci.lo,
+                ci.hi
+            ));
+        }
+    }
+    out
+}
+
+/// The paper's headline comparisons for a benchmark figure: speedup of
+/// best-effort (mode 3) over fully-synchronous (mode 0) at the largest CPU
+/// count, and weak-scaling efficiency of mode 3 vs a single CPU.
+pub struct Headline {
+    pub speedup_mode3_vs_mode0: f64,
+    pub scaling_efficiency_mode3: f64,
+    pub significant: bool,
+}
+
+pub fn headline(results: &BenchmarkResults, max_cpus: usize) -> Headline {
+    let m3 = results.rates(AsyncMode::BestEffort, max_cpus);
+    let m0 = results.rates(AsyncMode::Sync, max_cpus);
+    let single = results.rates(AsyncMode::BestEffort, 1);
+    let ci3 = bootstrap_mean_ci95(&m3, 1);
+    let ci0 = bootstrap_mean_ci95(&m0, 2);
+    Headline {
+        speedup_mode3_vs_mode0: if mean(&m0) > 0.0 {
+            mean(&m3) / mean(&m0)
+        } else {
+            f64::NAN
+        },
+        scaling_efficiency_mode3: if mean(&single) > 0.0 {
+            mean(&m3) / mean(&single)
+        } else {
+            f64::NAN
+        },
+        significant: ci3.disjoint_from(&ci0),
+    }
+}
+
+/// Render a QoS metric summary block for one treatment.
+pub fn qos_summary(title: &str, results: &QosResults) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<26} {:>14} {:>14}\n",
+        "metric", "mean", "median"
+    ));
+    for metric in MetricName::ALL {
+        let all = results.all_values(metric);
+        let (m, md) = (mean(&all), median(&all));
+        let (ms, mds) = match metric {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => {
+                (fmt_ns(m), fmt_ns(md))
+            }
+            _ => (format!("{m:.4}"), format!("{md:.4}")),
+        };
+        out.push_str(&format!("{:<26} {:>14} {:>14}\n", metric.label(), ms, mds));
+    }
+    out
+}
+
+/// Treatment-comparison regressions (§II-E): OLS on replicate means and
+/// quantile regression on replicate medians, with a 0/1-coded treatment.
+pub fn qos_comparison(
+    title: &str,
+    group0: (&str, &QosResults),
+    group1: (&str, &QosResults),
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== {title}: {} (0) vs {} (1) ==\n",
+        group0.0, group1.0
+    ));
+    out.push_str(&format!(
+        "{:<26} {:>14} {:>10} {:>14} {:>10}\n",
+        "metric", "mean effect", "p(OLS)", "median effect", "p(QR)"
+    ));
+    for metric in MetricName::ALL {
+        let (mut x, mut ym, mut yq) = (Vec::new(), Vec::new(), Vec::new());
+        for r in &group0.1.replicates {
+            x.push(0.0);
+            ym.push(r.qos.mean(metric));
+            yq.push(r.qos.median(metric));
+        }
+        for r in &group1.1.replicates {
+            x.push(1.0);
+            ym.push(r.qos.mean(metric));
+            yq.push(r.qos.median(metric));
+        }
+        let o = ols(&x, &ym);
+        let q = quantile_regression(&x, &yq, 0x9E);
+        let (oe, op) = o.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        let (qe, qp) = q.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        out.push_str(&format!(
+            "{:<26} {:>14.4e} {:>10.4} {:>14.4e} {:>10.4}\n",
+            metric.label(),
+            oe,
+            op,
+            qe,
+            qp
+        ));
+    }
+    out
+}
+
+/// Weak-scaling regressions against log4(process count), complete and
+/// piecewise-rightmost (paper Figs. 4–8).
+pub fn scaling_regression(
+    title: &str,
+    points: &[(usize, QosResults)],
+    metric: MetricName,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title}: {} vs log4(procs) ==\n", metric.label()));
+    let log4 = |p: usize| (p as f64).ln() / 4.0f64.ln();
+
+    let fit_over = |counts: &[usize]| -> String {
+        let (mut x, mut ym, mut yq) = (Vec::new(), Vec::new(), Vec::new());
+        for (procs, res) in points.iter().filter(|(p, _)| counts.contains(p)) {
+            for r in &res.replicates {
+                x.push(log4(*procs));
+                ym.push(r.qos.mean(metric));
+                yq.push(r.qos.median(metric));
+            }
+        }
+        let o = ols(&x, &ym);
+        let q = quantile_regression(&x, &yq, 0x5CA1);
+        let (oe, op) = o.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        let (qe, qp) = q.map(|f| (f.slope, f.p_value)).unwrap_or((f64::NAN, f64::NAN));
+        format!(
+            "  procs {counts:?}: OLS slope {oe:.4e} (p={op:.4}) | QR slope {qe:.4e} (p={qp:.4})\n"
+        )
+    };
+
+    let all: Vec<usize> = points.iter().map(|(p, _)| *p).collect();
+    out.push_str(&fit_over(&all));
+    if all.len() >= 2 {
+        let rightmost: Vec<usize> = all[all.len() - 2..].to_vec();
+        out.push_str(&fit_over(&rightmost));
+    }
+    out
+}
+
+/// Dump benchmark points to CSV for external analysis.
+pub fn benchmark_csv(results: &BenchmarkResults) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "mode", "cpus", "replicate", "update_rate_hz", "quality", "failure_rate",
+    ]);
+    for p in &results.points {
+        t.push_row(vec![
+            p.mode.index().to_string(),
+            p.n_cpus.to_string(),
+            p.replicate.to_string(),
+            format!("{}", p.update_rate_hz),
+            format!("{}", p.quality),
+            format!("{}", p.failure_rate),
+        ]);
+    }
+    t
+}
+
+/// Dump QoS snapshot metrics to CSV.
+pub fn qos_csv(results: &QosResults) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "replicate",
+        "simstep_period_ns",
+        "simstep_latency",
+        "walltime_latency_ns",
+        "delivery_failure_rate",
+        "delivery_clumpiness",
+    ]);
+    for r in &results.replicates {
+        for m in &r.qos.snapshots {
+            t.push_row(vec![
+                r.replicate.to_string(),
+                format!("{}", m.simstep_period_ns),
+                format!("{}", m.simstep_latency),
+                format!("{}", m.walltime_latency_ns),
+                format!("{}", m.delivery_failure_rate),
+                format!("{}", m.delivery_clumpiness),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::{BenchmarkPoint, QosReplicate};
+    use crate::qos::{QosMetrics, ReplicateQos};
+
+    fn fake_bench() -> BenchmarkResults {
+        let mut r = BenchmarkResults::default();
+        for rep in 0..3 {
+            for (mode, rate) in [(AsyncMode::Sync, 100.0), (AsyncMode::BestEffort, 500.0)] {
+                r.points.push(BenchmarkPoint {
+                    mode,
+                    n_cpus: 64,
+                    replicate: rep,
+                    update_rate_hz: rate + rep as f64,
+                    quality: 10.0,
+                    failure_rate: 0.0,
+                });
+                r.points.push(BenchmarkPoint {
+                    mode,
+                    n_cpus: 1,
+                    replicate: rep,
+                    update_rate_hz: 600.0,
+                    quality: 5.0,
+                    failure_rate: 0.0,
+                });
+            }
+        }
+        r
+    }
+
+    fn fake_qos(scale: f64) -> QosResults {
+        let mut out = QosResults::default();
+        for rep in 0..4 {
+            let mut q = ReplicateQos::default();
+            for i in 0..5 {
+                q.push(QosMetrics {
+                    simstep_period_ns: scale * (10.0 + i as f64),
+                    simstep_latency: 2.0,
+                    walltime_latency_ns: scale * 20.0,
+                    delivery_failure_rate: 0.1,
+                    delivery_clumpiness: 0.5,
+                });
+            }
+            out.replicates.push(QosReplicate {
+                replicate: rep,
+                qos: q,
+                updates: vec![100],
+                run_for: 1,
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn benchmark_table_renders_all_cells() {
+        let t = benchmark_table(
+            "test",
+            &fake_bench(),
+            &[1, 64],
+            &[AsyncMode::Sync, AsyncMode::BestEffort],
+            false,
+        );
+        assert!(t.contains("mode 0"));
+        assert!(t.contains("mode 3"));
+        assert_eq!(t.lines().count(), 2 + 4);
+    }
+
+    #[test]
+    fn headline_computes_speedup() {
+        let h = headline(&fake_bench(), 64);
+        assert!((h.speedup_mode3_vs_mode0 - 5.0).abs() < 0.1);
+        assert!((h.scaling_efficiency_mode3 - 501.0 / 600.0).abs() < 0.01);
+        assert!(h.significant);
+    }
+
+    #[test]
+    fn qos_comparison_detects_scale_difference() {
+        let a = fake_qos(1.0);
+        let b = fake_qos(100.0);
+        let s = qos_comparison("placement", ("intra", &a), ("inter", &b));
+        assert!(s.contains("Simstep Period"));
+        // mean effect on period should be ~ (100-1)*12 = 1188
+        assert!(s.contains("1.1880e3") || s.contains("1.188e3") || s.contains("1.1880"), "{s}");
+    }
+
+    #[test]
+    fn csv_dumps_have_rows() {
+        assert_eq!(benchmark_csv(&fake_bench()).n_rows(), 12);
+        assert_eq!(qos_csv(&fake_qos(1.0)).n_rows(), 20);
+    }
+
+    #[test]
+    fn scaling_regression_renders() {
+        let pts = vec![(16, fake_qos(1.0)), (64, fake_qos(1.1)), (256, fake_qos(1.2))];
+        let s = scaling_regression("weak scaling", &pts, MetricName::SimstepPeriod);
+        assert!(s.contains("OLS slope"));
+        assert!(s.contains("[64, 256]"), "{s}");
+    }
+}

@@ -1,0 +1,287 @@
+//! Replicate sweeps: turn experiment definitions into measured results.
+
+use crate::net::{NodeProfile, Topology};
+use crate::qos::{MetricName, ReplicateQos};
+use crate::sim::{healthy_profiles, heterogeneous_profiles, AsyncMode, Engine, SimConfig, SimResult};
+use crate::util::rng::Xoshiro256;
+use crate::util::Nanos;
+use crate::workloads::dishtiny::{DeConfig, DishtinyShard};
+use crate::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoringShard};
+
+use super::experiment::{BenchmarkExperiment, QosExperiment, Workload};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchmarkPoint {
+    pub mode: AsyncMode,
+    pub n_cpus: usize,
+    pub replicate: usize,
+    /// Mean per-CPU update rate (updates/s of virtual time).
+    pub update_rate_hz: f64,
+    /// Solution quality: GC = global conflicts remaining (lower better);
+    /// DE = mean cell resource (higher better).
+    pub quality: f64,
+    /// Whole-run delivery failure fraction.
+    pub failure_rate: f64,
+}
+
+/// All points from one benchmark experiment.
+#[derive(Clone, Debug, Default)]
+pub struct BenchmarkResults {
+    pub points: Vec<BenchmarkPoint>,
+}
+
+impl BenchmarkResults {
+    /// Update rates for a (mode, cpus) cell across replicates.
+    pub fn rates(&self, mode: AsyncMode, n_cpus: usize) -> Vec<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.mode == mode && p.n_cpus == n_cpus)
+            .map(|p| p.update_rate_hz)
+            .collect()
+    }
+
+    pub fn qualities(&self, mode: AsyncMode, n_cpus: usize) -> Vec<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.mode == mode && p.n_cpus == n_cpus)
+            .map(|p| p.quality)
+            .collect()
+    }
+}
+
+fn sim_config(
+    exp: &BenchmarkExperiment,
+    mode: AsyncMode,
+    n_cpus: usize,
+    replicate: usize,
+) -> SimConfig {
+    let mut cfg = SimConfig::new(mode, exp.timing(n_cpus), exp.run_for);
+    cfg.backend = exp.backend();
+    cfg.seed = exp
+        .seed
+        .wrapping_add((replicate as u64) << 32)
+        .wrapping_add((mode.index() as u64) << 16)
+        .wrapping_add(n_cpus as u64);
+    cfg.send_buffer = exp.send_buffer;
+    cfg.contention = exp.contention();
+    cfg
+}
+
+/// Run a full benchmark experiment (every mode × CPU count × replicate).
+pub fn run_benchmark(exp: &BenchmarkExperiment) -> BenchmarkResults {
+    let mut results = BenchmarkResults::default();
+    for &n_cpus in &exp.cpu_counts {
+        for &mode in &exp.modes {
+            for rep in 0..exp.replicates {
+                let cfg = sim_config(exp, mode, n_cpus, rep);
+                let topo = Topology::new(n_cpus, exp.placement());
+                // Heterogeneous node speeds (paper SII-F1) drive the
+                // straggler effects the benchmarks measure.
+                let profiles = heterogeneous_profiles(&topo, cfg.seed, 0.20);
+                let point = match exp.workload {
+                    Workload::GraphColoring => {
+                        let gc_cfg = GcConfig {
+                            simels_per_proc: exp.simels_per_cpu,
+                            per_simel_cost_ns: GcConfig::default().per_simel_cost_ns
+                                * exp.cost_scale,
+                            ..GcConfig::default()
+                        };
+                        let mut rng = Xoshiro256::new(cfg.seed ^ 0xC0105);
+                        let shards: Vec<_> = (0..n_cpus)
+                            .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+                            .collect();
+                        let result = Engine::new(cfg, topo.clone(), profiles, shards).run();
+                        let conflicts = global_conflicts(&topo, &result.shards) as f64;
+                        point_from(&result, mode, n_cpus, rep, conflicts)
+                    }
+                    Workload::DigitalEvolution => {
+                        let de_cfg = DeConfig {
+                            cells_per_proc: exp.simels_per_cpu,
+                            per_cell_cost_ns: DeConfig::default().per_cell_cost_ns
+                                * exp.cost_scale,
+                            ..DeConfig::default()
+                        };
+                        let mut rng = Xoshiro256::new(cfg.seed ^ 0xD15);
+                        let shards: Vec<_> = (0..n_cpus)
+                            .map(|r| DishtinyShard::new(de_cfg, &topo, r, &mut rng))
+                            .collect();
+                        let result = Engine::new(cfg, topo, profiles, shards).run();
+                        let fitness = result
+                            .shards
+                            .iter()
+                            .map(|s| s.mean_resource())
+                            .sum::<f64>()
+                            / result.shards.len() as f64;
+                        point_from(&result, mode, n_cpus, rep, fitness)
+                    }
+                };
+                results.points.push(point);
+            }
+        }
+    }
+    results
+}
+
+fn point_from<W>(
+    result: &SimResult<W>,
+    mode: AsyncMode,
+    n_cpus: usize,
+    replicate: usize,
+    quality: f64,
+) -> BenchmarkPoint {
+    BenchmarkPoint {
+        mode,
+        n_cpus,
+        replicate,
+        update_rate_hz: result.update_rate_per_cpu_hz(),
+        quality,
+        failure_rate: result.overall_failure_rate(),
+    }
+}
+
+/// QoS measurements from one replicate.
+#[derive(Clone, Debug)]
+pub struct QosReplicate {
+    pub replicate: usize,
+    pub qos: ReplicateQos,
+    pub updates: Vec<u64>,
+    pub run_for: Nanos,
+}
+
+/// All replicates of one QoS experiment.
+#[derive(Clone, Debug, Default)]
+pub struct QosResults {
+    pub replicates: Vec<QosReplicate>,
+}
+
+impl QosResults {
+    /// Per-replicate means of a metric (OLS inputs, §II-E).
+    pub fn replicate_means(&self, metric: MetricName) -> Vec<f64> {
+        self.replicates.iter().map(|r| r.qos.mean(metric)).collect()
+    }
+
+    /// Per-replicate medians of a metric (quantile-regression inputs).
+    pub fn replicate_medians(&self, metric: MetricName) -> Vec<f64> {
+        self.replicates
+            .iter()
+            .map(|r| r.qos.median(metric))
+            .collect()
+    }
+
+    /// All snapshot values of a metric, flattened.
+    pub fn all_values(&self, metric: MetricName) -> Vec<f64> {
+        self.replicates
+            .iter()
+            .flat_map(|r| r.qos.values(metric))
+            .collect()
+    }
+}
+
+/// Run a QoS experiment's replicates.
+pub fn run_qos(exp: &QosExperiment) -> QosResults {
+    let mut out = QosResults::default();
+    for rep in 0..exp.replicates {
+        let topo = Topology::new(exp.n_procs, exp.placement);
+        let mut profiles = healthy_profiles(&topo);
+        if let Some(node) = exp.faulty_node {
+            if node < profiles.len() {
+                profiles[node] = NodeProfile::faulty_lac417();
+            }
+        }
+        let timing = crate::sim::ModeTiming::graph_coloring(exp.n_procs);
+        let mut cfg = SimConfig::new(AsyncMode::BestEffort, timing, exp.run_for);
+        cfg.backend = exp.backend;
+        cfg.seed = exp.seed.wrapping_add((rep as u64) << 24);
+        cfg.send_buffer = exp.send_buffer;
+        cfg.added_work_units = exp.added_work_units;
+        cfg.snapshots = Some(exp.schedule);
+
+        let gc_cfg = GcConfig {
+            simels_per_proc: exp.simels_per_cpu,
+            per_simel_cost_ns: GcConfig::default().per_simel_cost_ns * exp.cost_scale,
+            ..GcConfig::default()
+        };
+        let mut rng = Xoshiro256::new(cfg.seed ^ 0x905);
+        let shards: Vec<_> = (0..exp.n_procs)
+            .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+            .collect();
+        let result = Engine::new(cfg, topo, profiles, shards).run();
+        out.replicates.push(QosReplicate {
+            replicate: rep,
+            qos: result.qos,
+            updates: result.updates,
+            run_for: result.run_for,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MILLI, SECOND};
+
+    fn tiny_benchmark(workload: Workload) -> BenchmarkExperiment {
+        let mut e = match workload {
+            Workload::GraphColoring => BenchmarkExperiment::fig3_multiprocess_gc(),
+            Workload::DigitalEvolution => BenchmarkExperiment::fig3_multiprocess_de(),
+        };
+        e.cpu_counts = vec![1, 4];
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.replicates = 2;
+        e.run_for = 60 * MILLI;
+        e.simels_per_cpu = 16;
+        e.cost_scale = 1.0;
+        e
+    }
+
+    #[test]
+    fn benchmark_runner_produces_grid() {
+        let exp = tiny_benchmark(Workload::GraphColoring);
+        let res = run_benchmark(&exp);
+        assert_eq!(res.points.len(), 2 * 2 * 2);
+        assert_eq!(res.rates(AsyncMode::BestEffort, 4).len(), 2);
+        for p in &res.points {
+            assert!(p.update_rate_hz > 0.0);
+            assert!(p.quality >= 0.0);
+        }
+    }
+
+    #[test]
+    fn best_effort_beats_sync_at_4_cpus() {
+        let exp = tiny_benchmark(Workload::GraphColoring);
+        let res = run_benchmark(&exp);
+        let be: f64 = res.rates(AsyncMode::BestEffort, 4).iter().sum();
+        let sync: f64 = res.rates(AsyncMode::Sync, 4).iter().sum();
+        assert!(be > sync, "best-effort {be} vs sync {sync}");
+    }
+
+    #[test]
+    fn de_benchmark_runs() {
+        let exp = tiny_benchmark(Workload::DigitalEvolution);
+        let res = run_benchmark(&exp);
+        assert_eq!(res.points.len(), 8);
+        // resource accrues
+        assert!(res.points.iter().any(|p| p.quality > 0.0));
+    }
+
+    #[test]
+    fn qos_runner_produces_snapshots() {
+        let mut exp = QosExperiment::internode();
+        exp.replicates = 2;
+        exp.schedule =
+            crate::qos::SnapshotSchedule::compressed(200 * MILLI, 200 * MILLI, 50 * MILLI, 3);
+        exp.run_for = SECOND;
+        let res = run_qos(&exp);
+        assert_eq!(res.replicates.len(), 2);
+        for r in &res.replicates {
+            assert!(!r.qos.snapshots.is_empty());
+        }
+        assert!(!res.replicate_means(MetricName::SimstepPeriod).is_empty());
+        assert!(res
+            .replicate_medians(MetricName::SimstepPeriod)
+            .iter()
+            .all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,5 @@
+//! Real `std::thread` executor over the same workload API as the DES.
+
+pub mod threads;
+
+pub use threads::{ThreadExecConfig, ThreadExecResult};

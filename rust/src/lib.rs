@@ -1,0 +1,41 @@
+//! # ebcomm — Best-Effort Communication on Conventional Hardware
+//!
+//! A Rust + JAX/Pallas reproduction of Moreno & Ofria (2022), *"Best-Effort
+//! Communication Improves Performance and Scales Robustly on Conventional
+//! Hardware"* — the Conduit library paper.
+//!
+//! The crate provides:
+//!
+//! * [`conduit`] — the best-effort channel abstraction (inlets/outlets,
+//!   bounded lossy buffers, pooling/aggregation, QoS instrumentation);
+//! * [`qos`] — the paper's five quality-of-service metrics and snapshot
+//!   machinery (simstep period, simstep latency, walltime latency,
+//!   delivery failure rate, delivery clumpiness);
+//! * [`net`] — cluster topology and link/fault models;
+//! * [`sim`] — a deterministic discrete-event simulator of a multi-node
+//!   allocation running the paper's asynchronicity modes 0–4;
+//! * [`exec`] — a real `std::thread` executor over the same workload API;
+//! * [`workloads`] — the two benchmark workloads: distributed graph
+//!   coloring (Leith et al. 2012) and a DISHTINY-style digital-evolution
+//!   simulation;
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   compute kernels (`artifacts/*.hlo.txt`);
+//! * [`stats`] — bootstrap CIs, OLS and quantile regression used to render
+//!   the paper's statistical comparisons;
+//! * [`coordinator`] — experiment definitions and replicate orchestration
+//!   for every table and figure in the paper's evaluation.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod conduit;
+pub mod coordinator;
+pub mod exec;
+pub mod net;
+pub mod qos;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testing;
+pub mod util;
+pub mod workloads;

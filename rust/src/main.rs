@@ -1,0 +1,259 @@
+//! `ebcomm` CLI — launcher for the paper's experiments.
+//!
+//! ```text
+//! ebcomm bench <fig2gc|fig2de|fig3gc|fig3de>    benchmark figures (Figs. 2-3)
+//! ebcomm qos <work|placement|backend|scaling|faulty>
+//!                                                QoS experiments (SIII-C..G)
+//! ebcomm run [--procs N] [--mode M] [--seconds S] [--workload gc|de]
+//!                                                one ad-hoc simulated run
+//! ebcomm runtime-smoke                           verify PJRT artifact loading
+//! ```
+//!
+//! Results print as paper-style tables and are also written as CSV under
+//! `results/`. Set `EBCOMM_FULL=1` for paper-fidelity scales (slow).
+
+use std::process::ExitCode;
+
+use ebcomm::coordinator::experiment::{BenchmarkExperiment, QosExperiment, Workload};
+use ebcomm::coordinator::report;
+use ebcomm::coordinator::{run_benchmark, run_qos};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::MetricName;
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::SECOND;
+use ebcomm::workloads::dishtiny::{DeConfig, DishtinyShard};
+use ebcomm::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoringShard};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "bench" => cmd_bench(rest),
+        "qos" => cmd_qos(rest),
+        "run" => cmd_run(rest),
+        "runtime-smoke" => cmd_runtime_smoke(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `ebcomm help`)").into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn print_help() {
+    println!(
+        "ebcomm — best-effort communication reproduction (Moreno & Ofria 2022)\n\
+         \n\
+         USAGE:\n\
+         \x20 ebcomm bench <fig2gc|fig2de|fig3gc|fig3de>\n\
+         \x20 ebcomm qos <work|placement|backend|scaling|faulty>\n\
+         \x20 ebcomm run [--procs N] [--mode 0..4] [--seconds S] [--workload gc|de]\n\
+         \x20 ebcomm runtime-smoke\n\
+         \n\
+         ENV:\n\
+         \x20 EBCOMM_FULL=1        paper-fidelity scales (slow)\n\
+         \x20 EBCOMM_ARTIFACTS=dir artifact directory (default: ./artifacts)"
+    );
+}
+
+fn cmd_bench(args: &[String]) -> CliResult {
+    let which = args.first().map(String::as_str).unwrap_or("fig3gc");
+    let exp = match which {
+        "fig2gc" => BenchmarkExperiment::fig2_multithread_gc(),
+        "fig2de" => BenchmarkExperiment::fig2_multithread_de(),
+        "fig3gc" => BenchmarkExperiment::fig3_multiprocess_gc(),
+        "fig3de" => BenchmarkExperiment::fig3_multiprocess_de(),
+        other => return Err(format!("unknown benchmark '{other}'").into()),
+    };
+    eprintln!("running {} ({} replicates)...", exp.name, exp.replicates);
+    let results = run_benchmark(&exp);
+    println!(
+        "{}",
+        report::benchmark_table(exp.name, &results, &exp.cpu_counts, &exp.modes, false)
+    );
+    if exp.workload == Workload::GraphColoring {
+        println!(
+            "{}",
+            report::benchmark_table(
+                &format!("{} — solution conflicts (lower better)", exp.name),
+                &results,
+                &exp.cpu_counts,
+                &exp.modes,
+                true
+            )
+        );
+    }
+    let max_cpus = *exp.cpu_counts.iter().max().unwrap();
+    let h = report::headline(&results, max_cpus);
+    println!(
+        "headline @{} cpus: mode3/mode0 speedup {:.2}x, mode3 scaling efficiency {:.1}%, significant={}",
+        max_cpus,
+        h.speedup_mode3_vs_mode0,
+        100.0 * h.scaling_efficiency_mode3,
+        h.significant
+    );
+    let csv = report::benchmark_csv(&results);
+    let path = format!("results/{}.csv", exp.name);
+    csv.write_to(&path)?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_qos(args: &[String]) -> CliResult {
+    match args.first().map(String::as_str).unwrap_or("placement") {
+        "work" => {
+            let mut all = Vec::new();
+            for &w in &ebcomm::workloads::workunit::PAPER_WORK_SWEEP {
+                eprintln!("work sweep: {w} units...");
+                let exp = QosExperiment::compute_vs_comm(w);
+                let res = run_qos(&exp);
+                println!("{}", report::qos_summary(&format!("{w} work units"), &res));
+                all.push((w, res));
+            }
+            for (w, res) in &all {
+                report::qos_csv(res).write_to(format!("results/qos_work_{w}.csv"))?;
+            }
+        }
+        "placement" => {
+            let intra = run_qos(&QosExperiment::intranode());
+            let inter = run_qos(&QosExperiment::internode());
+            println!("{}", report::qos_summary("intranode (2 procs, 1 node)", &intra));
+            println!("{}", report::qos_summary("internode (2 procs, 2 nodes)", &inter));
+            println!(
+                "{}",
+                report::qos_comparison("SIII-D placement", ("intranode", &intra), ("internode", &inter))
+            );
+            report::qos_csv(&intra).write_to("results/qos_intranode.csv")?;
+            report::qos_csv(&inter).write_to("results/qos_internode.csv")?;
+        }
+        "backend" => {
+            let thr = run_qos(&QosExperiment::multithread_pair());
+            let proc = run_qos(&QosExperiment::multiprocess_pair());
+            println!("{}", report::qos_summary("multithreading (mutex)", &thr));
+            println!("{}", report::qos_summary("multiprocessing (MPI model)", &proc));
+            println!(
+                "{}",
+                report::qos_comparison("SIII-E backend", ("threads", &thr), ("processes", &proc))
+            );
+            report::qos_csv(&thr).write_to("results/qos_threads.csv")?;
+            report::qos_csv(&proc).write_to("results/qos_processes.csv")?;
+        }
+        "scaling" => {
+            let mut points = Vec::new();
+            for &procs in &[16usize, 64, 256] {
+                eprintln!("weak scaling: {procs} procs...");
+                let exp = QosExperiment::weak_scaling(procs, 1, 1);
+                points.push((procs, run_qos(&exp)));
+            }
+            for metric in MetricName::ALL {
+                println!("{}", report::scaling_regression("SIII-F (1 cpu/node, 1 simel)", &points, metric));
+            }
+        }
+        "faulty" => {
+            let with = run_qos(&QosExperiment::faulty_allocation(true));
+            let without = run_qos(&QosExperiment::faulty_allocation(false));
+            println!("{}", report::qos_summary("with lac-417", &with));
+            println!("{}", report::qos_summary("without lac-417", &without));
+            println!(
+                "{}",
+                report::qos_comparison("SIII-G fault", ("without", &without), ("with", &with))
+            );
+        }
+        other => return Err(format!("unknown qos experiment '{other}'").into()),
+    }
+    Ok(())
+}
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn cmd_run(args: &[String]) -> CliResult {
+    let procs: usize = parse_flag(args, "--procs").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let mode_idx: usize = parse_flag(args, "--mode").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let seconds: f64 = parse_flag(args, "--seconds").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    let workload = parse_flag(args, "--workload").unwrap_or_else(|| "gc".into());
+    let mode = AsyncMode::from_index(mode_idx).ok_or("mode must be 0..=4")?;
+    let run_for = (seconds * SECOND as f64) as u64;
+
+    let topo = Topology::new(procs, PlacementKind::OnePerNode);
+    let profiles = healthy_profiles(&topo);
+    let mut rng = Xoshiro256::new(42);
+
+    match workload.as_str() {
+        "gc" => {
+            let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(procs), run_for);
+            cfg.send_buffer = 64;
+            let shards: Vec<_> = (0..procs)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig { simels_per_proc: 256, ..GcConfig::default() },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let result = Engine::new(cfg, topo.clone(), profiles, shards).run();
+            println!("mode: {}", mode.label());
+            println!("procs: {procs}, virtual runtime: {seconds}s");
+            println!("per-CPU update rate: {:.1}/s", result.update_rate_per_cpu_hz());
+            println!("delivery failure rate: {:.4}", result.overall_failure_rate());
+            println!("conflicts remaining: {}", global_conflicts(&topo, &result.shards));
+        }
+        "de" => {
+            let mut cfg = SimConfig::new(mode, ModeTiming::digital_evolution(procs), run_for);
+            cfg.send_buffer = 64;
+            let shards: Vec<_> = (0..procs)
+                .map(|r| {
+                    DishtinyShard::new(
+                        DeConfig { cells_per_proc: 100, ..DeConfig::default() },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let result = Engine::new(cfg, topo, profiles, shards).run();
+            println!("mode: {}", mode.label());
+            println!("per-CPU update rate: {:.1}/s", result.update_rate_per_cpu_hz());
+            let fitness: f64 = result.shards.iter().map(|s| s.mean_resource()).sum::<f64>()
+                / result.shards.len() as f64;
+            let births: u64 = result.shards.iter().map(|s| s.births()).sum();
+            println!("mean cell resource: {fitness:.4}, births: {births}");
+        }
+        other => return Err(format!("unknown workload '{other}'").into()),
+    }
+    Ok(())
+}
+
+fn cmd_runtime_smoke() -> CliResult {
+    use ebcomm::runtime::{ArtifactManifest, RuntimeClient};
+    let dir = ArtifactManifest::default_dir();
+    let manifest = ArtifactManifest::load(&dir)
+        .map_err(|e| format!("{e:#} — run `make artifacts` first"))?;
+    let rt = RuntimeClient::cpu()?;
+    println!("PJRT platform: {} ({} devices)", rt.platform_name(), rt.device_count());
+    for name in manifest.names() {
+        let spec = manifest.get(name).unwrap();
+        let kernel = rt.load_hlo_text(name, &spec.file)?;
+        println!("compiled {name} <- {}", spec.file.display());
+        let _ = kernel;
+    }
+    println!("runtime smoke OK ({} artifacts)", manifest.len());
+    Ok(())
+}

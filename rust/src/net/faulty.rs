@@ -1,0 +1,168 @@
+//! Per-node performance/fault profiles.
+//!
+//! The paper's §III-G experiment contrasts a 256-process allocation
+//! containing an apparently faulty node (`lac-417` — source of every
+//! extreme QoS outlier in the weak-scaling data) against an allocation
+//! without it. A [`NodeProfile`] captures the degradation knobs the DES
+//! applies to a node's processes and links.
+
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::{Nanos, MICRO, MILLI};
+
+/// Performance profile of one physical node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeProfile {
+    /// Multiplier on compute durations (1.0 = nominal).
+    pub speed_factor: f64,
+    /// Lognormal sigma of per-update compute jitter.
+    pub jitter_sigma: f64,
+    /// Per-update probability of an OS-noise stall (descheduling, page
+    /// fault storms, …).
+    pub stall_prob: f64,
+    /// Mean stall duration (exponential), ns.
+    pub stall_mean_ns: f64,
+    /// Multiplier on latency of links touching this node.
+    pub latency_factor: f64,
+    /// Additional per-send drop probability on links touching this node.
+    pub extra_drop_prob: f64,
+}
+
+impl NodeProfile {
+    /// A healthy cluster node. Stall parameters model ordinary OS noise:
+    /// rare millisecond-scale preemptions — the per-update probability is
+    /// scaled by update duration at simulation time so noise arrives per
+    /// unit *time*, not per update.
+    pub fn healthy() -> Self {
+        Self {
+            speed_factor: 1.0,
+            jitter_sigma: 0.12,
+            stall_prob: 0.0, // derived per-update from stall_rate_per_sec
+            stall_mean_ns: 2.5 * MILLI as f64,
+            latency_factor: 1.0,
+            extra_drop_prob: 0.0,
+        }
+    }
+
+    /// The faulty-node profile reproducing `lac-417` (§III-G): extreme
+    /// latency spikes (walltime-latency outliers of seconds), heavy
+    /// stalls, and elevated delivery failure among its clique.
+    pub fn faulty_lac417() -> Self {
+        Self {
+            speed_factor: 1.35,
+            jitter_sigma: 0.8,
+            stall_prob: 0.0,
+            stall_mean_ns: 180.0 * MILLI as f64,
+            latency_factor: 400.0,
+            extra_drop_prob: 0.35,
+        }
+    }
+
+    /// Rate of OS-noise stall events per second of virtual busy time for a
+    /// node hosting `procs_on_node` active processes on `cores` cores.
+    /// Oversubscription raises the rate sharply (the multithread QoS
+    /// erraticity of §III-E).
+    pub fn stall_rate_per_sec(&self, procs_on_node: usize, cores: usize) -> f64 {
+        let base = if self.is_faulty() { 40.0 } else { 0.9 };
+        let oversub = (procs_on_node as f64 / cores.max(1) as f64).max(1.0);
+        base * oversub
+    }
+
+    fn is_faulty(&self) -> bool {
+        self.latency_factor > 10.0 || self.stall_mean_ns > 50.0 * MILLI as f64
+    }
+
+    /// Sample the extra stall time (possibly zero) incurred during an
+    /// update of duration `busy_ns`.
+    pub fn sample_stall(
+        &self,
+        busy_ns: f64,
+        procs_on_node: usize,
+        cores: usize,
+        rng: &mut Xoshiro256,
+    ) -> Nanos {
+        let rate = self.stall_rate_per_sec(procs_on_node, cores);
+        let p = (rate * busy_ns / 1e9).min(1.0);
+        if rng.chance(p) {
+            rng.exponential(self.stall_mean_ns).max(50.0 * MICRO as f64) as Nanos
+        } else {
+            0
+        }
+    }
+
+    /// Sample one update's compute duration given a nominal cost.
+    pub fn sample_compute(
+        &self,
+        nominal_ns: f64,
+        contention: f64,
+        procs_on_node: usize,
+        cores: usize,
+        rng: &mut Xoshiro256,
+    ) -> Nanos {
+        let jitter = rng.lognormal(0.0, self.jitter_sigma);
+        let busy = nominal_ns * self.speed_factor * contention * jitter;
+        let stall = self.sample_stall(busy, procs_on_node, cores, rng);
+        busy.max(1.0) as Nanos + stall
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_profile_is_nominal() {
+        let p = NodeProfile::healthy();
+        assert_eq!(p.speed_factor, 1.0);
+        assert_eq!(p.latency_factor, 1.0);
+        assert_eq!(p.extra_drop_prob, 0.0);
+        assert!(!p.is_faulty());
+    }
+
+    #[test]
+    fn faulty_profile_detected() {
+        assert!(NodeProfile::faulty_lac417().is_faulty());
+    }
+
+    #[test]
+    fn faulty_stalls_much_more_often() {
+        let h = NodeProfile::healthy();
+        let f = NodeProfile::faulty_lac417();
+        assert!(f.stall_rate_per_sec(1, 28) > 10.0 * h.stall_rate_per_sec(1, 28));
+    }
+
+    #[test]
+    fn oversubscription_raises_stall_rate() {
+        let p = NodeProfile::healthy();
+        assert!(p.stall_rate_per_sec(64, 28) > 2.0 * p.stall_rate_per_sec(1, 28));
+    }
+
+    #[test]
+    fn compute_sampling_centered_on_nominal() {
+        let p = NodeProfile::healthy();
+        let mut rng = Xoshiro256::new(3);
+        let n = 20_000;
+        let total: f64 = (0..n)
+            .map(|_| p.sample_compute(10_000.0, 1.0, 1, 28, &mut rng) as f64)
+            .sum();
+        let mean = total / n as f64;
+        // lognormal(0, 0.12) mean ~ 1.007; rare stalls add a little.
+        assert!(
+            mean > 9_500.0 && mean < 13_000.0,
+            "mean={mean}"
+        );
+    }
+
+    #[test]
+    fn stalls_are_rare_but_large_for_healthy_nodes() {
+        let p = NodeProfile::healthy();
+        let mut rng = Xoshiro256::new(4);
+        let mut n_stalls = 0;
+        for _ in 0..100_000 {
+            // 10µs updates: stall prob ~ 0.9 * 1e-5 per update
+            if p.sample_stall(10_000.0, 1, 28, &mut rng) > 0 {
+                n_stalls += 1;
+            }
+        }
+        assert!(n_stalls < 50, "n_stalls={n_stalls}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster topology, link models, and node fault profiles.
+//!
+//! This is the simulated substrate standing in for the paper's testbed
+//! (MSU HPCC: heterogeneous x86 nodes, InfiniBand, MPI). See DESIGN.md §2
+//! for the substitution rationale and the calibration sources — every
+//! default constant below is traceable to a measurement reported in the
+//! paper itself.
+
+pub mod faulty;
+pub mod model;
+pub mod topology;
+
+pub use faulty::NodeProfile;
+pub use model::LinkModel;
+pub use topology::{PlacementKind, Topology};

@@ -1,0 +1,213 @@
+//! Process-to-node placement and the process mesh.
+//!
+//! Processes communicate on a 2-D toroidal process grid (the workloads'
+//! simulation elements form a torus, partitioned into per-process tiles).
+//! Placement determines which links are intranode vs internode:
+//!
+//! * benchmarking multiprocess runs put *each process on a distinct node*
+//!   (§II-F1);
+//! * weak-scaling QoS runs use either one CPU per node (homogeneous — all
+//!   links internode) or four CPUs per node (heterogeneous mix, §III-F);
+//! * multithread runs co-locate everything on one node.
+
+/// How processes map onto physical nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// All processes (threads) on a single node.
+    SingleNode,
+    /// One process per node — every link is internode.
+    OnePerNode,
+    /// `k` processes per node, filled in rank order.
+    PerNode(usize),
+}
+
+/// Cluster topology: process count, placement, and the process mesh.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n_procs: usize,
+    placement: PlacementKind,
+    rows: usize,
+    cols: usize,
+}
+
+impl Topology {
+    /// Build a topology for `n_procs` processes under `placement`.
+    /// The process mesh is the most-square factorization of `n_procs`
+    /// (rows ≤ cols), so e.g. 64 → 8×8, 2 → 1×2.
+    pub fn new(n_procs: usize, placement: PlacementKind) -> Self {
+        assert!(n_procs >= 1);
+        let (rows, cols) = squarest_factors(n_procs);
+        Self {
+            n_procs,
+            placement,
+            rows,
+            cols,
+        }
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.n_procs
+    }
+
+    pub fn mesh_dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn placement(&self) -> PlacementKind {
+        self.placement
+    }
+
+    /// Node hosting process `p`.
+    pub fn node_of(&self, p: usize) -> usize {
+        debug_assert!(p < self.n_procs);
+        match self.placement {
+            PlacementKind::SingleNode => 0,
+            PlacementKind::OnePerNode => p,
+            PlacementKind::PerNode(k) => p / k.max(1),
+        }
+    }
+
+    /// Number of nodes in the allocation.
+    pub fn n_nodes(&self) -> usize {
+        (0..self.n_procs).map(|p| self.node_of(p)).max().unwrap_or(0) + 1
+    }
+
+    /// Are two processes co-resident on one node?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Processes resident on `p`'s node (including `p`).
+    pub fn procs_on_node_of(&self, p: usize) -> usize {
+        let node = self.node_of(p);
+        (0..self.n_procs).filter(|&q| self.node_of(q) == node).count()
+    }
+
+    /// Mesh coordinates of process `p` (row, col).
+    pub fn coords(&self, p: usize) -> (usize, usize) {
+        (p / self.cols, p % self.cols)
+    }
+
+    /// Process at mesh coordinates (torus wraparound).
+    pub fn at(&self, row: isize, col: isize) -> usize {
+        let r = row.rem_euclid(self.rows as isize) as usize;
+        let c = col.rem_euclid(self.cols as isize) as usize;
+        r * self.cols + c
+    }
+
+    /// The four torus neighbors of `p` in order N, E, S, W. Degenerate
+    /// meshes may repeat a neighbor or return `p` itself; callers skip
+    /// self-channels.
+    pub fn neighbors4(&self, p: usize) -> [usize; 4] {
+        let (r, c) = self.coords(p);
+        let (r, c) = (r as isize, c as isize);
+        [
+            self.at(r - 1, c),
+            self.at(r, c + 1),
+            self.at(r + 1, c),
+            self.at(r, c - 1),
+        ]
+    }
+}
+
+/// Most-square factor pair (rows ≤ cols) of `n`.
+pub fn squarest_factors(n: usize) -> (usize, usize) {
+    let mut best = (1, n);
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            best = (d, n / d);
+        }
+        d += 1;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, prop_assert, Config};
+
+    #[test]
+    fn squarest_factorizations() {
+        assert_eq!(squarest_factors(64), (8, 8));
+        assert_eq!(squarest_factors(2), (1, 2));
+        assert_eq!(squarest_factors(16), (4, 4));
+        assert_eq!(squarest_factors(256), (16, 16));
+        assert_eq!(squarest_factors(7), (1, 7));
+        assert_eq!(squarest_factors(12), (3, 4));
+    }
+
+    #[test]
+    fn placement_node_assignment() {
+        let t = Topology::new(8, PlacementKind::OnePerNode);
+        assert_eq!(t.node_of(5), 5);
+        assert_eq!(t.n_nodes(), 8);
+        assert!(!t.same_node(0, 1));
+
+        let t = Topology::new(8, PlacementKind::PerNode(4));
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.n_nodes(), 2);
+        assert!(t.same_node(0, 3));
+        assert!(!t.same_node(3, 4));
+        assert_eq!(t.procs_on_node_of(0), 4);
+
+        let t = Topology::new(8, PlacementKind::SingleNode);
+        assert_eq!(t.n_nodes(), 1);
+        assert!(t.same_node(0, 7));
+    }
+
+    #[test]
+    fn neighbors_on_8x8_mesh() {
+        let t = Topology::new(64, PlacementKind::OnePerNode);
+        // proc 0 at (0,0): N=(7,0)=56, E=(0,1)=1, S=(1,0)=8, W=(0,7)=7
+        assert_eq!(t.neighbors4(0), [56, 1, 8, 7]);
+        // center proc 27 at (3,3): N=19, E=28, S=35, W=26
+        assert_eq!(t.neighbors4(27), [19, 28, 35, 26]);
+    }
+
+    #[test]
+    fn degenerate_two_proc_mesh() {
+        let t = Topology::new(2, PlacementKind::OnePerNode);
+        assert_eq!(t.mesh_dims(), (1, 2));
+        // N/S wrap to self; E/W wrap to the partner.
+        assert_eq!(t.neighbors4(0), [0, 1, 0, 1]);
+        assert_eq!(t.neighbors4(1), [1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn prop_neighbors_symmetric() {
+        // q in neighbors(p) with direction d implies p in neighbors(q)
+        // with the opposite direction — the torus is reciprocal (the
+        // touch-counter protocol depends on this, §II-D.2).
+        forall(Config::default().cases(64), |g| {
+            let n = g.usize_in(1, 300);
+            let t = Topology::new(n, PlacementKind::OnePerNode);
+            let p = g.usize_in(0, n - 1);
+            let nb = t.neighbors4(p);
+            for (d, &q) in nb.iter().enumerate() {
+                let back = t.neighbors4(q)[(d + 2) % 4];
+                prop_assert(
+                    back == p,
+                    format!("n={n} p={p} d={d} q={q} back={back}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_coords_roundtrip() {
+        forall(Config::default().cases(64), |g| {
+            let n = g.usize_in(1, 400);
+            let t = Topology::new(n, PlacementKind::SingleNode);
+            let p = g.usize_in(0, n - 1);
+            let (r, c) = t.coords(p);
+            prop_assert(
+                t.at(r as isize, c as isize) == p,
+                format!("p={p} r={r} c={c}"),
+            )
+        });
+    }
+}

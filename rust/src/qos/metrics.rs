@@ -1,0 +1,370 @@
+//! The paper's five quality-of-service metrics (§II-D).
+//!
+//! All metrics are derived from two observations ("tranches") bracketing a
+//! snapshot window during which the simulation runs unimpeded:
+//!
+//! * **Simstep period** — wall-time elapsed per simulation update:
+//!   `(wall after − wall before) / (updates after − updates before)`.
+//! * **Simstep latency** — simulation updates elapsed per message one-way
+//!   trip, estimated from round-trip *touch counters*:
+//!   `(updates after − updates before) / max(touches after − touches
+//!   before, 1)`. (The paper prints `min`, but describes counting "at
+//!   least one elapsed touch" — i.e. a floor on the denominator, which is
+//!   `max`. We implement the described best-case assumption.)
+//! * **Walltime latency** — `simstep latency × simstep period`.
+//! * **Delivery failure rate** — `1 − successful sends / attempted sends`
+//!   over the window. (The paper's formula shows the success ratio; the
+//!   reported metric is the failure fraction.)
+//! * **Delivery clumpiness** — `1 − steadiness` where
+//!   `steadiness = laden pulls / min(messages received, pull attempts)`.
+//!
+//! Touch-counter protocol (§II-D.2): each element keeps a zero-initialized
+//! counter per neighbor; outgoing messages bundle the counter associated
+//! with the target; when a message arrives back from the target, the local
+//! counter is set to `1 + bundled value`, so one completed round trip
+//! advances it by two.
+
+use crate::conduit::CounterTranche;
+use crate::util::Nanos;
+
+/// One endpoint observation: channel counters plus the owning process's
+/// update counter and wall clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QosObservation {
+    pub counters: CounterTranche,
+    pub update_count: u64,
+    pub wall_ns: Nanos,
+}
+
+/// The five QoS metrics for one snapshot window on one channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosMetrics {
+    /// Wall-time per simulation update (ns). Lower is better.
+    pub simstep_period_ns: f64,
+    /// One-way message latency in elapsed simulation updates.
+    pub simstep_latency: f64,
+    /// One-way message latency in wall-time (ns).
+    pub walltime_latency_ns: f64,
+    /// Fraction of attempted sends dropped, in `[0, 1]` (may exceed
+    /// slightly under observation blur; see paper §II-E).
+    pub delivery_failure_rate: f64,
+    /// `1 − steadiness`, in `[0, 1]`.
+    pub delivery_clumpiness: f64,
+}
+
+impl QosMetrics {
+    /// Compute all five metrics from before/after observations.
+    pub fn from_window(before: &QosObservation, after: &QosObservation) -> QosMetrics {
+        let d = after.counters.delta(&before.counters);
+        let updates = after.update_count.saturating_sub(before.update_count);
+        let wall = after.wall_ns.saturating_sub(before.wall_ns);
+
+        let simstep_period_ns = if updates == 0 {
+            // No updates elapsed: period is at least the whole window.
+            wall as f64
+        } else {
+            wall as f64 / updates as f64
+        };
+
+        // Touch counter advances by 2 per round trip => one-way trips
+        // completed = touches elapsed; elapsed updates per one-way trip:
+        let touches = d.touches.max(1);
+        let simstep_latency = updates as f64 / touches as f64;
+
+        let walltime_latency_ns = simstep_latency * simstep_period_ns;
+
+        let delivery_failure_rate = if d.attempted_sends == 0 {
+            0.0
+        } else {
+            1.0 - d.successful_sends as f64 / d.attempted_sends as f64
+        };
+
+        let delivery_clumpiness = 1.0 - steadiness(d.laden_pulls, d.messages_received, d.pull_attempts);
+
+        QosMetrics {
+            simstep_period_ns,
+            simstep_latency,
+            walltime_latency_ns,
+            delivery_failure_rate,
+            delivery_clumpiness,
+        }
+    }
+
+    /// Mean of two metric sets (used to average inlet- and outlet-derived
+    /// statistics, §II-E: "we simply report the mean over these two
+    /// options").
+    pub fn mean_with(&self, other: &QosMetrics) -> QosMetrics {
+        QosMetrics {
+            simstep_period_ns: 0.5 * (self.simstep_period_ns + other.simstep_period_ns),
+            simstep_latency: 0.5 * (self.simstep_latency + other.simstep_latency),
+            walltime_latency_ns: 0.5 * (self.walltime_latency_ns + other.walltime_latency_ns),
+            delivery_failure_rate: 0.5
+                * (self.delivery_failure_rate + other.delivery_failure_rate),
+            delivery_clumpiness: 0.5 * (self.delivery_clumpiness + other.delivery_clumpiness),
+        }
+    }
+
+    /// Extract a metric by name (report/bench plumbing).
+    pub fn get(&self, name: MetricName) -> f64 {
+        match name {
+            MetricName::SimstepPeriod => self.simstep_period_ns,
+            MetricName::SimstepLatency => self.simstep_latency,
+            MetricName::WalltimeLatency => self.walltime_latency_ns,
+            MetricName::DeliveryFailureRate => self.delivery_failure_rate,
+            MetricName::DeliveryClumpiness => self.delivery_clumpiness,
+        }
+    }
+}
+
+/// Identifier for one of the five QoS metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MetricName {
+    SimstepPeriod,
+    SimstepLatency,
+    WalltimeLatency,
+    DeliveryFailureRate,
+    DeliveryClumpiness,
+}
+
+impl MetricName {
+    pub const ALL: [MetricName; 5] = [
+        MetricName::SimstepPeriod,
+        MetricName::SimstepLatency,
+        MetricName::WalltimeLatency,
+        MetricName::DeliveryFailureRate,
+        MetricName::DeliveryClumpiness,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MetricName::SimstepPeriod => "Simstep Period (ns)",
+            MetricName::SimstepLatency => "Latency Simsteps",
+            MetricName::WalltimeLatency => "Latency Walltime (ns)",
+            MetricName::DeliveryFailureRate => "Delivery Failure Rate",
+            MetricName::DeliveryClumpiness => "Delivery Clumpiness",
+        }
+    }
+}
+
+/// Steadiness component statistic (§II-D.5).
+///
+/// `laden / min(messages, pulls)`; 1.0 when no opportunities existed
+/// (an idle window is perfectly steady, not clumpy).
+pub fn steadiness(laden_pulls: u64, messages_received: u64, pull_attempts: u64) -> f64 {
+    let opportunities = messages_received.min(pull_attempts);
+    if opportunities == 0 {
+        1.0
+    } else {
+        (laden_pulls as f64 / opportunities as f64).min(1.0)
+    }
+}
+
+/// Touch-counter bookkeeping for one element↔neighbor relationship.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TouchCounter {
+    value: u64,
+}
+
+impl TouchCounter {
+    /// Value to bundle with an outgoing message to the partner.
+    #[inline]
+    pub fn outgoing(&self) -> u64 {
+        self.value
+    }
+
+    /// Record an incoming message from the partner carrying `bundled`.
+    /// Advances the counter by two per completed round trip.
+    #[inline]
+    pub fn on_receive(&mut self, bundled: u64) {
+        // Only advance; a stale bundled value (from a long-delayed message)
+        // must not rewind progress.
+        self.value = self.value.max(1 + bundled);
+    }
+
+    #[inline]
+    pub fn value(&self) -> u64 {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, prop_assert, Config};
+
+    fn obs(
+        updates: u64,
+        wall: Nanos,
+        attempted: u64,
+        successful: u64,
+        pulls: u64,
+        laden: u64,
+        msgs: u64,
+        touches: u64,
+    ) -> QosObservation {
+        QosObservation {
+            counters: CounterTranche {
+                attempted_sends: attempted,
+                successful_sends: successful,
+                pull_attempts: pulls,
+                laden_pulls: laden,
+                messages_received: msgs,
+                touches,
+            },
+            update_count: updates,
+            wall_ns: wall,
+        }
+    }
+
+    #[test]
+    fn simstep_period_basic() {
+        let before = obs(100, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(200, 1_000_000, 0, 0, 0, 0, 0, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        assert_eq!(m.simstep_period_ns, 10_000.0); // 1ms / 100 updates
+    }
+
+    #[test]
+    fn latency_from_touches() {
+        // 100 updates, 50 touches elapsed => 2 updates per one-way trip.
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(100, 1_000_000, 0, 0, 0, 0, 0, 50);
+        let m = QosMetrics::from_window(&before, &after);
+        assert_eq!(m.simstep_latency, 2.0);
+        assert_eq!(m.walltime_latency_ns, 2.0 * 10_000.0);
+    }
+
+    #[test]
+    fn zero_touches_best_case_assumption() {
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(40, 1_000, 0, 0, 0, 0, 0, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        // Denominator floored at 1.
+        assert_eq!(m.simstep_latency, 40.0);
+    }
+
+    #[test]
+    fn failure_rate() {
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(10, 1_000, 100, 70, 0, 0, 0, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        assert!((m.delivery_failure_rate - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_rate_no_sends_is_zero() {
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(10, 1_000, 0, 0, 0, 0, 0, 0);
+        assert_eq!(
+            QosMetrics::from_window(&before, &after).delivery_failure_rate,
+            0.0
+        );
+    }
+
+    #[test]
+    fn clumpiness_extremes() {
+        // All messages in one pull out of many: clumpy.
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(10, 1_000, 0, 0, 100, 1, 100, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        assert!((m.delivery_clumpiness - 0.99).abs() < 1e-12);
+
+        // One message per pull: perfectly steady.
+        let after = obs(10, 1_000, 0, 0, 100, 100, 100, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        assert_eq!(m.delivery_clumpiness, 0.0);
+
+        // Pigeonhole regime: more messages than pulls, every pull laden.
+        let after = obs(10, 1_000, 0, 0, 10, 10, 100, 0);
+        let m = QosMetrics::from_window(&before, &after);
+        assert_eq!(m.delivery_clumpiness, 0.0);
+    }
+
+    #[test]
+    fn idle_window_not_clumpy() {
+        let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+        let after = obs(10, 1_000, 0, 0, 50, 0, 0, 0);
+        assert_eq!(
+            QosMetrics::from_window(&before, &after).delivery_clumpiness,
+            0.0
+        );
+    }
+
+    #[test]
+    fn touch_counter_round_trip_advances_by_two() {
+        let mut a = TouchCounter::default();
+        let mut b = TouchCounter::default();
+        // A sends to B bundling 0; B receives: b = 1.
+        b.on_receive(a.outgoing());
+        assert_eq!(b.value(), 1);
+        // B sends to A bundling 1; A receives: a = 2 — one round trip.
+        a.on_receive(b.outgoing());
+        assert_eq!(a.value(), 2);
+        b.on_receive(a.outgoing());
+        a.on_receive(b.outgoing());
+        assert_eq!(a.value(), 4);
+    }
+
+    #[test]
+    fn touch_counter_ignores_stale() {
+        let mut a = TouchCounter::default();
+        a.on_receive(9); // value 10
+        a.on_receive(3); // stale, must not rewind
+        assert_eq!(a.value(), 10);
+    }
+
+    #[test]
+    fn inlet_outlet_mean() {
+        let m1 = QosMetrics {
+            simstep_period_ns: 10.0,
+            simstep_latency: 2.0,
+            walltime_latency_ns: 20.0,
+            delivery_failure_rate: 0.0,
+            delivery_clumpiness: 0.5,
+        };
+        let m2 = QosMetrics {
+            simstep_period_ns: 20.0,
+            simstep_latency: 4.0,
+            walltime_latency_ns: 80.0,
+            delivery_failure_rate: 0.2,
+            delivery_clumpiness: 0.7,
+        };
+        let m = m1.mean_with(&m2);
+        assert_eq!(m.simstep_period_ns, 15.0);
+        assert_eq!(m.simstep_latency, 3.0);
+        assert!((m.delivery_failure_rate - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_metrics_bounded() {
+        forall(Config::default().cases(256), |g| {
+            let attempted = g.u64_in(0, 10_000);
+            let successful = g.u64_in(0, attempted.max(0));
+            let pulls = g.u64_in(0, 10_000);
+            let laden = g.u64_in(0, pulls);
+            // messages >= laden (each laden pull retrieves >= 1)
+            let msgs = g.u64_in(laden, laden + 10_000);
+            let updates = g.u64_in(0, 1_000_000);
+            let wall = g.u64_in(1, u64::MAX / 2);
+            let touches = g.u64_in(0, updates.max(1));
+            let before = obs(0, 0, 0, 0, 0, 0, 0, 0);
+            let after = obs(updates, wall, attempted, successful, pulls, laden, msgs, touches);
+            let m = QosMetrics::from_window(&before, &after);
+            prop_assert(
+                (0.0..=1.0).contains(&m.delivery_failure_rate),
+                format!("failure rate {}", m.delivery_failure_rate),
+            )?;
+            prop_assert(
+                (0.0..=1.0).contains(&m.delivery_clumpiness),
+                format!("clumpiness {}", m.delivery_clumpiness),
+            )?;
+            prop_assert(m.simstep_period_ns >= 0.0, "negative period")?;
+            prop_assert(m.simstep_latency >= 0.0, "negative latency")?;
+            prop_assert(
+                (m.walltime_latency_ns - m.simstep_latency * m.simstep_period_ns).abs()
+                    <= 1e-9 * m.walltime_latency_ns.abs().max(1.0),
+                "walltime latency != simstep latency * period",
+            )
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! Quality-of-service metrics and snapshot machinery (paper §II-D/E).
+
+pub mod metrics;
+pub mod snapshot;
+
+pub use metrics::{MetricName, QosMetrics, QosObservation, TouchCounter};
+pub use snapshot::{ReplicateQos, SnapshotSchedule, SnapshotWindow};

@@ -1,0 +1,170 @@
+//! Snapshot windows and per-replicate QoS aggregation (§II-E).
+//!
+//! The paper's apparatus takes snapshot observations at one-minute
+//! intervals over each replicate's runtime; each snapshot records a first
+//! tranche of counters, lets the system run unimpeded for one second, then
+//! records a second tranche. Metrics are computed per snapshot per channel
+//! endpoint, inlet- and outlet-derived values are averaged, and snapshots
+//! are aggregated per replicate by mean and median for the treatment
+//! regressions.
+
+use super::metrics::{MetricName, QosMetrics, QosObservation};
+use crate::stats::descriptive::{mean, median};
+use crate::util::{Nanos, SECOND};
+
+/// Schedule of snapshot windows over a replicate.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotSchedule {
+    /// Time of the first window opening (paper: 60 s).
+    pub first_at: Nanos,
+    /// Interval between window openings (paper: 60 s).
+    pub every: Nanos,
+    /// Window duration (paper: 1 s).
+    pub window: Nanos,
+    /// Number of windows (paper: 5 over slightly-past-5-minutes runs).
+    pub count: usize,
+}
+
+impl SnapshotSchedule {
+    /// The paper's QoS-experiment schedule: five 1 s windows at minutes
+    /// 1–5.
+    pub fn paper() -> Self {
+        Self {
+            first_at: 60 * SECOND,
+            every: 60 * SECOND,
+            window: SECOND,
+            count: 5,
+        }
+    }
+
+    /// Compressed schedule for fast benches/tests: `count` windows of
+    /// `window` ns, starting at `first_at` and spaced `every`.
+    pub fn compressed(first_at: Nanos, every: Nanos, window: Nanos, count: usize) -> Self {
+        Self {
+            first_at,
+            every,
+            window,
+            count,
+        }
+    }
+
+    /// Opening time of window `i`.
+    pub fn open_at(&self, i: usize) -> Nanos {
+        self.first_at + self.every * i as u64
+    }
+
+    /// Closing time of window `i`.
+    pub fn close_at(&self, i: usize) -> Nanos {
+        self.open_at(i) + self.window
+    }
+
+    /// Total runtime needed to complete all windows.
+    pub fn runtime(&self) -> Nanos {
+        self.close_at(self.count.saturating_sub(1))
+    }
+}
+
+/// One completed snapshot for one channel: inlet- and outlet-derived
+/// observations at open and close.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotWindow {
+    pub inlet_before: QosObservation,
+    pub inlet_after: QosObservation,
+    pub outlet_before: QosObservation,
+    pub outlet_after: QosObservation,
+}
+
+impl SnapshotWindow {
+    /// Inlet-derived, outlet-derived, and averaged metrics (§II-E reports
+    /// the mean over the two).
+    pub fn metrics(&self) -> QosMetrics {
+        let inlet = QosMetrics::from_window(&self.inlet_before, &self.inlet_after);
+        let outlet = QosMetrics::from_window(&self.outlet_before, &self.outlet_after);
+        inlet.mean_with(&outlet)
+    }
+
+    pub fn inlet_metrics(&self) -> QosMetrics {
+        QosMetrics::from_window(&self.inlet_before, &self.inlet_after)
+    }
+
+    pub fn outlet_metrics(&self) -> QosMetrics {
+        QosMetrics::from_window(&self.outlet_before, &self.outlet_after)
+    }
+}
+
+/// All snapshots collected from one replicate run, flattened across
+/// processes/channels/timepoints.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicateQos {
+    pub snapshots: Vec<QosMetrics>,
+}
+
+impl ReplicateQos {
+    pub fn push(&mut self, m: QosMetrics) {
+        self.snapshots.push(m);
+    }
+
+    pub fn values(&self, metric: MetricName) -> Vec<f64> {
+        self.snapshots.iter().map(|m| m.get(metric)).collect()
+    }
+
+    /// Replicate-level mean (captures extreme outliers, §II-E).
+    pub fn mean(&self, metric: MetricName) -> f64 {
+        mean(&self.values(metric))
+    }
+
+    /// Replicate-level median (represents typicality, §II-E).
+    pub fn median(&self, metric: MetricName) -> f64 {
+        median(&self.values(metric))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conduit::CounterTranche;
+
+    #[test]
+    fn paper_schedule_timing() {
+        let s = SnapshotSchedule::paper();
+        assert_eq!(s.open_at(0), 60 * SECOND);
+        assert_eq!(s.close_at(0), 61 * SECOND);
+        assert_eq!(s.open_at(4), 300 * SECOND);
+        assert_eq!(s.runtime(), 301 * SECOND);
+        assert_eq!(s.count, 5);
+    }
+
+    #[test]
+    fn window_metrics_average_inlet_outlet() {
+        let zero = QosObservation::default();
+        let mk = |updates, wall| QosObservation {
+            counters: CounterTranche::default(),
+            update_count: updates,
+            wall_ns: wall,
+        };
+        let w = SnapshotWindow {
+            inlet_before: zero,
+            inlet_after: mk(10, 1_000),
+            outlet_before: zero,
+            outlet_after: mk(10, 3_000),
+        };
+        // inlet period 100, outlet period 300 -> mean 200.
+        assert_eq!(w.metrics().simstep_period_ns, 200.0);
+    }
+
+    #[test]
+    fn replicate_aggregation() {
+        let mut rq = ReplicateQos::default();
+        for period in [10.0, 20.0, 90.0] {
+            rq.push(QosMetrics {
+                simstep_period_ns: period,
+                simstep_latency: 1.0,
+                walltime_latency_ns: period,
+                delivery_failure_rate: 0.0,
+                delivery_clumpiness: 0.0,
+            });
+        }
+        assert_eq!(rq.mean(MetricName::SimstepPeriod), 40.0);
+        assert_eq!(rq.median(MetricName::SimstepPeriod), 20.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact manifest: what `make artifacts` produced.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! lowered kernel:
+//!
+//! ```text
+//! name<TAB>file<TAB>comma-separated-input-shapes<TAB>comma-separated-output-shapes
+//! gc_update_64<TAB>gc_update_64.hlo.txt<TAB>u8[64],u8[64,4],f32[64,3],f32[64]<TAB>u8[64],f32[64,3],i32[]
+//! ```
+//!
+//! Shapes are informational (consumed by integration tests and error
+//! messages); the PJRT executable itself enforces them.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<String>,
+    pub output_shapes: Vec<String>,
+}
+
+/// Parsed manifest, keyed by artifact name.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: PathBuf, text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 4 {
+                bail!(
+                    "manifest line {}: expected 4 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                );
+            }
+            let spec = ArtifactSpec {
+                name: fields[0].to_string(),
+                file: dir.join(fields[1]),
+                input_shapes: split_shapes(fields[2]),
+                output_shapes: split_shapes(fields[3]),
+            };
+            if entries.insert(spec.name.clone(), spec).is_some() {
+                bail!("manifest line {}: duplicate artifact name", lineno + 1);
+            }
+        }
+        Ok(Self { dir, entries })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    /// Artifact entry or a descriptive error.
+    pub fn require(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {}) — run `make artifacts`",
+                self.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Default artifact directory: `$EBCOMM_ARTIFACTS` or `artifacts/`
+    /// relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("EBCOMM_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        // CARGO_MANIFEST_DIR points at the crate root in tests/benches.
+        let root = std::env::var("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        root.join("artifacts")
+    }
+}
+
+/// Parse `u8[64],f32[64,3]` — commas inside brackets are dimension
+/// separators, so split on commas *outside* brackets.
+fn split_shapes(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                if !cur.trim().is_empty() {
+                    out.push(cur.trim().to_string());
+                }
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "# comment\n\
+                    gc_update_64\tgc_update_64.hlo.txt\tu8[64],u8[64,4],f32[64,3],f32[64]\tu8[64],f32[64,3],i32[]\n\
+                    \n\
+                    cell_update_36\tcell_update_36.hlo.txt\tf32[36,8],f32[36,16],f32[36,8]\tf32[36,8],f32[36]\n";
+        let m = ArtifactManifest::parse(PathBuf::from("/tmp/a"), text).unwrap();
+        assert_eq!(m.len(), 2);
+        let spec = m.get("gc_update_64").unwrap();
+        assert_eq!(spec.file, PathBuf::from("/tmp/a/gc_update_64.hlo.txt"));
+        assert_eq!(
+            spec.input_shapes,
+            vec!["u8[64]", "u8[64,4]", "f32[64,3]", "f32[64]"]
+        );
+        assert_eq!(spec.output_shapes.len(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ArtifactManifest::parse(PathBuf::new(), "just-one-field\n").is_err());
+        let dup = "a\tf\tx[1]\ty[1]\na\tf\tx[1]\ty[1]\n";
+        assert!(ArtifactManifest::parse(PathBuf::new(), dup).is_err());
+    }
+
+    #[test]
+    fn require_reports_available_names() {
+        let m = ArtifactManifest::parse(PathBuf::new(), "a\tf\tx[1]\ty[1]\n").unwrap();
+        let err = m.require("zzz").unwrap_err().to_string();
+        assert!(err.contains("zzz") && err.contains('a'), "{err}");
+    }
+
+    #[test]
+    fn shape_splitting_handles_bracket_commas() {
+        assert_eq!(
+            split_shapes("u8[64,4],f32[3]"),
+            vec!["u8[64,4]", "f32[3]"]
+        );
+        assert_eq!(split_shapes(""), Vec::<String>::new());
+    }
+}

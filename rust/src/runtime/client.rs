@@ -1,0 +1,85 @@
+//! PJRT client wrapper.
+//!
+//! One CPU PJRT client serves the whole process; compiled executables are
+//! cached by artifact name. Python/JAX is involved only at build time
+//! (`make artifacts`); at run time this module loads HLO *text* — the
+//! interchange format that round-trips cleanly between jax ≥ 0.5 and the
+//! `xla` crate's xla_extension 0.5.1 (serialized protos do not; see
+//! DESIGN.md and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::executor::CompiledKernel;
+
+/// Process-wide PJRT runtime.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, CompiledKernel>>,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact, or fetch it from the cache.
+    pub fn load_hlo_text(&self, name: &str, path: impl AsRef<Path>) -> Result<CompiledKernel> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(k) = cache.get(name) {
+                return Ok(k.clone());
+            }
+        }
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let kernel = CompiledKernel::new(name.to_string(), exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = RuntimeClient::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform_name().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = RuntimeClient::cpu().unwrap();
+        assert!(rt.load_hlo_text("nope", "/definitely/not/here.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Typed execution helpers over a compiled PJRT executable.
+//!
+//! The AOT bridge lowers every kernel with `return_tuple=True`, so each
+//! execution yields one tuple literal that we decompose into typed host
+//! vectors. Supported element types mirror the `xla` crate's `NativeType`
+//! set (f32/f64/i32/i64/u32/u64) — the Python side emits only f32 and i32
+//! tensors (colors are i32, not u8, for exactly this reason).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// A host-side input tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[i64]) -> Self {
+        assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>().max(1),
+            "data/shape mismatch"
+        );
+        HostTensor::F32(data, dims.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[i64]) -> Self {
+        assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>().max(1),
+            "data/shape mismatch"
+        );
+        HostTensor::I32(data, dims.to_vec())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(data, dims) => xla::Literal::vec1(data)
+                .reshape(dims)
+                .context("reshaping f32 input")?,
+            HostTensor::I32(data, dims) => xla::Literal::vec1(data)
+                .reshape(dims)
+                .context("reshaping i32 input")?,
+        };
+        Ok(lit)
+    }
+}
+
+/// A host-side output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostOutput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostOutput {
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostOutput::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostOutput::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn expect_f32(&self) -> &[f32] {
+        self.as_f32().expect("expected f32 output")
+    }
+
+    pub fn expect_i32(&self) -> &[i32] {
+        self.as_i32().expect("expected i32 output")
+    }
+}
+
+/// Cached compiled kernel handle (cheaply clonable).
+#[derive(Clone)]
+pub struct CompiledKernel {
+    name: String,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl CompiledKernel {
+    pub(crate) fn new(name: String, exe: xla::PjRtLoadedExecutable) -> Self {
+        Self {
+            name,
+            exe: Rc::new(exe),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostOutput>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing kernel '{}'", self.name))?[0][0]
+            .to_literal_sync()
+            .context("sync output to host")?;
+        // return_tuple=True: decompose the 1 result tuple.
+        let parts = result
+            .to_tuple()
+            .with_context(|| format!("kernel '{}' output is not a tuple", self.name))?;
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let ty = lit
+                    .ty()
+                    .with_context(|| format!("output {i} element type"))?;
+                match ty {
+                    xla::ElementType::F32 => Ok(HostOutput::F32(lit.to_vec::<f32>()?)),
+                    xla::ElementType::S32 => Ok(HostOutput::I32(lit.to_vec::<i32>()?)),
+                    // Predicates surface as i8 buffers in XLA; the Python
+                    // side converts to i32 before returning, so anything
+                    // else is a contract violation.
+                    other => anyhow::bail!(
+                        "kernel '{}' output {i}: unsupported element type {other:?}",
+                        self.name
+                    ),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert!(matches!(t, HostTensor::F32(_, _)));
+    }
+
+    #[test]
+    #[should_panic(expected = "data/shape mismatch")]
+    fn host_tensor_shape_mismatch_panics() {
+        let _ = HostTensor::i32(vec![1, 2, 3], &[2, 2]);
+    }
+
+    #[test]
+    fn host_output_accessors() {
+        let o = HostOutput::F32(vec![1.5]);
+        assert_eq!(o.expect_f32(), &[1.5]);
+        assert!(o.as_i32().is_none());
+    }
+
+    // End-to-end execution of a real artifact lives in
+    // rust/tests/integration_runtime.rs (requires `make artifacts`).
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load and execute AOT-compiled JAX/Pallas artifacts.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use client::RuntimeClient;
+pub use executor::{CompiledKernel, HostOutput, HostTensor};

@@ -1,0 +1,921 @@
+//! Deterministic discrete-event simulation of a multi-node allocation.
+//!
+//! The engine stands in for the paper's testbed (see DESIGN.md §2). Each
+//! simulated process owns a [`ShardWorkload`] and advances through
+//! simsteps — pull/absorb, compute, send — on its own virtual clock.
+//! **Workload state updates are real computation; only time is virtual**,
+//! so solution quality (graph-coloring conflicts, evolutionary fitness) is
+//! genuinely produced by the simulated communication regime, not modelled.
+//!
+//! Cost model per simstep:
+//!
+//! * compute: `(workload.step_cost_ns() + work_units × 35 ns)` scaled by
+//!   the node profile (speed, lognormal jitter, rare OS-noise stalls) and
+//!   a contention factor for co-scheduled CPUs;
+//! * per-channel send/pull CPU overheads from the [`LinkModel`];
+//! * message delivery at `depart + latency`, where departures drain from
+//!   a bounded send buffer at the link's service interval — a send
+//!   attempted against a full buffer is **dropped**, the paper's only
+//!   loss condition;
+//! * barrier semantics per asynchronicity mode (Table I), with barrier
+//!   cost growing logarithmically in process count.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
+
+use super::modes::{AsyncMode, ModeTiming};
+use crate::conduit::{ChannelStats, SendOutcome};
+use crate::net::{LinkModel, NodeProfile, Topology};
+#[cfg(test)]
+use crate::net::PlacementKind;
+use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::{Nanos, MICRO};
+use crate::workloads::{ChannelSpec, ShardWorkload};
+
+/// Which transport backs inter-CPU channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommBackend {
+    /// MPI-model links: intranode or internode per placement.
+    Mpi,
+    /// Shared-memory mutex links (multithreading, §III-E).
+    SharedMemory,
+}
+
+/// Contention factor for co-scheduled CPUs on one node:
+/// `1 + a * (k - 1)^b` for `k` co-resident processes/threads.
+///
+/// The paper observes severe per-CPU slowdown under multithreading even
+/// with communication disabled (mode 4) — 61 % loss from 1→4 threads on
+/// graph coloring — attributing it to "strain on a limited system resource
+/// like memory cache or access to the system clock" (§III-A). The (a, b)
+/// constants below are calibrated to those mode-4 measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct ContentionModel {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl ContentionModel {
+    /// No contention (distinct-node multiprocessing).
+    pub fn none() -> Self {
+        Self { a: 0.0, b: 1.0 }
+    }
+
+    /// Graph-coloring multithread calibration: f(4) ≈ 2.56, f(64) ≈ 10.
+    pub fn graph_coloring_threads() -> Self {
+        Self { a: 0.82, b: 0.58 }
+    }
+
+    /// Digital-evolution multithread calibration: f(64) ≈ 1.64
+    /// (mode-4 update rate 61 % of lone thread at 64 threads, §III-A).
+    pub fn digital_evolution_threads() -> Self {
+        Self { a: 0.045, b: 0.63 }
+    }
+
+    pub fn factor(&self, co_resident: usize) -> f64 {
+        if co_resident <= 1 {
+            1.0
+        } else {
+            1.0 + self.a * ((co_resident - 1) as f64).powf(self.b)
+        }
+    }
+}
+
+/// Simulation run configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub mode: AsyncMode,
+    pub timing: ModeTiming,
+    pub backend: CommBackend,
+    pub seed: u64,
+    /// Virtual runtime.
+    pub run_for: Nanos,
+    /// Synthetic per-update compute work (paper work units, 35 ns each).
+    pub added_work_units: u64,
+    /// Send-buffer capacity in messages (paper: 2 benchmarking, 64 QoS).
+    pub send_buffer: usize,
+    /// Physical cores per node (paper lac nodes: 28).
+    pub cores_per_node: usize,
+    pub contention: ContentionModel,
+    /// Barrier cost: `base + per_log2 * log2(P)` ns, plus an exponential
+    /// tail of mean `tail * log2(P)` sampled per release — collective
+    /// operations on real clusters have heavy-tailed completion times
+    /// (network contention, OS noise on any participant).
+    pub barrier_base_ns: f64,
+    pub barrier_per_log2_ns: f64,
+    pub barrier_tail_ns: f64,
+    /// Optional QoS snapshot schedule.
+    pub snapshots: Option<SnapshotSchedule>,
+    /// Override the link coalescing window (ablation hook): `Some(0)`
+    /// disables arrival batching entirely.
+    pub coalesce_override: Option<Nanos>,
+}
+
+impl SimConfig {
+    pub fn new(mode: AsyncMode, timing: ModeTiming, run_for: Nanos) -> Self {
+        Self {
+            mode,
+            timing,
+            backend: CommBackend::Mpi,
+            seed: 1,
+            run_for,
+            added_work_units: 0,
+            send_buffer: 2,
+            cores_per_node: 28,
+            contention: ContentionModel::none(),
+            barrier_base_ns: 4.0 * MICRO as f64,
+            barrier_per_log2_ns: 30.0 * MICRO as f64,
+            barrier_tail_ns: 100.0 * MICRO as f64,
+            snapshots: None,
+            coalesce_override: None,
+        }
+    }
+
+    fn barrier_cost(&self, n_procs: usize, rng: &mut Xoshiro256) -> Nanos {
+        let log2 = (n_procs.max(1) as f64).log2();
+        let tail = rng.exponential(self.barrier_tail_ns * log2.max(1.0));
+        (self.barrier_base_ns + self.barrier_per_log2_ns * log2 + tail) as Nanos
+    }
+}
+
+/// In-flight/arrived message envelope.
+#[derive(Clone, Debug)]
+struct Envelope<M> {
+    depart: Nanos,
+    arrival: Nanos,
+    touch: u64,
+    payload: M,
+}
+
+/// One directed inter-process channel.
+struct SimChannel<M> {
+    src: usize,
+    dst: usize,
+    /// Channel index within the source's channel list.
+    src_ch: usize,
+    /// Channel index within the destination's channel list (reciprocal).
+    dst_ch: usize,
+    link: LinkModel,
+    latency_factor: f64,
+    extra_drop: f64,
+    last_depart: Nanos,
+    last_arrival: Nanos,
+    queue: VecDeque<Envelope<M>>,
+    stats: Arc<ChannelStats>,
+}
+
+impl<M> SimChannel<M> {
+    /// Messages still occupying the send buffer at time `now`
+    /// (departures are monotone from front to back).
+    fn occupancy(&self, now: Nanos) -> usize {
+        // Count from the back while depart > now.
+        self.queue
+            .iter()
+            .rev()
+            .take_while(|e| e.depart > now)
+            .count()
+    }
+}
+
+/// Per-process simulation state.
+struct ProcState<W: ShardWorkload> {
+    workload: W,
+    rng: Xoshiro256,
+    clock: Nanos,
+    updates: u64,
+    /// Outgoing channel ids (into `Engine::channels`), by workload
+    /// channel index.
+    outgoing: Vec<usize>,
+    /// Incoming channel ids, paired with the local workload channel index
+    /// they deliver to.
+    incoming: Vec<(usize, usize)>,
+    /// For each incoming entry, the index (into `outgoing`/`touch`) of the
+    /// reciprocal outgoing channel — precomputed so the touch-counter
+    /// update is O(1) per laden pull (SPerf iteration 5).
+    reciprocal_out: Vec<Option<usize>>,
+    /// Touch counter per outgoing channel (tracks the peer relationship).
+    touch: Vec<TouchCounter>,
+    /// Mode-1 chunk start.
+    chunk_start: Nanos,
+    /// Mode-2 next fixed sync point.
+    next_fixed_sync: Nanos,
+    finished: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    SnapOpen(usize),
+    SnapClose(usize),
+    Wake(usize),
+}
+
+/// Result of one simulated replicate.
+pub struct SimResult<W> {
+    /// Final workload shards (for solution-quality assessment).
+    pub shards: Vec<W>,
+    /// Updates completed per process.
+    pub updates: Vec<u64>,
+    /// Virtual runtime simulated.
+    pub run_for: Nanos,
+    /// All QoS snapshot metrics (per channel per window, inlet/outlet
+    /// averaged).
+    pub qos: ReplicateQos,
+    /// Per-window per-channel raw windows (for mean/median splits).
+    pub windows: Vec<SnapshotWindow>,
+    /// Global delivery accounting.
+    pub attempted_sends: u64,
+    pub successful_sends: u64,
+}
+
+impl<W> SimResult<W> {
+    /// Mean per-CPU update rate in updates/second of virtual time.
+    pub fn update_rate_per_cpu_hz(&self) -> f64 {
+        if self.updates.is_empty() || self.run_for == 0 {
+            return 0.0;
+        }
+        let mean_updates =
+            self.updates.iter().sum::<u64>() as f64 / self.updates.len() as f64;
+        mean_updates / (self.run_for as f64 / 1e9)
+    }
+
+    /// Global delivery failure fraction over the whole run.
+    pub fn overall_failure_rate(&self) -> f64 {
+        if self.attempted_sends == 0 {
+            0.0
+        } else {
+            1.0 - self.successful_sends as f64 / self.attempted_sends as f64
+        }
+    }
+}
+
+/// The discrete-event engine.
+pub struct Engine<W: ShardWorkload> {
+    cfg: SimConfig,
+    topo: Topology,
+    profiles: Vec<NodeProfile>,
+    procs: Vec<ProcState<W>>,
+    channels: Vec<SimChannel<W::Msg>>,
+    heap: BinaryHeap<Reverse<(Nanos, u64, Ev)>>,
+    seq: u64,
+    /// Barrier bookkeeping: arrivals and max arrival time.
+    barrier_waiting: Vec<bool>,
+    barrier_count: usize,
+    barrier_max_arrival: Nanos,
+    /// Snapshot capture: per-channel observations at window open.
+    snap_open: Vec<(QosObservation, QosObservation)>,
+    windows: Vec<SnapshotWindow>,
+    /// Engine-level randomness (barrier tails etc.).
+    engine_rng: Xoshiro256,
+}
+
+impl<W: ShardWorkload> Engine<W> {
+    /// Build an engine over pre-constructed shards (one per process).
+    /// `profiles` has one entry per node (see [`Topology::n_nodes`]).
+    pub fn new(
+        cfg: SimConfig,
+        topo: Topology,
+        profiles: Vec<NodeProfile>,
+        shards: Vec<W>,
+    ) -> Self {
+        assert_eq!(shards.len(), topo.n_procs());
+        assert_eq!(profiles.len(), topo.n_nodes(), "one profile per node");
+        let mut seed_rng = Xoshiro256::new(cfg.seed);
+
+        // Gather channel specs per process.
+        let specs: Vec<Vec<ChannelSpec>> = shards.iter().map(|s| s.channels()).collect();
+
+        // Create directed channels and index them.
+        let mut channels: Vec<SimChannel<W::Msg>> = Vec::new();
+        let mut outgoing: Vec<Vec<usize>> = vec![Vec::new(); shards.len()];
+        for (src, specs_p) in specs.iter().enumerate() {
+            for (src_ch, spec) in specs_p.iter().enumerate() {
+                // Find the reciprocal channel index on the destination.
+                let dst_ch = specs[spec.peer]
+                    .iter()
+                    .position(|s| {
+                        s.peer == src && reciprocal_layer(spec.layer) == s.layer
+                    })
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "no reciprocal channel: src={src} spec={spec:?}"
+                        )
+                    });
+                let mut link = link_for(&cfg, &topo, src, spec.peer);
+                let pf_src = profiles[topo.node_of(src)];
+                let pf_dst = profiles[topo.node_of(spec.peer)];
+                // A degraded endpoint slows the send-buffer drain too: MPI
+                // progress (and hence request completion) is tied to the
+                // peer actually keeping up, so occupancy-driven drops
+                // emerge once `service x buffer` lags the send rate.
+                let health = pf_src.latency_factor.max(pf_dst.latency_factor);
+                link.service_ns *= health;
+                channels.push(SimChannel {
+                    src,
+                    dst: spec.peer,
+                    src_ch,
+                    dst_ch,
+                    link,
+                    latency_factor: pf_src.latency_factor.max(pf_dst.latency_factor),
+                    extra_drop: (pf_src.extra_drop_prob + pf_dst.extra_drop_prob).min(1.0),
+                    last_depart: 0,
+                    last_arrival: 0,
+                    queue: VecDeque::new(),
+                    stats: ChannelStats::new(),
+                });
+                outgoing[src].push(channels.len() - 1);
+            }
+        }
+
+        // Incoming lists.
+        let mut incoming: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards.len()];
+        for (cid, ch) in channels.iter().enumerate() {
+            incoming[ch.dst].push((cid, ch.dst_ch));
+        }
+
+        let n = shards.len();
+        let procs: Vec<ProcState<W>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(p, workload)| {
+                let mut rng = seed_rng.split(p as u64);
+                let skew = if cfg.timing.fixed_skew_max > 0 {
+                    rng.below(cfg.timing.fixed_skew_max) as Nanos
+                } else {
+                    0
+                };
+                let n_out = outgoing[p].len();
+                let my_outgoing = std::mem::take(&mut outgoing[p]);
+                let my_incoming = std::mem::take(&mut incoming[p]);
+                let reciprocal_out = my_incoming
+                    .iter()
+                    .map(|&(cid, _)| {
+                        my_outgoing.iter().position(|&oc| {
+                            channels[oc].dst == channels[cid].src
+                                && channels[oc].src_ch == channels[cid].dst_ch
+                        })
+                    })
+                    .collect();
+                ProcState {
+                    workload,
+                    rng,
+                    clock: 0,
+                    updates: 0,
+                    outgoing: my_outgoing,
+                    incoming: my_incoming,
+                    reciprocal_out,
+                    touch: vec![TouchCounter::default(); n_out],
+                    chunk_start: 0,
+                    next_fixed_sync: skew + cfg.timing.fixed_epoch,
+                    finished: false,
+                }
+            })
+            .collect();
+
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0u64;
+        for p in 0..n {
+            heap.push(Reverse((0, seq, Ev::Wake(p))));
+            seq += 1;
+        }
+        if let Some(s) = cfg.snapshots {
+            for i in 0..s.count {
+                heap.push(Reverse((s.open_at(i), seq, Ev::SnapOpen(i))));
+                seq += 1;
+                heap.push(Reverse((s.close_at(i), seq, Ev::SnapClose(i))));
+                seq += 1;
+            }
+        }
+
+        let engine_rng = Xoshiro256::new(cfg.seed ^ 0xBA44_1E44);
+        Self {
+            cfg,
+            topo,
+            profiles,
+            procs,
+            channels,
+            heap,
+            seq,
+            barrier_waiting: vec![false; n],
+            barrier_count: 0,
+            barrier_max_arrival: 0,
+            snap_open: Vec::new(),
+            windows: Vec::new(),
+            engine_rng,
+        }
+    }
+
+    fn schedule(&mut self, t: Nanos, ev: Ev) {
+        self.heap.push(Reverse((t, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    /// Run to completion and return results.
+    pub fn run(mut self) -> SimResult<W> {
+        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+            if t > self.cfg.run_for {
+                break;
+            }
+            match ev {
+                Ev::Wake(p) => self.step_process(p, t),
+                Ev::SnapOpen(_) => self.snapshot_open(t),
+                Ev::SnapClose(_) => self.snapshot_close(t),
+            }
+        }
+
+        let mut qos = ReplicateQos::default();
+        for w in &self.windows {
+            qos.push(w.metrics());
+        }
+        let (mut attempted, mut successful) = (0u64, 0u64);
+        for ch in &self.channels {
+            let t = ch.stats.tranche();
+            attempted += t.attempted_sends;
+            successful += t.successful_sends;
+        }
+        SimResult {
+            updates: self.procs.iter().map(|p| p.updates).collect(),
+            shards: self.procs.into_iter().map(|p| p.workload).collect(),
+            run_for: self.cfg.run_for,
+            qos,
+            windows: self.windows,
+            attempted_sends: attempted,
+            successful_sends: successful,
+        }
+    }
+
+    /// Execute one full simstep for process `p`, waking at time `t`.
+    fn step_process(&mut self, p: usize, t: Nanos) {
+        if self.procs[p].finished {
+            return;
+        }
+        let mut now = t;
+
+        // ---- Pull phase: drain every arrived message, oldest first. ----
+        if self.cfg.mode.communicates() {
+            // Index-based iteration: `incoming` is construction-time
+            // immutable, and cloning it per simstep was the #1 allocation
+            // in the DES hot loop (see EXPERIMENTS.md SPerf).
+            for k in 0..self.procs[p].incoming.len() {
+                let (cid, local_ch) = self.procs[p].incoming[k];
+                let mut msgs = Vec::new();
+                let mut max_touch: Option<u64> = None;
+                {
+                    let ch = &mut self.channels[cid];
+                    while let Some(front) = ch.queue.front() {
+                        if front.arrival <= now {
+                            let env = ch.queue.pop_front().unwrap();
+                            max_touch = Some(env.touch.max(max_touch.unwrap_or(0)));
+                            msgs.push(env.payload);
+                        } else {
+                            break;
+                        }
+                    }
+                    ch.stats.on_pull(msgs.len() as u64);
+                    now += ch.link.pull_overhead_ns as Nanos;
+                }
+                if let Some(bundled) = max_touch {
+                    // Update p's touch counter for this peer via the
+                    // precomputed reciprocal-channel index.
+                    if let Some(oi) = self.procs[p].reciprocal_out[k] {
+                        self.procs[p].touch[oi].on_receive(bundled);
+                        let v = self.procs[p].touch[oi].value();
+                        self.channels[self.procs[p].outgoing[oi]]
+                            .stats
+                            .set_touches(v);
+                    }
+                }
+                if !msgs.is_empty() {
+                    self.procs[p].workload.absorb(local_ch, msgs);
+                }
+            }
+        }
+
+        // ---- Compute phase. ----
+        let node = self.topo.node_of(p);
+        let profile = self.profiles[node];
+        let co_resident = self.topo.procs_on_node_of(p);
+        let nominal = self.procs[p].workload.step_cost_ns()
+            + self.cfg.added_work_units as f64 * crate::workloads::workunit::WORK_UNIT_WALL_NS;
+        let contention = self.cfg.contention.factor(co_resident);
+        let dur = {
+            let rng = &mut self.procs[p].rng;
+            profile.sample_compute(nominal, contention, co_resident, self.cfg.cores_per_node, rng)
+        };
+        now += dur;
+
+        let outputs = {
+            let proc = &mut self.procs[p];
+            proc.workload.step(&mut proc.rng)
+        };
+
+        // ---- Send phase. ----
+        if self.cfg.mode.communicates() {
+            for (local_ch, payload) in outputs {
+                let cid = self.procs[p].outgoing[local_ch];
+                let touch = self.procs[p].touch[local_ch].outgoing();
+                let outcome = {
+                    let ch = &mut self.channels[cid];
+                    now += ch.link.send_overhead_ns as Nanos;
+                    let full = ch.occupancy(now) >= self.cfg.send_buffer;
+                    let dropped = full
+                        || self.procs[p]
+                            .rng
+                            .chance(ch.link.base_drop_prob + ch.extra_drop);
+                    if dropped {
+                        SendOutcome::Dropped
+                    } else {
+                        let depart = now.max(ch.last_depart + ch.link.service_ns as Nanos);
+                        let latency = (ch.link.sample_latency(&mut self.procs[p].rng) as f64
+                            * ch.latency_factor) as Nanos;
+                        let arrival = ch.link.coalesce(depart + latency).max(ch.last_arrival);
+                        ch.last_depart = depart;
+                        ch.last_arrival = arrival;
+                        ch.queue.push_back(Envelope {
+                            depart,
+                            arrival,
+                            touch,
+                            payload,
+                        });
+                        SendOutcome::Accepted
+                    }
+                };
+                self.channels[cid]
+                    .stats
+                    .on_send_attempt(outcome.delivered_to_channel());
+            }
+        }
+
+        self.procs[p].updates += 1;
+        self.procs[p].clock = now;
+
+        // ---- Barrier / reschedule. ----
+        let enter_barrier = match self.cfg.mode {
+            AsyncMode::Sync => true,
+            AsyncMode::RollingBarrier => {
+                now.saturating_sub(self.procs[p].chunk_start) >= self.cfg.timing.rolling_chunk
+            }
+            AsyncMode::FixedBarrier => now >= self.procs[p].next_fixed_sync,
+            AsyncMode::BestEffort | AsyncMode::NoComm => false,
+        };
+
+        if enter_barrier {
+            self.arrive_barrier(p, now);
+        } else {
+            self.schedule(now, Ev::Wake(p));
+        }
+    }
+
+    fn arrive_barrier(&mut self, p: usize, t: Nanos) {
+        debug_assert!(!self.barrier_waiting[p]);
+        self.barrier_waiting[p] = true;
+        self.barrier_count += 1;
+        self.barrier_max_arrival = self.barrier_max_arrival.max(t);
+        if self.barrier_count == self.procs.len() {
+            // Release everyone.
+            let release = self.barrier_max_arrival
+                + self.cfg.barrier_cost(self.procs.len(), &mut self.engine_rng);
+            self.barrier_count = 0;
+            self.barrier_max_arrival = 0;
+            for q in 0..self.procs.len() {
+                self.barrier_waiting[q] = false;
+                self.procs[q].clock = release;
+                self.procs[q].chunk_start = release;
+                // Advance the fixed sync point past the release.
+                let proc = &mut self.procs[q];
+                while proc.next_fixed_sync <= release {
+                    proc.next_fixed_sync += self.cfg.timing.fixed_epoch;
+                }
+                self.schedule(release, Ev::Wake(q));
+            }
+        }
+    }
+
+    fn snapshot_open(&mut self, t: Nanos) {
+        self.snap_open = self
+            .channels
+            .iter()
+            .map(|ch| {
+                let counters = ch.stats.tranche();
+                (
+                    QosObservation {
+                        counters,
+                        update_count: self.procs[ch.src].updates,
+                        wall_ns: t,
+                    },
+                    QosObservation {
+                        counters,
+                        update_count: self.procs[ch.dst].updates,
+                        wall_ns: t,
+                    },
+                )
+            })
+            .collect();
+    }
+
+    fn snapshot_close(&mut self, t: Nanos) {
+        if self.snap_open.is_empty() {
+            return;
+        }
+        for (cid, ch) in self.channels.iter().enumerate() {
+            let counters = ch.stats.tranche();
+            let (inlet_before, outlet_before) = self.snap_open[cid];
+            self.windows.push(SnapshotWindow {
+                inlet_before,
+                inlet_after: QosObservation {
+                    counters,
+                    update_count: self.procs[ch.src].updates,
+                    wall_ns: t,
+                },
+                outlet_before,
+                outlet_after: QosObservation {
+                    counters,
+                    update_count: self.procs[ch.dst].updates,
+                    wall_ns: t,
+                },
+            });
+        }
+        self.snap_open.clear();
+    }
+}
+
+use crate::workloads::reciprocal_layer;
+
+fn link_for(cfg: &SimConfig, topo: &Topology, a: usize, b: usize) -> LinkModel {
+    let mut link = match cfg.backend {
+        CommBackend::SharedMemory => LinkModel::thread_shared_memory(),
+        CommBackend::Mpi => {
+            if topo.same_node(a, b) {
+                LinkModel::intranode()
+            } else {
+                LinkModel::internode()
+            }
+        }
+    };
+    if let Some(c) = cfg.coalesce_override {
+        link.coalesce_ns = c;
+    }
+    link
+}
+
+/// Convenience: build healthy profiles for every node of `topo`.
+pub fn healthy_profiles(topo: &Topology) -> Vec<NodeProfile> {
+    vec![NodeProfile::healthy(); topo.n_nodes()]
+}
+
+/// Heterogeneous healthy profiles: persistent per-node speed factors
+/// drawn lognormal(0, `speed_sigma`) with raised per-update jitter.
+///
+/// The paper's testbed is "a cluster of hundreds of heterogeneous x86
+/// nodes" (SII-F1); persistent node-speed spread plus per-update jitter is
+/// what makes barrier-per-update synchronization collapse at scale — each
+/// superstep waits for the most laggardly draw (the double-dutch effect of
+/// SI). Benchmark experiments use these profiles; QoS experiments (which
+/// compare same-allocation treatments) default to homogeneous ones.
+pub fn heterogeneous_profiles(
+    topo: &Topology,
+    seed: u64,
+    speed_sigma: f64,
+) -> Vec<NodeProfile> {
+    let mut rng = Xoshiro256::new(seed ^ 0x8E7E_0906);
+    (0..topo.n_nodes())
+        .map(|_| {
+            let mut p = NodeProfile::healthy();
+            p.speed_factor = rng.lognormal(0.0, speed_sigma);
+            p.jitter_sigma = 0.35;
+            p
+        })
+        .collect()
+}
+
+/// Convenience: healthy profiles with one faulty node at `faulty_node`.
+pub fn profiles_with_faulty(topo: &Topology, faulty_node: usize) -> Vec<NodeProfile> {
+    let mut v = healthy_profiles(topo);
+    if faulty_node < v.len() {
+        v[faulty_node] = NodeProfile::faulty_lac417();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MILLI, SECOND};
+    use crate::workloads::{GcConfig, GraphColoringShard};
+
+    fn gc_engine(
+        n_procs: usize,
+        simels: usize,
+        mode: AsyncMode,
+        run_for: Nanos,
+        seed: u64,
+    ) -> Engine<GraphColoringShard> {
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let cfg_gc = GcConfig {
+            simels_per_proc: simels,
+            ..GcConfig::default()
+        };
+        let shards: Vec<_> = (0..n_procs)
+            .map(|r| GraphColoringShard::new(cfg_gc, &topo, r, &mut rng))
+            .collect();
+        let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+        cfg.seed = seed;
+        cfg.send_buffer = 64;
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards)
+    }
+
+    #[test]
+    fn best_effort_runs_and_counts_updates() {
+        let result = gc_engine(4, 16, AsyncMode::BestEffort, 50 * MILLI, 1).run();
+        assert_eq!(result.updates.len(), 4);
+        for &u in &result.updates {
+            assert!(u > 100, "updates={u}");
+        }
+        assert!(result.update_rate_per_cpu_hz() > 1000.0);
+    }
+
+    #[test]
+    fn sync_mode_lockstep_updates() {
+        let result = gc_engine(4, 16, AsyncMode::Sync, 50 * MILLI, 2).run();
+        // Barrier every update: all procs complete the same update count
+        // (+-1 for the cut at run end).
+        let min = *result.updates.iter().min().unwrap();
+        let max = *result.updates.iter().max().unwrap();
+        assert!(max - min <= 1, "lockstep violated: {:?}", result.updates);
+    }
+
+    #[test]
+    fn best_effort_faster_than_sync() {
+        let sync = gc_engine(16, 1, AsyncMode::Sync, 100 * MILLI, 3).run();
+        let be = gc_engine(16, 1, AsyncMode::BestEffort, 100 * MILLI, 3).run();
+        assert!(
+            be.update_rate_per_cpu_hz() > 1.5 * sync.update_rate_per_cpu_hz(),
+            "best-effort {} vs sync {}",
+            be.update_rate_per_cpu_hz(),
+            sync.update_rate_per_cpu_hz()
+        );
+    }
+
+    #[test]
+    fn no_comm_mode_sends_nothing() {
+        let result = gc_engine(4, 16, AsyncMode::NoComm, 20 * MILLI, 4).run();
+        assert_eq!(result.attempted_sends, 0);
+    }
+
+    #[test]
+    fn messages_flow_in_best_effort_mode() {
+        let result = gc_engine(4, 16, AsyncMode::BestEffort, 50 * MILLI, 5).run();
+        assert!(result.attempted_sends > 0);
+        assert!(result.successful_sends > 0);
+    }
+
+    #[test]
+    fn conflicts_converge_under_simulated_best_effort() {
+        let result = gc_engine(4, 64, AsyncMode::BestEffort, SECOND, 6).run();
+        let conflicts =
+            crate::workloads::graph_coloring::global_conflicts(
+                &Topology::new(4, PlacementKind::OnePerNode),
+                &result.shards,
+            );
+        // 256 vertices: conflicts should be well below random (~2/3 * 256).
+        assert!(conflicts < 40, "conflicts={conflicts}");
+    }
+
+    #[test]
+    fn snapshots_produce_qos_windows() {
+        let topo = Topology::new(2, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(7);
+        let shards: Vec<_> = (0..2)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(2),
+            200 * MILLI,
+        );
+        cfg.send_buffer = 64;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            50 * MILLI,
+            50 * MILLI,
+            10 * MILLI,
+            3,
+        ));
+        let result = Engine::new(cfg, topo, vec![NodeProfile::healthy(); 2], shards).run();
+        // 2 procs x 2 channels each (1x2 mesh: E+W) x 3 windows = 12.
+        assert_eq!(result.windows.len(), 12);
+        for m in &result.qos.snapshots {
+            assert!(m.simstep_period_ns > 0.0);
+            assert!((0.0..=1.0).contains(&m.delivery_failure_rate));
+            assert!((0.0..=1.0).contains(&m.delivery_clumpiness));
+        }
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let a = gc_engine(4, 16, AsyncMode::BestEffort, 30 * MILLI, 42).run();
+        let b = gc_engine(4, 16, AsyncMode::BestEffort, 30 * MILLI, 42).run();
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.attempted_sends, b.attempted_sends);
+        assert_eq!(a.successful_sends, b.successful_sends);
+        let ca: Vec<u8> = a.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        let cb: Vec<u8> = b.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = gc_engine(4, 16, AsyncMode::BestEffort, 30 * MILLI, 1).run();
+        let b = gc_engine(4, 16, AsyncMode::BestEffort, 30 * MILLI, 2).run();
+        assert_ne!(
+            (a.updates.clone(), a.attempted_sends),
+            (b.updates.clone(), b.attempted_sends)
+        );
+    }
+
+    #[test]
+    fn faulty_node_degrades_its_own_clique_only() {
+        let topo = Topology::new(16, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(9);
+        let mk_shards = |rng: &mut Xoshiro256| -> Vec<_> {
+            (0..16)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig {
+                            simels_per_proc: 1,
+                            ..GcConfig::default()
+                        },
+                        &topo,
+                        r,
+                        rng,
+                    )
+                })
+                .collect()
+        };
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(16),
+            300 * MILLI,
+        );
+        cfg.send_buffer = 64;
+        let healthy = Engine::new(
+            cfg.clone(),
+            topo.clone(),
+            healthy_profiles(&topo),
+            mk_shards(&mut rng),
+        )
+        .run();
+        let faulty = Engine::new(
+            cfg,
+            topo.clone(),
+            profiles_with_faulty(&topo, 5),
+            mk_shards(&mut rng),
+        )
+        .run();
+        // Faulty node's own process does far fewer updates...
+        assert!(
+            (faulty.updates[5] as f64) < 0.7 * (healthy.updates[5] as f64),
+            "faulty={} healthy={}",
+            faulty.updates[5],
+            healthy.updates[5]
+        );
+        // ...while the median process stays healthy.
+        let mut h: Vec<u64> = healthy.updates.clone();
+        let mut f: Vec<u64> = faulty.updates.clone();
+        h.sort_unstable();
+        f.sort_unstable();
+        let (hm, fm) = (h[8] as f64, f[8] as f64);
+        assert!(fm > 0.8 * hm, "median degraded: healthy={hm} faulty={fm}");
+    }
+
+    #[test]
+    fn reciprocal_layer_roundtrip() {
+        use crate::workloads::DE_LAYER_BASE;
+        assert_eq!(reciprocal_layer(0), 2);
+        // dir1,kind0 -> dir3,kind0
+        assert_eq!(reciprocal_layer(DE_LAYER_BASE + 5), DE_LAYER_BASE + 15);
+    }
+
+    #[test]
+    fn contention_model_calibration() {
+        let gc = ContentionModel::graph_coloring_threads();
+        assert!((gc.factor(4) - 2.56).abs() < 0.35, "{}", gc.factor(4));
+        assert!((gc.factor(64) - 10.0).abs() < 2.0, "{}", gc.factor(64));
+        assert_eq!(gc.factor(1), 1.0);
+        let de = ContentionModel::digital_evolution_threads();
+        assert!((de.factor(64) - 1.64).abs() < 0.25, "{}", de.factor(64));
+        assert_eq!(ContentionModel::none().factor(64), 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Discrete-event simulation of a multi-node allocation (DESIGN.md §2).
+
+pub mod engine;
+pub mod modes;
+
+pub use engine::{
+    healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel, Engine, SimConfig,
+    SimResult,
+};
+pub use modes::{AsyncMode, ModeTiming};

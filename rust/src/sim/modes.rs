@@ -1,0 +1,154 @@
+//! Asynchronicity modes 0–4 (paper Table I).
+//!
+//! | mode | description |
+//! |---|---|
+//! | 0 | Barrier sync every update |
+//! | 1 | Rolling barrier sync (fixed-length work chunks between barriers) |
+//! | 2 | Fixed barrier sync (barriers at predetermined epoch timepoints) |
+//! | 3 | No barrier sync (fully best-effort) |
+//! | 4 | No inter-CPU communication at all |
+
+use crate::util::{Nanos, MILLI, SECOND};
+
+/// Synchronization discipline of a run, most- to least-synchronized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AsyncMode {
+    /// Mode 0: full barrier between every computational update.
+    Sync = 0,
+    /// Mode 1: work for a fixed-duration chunk, then barrier, repeat.
+    /// (Paper: 10 ms chunks for graph coloring, 100 ms for digital
+    /// evolution.)
+    RollingBarrier = 1,
+    /// Mode 2: barrier at predetermined epoch timepoints (paper: every
+    /// elapsed second of epoch time — vulnerable to the startup-offset
+    /// race of §III-B).
+    FixedBarrier = 2,
+    /// Mode 3: fully asynchronous best-effort communication.
+    BestEffort = 3,
+    /// Mode 4: all inter-CPU communication disabled (isolates
+    /// communication costs from e.g. cache crowding).
+    NoComm = 4,
+}
+
+impl AsyncMode {
+    pub const ALL: [AsyncMode; 5] = [
+        AsyncMode::Sync,
+        AsyncMode::RollingBarrier,
+        AsyncMode::FixedBarrier,
+        AsyncMode::BestEffort,
+        AsyncMode::NoComm,
+    ];
+
+    pub fn from_index(i: usize) -> Option<AsyncMode> {
+        Self::ALL.get(i).copied()
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AsyncMode::Sync => "mode 0 (barrier every update)",
+            AsyncMode::RollingBarrier => "mode 1 (rolling barrier)",
+            AsyncMode::FixedBarrier => "mode 2 (fixed barrier)",
+            AsyncMode::BestEffort => "mode 3 (no barrier)",
+            AsyncMode::NoComm => "mode 4 (no communication)",
+        }
+    }
+
+    /// Does this mode exchange inter-CPU messages?
+    pub fn communicates(self) -> bool {
+        self != AsyncMode::NoComm
+    }
+
+    /// Does this mode ever execute barriers?
+    pub fn uses_barriers(self) -> bool {
+        matches!(
+            self,
+            AsyncMode::Sync | AsyncMode::RollingBarrier | AsyncMode::FixedBarrier
+        )
+    }
+}
+
+/// Mode-specific timing parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeTiming {
+    /// Mode-1 work-chunk duration.
+    pub rolling_chunk: Nanos,
+    /// Mode-2 epoch between predetermined sync points.
+    pub fixed_epoch: Nanos,
+    /// Mode-2 maximum per-process startup skew. Nonzero skew reproduces
+    /// the race the paper suspects behind mode 2's poor 64-process
+    /// solution quality (§III-B: "workers would assign sync points to
+    /// different fixed points based on slightly different startup times").
+    pub fixed_skew_max: Nanos,
+}
+
+impl ModeTiming {
+    /// Graph-coloring benchmark timing (10 ms chunks, §II-C).
+    pub fn graph_coloring(n_procs: usize) -> Self {
+        Self {
+            rolling_chunk: 10 * MILLI,
+            fixed_epoch: SECOND,
+            fixed_skew_max: skew_for(n_procs),
+        }
+    }
+
+    /// Digital-evolution benchmark timing (100 ms chunks, §II-C).
+    pub fn digital_evolution(n_procs: usize) -> Self {
+        Self {
+            rolling_chunk: 100 * MILLI,
+            fixed_epoch: SECOND,
+            fixed_skew_max: skew_for(n_procs),
+        }
+    }
+}
+
+/// Startup skew grows with job size (staggered process launch), saturating
+/// at a full epoch.
+fn skew_for(n_procs: usize) -> Nanos {
+    let frac = (n_procs as f64 / 64.0).min(1.0);
+    (frac * SECOND as f64) as Nanos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_indices_match_paper_table() {
+        for (i, m) in AsyncMode::ALL.iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(AsyncMode::from_index(i), Some(*m));
+        }
+        assert_eq!(AsyncMode::from_index(5), None);
+    }
+
+    #[test]
+    fn communication_and_barrier_flags() {
+        assert!(AsyncMode::Sync.uses_barriers());
+        assert!(AsyncMode::RollingBarrier.uses_barriers());
+        assert!(AsyncMode::FixedBarrier.uses_barriers());
+        assert!(!AsyncMode::BestEffort.uses_barriers());
+        assert!(!AsyncMode::NoComm.uses_barriers());
+        assert!(AsyncMode::BestEffort.communicates());
+        assert!(!AsyncMode::NoComm.communicates());
+    }
+
+    #[test]
+    fn paper_chunk_durations() {
+        assert_eq!(ModeTiming::graph_coloring(64).rolling_chunk, 10 * MILLI);
+        assert_eq!(ModeTiming::digital_evolution(64).rolling_chunk, 100 * MILLI);
+        assert_eq!(ModeTiming::graph_coloring(64).fixed_epoch, SECOND);
+    }
+
+    #[test]
+    fn skew_scales_and_saturates() {
+        assert!(ModeTiming::graph_coloring(4).fixed_skew_max < ModeTiming::graph_coloring(64).fixed_skew_max);
+        assert_eq!(
+            ModeTiming::graph_coloring(64).fixed_skew_max,
+            ModeTiming::graph_coloring(256).fixed_skew_max
+        );
+    }
+}

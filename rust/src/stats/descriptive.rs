@@ -1,0 +1,220 @@
+//! Descriptive statistics: means, medians, quantiles, bootstrap CIs.
+//!
+//! The paper reports bootstrapped 95 % confidence intervals on benchmark
+//! bars (Figs. 2–3) and aggregates QoS snapshots per replicate by mean and
+//! median (§II-E). All of that lives here.
+
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n−1 denominator); 0 for fewer than two values.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Median (linear-interpolated between middle values for even n);
+/// NaN-safe: NaNs are ignored. 0 for an empty slice.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Quantile `q` in `[0, 1]` via linear interpolation (type-7, the
+/// numpy/R default). NaNs ignored; 0 for an empty slice.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let h = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (h - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// A bootstrapped confidence interval around a point estimate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConfidenceInterval {
+    pub estimate: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl ConfidenceInterval {
+    /// Do two intervals fail to overlap? (The paper's significance calls
+    /// on benchmark results use non-overlapping bootstrapped 95 % CIs.)
+    pub fn disjoint_from(&self, other: &ConfidenceInterval) -> bool {
+        self.hi < other.lo || other.hi < self.lo
+    }
+}
+
+/// Percentile-bootstrap CI for an arbitrary statistic.
+pub fn bootstrap_ci(
+    xs: &[f64],
+    statistic: impl Fn(&[f64]) -> f64,
+    level: f64,
+    resamples: usize,
+    seed: u64,
+) -> ConfidenceInterval {
+    let estimate = statistic(xs);
+    if xs.len() < 2 {
+        return ConfidenceInterval {
+            estimate,
+            lo: estimate,
+            hi: estimate,
+        };
+    }
+    let mut rng = Xoshiro256::new(seed);
+    let mut stats = Vec::with_capacity(resamples);
+    let mut resample = vec![0.0; xs.len()];
+    for _ in 0..resamples {
+        for slot in resample.iter_mut() {
+            *slot = xs[rng.index(xs.len())];
+        }
+        stats.push(statistic(&resample));
+    }
+    let alpha = 1.0 - level;
+    ConfidenceInterval {
+        estimate,
+        lo: quantile(&stats, alpha / 2.0),
+        hi: quantile(&stats, 1.0 - alpha / 2.0),
+    }
+}
+
+/// 95 % bootstrap CI of the mean with the crate's default resample count.
+pub fn bootstrap_mean_ci95(xs: &[f64], seed: u64) -> ConfidenceInterval {
+    bootstrap_ci(xs, mean, 0.95, 2_000, seed)
+}
+
+/// Full five-number-style summary used in reports.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        Summary {
+            n: finite.len(),
+            mean: mean(&finite),
+            sd: std_dev(&finite),
+            min: finite.iter().copied().fold(f64::INFINITY, f64::min),
+            p25: quantile(&finite, 0.25),
+            median: median(&finite),
+            p75: quantile(&finite, 0.75),
+            max: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolation() {
+        let xs = [0.0, 10.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 0.25), 2.5);
+        assert_eq!(quantile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn quantile_ignores_nan() {
+        let xs = [1.0, f64::NAN, 3.0];
+        assert_eq!(median(&xs), 2.0);
+    }
+
+    #[test]
+    fn variance_known_value() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // population var 4.0 => sample var 4.571428...
+        assert!((variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_ci_contains_mean_for_tight_data() {
+        let xs: Vec<f64> = (0..100).map(|i| 10.0 + (i % 5) as f64 * 0.01).collect();
+        let ci = bootstrap_mean_ci95(&xs, 42);
+        assert!(ci.lo <= ci.estimate && ci.estimate <= ci.hi);
+        assert!(ci.hi - ci.lo < 0.02, "tight data must give tight CI: {ci:?}");
+    }
+
+    #[test]
+    fn bootstrap_ci_widens_with_spread() {
+        let tight: Vec<f64> = (0..50).map(|i| 5.0 + 0.001 * i as f64).collect();
+        let wide: Vec<f64> = (0..50).map(|i| (i as f64) * 2.0).collect();
+        let ci_t = bootstrap_mean_ci95(&tight, 1);
+        let ci_w = bootstrap_mean_ci95(&wide, 1);
+        assert!((ci_w.hi - ci_w.lo) > (ci_t.hi - ci_t.lo) * 10.0);
+    }
+
+    #[test]
+    fn disjoint_intervals() {
+        let a = ConfidenceInterval {
+            estimate: 1.0,
+            lo: 0.5,
+            hi: 1.5,
+        };
+        let b = ConfidenceInterval {
+            estimate: 3.0,
+            lo: 2.5,
+            hi: 3.5,
+        };
+        let c = ConfidenceInterval {
+            estimate: 1.4,
+            lo: 1.2,
+            hi: 2.8,
+        };
+        assert!(a.disjoint_from(&b));
+        assert!(!a.disjoint_from(&c));
+        assert!(!b.disjoint_from(&c));
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Statistics used to render the paper's analyses: descriptive summaries,
+//! bootstrap CIs (benchmark figures), OLS on means, quantile regression on
+//! medians (§II-E).
+
+pub mod descriptive;
+pub mod dist;
+pub mod ols;
+pub mod quantile_reg;
+
+pub use descriptive::{bootstrap_mean_ci95, mean, median, quantile, ConfidenceInterval, Summary};
+pub use ols::{ols, two_sample_t, OlsFit};
+pub use quantile_reg::{quantile_regression, QuantRegFit};

@@ -1,0 +1,192 @@
+//! Simple linear regression (OLS) with t-based inference.
+//!
+//! The paper analyses treatment effects on *means* with ordinary least
+//! squares regression (§II-E): QoS response against log₄ processor count
+//! (weak scaling, Figs. 4, 7, and supplementary) or against a 0/1-coded
+//! dichotomous treatment (in which case OLS reduces to an independent
+//! t-test). One predictor plus intercept is all the paper uses, so that is
+//! all we implement — with exact closed-form estimates and standard
+//! errors.
+
+use super::dist::t_two_sided_p;
+
+/// Fitted simple linear regression `y = intercept + slope * x`.
+#[derive(Clone, Copy, Debug)]
+pub struct OlsFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Standard error of the slope.
+    pub slope_se: f64,
+    /// t statistic for H0: slope = 0.
+    pub t_stat: f64,
+    /// Two-sided p-value for the slope.
+    pub p_value: f64,
+    /// 95 % confidence interval for the slope (normal-approx t critical).
+    pub slope_ci95: (f64, f64),
+    /// Coefficient of determination.
+    pub r_squared: f64,
+    /// Residual degrees of freedom (n − 2).
+    pub df: f64,
+    pub n: usize,
+}
+
+impl OlsFit {
+    /// Significant at the paper's p < 0.05 level?
+    pub fn significant(&self) -> bool {
+        self.p_value < 0.05
+    }
+}
+
+/// Fit `y ~ 1 + x` by least squares. Returns `None` when n < 3 or x has no
+/// variance (fit undefined).
+pub fn ols(x: &[f64], y: &[f64]) -> Option<OlsFit> {
+    assert_eq!(x.len(), y.len(), "x/y length mismatch");
+    let n = x.len();
+    if n < 3 {
+        return None;
+    }
+    let nf = n as f64;
+    let mx = x.iter().sum::<f64>() / nf;
+    let my = y.iter().sum::<f64>() / nf;
+    let sxx: f64 = x.iter().map(|xi| (xi - mx) * (xi - mx)).sum();
+    if sxx <= 0.0 {
+        return None;
+    }
+    let sxy: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(xi, yi)| (xi - mx) * (yi - my))
+        .sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(xi, yi)| {
+            let e = yi - (intercept + slope * xi);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
+    let df = nf - 2.0;
+    let sigma2 = ss_res / df;
+    let slope_se = (sigma2 / sxx).sqrt();
+    let t_stat = if slope_se > 0.0 {
+        slope / slope_se
+    } else if slope == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY * slope.signum()
+    };
+    let p_value = t_two_sided_p(t_stat, df);
+    // 97.5 % t critical value via bisection on the CDF.
+    let crit = t_critical_975(df);
+    let r_squared = if ss_tot > 0.0 {
+        1.0 - ss_res / ss_tot
+    } else {
+        1.0
+    };
+    Some(OlsFit {
+        intercept,
+        slope,
+        slope_se,
+        t_stat,
+        p_value,
+        slope_ci95: (slope - crit * slope_se, slope + crit * slope_se),
+        r_squared,
+        df,
+        n,
+    })
+}
+
+/// 97.5th percentile of the t distribution (for 95 % CIs), by bisection.
+pub fn t_critical_975(df: f64) -> f64 {
+    let (mut lo, mut hi) = (0.0f64, 1e3f64);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if super::dist::t_cdf(mid, df) < 0.975 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Independent two-sample t-test via 0/1-coded OLS (the paper's approach
+/// for dichotomous treatments, §II-E: "this boils down to an independent
+/// t-test").
+pub fn two_sample_t(group0: &[f64], group1: &[f64]) -> Option<OlsFit> {
+    let mut x = Vec::with_capacity(group0.len() + group1.len());
+    let mut y = Vec::with_capacity(x.capacity());
+    for &v in group0 {
+        x.push(0.0);
+        y.push(v);
+    }
+    for &v in group1 {
+        x.push(1.0);
+        y.push(v);
+    }
+    ols(&x, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    #[test]
+    fn exact_line_recovered() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| 3.0 + 2.0 * xi).collect();
+        let fit = ols(&x, &y).unwrap();
+        assert!((fit.slope - 2.0).abs() < 1e-12);
+        assert!((fit.intercept - 3.0).abs() < 1e-12);
+        assert!((fit.r_squared - 1.0).abs() < 1e-12);
+        assert!(fit.significant());
+    }
+
+    #[test]
+    fn noisy_slope_inference() {
+        let mut rng = Xoshiro256::new(99);
+        let x: Vec<f64> = (0..200).map(|i| (i % 20) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| 1.0 + 0.5 * xi + rng.normal(0.0, 1.0)).collect();
+        let fit = ols(&x, &y).unwrap();
+        assert!((fit.slope - 0.5).abs() < 0.05, "slope={}", fit.slope);
+        assert!(fit.significant());
+        assert!(fit.slope_ci95.0 < 0.5 && 0.5 < fit.slope_ci95.1);
+    }
+
+    #[test]
+    fn null_slope_usually_insignificant() {
+        let mut rng = Xoshiro256::new(7);
+        let x: Vec<f64> = (0..100).map(|i| (i % 10) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|_| rng.normal(5.0, 1.0)).collect();
+        let fit = ols(&x, &y).unwrap();
+        assert!(fit.p_value > 0.01, "p={}", fit.p_value);
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(ols(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+        assert!(ols(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn two_sample_t_detects_shift() {
+        let g0: Vec<f64> = (0..30).map(|i| 10.0 + (i % 3) as f64 * 0.1).collect();
+        let g1: Vec<f64> = (0..30).map(|i| 12.0 + (i % 3) as f64 * 0.1).collect();
+        let fit = two_sample_t(&g0, &g1).unwrap();
+        assert!((fit.slope - 2.0).abs() < 1e-6);
+        assert!(fit.significant());
+    }
+
+    #[test]
+    fn t_critical_reference() {
+        // df=10 -> 2.228; df=30 -> 2.042; df large -> 1.96
+        assert!((t_critical_975(10.0) - 2.228).abs() < 5e-3);
+        assert!((t_critical_975(30.0) - 2.042).abs() < 5e-3);
+        assert!((t_critical_975(1e6) - 1.96).abs() < 5e-3);
+    }
+}

@@ -1,0 +1,252 @@
+//! Quantile (median) regression for one predictor plus intercept.
+//!
+//! The paper analyses treatment effects on *medians* with quantile
+//! regression (§II-E, Koenker & Hallock 2001). For a single predictor the
+//! τ = 0.5 problem — minimize Σ |yᵢ − a − b·xᵢ| — can be solved exactly:
+//! an optimal line passes through at least two sample points (a basic
+//! solution of the underlying LP), so with the small per-replicate sample
+//! sizes the paper uses (tens of observations) exhaustively scoring all
+//! point pairs is both exact and fast. For larger inputs we fall back to
+//! iteratively-reweighted least squares (IRLS) with Huber-style smoothing,
+//! which converges to the same minimizer up to smoothing tolerance.
+//!
+//! Inference: rank-score tests are overkill here; we bootstrap the slope
+//! (case resampling), matching how the paper's quantile-regression
+//! coefficient CIs are displayed (Figs. 5d, 6d, 8d).
+
+use super::descriptive::quantile;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Fitted median regression `median(y|x) = intercept + slope * x`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantRegFit {
+    pub intercept: f64,
+    pub slope: f64,
+    /// Sum of absolute residuals at the optimum.
+    pub objective: f64,
+    /// Bootstrap 95 % CI for the slope.
+    pub slope_ci95: (f64, f64),
+    /// Fraction of bootstrap slopes on the opposite side of zero from the
+    /// estimate, doubled — an empirical two-sided p-value.
+    pub p_value: f64,
+    pub n: usize,
+}
+
+impl QuantRegFit {
+    pub fn significant(&self) -> bool {
+        self.p_value < 0.05
+    }
+}
+
+fn l1_objective(x: &[f64], y: &[f64], a: f64, b: f64) -> f64 {
+    x.iter()
+        .zip(y)
+        .map(|(xi, yi)| (yi - a - b * xi).abs())
+        .sum()
+}
+
+/// Exact small-n solver: best line through a pair of points.
+fn fit_exact(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    let n = x.len();
+    let mut best = (0.0, 0.0, f64::INFINITY);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if (x[i] - x[j]).abs() < 1e-300 {
+                continue;
+            }
+            let b = (y[i] - y[j]) / (x[i] - x[j]);
+            let a = y[i] - b * x[i];
+            let obj = l1_objective(x, y, a, b);
+            if obj < best.2 {
+                best = (a, b, obj);
+            }
+        }
+    }
+    // Horizontal-line candidate (slope 0 through the median) for the
+    // degenerate case where all pairs are vertical.
+    let med = quantile(y, 0.5);
+    let obj0 = l1_objective(x, y, med, 0.0);
+    if obj0 < best.2 {
+        best = (med, 0.0, obj0);
+    }
+    best
+}
+
+/// IRLS fallback for large n.
+fn fit_irls(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    let n = x.len() as f64;
+    // Initialize from OLS.
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxx: f64 = x.iter().map(|xi| (xi - mx) * (xi - mx)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(xi, yi)| (xi - mx) * (yi - my)).sum();
+    let mut b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let mut a = my - b * mx;
+    let eps = 1e-9;
+    for _ in 0..200 {
+        // Weighted least squares with w_i = 1/max(|r_i|, eps).
+        let (mut sw, mut swx, mut swy, mut swxx, mut swxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for (xi, yi) in x.iter().zip(y) {
+            let r = (yi - a - b * xi).abs().max(eps);
+            let w = 1.0 / r;
+            sw += w;
+            swx += w * xi;
+            swy += w * yi;
+            swxx += w * xi * xi;
+            swxy += w * xi * yi;
+        }
+        let det = sw * swxx - swx * swx;
+        if det.abs() < 1e-300 {
+            break;
+        }
+        let new_a = (swy * swxx - swx * swxy) / det;
+        let new_b = (sw * swxy - swx * swy) / det;
+        if (new_a - a).abs() < 1e-12 && (new_b - b).abs() < 1e-12 {
+            a = new_a;
+            b = new_b;
+            break;
+        }
+        a = new_a;
+        b = new_b;
+    }
+    (a, b, l1_objective(x, y, a, b))
+}
+
+fn fit_point(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    if x.len() <= 64 {
+        fit_exact(x, y)
+    } else {
+        fit_irls(x, y)
+    }
+}
+
+/// Fit median regression with bootstrap inference. `None` if n < 3 or x is
+/// constant.
+pub fn quantile_regression(x: &[f64], y: &[f64], seed: u64) -> Option<QuantRegFit> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 3 {
+        return None;
+    }
+    let x_min = x.iter().copied().fold(f64::INFINITY, f64::min);
+    let x_max = x.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !(x_max > x_min) {
+        return None;
+    }
+    let (a, b, obj) = fit_point(x, y);
+
+    const RESAMPLES: usize = 500;
+    let mut rng = Xoshiro256::new(seed);
+    let mut slopes = Vec::with_capacity(RESAMPLES);
+    let mut bx = vec![0.0; n];
+    let mut by = vec![0.0; n];
+    for _ in 0..RESAMPLES {
+        for k in 0..n {
+            let i = rng.index(n);
+            bx[k] = x[i];
+            by[k] = y[i];
+        }
+        // Degenerate resample (constant x): slope is 0 by convention.
+        let rx_min = bx.iter().copied().fold(f64::INFINITY, f64::min);
+        let rx_max = bx.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if rx_max > rx_min {
+            slopes.push(fit_point(&bx, &by).1);
+        } else {
+            slopes.push(0.0);
+        }
+    }
+    let lo = quantile(&slopes, 0.025);
+    let hi = quantile(&slopes, 0.975);
+    let opposite = slopes
+        .iter()
+        .filter(|&&s| if b >= 0.0 { s <= 0.0 } else { s >= 0.0 })
+        .count() as f64;
+    let p_value = (2.0 * opposite / RESAMPLES as f64).min(1.0);
+
+    Some(QuantRegFit {
+        intercept: a,
+        slope: b,
+        objective: obj,
+        slope_ci95: (lo, hi),
+        p_value,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let x: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| -1.0 + 0.75 * xi).collect();
+        let fit = quantile_regression(&x, &y, 1).unwrap();
+        assert!((fit.slope - 0.75).abs() < 1e-9);
+        assert!((fit.intercept + 1.0).abs() < 1e-9);
+        assert!(fit.objective < 1e-9);
+    }
+
+    #[test]
+    fn robust_to_outliers_where_ols_is_not() {
+        // Median regression must shrug off a massive outlier.
+        let x: Vec<f64> = (0..21).map(|i| i as f64).collect();
+        let mut y: Vec<f64> = x.iter().map(|xi| 2.0 * xi).collect();
+        y[20] = 1e6; // gross outlier
+        let qfit = quantile_regression(&x, &y, 2).unwrap();
+        assert!((qfit.slope - 2.0).abs() < 0.2, "slope={}", qfit.slope);
+        let ofit = super::super::ols::ols(&x, &y).unwrap();
+        assert!(
+            (ofit.slope - 2.0).abs() > 100.0,
+            "OLS should be dragged by the outlier; slope={}",
+            ofit.slope
+        );
+    }
+
+    #[test]
+    fn detects_median_shift_between_groups() {
+        // 0/1-coded treatment: quantile regression slope = median diff.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..15 {
+            x.push(0.0);
+            y.push(10.0 + (i % 5) as f64 * 0.1);
+            x.push(1.0);
+            y.push(13.0 + (i % 5) as f64 * 0.1);
+        }
+        let fit = quantile_regression(&x, &y, 3).unwrap();
+        assert!((fit.slope - 3.0).abs() < 0.2, "slope={}", fit.slope);
+        assert!(fit.significant(), "p={}", fit.p_value);
+    }
+
+    #[test]
+    fn null_effect_insignificant() {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        // identical distributions in both groups
+        for i in 0..20 {
+            x.push((i % 2) as f64);
+            y.push((i % 7) as f64);
+        }
+        let fit = quantile_regression(&x, &y, 4).unwrap();
+        assert!(!fit.significant(), "p={}", fit.p_value);
+    }
+
+    #[test]
+    fn irls_matches_exact_on_moderate_n() {
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        use crate::util::rng::Rng;
+        let x: Vec<f64> = (0..60).map(|i| (i % 12) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| 1.0 + 0.4 * xi + rng.normal(0.0, 0.3)).collect();
+        let (ae, be, _) = fit_exact(&x, &y);
+        let (ai, bi, _) = fit_irls(&x, &y);
+        assert!((ae - ai).abs() < 0.15, "a: exact={ae} irls={ai}");
+        assert!((be - bi).abs() < 0.05, "b: exact={be} irls={bi}");
+    }
+
+    #[test]
+    fn degenerate_inputs_rejected() {
+        assert!(quantile_regression(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0], 0).is_none());
+        assert!(quantile_regression(&[1.0, 2.0], &[1.0, 2.0], 0).is_none());
+    }
+}

@@ -1,0 +1,3 @@
+//! Test-support utilities (in-repo property-testing mini-framework).
+
+pub mod prop;

@@ -1,0 +1,132 @@
+//! Minimal CSV emission for experiment results.
+//!
+//! The offline toolchain has no `csv`/`serde` crates; benches and the
+//! coordinator write flat numeric tables, so a tiny writer suffices.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header row.
+#[derive(Clone, Debug)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity differs from the header.
+    pub fn push_row<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Convenience: append a row of f64s rendered with full precision.
+    pub fn push_f64_row(&mut self, row: &[f64]) {
+        self.push_row(row.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Render to CSV text (RFC-4180-style quoting only when needed).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, row: &[String]| {
+            for (i, field) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if field.contains(',') || field.contains('"') || field.contains('\n') {
+                    let escaped = field.replace('"', "\"\"");
+                    let _ = write!(out, "\"{escaped}\"");
+                } else {
+                    out.push_str(field);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to disk, creating parent directories.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push_row(vec!["1", "2"]);
+        t.push_f64_row(&[0.5, 1.25]);
+        let s = t.render();
+        assert_eq!(s, "a,b\n1,2\n0.5,1.25\n");
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn quotes_fields_with_commas() {
+        let mut t = CsvTable::new(vec!["x"]);
+        t.push_row(vec!["hello, world"]);
+        t.push_row(vec!["say \"hi\""]);
+        let s = t.render();
+        assert!(s.contains("\"hello, world\""));
+        assert!(s.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push_row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let mut t = CsvTable::new(vec!["v"]);
+        t.push_row(vec!["42"]);
+        let dir = std::env::temp_dir().join("ebcomm_csv_test");
+        let path = dir.join("nested/out.csv");
+        t.write_to(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(read, "v\n42\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,48 @@
+//! Foundation utilities: PRNGs, ring buffers, CSV emission.
+
+pub mod csv;
+pub mod ring;
+pub mod rng;
+
+/// Nanoseconds as a plain integer — the unit of virtual time throughout
+/// the simulator. 2^63 ns ≈ 292 years; overflow is not a practical concern.
+pub type Nanos = u64;
+
+/// One virtual second, in nanoseconds.
+pub const SECOND: Nanos = 1_000_000_000;
+
+/// One virtual millisecond, in nanoseconds.
+pub const MILLI: Nanos = 1_000_000;
+
+/// One virtual microsecond, in nanoseconds.
+pub const MICRO: Nanos = 1_000;
+
+/// Format a nanosecond quantity with an adaptive unit for reports.
+pub fn fmt_ns(ns: f64) -> String {
+    if !ns.is_finite() {
+        return format!("{ns}");
+    }
+    let abs = ns.abs();
+    if abs >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if abs >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if abs >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5.0), "5ns");
+        assert_eq!(fmt_ns(1_500.0), "1.500us");
+        assert_eq!(fmt_ns(2_000_000.0), "2.000ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200s");
+    }
+}

@@ -1,0 +1,185 @@
+//! Fixed-capacity ring buffer with configurable overflow policy.
+//!
+//! This is the storage primitive backing every duct implementation. The
+//! paper's MPI-backed channels drop messages when the *send buffer* fills
+//! ([`Overflow::Reject`]); its shared-memory channels keep only the most
+//! recent state ([`Overflow::Overwrite`] with capacity 1 models the
+//! "directly wrote updates to a piece of shared memory" behaviour of the
+//! multithread implementation, §III-E.5).
+
+use std::collections::VecDeque;
+
+/// What to do when a push would exceed capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Overflow {
+    /// Refuse the new element (the caller observes a drop) — MPI send
+    /// buffer semantics.
+    Reject,
+    /// Evict the oldest element to make room — latest-value semantics.
+    Overwrite,
+}
+
+/// Outcome of a [`RingBuffer::push`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Element stored without displacing anything.
+    Stored,
+    /// Element stored, oldest evicted (only under [`Overflow::Overwrite`]).
+    Displaced,
+    /// Element refused (only under [`Overflow::Reject`]).
+    Rejected,
+}
+
+/// Bounded FIFO ring buffer.
+#[derive(Clone, Debug)]
+pub struct RingBuffer<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    policy: Overflow,
+}
+
+impl<T> RingBuffer<T> {
+    /// Create a buffer holding at most `capacity` (≥1) elements.
+    pub fn new(capacity: usize, policy: Overflow) -> Self {
+        assert!(capacity >= 1, "ring buffer capacity must be >= 1");
+        Self {
+            items: VecDeque::with_capacity(capacity),
+            capacity,
+            policy,
+        }
+    }
+
+    /// Attempt to append an element.
+    pub fn push(&mut self, item: T) -> PushOutcome {
+        if self.items.len() < self.capacity {
+            self.items.push_back(item);
+            PushOutcome::Stored
+        } else {
+            match self.policy {
+                Overflow::Reject => PushOutcome::Rejected,
+                Overflow::Overwrite => {
+                    self.items.pop_front();
+                    self.items.push_back(item);
+                    PushOutcome::Displaced
+                }
+            }
+        }
+    }
+
+    /// Remove and return the oldest element.
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    /// Drain every element currently buffered (bulk consumption — models
+    /// `MPI_Testsome`-style backlog clearing, paper §II-F2).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.items.drain(..).collect()
+    }
+
+    /// Keep only the newest element, discarding the rest; returns the
+    /// number discarded. ("Skipped over to only get the latest message.")
+    pub fn skip_to_latest(&mut self) -> usize {
+        if self.items.len() <= 1 {
+            return 0;
+        }
+        let skipped = self.items.len() - 1;
+        let last = self.items.pop_back().unwrap();
+        self.items.clear();
+        self.items.push_back(last);
+        skipped
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Peek the newest element.
+    pub fn latest(&self) -> Option<&T> {
+        self.items.back()
+    }
+
+    /// Peek the oldest element.
+    pub fn oldest(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_policy_drops_on_full() {
+        let mut rb = RingBuffer::new(2, Overflow::Reject);
+        assert_eq!(rb.push(1), PushOutcome::Stored);
+        assert_eq!(rb.push(2), PushOutcome::Stored);
+        assert_eq!(rb.push(3), PushOutcome::Rejected);
+        assert_eq!(rb.len(), 2);
+        assert_eq!(rb.pop(), Some(1));
+        assert_eq!(rb.push(3), PushOutcome::Stored);
+        assert_eq!(rb.drain_all(), vec![2, 3]);
+        assert!(rb.is_empty());
+    }
+
+    #[test]
+    fn overwrite_policy_evicts_oldest() {
+        let mut rb = RingBuffer::new(2, Overflow::Overwrite);
+        rb.push(1);
+        rb.push(2);
+        assert_eq!(rb.push(3), PushOutcome::Displaced);
+        assert_eq!(rb.drain_all(), vec![2, 3]);
+    }
+
+    #[test]
+    fn capacity_one_latest_value() {
+        let mut rb = RingBuffer::new(1, Overflow::Overwrite);
+        for i in 0..10 {
+            rb.push(i);
+        }
+        assert_eq!(rb.latest(), Some(&9));
+        assert_eq!(rb.len(), 1);
+    }
+
+    #[test]
+    fn skip_to_latest_counts_skipped() {
+        let mut rb = RingBuffer::new(8, Overflow::Reject);
+        for i in 0..5 {
+            rb.push(i);
+        }
+        assert_eq!(rb.skip_to_latest(), 4);
+        assert_eq!(rb.pop(), Some(4));
+        assert_eq!(rb.skip_to_latest(), 0);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let mut rb = RingBuffer::new(3, Overflow::Overwrite);
+        for i in 0..100 {
+            rb.push(i);
+            assert!(rb.len() <= 3);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = RingBuffer::<u8>::new(0, Overflow::Reject);
+    }
+}

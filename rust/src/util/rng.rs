@@ -1,0 +1,341 @@
+//! Deterministic pseudo-random number generation and distributions.
+//!
+//! The offline environment ships no `rand` crate, so we implement the
+//! generators we need from scratch:
+//!
+//! * [`SplitMix64`] — used for seeding and cheap stream splitting.
+//! * [`Xoshiro256`] — xoshiro256++, the workhorse generator for all
+//!   simulation randomness (fast, 256-bit state, passes BigCrush).
+//! * [`Mt19937`] — a faithful Mersenne Twister, because the paper defines
+//!   "one unit of compute work" as *a call to the `std::mt19937` engine*
+//!   (§III-C); the synthetic work spinner must match that definition.
+//!
+//! Distribution helpers (uniform, normal via Box–Muller, lognormal,
+//! exponential) live on [`Rng`], a small trait both generators implement.
+
+/// Minimal random-generator interface used across the crate.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> mantissa-exact uniform double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection, unbiased).
+    #[inline]
+    fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, n);
+            if lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform `usize` index into a slice of length `len`.
+    #[inline]
+    fn index(&mut self, len: usize) -> usize {
+        self.below(len as u64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// branch-predictable — speed here is not on a hot path).
+    fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos();
+        mean + sd * z
+    }
+
+    /// Lognormal with the given *underlying* normal parameters.
+    fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential with the given mean.
+    fn exponential(&mut self, mean: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -mean * u.ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+/// SplitMix64 — tiny generator used to expand seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — main simulation generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the xoshiro authors' recommendation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = sm.next_u64();
+        }
+        // All-zero state is invalid (cannot happen from splitmix of any
+        // seed in practice, but belt and braces).
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9_7F4A_7C15;
+        }
+        Self { s }
+    }
+
+    /// Derive an independent child stream (seed-domain separation).
+    pub fn split(&mut self, tag: u64) -> Xoshiro256 {
+        let a = self.next_u64();
+        Xoshiro256::new(a ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+}
+
+impl Rng for Xoshiro256 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+}
+
+/// Faithful MT19937 (32-bit Mersenne Twister).
+///
+/// One `next_u32` call == one paper "work unit" (§III-C: "a call to the
+/// `std::mt19937` random number engine as a unit of compute work").
+pub struct Mt19937 {
+    mt: [u32; 624],
+    index: usize,
+}
+
+impl Mt19937 {
+    pub fn new(seed: u32) -> Self {
+        let mut mt = [0u32; 624];
+        mt[0] = seed;
+        for i in 1..624 {
+            mt[i] = 1_812_433_253u32
+                .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+                .wrapping_add(i as u32);
+        }
+        Self { mt, index: 624 }
+    }
+
+    fn generate(&mut self) {
+        for i in 0..624 {
+            let y = (self.mt[i] & 0x8000_0000) | (self.mt[(i + 1) % 624] & 0x7FFF_FFFF);
+            let mut next = y >> 1;
+            if y & 1 != 0 {
+                next ^= 0x9908_B0DF;
+            }
+            self.mt[i] = self.mt[(i + 397) % 624] ^ next;
+        }
+        self.index = 0;
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.index >= 624 {
+            self.generate();
+        }
+        let mut y = self.mt[self.index];
+        self.index += 1;
+        y ^= y >> 11;
+        y ^= (y << 7) & 0x9D2C_5680;
+        y ^= (y << 15) & 0xEFC6_0000;
+        y ^ (y >> 18)
+    }
+}
+
+impl Rng for Mt19937 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference vector for seed 1234567 (first outputs of splitmix64).
+        let mut g = SplitMix64::new(0);
+        let a = g.next_u64();
+        let b = g.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut g2 = SplitMix64::new(0);
+        assert_eq!(g2.next_u64(), a);
+        assert_eq!(g2.next_u64(), b);
+    }
+
+    #[test]
+    fn mt19937_matches_cpp_reference() {
+        // std::mt19937 seeded with 5489 produces 3499211612 first.
+        let mut mt = Mt19937::new(5489);
+        assert_eq!(mt.next_u32(), 3_499_211_612);
+        assert_eq!(mt.next_u32(), 581_869_302);
+        assert_eq!(mt.next_u32(), 3_890_346_734);
+        // 10000th output of mt19937(5489) is famously 4123659995.
+        let mut mt = Mt19937::new(5489);
+        let mut last = 0;
+        for _ in 0..10_000 {
+            last = mt.next_u32();
+        }
+        assert_eq!(last, 4_123_659_995);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut g = Xoshiro256::new(42);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = g.uniform(-3.0, 7.0);
+            assert!((-3.0..7.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut g = Xoshiro256::new(7);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[g.below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Xoshiro256::new(11);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.normal(2.0, 3.0);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_positive_and_median() {
+        let mut g = Xoshiro256::new(13);
+        let mut v: Vec<f64> = (0..50_001).map(|_| g.lognormal(1.0, 0.5)).collect();
+        assert!(v.iter().all(|&x| x > 0.0));
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = v[v.len() / 2];
+        // median of lognormal = exp(mu)
+        assert!((median - 1.0f64.exp()).abs() < 0.1, "median={median}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut g = Xoshiro256::new(17);
+        let n = 100_000;
+        let total: f64 = (0..n).map(|_| g.exponential(4.0)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut g = Xoshiro256::new(1);
+        let mut a = g.split(0);
+        let mut b = g.split(1);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Xoshiro256::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

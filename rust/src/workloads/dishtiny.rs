@@ -1,0 +1,930 @@
+//! DISHTINY-style digital evolution: the compute-intensive benchmark.
+//!
+//! A faithful-in-profile stand-in for the paper's digital evolution
+//! workload (§II-A): a toroidal grid of evolving digital cells, 3600 per
+//! process in the benchmark configuration, with *all* cell-cell
+//! interaction mediated by best-effort channels across the five messaging
+//! layers the paper enumerates — same cadences, payload shapes, and
+//! transfer strategies:
+//!
+//! | layer | cadence | payload | transfer |
+//! |---|---|---|---|
+//! | cell spawn | every 16 updates | arbitrary-length genomes (seeded 100 units, cap 1000) | aggregation |
+//! | resource transfer | every update | 4-byte float | pooling |
+//! | cell-cell communication | every 16 updates | arbitrarily many 20-byte packets | aggregation |
+//! | environmental state | every 8 updates | 216-byte struct | pooling |
+//! | kin-group size detection | every update | 16-byte bitstring | pooling |
+//!
+//! Cell behaviour (genome evaluation) is a weight-vector-driven state
+//! update — the compute hot-spot that the L1 Pallas kernel
+//! (`python/compile/kernels/cell_update.py`) implements for the HLO-backed
+//! path; the native path here computes the same recurrence in scalar Rust
+//! (equivalence is tested in `rust/tests/integration_runtime.rs`).
+
+use super::partition::{Dir, TilePartition};
+use super::{ChannelSpec, ShardWorkload};
+use crate::net::Topology;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Dimension of each cell's internal state vector.
+pub const STATE_DIM: usize = 8;
+/// Genome seed length (paper: "seeded at 100 12-byte instructions").
+pub const GENOME_SEED_LEN: usize = 100;
+/// Genome hard cap (paper: "hard cap of 1000 instructions").
+pub const GENOME_CAP: usize = 1000;
+
+/// Evolvable genome: a variable-length weight program, interpreted in
+/// fixed-size windows to parameterize the cell state recurrence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Genome {
+    pub weights: Vec<f32>,
+    pub kin_id: u64,
+    pub generation: u32,
+}
+
+impl Genome {
+    pub fn random(rng: &mut Xoshiro256) -> Self {
+        Self {
+            weights: (0..GENOME_SEED_LEN)
+                .map(|_| rng.normal(0.0, 0.5) as f32)
+                .collect(),
+            kin_id: rng.next_u64(),
+            generation: 0,
+        }
+    }
+
+    /// Mutated offspring: point perturbations plus rare insertions and
+    /// deletions (bounded by [`GENOME_CAP`]); kin id usually inherited.
+    pub fn offspring(&self, rng: &mut Xoshiro256) -> Self {
+        let mut weights = self.weights.clone();
+        for w in weights.iter_mut() {
+            if rng.chance(0.02) {
+                *w += rng.normal(0.0, 0.3) as f32;
+            }
+        }
+        if rng.chance(0.05) && weights.len() < GENOME_CAP {
+            let at = rng.index(weights.len() + 1);
+            weights.insert(at, rng.normal(0.0, 0.5) as f32);
+        }
+        if rng.chance(0.05) && weights.len() > 8 {
+            let at = rng.index(weights.len());
+            weights.remove(at);
+        }
+        Self {
+            weights,
+            // Kin-group fission: occasionally found a new group.
+            kin_id: if rng.chance(0.05) {
+                rng.next_u64()
+            } else {
+                self.kin_id
+            },
+            generation: self.generation.saturating_add(1),
+        }
+    }
+
+    /// Effective recurrence weights: the genome folded into
+    /// `STATE_DIM * 2` coefficients (gain and bias per state channel).
+    pub fn coefficients(&self) -> [f32; STATE_DIM * 2] {
+        let mut coef = [0.0f32; STATE_DIM * 2];
+        for (i, &w) in self.weights.iter().enumerate() {
+            coef[i % (STATE_DIM * 2)] += w;
+        }
+        let norm = (self.weights.len() as f32 / (STATE_DIM * 2) as f32).max(1.0);
+        for c in coef.iter_mut() {
+            *c /= norm;
+        }
+        coef
+    }
+}
+
+/// One digital cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub genome: Genome,
+    pub state: [f32; STATE_DIM],
+    pub resource: f32,
+}
+
+impl Cell {
+    fn new(genome: Genome) -> Self {
+        Self {
+            genome,
+            state: [0.0; STATE_DIM],
+            resource: 0.0,
+        }
+    }
+}
+
+/// Environmental state summary pooled across borders every 8 updates
+/// (stands in for the paper's 216-byte struct: 54 f32 fields).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnvState {
+    pub resource: f32,
+    pub state0: f32,
+    pub kin_low: u32,
+}
+
+/// 20-byte cell-cell communication packet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Packet {
+    /// Border slot of the addressee on the receiving side.
+    pub slot: u32,
+    pub payload: [f32; 4],
+}
+
+/// Spawn message: a genome aimed at a border slot on the receiving side.
+#[derive(Clone, Debug)]
+pub struct SpawnMsg {
+    pub slot: u32,
+    pub genome: Genome,
+    pub endowment: f32,
+}
+
+/// Digital-evolution inter-shard message (one variant per paper layer).
+#[derive(Clone, Debug)]
+pub enum DeMsg {
+    /// Pooled border resource outflows (every update).
+    Resource(Vec<f32>),
+    /// Pooled border kin ids (every update).
+    Kin(Vec<u64>),
+    /// Pooled border environment summaries (every 8 updates).
+    Env(Vec<EnvState>),
+    /// Aggregated cell-cell packets (every 16 updates).
+    CellCell(Vec<Packet>),
+    /// Aggregated spawn genomes (every 16 updates).
+    Spawn(Vec<SpawnMsg>),
+}
+
+/// Message-layer kinds, with their paper cadences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    Resource = 0,
+    Kin = 1,
+    Env = 2,
+    CellCell = 3,
+    Spawn = 4,
+}
+
+impl Layer {
+    pub const ALL: [Layer; 5] = [
+        Layer::Resource,
+        Layer::Kin,
+        Layer::Env,
+        Layer::CellCell,
+        Layer::Spawn,
+    ];
+
+    /// Updates between dispatches on this layer (paper §II-A).
+    pub fn cadence(self) -> u64 {
+        match self {
+            Layer::Resource | Layer::Kin => 1,
+            Layer::Env => 8,
+            Layer::CellCell | Layer::Spawn => 16,
+        }
+    }
+}
+
+/// Digital-evolution benchmark parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeConfig {
+    /// Cells per process (paper: 3600).
+    pub cells_per_proc: usize,
+    /// Base resource inflow per cell-update.
+    pub resource_inflow: f32,
+    /// Fraction of resource shared to each neighbor per update.
+    pub share_rate: f32,
+    /// Resource threshold to attempt reproduction.
+    pub spawn_threshold: f32,
+    /// Nominal per-cell per-update compute cost (ns) for the DES model.
+    pub per_cell_cost_ns: f64,
+    pub base_cost_ns: f64,
+}
+
+impl Default for DeConfig {
+    fn default() -> Self {
+        Self {
+            cells_per_proc: 3600,
+            resource_inflow: 0.05,
+            share_rate: 0.05,
+            spawn_threshold: 1.0,
+            // 3600 cells/update at ~900ns/cell -> ~3.2ms/update: a
+            // compute-heavy profile, matching the paper's description of
+            // the digital evolution benchmark as far more computationally
+            // intensive than the ~10-100us graph-coloring updates.
+            per_cell_cost_ns: 900.0,
+            base_cost_ns: 12_000.0,
+        }
+    }
+}
+
+/// One process's tile of the digital-evolution world.
+pub struct DishtinyShard {
+    cfg: DeConfig,
+    part: TilePartition,
+    rank: usize,
+    channels: Vec<ChannelSpec>,
+    /// (direction, layer) for each channel, parallel to `channels`.
+    chan_meta: Vec<(Dir, Layer)>,
+    self_dirs: [bool; 4],
+    cells: Vec<Cell>,
+    update: u64,
+    /// Ghost data per direction.
+    ghost_resource: [Option<Vec<f32>>; 4],
+    ghost_kin: [Option<Vec<u64>>; 4],
+    ghost_env: [Option<Vec<EnvState>>; 4],
+    /// Pending inbound packets / spawns addressed to border slots.
+    inbox_packets: Vec<(Dir, Packet)>,
+    inbox_spawns: Vec<(Dir, SpawnMsg)>,
+    /// Cumulative births (evolutionary activity indicator).
+    births: u64,
+}
+
+impl DishtinyShard {
+    pub fn new(cfg: DeConfig, topo: &Topology, rank: usize, rng: &mut Xoshiro256) -> Self {
+        let (mr, mc) = topo.mesh_dims();
+        let part = TilePartition::new(mr, mc, cfg.cells_per_proc);
+        let neighbors = topo.neighbors4(rank);
+
+        let mut channels = Vec::new();
+        let mut chan_meta = Vec::new();
+        let mut self_dirs = [false; 4];
+        for d in Dir::ALL {
+            let peer = neighbors[d.index()];
+            if peer == rank {
+                self_dirs[d.index()] = true;
+                continue;
+            }
+            for layer in Layer::ALL {
+                channels.push(ChannelSpec {
+                    peer,
+                    layer: super::DE_LAYER_BASE + d.index() * Layer::ALL.len() + layer as usize,
+                });
+                chan_meta.push((d, layer));
+            }
+        }
+
+        let cells = (0..part.simels_per_proc())
+            .map(|_| Cell::new(Genome::random(rng)))
+            .collect();
+
+        Self {
+            cfg,
+            part,
+            rank,
+            channels,
+            chan_meta,
+            self_dirs,
+            cells,
+            update: 0,
+            ghost_resource: [None, None, None, None],
+            ghost_kin: [None, None, None, None],
+            ghost_env: [None, None, None, None],
+            inbox_packets: Vec::new(),
+            inbox_spawns: Vec::new(),
+            births: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn partition(&self) -> &TilePartition {
+        &self.part
+    }
+
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    pub fn births(&self) -> u64 {
+        self.births
+    }
+
+    pub fn update_count(&self) -> u64 {
+        self.update
+    }
+
+    /// Mean resource across cells (the benchmark's quality signal).
+    pub fn mean_resource(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        self.cells.iter().map(|c| c.resource as f64).sum::<f64>() / self.cells.len() as f64
+    }
+
+    /// Number of distinct kin groups on this shard.
+    pub fn kin_group_count(&self) -> usize {
+        let mut ids: Vec<u64> = self.cells.iter().map(|c| c.genome.kin_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    fn local_neighbor_mean(&self, r: usize, c: usize) -> [f32; STATE_DIM] {
+        let mut acc = [0.0f32; STATE_DIM];
+        let mut n = 0.0f32;
+        for d in Dir::ALL {
+            let (th, tw) = (self.part.tile_h, self.part.tile_w);
+            let nbr = match d {
+                Dir::North if r > 0 => Some(self.part.local_index(r - 1, c)),
+                Dir::South if r < th - 1 => Some(self.part.local_index(r + 1, c)),
+                Dir::West if c > 0 => Some(self.part.local_index(r, c - 1)),
+                Dir::East if c < tw - 1 => Some(self.part.local_index(r, c + 1)),
+                _ if self.self_dirs[d.index()] => Some(match d {
+                    Dir::North => self.part.local_index(th - 1, c),
+                    Dir::South => self.part.local_index(0, c),
+                    Dir::West => self.part.local_index(r, tw - 1),
+                    Dir::East => self.part.local_index(r, 0),
+                }),
+                _ => None, // cross-border: covered by env ghosts below
+            };
+            if let Some(i) = nbr {
+                for k in 0..STATE_DIM {
+                    acc[k] += self.cells[i].state[k];
+                }
+                n += 1.0;
+            } else if let Some(env) = &self.ghost_env[d.index()] {
+                let off = match d {
+                    Dir::North | Dir::South => c,
+                    Dir::East | Dir::West => r,
+                };
+                if off < env.len() {
+                    acc[0] += env[off].state0;
+                    n += 1.0;
+                }
+            }
+        }
+        if n > 0.0 {
+            for k in 0..STATE_DIM {
+                acc[k] /= n;
+            }
+        }
+        acc
+    }
+
+    fn apply_inbox(&mut self) {
+        // Cell-cell packets: payload folds into the addressee's state.
+        for (dir, pkt) in std::mem::take(&mut self.inbox_packets) {
+            let border = self.part.border_indices(dir);
+            if let Some(&idx) = border.get(pkt.slot as usize) {
+                for (k, &v) in pkt.payload.iter().enumerate() {
+                    self.cells[idx].state[k % STATE_DIM] += v * 0.1;
+                }
+            }
+        }
+        // Spawns: replace the border cell iff the incomer's endowment
+        // beats the residents's resource (antagonistic competition for
+        // limited space, paper §II-A).
+        for (dir, spawn) in std::mem::take(&mut self.inbox_spawns) {
+            let border = self.part.border_indices(dir);
+            if let Some(&idx) = border.get(spawn.slot as usize) {
+                if spawn.endowment > self.cells[idx].resource {
+                    self.cells[idx] = Cell::new(spawn.genome);
+                    self.cells[idx].resource = spawn.endowment;
+                    self.births += 1;
+                }
+            }
+        }
+        // Pooled resource inflows along borders.
+        for d in Dir::ALL {
+            if let Some(inflow) = self.ghost_resource[d.index()].take() {
+                let border = self.part.border_indices(d);
+                for (off, &idx) in border.iter().enumerate() {
+                    if let Some(&v) = inflow.get(off) {
+                        self.cells[idx].resource += v;
+                    }
+                }
+            }
+        }
+    }
+
+    fn spawn_locally(&mut self, rng: &mut Xoshiro256) -> Vec<(Dir, SpawnMsg)> {
+        let mut outgoing = Vec::new();
+        let (th, tw) = (self.part.tile_h, self.part.tile_w);
+        for r in 0..th {
+            for c in 0..tw {
+                let v = self.part.local_index(r, c);
+                if self.cells[v].resource < self.cfg.spawn_threshold {
+                    continue;
+                }
+                let endowment = self.cells[v].resource * 0.5;
+                let genome = self.cells[v].genome.offspring(rng);
+                self.cells[v].resource -= endowment;
+                // Choose a random direction to spawn into.
+                let d = Dir::ALL[rng.index(4)];
+                let crosses = self.part.on_border(r, c, d) && !self.self_dirs[d.index()];
+                if crosses {
+                    let slot = match d {
+                        Dir::North | Dir::South => c,
+                        Dir::East | Dir::West => r,
+                    } as u32;
+                    outgoing.push((
+                        d,
+                        SpawnMsg {
+                            slot,
+                            genome,
+                            endowment,
+                        },
+                    ));
+                } else {
+                    // Local (or torus-wrapped local) target.
+                    let (tr, tc) = match d {
+                        Dir::North => ((r + th - 1) % th, c),
+                        Dir::South => ((r + 1) % th, c),
+                        Dir::West => (r, (c + tw - 1) % tw),
+                        Dir::East => (r, (c + 1) % tw),
+                    };
+                    let t = self.part.local_index(tr, tc);
+                    // Spawning into limited space is competitive: the
+                    // offspring displaces the resident iff its endowment
+                    // beats the resident's banked resource. Same-kin
+                    // residents yield at a discount (kin-group
+                    // cooperation: parents propagate through their own
+                    // group more easily; the kin layer communicates group
+                    // ids across borders for the same purpose).
+                    let resident = &self.cells[t];
+                    let bar = if resident.genome.kin_id == self.cells[v].genome.kin_id {
+                        resident.resource * 0.5
+                    } else {
+                        resident.resource
+                    };
+                    if endowment > bar {
+                        self.cells[t] = Cell::new(genome);
+                        self.cells[t].resource = endowment;
+                        self.births += 1;
+                    }
+                }
+            }
+        }
+        outgoing
+    }
+
+    /// Flatten per-cell evaluation inputs (row-major tile order).
+    fn gather_eval_inputs(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = self.cells.len();
+        let mut states = Vec::with_capacity(n * STATE_DIM);
+        let mut coefs = Vec::with_capacity(n * STATE_DIM * 2);
+        let mut nbrs = Vec::with_capacity(n * STATE_DIM);
+        let mut resources = Vec::with_capacity(n);
+        for r in 0..self.part.tile_h {
+            for c in 0..self.part.tile_w {
+                let v = self.part.local_index(r, c);
+                states.extend_from_slice(&self.cells[v].state);
+                coefs.extend_from_slice(&self.cells[v].genome.coefficients());
+                nbrs.extend_from_slice(&self.local_neighbor_mean(r, c));
+                resources.push(self.cells[v].resource);
+            }
+        }
+        (states, coefs, nbrs, resources)
+    }
+
+    /// Write back evaluation outputs.
+    fn apply_eval_outputs(&mut self, new_states: &[f32], new_resources: &[f32]) {
+        let n = self.cells.len();
+        assert_eq!(new_states.len(), n * STATE_DIM);
+        assert_eq!(new_resources.len(), n);
+        for (v, cell) in self.cells.iter_mut().enumerate() {
+            cell.state
+                .copy_from_slice(&new_states[v * STATE_DIM..(v + 1) * STATE_DIM]);
+            cell.resource = new_resources[v];
+        }
+    }
+
+    /// One simstep with a pluggable genome-evaluation phase.
+    ///
+    /// `eval` receives flat row-major arrays — states `f32[N*D]`,
+    /// coefficients `f32[N*2D]`, neighbor means `f32[N*D]`, resources
+    /// `f32[N]` — plus the inflow rate, and returns `(new_states,
+    /// new_resources)`. The native path uses [`native_eval`]; the
+    /// HLO-backed path substitutes the AOT-compiled Pallas kernel
+    /// (`cell_update`), which computes the identical recurrence.
+    pub fn step_with<F>(&mut self, rng: &mut Xoshiro256, eval: F) -> Vec<(usize, DeMsg)>
+    where
+        F: FnOnce(&[f32], &[f32], &[f32], &[f32], f32) -> (Vec<f32>, Vec<f32>),
+    {
+        self.apply_inbox();
+
+        // Genome evaluation + resource dynamics for every cell.
+        let (states, coefs, nbrs, resources) = self.gather_eval_inputs();
+        let (new_states, new_resources) =
+            eval(&states, &coefs, &nbrs, &resources, self.cfg.resource_inflow);
+        self.apply_eval_outputs(&new_states, &new_resources);
+
+        let mut out: Vec<(usize, DeMsg)> = Vec::new();
+        let share = self.cfg.share_rate;
+
+        // Resource layer (every update): pooled border outflows.
+        for (ch, &(d, layer)) in self.chan_meta.iter().enumerate() {
+            if layer != Layer::Resource {
+                continue;
+            }
+            let border = self.part.border_indices(d);
+            let mut pool = Vec::with_capacity(border.len());
+            for &idx in &border {
+                let outflow = self.cells[idx].resource * share;
+                self.cells[idx].resource -= outflow;
+                pool.push(outflow);
+            }
+            out.push((ch, DeMsg::Resource(pool)));
+        }
+
+        // Kin layer (every update): pooled border kin ids.
+        for (ch, &(d, layer)) in self.chan_meta.iter().enumerate() {
+            if layer != Layer::Kin {
+                continue;
+            }
+            let pool = self
+                .part
+                .border_indices(d)
+                .into_iter()
+                .map(|i| self.cells[i].genome.kin_id)
+                .collect();
+            out.push((ch, DeMsg::Kin(pool)));
+        }
+
+        // Env layer (every 8 updates).
+        if self.update % Layer::Env.cadence() == 0 {
+            for (ch, &(d, layer)) in self.chan_meta.iter().enumerate() {
+                if layer != Layer::Env {
+                    continue;
+                }
+                let pool = self
+                    .part
+                    .border_indices(d)
+                    .into_iter()
+                    .map(|i| EnvState {
+                        resource: self.cells[i].resource,
+                        state0: self.cells[i].state[0],
+                        kin_low: self.cells[i].genome.kin_id as u32,
+                    })
+                    .collect();
+                out.push((ch, DeMsg::Env(pool)));
+            }
+        }
+
+        // Cell-cell packets (every 16 updates): border cells signal their
+        // cross-border neighbor with a state digest.
+        if self.update % Layer::CellCell.cadence() == 0 {
+            for (ch, &(d, layer)) in self.chan_meta.iter().enumerate() {
+                if layer != Layer::CellCell {
+                    continue;
+                }
+                let border = self.part.border_indices(d);
+                let pkts: Vec<Packet> = border
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &idx)| self.cells[idx].state[0] > 0.0)
+                    .map(|(slot, &idx)| Packet {
+                        slot: slot as u32,
+                        payload: [
+                            self.cells[idx].state[0],
+                            self.cells[idx].state[1],
+                            self.cells[idx].state[2],
+                            self.cells[idx].state[3],
+                        ],
+                    })
+                    .collect();
+                out.push((ch, DeMsg::CellCell(pkts)));
+            }
+        }
+
+        // Spawn layer (every 16 updates): reproduction, local + remote.
+        if self.update % Layer::Spawn.cadence() == 0 {
+            let outgoing = self.spawn_locally(rng);
+            for (ch, &(d, layer)) in self.chan_meta.iter().enumerate() {
+                if layer != Layer::Spawn {
+                    continue;
+                }
+                let batch: Vec<SpawnMsg> = outgoing
+                    .iter()
+                    .filter(|(sd, _)| *sd == d)
+                    .map(|(_, s)| s.clone())
+                    .collect();
+                out.push((ch, DeMsg::Spawn(batch)));
+            }
+        }
+
+        self.update += 1;
+        out
+    }
+
+}
+
+impl ShardWorkload for DishtinyShard {
+    type Msg = DeMsg;
+
+    fn channels(&self) -> Vec<ChannelSpec> {
+        self.channels.clone()
+    }
+
+    fn absorb(&mut self, ch: usize, msgs: Vec<DeMsg>) {
+        let (dir, layer) = self.chan_meta[ch];
+        for msg in msgs {
+            match (layer, msg) {
+                (Layer::Resource, DeMsg::Resource(v)) => {
+                    // Accumulate: every delivered transfer counts.
+                    let entry = self.ghost_resource[dir.index()].get_or_insert_with(Vec::new);
+                    if entry.len() < v.len() {
+                        entry.resize(v.len(), 0.0);
+                    }
+                    for (a, b) in entry.iter_mut().zip(v) {
+                        *a += b;
+                    }
+                }
+                (Layer::Kin, DeMsg::Kin(v)) => self.ghost_kin[dir.index()] = Some(v),
+                (Layer::Env, DeMsg::Env(v)) => self.ghost_env[dir.index()] = Some(v),
+                (Layer::CellCell, DeMsg::CellCell(pkts)) => {
+                    self.inbox_packets.extend(pkts.into_iter().map(|p| (dir, p)));
+                }
+                (Layer::Spawn, DeMsg::Spawn(spawns)) => {
+                    self.inbox_spawns.extend(spawns.into_iter().map(|s| (dir, s)));
+                }
+                // Layer/payload mismatch: foreign message, skip.
+                _ => {}
+            }
+        }
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256) -> Vec<(usize, DeMsg)> {
+        self.step_with(rng, native_eval)
+    }
+
+    fn step_cost_ns(&self) -> f64 {
+        self.cfg.base_cost_ns + self.cfg.per_cell_cost_ns * self.cells.len() as f64
+    }
+
+    fn quality(&self) -> f64 {
+        self.mean_resource()
+    }
+}
+
+
+/// The native genome-evaluation phase: scalar Rust mirror of the
+/// `cell_update` Pallas kernel (see `python/compile/kernels/cell_update.py`
+/// and the equivalence test in `rust/tests/integration_runtime.rs`).
+pub fn native_eval(
+    states: &[f32],
+    coefs: &[f32],
+    nbrs: &[f32],
+    resources: &[f32],
+    inflow: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = resources.len();
+    let mut new_states = vec![0.0f32; n * STATE_DIM];
+    let mut new_resources = vec![0.0f32; n];
+    for v in 0..n {
+        let s = &states[v * STATE_DIM..(v + 1) * STATE_DIM];
+        let coef = &coefs[v * STATE_DIM * 2..(v + 1) * STATE_DIM * 2];
+        let nbr = &nbrs[v * STATE_DIM..(v + 1) * STATE_DIM];
+        for i in 0..STATE_DIM {
+            let gain = coef[i];
+            let bias = coef[STATE_DIM + i];
+            new_states[v * STATE_DIM + i] = (gain * (s[i] + nbr[i]) + bias).tanh();
+        }
+        // Harvest efficiency is a bounded function of the leading state
+        // channel - evolution tunes the genome to maximize it.
+        let harvest = 0.5 * (1.0 + new_states[v * STATE_DIM]);
+        new_resources[v] = resources[v] + inflow * harvest;
+    }
+    (new_states, new_resources)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::PlacementKind;
+
+    fn mk(n_procs: usize, cells: usize, seed: u64) -> (Topology, Vec<DishtinyShard>, Xoshiro256) {
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let cfg = DeConfig {
+            cells_per_proc: cells,
+            ..DeConfig::default()
+        };
+        let shards: Vec<_> = (0..n_procs)
+            .map(|r| DishtinyShard::new(cfg, &topo, r, &mut rng))
+            .collect();
+        (topo, shards, rng)
+    }
+
+    #[test]
+    fn five_layers_per_cross_border_direction() {
+        let (_, shards, _) = mk(4, 36, 1);
+        // 2x2 mesh: all four directions cross borders -> 4*5 channels.
+        assert_eq!(shards[0].channels().len(), 20);
+    }
+
+    #[test]
+    fn resource_accumulates_over_updates() {
+        let (_, mut shards, mut rng) = mk(1, 36, 2);
+        let before = shards[0].mean_resource();
+        for _ in 0..50 {
+            let _ = shards[0].step(&mut rng);
+        }
+        assert!(shards[0].mean_resource() > before);
+    }
+
+    #[test]
+    fn evolution_increases_harvest_capacity() {
+        // Selection acts on harvest efficiency, which is a monotone
+        // function of the leading state channel: mean state[0] must climb
+        // as fitter genomes spread. (Mean *resource* is not monotone —
+        // failed-reproduction endowments are a resource sink.)
+        let (_, mut shards, mut rng) = mk(1, 100, 3);
+        let mean_s0 = |s: &DishtinyShard| {
+            s.cells().iter().map(|c| c.state[0] as f64).sum::<f64>() / s.cells().len() as f64
+        };
+        for _ in 0..200 {
+            let _ = shards[0].step(&mut rng);
+        }
+        let early = mean_s0(&shards[0]);
+        for _ in 0..1000 {
+            let _ = shards[0].step(&mut rng);
+        }
+        let late = mean_s0(&shards[0]);
+        assert!(
+            late > early + 0.1,
+            "selection should raise harvest capacity: early={early} late={late}"
+        );
+        assert!(shards[0].births() > 100, "reproduction must be ongoing");
+        assert!(shards[0].mean_resource() > 0.5);
+    }
+
+    /// Deliver every message between two shards faithfully (perfect
+    /// communication), one update at a time.
+    fn exchange_pair(shards: &mut [DishtinyShard], rng: &mut Xoshiro256) {
+        let out0 = shards[0].step(rng);
+        let out1 = shards[1].step(rng);
+        for (src, out) in [(0usize, out0), (1usize, out1)] {
+            let dst = 1 - src;
+            for (ch, msg) in out {
+                let (dir, layer) = shards[src].chan_meta[ch];
+                let back = shards[dst]
+                    .chan_meta
+                    .iter()
+                    .position(|&(d, l)| d == dir.opposite() && l == layer)
+                    .expect("reciprocal channel");
+                shards[dst].absorb(back, vec![msg]);
+            }
+        }
+    }
+
+    #[test]
+    fn spawn_messages_cross_borders() {
+        // Border cells continuously share resource outward, so cross-
+        // border spawning only occurs when the reciprocal inflows are
+        // actually delivered — run both shards with full exchange.
+        let (_, mut shards, mut rng) = mk(2, 16, 4);
+        let mut cross_spawn_msgs = 0usize;
+        for _ in 0..600 {
+            // Count non-empty spawn batches leaving shard 0 this update.
+            let out0 = shards[0].step(&mut rng);
+            for (ch, msg) in &out0 {
+                if let DeMsg::Spawn(batch) = msg {
+                    if !batch.is_empty() {
+                        cross_spawn_msgs += batch.len();
+                    }
+                }
+                let _ = ch;
+            }
+            // Deliver shard 0 -> 1.
+            for (ch, msg) in out0 {
+                let (dir, layer) = shards[0].chan_meta[ch];
+                let back = shards[1]
+                    .chan_meta
+                    .iter()
+                    .position(|&(d, l)| d == dir.opposite() && l == layer)
+                    .unwrap();
+                shards[1].absorb(back, vec![msg]);
+            }
+            // Step + deliver shard 1 -> 0.
+            let out1 = shards[1].step(&mut rng);
+            for (ch, msg) in out1 {
+                let (dir, layer) = shards[1].chan_meta[ch];
+                let back = shards[0]
+                    .chan_meta
+                    .iter()
+                    .position(|&(d, l)| d == dir.opposite() && l == layer)
+                    .unwrap();
+                shards[0].absorb(back, vec![msg]);
+            }
+        }
+        assert!(
+            cross_spawn_msgs > 0,
+            "cross-border spawns should occur under full exchange"
+        );
+        let _ = exchange_pair; // helper retained for other tests
+    }
+
+    #[test]
+    fn cross_border_spawn_respects_endowment_competition() {
+        let (_, mut shards, mut rng) = mk(2, 1, 5);
+        let strong = SpawnMsg {
+            slot: 0,
+            genome: Genome::random(&mut rng),
+            endowment: 100.0,
+        };
+        let kin = strong.genome.kin_id;
+        // find a spawn channel on shard 1
+        let ch = shards[1]
+            .chan_meta
+            .iter()
+            .position(|&(_, l)| l == Layer::Spawn)
+            .unwrap();
+        shards[1].absorb(ch, vec![DeMsg::Spawn(vec![strong])]);
+        let _ = shards[1].step(&mut rng);
+        assert_eq!(shards[1].cells()[0].genome.kin_id, kin, "invader wins");
+
+        let weak = SpawnMsg {
+            slot: 0,
+            genome: Genome::random(&mut rng),
+            endowment: 0.0,
+        };
+        shards[1].absorb(ch, vec![DeMsg::Spawn(vec![weak])]);
+        let _ = shards[1].step(&mut rng);
+        assert_eq!(shards[1].cells()[0].genome.kin_id, kin, "weak invader loses");
+    }
+
+    #[test]
+    fn genome_mutation_respects_cap() {
+        let mut rng = Xoshiro256::new(6);
+        let mut g = Genome::random(&mut rng);
+        for _ in 0..2000 {
+            g = g.offspring(&mut rng);
+            assert!(g.weights.len() <= GENOME_CAP);
+            assert!(g.weights.len() >= 8);
+        }
+        assert_eq!(g.generation, 2000);
+    }
+
+    #[test]
+    fn kin_groups_diversify() {
+        let (_, mut shards, mut rng) = mk(1, 64, 7);
+        // all-random start: many groups
+        assert!(shards[0].kin_group_count() > 32);
+        for _ in 0..600 {
+            let _ = shards[0].step(&mut rng);
+        }
+        // selection collapses diversity but fission maintains > 1
+        let k = shards[0].kin_group_count();
+        assert!(k >= 1 && k <= 64, "k={k}");
+    }
+
+    #[test]
+    fn mismatched_layer_payload_skipped() {
+        let (_, mut shards, _) = mk(2, 4, 8);
+        let ch = shards[0]
+            .chan_meta
+            .iter()
+            .position(|&(_, l)| l == Layer::Kin)
+            .unwrap();
+        // send a Resource payload on the Kin layer: must be ignored
+        shards[0].absorb(ch, vec![DeMsg::Resource(vec![1.0, 2.0])]);
+        assert!(shards[0].ghost_kin.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn step_cost_reflects_compute_heavy_profile() {
+        let (_, shards, _) = mk(1, 3600, 9);
+        // paper profile: ms-scale updates at 3600 cells
+        assert!(shards[0].step_cost_ns() > 1e6);
+    }
+
+    #[test]
+    fn resource_transfers_conserve_between_shards() {
+        // What leaves shard A's border equals what B credits on absorb.
+        let (_, mut shards, mut rng) = mk(2, 4, 10);
+        let total_before: f64 = shards.iter().map(|s| s.mean_resource() * 4.0).sum();
+        // one update with full delivery of resource messages only
+        let out0 = shards[0].step(&mut rng);
+        let out1 = shards[1].step(&mut rng);
+        let inflow0 = shards[0].cfg.resource_inflow;
+        for (src, out) in [(0usize, out0), (1usize, out1)] {
+            let dst = 1 - src;
+            for (ch, msg) in out {
+                if let DeMsg::Resource(_) = msg {
+                    let (dir, _) = shards[src].chan_meta[ch];
+                    let back = shards[dst]
+                        .chan_meta
+                        .iter()
+                        .position(|&(d, l)| l == Layer::Resource && d == dir.opposite())
+                        .unwrap();
+                    shards[dst].absorb(back, vec![msg]);
+                }
+            }
+        }
+        // absorb applies at next step; run it with zero inflow to isolate
+        for s in shards.iter_mut() {
+            s.cfg.resource_inflow = 0.0;
+            let _ = s.step(&mut rng);
+        }
+        let total_after: f64 = shards.iter().map(|s| s.mean_resource() * 4.0).sum();
+        // only growth allowed is the two inflow-ful updates; transfers conserve
+        let max_growth = 2.0 * inflow0 as f64 * 8.0; // 8 cells, harvest<=1
+        assert!(
+            total_after <= total_before + max_growth + 1e-6,
+            "before={total_before} after={total_after}"
+        );
+    }
+}

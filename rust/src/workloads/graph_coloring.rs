@@ -1,0 +1,578 @@
+//! Distributed graph coloring via communication-free learning.
+//!
+//! The paper's communication-intensive benchmark (§II-B): the decentralized
+//! WLAN channel-selection algorithm of Leith et al. (2012). Every vertex
+//! holds a color and a probability vector over colors. Each update a
+//! vertex checks its four torus neighbors for a color conflict; iff one
+//! exists it applies the CFL failure update — `p <- (1-b) p + b/(C-1)
+//! (1 - e_cur)`, decreasing the conflicting color's probability
+//! multiplicatively and increasing all others (paper SII-B, b = 0.1) —
+//! and resamples its color from the updated distribution. Conflict-free
+//! vertices collapse their distribution onto the current color (the CFL
+//! absorbing state). Vertices always transmit their current color to
+//! neighbors.
+//!
+//! Cross-shard neighbor colors travel as *pooled* border messages — one
+//! message per neighboring process per update (§II-B) — and are absorbed
+//! into ghost buffers on arrival. Under best-effort operation ghosts may
+//! be stale or absent; the algorithm simply acts on the freshest view.
+
+use super::partition::{Dir, TilePartition};
+use super::{ChannelSpec, ShardWorkload};
+use crate::net::Topology;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Pooled border-color message: the sender's border colors in pooling
+/// order, as seen from the receiving side's ghost direction.
+pub type GcMsg = Vec<u8>;
+
+/// Graph-coloring benchmark parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GcConfig {
+    /// Colors available (paper: 3).
+    pub n_colors: u8,
+    /// Multiplicative decay of a conflicting color's probability
+    /// (paper: b = 0.1).
+    pub b: f64,
+    /// Simulation elements per process (paper: 2048 benchmarking, 1 QoS).
+    pub simels_per_proc: usize,
+    /// Nominal per-simel algorithm cost (ns) for the DES cost model.
+    pub per_simel_cost_ns: f64,
+    /// Nominal fixed per-update cost (ns).
+    pub base_cost_ns: f64,
+}
+
+impl Default for GcConfig {
+    fn default() -> Self {
+        Self {
+            n_colors: 3,
+            b: 0.1,
+            simels_per_proc: 2048,
+            // Calibrated so a 1-simel update costs ~3.5 us of algorithm
+            // work (total 2-proc intranode simstep ~9 us incl. messaging,
+            // paper SIII-D.1) and a 2048-simel update ~170 us (weak-scaling
+            // simstep ~200 us, SIII-F.1).
+            per_simel_cost_ns: 80.0,
+            base_cost_ns: 3_400.0,
+        }
+    }
+}
+
+/// One process's tile of the global coloring problem.
+pub struct GraphColoringShard {
+    cfg: GcConfig,
+    part: TilePartition,
+    rank: usize,
+    /// Channel specs (direction order N,E,S,W, self-channels omitted).
+    channels: Vec<ChannelSpec>,
+    /// channel index -> direction
+    chan_dirs: Vec<Dir>,
+    /// Current color per local vertex (row-major tile).
+    colors: Vec<u8>,
+    /// Per-vertex color probability vectors, row-major `[v][color]`.
+    probs: Vec<f64>,
+    /// Ghost border colors per direction (None until first delivery).
+    ghosts: [Option<Vec<u8>>; 4],
+    /// Directions that wrap onto our own tile (self-neighbor mesh rows or
+    /// columns) and are serviced locally instead of via channels.
+    self_dirs: [bool; 4],
+    /// Parity of this tile's global origin, aligning the red-black update
+    /// schedule across shards: global parity of local (r, c) is
+    /// `(parity_off + r + c) % 2`.
+    parity_off: u8,
+    /// Reusable per-step uniform-draw scratch (hot-loop allocation
+    /// avoidance; see EXPERIMENTS.md SPerf).
+    uniform_scratch: Vec<f64>,
+}
+
+impl GraphColoringShard {
+    /// Build the shard for process `rank` on `topo`'s mesh.
+    pub fn new(cfg: GcConfig, topo: &Topology, rank: usize, rng: &mut Xoshiro256) -> Self {
+        let (mr, mc) = topo.mesh_dims();
+        let part = TilePartition::new(mr, mc, cfg.simels_per_proc);
+        let n = part.simels_per_proc();
+        let neighbors = topo.neighbors4(rank);
+
+        let mut channels = Vec::new();
+        let mut chan_dirs = Vec::new();
+        let mut self_dirs = [false; 4];
+        for d in Dir::ALL {
+            let peer = neighbors[d.index()];
+            if peer == rank {
+                self_dirs[d.index()] = true;
+            } else {
+                channels.push(ChannelSpec {
+                    peer,
+                    layer: d.index(),
+                });
+                chan_dirs.push(d);
+            }
+        }
+
+        let colors: Vec<u8> = (0..n).map(|_| rng.below(cfg.n_colors as u64) as u8).collect();
+        let probs = vec![1.0 / cfg.n_colors as f64; n * cfg.n_colors as usize];
+        let (pr, pc) = (rank / mc, rank % mc);
+        let parity_off = ((pr * part.tile_h + pc * part.tile_w) % 2) as u8;
+
+        Self {
+            cfg,
+            part,
+            rank,
+            channels,
+            chan_dirs,
+            colors,
+            probs,
+            ghosts: [None, None, None, None],
+            self_dirs,
+            parity_off,
+            uniform_scratch: vec![0.0; n],
+        }
+    }
+
+    /// Parity of this tile's global origin.
+    pub fn parity_off(&self) -> u8 {
+        self.parity_off
+    }
+
+    pub fn config(&self) -> &GcConfig {
+        &self.cfg
+    }
+
+    pub fn partition(&self) -> &TilePartition {
+        &self.part
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Current tile colors (row-major).
+    pub fn colors(&self) -> &[u8] {
+        &self.colors
+    }
+
+    /// Color of the neighbor of local vertex (r, c) toward `dir`, or
+    /// `None` when it lives across a border whose ghost has not arrived.
+    fn neighbor_color(&self, r: usize, c: usize, dir: Dir) -> Option<u8> {
+        let (th, tw) = (self.part.tile_h, self.part.tile_w);
+        match dir {
+            Dir::North if r > 0 => Some(self.colors[self.part.local_index(r - 1, c)]),
+            Dir::South if r < th - 1 => Some(self.colors[self.part.local_index(r + 1, c)]),
+            Dir::West if c > 0 => Some(self.colors[self.part.local_index(r, c - 1)]),
+            Dir::East if c < tw - 1 => Some(self.colors[self.part.local_index(r, c + 1)]),
+            _ => {
+                // Crosses the tile border toward `dir`.
+                if self.self_dirs[dir.index()] {
+                    // Torus wraps back onto our own tile.
+                    let idx = match dir {
+                        Dir::North => self.part.local_index(th - 1, c),
+                        Dir::South => self.part.local_index(0, c),
+                        Dir::West => self.part.local_index(r, tw - 1),
+                        Dir::East => self.part.local_index(r, 0),
+                    };
+                    Some(self.colors[idx])
+                } else {
+                    // Ghost from the neighboring shard: the neighbor sent
+                    // its border in the same pooling order as ours, so the
+                    // offset is c (horizontal borders) or r (vertical).
+                    let off = match dir {
+                        Dir::North | Dir::South => c,
+                        Dir::East | Dir::West => r,
+                    };
+                    self.ghosts[dir.index()].as_ref().map(|g| g[off])
+                }
+            }
+        }
+    }
+
+    /// Does local vertex (r, c) currently conflict with any visible
+    /// neighbor?
+    fn conflicted(&self, r: usize, c: usize) -> bool {
+        let mine = self.colors[self.part.local_index(r, c)];
+        Dir::ALL
+            .iter()
+            .any(|&d| self.neighbor_color(r, c, d) == Some(mine))
+    }
+
+    /// Local conflict count over the shard's current view (used for
+    /// `quality()`; global exact counts come from
+    /// [`global_conflicts`]).
+    pub fn local_conflicts(&self) -> usize {
+        let mut n = 0;
+        for r in 0..self.part.tile_h {
+            for c in 0..self.part.tile_w {
+                if self.conflicted(r, c) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Communication-free-learning failure update (Leith et al. 2012):
+    /// `p <- (1-b) p + b/(C-1) (1 - e_cur)` — the conflicting color's
+    /// probability decreases multiplicatively while every other color's
+    /// increases (paper SII-B) — then resample from the updated
+    /// distribution. Sampling from the full distribution retains
+    /// stickiness (a conflicted vertex usually keeps its color for a few
+    /// rounds), which is what lets the stochastic search settle instead of
+    /// thrashing in synchronized resample storms.
+    fn resample_color(&mut self, v: usize, u: f64) -> u8 {
+        let k = self.cfg.n_colors as usize;
+        let p = &mut self.probs[v * k..(v + 1) * k];
+        let cur = self.colors[v] as usize;
+        let b = self.cfg.b;
+        let spread = b / (k - 1) as f64;
+        for (c, q) in p.iter_mut().enumerate() {
+            *q = (1.0 - b) * *q + if c == cur { 0.0 } else { spread };
+        }
+        // Sample the new color from the updated distribution.
+        let mut acc = 0.0;
+        for (color, &q) in p.iter().enumerate() {
+            acc += q;
+            if u < acc {
+                return color as u8;
+            }
+        }
+        (k - 1) as u8
+    }
+
+    /// One full red-black update sweep against a caller-supplied uniform
+    /// draw per vertex (row-major). This is the exact computation the
+    /// AOT-compiled Pallas kernel (`gc_update`) performs; `step()` drives
+    /// it with freshly drawn uniforms, and the HLO-backed path feeds the
+    /// identical inputs to PJRT (equivalence is asserted in
+    /// `rust/tests/integration_runtime.rs`).
+    pub fn sweep_with_uniforms(&mut self, uniforms: &[f64]) {
+        let (th, tw) = (self.part.tile_h, self.part.tile_w);
+        debug_assert_eq!(uniforms.len(), th * tw);
+        for parity in 0..2u8 {
+            for r in 0..th {
+                for c in 0..tw {
+                    if ((self.parity_off as usize + r + c) % 2) as u8 != parity {
+                        continue;
+                    }
+                    let v = self.part.local_index(r, c);
+                    if self.conflicted(r, c) {
+                        self.colors[v] = self.resample_color(v, uniforms[v]);
+                    } else {
+                        self.reinforce_color(v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Raw mutable access for the HLO-backed execution path: replace tile
+    /// state with kernel outputs.
+    pub fn load_state(&mut self, colors: &[u8], probs: &[f64]) {
+        assert_eq!(colors.len(), self.colors.len());
+        assert_eq!(probs.len(), self.probs.len());
+        self.colors.copy_from_slice(colors);
+        self.probs.copy_from_slice(probs);
+    }
+
+    /// Current probability table (row-major `[v][color]`).
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    /// Pool border colors into one message per cross-shard direction
+    /// (Conduit pooling, paper §II-B).
+    pub fn pool_borders(&self) -> Vec<(usize, GcMsg)> {
+        self.chan_dirs
+            .iter()
+            .enumerate()
+            .map(|(ch, &d)| {
+                let msg: GcMsg = self
+                    .part
+                    .border_indices(d)
+                    .into_iter()
+                    .map(|i| self.colors[i])
+                    .collect();
+                (ch, msg)
+            })
+            .collect()
+    }
+
+    /// The -1-padded neighbor ghost view per direction, in pooling order
+    /// (kernel input format; self-wrap directions are resolved to own
+    /// border colors).
+    pub fn ghost_view(&self, dir: Dir) -> Vec<i32> {
+        let len = self.part.border_len(dir);
+        if self.self_dirs[dir.index()] {
+            // Torus wraps onto our own opposite border.
+            self.part
+                .border_indices(dir.opposite())
+                .into_iter()
+                .map(|i| self.colors[i] as i32)
+                .collect()
+        } else {
+            match &self.ghosts[dir.index()] {
+                Some(g) => g.iter().map(|&c| c as i32).collect(),
+                None => vec![-1; len],
+            }
+        }
+    }
+
+    /// Communication-free-learning success update: collapse onto the
+    /// current color (absorbing state — required for convergence).
+    fn reinforce_color(&mut self, v: usize) {
+        let k = self.cfg.n_colors as usize;
+        let cur = self.colors[v] as usize;
+        let p = &mut self.probs[v * k..(v + 1) * k];
+        // Settled vertices dominate converged runs: skip the write when
+        // the distribution is already collapsed (SPerf iteration 4).
+        if p[cur] == 1.0 {
+            return;
+        }
+        for (c, q) in p.iter_mut().enumerate() {
+            *q = if c == cur { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+impl ShardWorkload for GraphColoringShard {
+    type Msg = GcMsg;
+
+    fn channels(&self) -> Vec<ChannelSpec> {
+        self.channels.clone()
+    }
+
+    fn absorb(&mut self, ch: usize, msgs: Vec<GcMsg>) {
+        // Best-effort: only the freshest border state matters.
+        if let Some(latest) = msgs.into_iter().last() {
+            let dir = self.chan_dirs[ch];
+            if latest.len() == self.part.border_len(dir) {
+                self.ghosts[dir.index()] = Some(latest);
+            }
+            // Arity mismatch => foreign/corrupt message; skipped.
+        }
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256) -> Vec<(usize, GcMsg)> {
+        // Red-black (checkerboard) sweep: the red phase updates against
+        // frozen black neighbors, then the black phase sees the fresh red
+        // colors. Torus neighbors always have opposite parity, so no two
+        // adjacent vertices ever resample simultaneously — a synchronous
+        // Jacobi sweep would oscillate forever on this tightly constrained
+        // graph. The parity schedule is global (aligned across shards via
+        // `parity_off`). One uniform is drawn per vertex up front so the
+        // native and HLO (Pallas kernel) paths consume identical input
+        // streams.
+        let mut uniforms = std::mem::take(&mut self.uniform_scratch);
+        for u in uniforms.iter_mut() {
+            *u = rng.next_f64();
+        }
+        self.sweep_with_uniforms(&uniforms);
+        self.uniform_scratch = uniforms;
+        self.pool_borders()
+    }
+
+    fn step_cost_ns(&self) -> f64 {
+        self.cfg.base_cost_ns + self.cfg.per_simel_cost_ns * self.part.simels_per_proc() as f64
+    }
+
+    fn quality(&self) -> f64 {
+        self.local_conflicts() as f64
+    }
+}
+
+/// Exact global conflict count over all shards (the paper's solution-error
+/// measure: "the number of graph color conflicts remaining at the end of
+/// the benchmark", §II-B). Assembles the true global grid, so the result
+/// is independent of any stale ghost state.
+pub fn global_conflicts(topo: &Topology, shards: &[GraphColoringShard]) -> usize {
+    let refs: Vec<&GraphColoringShard> = shards.iter().collect();
+    global_conflicts_refs(topo, &refs)
+}
+
+/// [`global_conflicts`] over borrowed shards (for wrapper workloads that
+/// own their inner shard, e.g. the HLO-backed path).
+pub fn global_conflicts_refs(topo: &Topology, shards: &[&GraphColoringShard]) -> usize {
+    assert_eq!(shards.len(), topo.n_procs());
+    let part = shards[0].partition();
+    let (gh, gw) = part.global_dims();
+    let (_, mc) = topo.mesh_dims();
+    // Assemble global grid.
+    let mut grid = vec![0u8; gh * gw];
+    for (rank, shard) in shards.iter().enumerate() {
+        let (pr, pc) = (rank / mc, rank % mc);
+        for r in 0..part.tile_h {
+            for c in 0..part.tile_w {
+                let gr = pr * part.tile_h + r;
+                let gc = pc * part.tile_w + c;
+                grid[gr * gw + gc] = shard.colors()[part.local_index(r, c)];
+            }
+        }
+    }
+    // Count vertices in conflict with any of their four torus neighbors.
+    let mut conflicts = 0;
+    for r in 0..gh {
+        for c in 0..gw {
+            let mine = grid[r * gw + c];
+            let nbrs = [
+                grid[((r + gh - 1) % gh) * gw + c],
+                grid[r * gw + (c + 1) % gw],
+                grid[((r + 1) % gh) * gw + c],
+                grid[r * gw + (c + gw - 1) % gw],
+            ];
+            if nbrs.contains(&mine) {
+                conflicts += 1;
+            }
+        }
+    }
+    conflicts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::PlacementKind;
+
+    fn mk(n_procs: usize, simels: usize, seed: u64) -> (Topology, Vec<GraphColoringShard>, Xoshiro256) {
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let cfg = GcConfig {
+            simels_per_proc: simels,
+            ..GcConfig::default()
+        };
+        let shards: Vec<_> = (0..n_procs)
+            .map(|r| GraphColoringShard::new(cfg, &topo, r, &mut rng))
+            .collect();
+        (topo, shards, rng)
+    }
+
+    /// Exchange every pooled message faithfully (perfect communication).
+    fn exchange_perfect(topo: &Topology, shards: &mut [GraphColoringShard], rng: &mut Xoshiro256) {
+        let n = shards.len();
+        let mut out: Vec<Vec<(usize, GcMsg)>> = Vec::with_capacity(n);
+        for shard in shards.iter_mut() {
+            out.push(shard.step(rng));
+        }
+        for (rank, msgs) in out.into_iter().enumerate() {
+            let specs = shards[rank].channels();
+            for (ch, msg) in msgs {
+                let spec = specs[ch];
+                // Deliver to the peer's channel pointing back at `rank`
+                // in the opposite direction.
+                let peer_specs = shards[spec.peer].channels();
+                let back_dir = Dir::ALL[spec.layer].opposite().index();
+                let back_ch = peer_specs
+                    .iter()
+                    .position(|s| s.peer == rank && s.layer == back_dir)
+                    .expect("reciprocal channel must exist");
+                shards[spec.peer].absorb(back_ch, vec![msg]);
+                let _ = topo;
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_converges_to_zero_conflicts() {
+        let (topo, mut shards, mut rng) = mk(1, 64, 7);
+        for _ in 0..600 {
+            let _ = shards[0].step(&mut rng);
+        }
+        assert_eq!(
+            global_conflicts(&topo, &shards),
+            0,
+            "8x8 torus with 3 colors must settle"
+        );
+    }
+
+    #[test]
+    fn multi_shard_converges_under_perfect_comm() {
+        let (topo, mut shards, mut rng) = mk(4, 16, 11);
+        for _ in 0..2000 {
+            exchange_perfect(&topo, &mut shards, &mut rng);
+        }
+        assert_eq!(global_conflicts(&topo, &shards), 0);
+    }
+
+    #[test]
+    fn conflicts_decrease_from_random_start() {
+        let (topo, mut shards, mut rng) = mk(4, 256, 13);
+        let before = global_conflicts(&topo, &shards);
+        for _ in 0..200 {
+            exchange_perfect(&topo, &mut shards, &mut rng);
+        }
+        let after = global_conflicts(&topo, &shards);
+        assert!(
+            after < before / 4,
+            "conflicts should fall sharply: before={before} after={after}"
+        );
+    }
+
+    #[test]
+    fn tolerates_message_loss() {
+        // Drop every message: shards still run and local state stays sane.
+        let (topo, mut shards, mut rng) = mk(4, 16, 17);
+        for _ in 0..100 {
+            for shard in shards.iter_mut() {
+                let _ = shard.step(&mut rng); // outputs discarded
+            }
+        }
+        let total = global_conflicts(&topo, &shards);
+        let max = 4 * 16;
+        assert!(total <= max);
+        // interiors still converge locally
+        for shard in &shards {
+            assert!(shard.quality() <= 16.0);
+        }
+    }
+
+    #[test]
+    fn stale_ghosts_are_replaced_by_latest() {
+        let (_, mut shards, _) = mk(2, 1, 19);
+        // two channels (E and W) to the peer for a 1x2 mesh
+        let specs = shards[0].channels();
+        assert_eq!(specs.len(), 2);
+        shards[0].absorb(0, vec![vec![0], vec![2]]);
+        assert_eq!(shards[0].ghosts[shards[0].chan_dirs[0].index()], Some(vec![2]));
+    }
+
+    #[test]
+    fn malformed_message_skipped() {
+        let (_, mut shards, _) = mk(2, 1, 23);
+        shards[0].absorb(0, vec![vec![1, 2, 3]]); // wrong arity
+        assert_eq!(shards[0].ghosts[shards[0].chan_dirs[0].index()], None);
+    }
+
+    #[test]
+    fn probability_vectors_stay_normalized() {
+        let (_, mut shards, mut rng) = mk(1, 64, 29);
+        for _ in 0..50 {
+            let _ = shards[0].step(&mut rng);
+        }
+        let k = shards[0].cfg.n_colors as usize;
+        for v in 0..shards[0].part.simels_per_proc() {
+            let s: f64 = shards[0].probs[v * k..(v + 1) * k].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "v={v} sum={s}");
+            assert!(shards[0].probs[v * k..(v + 1) * k].iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn step_cost_scales_with_simels() {
+        let (_, shards_small, _) = mk(1, 1, 31);
+        let (_, shards_big, _) = mk(1, 2048, 31);
+        assert!(shards_big[0].step_cost_ns() > 100.0 * shards_small[0].step_cost_ns() / 4.0);
+        assert!(shards_small[0].step_cost_ns() > 1_000.0);
+    }
+
+    #[test]
+    fn channels_reciprocal_across_shards() {
+        let (_, shards, _) = mk(16, 4, 37);
+        for (rank, shard) in shards.iter().enumerate() {
+            for spec in shard.channels() {
+                let back_dir = Dir::ALL[spec.layer].opposite().index();
+                let found = shards[spec.peer]
+                    .channels()
+                    .iter()
+                    .any(|s| s.peer == rank && s.layer == back_dir);
+                assert!(found, "rank={rank} spec={spec:?} lacks reciprocal");
+            }
+        }
+    }
+}

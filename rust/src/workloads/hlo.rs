@@ -1,0 +1,195 @@
+//! HLO-backed workload execution: the AOT-compiled Pallas kernels on the
+//! request path.
+//!
+//! These wrappers implement [`ShardWorkload`] by delegating state,
+//! channels, and messaging to the native shards while routing the compute
+//! hot-spot through a PJRT executable loaded from `artifacts/` — the full
+//! three-layer composition (L3 Rust coordination → L2 JAX graph → L1
+//! Pallas kernel). The native and HLO paths compute the same function
+//! (equivalence asserted in `rust/tests/integration_runtime.rs`), so
+//! either can drive any experiment; examples default to HLO to prove the
+//! stack end to end.
+
+use anyhow::{Context, Result};
+
+use super::dishtiny::{DishtinyShard, STATE_DIM};
+use super::graph_coloring::{GcMsg, GraphColoringShard};
+use super::partition::Dir;
+use super::{ChannelSpec, ShardWorkload};
+use crate::runtime::{ArtifactManifest, CompiledKernel, HostTensor, RuntimeClient};
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::workloads::dishtiny::DeMsg;
+
+/// Graph-coloring shard whose red-black CFL sweep runs through the
+/// `gc_update_{H}x{W}` PJRT executable.
+pub struct HloGraphColoringShard {
+    inner: GraphColoringShard,
+    kernel: CompiledKernel,
+    /// Post-update tile conflict count reported by the kernel.
+    pub last_conflicts: i32,
+}
+
+impl HloGraphColoringShard {
+    /// Wrap a native shard, loading the matching artifact variant.
+    pub fn new(
+        inner: GraphColoringShard,
+        rt: &RuntimeClient,
+        manifest: &ArtifactManifest,
+    ) -> Result<Self> {
+        let part = inner.partition();
+        let name = format!("gc_update_{}x{}", part.tile_h, part.tile_w);
+        let spec = manifest.require(&name)?;
+        let kernel = rt
+            .load_hlo_text(&name, &spec.file)
+            .with_context(|| format!("loading {name}"))?;
+        Ok(Self {
+            inner,
+            kernel,
+            last_conflicts: 0,
+        })
+    }
+
+    pub fn inner(&self) -> &GraphColoringShard {
+        &self.inner
+    }
+
+    /// Mutable access to the wrapped shard (test synchronization hook).
+    pub fn inner_mut(&mut self) -> &mut GraphColoringShard {
+        &mut self.inner
+    }
+
+    /// Run one kernel-backed sweep with explicit uniforms (test hook).
+    pub fn sweep_hlo(&mut self, uniforms: &[f64]) -> Result<()> {
+        let part = *self.inner.partition();
+        let (h, w) = (part.tile_h as i64, part.tile_w as i64);
+        let k = self.inner.config().n_colors as usize;
+
+        let colors: Vec<i32> = self.inner.colors().iter().map(|&c| c as i32).collect();
+        let probs: Vec<f32> = self.inner.probs().iter().map(|&p| p as f32).collect();
+        let u: Vec<f32> = uniforms.iter().map(|&x| x as f32).collect();
+
+        let inputs = [
+            HostTensor::i32(vec![self.inner.parity_off() as i32], &[1]),
+            HostTensor::i32(colors, &[h, w]),
+            HostTensor::f32(probs, &[h, w, k as i64]),
+            HostTensor::f32(u, &[h, w]),
+            HostTensor::i32(self.inner.ghost_view(Dir::North), &[w]),
+            HostTensor::i32(self.inner.ghost_view(Dir::East), &[h]),
+            HostTensor::i32(self.inner.ghost_view(Dir::South), &[w]),
+            HostTensor::i32(self.inner.ghost_view(Dir::West), &[h]),
+        ];
+        let outputs = self.kernel.run(&inputs)?;
+        let new_colors: Vec<u8> = outputs[0]
+            .expect_i32()
+            .iter()
+            .map(|&c| c as u8)
+            .collect();
+        let new_probs: Vec<f64> = outputs[1]
+            .expect_f32()
+            .iter()
+            .map(|&p| p as f64)
+            .collect();
+        self.last_conflicts = outputs[2].expect_i32()[0];
+        self.inner.load_state(&new_colors, &new_probs);
+        Ok(())
+    }
+}
+
+impl ShardWorkload for HloGraphColoringShard {
+    type Msg = GcMsg;
+
+    fn channels(&self) -> Vec<ChannelSpec> {
+        self.inner.channels()
+    }
+
+    fn absorb(&mut self, ch: usize, msgs: Vec<GcMsg>) {
+        self.inner.absorb(ch, msgs);
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256) -> Vec<(usize, GcMsg)> {
+        let n = self.inner.partition().simels_per_proc();
+        let uniforms: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        self.sweep_hlo(&uniforms)
+            .expect("PJRT execution failed on the request path");
+        self.inner.pool_borders()
+    }
+
+    fn step_cost_ns(&self) -> f64 {
+        self.inner.step_cost_ns()
+    }
+
+    fn quality(&self) -> f64 {
+        self.inner.quality()
+    }
+}
+
+/// Digital-evolution shard whose genome-evaluation phase runs through the
+/// `cell_update_{N}` PJRT executable.
+pub struct HloDishtinyShard {
+    inner: DishtinyShard,
+    kernel: CompiledKernel,
+}
+
+impl HloDishtinyShard {
+    pub fn new(
+        inner: DishtinyShard,
+        rt: &RuntimeClient,
+        manifest: &ArtifactManifest,
+    ) -> Result<Self> {
+        let n = inner.cells().len();
+        let name = format!("cell_update_{n}");
+        let spec = manifest.require(&name)?;
+        let kernel = rt
+            .load_hlo_text(&name, &spec.file)
+            .with_context(|| format!("loading {name}"))?;
+        Ok(Self { inner, kernel })
+    }
+
+    pub fn inner(&self) -> &DishtinyShard {
+        &self.inner
+    }
+}
+
+impl ShardWorkload for HloDishtinyShard {
+    type Msg = DeMsg;
+
+    fn channels(&self) -> Vec<ChannelSpec> {
+        self.inner.channels()
+    }
+
+    fn absorb(&mut self, ch: usize, msgs: Vec<DeMsg>) {
+        self.inner.absorb(ch, msgs);
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256) -> Vec<(usize, DeMsg)> {
+        let kernel = &self.kernel;
+        self.inner.step_with(rng, |states, coefs, nbrs, resources, inflow| {
+            let n = resources.len() as i64;
+            let d = STATE_DIM as i64;
+            let inputs = [
+                HostTensor::f32(states.to_vec(), &[n, d]),
+                HostTensor::f32(coefs.to_vec(), &[n, 2 * d]),
+                HostTensor::f32(nbrs.to_vec(), &[n, d]),
+                HostTensor::f32(resources.to_vec(), &[n]),
+                HostTensor::f32(vec![inflow], &[1]),
+            ];
+            let outputs = kernel
+                .run(&inputs)
+                .expect("PJRT execution failed on the request path");
+            (
+                outputs[0].expect_f32().to_vec(),
+                outputs[1].expect_f32().to_vec(),
+            )
+        })
+    }
+
+    fn step_cost_ns(&self) -> f64 {
+        self.inner.step_cost_ns()
+    }
+
+    fn quality(&self) -> f64 {
+        self.inner.quality()
+    }
+}
+
+// Tests requiring built artifacts live in rust/tests/integration_runtime.rs.

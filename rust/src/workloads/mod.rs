@@ -1,0 +1,115 @@
+//! Benchmark workloads: distributed graph coloring and digital evolution.
+//!
+//! Both workloads implement [`ShardWorkload`], the interface the
+//! simulation executors ([`crate::sim`] and [`crate::exec`]) drive. A
+//! *shard* is the slice of the global simulation owned by one process or
+//! thread: a tile of graph vertices (graph coloring) or of cells (digital
+//! evolution) on the global torus. All cross-shard interaction flows
+//! through best-effort channels; the executor owns delivery, the workload
+//! owns state.
+
+pub mod dishtiny;
+pub mod hlo;
+pub mod graph_coloring;
+pub mod partition;
+pub mod workunit;
+
+use crate::util::rng::Xoshiro256;
+
+/// Description of one outgoing channel a shard wants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChannelSpec {
+    /// Destination process rank.
+    pub peer: usize,
+    /// Workload-defined layer tag (e.g. digital evolution's five
+    /// messaging layers); echoes back on [`ShardWorkload::absorb`].
+    pub layer: usize,
+}
+
+/// A process-local slice of a distributed simulation.
+///
+/// Contract:
+/// * `channels()` is stable for the lifetime of the shard and symmetric
+///   across the job: if shard A requests a channel to peer B on layer L,
+///   shard B requests one to A on L (the torus is reciprocal).
+/// * `step()` advances exactly one simulation update and returns the
+///   messages to dispatch, keyed by index into `channels()`.
+/// * `absorb()` may be called any number of times (including zero) between
+///   steps — messages are best-effort: duplicated cadences, reordering
+///   across channels, and loss must all be tolerated.
+pub trait ShardWorkload {
+    /// Message payload exchanged between shards.
+    type Msg: Clone;
+
+    /// Outgoing channels this shard dispatches on.
+    fn channels(&self) -> Vec<ChannelSpec>;
+
+    /// Deliver pulled messages from channel `ch` (index into
+    /// `channels()`), oldest first.
+    fn absorb(&mut self, ch: usize, msgs: Vec<Self::Msg>);
+
+    /// Advance one simulation update; returns `(channel index, message)`
+    /// pairs to dispatch.
+    fn step(&mut self, rng: &mut Xoshiro256) -> Vec<(usize, Self::Msg)>;
+
+    /// Nominal single-update compute cost in nanoseconds (before node
+    /// speed, contention, jitter, and added synthetic work). Used by the
+    /// DES cost model; ignored by the real-thread executor.
+    fn step_cost_ns(&self) -> f64;
+
+    /// Current solution-quality figure. Graph coloring: local conflict
+    /// count (lower better). Digital evolution: mean cell resource
+    /// (higher better).
+    fn quality(&self) -> f64;
+}
+
+/// Offset distinguishing digital-evolution layer tags from graph
+/// coloring's bare direction tags (0..4). DE channels are tagged
+/// `DE_LAYER_BASE + dir * 5 + kind`.
+pub const DE_LAYER_BASE: usize = 100;
+
+/// The reciprocal of a channel's layer tag: the tag of the peer's channel
+/// pointing back at us (opposite direction, same layer kind). Executors
+/// use this to wire directed channel pairs.
+pub fn reciprocal_layer(layer: usize) -> usize {
+    if layer < 4 {
+        // Graph coloring: bare Dir index.
+        (layer + 2) % 4
+    } else {
+        debug_assert!(layer >= DE_LAYER_BASE, "unknown layer tag {layer}");
+        let l = layer - DE_LAYER_BASE;
+        let dir = l / 5;
+        let kind = l % 5;
+        DE_LAYER_BASE + ((dir + 2) % 4) * 5 + kind
+    }
+}
+
+#[cfg(test)]
+mod layer_tests {
+    use super::*;
+
+    #[test]
+    fn reciprocal_layer_is_an_involution() {
+        for l in 0..4 {
+            assert_eq!(reciprocal_layer(reciprocal_layer(l)), l);
+        }
+        for l in DE_LAYER_BASE..DE_LAYER_BASE + 20 {
+            assert_eq!(reciprocal_layer(reciprocal_layer(l)), l);
+        }
+    }
+
+    #[test]
+    fn gc_and_de_tags_never_collide() {
+        for l in 0..4 {
+            assert!(reciprocal_layer(l) < 4);
+        }
+        for l in DE_LAYER_BASE..DE_LAYER_BASE + 20 {
+            assert!(reciprocal_layer(l) >= DE_LAYER_BASE);
+        }
+    }
+}
+
+pub use graph_coloring::{GraphColoringShard, GcConfig, GcMsg};
+pub use hlo::{HloDishtinyShard, HloGraphColoringShard};
+pub use partition::TilePartition;
+pub use workunit::WorkUnitSpinner;

@@ -1,0 +1,195 @@
+//! Partitioning a global simulation torus into per-process tiles.
+//!
+//! The global simel grid (graph vertices or cells) is a torus of
+//! `(mesh_rows * tile_h) x (mesh_cols * tile_w)` elements, split into one
+//! `tile_h x tile_w` tile per process, arranged to match the process mesh
+//! of [`crate::net::Topology`]. Border elements interact with elements in
+//! the four adjacent tiles; interior elements interact only locally.
+
+/// One process's tile of the global torus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePartition {
+    /// Process mesh dimensions.
+    pub mesh_rows: usize,
+    pub mesh_cols: usize,
+    /// Tile dimensions (simels per process = tile_h * tile_w).
+    pub tile_h: usize,
+    pub tile_w: usize,
+}
+
+impl TilePartition {
+    /// Build a partition hosting `simels_per_proc` elements per process
+    /// on a `mesh_rows x mesh_cols` process mesh. The tile is the most
+    /// square factorization.
+    pub fn new(mesh_rows: usize, mesh_cols: usize, simels_per_proc: usize) -> Self {
+        let (tile_h, tile_w) = crate::net::topology::squarest_factors(simels_per_proc.max(1));
+        Self {
+            mesh_rows,
+            mesh_cols,
+            tile_h,
+            tile_w,
+        }
+    }
+
+    pub fn simels_per_proc(&self) -> usize {
+        self.tile_h * self.tile_w
+    }
+
+    pub fn global_dims(&self) -> (usize, usize) {
+        (self.mesh_rows * self.tile_h, self.mesh_cols * self.tile_w)
+    }
+
+    pub fn total_simels(&self) -> usize {
+        let (h, w) = self.global_dims();
+        h * w
+    }
+
+    /// Local index of tile cell (r, c), row-major.
+    pub fn local_index(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.tile_h && c < self.tile_w);
+        r * self.tile_w + c
+    }
+
+    /// Is a local element on the northern border (interacts with the tile
+    /// above)? Similarly east/south/west. On degenerate tiles (height or
+    /// width 1) an element can be on two opposite borders at once.
+    pub fn on_border(&self, r: usize, c: usize, dir: Dir) -> bool {
+        match dir {
+            Dir::North => r == 0,
+            Dir::East => c == self.tile_w - 1,
+            Dir::South => r == self.tile_h - 1,
+            Dir::West => c == 0,
+        }
+    }
+
+    /// Border length (number of simels pooled per message) toward `dir`.
+    pub fn border_len(&self, dir: Dir) -> usize {
+        match dir {
+            Dir::North | Dir::South => self.tile_w,
+            Dir::East | Dir::West => self.tile_h,
+        }
+    }
+
+    /// Local indices along the `dir` border, in pooling order (west→east
+    /// for horizontal borders, north→south for vertical borders).
+    pub fn border_indices(&self, dir: Dir) -> Vec<usize> {
+        match dir {
+            Dir::North => (0..self.tile_w).map(|c| self.local_index(0, c)).collect(),
+            Dir::South => (0..self.tile_w)
+                .map(|c| self.local_index(self.tile_h - 1, c))
+                .collect(),
+            Dir::West => (0..self.tile_h).map(|r| self.local_index(r, 0)).collect(),
+            Dir::East => (0..self.tile_h)
+                .map(|r| self.local_index(r, self.tile_w - 1))
+                .collect(),
+        }
+    }
+}
+
+/// Cardinal direction toward a neighboring tile. Order matches
+/// [`crate::net::Topology::neighbors4`]: N, E, S, W.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    North = 0,
+    East = 1,
+    South = 2,
+    West = 3,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::North, Dir::East, Dir::South, Dir::West];
+
+    /// The direction pointing back at us from the neighbor's perspective.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::East => Dir::West,
+            Dir::South => Dir::North,
+            Dir::West => Dir::East,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, prop_assert, Config};
+
+    #[test]
+    fn partition_dims() {
+        let p = TilePartition::new(8, 8, 2048);
+        assert_eq!((p.tile_h, p.tile_w), (32, 64));
+        assert_eq!(p.simels_per_proc(), 2048);
+        assert_eq!(p.global_dims(), (256, 512));
+        assert_eq!(p.total_simels(), 64 * 2048);
+    }
+
+    #[test]
+    fn single_simel_tile() {
+        let p = TilePartition::new(1, 2, 1);
+        assert_eq!(p.simels_per_proc(), 1);
+        // the lone element is on every border
+        for d in Dir::ALL {
+            assert!(p.on_border(0, 0, d));
+            assert_eq!(p.border_len(d), 1);
+            assert_eq!(p.border_indices(d), vec![0]);
+        }
+    }
+
+    #[test]
+    fn border_indices_cover_borders() {
+        let p = TilePartition::new(2, 2, 12); // 3x4 tile
+        assert_eq!(p.border_indices(Dir::North), vec![0, 1, 2, 3]);
+        assert_eq!(p.border_indices(Dir::South), vec![8, 9, 10, 11]);
+        assert_eq!(p.border_indices(Dir::West), vec![0, 4, 8]);
+        assert_eq!(p.border_indices(Dir::East), vec![3, 7, 11]);
+    }
+
+    #[test]
+    fn opposite_directions() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+        assert_eq!(Dir::North.opposite(), Dir::South);
+        assert_eq!(Dir::East.opposite(), Dir::West);
+    }
+
+    #[test]
+    fn prop_border_lengths_match_between_neighbors() {
+        // A tile's border toward dir must have the same length as the
+        // neighbor's border back toward us — pooled messages align.
+        forall(Config::default().cases(64), |g| {
+            let simels = g.usize_in(1, 4096);
+            let p = TilePartition::new(4, 4, simels);
+            for d in Dir::ALL {
+                prop_assert(
+                    p.border_len(d) == p.border_len(d.opposite()),
+                    format!("simels={simels} dir={d:?}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_local_indices_unique_and_in_range() {
+        forall(Config::default().cases(32), |g| {
+            let simels = g.usize_in(1, 1024);
+            let p = TilePartition::new(2, 2, simels);
+            let mut seen = vec![false; p.simels_per_proc()];
+            for r in 0..p.tile_h {
+                for c in 0..p.tile_w {
+                    let i = p.local_index(r, c);
+                    prop_assert(i < seen.len(), "index out of range")?;
+                    prop_assert(!seen[i], "duplicate index")?;
+                    seen[i] = true;
+                }
+            }
+            prop_assert(seen.iter().all(|&s| s), "not all indices covered")
+        });
+    }
+}

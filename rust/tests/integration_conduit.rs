@@ -1,0 +1,137 @@
+//! Conduit API integration across backends and helpers.
+
+use ebcomm::conduit::aggregation::Aggregator;
+use ebcomm::conduit::pooling::{unpool, Pool};
+use ebcomm::conduit::{
+    intra_duct, thread_duct, ChannelConfig, InletLike, OutletLike, SendOutcome,
+};
+use ebcomm::qos::{QosMetrics, QosObservation, TouchCounter};
+
+#[test]
+fn pooled_roundtrip_over_thread_duct() {
+    // The paper's graph-coloring messaging pattern: pool per-simel colors
+    // into one message per update, unpool on the far side.
+    let (inlet, outlet) = thread_duct::<Vec<u8>>(ChannelConfig::qos());
+    let mut pool = Pool::new(4);
+    for update in 0..10u8 {
+        for slot in 0..4 {
+            pool.fill(slot, update.wrapping_add(slot as u8));
+        }
+        inlet.put(pool.flush());
+    }
+    let batches = outlet.pull_all();
+    assert_eq!(batches.len(), 10);
+    let last = unpool(batches.last().unwrap().clone(), 4).unwrap();
+    assert_eq!(last, vec![9, 10, 11, 12]);
+}
+
+#[test]
+fn aggregated_roundtrip_over_intra_duct() {
+    // The digital-evolution spawn pattern: arbitrarily many packets
+    // aggregated into one batch per destination per cadence window.
+    let (inlet, outlet) = intra_duct::<Vec<u64>>(ChannelConfig::qos());
+    let mut agg = Aggregator::new(64);
+    for i in 0..20u64 {
+        agg.push((i % 3) as usize, i);
+    }
+    for (_dest, batch) in agg.flush() {
+        inlet.put(batch);
+    }
+    let received = outlet.pull_all();
+    assert_eq!(received.len(), 3);
+    let total: usize = received.iter().map(Vec::len).sum();
+    assert_eq!(total, 20);
+}
+
+#[test]
+fn touch_counter_protocol_measures_latency_over_real_ducts() {
+    // Two elements ping-ponging over a duct pair: after n round trips the
+    // touch counters read 2n, and the QoS estimator recovers ~1 update of
+    // latency per one-way trip.
+    let (in_ab, out_ab) = thread_duct::<u64>(ChannelConfig::qos());
+    let (in_ba, out_ba) = thread_duct::<u64>(ChannelConfig::qos());
+    let mut touch_a = TouchCounter::default();
+    let mut touch_b = TouchCounter::default();
+    let mut updates_a = 0u64;
+
+    for _ in 0..50 {
+        // A's simstep: pull, then send bundling its counter.
+        for bundled in out_ba.pull_all() {
+            touch_a.on_receive(bundled);
+        }
+        in_ab.put(touch_a.outgoing());
+        updates_a += 1;
+        // B's simstep.
+        for bundled in out_ab.pull_all() {
+            touch_b.on_receive(bundled);
+        }
+        in_ba.put(touch_b.outgoing());
+    }
+    // 50 updates; ~49 completed round trips => touch ~98.
+    assert!(touch_a.value() >= 96, "touch_a={}", touch_a.value());
+
+    let before = QosObservation::default();
+    let mut after = QosObservation::default();
+    after.update_count = updates_a;
+    after.wall_ns = 50_000;
+    after.counters.touches = touch_a.value();
+    let m = QosMetrics::from_window(&before, &after);
+    assert!(
+        (m.simstep_latency - 0.5).abs() < 0.1,
+        "round-trip-derived latency {} (2 touches/update => 0.5)",
+        m.simstep_latency
+    );
+}
+
+#[test]
+fn buffer_2_vs_64_drop_behaviour() {
+    // The paper's two configurations: benchmarking (2) drops under burst,
+    // QoS (64) absorbs it.
+    let burst = 40;
+    let (small_in, _small_out) = thread_duct::<u32>(ChannelConfig::benchmarking());
+    let (big_in, _big_out) = thread_duct::<u32>(ChannelConfig::qos());
+    let mut small_drops = 0;
+    let mut big_drops = 0;
+    for i in 0..burst {
+        if small_in.put(i) == SendOutcome::Dropped {
+            small_drops += 1;
+        }
+        if big_in.put(i) == SendOutcome::Dropped {
+            big_drops += 1;
+        }
+    }
+    assert_eq!(small_drops, burst - 2);
+    assert_eq!(big_drops, 0);
+}
+
+#[test]
+fn stats_survive_heavy_concurrency() {
+    let (inlet, outlet) = thread_duct::<u64>(ChannelConfig {
+        capacity: 8,
+        overflow: ebcomm::util::ring::Overflow::Reject,
+    });
+    let inlet = std::sync::Arc::new(inlet);
+    let mut writers = Vec::new();
+    for t in 0..4 {
+        let inlet = std::sync::Arc::clone(&inlet);
+        writers.push(std::thread::spawn(move || {
+            for i in 0..5_000u64 {
+                inlet.put(t * 10_000 + i);
+            }
+        }));
+    }
+    let mut received = 0u64;
+    while writers.iter().any(|w| !w.is_finished()) {
+        received += outlet.pull_all().len() as u64;
+    }
+    for w in writers {
+        w.join().unwrap();
+    }
+    received += outlet.pull_all().len() as u64;
+    let t = inlet.stats().tranche();
+    assert_eq!(t.attempted_sends, 20_000);
+    assert_eq!(t.successful_sends, received);
+    let o = outlet.stats().tranche();
+    assert_eq!(o.messages_received, received);
+    assert!(o.laden_pulls <= o.pull_attempts);
+}

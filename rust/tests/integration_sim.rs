@@ -1,0 +1,293 @@
+//! Cross-module simulation integration: engine + workloads + QoS + modes,
+//! plus DES-vs-real-thread cross-validation.
+
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::sim::{
+    healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SimConfig,
+};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{MILLI, SECOND};
+use ebcomm::workloads::dishtiny::{DeConfig, DishtinyShard};
+use ebcomm::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoringShard};
+
+fn gc_sim(
+    n_procs: usize,
+    simels: usize,
+    mode: AsyncMode,
+    run_for: u64,
+    seed: u64,
+    placement: PlacementKind,
+    backend: CommBackend,
+) -> ebcomm::sim::SimResult<GraphColoringShard> {
+    let topo = Topology::new(n_procs, placement);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..n_procs)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: simels,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+    cfg.seed = seed;
+    cfg.send_buffer = 64;
+    cfg.backend = backend;
+    let profiles = ebcomm::sim::heterogeneous_profiles(&topo, seed, 0.20);
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+#[test]
+fn all_five_modes_run_to_completion() {
+    for mode in AsyncMode::ALL {
+        let r = gc_sim(
+            4,
+            16,
+            mode,
+            40 * MILLI,
+            1,
+            PlacementKind::OnePerNode,
+            CommBackend::Mpi,
+        );
+        assert!(
+            r.updates.iter().all(|&u| u > 0),
+            "{}: updates={:?}",
+            mode.label(),
+            r.updates
+        );
+    }
+}
+
+#[test]
+fn mode_ordering_of_update_rates() {
+    // Less synchronization => more updates (modes 0 < {1,2} <= 3 <= 4),
+    // allowing slack for stochastic jitter.
+    let rates: Vec<f64> = AsyncMode::ALL
+        .iter()
+        .map(|&m| {
+            gc_sim(
+                8,
+                1,
+                m,
+                150 * MILLI,
+                7,
+                PlacementKind::OnePerNode,
+                CommBackend::Mpi,
+            )
+            .update_rate_per_cpu_hz()
+        })
+        .collect();
+    assert!(
+        rates[3] > 1.3 * rates[0],
+        "best-effort {} should beat sync {}",
+        rates[3],
+        rates[0]
+    );
+    assert!(rates[1] > rates[0], "rolling {} > sync {}", rates[1], rates[0]);
+    assert!(
+        rates[4] >= 0.9 * rates[3],
+        "no-comm {} >= best-effort {}",
+        rates[4],
+        rates[3]
+    );
+}
+
+#[test]
+fn solution_quality_improves_with_best_effort_over_sync() {
+    // Fixed virtual window sized so mode 0 is still mid-transient while
+    // mode 3's ~3x update advantage has pushed conflicts much lower
+    // (paper Fig. 3b). Aggregated over seeds: the solver is stochastic.
+    let topo = Topology::new(16, PlacementKind::OnePerNode);
+    let (mut sync_total, mut be_total) = (0usize, 0usize);
+    for seed in [3u64, 4, 5] {
+        let sync = gc_sim(
+            16,
+            256,
+            AsyncMode::Sync,
+            80 * MILLI,
+            seed,
+            PlacementKind::OnePerNode,
+            CommBackend::Mpi,
+        );
+        let be = gc_sim(
+            16,
+            256,
+            AsyncMode::BestEffort,
+            80 * MILLI,
+            seed,
+            PlacementKind::OnePerNode,
+            CommBackend::Mpi,
+        );
+        assert!(
+            be.updates.iter().sum::<u64>() as f64
+                > 1.5 * sync.updates.iter().sum::<u64>() as f64,
+            "best-effort must complete far more updates"
+        );
+        sync_total += global_conflicts(&topo, &sync.shards);
+        be_total += global_conflicts(&topo, &be.shards);
+    }
+    assert!(
+        be_total < sync_total,
+        "best-effort {be_total} vs sync {sync_total} (total over 3 seeds)"
+    );
+}
+
+#[test]
+fn internode_latency_exceeds_intranode() {
+    let mk = |placement| {
+        let topo = Topology::new(2, placement);
+        let mut rng = Xoshiro256::new(11);
+        let shards: Vec<_> = (0..2)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(2),
+            SECOND,
+        );
+        cfg.send_buffer = 64;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            300 * MILLI,
+            200 * MILLI,
+            100 * MILLI,
+            3,
+        ));
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards).run()
+    };
+    let intra = mk(PlacementKind::SingleNode);
+    let inter = mk(PlacementKind::OnePerNode);
+    let intra_lat = intra.qos.median(MetricName::WalltimeLatency);
+    let inter_lat = inter.qos.median(MetricName::WalltimeLatency);
+    assert!(
+        inter_lat > 5.0 * intra_lat,
+        "internode {inter_lat} should dwarf intranode {intra_lat} (paper ~50x)"
+    );
+}
+
+#[test]
+fn thread_backend_has_no_drops_proc_backend_does() {
+    let thread = gc_sim(
+        2,
+        1,
+        AsyncMode::BestEffort,
+        300 * MILLI,
+        5,
+        PlacementKind::SingleNode,
+        CommBackend::SharedMemory,
+    );
+    let process = gc_sim(
+        2,
+        1,
+        AsyncMode::BestEffort,
+        300 * MILLI,
+        5,
+        PlacementKind::SingleNode,
+        CommBackend::Mpi,
+    );
+    assert_eq!(
+        thread.overall_failure_rate(),
+        0.0,
+        "shared memory never drops (paper SIII-E.5)"
+    );
+    assert!(
+        process.overall_failure_rate() > 0.1,
+        "intranode MPI drops ~0.3 (paper SIII-D.5): {}",
+        process.overall_failure_rate()
+    );
+}
+
+#[test]
+fn digital_evolution_runs_under_engine_and_accrues_fitness() {
+    let topo = Topology::new(4, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(13);
+    let shards: Vec<_> = (0..4)
+        .map(|r| {
+            DishtinyShard::new(
+                DeConfig {
+                    cells_per_proc: 16,
+                    per_cell_cost_ns: 900.0,
+                    ..DeConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(
+        AsyncMode::BestEffort,
+        ModeTiming::digital_evolution(4),
+        100 * MILLI,
+    );
+    cfg.send_buffer = 64;
+    let profiles = healthy_profiles(&topo);
+    let result = Engine::new(cfg, topo, profiles, shards).run();
+    assert!(result.updates.iter().all(|&u| u > 100));
+    let fitness: f64 = result.shards.iter().map(|s| s.mean_resource()).sum();
+    assert!(fitness > 0.0);
+    assert!(result.attempted_sends > 0, "five DE layers must generate traffic");
+}
+
+#[test]
+fn des_and_real_threads_agree_on_convergence() {
+    // The same workload under the DES (virtual time) and the real-thread
+    // executor (mode 0, real barriers) must both solve the instance —
+    // cross-validation of the two execution paths.
+    use ebcomm::exec::threads::{run_threads, ThreadExecConfig};
+    use std::time::Duration;
+
+    let des = gc_sim(
+        2,
+        64,
+        AsyncMode::Sync,
+        SECOND,
+        21,
+        PlacementKind::SingleNode,
+        CommBackend::SharedMemory,
+    );
+    let topo = Topology::new(2, PlacementKind::SingleNode);
+    let des_conflicts = global_conflicts(&topo, &des.shards);
+
+    let mut rng = Xoshiro256::new(21);
+    let shards: Vec<_> = (0..2)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 64,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let real = run_threads(
+        ThreadExecConfig {
+            mode: AsyncMode::Sync,
+            run_for: Duration::from_millis(400),
+            ..Default::default()
+        },
+        shards,
+    );
+    let real_conflicts = global_conflicts(&topo, &real.shards);
+    assert!(des_conflicts <= 8, "DES: {des_conflicts}");
+    assert!(real_conflicts <= 8, "real threads: {real_conflicts}");
+}

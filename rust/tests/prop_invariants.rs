@@ -1,0 +1,255 @@
+//! Property-based tests on coordinator invariants: routing, batching,
+//! delivery accounting, and barrier semantics under randomized
+//! configurations (via the in-repo `testing::prop` framework).
+
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::testing::prop::{forall, prop_assert, Config};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::MILLI;
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+use ebcomm::workloads::{reciprocal_layer, ShardWorkload};
+
+fn run_gc(
+    n_procs: usize,
+    simels: usize,
+    mode: AsyncMode,
+    buffer: usize,
+    run_ms: u64,
+    seed: u64,
+    placement: PlacementKind,
+) -> ebcomm::sim::SimResult<GraphColoringShard> {
+    let topo = Topology::new(n_procs, placement);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..n_procs)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: simels,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_ms * MILLI);
+    cfg.seed = seed;
+    cfg.send_buffer = buffer;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+#[test]
+fn prop_delivery_accounting_never_exceeds_attempts() {
+    forall(Config::default().cases(24).seed(0xACC7), |g| {
+        let n_procs = *g.choose(&[1usize, 2, 4, 9, 16]);
+        let simels = *g.choose(&[1usize, 4, 16]);
+        let mode = AsyncMode::ALL[g.usize_in(0, 4)];
+        let buffer = g.usize_in(1, 64);
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let r = run_gc(
+            n_procs,
+            simels,
+            mode,
+            buffer,
+            20,
+            seed,
+            PlacementKind::OnePerNode,
+        );
+        prop_assert(
+            r.successful_sends <= r.attempted_sends,
+            format!(
+                "successful {} > attempted {}",
+                r.successful_sends, r.attempted_sends
+            ),
+        )?;
+        if mode == AsyncMode::NoComm {
+            prop_assert(r.attempted_sends == 0, "mode 4 must be silent")?;
+        }
+        prop_assert(
+            (0.0..=1.0).contains(&r.overall_failure_rate()),
+            "failure rate out of range",
+        )
+    });
+}
+
+#[test]
+fn prop_sync_mode_is_lockstep_for_any_topology() {
+    forall(Config::default().cases(16).seed(0x10C4), |g| {
+        let n_procs = g.usize_in(2, 12);
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let r = run_gc(
+            n_procs,
+            4,
+            AsyncMode::Sync,
+            8,
+            15,
+            seed,
+            PlacementKind::OnePerNode,
+        );
+        let min = r.updates.iter().min().unwrap();
+        let max = r.updates.iter().max().unwrap();
+        prop_assert(
+            max - min <= 1,
+            format!("sync lockstep violated: {:?}", r.updates),
+        )
+    });
+}
+
+#[test]
+fn prop_update_counts_positive_and_bounded_by_time() {
+    forall(Config::default().cases(16).seed(0xB0), |g| {
+        let n_procs = g.usize_in(1, 8);
+        let run_ms = g.u64_in(5, 40);
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let r = run_gc(
+            n_procs,
+            1,
+            AsyncMode::BestEffort,
+            64,
+            run_ms,
+            seed,
+            PlacementKind::OnePerNode,
+        );
+        // A 1-simel update costs >= ~3.5us of compute alone, so updates
+        // can never exceed run_for / base_cost.
+        let hard_cap = (run_ms * MILLI) as f64 / 3_000.0;
+        for &u in &r.updates {
+            prop_assert(u > 0, "zero updates")?;
+            prop_assert(
+                (u as f64) < hard_cap,
+                format!("updates {u} exceed physical cap {hard_cap}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_channel_routing_is_reciprocal_for_all_workloads() {
+    use ebcomm::workloads::dishtiny::{DeConfig, DishtinyShard};
+    forall(Config::default().cases(24).seed(0x51AB), |g| {
+        let n_procs = *g.choose(&[2usize, 4, 6, 9, 16, 25]);
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(g.u64_in(0, u64::MAX / 2));
+        let gc: Vec<_> = (0..n_procs)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 4,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let de: Vec<_> = (0..n_procs)
+            .map(|r| {
+                DishtinyShard::new(
+                    DeConfig {
+                        cells_per_proc: 4,
+                        ..DeConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let gc_specs: Vec<_> = gc.iter().map(|s| s.channels()).collect();
+        let de_specs: Vec<_> = de.iter().map(|s| s.channels()).collect();
+        for specs in [&gc_specs, &de_specs] {
+            for (rank, list) in specs.iter().enumerate() {
+                for spec in list {
+                    let found = specs[spec.peer]
+                        .iter()
+                        .any(|s| s.peer == rank && s.layer == reciprocal_layer(spec.layer));
+                    prop_assert(
+                        found,
+                        format!("rank {rank} spec {spec:?} lacks reciprocal"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism_across_identical_configs() {
+    forall(Config::default().cases(8).seed(0xDE70), |g| {
+        let n_procs = g.usize_in(1, 6);
+        let mode = AsyncMode::ALL[g.usize_in(0, 4)];
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let a = run_gc(n_procs, 4, mode, 8, 15, seed, PlacementKind::OnePerNode);
+        let b = run_gc(n_procs, 4, mode, 8, 15, seed, PlacementKind::OnePerNode);
+        prop_assert(a.updates == b.updates, "update counts diverged")?;
+        prop_assert(
+            a.attempted_sends == b.attempted_sends
+                && a.successful_sends == b.successful_sends,
+            "send accounting diverged",
+        )?;
+        let ca: Vec<u8> = a.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        let cb: Vec<u8> = b.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        prop_assert(ca == cb, "final state diverged")
+    });
+}
+
+#[test]
+fn prop_qos_metrics_in_range_for_random_windows() {
+    use ebcomm::qos::SnapshotSchedule;
+    forall(Config::default().cases(10).seed(0x905), |g| {
+        let n_procs = *g.choose(&[2usize, 4]);
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let shards: Vec<_> = (0..n_procs)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(n_procs),
+            120 * MILLI,
+        );
+        cfg.seed = seed;
+        cfg.send_buffer = 64;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            30 * MILLI,
+            30 * MILLI,
+            10 * MILLI,
+            3,
+        ));
+        let r = Engine::new(cfg, topo.clone(), healthy_profiles(&topo), shards).run();
+        prop_assert(!r.qos.snapshots.is_empty(), "no snapshots collected")?;
+        for m in &r.qos.snapshots {
+            prop_assert(
+                (0.0..=1.0).contains(&m.delivery_failure_rate),
+                format!("failure rate {}", m.delivery_failure_rate),
+            )?;
+            prop_assert(
+                (0.0..=1.0).contains(&m.delivery_clumpiness),
+                format!("clumpiness {}", m.delivery_clumpiness),
+            )?;
+            prop_assert(m.simstep_period_ns > 0.0, "period <= 0")?;
+            prop_assert(
+                m.simstep_latency >= 0.0 && m.walltime_latency_ns >= 0.0,
+                "negative latency",
+            )?;
+        }
+        Ok(())
+    });
+}
