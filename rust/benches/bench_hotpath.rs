@@ -3,13 +3,26 @@
 //! Criterion is unavailable offline, so this is a self-contained harness:
 //! warmup + N timed iterations, reporting mean/median/p95 per operation.
 //! Covers the L3 hot paths (duct ops, workload steps, DES event
-//! throughput) and the PJRT dispatch path.
+//! throughput), the parallel sweep runner, and the PJRT dispatch path.
+//!
+//! Pass `--json` (or set `EBCOMM_BENCH_JSON=1`) to also write
+//! `BENCH_hotpath.json` at the repository root — the perf-regression
+//! baseline future changes are measured against:
+//!
+//! ```sh
+//! cargo bench --bench bench_hotpath -- --json
+//! ```
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use ebcomm::conduit::{thread_duct, ChannelConfig, InletLike, OutletLike};
+use ebcomm::coordinator::{
+    run_benchmark_serial, run_benchmark_with_workers, BenchmarkExperiment,
+};
 use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::util::parallel::default_workers;
 use ebcomm::util::rng::{Rng, Xoshiro256};
 use ebcomm::util::{fmt_ns, MILLI};
 use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
@@ -37,19 +50,137 @@ fn time_batched(
     samples
 }
 
-fn report(name: &str, samples: &[f64]) {
-    let mean = ebcomm::stats::mean(samples);
-    let med = ebcomm::stats::median(samples);
-    let p95 = ebcomm::stats::quantile(samples, 0.95);
-    println!(
-        "{name:<44} mean {:>10}  median {:>10}  p95 {:>10}",
-        fmt_ns(mean),
-        fmt_ns(med),
-        fmt_ns(p95)
+/// One recorded measurement (summary statistics over per-op samples).
+struct Entry {
+    name: String,
+    unit: &'static str,
+    mean: f64,
+    median: f64,
+    p95: f64,
+}
+
+/// Prints results as they arrive and accumulates them for `--json`.
+#[derive(Default)]
+struct Recorder {
+    entries: Vec<Entry>,
+}
+
+impl Recorder {
+    /// Record nanosecond-per-op samples (the common case).
+    fn report(&mut self, name: &str, samples: &[f64]) {
+        let mean = ebcomm::stats::mean(samples);
+        let med = ebcomm::stats::median(samples);
+        let p95 = ebcomm::stats::quantile(samples, 0.95);
+        println!(
+            "{name:<44} mean {:>10}  median {:>10}  p95 {:>10}",
+            fmt_ns(mean),
+            fmt_ns(med),
+            fmt_ns(p95)
+        );
+        self.push(name, "ns", mean, med, p95);
+    }
+
+    /// Record samples in an arbitrary unit (throughputs, speedups).
+    fn report_value(&mut self, name: &str, unit: &'static str, samples: &[f64]) {
+        let mean = ebcomm::stats::mean(samples);
+        let med = ebcomm::stats::median(samples);
+        let p95 = ebcomm::stats::quantile(samples, 0.95);
+        println!("{name:<44} mean {mean:>10.1} {unit}");
+        self.push(name, unit, mean, med, p95);
+    }
+
+    fn push(&mut self, name: &str, unit: &'static str, mean: f64, median: f64, p95: f64) {
+        self.entries.push(Entry {
+            name: name.to_string(),
+            unit,
+            mean,
+            median,
+            p95,
+        });
+    }
+
+    /// Serialize every entry to `BENCH_hotpath.json` at the repo root
+    /// (one level above the crate manifest).
+    fn write_json(&self) -> std::io::Result<PathBuf> {
+        let root = std::env::var("CARGO_MANIFEST_DIR")
+            .map(|d| PathBuf::from(d).join(".."))
+            .unwrap_or_else(|_| PathBuf::from("."));
+        let path = root.join("BENCH_hotpath.json");
+        let mut out = String::from("{\n  \"bench\": \"bench_hotpath\",\n  \"schema\": 1,\n  \"results\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"unit\": \"{}\", \"mean\": {}, \"median\": {}, \"p95\": {}}}{sep}\n",
+                json_string(&e.name),
+                e.unit,
+                json_number(e.mean),
+                json_number(e.median),
+                json_number(e.p95),
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_number(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Build the standard 16-proc best-effort DES workload (1 simel/CPU —
+/// communication-dominated, so this times the engine, not the solver).
+fn des_16p_run() -> ebcomm::sim::SimResult<GraphColoringShard> {
+    let topo = Topology::new(16, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(3);
+    let shards: Vec<_> = (0..16)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(
+        AsyncMode::BestEffort,
+        ModeTiming::graph_coloring(16),
+        100 * MILLI,
     );
+    cfg.send_buffer = 64;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards).run()
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json")
+        || std::env::var("EBCOMM_BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let mut rec = Recorder::default();
+
     println!("== L3 hot-path microbenchmarks ==");
 
     // Duct send+pull round trip.
@@ -61,7 +192,7 @@ fn main() {
             i = i.wrapping_add(1);
             std::hint::black_box(outlet.pull_all());
         });
-        report("thread duct put + pull_all (1 msg)", &s);
+        rec.report("thread duct put + pull_all (1 msg)", &s);
     }
 
     // Pooled-message duct traffic (64-entry border pools).
@@ -72,7 +203,7 @@ fn main() {
             inlet.put(msg.clone());
             std::hint::black_box(outlet.pull_all());
         });
-        report("thread duct put + pull_all (64B pooled)", &s);
+        rec.report("thread duct put + pull_all (64B pooled)", &s);
     }
 
     // Graph-coloring step, QoS geometry (1 simel).
@@ -91,7 +222,7 @@ fn main() {
         let s = time_batched(5_000, 50, 5_000, || {
             std::hint::black_box(shard.step(&mut rng));
         });
-        report("GC shard step (1 simel)", &s);
+        rec.report("GC shard step (1 simel)", &s);
     }
 
     // Graph-coloring step, benchmark geometry (2048 simels).
@@ -110,68 +241,68 @@ fn main() {
         let s = time_batched(20, 30, 50, || {
             std::hint::black_box(shard.step(&mut rng));
         });
-        report("GC shard step (2048 simels)", &s);
+        rec.report("GC shard step (2048 simels)", &s);
     }
 
-    // DES event throughput: 16-proc best-effort run, events/second.
+    // DES hot loop: event throughput of the engine itself — the metric
+    // the occupancy/scratch-buffer/stats rewrites target. Each run
+    // simulates ~16 procs x ~10k simsteps of pull/compute/send/schedule.
+    println!("== DES hot loop ==");
     {
-        let s = time_batched(0, 5, 1, || {
-            let topo = Topology::new(16, PlacementKind::OnePerNode);
-            let mut rng = Xoshiro256::new(3);
-            let shards: Vec<_> = (0..16)
-                .map(|r| {
-                    GraphColoringShard::new(
-                        GcConfig {
-                            simels_per_proc: 1,
-                            ..GcConfig::default()
-                        },
-                        &topo,
-                        r,
-                        &mut rng,
-                    )
-                })
-                .collect();
-            let mut cfg = SimConfig::new(
-                AsyncMode::BestEffort,
-                ModeTiming::graph_coloring(16),
-                100 * MILLI,
-            );
-            cfg.send_buffer = 64;
-            let profiles = healthy_profiles(&topo);
-            let result = Engine::new(cfg, topo, profiles, shards).run();
+        let mut total_updates = 0u64;
+        let s = time_batched(1, 5, 1, || {
+            let result = des_16p_run();
+            // Deterministic workload: every run yields the same count.
+            total_updates = result.updates.iter().sum();
             std::hint::black_box(result.updates);
         });
-        // Each run simulates ~16 procs x ~10k updates.
-        let topo = Topology::new(16, PlacementKind::OnePerNode);
-        let mut rng = Xoshiro256::new(3);
-        let shards: Vec<_> = (0..16)
-            .map(|r| {
-                GraphColoringShard::new(
-                    GcConfig {
-                        simels_per_proc: 1,
-                        ..GcConfig::default()
-                    },
-                    &topo,
-                    r,
-                    &mut rng,
-                )
-            })
+        rec.report("DES hot loop (16p, 100ms virtual)", &s);
+        let throughput: Vec<f64> = s
+            .iter()
+            .map(|&wall_ns| total_updates as f64 / (wall_ns / 1e9))
             .collect();
-        let mut cfg = SimConfig::new(
-            AsyncMode::BestEffort,
-            ModeTiming::graph_coloring(16),
-            100 * MILLI,
+        rec.report_value(
+            "DES hot loop simstep throughput",
+            "simsteps_per_sec",
+            &throughput,
         );
-        cfg.send_buffer = 64;
-        let profiles = healthy_profiles(&topo);
-        let result = Engine::new(cfg, topo, profiles, shards).run();
-        let total_updates: u64 = result.updates.iter().sum();
-        let wall_per_run = ebcomm::stats::mean(&s);
-        let updates_per_sec = total_updates as f64 / (wall_per_run / 1e9);
-        report("DES end-to-end run (16p, 100ms virtual)", &s);
-        println!(
-            "{:<44} {:>10.0} simsteps/s wall ({} simsteps/run)",
-            "DES simstep throughput", updates_per_sec, total_updates
+    }
+
+    // Parallel replicate sweeps: a 256-proc best-effort sweep cellwise
+    // over the scoped worker pool vs. the serial reference path. The
+    // results must be identical; only the wall clock may differ.
+    println!("== parallel replicate sweeps (256 procs) ==");
+    {
+        let mut exp = BenchmarkExperiment::fig3_multiprocess_gc();
+        exp.cpu_counts = vec![256];
+        exp.modes = vec![AsyncMode::BestEffort];
+        exp.replicates = 8;
+        exp.run_for = 25 * MILLI;
+        exp.simels_per_cpu = 1;
+        exp.cost_scale = 1.0;
+
+        let t = Instant::now();
+        let serial = run_benchmark_serial(&exp);
+        let serial_ns = t.elapsed().as_nanos() as f64;
+
+        let workers = default_workers();
+        let t = Instant::now();
+        let parallel = run_benchmark_with_workers(&exp, workers);
+        let parallel_ns = t.elapsed().as_nanos() as f64;
+
+        assert_eq!(
+            serial, parallel,
+            "parallel sweep diverged from serial reference"
+        );
+        rec.report("256-proc sweep, serial (8 replicates)", &[serial_ns]);
+        rec.report(
+            &format!("256-proc sweep, parallel ({workers} workers)"),
+            &[parallel_ns],
+        );
+        rec.report_value(
+            "256-proc sweep parallel speedup",
+            "x",
+            &[serial_ns / parallel_ns.max(1.0)],
         );
     }
 
@@ -183,27 +314,38 @@ fn main() {
             Ok(manifest) => {
                 let rt = RuntimeClient::cpu().unwrap();
                 let spec = manifest.require("gc_update_8x8").unwrap();
-                let kernel = rt.load_hlo_text("gc_update_8x8", &spec.file).unwrap();
-                let mut rng = Xoshiro256::new(4);
-                let colors: Vec<i32> = (0..64).map(|_| rng.below(3) as i32).collect();
-                let probs: Vec<f32> = vec![1.0 / 3.0; 64 * 3];
-                let u: Vec<f32> = (0..64).map(|_| rng.next_f64() as f32).collect();
-                let ghost: Vec<i32> = vec![-1; 8];
-                let inputs = [
-                    HostTensor::i32(vec![0], &[1]),
-                    HostTensor::i32(colors, &[8, 8]),
-                    HostTensor::f32(probs, &[8, 8, 3]),
-                    HostTensor::f32(u, &[8, 8]),
-                    HostTensor::i32(ghost.clone(), &[8]),
-                    HostTensor::i32(ghost.clone(), &[8]),
-                    HostTensor::i32(ghost.clone(), &[8]),
-                    HostTensor::i32(ghost, &[8]),
-                ];
-                let s = time_batched(20, 30, 50, || {
-                    std::hint::black_box(kernel.run(&inputs).unwrap());
-                });
-                report("PJRT dispatch gc_update_8x8 (end to end)", &s);
+                match rt.load_hlo_text("gc_update_8x8", &spec.file) {
+                    Err(e) => println!("PJRT dispatch bench skipped: {e:#}"),
+                    Ok(kernel) => {
+                        let mut rng = Xoshiro256::new(4);
+                        let colors: Vec<i32> = (0..64).map(|_| rng.below(3) as i32).collect();
+                        let probs: Vec<f32> = vec![1.0 / 3.0; 64 * 3];
+                        let u: Vec<f32> = (0..64).map(|_| rng.next_f64() as f32).collect();
+                        let ghost: Vec<i32> = vec![-1; 8];
+                        let inputs = [
+                            HostTensor::i32(vec![0], &[1]),
+                            HostTensor::i32(colors, &[8, 8]),
+                            HostTensor::f32(probs, &[8, 8, 3]),
+                            HostTensor::f32(u, &[8, 8]),
+                            HostTensor::i32(ghost.clone(), &[8]),
+                            HostTensor::i32(ghost.clone(), &[8]),
+                            HostTensor::i32(ghost.clone(), &[8]),
+                            HostTensor::i32(ghost, &[8]),
+                        ];
+                        let s = time_batched(20, 30, 50, || {
+                            std::hint::black_box(kernel.run(&inputs).unwrap());
+                        });
+                        rec.report("PJRT dispatch gc_update_8x8 (end to end)", &s);
+                    }
+                }
             }
+        }
+    }
+
+    if json {
+        match rec.write_json() {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("failed to write BENCH_hotpath.json: {e}"),
         }
     }
 }

@@ -30,7 +30,7 @@ pub mod pooling;
 pub mod stats;
 pub mod thread;
 
-pub use stats::{ChannelStats, CounterTranche};
+pub use stats::{ChannelStats, CounterTranche, LocalChannelStats, StatsSink};
 
 use crate::util::ring::Overflow;
 

@@ -92,14 +92,40 @@ impl<T> OutletLike<T> for ThreadOutlet<T> {
     }
 }
 
-// Explicit Send/Sync: endpoints move across threads; the Mutex guards T.
-unsafe impl<T: Send> Send for ThreadInlet<T> {}
-unsafe impl<T: Send> Send for ThreadOutlet<T> {}
+// No manual Send/Sync impls: `Arc<Mutex<RingBuffer<T>>>` already derives
+// `Send + Sync` for `T: Send`, and the former `unsafe impl Send`s omitted
+// `Sync`, blocking shared-reference use of endpoints across threads.
+// (Compile-time regression guard below.)
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testing::prop::{forall, prop_assert, Config};
+
+    #[test]
+    fn endpoints_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ThreadInlet<u64>>();
+        assert_send_sync::<ThreadOutlet<u64>>();
+        assert_send_sync::<ThreadInlet<Vec<u8>>>();
+        assert_send_sync::<ThreadOutlet<Vec<u8>>>();
+    }
+
+    #[test]
+    fn shared_reference_use_across_threads() {
+        // `&ThreadInlet` usable from a scoped thread: requires `Sync`,
+        // which the deleted `unsafe impl Send`s never provided.
+        let (inlet, outlet) = thread_duct::<u64>(ChannelConfig::qos());
+        let inlet_ref = &inlet;
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for i in 0..8 {
+                    inlet_ref.put(i);
+                }
+            });
+        });
+        assert_eq!(outlet.pull_all().len(), 8);
+    }
 
     #[test]
     fn roundtrip_preserves_order() {

@@ -6,4 +6,7 @@ pub mod report;
 pub mod runner;
 
 pub use experiment::{BenchmarkExperiment, QosExperiment, Workload};
-pub use runner::{run_benchmark, run_qos};
+pub use runner::{
+    run_benchmark, run_benchmark_serial, run_benchmark_with_workers, run_qos,
+    run_qos_with_workers,
+};

@@ -1,8 +1,16 @@
 //! Replicate sweeps: turn experiment definitions into measured results.
+//!
+//! Every (mode, CPU count, replicate) sweep cell is independently seeded,
+//! so sweeps fan out over a scoped worker pool
+//! ([`crate::util::parallel`]) and use all host cores by default. Results
+//! are assembled in grid order, so parallel and serial sweeps produce
+//! identical `BenchmarkResults`/`QosResults` — guaranteed by tests below
+//! and in `rust/tests/integration_sim.rs`.
 
 use crate::net::{NodeProfile, Topology};
 use crate::qos::{MetricName, ReplicateQos};
 use crate::sim::{healthy_profiles, heterogeneous_profiles, AsyncMode, Engine, SimConfig, SimResult};
+use crate::util::parallel::{default_workers, parallel_map};
 use crate::util::rng::Xoshiro256;
 use crate::util::Nanos;
 use crate::workloads::dishtiny::{DeConfig, DishtinyShard};
@@ -11,7 +19,7 @@ use crate::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoring
 use super::experiment::{BenchmarkExperiment, QosExperiment, Workload};
 
 /// One benchmark measurement.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BenchmarkPoint {
     pub mode: AsyncMode,
     pub n_cpus: usize,
@@ -26,7 +34,7 @@ pub struct BenchmarkPoint {
 }
 
 /// All points from one benchmark experiment.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct BenchmarkResults {
     pub points: Vec<BenchmarkPoint>,
 }
@@ -68,59 +76,83 @@ fn sim_config(
     cfg
 }
 
-/// Run a full benchmark experiment (every mode × CPU count × replicate).
+/// Simulate one benchmark sweep cell. Entirely self-seeded from
+/// `(exp.seed, mode, n_cpus, replicate)`, so cells can run on any worker
+/// in any order.
+fn run_benchmark_cell(
+    exp: &BenchmarkExperiment,
+    mode: AsyncMode,
+    n_cpus: usize,
+    rep: usize,
+) -> BenchmarkPoint {
+    let cfg = sim_config(exp, mode, n_cpus, rep);
+    let topo = Topology::new(n_cpus, exp.placement());
+    // Heterogeneous node speeds (paper SII-F1) drive the straggler
+    // effects the benchmarks measure.
+    let profiles = heterogeneous_profiles(&topo, cfg.seed, 0.20);
+    match exp.workload {
+        Workload::GraphColoring => {
+            let gc_cfg = GcConfig {
+                simels_per_proc: exp.simels_per_cpu,
+                per_simel_cost_ns: GcConfig::default().per_simel_cost_ns * exp.cost_scale,
+                ..GcConfig::default()
+            };
+            let mut rng = Xoshiro256::new(cfg.seed ^ 0xC0105);
+            let shards: Vec<_> = (0..n_cpus)
+                .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+                .collect();
+            let result = Engine::new(cfg, topo.clone(), profiles, shards).run();
+            let conflicts = global_conflicts(&topo, &result.shards) as f64;
+            point_from(&result, mode, n_cpus, rep, conflicts)
+        }
+        Workload::DigitalEvolution => {
+            let de_cfg = DeConfig {
+                cells_per_proc: exp.simels_per_cpu,
+                per_cell_cost_ns: DeConfig::default().per_cell_cost_ns * exp.cost_scale,
+                ..DeConfig::default()
+            };
+            let mut rng = Xoshiro256::new(cfg.seed ^ 0xD15);
+            let shards: Vec<_> = (0..n_cpus)
+                .map(|r| DishtinyShard::new(de_cfg, &topo, r, &mut rng))
+                .collect();
+            let result = Engine::new(cfg, topo, profiles, shards).run();
+            let fitness = result.shards.iter().map(|s| s.mean_resource()).sum::<f64>()
+                / result.shards.len() as f64;
+            point_from(&result, mode, n_cpus, rep, fitness)
+        }
+    }
+}
+
+/// Run a full benchmark experiment (every mode × CPU count × replicate)
+/// on all host cores (`EBCOMM_WORKERS` overrides).
 pub fn run_benchmark(exp: &BenchmarkExperiment) -> BenchmarkResults {
-    let mut results = BenchmarkResults::default();
+    run_benchmark_with_workers(exp, default_workers())
+}
+
+/// [`run_benchmark`] on one thread — the serial reference path.
+pub fn run_benchmark_serial(exp: &BenchmarkExperiment) -> BenchmarkResults {
+    run_benchmark_with_workers(exp, 1)
+}
+
+/// Run a benchmark experiment on up to `workers` threads. Points come
+/// back in grid order (cpu count, then mode, then replicate) whatever
+/// the worker count — results are bit-identical across worker counts.
+pub fn run_benchmark_with_workers(
+    exp: &BenchmarkExperiment,
+    workers: usize,
+) -> BenchmarkResults {
+    let mut cells: Vec<(usize, AsyncMode, usize)> = Vec::new();
     for &n_cpus in &exp.cpu_counts {
         for &mode in &exp.modes {
             for rep in 0..exp.replicates {
-                let cfg = sim_config(exp, mode, n_cpus, rep);
-                let topo = Topology::new(n_cpus, exp.placement());
-                // Heterogeneous node speeds (paper SII-F1) drive the
-                // straggler effects the benchmarks measure.
-                let profiles = heterogeneous_profiles(&topo, cfg.seed, 0.20);
-                let point = match exp.workload {
-                    Workload::GraphColoring => {
-                        let gc_cfg = GcConfig {
-                            simels_per_proc: exp.simels_per_cpu,
-                            per_simel_cost_ns: GcConfig::default().per_simel_cost_ns
-                                * exp.cost_scale,
-                            ..GcConfig::default()
-                        };
-                        let mut rng = Xoshiro256::new(cfg.seed ^ 0xC0105);
-                        let shards: Vec<_> = (0..n_cpus)
-                            .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
-                            .collect();
-                        let result = Engine::new(cfg, topo.clone(), profiles, shards).run();
-                        let conflicts = global_conflicts(&topo, &result.shards) as f64;
-                        point_from(&result, mode, n_cpus, rep, conflicts)
-                    }
-                    Workload::DigitalEvolution => {
-                        let de_cfg = DeConfig {
-                            cells_per_proc: exp.simels_per_cpu,
-                            per_cell_cost_ns: DeConfig::default().per_cell_cost_ns
-                                * exp.cost_scale,
-                            ..DeConfig::default()
-                        };
-                        let mut rng = Xoshiro256::new(cfg.seed ^ 0xD15);
-                        let shards: Vec<_> = (0..n_cpus)
-                            .map(|r| DishtinyShard::new(de_cfg, &topo, r, &mut rng))
-                            .collect();
-                        let result = Engine::new(cfg, topo, profiles, shards).run();
-                        let fitness = result
-                            .shards
-                            .iter()
-                            .map(|s| s.mean_resource())
-                            .sum::<f64>()
-                            / result.shards.len() as f64;
-                        point_from(&result, mode, n_cpus, rep, fitness)
-                    }
-                };
-                results.points.push(point);
+                cells.push((n_cpus, mode, rep));
             }
         }
     }
-    results
+    let points = parallel_map(workers, &cells, |&(n_cpus, mode, rep)| {
+        run_benchmark_cell(exp, mode, n_cpus, rep)
+    });
+    BenchmarkResults { points }
 }
 
 fn point_from<W>(
@@ -141,7 +173,7 @@ fn point_from<W>(
 }
 
 /// QoS measurements from one replicate.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QosReplicate {
     pub replicate: usize,
     pub qos: ReplicateQos,
@@ -150,7 +182,7 @@ pub struct QosReplicate {
 }
 
 /// All replicates of one QoS experiment.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct QosResults {
     pub replicates: Vec<QosReplicate>,
 }
@@ -178,43 +210,53 @@ impl QosResults {
     }
 }
 
-/// Run a QoS experiment's replicates.
-pub fn run_qos(exp: &QosExperiment) -> QosResults {
-    let mut out = QosResults::default();
-    for rep in 0..exp.replicates {
-        let topo = Topology::new(exp.n_procs, exp.placement);
-        let mut profiles = healthy_profiles(&topo);
-        if let Some(node) = exp.faulty_node {
-            if node < profiles.len() {
-                profiles[node] = NodeProfile::faulty_lac417();
-            }
+/// Simulate one QoS replicate (self-seeded, any worker, any order).
+fn run_qos_replicate(exp: &QosExperiment, rep: usize) -> QosReplicate {
+    let topo = Topology::new(exp.n_procs, exp.placement);
+    let mut profiles = healthy_profiles(&topo);
+    if let Some(node) = exp.faulty_node {
+        if node < profiles.len() {
+            profiles[node] = NodeProfile::faulty_lac417();
         }
-        let timing = crate::sim::ModeTiming::graph_coloring(exp.n_procs);
-        let mut cfg = SimConfig::new(AsyncMode::BestEffort, timing, exp.run_for);
-        cfg.backend = exp.backend;
-        cfg.seed = exp.seed.wrapping_add((rep as u64) << 24);
-        cfg.send_buffer = exp.send_buffer;
-        cfg.added_work_units = exp.added_work_units;
-        cfg.snapshots = Some(exp.schedule);
-
-        let gc_cfg = GcConfig {
-            simels_per_proc: exp.simels_per_cpu,
-            per_simel_cost_ns: GcConfig::default().per_simel_cost_ns * exp.cost_scale,
-            ..GcConfig::default()
-        };
-        let mut rng = Xoshiro256::new(cfg.seed ^ 0x905);
-        let shards: Vec<_> = (0..exp.n_procs)
-            .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
-            .collect();
-        let result = Engine::new(cfg, topo, profiles, shards).run();
-        out.replicates.push(QosReplicate {
-            replicate: rep,
-            qos: result.qos,
-            updates: result.updates,
-            run_for: result.run_for,
-        });
     }
-    out
+    let timing = crate::sim::ModeTiming::graph_coloring(exp.n_procs);
+    let mut cfg = SimConfig::new(AsyncMode::BestEffort, timing, exp.run_for);
+    cfg.backend = exp.backend;
+    cfg.seed = exp.seed.wrapping_add((rep as u64) << 24);
+    cfg.send_buffer = exp.send_buffer;
+    cfg.added_work_units = exp.added_work_units;
+    cfg.snapshots = Some(exp.schedule);
+
+    let gc_cfg = GcConfig {
+        simels_per_proc: exp.simels_per_cpu,
+        per_simel_cost_ns: GcConfig::default().per_simel_cost_ns * exp.cost_scale,
+        ..GcConfig::default()
+    };
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0x905);
+    let shards: Vec<_> = (0..exp.n_procs)
+        .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+        .collect();
+    let result = Engine::new(cfg, topo, profiles, shards).run();
+    QosReplicate {
+        replicate: rep,
+        qos: result.qos,
+        updates: result.updates,
+        run_for: result.run_for,
+    }
+}
+
+/// Run a QoS experiment's replicates on all host cores
+/// (`EBCOMM_WORKERS` overrides).
+pub fn run_qos(exp: &QosExperiment) -> QosResults {
+    run_qos_with_workers(exp, default_workers())
+}
+
+/// [`run_qos`] on up to `workers` threads; replicates come back in
+/// replicate order, bit-identical across worker counts.
+pub fn run_qos_with_workers(exp: &QosExperiment, workers: usize) -> QosResults {
+    let reps: Vec<usize> = (0..exp.replicates).collect();
+    let replicates = parallel_map(workers, &reps, |&rep| run_qos_replicate(exp, rep));
+    QosResults { replicates }
 }
 
 #[cfg(test)]
@@ -264,6 +306,35 @@ mod tests {
         assert_eq!(res.points.len(), 8);
         // resource accrues
         assert!(res.points.iter().any(|p| p.quality > 0.0));
+    }
+
+    #[test]
+    fn parallel_benchmark_sweep_is_bitwise_identical_to_serial() {
+        let exp = tiny_benchmark(Workload::GraphColoring);
+        let serial = run_benchmark_serial(&exp);
+        let parallel = run_benchmark_with_workers(&exp, 4);
+        // Full structural equality, including every f64 bit pattern:
+        // cells are independently seeded, so worker count must be
+        // invisible in the results.
+        assert_eq!(serial, parallel);
+        let more = run_benchmark_with_workers(&exp, 16);
+        assert_eq!(serial, more);
+    }
+
+    #[test]
+    fn parallel_qos_sweep_is_bitwise_identical_to_serial() {
+        let mut exp = QosExperiment::internode();
+        exp.replicates = 3;
+        exp.schedule =
+            crate::qos::SnapshotSchedule::compressed(100 * MILLI, 100 * MILLI, 30 * MILLI, 2);
+        exp.run_for = 300 * MILLI;
+        let serial = run_qos_with_workers(&exp, 1);
+        let parallel = run_qos_with_workers(&exp, 3);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.replicates.len(), 3);
+        for (i, r) in serial.replicates.iter().enumerate() {
+            assert_eq!(r.replicate, i, "replicate order must be deterministic");
+        }
     }
 
     #[test]

@@ -190,6 +190,8 @@ where
     let mut chunk_start = Instant::now();
     let mut next_fixed = Instant::now() + cfg.fixed_epoch;
     let communicate = cfg.mode.communicates();
+    // Reused across channels and iterations (absorb drains it).
+    let mut pull_scratch: Vec<W::Msg> = Vec::new();
 
     loop {
         // Pull/absorb phase.
@@ -201,7 +203,9 @@ where
                 }
                 let max_touch = envs.iter().map(|e| e.touch).max().unwrap();
                 touch[ch].on_receive(max_touch);
-                shard.absorb(ch, envs.into_iter().map(|e| e.payload).collect());
+                pull_scratch.clear();
+                pull_scratch.extend(envs.into_iter().map(|e| e.payload));
+                shard.absorb(ch, &mut pull_scratch);
             }
         }
 

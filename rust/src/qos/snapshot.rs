@@ -94,7 +94,7 @@ impl SnapshotWindow {
 
 /// All snapshots collected from one replicate run, flattened across
 /// processes/channels/timepoints.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ReplicateQos {
     pub snapshots: Vec<QosMetrics>,
 }

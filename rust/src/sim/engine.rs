@@ -21,11 +21,10 @@
 //!   cost growing logarithmically in process count.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
-use std::sync::Arc;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use super::modes::{AsyncMode, ModeTiming};
-use crate::conduit::{ChannelStats, SendOutcome};
+use crate::conduit::{LocalChannelStats, SendOutcome, StatsSink};
 use crate::net::{LinkModel, NodeProfile, Topology};
 #[cfg(test)]
 use crate::net::PlacementKind;
@@ -162,20 +161,46 @@ struct SimChannel<M> {
     extra_drop: f64,
     last_depart: Nanos,
     last_arrival: Nanos,
+    /// In-flight envelopes in push order. Departure times are monotone
+    /// non-decreasing front to back (each departure is scheduled at
+    /// `now.max(last_depart + service)`), which is what makes O(1)
+    /// occupancy tracking below sound.
     queue: VecDeque<Envelope<M>>,
-    stats: Arc<ChannelStats>,
+    /// Envelopes ever accepted into the channel.
+    pushed: u64,
+    /// Envelopes drained by the receiver (prefix of push order).
+    pulled: u64,
+    /// Monotone departed-prefix counter: how many envelopes, in push
+    /// order, are known to have left the send buffer (`depart <= t` for
+    /// the latest occupancy query time `t`). Each envelope is stepped
+    /// over at most once, so occupancy is amortized O(1) instead of the
+    /// former O(queue) reverse scan per send.
+    departed: u64,
+    stats: LocalChannelStats,
 }
 
 impl<M> SimChannel<M> {
-    /// Messages still occupying the send buffer at time `now`
-    /// (departures are monotone from front to back).
-    fn occupancy(&self, now: Nanos) -> usize {
-        // Count from the back while depart > now.
-        self.queue
-            .iter()
-            .rev()
-            .take_while(|e| e.depart > now)
-            .count()
+    /// Messages still occupying the send buffer at time `now`.
+    ///
+    /// Occupants are the envelopes that neither departed (`depart <=
+    /// now`) nor were already pulled by the receiver; both sets are
+    /// prefixes of push order (departures because departure times are
+    /// monotone, pulls because the receiver drains front to back), so
+    /// the count is `pushed - max(departed, pulled)`. Queries for one
+    /// channel come from its single source process, whose clock is
+    /// monotone — the departed prefix only ever advances.
+    fn occupancy(&mut self, now: Nanos) -> usize {
+        let mut done = self.departed.max(self.pulled);
+        while done < self.pushed {
+            let idx = (done - self.pulled) as usize;
+            if self.queue[idx].depart <= now {
+                done += 1;
+            } else {
+                break;
+            }
+        }
+        self.departed = done;
+        (self.pushed - done) as usize
     }
 }
 
@@ -268,6 +293,10 @@ pub struct Engine<W: ShardWorkload> {
     windows: Vec<SnapshotWindow>,
     /// Engine-level randomness (barrier tails etc.).
     engine_rng: Xoshiro256,
+    /// Reusable pull-phase message buffer: one allocation serves every
+    /// channel of every simstep (absorb drains it), instead of a fresh
+    /// `Vec` per laden channel per simstep.
+    pull_scratch: Vec<W::Msg>,
 }
 
 impl<W: ShardWorkload> Engine<W> {
@@ -286,17 +315,31 @@ impl<W: ShardWorkload> Engine<W> {
         // Gather channel specs per process.
         let specs: Vec<Vec<ChannelSpec>> = shards.iter().map(|s| s.channels()).collect();
 
+        // Index each process's specs by (peer, layer) so reciprocal
+        // wiring is O(1) per channel instead of an O(channels) scan —
+        // the former O(channels²) build dominated construction beyond a
+        // few hundred processes. `or_insert` keeps first-match semantics
+        // identical to the `.position()` scan it replaces.
+        let spec_index: Vec<HashMap<(usize, usize), usize>> = specs
+            .iter()
+            .map(|specs_p| {
+                let mut index = HashMap::with_capacity(specs_p.len());
+                for (i, s) in specs_p.iter().enumerate() {
+                    index.entry((s.peer, s.layer)).or_insert(i);
+                }
+                index
+            })
+            .collect();
+
         // Create directed channels and index them.
         let mut channels: Vec<SimChannel<W::Msg>> = Vec::new();
         let mut outgoing: Vec<Vec<usize>> = vec![Vec::new(); shards.len()];
         for (src, specs_p) in specs.iter().enumerate() {
             for (src_ch, spec) in specs_p.iter().enumerate() {
                 // Find the reciprocal channel index on the destination.
-                let dst_ch = specs[spec.peer]
-                    .iter()
-                    .position(|s| {
-                        s.peer == src && reciprocal_layer(spec.layer) == s.layer
-                    })
+                let dst_ch = spec_index[spec.peer]
+                    .get(&(src, reciprocal_layer(spec.layer)))
+                    .copied()
                     .unwrap_or_else(|| {
                         panic!(
                             "no reciprocal channel: src={src} spec={spec:?}"
@@ -322,7 +365,10 @@ impl<W: ShardWorkload> Engine<W> {
                     last_depart: 0,
                     last_arrival: 0,
                     queue: VecDeque::new(),
-                    stats: ChannelStats::new(),
+                    pushed: 0,
+                    pulled: 0,
+                    departed: 0,
+                    stats: LocalChannelStats::new(),
                 });
                 outgoing[src].push(channels.len() - 1);
             }
@@ -348,13 +394,22 @@ impl<W: ShardWorkload> Engine<W> {
                 let n_out = outgoing[p].len();
                 let my_outgoing = std::mem::take(&mut outgoing[p]);
                 let my_incoming = std::mem::take(&mut incoming[p]);
+                // O(1) reciprocal-outgoing lookup per incoming channel
+                // (same first-match semantics as the scan it replaces;
+                // keys are unique anyway — src_ch is an index).
+                let mut out_index: HashMap<(usize, usize), usize> =
+                    HashMap::with_capacity(my_outgoing.len());
+                for (oi, &oc) in my_outgoing.iter().enumerate() {
+                    out_index
+                        .entry((channels[oc].dst, channels[oc].src_ch))
+                        .or_insert(oi);
+                }
                 let reciprocal_out = my_incoming
                     .iter()
                     .map(|&(cid, _)| {
-                        my_outgoing.iter().position(|&oc| {
-                            channels[oc].dst == channels[cid].src
-                                && channels[oc].src_ch == channels[cid].dst_ch
-                        })
+                        out_index
+                            .get(&(channels[cid].src, channels[cid].dst_ch))
+                            .copied()
                     })
                     .collect();
                 ProcState {
@@ -403,6 +458,7 @@ impl<W: ShardWorkload> Engine<W> {
             snap_open: Vec::new(),
             windows: Vec::new(),
             engine_rng,
+            pull_scratch: Vec::new(),
         }
     }
 
@@ -456,16 +512,20 @@ impl<W: ShardWorkload> Engine<W> {
         if self.cfg.mode.communicates() {
             // Index-based iteration: `incoming` is construction-time
             // immutable, and cloning it per simstep was the #1 allocation
-            // in the DES hot loop (see EXPERIMENTS.md SPerf).
+            // in the DES hot loop (see EXPERIMENTS.md SPerf). Arrived
+            // payloads land in the engine-owned scratch buffer — absorb
+            // drains it, so one allocation serves the whole run.
+            let mut msgs = std::mem::take(&mut self.pull_scratch);
             for k in 0..self.procs[p].incoming.len() {
                 let (cid, local_ch) = self.procs[p].incoming[k];
-                let mut msgs = Vec::new();
+                msgs.clear();
                 let mut max_touch: Option<u64> = None;
                 {
                     let ch = &mut self.channels[cid];
                     while let Some(front) = ch.queue.front() {
                         if front.arrival <= now {
                             let env = ch.queue.pop_front().unwrap();
+                            ch.pulled += 1;
                             max_touch = Some(env.touch.max(max_touch.unwrap_or(0)));
                             msgs.push(env.payload);
                         } else {
@@ -487,9 +547,10 @@ impl<W: ShardWorkload> Engine<W> {
                     }
                 }
                 if !msgs.is_empty() {
-                    self.procs[p].workload.absorb(local_ch, msgs);
+                    self.procs[p].workload.absorb(local_ch, &mut msgs);
                 }
             }
+            self.pull_scratch = msgs;
         }
 
         // ---- Compute phase. ----
@@ -538,6 +599,7 @@ impl<W: ShardWorkload> Engine<W> {
                             touch,
                             payload,
                         });
+                        ch.pushed += 1;
                         SendOutcome::Accepted
                     }
                 };
@@ -725,6 +787,76 @@ mod tests {
         cfg.send_buffer = 64;
         let profiles = healthy_profiles(&topo);
         Engine::new(cfg, topo, profiles, shards)
+    }
+
+    /// The O(1) departed-prefix occupancy must agree with the former
+    /// O(queue) reverse scan on arbitrary interleavings of monotone
+    /// pushes, prefix pulls, and monotone queries — including receivers
+    /// that race ahead and pull envelopes before they "depart".
+    #[test]
+    fn occupancy_matches_reference_scan() {
+        let mut ch = SimChannel::<u8> {
+            src: 0,
+            dst: 1,
+            src_ch: 0,
+            dst_ch: 0,
+            link: LinkModel::intranode(),
+            latency_factor: 1.0,
+            extra_drop: 0.0,
+            last_depart: 0,
+            last_arrival: 0,
+            queue: VecDeque::new(),
+            pushed: 0,
+            pulled: 0,
+            departed: 0,
+            stats: LocalChannelStats::new(),
+        };
+        let mut rng = Xoshiro256::new(0x0CC);
+        let mut now: Nanos = 0;
+        let mut last_depart: Nanos = 0;
+        let mut checks = 0usize;
+        for _ in 0..5_000 {
+            now += rng.below(50);
+            match rng.below(3) {
+                0 => {
+                    // Push: departures are monotone non-decreasing, and
+                    // may land in the future relative to `now`.
+                    let depart = now.max(last_depart) + rng.below(25);
+                    last_depart = depart;
+                    ch.queue.push_back(Envelope {
+                        depart,
+                        arrival: depart + 5,
+                        touch: 0,
+                        payload: 0,
+                    });
+                    ch.pushed += 1;
+                }
+                1 => {
+                    // Receiver drains a front prefix, possibly ahead of
+                    // the sender's clock.
+                    let horizon = now + rng.below(60);
+                    while let Some(front) = ch.queue.front() {
+                        if front.arrival <= horizon {
+                            ch.queue.pop_front();
+                            ch.pulled += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                _ => {
+                    let reference = ch
+                        .queue
+                        .iter()
+                        .rev()
+                        .take_while(|e| e.depart > now)
+                        .count();
+                    assert_eq!(ch.occupancy(now), reference, "at t={now}");
+                    checks += 1;
+                }
+            }
+        }
+        assert!(checks > 1_000, "degenerate schedule: {checks} checks");
     }
 
     #[test]

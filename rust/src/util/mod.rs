@@ -1,6 +1,8 @@
-//! Foundation utilities: PRNGs, ring buffers, CSV emission.
+//! Foundation utilities: PRNGs, ring buffers, CSV emission, and the
+//! scoped-thread parallel map behind sweep fan-out.
 
 pub mod csv;
+pub mod parallel;
 pub mod ring;
 pub mod rng;
 

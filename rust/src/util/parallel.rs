@@ -1,0 +1,107 @@
+//! Scoped worker-pool parallel map with deterministic output ordering.
+//!
+//! Replicate sweeps are embarrassingly parallel — every (mode, CPU count,
+//! replicate) cell is independently seeded — so the coordinator fans them
+//! out over `std::thread::scope` workers (no external dependencies).
+//! Results are returned **in input order** regardless of which worker
+//! finished when, so a parallel sweep is bit-identical to a serial one.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count to use by default: `EBCOMM_WORKERS` if set (≥1),
+/// otherwise the host's available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("EBCOMM_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `workers` scoped threads.
+///
+/// Items are claimed dynamically (an atomic cursor), so stragglers don't
+/// serialize behind a static partition; each result is written to its
+/// item's slot, so the output order equals the input order. With
+/// `workers <= 1` (or fewer than two items) everything runs on the
+/// calling thread — the serial reference path.
+///
+/// `f` must be a pure function of the item for run-to-run determinism
+/// (sweep cells are independently seeded, satisfying this). A panic in
+/// `f` propagates to the caller when the scope joins.
+pub fn parallel_map<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len());
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| panic!("worker never filled slot {i}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(4, &items, |&x| x * 3);
+        assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..37).collect();
+        let f = |&x: &u64| x.wrapping_mul(0x9E37_79B9).rotate_left(7);
+        assert_eq!(parallel_map(1, &items, f), parallel_map(8, &items, f));
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(4, &empty, |&x| x).is_empty());
+        assert_eq!(parallel_map(4, &[9u32], |&x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(parallel_map(64, &items, |&x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -618,9 +618,9 @@ impl ShardWorkload for DishtinyShard {
         self.channels.clone()
     }
 
-    fn absorb(&mut self, ch: usize, msgs: Vec<DeMsg>) {
+    fn absorb(&mut self, ch: usize, msgs: &mut Vec<DeMsg>) {
         let (dir, layer) = self.chan_meta[ch];
-        for msg in msgs {
+        for msg in msgs.drain(..) {
             match (layer, msg) {
                 (Layer::Resource, DeMsg::Resource(v)) => {
                     // Accumulate: every delivered transfer counts.
@@ -765,7 +765,7 @@ mod tests {
                     .iter()
                     .position(|&(d, l)| d == dir.opposite() && l == layer)
                     .expect("reciprocal channel");
-                shards[dst].absorb(back, vec![msg]);
+                shards[dst].absorb(back, &mut vec![msg]);
             }
         }
     }
@@ -796,7 +796,7 @@ mod tests {
                     .iter()
                     .position(|&(d, l)| d == dir.opposite() && l == layer)
                     .unwrap();
-                shards[1].absorb(back, vec![msg]);
+                shards[1].absorb(back, &mut vec![msg]);
             }
             // Step + deliver shard 1 -> 0.
             let out1 = shards[1].step(&mut rng);
@@ -807,7 +807,7 @@ mod tests {
                     .iter()
                     .position(|&(d, l)| d == dir.opposite() && l == layer)
                     .unwrap();
-                shards[0].absorb(back, vec![msg]);
+                shards[0].absorb(back, &mut vec![msg]);
             }
         }
         assert!(
@@ -832,7 +832,7 @@ mod tests {
             .iter()
             .position(|&(_, l)| l == Layer::Spawn)
             .unwrap();
-        shards[1].absorb(ch, vec![DeMsg::Spawn(vec![strong])]);
+        shards[1].absorb(ch, &mut vec![DeMsg::Spawn(vec![strong])]);
         let _ = shards[1].step(&mut rng);
         assert_eq!(shards[1].cells()[0].genome.kin_id, kin, "invader wins");
 
@@ -841,7 +841,7 @@ mod tests {
             genome: Genome::random(&mut rng),
             endowment: 0.0,
         };
-        shards[1].absorb(ch, vec![DeMsg::Spawn(vec![weak])]);
+        shards[1].absorb(ch, &mut vec![DeMsg::Spawn(vec![weak])]);
         let _ = shards[1].step(&mut rng);
         assert_eq!(shards[1].cells()[0].genome.kin_id, kin, "weak invader loses");
     }
@@ -880,7 +880,7 @@ mod tests {
             .position(|&(_, l)| l == Layer::Kin)
             .unwrap();
         // send a Resource payload on the Kin layer: must be ignored
-        shards[0].absorb(ch, vec![DeMsg::Resource(vec![1.0, 2.0])]);
+        shards[0].absorb(ch, &mut vec![DeMsg::Resource(vec![1.0, 2.0])]);
         assert!(shards[0].ghost_kin.iter().all(Option::is_none));
     }
 
@@ -910,7 +910,7 @@ mod tests {
                         .iter()
                         .position(|&(d, l)| l == Layer::Resource && d == dir.opposite())
                         .unwrap();
-                    shards[dst].absorb(back, vec![msg]);
+                    shards[dst].absorb(back, &mut vec![msg]);
                 }
             }
         }

@@ -339,9 +339,9 @@ impl ShardWorkload for GraphColoringShard {
         self.channels.clone()
     }
 
-    fn absorb(&mut self, ch: usize, msgs: Vec<GcMsg>) {
+    fn absorb(&mut self, ch: usize, msgs: &mut Vec<GcMsg>) {
         // Best-effort: only the freshest border state matters.
-        if let Some(latest) = msgs.into_iter().last() {
+        if let Some(latest) = msgs.drain(..).last() {
             let dir = self.chan_dirs[ch];
             if latest.len() == self.part.border_len(dir) {
                 self.ghosts[dir.index()] = Some(latest);
@@ -462,7 +462,7 @@ mod tests {
                     .iter()
                     .position(|s| s.peer == rank && s.layer == back_dir)
                     .expect("reciprocal channel must exist");
-                shards[spec.peer].absorb(back_ch, vec![msg]);
+                shards[spec.peer].absorb(back_ch, &mut vec![msg]);
                 let _ = topo;
             }
         }
@@ -528,14 +528,14 @@ mod tests {
         // two channels (E and W) to the peer for a 1x2 mesh
         let specs = shards[0].channels();
         assert_eq!(specs.len(), 2);
-        shards[0].absorb(0, vec![vec![0], vec![2]]);
+        shards[0].absorb(0, &mut vec![vec![0], vec![2]]);
         assert_eq!(shards[0].ghosts[shards[0].chan_dirs[0].index()], Some(vec![2]));
     }
 
     #[test]
     fn malformed_message_skipped() {
         let (_, mut shards, _) = mk(2, 1, 23);
-        shards[0].absorb(0, vec![vec![1, 2, 3]]); // wrong arity
+        shards[0].absorb(0, &mut vec![vec![1, 2, 3]]); // wrong arity
         assert_eq!(shards[0].ghosts[shards[0].chan_dirs[0].index()], None);
     }
 

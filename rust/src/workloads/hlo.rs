@@ -102,7 +102,7 @@ impl ShardWorkload for HloGraphColoringShard {
         self.inner.channels()
     }
 
-    fn absorb(&mut self, ch: usize, msgs: Vec<GcMsg>) {
+    fn absorb(&mut self, ch: usize, msgs: &mut Vec<GcMsg>) {
         self.inner.absorb(ch, msgs);
     }
 
@@ -157,7 +157,7 @@ impl ShardWorkload for HloDishtinyShard {
         self.inner.channels()
     }
 
-    fn absorb(&mut self, ch: usize, msgs: Vec<DeMsg>) {
+    fn absorb(&mut self, ch: usize, msgs: &mut Vec<DeMsg>) {
         self.inner.absorb(ch, msgs);
     }
 

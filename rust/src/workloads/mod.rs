@@ -46,7 +46,14 @@ pub trait ShardWorkload {
 
     /// Deliver pulled messages from channel `ch` (index into
     /// `channels()`), oldest first.
-    fn absorb(&mut self, ch: usize, msgs: Vec<Self::Msg>);
+    ///
+    /// The buffer is borrowed so executors can reuse one scratch
+    /// allocation across every channel and simstep (the per-pull `Vec`
+    /// churn was the top allocation in the DES hot loop). Implementations
+    /// take ownership of the contents (typically via `drain(..)`); callers
+    /// must treat the buffer's contents as unspecified afterwards and
+    /// clear it before refilling.
+    fn absorb(&mut self, ch: usize, msgs: &mut Vec<Self::Msg>);
 
     /// Advance one simulation update; returns `(channel index, message)`
     /// pairs to dispatch.

@@ -1,0 +1,236 @@
+//! Offline stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment has no network access, so this vendored crate
+//! provides the subset of the real API the workspace uses: the
+//! context-chaining [`Error`] type, [`Result`], the [`Context`] extension
+//! trait on `Result`/`Option`, and the [`anyhow!`]/[`bail!`] macros.
+//! Error chains render like the real crate: `{}` prints the outermost
+//! message, `{:#}` joins the chain with `": "`, and `{:?}` prints a
+//! `Caused by:` listing.
+//!
+//! Mirroring upstream, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what permits the blanket
+//! `From<E: std::error::Error>` conversion powering `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chaining error: outermost message first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("unknown error")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or("unknown error"))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Adapter so `?` can convert an [`Error`] into `Box<dyn std::error::Error>`
+/// (e.g. in `fn main() -> Result<(), Box<dyn Error>>` callers).
+struct BoxedError(Error);
+
+impl fmt::Display for BoxedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Show the full chain: this surfaces context in `eprintln!("{e}")`.
+        write!(f, "{:#}", self.0)
+    }
+}
+
+impl fmt::Debug for BoxedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl StdError for BoxedError {}
+
+impl From<Error> for Box<dyn StdError + Send + Sync + 'static> {
+    fn from(e: Error) -> Self {
+        Box::new(BoxedError(e))
+    }
+}
+
+impl From<Error> for Box<dyn StdError + 'static> {
+    fn from(e: Error) -> Self {
+        Box::new(BoxedError(e))
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($args:tt)*) => {
+        return Err($crate::anyhow!($($args)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chains_render_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing thing");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn nested_context_on_anyhow_result() {
+        let inner: Result<()> = Err(anyhow!("root {}", 42));
+        let e = inner.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(n: usize) -> Result<()> {
+            if n != 4 {
+                bail!("expected 4 fields, got {n}");
+            }
+            Ok(())
+        }
+        assert_eq!(f(2).unwrap_err().to_string(), "expected 4 fields, got 2");
+        assert!(f(4).is_ok());
+    }
+
+    #[test]
+    fn question_mark_into_boxed_dyn_error() {
+        fn g() -> std::result::Result<(), Box<dyn StdError>> {
+            Err::<(), _>(io_err()).context("opening")?;
+            Ok(())
+        }
+        let msg = g().unwrap_err().to_string();
+        assert!(msg.contains("opening") && msg.contains("missing thing"), "{msg}");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+}
