@@ -1,10 +1,14 @@
 //! Cross-module simulation integration: engine + workloads + QoS + modes,
-//! plus DES-vs-real-thread cross-validation.
+//! plus DES-vs-real-thread cross-validation and sweep-determinism
+//! golden-value checks.
 
+use ebcomm::coordinator::{
+    run_benchmark_with_workers, run_qos_with_workers, BenchmarkExperiment, QosExperiment,
+};
 use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::qos::{MetricName, SnapshotSchedule};
 use ebcomm::sim::{
-    healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SimConfig,
+    healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SimConfig, SimResult,
 };
 use ebcomm::util::rng::Xoshiro256;
 use ebcomm::util::{MILLI, SECOND};
@@ -243,6 +247,172 @@ fn digital_evolution_runs_under_engine_and_accrues_fitness() {
     let fitness: f64 = result.shards.iter().map(|s| s.mean_resource()).sum();
     assert!(fitness > 0.0);
     assert!(result.attempted_sends > 0, "five DE layers must generate traffic");
+}
+
+// ---- Determinism under parallelism (golden-value machinery). ----------
+
+/// FNV-1a accumulator for building order-sensitive result signatures.
+struct Sig(u64);
+
+impl Sig {
+    fn new() -> Self {
+        Sig(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn push_f64(&mut self, x: f64) {
+        self.push_u64(x.to_bits());
+    }
+}
+
+/// Bit-exact signature of everything the issue pins: per-process update
+/// counts, global send accounting, and every QoS window observation.
+fn engine_signature(r: &SimResult<GraphColoringShard>) -> u64 {
+    let mut s = Sig::new();
+    for &u in &r.updates {
+        s.push_u64(u);
+    }
+    s.push_u64(r.attempted_sends);
+    s.push_u64(r.successful_sends);
+    for w in &r.windows {
+        for obs in [&w.inlet_before, &w.inlet_after, &w.outlet_before, &w.outlet_after] {
+            s.push_u64(obs.update_count);
+            s.push_u64(obs.wall_ns);
+            let c = obs.counters;
+            s.push_u64(c.attempted_sends);
+            s.push_u64(c.successful_sends);
+            s.push_u64(c.pull_attempts);
+            s.push_u64(c.laden_pulls);
+            s.push_u64(c.messages_received);
+            s.push_u64(c.touches);
+        }
+    }
+    for m in &r.qos.snapshots {
+        s.push_f64(m.simstep_period_ns);
+        s.push_f64(m.simstep_latency);
+        s.push_f64(m.walltime_latency_ns);
+        s.push_f64(m.delivery_failure_rate);
+        s.push_f64(m.delivery_clumpiness);
+    }
+    s.0
+}
+
+/// The fixed engine scenario behind the golden signature.
+fn golden_engine_run() -> SimResult<GraphColoringShard> {
+    let topo = Topology::new(4, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(0x601D);
+    let shards: Vec<_> = (0..4)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 16,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 120 * MILLI);
+    cfg.seed = 0x601D;
+    cfg.send_buffer = 4;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        30 * MILLI,
+        30 * MILLI,
+        10 * MILLI,
+        3,
+    ));
+    let profiles = ebcomm::sim::heterogeneous_profiles(&topo, 0x601D, 0.20);
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+/// Same seed ⇒ bit-identical updates, send accounting, and QoS windows,
+/// run to run. The signature is additionally pinned against a recorded
+/// golden value so hot-path rewrites (occupancy tracking, scratch
+/// buffers, stats tranches) that silently change semantics fail loudly:
+///
+/// * record: `EBCOMM_BLESS=1 cargo test --test integration_sim` writes
+///   `tests/golden/engine_signature.txt`;
+/// * verify: if that file exists (or `EBCOMM_GOLDEN_ENGINE` is set), the
+///   signature must match it.
+#[test]
+fn engine_signature_is_reproducible_and_matches_golden() {
+    let a = engine_signature(&golden_engine_run());
+    let b = engine_signature(&golden_engine_run());
+    assert_eq!(a, b, "same seed must reproduce bit-identical results");
+    let hex = format!("{a:016x}");
+    eprintln!("engine golden signature: {hex}");
+
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/engine_signature.txt");
+    if std::env::var("EBCOMM_BLESS").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all(golden_path.parent().unwrap()).unwrap();
+        std::fs::write(&golden_path, format!("{hex}\n")).unwrap();
+        return;
+    }
+    if let Ok(expect) = std::env::var("EBCOMM_GOLDEN_ENGINE") {
+        assert_eq!(hex, expect.trim(), "engine results diverged from golden");
+    } else if let Ok(recorded) = std::fs::read_to_string(&golden_path) {
+        assert_eq!(
+            hex,
+            recorded.trim(),
+            "engine results diverged from recorded golden (re-bless only if \
+             the change is intentional)"
+        );
+    }
+}
+
+/// A benchmark sweep must be bit-identical whether it runs on 1 worker
+/// or N — mode/cpu/replicate cells are independently seeded, and the
+/// runner reassembles them in grid order.
+#[test]
+fn benchmark_sweep_bit_identical_across_worker_counts() {
+    let mut exp = BenchmarkExperiment::fig3_multiprocess_gc();
+    exp.cpu_counts = vec![1, 4];
+    exp.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+    exp.replicates = 2;
+    exp.run_for = 40 * MILLI;
+    exp.simels_per_cpu = 4;
+    exp.cost_scale = 1.0;
+    let one = run_benchmark_with_workers(&exp, 1);
+    let four = run_benchmark_with_workers(&exp, 4);
+    let eight = run_benchmark_with_workers(&exp, 8);
+    assert_eq!(one, four);
+    assert_eq!(one, eight);
+    // Spot-check bit-level equality of the floats explicitly.
+    for (a, b) in one.points.iter().zip(&four.points) {
+        assert_eq!(a.update_rate_hz.to_bits(), b.update_rate_hz.to_bits());
+        assert_eq!(a.quality.to_bits(), b.quality.to_bits());
+        assert_eq!(a.failure_rate.to_bits(), b.failure_rate.to_bits());
+    }
+}
+
+/// Same invariance for QoS sweeps, including the snapshot windows.
+#[test]
+fn qos_sweep_bit_identical_across_worker_counts() {
+    let mut exp = QosExperiment::internode();
+    exp.replicates = 3;
+    exp.schedule = SnapshotSchedule::compressed(100 * MILLI, 100 * MILLI, 30 * MILLI, 2);
+    exp.run_for = 300 * MILLI;
+    let one = run_qos_with_workers(&exp, 1);
+    let three = run_qos_with_workers(&exp, 3);
+    assert_eq!(one, three);
+    for (a, b) in one.replicates.iter().zip(&three.replicates) {
+        assert_eq!(a.updates, b.updates);
+        for (ma, mb) in a.qos.snapshots.iter().zip(&b.qos.snapshots) {
+            assert_eq!(
+                ma.walltime_latency_ns.to_bits(),
+                mb.walltime_latency_ns.to_bits()
+            );
+        }
+    }
 }
 
 #[test]
