@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Gate BENCH_hotpath.json: baseline regression diff + scheduler A/B bar.
+
+Usage:
+    python3 python/bench_diff.py CURRENT.json [--baseline BASELINE.json]
+                                 [--threshold 0.25] [--ab-margin 0.10]
+
+Two independent checks:
+
+1. **Scheduler A/B bar** (always runs, baseline not needed): within
+   CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
+   procs)`` median must not exceed the heap's by more than
+   ``--ab-margin`` at 256 procs / ``--ab-margin-1024`` at 1024 procs —
+   the tentpole's acceptance bar (the printed ratios document the
+   expected calendar win at 1024). The end-to-end ``scheduler DES 256p``
+   pair is reported for context but never gated (few-sample wall-clock
+   timings), in this check and in the baseline diff alike.
+
+2. **Baseline regression diff** (with ``--baseline``): ns-unit entries in
+   the gated sections (name prefixes ``DES hot loop`` / ``scheduler``)
+   fail when ``current_median > baseline_median * (1 + threshold)``.
+   Entries present on only one side are reported but never fail the diff.
+
+Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
+"""
+
+import argparse
+import json
+import sys
+
+GATED_PREFIXES = ("DES hot loop", "scheduler")
+# Few-sample end-to-end wall-clock entries: reported, never gated.
+UNGATED_PREFIXES = ("scheduler DES",)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    results = doc.get("results", [])
+    return {e["name"]: e for e in results if "name" in e}
+
+
+def median_of(entries, name):
+    e = entries.get(name)
+    if e is None:
+        return None
+    m = e.get("median")
+    return m if isinstance(m, (int, float)) and m > 0 else None
+
+
+def ab_check(cur, margin, margin_1024):
+    """Heap-vs-calendar cross-entry bar inside one results file."""
+    failures = []
+    checked = 0
+    # (procs, allowed calendar/heap ratio). The calendar should *win* at
+    # 1024, but the bar only enforces "not meaningfully slower" — a hard
+    # faster-than bar on an unmeasured ratio could redden CI with no
+    # recourse; the printed ratio documents the actual win.
+    bars = [(256, 1.0 + margin), (1024, 1.0 + margin_1024)]
+    for procs, allowed in bars:
+        heap = median_of(cur, f"scheduler heap pop+push ({procs} procs)")
+        cal = median_of(cur, f"scheduler calendar pop+push ({procs} procs)")
+        if heap is None or cal is None:
+            print(f"  [a/b]      {procs} procs: pair missing, skipped")
+            continue
+        ratio = cal / heap
+        checked += 1
+        verdict = "ok" if ratio <= allowed else "FAIL"
+        print(
+            f"  [a/b]      {procs} procs: calendar {cal:.1f} vs heap "
+            f"{heap:.1f} ns (ratio {ratio:.2f}, allowed {allowed:.2f}) {verdict}"
+        )
+        if ratio > allowed:
+            failures.append(
+                f"calendar {ratio:.2f}x heap at {procs} procs (allowed {allowed:.2f}x)"
+            )
+    # Context only: end-to-end DES pair.
+    heap = median_of(cur, "scheduler DES 256p heap (10ms virtual)")
+    cal = median_of(cur, "scheduler DES 256p calendar (10ms virtual)")
+    if heap is not None and cal is not None:
+        print(
+            f"  [a/b info] DES 256p: calendar {cal / heap:.2f}x heap "
+            "(not gated; few-sample)"
+        )
+    return failures, checked
+
+
+def gated(name, unit):
+    if unit != "ns" or any(name.startswith(p) for p in UNGATED_PREFIXES):
+        return False
+    return any(name.startswith(p) for p in GATED_PREFIXES)
+
+
+def baseline_diff(base, cur, threshold):
+    regressions = []
+    compared = 0
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        unit = b.get("unit", "?")
+        if c is None:
+            print(f"  [gone]     {name}")
+            continue
+        bm, cm = b.get("median"), c.get("median")
+        if bm is None or cm is None or bm <= 0:
+            print(f"  [skip]     {name} (no usable median)")
+            continue
+        ratio = cm / bm
+        tag = "gated" if gated(name, unit) else "info "
+        print(f"  [{tag}]    {name}: {bm:.1f} -> {cm:.1f} {unit} ({ratio - 1.0:+.1%})")
+        if gated(name, unit):
+            compared += 1
+            if cm > bm * (1.0 + threshold):
+                regressions.append((name, bm, cm, ratio))
+    for name in sorted(set(cur) - set(base)):
+        print(f"  [new]      {name}")
+    return regressions, compared
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("--baseline", help="committed baseline JSON to diff against")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional median increase vs baseline (default 0.25)",
+    )
+    ap.add_argument(
+        "--ab-margin",
+        type=float,
+        default=0.10,
+        help="calendar-vs-heap slack at 256 procs (default 0.10)",
+    )
+    ap.add_argument(
+        "--ab-margin-1024",
+        type=float,
+        default=0.10,
+        help="calendar-vs-heap slack at 1024 procs (default 0.10)",
+    )
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    failed = False
+
+    print("== scheduler A/B bar ==")
+    ab_failures, ab_checked = ab_check(cur, args.ab_margin, args.ab_margin_1024)
+    if ab_checked == 0:
+        print("bench-diff: no scheduler A/B pairs found — bar not enforced")
+    if ab_failures:
+        failed = True
+        for f in ab_failures:
+            print(f"bench-diff: A/B bar failed: {f}", file=sys.stderr)
+
+    if args.baseline:
+        print("== baseline regression diff ==")
+        base = load(args.baseline)
+        regressions, compared = baseline_diff(base, cur, args.threshold)
+        if compared == 0:
+            print("bench-diff: no gated entries in common — nothing enforced")
+        if regressions:
+            failed = True
+            print(
+                f"\nbench-diff: {len(regressions)} regression(s) beyond "
+                f"+{args.threshold:.0%} median:",
+                file=sys.stderr,
+            )
+            for name, bm, cm, ratio in regressions:
+                print(
+                    f"  {name}: median {bm:.1f} -> {cm:.1f} ns ({ratio:.2f}x)",
+                    file=sys.stderr,
+                )
+        elif compared:
+            print(f"bench-diff: {compared} gated entr(ies) within +{args.threshold:.0%}")
+    else:
+        print("bench-diff: no --baseline given; regression diff skipped")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

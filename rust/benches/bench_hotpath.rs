@@ -21,7 +21,9 @@ use ebcomm::coordinator::{
     run_benchmark_serial, run_benchmark_with_workers, BenchmarkExperiment,
 };
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::sim::{
+    healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, Scheduler, SimConfig,
+};
 use ebcomm::util::parallel::default_workers;
 use ebcomm::util::rng::{Rng, Xoshiro256};
 use ebcomm::util::{fmt_ns, MILLI};
@@ -266,6 +268,80 @@ fn main() {
             "simsteps_per_sec",
             &throughput,
         );
+    }
+
+    // Scheduler shoot-out: the wake queue alone, heap vs calendar, under
+    // the engine's steady-state cadence (pop the earliest wake, push the
+    // process's next wake a near-constant stride later) at 64/256/1024
+    // procs — the structure the calendar queue must beat for the
+    // 1024+-proc ROADMAP runs. Identical op streams on both schedulers;
+    // dequeue-order equivalence is enforced by tests/prop_calendar.rs,
+    // here we only time it.
+    println!("== scheduler (heap vs calendar) ==");
+    for &procs in &[64usize, 256, 1024] {
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut sched = kind.make::<usize>();
+            let mut rng = Xoshiro256::new(0x5C4ED);
+            let mut seq = 0u64;
+            for p in 0..procs {
+                sched.push(rng.below(8_192), seq, p);
+                seq += 1;
+            }
+            let s = time_batched(50_000, 50, 20_000, || {
+                let (t, _, p) = sched.pop().expect("steady-state queue never empties");
+                sched.push(t + 6_000 + rng.below(4_096), seq, p);
+                seq = seq.wrapping_add(1);
+                std::hint::black_box(p);
+            });
+            rec.report(&format!("scheduler {} pop+push ({procs} procs)", kind.label()), &s);
+        }
+    }
+
+    // End-to-end DES under each scheduler at 256 procs: the acceptance
+    // bar is calendar no slower than heap here.
+    {
+        let des_256p = |kind: SchedKind| -> f64 {
+            let topo = Topology::new(256, PlacementKind::OnePerNode);
+            let mut rng = Xoshiro256::new(11);
+            let shards: Vec<_> = (0..256)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig {
+                            simels_per_proc: 1,
+                            ..GcConfig::default()
+                        },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let mut cfg = SimConfig::new(
+                AsyncMode::BestEffort,
+                ModeTiming::graph_coloring(256),
+                10 * MILLI,
+            );
+            cfg.send_buffer = 64;
+            cfg.sched = kind;
+            let profiles = healthy_profiles(&topo);
+            let t = Instant::now();
+            let result = Engine::new(cfg, topo, profiles, shards).run();
+            let ns = t.elapsed().as_nanos() as f64;
+            std::hint::black_box(result.updates);
+            ns
+        };
+        // One warmup pair, then three timed samples per scheduler so the
+        // gated median is not a single noisy wall-clock reading.
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let _ = des_256p(kind);
+        }
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let samples: Vec<f64> = (0..3).map(|_| des_256p(kind)).collect();
+            rec.report(
+                &format!("scheduler DES 256p {} (10ms virtual)", kind.label()),
+                &samples,
+            );
+        }
     }
 
     // Parallel replicate sweeps: a 256-proc best-effort sweep cellwise

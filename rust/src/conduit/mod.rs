@@ -112,6 +112,14 @@ pub trait OutletLike<T> {
     /// Drain every currently buffered message (bulk consumption;
     /// `MPI_Testsome`-equivalent).
     fn pull_all(&self) -> Vec<T>;
+    /// Drain every currently buffered message into `out`, appending in
+    /// push order. Semantically identical to [`OutletLike::pull_all`]
+    /// (same instrumentation), but a caller-owned buffer lets pull loops
+    /// reuse one allocation across channels and iterations. Backends
+    /// override the default to drain storage directly.
+    fn pull_all_into(&self, out: &mut Vec<T>) {
+        out.extend(self.pull_all());
+    }
     /// Keep only the freshest message, discarding the backlog.
     fn pull_latest(&self) -> Option<T>;
     /// Instrumentation handle.

@@ -192,6 +192,18 @@ pub struct CounterTranche {
 }
 
 impl CounterTranche {
+    /// Elementwise accumulate `other` into `self` — aggregating one
+    /// tranche per channel into run totals (engine and thread-executor
+    /// delivery accounting).
+    pub fn add(&mut self, other: &CounterTranche) {
+        self.attempted_sends += other.attempted_sends;
+        self.successful_sends += other.successful_sends;
+        self.pull_attempts += other.pull_attempts;
+        self.laden_pulls += other.laden_pulls;
+        self.messages_received += other.messages_received;
+        self.touches += other.touches;
+    }
+
     /// Elementwise difference `after - before` (saturating, to tolerate
     /// observation "motion blur" without panicking; the paper notes such
     /// minor invariant violations are possible and acceptable, §II-E).
@@ -237,6 +249,27 @@ mod tests {
         assert_eq!(t.pull_attempts, 4);
         assert_eq!(t.laden_pulls, 2);
         assert_eq!(t.messages_received, 4);
+    }
+
+    #[test]
+    fn tranche_add_accumulates_elementwise() {
+        let mut total = CounterTranche::default();
+        let a = CounterTranche {
+            attempted_sends: 3,
+            successful_sends: 2,
+            pull_attempts: 5,
+            laden_pulls: 1,
+            messages_received: 4,
+            touches: 7,
+        };
+        total.add(&a);
+        total.add(&a);
+        assert_eq!(total.attempted_sends, 6);
+        assert_eq!(total.successful_sends, 4);
+        assert_eq!(total.pull_attempts, 10);
+        assert_eq!(total.laden_pulls, 2);
+        assert_eq!(total.messages_received, 8);
+        assert_eq!(total.touches, 14);
     }
 
     #[test]

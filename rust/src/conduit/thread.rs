@@ -76,6 +76,14 @@ impl<T> OutletLike<T> for ThreadOutlet<T> {
         msgs
     }
 
+    fn pull_all_into(&self, out: &mut Vec<T>) {
+        let n = {
+            let mut buf = self.shared.buffer.lock().unwrap();
+            buf.drain_into(out)
+        };
+        self.shared.stats.on_pull(n as u64);
+    }
+
     fn pull_latest(&self) -> Option<T> {
         let (latest, n) = {
             let mut buf = self.shared.buffer.lock().unwrap();
@@ -159,6 +167,27 @@ mod tests {
         assert_eq!(t.attempted_sends, 3);
         assert_eq!(t.successful_sends, 2);
         assert_eq!(outlet.pull_all(), vec![1, 2]);
+    }
+
+    #[test]
+    fn pull_all_into_matches_pull_all() {
+        let (inlet, outlet) = thread_duct::<u32>(ChannelConfig::qos());
+        for i in 0..6 {
+            inlet.put(i);
+        }
+        let mut out = vec![99];
+        outlet.pull_all_into(&mut out);
+        assert_eq!(out, vec![99, 0, 1, 2, 3, 4, 5], "appends in push order");
+        // Instrumentation identical to a pull_all: one laden pull.
+        let t = outlet.stats().tranche();
+        assert_eq!(t.pull_attempts, 1);
+        assert_eq!(t.laden_pulls, 1);
+        assert_eq!(t.messages_received, 6);
+        // Empty drain still counts a pull attempt.
+        out.clear();
+        outlet.pull_all_into(&mut out);
+        assert!(out.is_empty());
+        assert_eq!(outlet.stats().tranche().pull_attempts, 2);
     }
 
     #[test]

@@ -190,21 +190,26 @@ where
     let mut chunk_start = Instant::now();
     let mut next_fixed = Instant::now() + cfg.fixed_epoch;
     let communicate = cfg.mode.communicates();
-    // Reused across channels and iterations (absorb drains it).
+    // Both scratch buffers are reused across channels and iterations
+    // (absorb drains `pull_scratch`; `env_scratch` is drained below), so
+    // the pull path allocates nothing in steady state — the real-thread
+    // counterpart of the DES engine's scratch buffer.
     let mut pull_scratch: Vec<W::Msg> = Vec::new();
+    let mut env_scratch: Vec<Envelope<W::Msg>> = Vec::new();
 
     loop {
         // Pull/absorb phase.
         if communicate {
             for (ch, outlet) in outlets.iter().enumerate() {
-                let envs = outlet.pull_all();
-                if envs.is_empty() {
+                env_scratch.clear();
+                outlet.pull_all_into(&mut env_scratch);
+                if env_scratch.is_empty() {
                     continue;
                 }
-                let max_touch = envs.iter().map(|e| e.touch).max().unwrap();
+                let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
                 touch[ch].on_receive(max_touch);
                 pull_scratch.clear();
-                pull_scratch.extend(envs.into_iter().map(|e| e.payload));
+                pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
                 shard.absorb(ch, &mut pull_scratch);
             }
         }
@@ -268,18 +273,16 @@ where
         }
     }
 
-    let (mut attempted, mut successful) = (0u64, 0u64);
+    let mut totals = crate::conduit::CounterTranche::default();
     for inlet in &inlets {
-        let t = inlet.stats().tranche();
-        attempted += t.attempted_sends;
-        successful += t.successful_sends;
+        totals.add(&inlet.stats().tranche());
     }
     WorkerOut {
         rank,
         shard,
         updates,
-        attempted,
-        successful,
+        attempted: totals.attempted_sends,
+        successful: totals.successful_sends,
     }
 }
 

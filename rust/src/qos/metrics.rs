@@ -36,6 +36,18 @@ pub struct QosObservation {
     pub wall_ns: Nanos,
 }
 
+impl QosObservation {
+    /// Record one endpoint observation (a counter tranche bracketed with
+    /// the owning process's update count and wall clock).
+    pub fn capture(counters: CounterTranche, update_count: u64, wall_ns: Nanos) -> Self {
+        Self {
+            counters,
+            update_count,
+            wall_ns,
+        }
+    }
+}
+
 /// The five QoS metrics for one snapshot window on one channel.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QosMetrics {

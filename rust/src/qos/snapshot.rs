@@ -104,6 +104,14 @@ impl ReplicateQos {
         self.snapshots.push(m);
     }
 
+    /// Scan completed windows into per-window metrics (inlet/outlet
+    /// averaged), in window order — the engine's end-of-run QoS pass.
+    pub fn from_windows(windows: &[SnapshotWindow]) -> Self {
+        Self {
+            snapshots: windows.iter().map(SnapshotWindow::metrics).collect(),
+        }
+    }
+
     pub fn values(&self, metric: MetricName) -> Vec<f64> {
         self.snapshots.iter().map(|m| m.get(metric)).collect()
     }
@@ -150,6 +158,36 @@ mod tests {
         };
         // inlet period 100, outlet period 300 -> mean 200.
         assert_eq!(w.metrics().simstep_period_ns, 200.0);
+    }
+
+    #[test]
+    fn from_windows_matches_per_window_push() {
+        let zero = QosObservation::default();
+        let mk = |updates, wall| QosObservation {
+            counters: CounterTranche::default(),
+            update_count: updates,
+            wall_ns: wall,
+        };
+        let windows = vec![
+            SnapshotWindow {
+                inlet_before: zero,
+                inlet_after: mk(10, 1_000),
+                outlet_before: zero,
+                outlet_after: mk(10, 3_000),
+            },
+            SnapshotWindow {
+                inlet_before: zero,
+                inlet_after: mk(4, 800),
+                outlet_before: zero,
+                outlet_after: mk(4, 800),
+            },
+        ];
+        let batch = ReplicateQos::from_windows(&windows);
+        let mut reference = ReplicateQos::default();
+        for w in &windows {
+            reference.push(w.metrics());
+        }
+        assert_eq!(batch, reference);
     }
 
     #[test]

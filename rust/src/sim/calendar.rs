@@ -1,0 +1,503 @@
+//! Event schedulers for the discrete-event engine: binary heap and
+//! calendar queue.
+//!
+//! The engine dispatches events in strict `(time, seq)` order, where `seq`
+//! is a unique monotone tie-breaker assigned at scheduling time. Both
+//! schedulers here implement exactly that total order, so swapping one for
+//! the other is *bit-invisible* to the simulation — the golden-signature
+//! and property tests enforce it (`tests/prop_calendar.rs`,
+//! `tests/integration_sim.rs`).
+//!
+//! * [`HeapScheduler`] — the reference `BinaryHeap` implementation:
+//!   O(log n) per operation, no tuning, always correct.
+//! * [`CalendarQueue`] — Brown's calendar queue (CACM 1988) specialized
+//!   for the engine's near-uniform wake cadence: power-of-two-width time
+//!   buckets, a rotating day cursor, and lazy power-of-two resizing keyed
+//!   to load-factor thresholds. Amortized ~O(1) push/pop when bucket
+//!   width tracks the observed inter-event gap, which resizing recomputes
+//!   from queue contents — so cadence drift (barrier releases, QoS
+//!   snapshots, 1024-proc fan-in) re-tunes the structure automatically.
+//!
+//! Selection is per-run via [`SchedKind`]: `EBCOMM_SCHED=heap` /
+//! `EBCOMM_SCHED=calendar` (the default) for A/B comparison, or set
+//! [`crate::sim::SimConfig::sched`] programmatically.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::Nanos;
+
+/// Priority-queue interface the engine schedules events through.
+///
+/// Entries are dequeued in ascending `(t, seq)` order. Callers must hand
+/// every push a `seq` unique within the queue's lifetime (the engine's
+/// monotone event counter), which makes the order total and deterministic
+/// regardless of the backing structure.
+pub trait Scheduler<T> {
+    /// Enqueue `item` at time `t` with tie-breaker `seq`.
+    fn push(&mut self, t: Nanos, seq: u64, item: T);
+    /// Dequeue the entry with the smallest `(t, seq)`.
+    fn pop(&mut self) -> Option<(Nanos, u64, T)>;
+    /// Entries currently queued.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which scheduler backs the engine's event queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedKind {
+    /// Reference `BinaryHeap` scheduler.
+    Heap,
+    /// Bucketed calendar-queue scheduler (default).
+    Calendar,
+}
+
+impl SchedKind {
+    /// Read `EBCOMM_SCHED` (`"heap"` or `"calendar"`); unset selects the
+    /// calendar queue. Any other value panics — a silently mis-spelled
+    /// A/B run (`EBCOMM_SCHED=haep`) would compare a scheduler against
+    /// itself and wrongly rule bugs out.
+    pub fn from_env() -> Self {
+        match std::env::var("EBCOMM_SCHED") {
+            Ok(v) if v.eq_ignore_ascii_case("heap") => SchedKind::Heap,
+            Ok(v) if v.eq_ignore_ascii_case("calendar") => SchedKind::Calendar,
+            Ok(v) => panic!("EBCOMM_SCHED must be \"heap\" or \"calendar\", got {v:?}"),
+            Err(_) => SchedKind::Calendar,
+        }
+    }
+
+    /// Instantiate the selected scheduler.
+    pub fn make<T: Send + 'static>(self) -> Box<dyn Scheduler<T> + Send> {
+        match self {
+            SchedKind::Heap => Box::new(HeapScheduler::new()),
+            SchedKind::Calendar => Box::new(CalendarQueue::new()),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedKind::Heap => "heap",
+            SchedKind::Calendar => "calendar",
+        }
+    }
+}
+
+/// Min-heap entry ordered by `(t, seq)` only, freeing the payload from an
+/// `Ord` bound (the former engine heap ordered whole `(t, seq, Ev)`
+/// tuples, but unique `seq` means the payload never decided a
+/// comparison).
+struct HeapEntry<T> {
+    t: Nanos,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for HeapEntry<T> {
+    /// Reversed so `BinaryHeap`'s max-heap pops the minimum `(t, seq)`.
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+/// The reference scheduler: `BinaryHeap`, O(log n) per operation.
+pub struct HeapScheduler<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+}
+
+impl<T> HeapScheduler<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+        }
+    }
+}
+
+impl<T> Default for HeapScheduler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Scheduler<T> for HeapScheduler<T> {
+    fn push(&mut self, t: Nanos, seq: u64, item: T) {
+        self.heap.push(HeapEntry { t, seq, item });
+    }
+
+    fn pop(&mut self) -> Option<(Nanos, u64, T)> {
+        self.heap.pop().map(|e| (e.t, e.seq, e.item))
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Floor of the calendar's bucket-count ladder.
+const MIN_BUCKETS: usize = 4;
+/// Bucket widths are clamped to `[2^0, 2^MAX_WIDTH_LOG2]` ns.
+const MAX_WIDTH_LOG2: u32 = 40;
+
+/// Bucketed calendar-queue scheduler.
+///
+/// Events live in `buckets[day(t) & mask]` where `day(t) = t >>
+/// width_log2`; each bucket is kept sorted *descending* by `(t, seq)` so
+/// the bucket minimum pops from the back in O(1). A `cur_day` cursor
+/// tracks the earliest day any queued event can occupy; `pop` walks at
+/// most one full lap of buckets looking for an event in the cursor's day,
+/// then falls back to a direct minimum search (events far beyond one
+/// bucket lap, e.g. QoS snapshot openings scheduled upfront).
+///
+/// Buckets are `VecDeque`s, not `Vec`s, deliberately: a barrier release
+/// pushes one wake per process at a single timestamp with ascending
+/// seqs, and in a descending bucket each of those lands at the *front* —
+/// O(1) on a deque, but an O(bucket) shift-per-push (O(P²) per barrier)
+/// on a vector.
+pub struct CalendarQueue<T> {
+    buckets: Vec<std::collections::VecDeque<(Nanos, u64, T)>>,
+    /// log2 of the bucket width in ns.
+    width_log2: u32,
+    len: usize,
+    /// Earliest day (t >> width_log2) that may hold a queued event.
+    cur_day: u64,
+}
+
+impl<T> CalendarQueue<T> {
+    /// Default sizing: 16 buckets of 2^13 ns ≈ 8 µs, the simstep cadence
+    /// of the graph-coloring workload. Resizing re-derives both from live
+    /// contents, so the initial guess only matters for the first handful
+    /// of events.
+    pub fn new() -> Self {
+        Self::with_params(16, 13)
+    }
+
+    /// Explicit initial geometry (tests drive resize boundaries with
+    /// deliberately bad guesses). `nbuckets` must be a power of two.
+    pub fn with_params(nbuckets: usize, width_log2: u32) -> Self {
+        assert!(
+            nbuckets.is_power_of_two() && nbuckets >= 1,
+            "bucket count must be a power of two"
+        );
+        assert!(width_log2 <= MAX_WIDTH_LOG2);
+        Self {
+            buckets: (0..nbuckets)
+                .map(|_| std::collections::VecDeque::new())
+                .collect(),
+            width_log2,
+            len: 0,
+            cur_day: 0,
+        }
+    }
+
+    #[inline]
+    fn day(&self, t: Nanos) -> u64 {
+        t >> self.width_log2
+    }
+
+    /// Insert into the home bucket, keeping it sorted descending by
+    /// `(t, seq)`. `seq` uniqueness makes the search key distinct, so
+    /// `binary_search_by` never reports an exact match to worry about.
+    fn insert(&mut self, t: Nanos, seq: u64, item: T) {
+        let day = self.day(t);
+        let mask = self.buckets.len() - 1;
+        let b = &mut self.buckets[(day & mask as u64) as usize];
+        let idx = match b.binary_search_by(|probe| (t, seq).cmp(&(probe.0, probe.1))) {
+            Ok(i) | Err(i) => i,
+        };
+        b.insert(idx, (t, seq, item));
+    }
+
+    /// Rebuild with `new_count` buckets, re-deriving the bucket width
+    /// from the observed event span (≈ mean inter-event gap, rounded to a
+    /// power of two). Deterministic: depends only on queue contents.
+    fn resize(&mut self, new_count: usize) {
+        let entries: Vec<(Nanos, u64, T)> = self
+            .buckets
+            .iter_mut()
+            .flat_map(|b| std::mem::take(b))
+            .collect();
+        debug_assert_eq!(entries.len(), self.len);
+        if self.len >= 2 {
+            let tmin = entries.iter().map(|e| e.0).min().unwrap();
+            let tmax = entries.iter().map(|e| e.0).max().unwrap();
+            let span = tmax - tmin;
+            if span > 0 {
+                let gap = (span / self.len as u64).max(1);
+                // bit length of `gap`: buckets at least as wide as the
+                // mean gap keep ~one event per live bucket.
+                let bits = u64::BITS - gap.leading_zeros();
+                self.width_log2 = bits.min(MAX_WIDTH_LOG2);
+            }
+        }
+        self.buckets = (0..new_count)
+            .map(|_| std::collections::VecDeque::new())
+            .collect();
+        let mut min_key: Option<(Nanos, u64)> = None;
+        for (t, seq, item) in entries {
+            if min_key.map(|k| (t, seq) < k).unwrap_or(true) {
+                min_key = Some((t, seq));
+            }
+            self.insert(t, seq, item);
+        }
+        if let Some((t, _)) = min_key {
+            self.cur_day = self.day(t);
+        }
+    }
+
+    /// Shrink check shared by both pop paths.
+    fn maybe_shrink(&mut self) {
+        let nb = self.buckets.len();
+        if self.len < nb / 2 && nb > MIN_BUCKETS {
+            self.resize(nb / 2);
+        }
+    }
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Scheduler<T> for CalendarQueue<T> {
+    fn push(&mut self, t: Nanos, seq: u64, item: T) {
+        let day = self.day(t);
+        // Maintain the invariant cur_day <= day(min event): an empty
+        // queue re-anchors the cursor, and a push into the past (the
+        // engine never does this, but the property tests do) rewinds it.
+        if self.len == 0 || day < self.cur_day {
+            self.cur_day = day;
+        }
+        self.insert(t, seq, item);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<(Nanos, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len();
+        let mask = (nb - 1) as u64;
+        // Lap scan: the first day with a queued event is the minimum day
+        // (cursor invariant), and all events of one day share a bucket
+        // whose back holds that day's (t, seq) minimum.
+        for _ in 0..nb {
+            let day = self.cur_day;
+            let width = self.width_log2;
+            let b = &mut self.buckets[(day & mask) as usize];
+            if let Some(&(t, _, _)) = b.back() {
+                if t >> width == day {
+                    let e = b.pop_back().unwrap();
+                    self.len -= 1;
+                    self.maybe_shrink();
+                    return Some(e);
+                }
+            }
+            self.cur_day += 1;
+        }
+        // Every event is > one lap ahead of the cursor: direct search for
+        // the global minimum, then re-anchor the cursor on its day.
+        let mut best: Option<(usize, Nanos, u64)> = None;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if let Some(&(t, seq, _)) = b.back() {
+                if best.map(|(_, bt, bs)| (t, seq) < (bt, bs)).unwrap_or(true) {
+                    best = Some((i, t, seq));
+                }
+            }
+        }
+        let (i, t, _) = best.expect("len > 0 but no bucket holds an event");
+        self.cur_day = t >> self.width_log2;
+        let e = self.buckets[i].pop_back().unwrap();
+        self.len -= 1;
+        self.maybe_shrink();
+        Some(e)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a scheduler fully.
+    fn drain<T, S: Scheduler<T>>(s: &mut S) -> Vec<(Nanos, u64, T)> {
+        let mut out = Vec::new();
+        while let Some(e) = s.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn heap_pops_in_time_seq_order() {
+        let mut s = HeapScheduler::new();
+        s.push(30, 0, 'a');
+        s.push(10, 1, 'b');
+        s.push(10, 2, 'c');
+        s.push(20, 3, 'd');
+        let order: Vec<_> = drain(&mut s).into_iter().map(|e| e.2).collect();
+        assert_eq!(order, vec!['b', 'c', 'd', 'a']);
+    }
+
+    #[test]
+    fn calendar_pops_in_time_seq_order() {
+        let mut s = CalendarQueue::new();
+        s.push(30, 0, 'a');
+        s.push(10, 1, 'b');
+        s.push(10, 2, 'c');
+        s.push(20, 3, 'd');
+        let order: Vec<_> = drain(&mut s).into_iter().map(|e| e.2).collect();
+        assert_eq!(order, vec!['b', 'c', 'd', 'a']);
+    }
+
+    #[test]
+    fn tie_breaks_by_seq_regardless_of_push_order() {
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut s = kind.make::<u64>();
+            // Same timestamp, seqs pushed out of order.
+            for &seq in &[5u64, 1, 4, 2, 3, 0] {
+                s.push(77, seq, seq);
+            }
+            let mut got = Vec::new();
+            while let Some((t, seq, item)) = s.pop() {
+                assert_eq!(t, 77);
+                assert_eq!(seq, item);
+                got.push(seq);
+            }
+            assert_eq!(got, vec![0, 1, 2, 3, 4, 5], "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn calendar_matches_heap_through_resize_boundaries() {
+        // Deliberately tiny initial geometry: growth triggers at 9
+        // entries, shrink on the way back down.
+        let mut cal = CalendarQueue::with_params(4, 0);
+        let mut heap = HeapScheduler::new();
+        for seq in 0..1000u64 {
+            let t = (seq * 37) % 4096;
+            cal.push(t, seq, seq);
+            heap.push(t, seq, seq);
+        }
+        assert_eq!(cal.len(), 1000);
+        let c = drain(&mut cal);
+        let h = drain(&mut heap);
+        assert_eq!(c, h);
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn far_future_events_survive_lap_fallback() {
+        // One event far beyond a full bucket lap forces the direct-search
+        // path.
+        let mut s = CalendarQueue::with_params(4, 0);
+        s.push(1 << 30, 0, 'z');
+        s.push(3, 1, 'a');
+        assert_eq!(s.pop(), Some((3, 1, 'a')));
+        assert_eq!(s.pop(), Some((1 << 30, 0, 'z')));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn push_into_past_rewinds_cursor() {
+        let mut s = CalendarQueue::with_params(4, 2);
+        s.push(1000, 0, 0u8);
+        assert_eq!(s.pop(), Some((1000, 0, 0)));
+        // Cursor now sits at day(1000); a past push must still pop first.
+        s.push(2000, 1, 1);
+        s.push(5, 2, 2);
+        assert_eq!(s.pop(), Some((5, 2, 2)));
+        assert_eq!(s.pop(), Some((2000, 1, 1)));
+    }
+
+    #[test]
+    fn empty_queue_reanchors_on_next_push() {
+        let mut s = CalendarQueue::with_params(4, 0);
+        s.push(9999, 0, ());
+        assert!(s.pop().is_some());
+        assert!(s.pop().is_none());
+        // Re-anchor far behind the previous cursor position.
+        s.push(1, 1, ());
+        assert_eq!(s.pop(), Some((1, 1, ())));
+    }
+
+    #[test]
+    fn barrier_release_burst_pops_in_seq_order() {
+        // A barrier release schedules every process at one timestamp with
+        // ascending seqs — the front-insert pattern the deque buckets
+        // exist for. 4096 same-t pushes, then interleave with later work.
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapScheduler::new();
+        let release: Nanos = 123_456_789;
+        for seq in 0..4096u64 {
+            cal.push(release, seq, seq);
+            heap.push(release, seq, seq);
+        }
+        for seq in 4096..4160u64 {
+            cal.push(release + (seq % 7) * 1000, seq, seq);
+            heap.push(release + (seq % 7) * 1000, seq, seq);
+        }
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
+    fn interleaved_steady_state_cadence() {
+        // The engine's actual usage pattern: pop one wake, push the next
+        // a near-constant stride ahead.
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapScheduler::new();
+        let mut seq = 0u64;
+        for p in 0..64u64 {
+            cal.push(p * 13, seq, p);
+            heap.push(p * 13, seq, p);
+            seq += 1;
+        }
+        for i in 0..10_000 {
+            let a = cal.pop().unwrap();
+            let b = heap.pop().unwrap();
+            assert_eq!(a, b, "iter {i}");
+            let (t, _, p) = a;
+            let next = t + 8_000 + (p * 97) % 512;
+            cal.push(next, seq, p);
+            heap.push(next, seq, p);
+            seq += 1;
+        }
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
+    fn sched_kind_env_selection() {
+        // from_env defaults to calendar when unset or unrecognized; the
+        // explicit constructors cover both arms without touching the
+        // process environment (tests run concurrently).
+        assert_eq!(SchedKind::Calendar.label(), "calendar");
+        assert_eq!(SchedKind::Heap.label(), "heap");
+        let mut s = SchedKind::Heap.make::<()>();
+        s.push(1, 0, ());
+        assert_eq!(s.len(), 1);
+        let mut c = SchedKind::Calendar.make::<()>();
+        c.push(1, 0, ());
+        assert_eq!(c.pop(), Some((1, 0, ())));
+    }
+}

@@ -20,11 +20,12 @@
 //! * barrier semantics per asynchronicity mode (Table I), with barrier
 //!   cost growing logarithmically in process count.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::HashMap;
 
+use super::calendar::{SchedKind, Scheduler};
+use super::lanes::EnvelopeLanes;
 use super::modes::{AsyncMode, ModeTiming};
-use crate::conduit::{LocalChannelStats, SendOutcome, StatsSink};
+use crate::conduit::{CounterTranche, LocalChannelStats, SendOutcome, StatsSink};
 use crate::net::{LinkModel, NodeProfile, Topology};
 #[cfg(test)]
 use crate::net::PlacementKind;
@@ -110,6 +111,10 @@ pub struct SimConfig {
     /// Override the link coalescing window (ablation hook): `Some(0)`
     /// disables arrival batching entirely.
     pub coalesce_override: Option<Nanos>,
+    /// Which event scheduler backs the wake queue. Defaults from the
+    /// `EBCOMM_SCHED` env var (`"heap"` / `"calendar"`); both produce
+    /// bit-identical simulations — see `sim::calendar`.
+    pub sched: SchedKind,
 }
 
 impl SimConfig {
@@ -129,6 +134,7 @@ impl SimConfig {
             barrier_tail_ns: 100.0 * MICRO as f64,
             snapshots: None,
             coalesce_override: None,
+            sched: SchedKind::from_env(),
         }
     }
 
@@ -137,15 +143,6 @@ impl SimConfig {
         let tail = rng.exponential(self.barrier_tail_ns * log2.max(1.0));
         (self.barrier_base_ns + self.barrier_per_log2_ns * log2 + tail) as Nanos
     }
-}
-
-/// In-flight/arrived message envelope.
-#[derive(Clone, Debug)]
-struct Envelope<M> {
-    depart: Nanos,
-    arrival: Nanos,
-    touch: u64,
-    payload: M,
 }
 
 /// One directed inter-process channel.
@@ -161,11 +158,13 @@ struct SimChannel<M> {
     extra_drop: f64,
     last_depart: Nanos,
     last_arrival: Nanos,
-    /// In-flight envelopes in push order. Departure times are monotone
+    /// In-flight envelopes in push order, stored SoA (parallel
+    /// depart/arrival/touch/payload lanes). Departure times are monotone
     /// non-decreasing front to back (each departure is scheduled at
     /// `now.max(last_depart + service)`), which is what makes O(1)
-    /// occupancy tracking below sound.
-    queue: VecDeque<Envelope<M>>,
+    /// occupancy tracking below sound; arrivals are monotone too, so
+    /// pulls drain a prefix as one batched lane splice.
+    lanes: EnvelopeLanes<M>,
     /// Envelopes ever accepted into the channel.
     pushed: u64,
     /// Envelopes drained by the receiver (prefix of push order).
@@ -193,7 +192,7 @@ impl<M> SimChannel<M> {
         let mut done = self.departed.max(self.pulled);
         while done < self.pushed {
             let idx = (done - self.pulled) as usize;
-            if self.queue[idx].depart <= now {
+            if self.lanes.depart_at(idx) <= now {
                 done += 1;
             } else {
                 break;
@@ -229,7 +228,7 @@ struct ProcState<W: ShardWorkload> {
     finished: bool,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Ev {
     SnapOpen(usize),
     SnapClose(usize),
@@ -282,7 +281,7 @@ pub struct Engine<W: ShardWorkload> {
     profiles: Vec<NodeProfile>,
     procs: Vec<ProcState<W>>,
     channels: Vec<SimChannel<W::Msg>>,
-    heap: BinaryHeap<Reverse<(Nanos, u64, Ev)>>,
+    sched: Box<dyn Scheduler<Ev> + Send>,
     seq: u64,
     /// Barrier bookkeeping: arrivals and max arrival time.
     barrier_waiting: Vec<bool>,
@@ -364,7 +363,7 @@ impl<W: ShardWorkload> Engine<W> {
                     extra_drop: (pf_src.extra_drop_prob + pf_dst.extra_drop_prob).min(1.0),
                     last_depart: 0,
                     last_arrival: 0,
-                    queue: VecDeque::new(),
+                    lanes: EnvelopeLanes::new(),
                     pushed: 0,
                     pulled: 0,
                     departed: 0,
@@ -428,17 +427,17 @@ impl<W: ShardWorkload> Engine<W> {
             })
             .collect();
 
-        let mut heap = BinaryHeap::new();
+        let mut sched = cfg.sched.make::<Ev>();
         let mut seq = 0u64;
         for p in 0..n {
-            heap.push(Reverse((0, seq, Ev::Wake(p))));
+            sched.push(0, seq, Ev::Wake(p));
             seq += 1;
         }
         if let Some(s) = cfg.snapshots {
             for i in 0..s.count {
-                heap.push(Reverse((s.open_at(i), seq, Ev::SnapOpen(i))));
+                sched.push(s.open_at(i), seq, Ev::SnapOpen(i));
                 seq += 1;
-                heap.push(Reverse((s.close_at(i), seq, Ev::SnapClose(i))));
+                sched.push(s.close_at(i), seq, Ev::SnapClose(i));
                 seq += 1;
             }
         }
@@ -450,7 +449,7 @@ impl<W: ShardWorkload> Engine<W> {
             profiles,
             procs,
             channels,
-            heap,
+            sched,
             seq,
             barrier_waiting: vec![false; n],
             barrier_count: 0,
@@ -463,13 +462,13 @@ impl<W: ShardWorkload> Engine<W> {
     }
 
     fn schedule(&mut self, t: Nanos, ev: Ev) {
-        self.heap.push(Reverse((t, self.seq, ev)));
+        self.sched.push(t, self.seq, ev);
         self.seq += 1;
     }
 
     /// Run to completion and return results.
     pub fn run(mut self) -> SimResult<W> {
-        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+        while let Some((t, _, ev)) = self.sched.pop() {
             if t > self.cfg.run_for {
                 break;
             }
@@ -480,15 +479,10 @@ impl<W: ShardWorkload> Engine<W> {
             }
         }
 
-        let mut qos = ReplicateQos::default();
-        for w in &self.windows {
-            qos.push(w.metrics());
-        }
-        let (mut attempted, mut successful) = (0u64, 0u64);
+        let qos = ReplicateQos::from_windows(&self.windows);
+        let mut totals = CounterTranche::default();
         for ch in &self.channels {
-            let t = ch.stats.tranche();
-            attempted += t.attempted_sends;
-            successful += t.successful_sends;
+            totals.add(&ch.stats.tranche());
         }
         SimResult {
             updates: self.procs.iter().map(|p| p.updates).collect(),
@@ -496,8 +490,8 @@ impl<W: ShardWorkload> Engine<W> {
             run_for: self.cfg.run_for,
             qos,
             windows: self.windows,
-            attempted_sends: attempted,
-            successful_sends: successful,
+            attempted_sends: totals.attempted_sends,
+            successful_sends: totals.successful_sends,
         }
     }
 
@@ -519,23 +513,17 @@ impl<W: ShardWorkload> Engine<W> {
             for k in 0..self.procs[p].incoming.len() {
                 let (cid, local_ch) = self.procs[p].incoming[k];
                 msgs.clear();
-                let mut max_touch: Option<u64> = None;
-                {
+                let summary = {
                     let ch = &mut self.channels[cid];
-                    while let Some(front) = ch.queue.front() {
-                        if front.arrival <= now {
-                            let env = ch.queue.pop_front().unwrap();
-                            ch.pulled += 1;
-                            max_touch = Some(env.touch.max(max_touch.unwrap_or(0)));
-                            msgs.push(env.payload);
-                        } else {
-                            break;
-                        }
-                    }
-                    ch.stats.on_pull(msgs.len() as u64);
+                    // Batched SoA drain: one arrival-lane prefix scan,
+                    // then lane splices into the engine scratch buffer.
+                    let summary = ch.lanes.drain_arrived_into(now, &mut msgs);
+                    ch.pulled += summary.drained;
+                    ch.stats.on_pull(summary.drained);
                     now += ch.link.pull_overhead_ns as Nanos;
-                }
-                if let Some(bundled) = max_touch {
+                    summary
+                };
+                if let Some(bundled) = summary.max_touch {
                     // Update p's touch counter for this peer via the
                     // precomputed reciprocal-channel index.
                     if let Some(oi) = self.procs[p].reciprocal_out[k] {
@@ -593,12 +581,7 @@ impl<W: ShardWorkload> Engine<W> {
                         let arrival = ch.link.coalesce(depart + latency).max(ch.last_arrival);
                         ch.last_depart = depart;
                         ch.last_arrival = arrival;
-                        ch.queue.push_back(Envelope {
-                            depart,
-                            arrival,
-                            touch,
-                            payload,
-                        });
+                        ch.lanes.push(depart, arrival, touch, payload);
                         ch.pushed += 1;
                         SendOutcome::Accepted
                     }
@@ -661,16 +644,8 @@ impl<W: ShardWorkload> Engine<W> {
             .map(|ch| {
                 let counters = ch.stats.tranche();
                 (
-                    QosObservation {
-                        counters,
-                        update_count: self.procs[ch.src].updates,
-                        wall_ns: t,
-                    },
-                    QosObservation {
-                        counters,
-                        update_count: self.procs[ch.dst].updates,
-                        wall_ns: t,
-                    },
+                    QosObservation::capture(counters, self.procs[ch.src].updates, t),
+                    QosObservation::capture(counters, self.procs[ch.dst].updates, t),
                 )
             })
             .collect();
@@ -685,17 +660,9 @@ impl<W: ShardWorkload> Engine<W> {
             let (inlet_before, outlet_before) = self.snap_open[cid];
             self.windows.push(SnapshotWindow {
                 inlet_before,
-                inlet_after: QosObservation {
-                    counters,
-                    update_count: self.procs[ch.src].updates,
-                    wall_ns: t,
-                },
+                inlet_after: QosObservation::capture(counters, self.procs[ch.src].updates, t),
                 outlet_before,
-                outlet_after: QosObservation {
-                    counters,
-                    update_count: self.procs[ch.dst].updates,
-                    wall_ns: t,
-                },
+                outlet_after: QosObservation::capture(counters, self.procs[ch.dst].updates, t),
             });
         }
         self.snap_open.clear();
@@ -789,10 +756,11 @@ mod tests {
         Engine::new(cfg, topo, profiles, shards)
     }
 
-    /// The O(1) departed-prefix occupancy must agree with the former
+    /// The O(1) departed-prefix occupancy must agree with a reference
     /// O(queue) reverse scan on arbitrary interleavings of monotone
     /// pushes, prefix pulls, and monotone queries — including receivers
-    /// that race ahead and pull envelopes before they "depart".
+    /// that race ahead and pull envelopes before they "depart". Runs over
+    /// the SoA lanes, with a shadow AoS departure list as the reference.
     #[test]
     fn occupancy_matches_reference_scan() {
         let mut ch = SimChannel::<u8> {
@@ -805,16 +773,19 @@ mod tests {
             extra_drop: 0.0,
             last_depart: 0,
             last_arrival: 0,
-            queue: VecDeque::new(),
+            lanes: EnvelopeLanes::new(),
             pushed: 0,
             pulled: 0,
             departed: 0,
             stats: LocalChannelStats::new(),
         };
+        // Shadow copy of the queued departure times, AoS-style.
+        let mut shadow: std::collections::VecDeque<Nanos> = std::collections::VecDeque::new();
         let mut rng = Xoshiro256::new(0x0CC);
         let mut now: Nanos = 0;
         let mut last_depart: Nanos = 0;
         let mut checks = 0usize;
+        let mut sink = Vec::new();
         for _ in 0..5_000 {
             now += rng.below(50);
             match rng.below(3) {
@@ -823,34 +794,24 @@ mod tests {
                     // may land in the future relative to `now`.
                     let depart = now.max(last_depart) + rng.below(25);
                     last_depart = depart;
-                    ch.queue.push_back(Envelope {
-                        depart,
-                        arrival: depart + 5,
-                        touch: 0,
-                        payload: 0,
-                    });
+                    ch.lanes.push(depart, depart + 5, 0, 0);
+                    shadow.push_back(depart);
                     ch.pushed += 1;
                 }
                 1 => {
-                    // Receiver drains a front prefix, possibly ahead of
-                    // the sender's clock.
+                    // Receiver drains the arrived prefix, possibly ahead
+                    // of the sender's clock.
                     let horizon = now + rng.below(60);
-                    while let Some(front) = ch.queue.front() {
-                        if front.arrival <= horizon {
-                            ch.queue.pop_front();
-                            ch.pulled += 1;
-                        } else {
-                            break;
-                        }
+                    sink.clear();
+                    let s = ch.lanes.drain_arrived_into(horizon, &mut sink);
+                    for _ in 0..s.drained {
+                        shadow.pop_front();
                     }
+                    ch.pulled += s.drained;
                 }
                 _ => {
-                    let reference = ch
-                        .queue
-                        .iter()
-                        .rev()
-                        .take_while(|e| e.depart > now)
-                        .count();
+                    let reference =
+                        shadow.iter().rev().take_while(|&&d| d > now).count();
                     assert_eq!(ch.occupancy(now), reference, "at t={now}");
                     checks += 1;
                 }

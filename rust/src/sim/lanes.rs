@@ -1,0 +1,171 @@
+//! Structure-of-arrays storage for in-flight channel envelopes.
+//!
+//! The engine's channels formerly queued `Envelope { depart, arrival,
+//! touch, payload }` structs AoS-style in one `VecDeque`. Every occupancy
+//! query walks departure times and every pull walks arrival times — with
+//! AoS layout each step drags the payload (often a pooled `Vec`) through
+//! cache for no reason. Splitting the envelope into parallel lanes keeps
+//! those scans dense in the two `u64` time lanes, and lets a drain move
+//! payloads as one batched `VecDeque::drain` splice into the engine's
+//! reusable scratch buffer instead of a pop-per-message loop.
+//!
+//! Invariants (guaranteed by the engine, checked by the property tests in
+//! `tests/prop_calendar.rs` against an AoS reference model):
+//!
+//! * lanes advance in lockstep — one `push` appends to all four;
+//! * `depart` and `arrival` are monotone non-decreasing front to back
+//!   (each departure is scheduled at `now.max(last_depart + service)`,
+//!   each arrival at `coalesce(..).max(last_arrival)`), which is what
+//!   makes prefix drains and prefix occupancy counts sound.
+
+use std::collections::VecDeque;
+
+use crate::util::Nanos;
+
+/// Summary of one batched drain: how many envelopes left the queue and
+/// the largest touch-counter value they carried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrainSummary {
+    pub drained: u64,
+    pub max_touch: Option<u64>,
+}
+
+/// Parallel per-field queues for one channel's in-flight envelopes.
+#[derive(Clone, Debug, Default)]
+pub struct EnvelopeLanes<M> {
+    depart: VecDeque<Nanos>,
+    arrival: VecDeque<Nanos>,
+    touch: VecDeque<u64>,
+    payload: VecDeque<M>,
+}
+
+impl<M> EnvelopeLanes<M> {
+    pub fn new() -> Self {
+        Self {
+            depart: VecDeque::new(),
+            arrival: VecDeque::new(),
+            touch: VecDeque::new(),
+            payload: VecDeque::new(),
+        }
+    }
+
+    /// Envelopes currently in flight or awaiting pull.
+    pub fn len(&self) -> usize {
+        self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_empty()
+    }
+
+    /// Append one envelope to every lane.
+    pub fn push(&mut self, depart: Nanos, arrival: Nanos, touch: u64, payload: M) {
+        self.depart.push_back(depart);
+        self.arrival.push_back(arrival);
+        self.touch.push_back(touch);
+        self.payload.push_back(payload);
+    }
+
+    /// Departure time of the `i`-th queued envelope (front = oldest).
+    /// Occupancy tracking steps through this lane only — the payload
+    /// lane stays cold.
+    pub fn depart_at(&self, i: usize) -> Nanos {
+        self.depart[i]
+    }
+
+    /// Arrival time of the oldest queued envelope, if any.
+    pub fn front_arrival(&self) -> Option<Nanos> {
+        self.arrival.front().copied()
+    }
+
+    /// Number of queued envelopes with `arrival <= now` — a prefix, by
+    /// the arrival-monotonicity invariant. Scans only the arrival lane.
+    pub fn arrived_prefix(&self, now: Nanos) -> usize {
+        self.arrival.iter().take_while(|&&a| a <= now).count()
+    }
+
+    /// Drain every envelope with `arrival <= now`, appending payloads to
+    /// `out` in push order, and report the count plus the maximum touch
+    /// value among the drained prefix (`None` when nothing had arrived).
+    pub fn drain_arrived_into(&mut self, now: Nanos, out: &mut Vec<M>) -> DrainSummary {
+        let k = self.arrived_prefix(now);
+        if k == 0 {
+            return DrainSummary {
+                drained: 0,
+                max_touch: None,
+            };
+        }
+        self.depart.drain(..k);
+        self.arrival.drain(..k);
+        let max_touch = self.touch.drain(..k).max();
+        out.extend(self.payload.drain(..k));
+        DrainSummary {
+            drained: k as u64,
+            max_touch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laden() -> EnvelopeLanes<u32> {
+        let mut l = EnvelopeLanes::new();
+        l.push(10, 15, 0, 100);
+        l.push(20, 25, 3, 101);
+        l.push(30, 42, 1, 102);
+        l
+    }
+
+    #[test]
+    fn lanes_advance_in_lockstep() {
+        let l = laden();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.depart_at(0), 10);
+        assert_eq!(l.depart_at(2), 30);
+        assert_eq!(l.front_arrival(), Some(15));
+    }
+
+    #[test]
+    fn arrived_prefix_counts_only_arrivals_due() {
+        let l = laden();
+        assert_eq!(l.arrived_prefix(14), 0);
+        assert_eq!(l.arrived_prefix(15), 1);
+        assert_eq!(l.arrived_prefix(41), 2);
+        assert_eq!(l.arrived_prefix(1000), 3);
+    }
+
+    #[test]
+    fn drain_moves_prefix_in_push_order_with_max_touch() {
+        let mut l = laden();
+        let mut out = Vec::new();
+        let s = l.drain_arrived_into(25, &mut out);
+        assert_eq!(s, DrainSummary { drained: 2, max_touch: Some(3) });
+        assert_eq!(out, vec![100, 101]);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.front_arrival(), Some(42));
+        // Remaining envelope keeps its lanes aligned.
+        assert_eq!(l.depart_at(0), 30);
+    }
+
+    #[test]
+    fn drain_nothing_arrived_is_a_noop() {
+        let mut l = laden();
+        let mut out = vec![7u32];
+        let s = l.drain_arrived_into(5, &mut out);
+        assert_eq!(s.drained, 0);
+        assert_eq!(s.max_touch, None);
+        assert_eq!(out, vec![7], "out must be untouched");
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn drain_appends_rather_than_overwrites() {
+        let mut l = laden();
+        let mut out = vec![1u32];
+        l.drain_arrived_into(1000, &mut out);
+        assert_eq!(out, vec![1, 100, 101, 102]);
+        assert!(l.is_empty());
+    }
+}

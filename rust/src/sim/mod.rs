@@ -1,10 +1,14 @@
 //! Discrete-event simulation of a multi-node allocation (DESIGN.md §2).
 
+pub mod calendar;
 pub mod engine;
+pub mod lanes;
 pub mod modes;
 
+pub use calendar::{CalendarQueue, HeapScheduler, SchedKind, Scheduler};
 pub use engine::{
     healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel, Engine, SimConfig,
     SimResult,
 };
+pub use lanes::{DrainSummary, EnvelopeLanes};
 pub use modes::{AsyncMode, ModeTiming};

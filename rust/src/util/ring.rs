@@ -77,6 +77,16 @@ impl<T> RingBuffer<T> {
         self.items.drain(..).collect()
     }
 
+    /// Drain every buffered element into `out` (appending, oldest
+    /// first), returning how many were moved. The allocation-free
+    /// counterpart of [`RingBuffer::drain_all`] for callers that reuse a
+    /// scratch buffer.
+    pub fn drain_into(&mut self, out: &mut Vec<T>) -> usize {
+        let n = self.items.len();
+        out.extend(self.items.drain(..));
+        n
+    }
+
     /// Keep only the newest element, discarding the rest; returns the
     /// number discarded. ("Skipped over to only get the latest message.")
     pub fn skip_to_latest(&mut self) -> usize {
@@ -136,6 +146,19 @@ mod tests {
         assert_eq!(rb.push(3), PushOutcome::Stored);
         assert_eq!(rb.drain_all(), vec![2, 3]);
         assert!(rb.is_empty());
+    }
+
+    #[test]
+    fn drain_into_appends_and_counts() {
+        let mut rb = RingBuffer::new(4, Overflow::Reject);
+        rb.push(1);
+        rb.push(2);
+        let mut out = vec![0];
+        assert_eq!(rb.drain_into(&mut out), 2);
+        assert_eq!(out, vec![0, 1, 2]);
+        assert!(rb.is_empty());
+        assert_eq!(rb.drain_into(&mut out), 0);
+        assert_eq!(out, vec![0, 1, 2]);
     }
 
     #[test]

@@ -8,7 +8,8 @@ use ebcomm::coordinator::{
 use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::qos::{MetricName, SnapshotSchedule};
 use ebcomm::sim::{
-    healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SimConfig, SimResult,
+    healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SchedKind, SimConfig,
+    SimResult,
 };
 use ebcomm::util::rng::Xoshiro256;
 use ebcomm::util::{MILLI, SECOND};
@@ -303,8 +304,11 @@ fn engine_signature(r: &SimResult<GraphColoringShard>) -> u64 {
     s.0
 }
 
-/// The fixed engine scenario behind the golden signature.
-fn golden_engine_run() -> SimResult<GraphColoringShard> {
+/// The fixed engine scenario behind the golden signature, under an
+/// explicit scheduler (the same pair `EBCOMM_SCHED` selects between —
+/// set programmatically here so concurrently running tests never race on
+/// the process environment).
+fn golden_engine_run_with(sched: SchedKind) -> SimResult<GraphColoringShard> {
     let topo = Topology::new(4, PlacementKind::OnePerNode);
     let mut rng = Xoshiro256::new(0x601D);
     let shards: Vec<_> = (0..4)
@@ -323,6 +327,7 @@ fn golden_engine_run() -> SimResult<GraphColoringShard> {
     let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 120 * MILLI);
     cfg.seed = 0x601D;
     cfg.send_buffer = 4;
+    cfg.sched = sched;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         30 * MILLI,
         30 * MILLI,
@@ -334,9 +339,13 @@ fn golden_engine_run() -> SimResult<GraphColoringShard> {
 }
 
 /// Same seed ⇒ bit-identical updates, send accounting, and QoS windows,
-/// run to run. The signature is additionally pinned against a recorded
-/// golden value so hot-path rewrites (occupancy tracking, scratch
-/// buffers, stats tranches) that silently change semantics fail loudly:
+/// run to run — and across schedulers: the calendar queue and the
+/// reference heap must produce the *same* signature (strict `(t, seq)`
+/// dequeue order is the engine's contract, whatever structure backs it).
+/// The signature is additionally pinned against a recorded golden value
+/// so hot-path rewrites (occupancy tracking, scratch buffers, stats
+/// tranches, scheduler/storage swaps) that silently change semantics
+/// fail loudly:
 ///
 /// * record: `EBCOMM_BLESS=1 cargo test --test integration_sim` writes
 ///   `tests/golden/engine_signature.txt`;
@@ -344,9 +353,15 @@ fn golden_engine_run() -> SimResult<GraphColoringShard> {
 ///   signature must match it.
 #[test]
 fn engine_signature_is_reproducible_and_matches_golden() {
-    let a = engine_signature(&golden_engine_run());
-    let b = engine_signature(&golden_engine_run());
+    let a = engine_signature(&golden_engine_run_with(SchedKind::Heap));
+    let b = engine_signature(&golden_engine_run_with(SchedKind::Heap));
     assert_eq!(a, b, "same seed must reproduce bit-identical results");
+    let calendar = engine_signature(&golden_engine_run_with(SchedKind::Calendar));
+    assert_eq!(
+        a, calendar,
+        "calendar scheduler diverged from the heap reference — \
+         (t, seq) dequeue order broken"
+    );
     let hex = format!("{a:016x}");
     eprintln!("engine golden signature: {hex}");
 
@@ -366,6 +381,64 @@ fn engine_signature_is_reproducible_and_matches_golden() {
             "engine results diverged from recorded golden (re-bless only if \
              the change is intentional)"
         );
+    }
+}
+
+/// The scheduler choice must be invisible in every mode — barriers
+/// (lockstep wake bursts), rolling chunks, and snapshot events all
+/// stress different push/pop patterns than best-effort's steady cadence.
+#[test]
+fn scheduler_choice_is_bit_invisible_across_modes() {
+    for mode in AsyncMode::ALL {
+        let run = |sched: SchedKind| {
+            let topo = Topology::new(8, PlacementKind::OnePerNode);
+            let mut rng = Xoshiro256::new(0x5EED);
+            let shards: Vec<_> = (0..8)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig {
+                            simels_per_proc: 4,
+                            ..GcConfig::default()
+                        },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let mut cfg =
+                SimConfig::new(mode, ModeTiming::graph_coloring(8), 40 * MILLI);
+            cfg.seed = 0x5EED;
+            cfg.send_buffer = 4;
+            cfg.sched = sched;
+            cfg.snapshots = Some(SnapshotSchedule::compressed(
+                10 * MILLI,
+                10 * MILLI,
+                5 * MILLI,
+                2,
+            ));
+            let profiles = ebcomm::sim::heterogeneous_profiles(&topo, 0x5EED, 0.20);
+            Engine::new(cfg, topo, profiles, shards).run()
+        };
+        let heap = run(SchedKind::Heap);
+        let calendar = run(SchedKind::Calendar);
+        assert_eq!(heap.updates, calendar.updates, "{}", mode.label());
+        assert_eq!(heap.attempted_sends, calendar.attempted_sends, "{}", mode.label());
+        assert_eq!(heap.successful_sends, calendar.successful_sends, "{}", mode.label());
+        assert_eq!(
+            heap.windows.len(),
+            calendar.windows.len(),
+            "{}",
+            mode.label()
+        );
+        for (a, b) in heap.qos.snapshots.iter().zip(&calendar.qos.snapshots) {
+            assert_eq!(
+                a.walltime_latency_ns.to_bits(),
+                b.walltime_latency_ns.to_bits(),
+                "{}",
+                mode.label()
+            );
+        }
     }
 }
 

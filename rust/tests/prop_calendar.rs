@@ -1,0 +1,247 @@
+//! Property tests pinning the calendar-queue scheduler to the
+//! `BinaryHeap` reference, and the SoA envelope lanes to the former AoS
+//! channel behaviour.
+//!
+//! The engine's determinism (and every golden signature) rests on strict
+//! `(t, seq)` dequeue order; these tests drive both scheduler
+//! implementations with identical randomized push/pop schedules —
+//! including exact-time ties, pushes into the past, and bucket-resize
+//! boundaries — and require bit-identical behaviour.
+
+use ebcomm::sim::{CalendarQueue, EnvelopeLanes, HeapScheduler, SchedKind, Scheduler};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen};
+use ebcomm::util::Nanos;
+
+/// One randomized push/pop schedule applied to both schedulers.
+///
+/// Push times are a mixture tuned to stress every calendar path: mostly
+/// near-monotone steps from the last dequeued time (the engine's wake
+/// cadence), plus exact ties, far-future jumps (lap-scan fallback), and
+/// occasional pushes into the past (cursor rewind).
+fn drive_schedule<A, B>(g: &mut Gen, cal: &mut A, heap: &mut B) -> Result<(), String>
+where
+    A: Scheduler<u64> + ?Sized,
+    B: Scheduler<u64> + ?Sized,
+{
+    let ops = g.usize_in(1, 400);
+    let mut seq = 0u64;
+    let mut last_t: Nanos = 0;
+    for op in 0..ops {
+        if g.chance(0.55) {
+            let style = g.f64_in(0.0, 1.0);
+            let t = if style < 0.5 {
+                last_t + g.u64_in(0, 64)
+            } else if style < 0.7 {
+                last_t // exact tie: seq must break it
+            } else if style < 0.9 {
+                last_t + g.u64_in(0, 1 << 20)
+            } else {
+                g.u64_in(0, last_t.max(1)) // into the past
+            };
+            cal.push(t, seq, seq);
+            heap.push(t, seq, seq);
+            seq += 1;
+        } else {
+            let a = cal.pop();
+            let b = heap.pop();
+            prop_assert(
+                a == b,
+                format!("op {op}: calendar {a:?} != heap {b:?}"),
+            )?;
+            if let Some((t, _, _)) = b {
+                last_t = t;
+            }
+        }
+        prop_assert(
+            cal.len() == heap.len(),
+            format!("op {op}: len {} != {}", cal.len(), heap.len()),
+        )?;
+    }
+    // Drain fully: every queued event must come out in identical order.
+    loop {
+        let a = cal.pop();
+        let b = heap.pop();
+        prop_assert(a == b, format!("drain: calendar {a:?} != heap {b:?}"))?;
+        if b.is_none() {
+            break;
+        }
+    }
+    prop_assert(cal.is_empty(), "calendar not empty after drain")
+}
+
+/// 1k randomized schedules: identical dequeue order, including (t, seq)
+/// tie-breaks, under the default calendar geometry.
+#[test]
+fn calendar_matches_heap_on_1k_random_schedules() {
+    forall(Config::default().cases(1000).seed(0xCA1E), |g| {
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapScheduler::new();
+        drive_schedule(g, &mut cal, &mut heap)
+    });
+}
+
+/// Same equivalence when the initial geometry is deliberately wrong, so
+/// schedules cross grow/shrink thresholds and width recomputation early
+/// and often.
+#[test]
+fn calendar_matches_heap_across_resize_boundaries() {
+    forall(Config::default().cases(300).seed(0x5123), |g| {
+        let nbuckets = 1usize << g.usize_in(0, 4); // 1..16 buckets
+        let width_log2 = g.usize_in(0, 16) as u32;
+        let mut cal = CalendarQueue::with_params(nbuckets, width_log2);
+        let mut heap = HeapScheduler::new();
+        drive_schedule(g, &mut cal, &mut heap)
+    });
+}
+
+/// The factory-selected schedulers behave identically too (this is the
+/// exact pair `EBCOMM_SCHED` switches the engine between).
+#[test]
+fn sched_kind_factories_are_equivalent() {
+    forall(Config::default().cases(100).seed(0xFAC7), |g| {
+        let mut cal = SchedKind::Calendar.make::<u64>();
+        let mut heap = SchedKind::Heap.make::<u64>();
+        drive_schedule(g, cal.as_mut(), heap.as_mut())
+    });
+}
+
+// ---- SoA envelope lanes vs the AoS reference model. -------------------
+
+/// The former AoS channel queue, kept as the behavioural reference.
+#[derive(Clone, Debug, PartialEq)]
+struct AosEnvelope {
+    depart: Nanos,
+    arrival: Nanos,
+    touch: u64,
+    payload: u64,
+}
+
+/// Randomized traffic: the lanes must report the same occupancy scans,
+/// arrival scans, and drain contents (payload order + max touch) as the
+/// AoS queue the engine used to keep.
+#[test]
+fn lanes_match_aos_reference_on_random_traffic() {
+    forall(Config::default().cases(500).seed(0x50A0), |g| {
+        let mut lanes: EnvelopeLanes<u64> = EnvelopeLanes::new();
+        let mut aos: Vec<AosEnvelope> = Vec::new();
+        let mut now: Nanos = 0;
+        let mut last_depart: Nanos = 0;
+        let mut last_arrival: Nanos = 0;
+        let mut payload = 0u64;
+        let ops = g.usize_in(1, 300);
+        for op in 0..ops {
+            now += g.u64_in(0, 50);
+            match g.usize_in(0, 2) {
+                0 => {
+                    // Send: monotone depart and arrival, like the engine.
+                    let depart = now.max(last_depart) + g.u64_in(0, 25);
+                    let arrival = (depart + 5 + g.u64_in(0, 40)).max(last_arrival);
+                    last_depart = depart;
+                    last_arrival = arrival;
+                    let touch = g.u64_in(0, 1000);
+                    lanes.push(depart, arrival, touch, payload);
+                    aos.push(AosEnvelope {
+                        depart,
+                        arrival,
+                        touch,
+                        payload,
+                    });
+                    payload += 1;
+                }
+                1 => {
+                    // Pull: drain the arrived prefix into a scratch Vec.
+                    let horizon = now + g.u64_in(0, 60);
+                    let mut got = Vec::new();
+                    let summary = lanes.drain_arrived_into(horizon, &mut got);
+                    let k = aos.iter().take_while(|e| e.arrival <= horizon).count();
+                    let drained: Vec<AosEnvelope> = aos.drain(..k).collect();
+                    let expect_payloads: Vec<u64> =
+                        drained.iter().map(|e| e.payload).collect();
+                    let expect_touch: Option<u64> = drained.iter().map(|e| e.touch).max();
+                    prop_assert(
+                        summary.max_touch == expect_touch,
+                        format!(
+                            "op {op}: max_touch {:?} != {expect_touch:?}",
+                            summary.max_touch
+                        ),
+                    )?;
+                    prop_assert(
+                        summary.drained == k as u64,
+                        format!("op {op}: drained {} != {k}", summary.drained),
+                    )?;
+                    prop_assert(
+                        got == expect_payloads,
+                        format!("op {op}: payloads {got:?} != {expect_payloads:?}"),
+                    )?;
+                }
+                _ => {
+                    // Occupancy/arrival scans agree with the AoS queue.
+                    let occupancy_ref =
+                        aos.iter().rev().take_while(|e| e.depart > now).count();
+                    let mut occ = 0usize;
+                    for i in (0..lanes.len()).rev() {
+                        if lanes.depart_at(i) > now {
+                            occ += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    prop_assert(
+                        occ == occupancy_ref,
+                        format!("op {op}: occupancy {occ} != {occupancy_ref}"),
+                    )?;
+                    let arrived_ref =
+                        aos.iter().take_while(|e| e.arrival <= now).count();
+                    prop_assert(
+                        lanes.arrived_prefix(now) == arrived_ref,
+                        format!(
+                            "op {op}: arrived {} != {arrived_ref}",
+                            lanes.arrived_prefix(now)
+                        ),
+                    )?;
+                    prop_assert(
+                        lanes.front_arrival() == aos.first().map(|e| e.arrival),
+                        "front arrival mismatch",
+                    )?;
+                }
+            }
+            prop_assert(
+                lanes.len() == aos.len(),
+                format!("op {op}: len {} != {}", lanes.len(), aos.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Max-touch reporting matches the AoS pop-loop exactly (separate test so
+/// the drain test above stays focused on contents/ordering).
+#[test]
+fn lanes_max_touch_matches_aos_reference() {
+    forall(Config::default().cases(300).seed(0x70C4), |g| {
+        let mut lanes: EnvelopeLanes<u64> = EnvelopeLanes::new();
+        let mut aos: Vec<AosEnvelope> = Vec::new();
+        let mut arrival: Nanos = 0;
+        let n = g.usize_in(0, 40);
+        for i in 0..n {
+            arrival += g.u64_in(0, 30);
+            let touch = g.u64_in(0, 500);
+            lanes.push(arrival, arrival, touch, i as u64);
+            aos.push(AosEnvelope {
+                depart: arrival,
+                arrival,
+                touch,
+                payload: i as u64,
+            });
+        }
+        let horizon = g.u64_in(0, arrival + 10);
+        let mut got = Vec::new();
+        let summary = lanes.drain_arrived_into(horizon, &mut got);
+        let k = aos.iter().take_while(|e| e.arrival <= horizon).count();
+        let expect: Option<u64> = aos[..k].iter().map(|e| e.touch).max();
+        prop_assert(
+            summary.max_touch == expect,
+            format!("max_touch {:?} != {expect:?} (k={k})", summary.max_touch),
+        )
+    });
+}
