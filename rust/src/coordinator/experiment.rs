@@ -7,6 +7,7 @@
 //! the treatment structure at reduced virtual runtime; benches run
 //! compressed by default and full scale with `EBCOMM_FULL=1`.
 
+use crate::faults::FaultScenario;
 use crate::net::PlacementKind;
 use crate::qos::SnapshotSchedule;
 use crate::sim::{AsyncMode, CommBackend, ContentionModel, ModeTiming};
@@ -159,6 +160,10 @@ pub struct QosExperiment {
     pub run_for: Nanos,
     /// Node index hosting the faulty profile, if any (§III-G).
     pub faulty_node: Option<usize>,
+    /// Scripted time-varying fault timeline ([`crate::faults`]); the
+    /// default empty scenario keeps replicates on the static-profile
+    /// path, bit-identically.
+    pub scenario: FaultScenario,
     pub seed: u64,
 }
 
@@ -186,6 +191,7 @@ impl QosExperiment {
             schedule,
             run_for,
             faulty_node: None,
+            scenario: FaultScenario::default(),
             seed: 0x0905,
         }
     }
@@ -260,6 +266,186 @@ impl QosExperiment {
         e.faulty_node = include_faulty.then_some(17);
         e
     }
+
+    /// §III-G via the fault-scenario subsystem: the same treatment
+    /// structure as [`Self::faulty_allocation`], but the degradation is
+    /// injected by the always-on canned lac-417 scenario instead of a
+    /// static profile swap (identical degradation factors; the overlay
+    /// path rather than the baked path).
+    pub fn faulty_allocation_scenario(include_faulty: bool) -> Self {
+        let mut e = Self::weak_scaling(256, 4, 1);
+        e.name = if include_faulty {
+            "qos_with_lac417_scenario"
+        } else {
+            "qos_without_lac417_scenario"
+        };
+        if include_faulty {
+            e.scenario = FaultScenario::lac417(17);
+        }
+        e
+    }
+}
+
+/// Canned fault-scenario shapes a [`ScenarioExperiment`] sweeps. Each
+/// builds a concrete [`FaultScenario`] for a cell's allocation size and
+/// run window, so one experiment can sweep the same shape across scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// No faults — the control cell every shape is compared against.
+    Baseline,
+    /// §III-G verbatim: an always-on lac-417 node.
+    Lac417Static,
+    /// A node fail-stops at 40 % of the run and never recovers.
+    MidrunFailure,
+    /// Fabric-wide congestion storm (paper scale: 30 s) starting at 35 %
+    /// of the run.
+    CongestionStorm,
+    /// The allocation splits into two cliques at 35 % of the run and
+    /// heals 30 % later.
+    PartitionHeal,
+    /// Links touching one node flap between degraded and clean across
+    /// the middle 60 % of the run.
+    FlappingClique,
+}
+
+impl ScenarioKind {
+    pub const ALL: [ScenarioKind; 6] = [
+        ScenarioKind::Baseline,
+        ScenarioKind::Lac417Static,
+        ScenarioKind::MidrunFailure,
+        ScenarioKind::CongestionStorm,
+        ScenarioKind::PartitionHeal,
+        ScenarioKind::FlappingClique,
+    ];
+
+    /// Position in [`Self::ALL`] (the enum is fieldless, so the
+    /// discriminant IS the grid index used for seed packing).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ScenarioKind::Baseline => "baseline",
+            ScenarioKind::Lac417Static => "lac417_static",
+            ScenarioKind::MidrunFailure => "midrun_failure",
+            ScenarioKind::CongestionStorm => "congestion_storm",
+            ScenarioKind::PartitionHeal => "partition_heal",
+            ScenarioKind::FlappingClique => "flapping_clique",
+        }
+    }
+
+    /// The degraded node for node-scoped shapes: mid-allocation, like the
+    /// paper's lac-417.
+    pub fn fault_node(n_nodes: usize) -> usize {
+        (n_nodes / 3).min(n_nodes.saturating_sub(1))
+    }
+
+    /// Build the concrete scenario for an allocation of `n_nodes` nodes
+    /// and a `run_for` virtual window. Event times scale with the window
+    /// so compressed and full-scale runs share the treatment structure;
+    /// the storm clamps at the paper's 30 s.
+    pub fn build(self, run_for: Nanos, n_nodes: usize) -> FaultScenario {
+        let node = Self::fault_node(n_nodes);
+        match self {
+            ScenarioKind::Baseline => FaultScenario::default(),
+            ScenarioKind::Lac417Static => FaultScenario::lac417(node),
+            ScenarioKind::MidrunFailure => {
+                FaultScenario::midrun_failure(node, run_for * 2 / 5)
+            }
+            ScenarioKind::CongestionStorm => {
+                FaultScenario::congestion_storm(run_for * 7 / 20, (30 * SECOND).min(run_for / 4))
+            }
+            ScenarioKind::PartitionHeal => {
+                FaultScenario::partition_and_heal(2, run_for * 7 / 20, run_for * 3 / 10)
+            }
+            ScenarioKind::FlappingClique => FaultScenario::flapping_clique(
+                node,
+                run_for / 5,
+                run_for * 3 / 5,
+                (run_for / 64).max(1),
+                (run_for / 64).max(1),
+            ),
+        }
+    }
+}
+
+/// A scenario × mode × scale sweep: the fault-subsystem counterpart of
+/// [`QosExperiment`], reproducing §III-G and extending it with
+/// time-varying shapes across asynchronicity modes and allocation sizes.
+#[derive(Clone, Debug)]
+pub struct ScenarioExperiment {
+    pub name: &'static str,
+    pub scenarios: Vec<ScenarioKind>,
+    pub modes: Vec<AsyncMode>,
+    pub proc_counts: Vec<usize>,
+    /// Processes per node (paper §III-G allocation: 4).
+    pub cpus_per_node: usize,
+    pub replicates: usize,
+    pub schedule: SnapshotSchedule,
+    pub run_for: Nanos,
+    pub send_buffer: usize,
+    pub seed: u64,
+}
+
+impl ScenarioExperiment {
+    /// The full suite: every canned shape × modes 0–3 × 64/256 procs.
+    pub fn paper_suite() -> Self {
+        let full = full_scale();
+        let (schedule, run_for) = if full {
+            (SnapshotSchedule::paper(), 301 * SECOND)
+        } else {
+            (
+                SnapshotSchedule::compressed(400 * MILLI, 400 * MILLI, 100 * MILLI, 6),
+                2_600 * MILLI,
+            )
+        };
+        Self {
+            name: "fault_scenarios",
+            scenarios: ScenarioKind::ALL.to_vec(),
+            modes: vec![
+                AsyncMode::Sync,
+                AsyncMode::RollingBarrier,
+                AsyncMode::FixedBarrier,
+                AsyncMode::BestEffort,
+            ],
+            proc_counts: vec![64, 256],
+            cpus_per_node: 4,
+            replicates: if full { 5 } else { 2 },
+            schedule,
+            run_for,
+            send_buffer: 64,
+            seed: 0xFA57,
+        }
+    }
+
+    /// CI-smoke grid: two shapes per family, 16 procs, modes 0 and 3,
+    /// one replicate — exercises compile/overlay/attribution end to end
+    /// in seconds.
+    pub fn smoke() -> Self {
+        let mut e = Self::paper_suite();
+        e.name = "fault_scenarios_smoke";
+        e.scenarios = vec![
+            ScenarioKind::Baseline,
+            ScenarioKind::Lac417Static,
+            ScenarioKind::CongestionStorm,
+            ScenarioKind::PartitionHeal,
+        ];
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.proc_counts = vec![16];
+        e.replicates = 1;
+        e.schedule = SnapshotSchedule::compressed(150 * MILLI, 150 * MILLI, 50 * MILLI, 4);
+        e.run_for = 700 * MILLI;
+        e
+    }
+
+    pub fn placement(&self) -> PlacementKind {
+        if self.cpus_per_node <= 1 {
+            PlacementKind::OnePerNode
+        } else {
+            PlacementKind::PerNode(self.cpus_per_node)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -327,5 +513,57 @@ mod tests {
     fn faulty_allocation_toggles_node() {
         assert!(QosExperiment::faulty_allocation(true).faulty_node.is_some());
         assert!(QosExperiment::faulty_allocation(false).faulty_node.is_none());
+    }
+
+    #[test]
+    fn scenario_faulty_allocation_mirrors_static_treatment() {
+        let stat = QosExperiment::faulty_allocation(true);
+        let scen = QosExperiment::faulty_allocation_scenario(true);
+        assert_eq!(stat.n_procs, scen.n_procs);
+        assert_eq!(stat.placement, scen.placement);
+        assert_eq!(stat.send_buffer, scen.send_buffer);
+        assert!(stat.scenario.is_empty() && !scen.scenario.is_empty());
+        assert!(QosExperiment::faulty_allocation_scenario(false)
+            .scenario
+            .is_empty());
+    }
+
+    #[test]
+    fn scenario_kinds_build_valid_scenarios_across_scales() {
+        for &n_nodes in &[4usize, 16, 64] {
+            for kind in ScenarioKind::ALL {
+                let sc = kind.build(2_600 * MILLI, n_nodes);
+                sc.validate(n_nodes); // would panic on a bad build
+                if kind == ScenarioKind::Baseline {
+                    assert!(sc.is_empty());
+                } else {
+                    assert!(!sc.is_empty(), "{}", kind.label());
+                }
+            }
+        }
+        // Paper-scale storm clamps to 30 s.
+        let storm = ScenarioKind::CongestionStorm.build(301 * SECOND, 64);
+        assert_eq!(storm.events[0].duration, 30 * SECOND);
+        // Discriminant-as-index stays aligned with ALL's ordering (seed
+        // packing depends on it).
+        for (i, kind) in ScenarioKind::ALL.iter().enumerate() {
+            assert_eq!(kind.index(), i);
+        }
+        let node = ScenarioKind::fault_node(64);
+        assert!(node > 0 && node < 64, "mid-allocation node, got {node}");
+    }
+
+    #[test]
+    fn scenario_suite_covers_modes_0_to_3() {
+        let e = ScenarioExperiment::paper_suite();
+        assert_eq!(e.modes.len(), 4);
+        assert!(!e.modes.contains(&AsyncMode::NoComm));
+        assert_eq!(e.proc_counts, vec![64, 256]);
+        assert_eq!(e.scenarios.len(), 6);
+        assert_eq!(e.send_buffer, 64, "QoS-style buffer");
+        assert_eq!(e.placement(), PlacementKind::PerNode(4));
+        let s = ScenarioExperiment::smoke();
+        assert!(s.scenarios.len() < e.scenarios.len());
+        assert_eq!(s.replicates, 1);
     }
 }

@@ -5,8 +5,11 @@ pub mod experiment;
 pub mod report;
 pub mod runner;
 
-pub use experiment::{BenchmarkExperiment, QosExperiment, Workload};
+pub use experiment::{
+    BenchmarkExperiment, QosExperiment, ScenarioExperiment, ScenarioKind, Workload,
+};
 pub use runner::{
     run_benchmark, run_benchmark_serial, run_benchmark_with_workers, run_qos,
-    run_qos_with_workers,
+    run_qos_with_workers, run_scenario, run_scenario_with_workers, ScenarioPoint,
+    ScenarioResults,
 };

@@ -7,7 +7,8 @@ use crate::stats::{bootstrap_mean_ci95, mean, median, ols, quantile_regression};
 use crate::util::csv::CsvTable;
 use crate::util::fmt_ns;
 
-use super::runner::{BenchmarkResults, QosResults};
+use super::experiment::{ScenarioExperiment, ScenarioKind};
+use super::runner::{BenchmarkResults, QosResults, ScenarioResults};
 
 /// Render a Fig-2/3-style table: per-CPU update rate (or quality) by mode
 /// and CPU count, with bootstrapped 95 % CIs.
@@ -186,6 +187,125 @@ pub fn scaling_regression(
     out
 }
 
+/// Overview table for a scenario sweep: per (scenario, mode, procs)
+/// treatment, the whole-run update rate and failure plus median simstep
+/// period over replicates.
+pub fn scenario_table(title: &str, exp: &ScenarioExperiment, results: &ScenarioResults) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<18} {:<34} {:>6} {:>12} {:>10} {:>14}\n",
+        "scenario", "mode", "procs", "rate/cpu", "fail", "med period"
+    ));
+    for &kind in &exp.scenarios {
+        for &mode in &exp.modes {
+            for &n_procs in &exp.proc_counts {
+                let cells = results.select(kind, mode, n_procs);
+                if cells.is_empty() {
+                    continue;
+                }
+                let rate = mean(&cells.iter().map(|p| p.update_rate_hz).collect::<Vec<_>>());
+                let fail = mean(&cells.iter().map(|p| p.failure_rate).collect::<Vec<_>>());
+                let period = median(&results.all_values(
+                    kind,
+                    mode,
+                    n_procs,
+                    MetricName::SimstepPeriod,
+                ));
+                out.push_str(&format!(
+                    "{:<18} {:<34} {:>6} {:>12.1} {:>10.4} {:>14}\n",
+                    kind.label(),
+                    mode.label(),
+                    n_procs,
+                    rate,
+                    fail,
+                    fmt_ns(period),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Time-resolved attribution block for one treatment: every QoS metric's
+/// median over quiescent windows vs fault-active windows — the query the
+/// scenario subsystem exists to answer.
+pub fn phase_attribution(
+    title: &str,
+    results: &ScenarioResults,
+    scenario: ScenarioKind,
+    mode: AsyncMode,
+    n_procs: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== {title}: {} @ {} procs, {} ==\n",
+        scenario.label(),
+        n_procs,
+        mode.label()
+    ));
+    out.push_str(&format!(
+        "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+        "metric", "n(quiet)", "med(quiet)", "n(fault)", "med(fault)"
+    ));
+    for metric in MetricName::ALL {
+        let (quiet, fault) = results.phase_split(scenario, mode, n_procs, metric);
+        let (mq, mf) = (median(&quiet), median(&fault));
+        let (sq, sf) = match metric {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => (fmt_ns(mq), fmt_ns(mf)),
+            _ => (format!("{mq:.4}"), format!("{mf:.4}")),
+        };
+        out.push_str(&format!(
+            "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+            metric.label(),
+            quiet.len(),
+            sq,
+            fault.len(),
+            sf,
+        ));
+    }
+    out
+}
+
+/// Dump scenario sweep points to CSV (one row per channel-window
+/// snapshot — `ReplicateQos` flattens windows × channels, so `snapshot`
+/// is that flat index, not a chronological window number — with its
+/// phase bitmask) for external analysis. Chronological grouping is
+/// recoverable via `phase_bits` or `snapshot / n_channels`.
+pub fn scenario_csv(results: &ScenarioResults) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "scenario",
+        "mode",
+        "procs",
+        "replicate",
+        "snapshot",
+        "phase_bits",
+        "simstep_period_ns",
+        "simstep_latency",
+        "walltime_latency_ns",
+        "delivery_failure_rate",
+        "delivery_clumpiness",
+    ]);
+    for p in &results.points {
+        for (w, (m, ph)) in p.qos.snapshots.iter().zip(p.qos.phases.iter()).enumerate() {
+            t.push_row(vec![
+                p.scenario.label().to_string(),
+                p.mode.index().to_string(),
+                p.n_procs.to_string(),
+                p.replicate.to_string(),
+                w.to_string(),
+                format!("{:#x}", ph.bits()),
+                format!("{}", m.simstep_period_ns),
+                format!("{}", m.simstep_latency),
+                format!("{}", m.walltime_latency_ns),
+                format!("{}", m.delivery_failure_rate),
+                format!("{}", m.delivery_clumpiness),
+            ]);
+        }
+    }
+    t
+}
+
 /// Dump benchmark points to CSV for external analysis.
 pub fn benchmark_csv(results: &BenchmarkResults) -> CsvTable {
     let mut t = CsvTable::new(vec![
@@ -319,6 +439,52 @@ mod tests {
     fn csv_dumps_have_rows() {
         assert_eq!(benchmark_csv(&fake_bench()).n_rows(), 12);
         assert_eq!(qos_csv(&fake_qos(1.0)).n_rows(), 20);
+    }
+
+    #[test]
+    fn scenario_report_renders_and_attributes_phases() {
+        use crate::coordinator::runner::{ScenarioPoint, ScenarioResults};
+        use crate::faults::ScenarioPhase;
+        use crate::sim::AsyncMode;
+
+        let mk_metrics = |period| QosMetrics {
+            simstep_period_ns: period,
+            simstep_latency: 2.0,
+            walltime_latency_ns: 2.0 * period,
+            delivery_failure_rate: 0.1,
+            delivery_clumpiness: 0.2,
+        };
+        let mut qos = ReplicateQos::default();
+        qos.push_phased(mk_metrics(10.0), ScenarioPhase::QUIESCENT);
+        qos.push_phased(mk_metrics(900.0), ScenarioPhase::single(0));
+        let results = ScenarioResults {
+            points: vec![ScenarioPoint {
+                scenario: ScenarioKind::CongestionStorm,
+                mode: AsyncMode::BestEffort,
+                n_procs: 4,
+                replicate: 0,
+                qos,
+                updates: vec![10; 4],
+                update_rate_hz: 1000.0,
+                failure_rate: 0.05,
+            }],
+        };
+        let mut exp = ScenarioExperiment::smoke();
+        exp.scenarios = vec![ScenarioKind::CongestionStorm];
+        exp.modes = vec![AsyncMode::BestEffort];
+        exp.proc_counts = vec![4];
+        let table = scenario_table("suite", &exp, &results);
+        assert!(table.contains("congestion_storm"), "{table}");
+        let attr = phase_attribution(
+            "attribution",
+            &results,
+            ScenarioKind::CongestionStorm,
+            AsyncMode::BestEffort,
+            4,
+        );
+        assert!(attr.contains("10ns"), "quiet median missing: {attr}");
+        assert!(attr.contains("900ns"), "fault median missing: {attr}");
+        assert_eq!(scenario_csv(&results).n_rows(), 2);
     }
 
     #[test]

@@ -7,16 +7,19 @@
 //! identical `BenchmarkResults`/`QosResults` — guaranteed by tests below
 //! and in `rust/tests/integration_sim.rs`.
 
+use crate::faults::ScenarioPhase;
 use crate::net::{NodeProfile, Topology};
 use crate::qos::{MetricName, ReplicateQos};
 use crate::sim::{healthy_profiles, heterogeneous_profiles, AsyncMode, Engine, SimConfig, SimResult};
-use crate::util::parallel::{default_workers, parallel_map};
+use crate::util::parallel::{default_workers, log_telemetry, parallel_map_lpt};
 use crate::util::rng::Xoshiro256;
 use crate::util::Nanos;
 use crate::workloads::dishtiny::{DeConfig, DishtinyShard};
 use crate::workloads::graph_coloring::{global_conflicts, GcConfig, GraphColoringShard};
 
-use super::experiment::{BenchmarkExperiment, QosExperiment, Workload};
+use super::experiment::{
+    BenchmarkExperiment, QosExperiment, ScenarioExperiment, ScenarioKind, Workload,
+};
 
 /// One benchmark measurement.
 #[derive(Clone, Debug, PartialEq)]
@@ -137,6 +140,9 @@ pub fn run_benchmark_serial(exp: &BenchmarkExperiment) -> BenchmarkResults {
 /// Run a benchmark experiment on up to `workers` threads. Points come
 /// back in grid order (cpu count, then mode, then replicate) whatever
 /// the worker count — results are bit-identical across worker counts.
+/// Cells are *claimed* in longest-processing-time order (cost ∝ CPU
+/// count) so 64/256-proc stragglers start first; per-cell wall times log
+/// under `EBCOMM_SWEEP_TELEMETRY=1`.
 pub fn run_benchmark_with_workers(
     exp: &BenchmarkExperiment,
     workers: usize,
@@ -149,9 +155,13 @@ pub fn run_benchmark_with_workers(
             }
         }
     }
-    let points = parallel_map(workers, &cells, |&(n_cpus, mode, rep)| {
-        run_benchmark_cell(exp, mode, n_cpus, rep)
-    });
+    let (points, timings) = parallel_map_lpt(
+        workers,
+        &cells,
+        |&(n_cpus, _, _)| n_cpus as u64,
+        |&(n_cpus, mode, rep)| run_benchmark_cell(exp, mode, n_cpus, rep),
+    );
+    log_telemetry(exp.name, &timings);
     BenchmarkResults { points }
 }
 
@@ -226,6 +236,7 @@ fn run_qos_replicate(exp: &QosExperiment, rep: usize) -> QosReplicate {
     cfg.send_buffer = exp.send_buffer;
     cfg.added_work_units = exp.added_work_units;
     cfg.snapshots = Some(exp.schedule);
+    cfg.scenario = exp.scenario.clone();
 
     let gc_cfg = GcConfig {
         simels_per_proc: exp.simels_per_cpu,
@@ -255,8 +266,187 @@ pub fn run_qos(exp: &QosExperiment) -> QosResults {
 /// replicate order, bit-identical across worker counts.
 pub fn run_qos_with_workers(exp: &QosExperiment, workers: usize) -> QosResults {
     let reps: Vec<usize> = (0..exp.replicates).collect();
-    let replicates = parallel_map(workers, &reps, |&rep| run_qos_replicate(exp, rep));
+    let (replicates, timings) =
+        parallel_map_lpt(workers, &reps, |_| 0, |&rep| run_qos_replicate(exp, rep));
+    log_telemetry(exp.name, &timings);
     QosResults { replicates }
+}
+
+/// One fault-scenario sweep cell's measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioPoint {
+    pub scenario: ScenarioKind,
+    pub mode: AsyncMode,
+    pub n_procs: usize,
+    pub replicate: usize,
+    /// Per-window QoS with scenario-phase tags (time-resolved
+    /// attribution).
+    pub qos: ReplicateQos,
+    pub updates: Vec<u64>,
+    /// Mean per-CPU update rate over the run (updates/s virtual).
+    pub update_rate_hz: f64,
+    /// Whole-run delivery failure fraction.
+    pub failure_rate: f64,
+}
+
+/// All cells from one [`ScenarioExperiment`], in grid order
+/// (scenario, mode, procs, replicate).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioResults {
+    pub points: Vec<ScenarioPoint>,
+}
+
+impl ScenarioResults {
+    /// Cells of one (scenario, mode, procs) treatment, replicate order.
+    pub fn select(
+        &self,
+        scenario: ScenarioKind,
+        mode: AsyncMode,
+        n_procs: usize,
+    ) -> Vec<&ScenarioPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.scenario == scenario && p.mode == mode && p.n_procs == n_procs)
+            .collect()
+    }
+
+    /// All snapshot values of a metric for one treatment, flattened
+    /// across replicates.
+    pub fn all_values(
+        &self,
+        scenario: ScenarioKind,
+        mode: AsyncMode,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> Vec<f64> {
+        self.select(scenario, mode, n_procs)
+            .iter()
+            .flat_map(|p| p.qos.values(metric))
+            .collect()
+    }
+
+    /// Per-replicate means of a metric for one treatment (OLS inputs).
+    pub fn replicate_means(
+        &self,
+        scenario: ScenarioKind,
+        mode: AsyncMode,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> Vec<f64> {
+        self.select(scenario, mode, n_procs)
+            .iter()
+            .map(|p| p.qos.mean(metric))
+            .collect()
+    }
+
+    /// Per-replicate medians of a metric for one treatment.
+    pub fn replicate_medians(
+        &self,
+        scenario: ScenarioKind,
+        mode: AsyncMode,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> Vec<f64> {
+        self.select(scenario, mode, n_procs)
+            .iter()
+            .map(|p| p.qos.median(metric))
+            .collect()
+    }
+
+    /// Time-resolved attribution for one treatment: snapshot values
+    /// split into (quiescent-window, fault-active-window) populations by
+    /// each window's scenario-phase tag.
+    pub fn phase_split(
+        &self,
+        scenario: ScenarioKind,
+        mode: AsyncMode,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut quiescent = Vec::new();
+        let mut faulted = Vec::new();
+        for p in self.select(scenario, mode, n_procs) {
+            quiescent.extend(p.qos.values_where(metric, ScenarioPhase::is_quiescent));
+            faulted.extend(p.qos.values_where(metric, |ph| !ph.is_quiescent()));
+        }
+        (quiescent, faulted)
+    }
+}
+
+/// Simulate one scenario sweep cell (self-seeded, any worker, any
+/// order). Profiles are homogeneous-healthy — all degradation comes from
+/// the scripted scenario, so baseline cells are the uncontaminated
+/// control.
+fn run_scenario_cell(
+    exp: &ScenarioExperiment,
+    kind: ScenarioKind,
+    mode: AsyncMode,
+    n_procs: usize,
+    rep: usize,
+) -> ScenarioPoint {
+    let topo = Topology::new(n_procs, exp.placement());
+    let profiles = healthy_profiles(&topo);
+    let timing = crate::sim::ModeTiming::graph_coloring(n_procs);
+    let mut cfg = SimConfig::new(mode, timing, exp.run_for);
+    cfg.seed = exp
+        .seed
+        .wrapping_add((rep as u64) << 32)
+        .wrapping_add((kind.index() as u64) << 24)
+        .wrapping_add((mode.index() as u64) << 16)
+        .wrapping_add(n_procs as u64);
+    cfg.send_buffer = exp.send_buffer;
+    cfg.snapshots = Some(exp.schedule);
+    cfg.scenario = kind.build(exp.run_for, topo.n_nodes());
+
+    let gc_cfg = GcConfig {
+        simels_per_proc: 1,
+        ..GcConfig::default()
+    };
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0xFA57);
+    let shards: Vec<_> = (0..n_procs)
+        .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+        .collect();
+    let result = Engine::new(cfg, topo, profiles, shards).run();
+    ScenarioPoint {
+        scenario: kind,
+        mode,
+        n_procs,
+        replicate: rep,
+        update_rate_hz: result.update_rate_per_cpu_hz(),
+        failure_rate: result.overall_failure_rate(),
+        updates: result.updates,
+        qos: result.qos,
+    }
+}
+
+/// Run a scenario experiment's full grid on all host cores
+/// (`EBCOMM_WORKERS` overrides).
+pub fn run_scenario(exp: &ScenarioExperiment) -> ScenarioResults {
+    run_scenario_with_workers(exp, default_workers())
+}
+
+/// [`run_scenario`] on up to `workers` threads. Cells come back in grid
+/// order whatever the worker count; claiming is LPT-ordered (cost ∝
+/// process count) so 256-proc cells start first.
+pub fn run_scenario_with_workers(exp: &ScenarioExperiment, workers: usize) -> ScenarioResults {
+    let mut cells: Vec<(ScenarioKind, AsyncMode, usize, usize)> = Vec::new();
+    for &kind in &exp.scenarios {
+        for &mode in &exp.modes {
+            for &n_procs in &exp.proc_counts {
+                for rep in 0..exp.replicates {
+                    cells.push((kind, mode, n_procs, rep));
+                }
+            }
+        }
+    }
+    let (points, timings) = parallel_map_lpt(
+        workers,
+        &cells,
+        |&(_, _, n_procs, _)| n_procs as u64,
+        |&(kind, mode, n_procs, rep)| run_scenario_cell(exp, kind, mode, n_procs, rep),
+    );
+    log_telemetry(exp.name, &timings);
+    ScenarioResults { points }
 }
 
 #[cfg(test)]
@@ -334,6 +524,54 @@ mod tests {
         assert_eq!(serial.replicates.len(), 3);
         for (i, r) in serial.replicates.iter().enumerate() {
             assert_eq!(r.replicate, i, "replicate order must be deterministic");
+        }
+    }
+
+    fn tiny_scenario() -> ScenarioExperiment {
+        let mut e = ScenarioExperiment::smoke();
+        e.scenarios = vec![ScenarioKind::Baseline, ScenarioKind::CongestionStorm];
+        e.modes = vec![AsyncMode::BestEffort];
+        e.proc_counts = vec![4];
+        e.replicates = 2;
+        e.schedule =
+            crate::qos::SnapshotSchedule::compressed(60 * MILLI, 60 * MILLI, 25 * MILLI, 3);
+        e.run_for = 220 * MILLI;
+        e
+    }
+
+    #[test]
+    fn scenario_runner_produces_grid_with_phase_tags() {
+        let exp = tiny_scenario();
+        let res = run_scenario(&exp);
+        assert_eq!(res.points.len(), 2 * 1 * 1 * 2);
+        for p in &res.points {
+            assert!(p.update_rate_hz > 0.0);
+            assert!(!p.qos.snapshots.is_empty());
+            assert_eq!(p.qos.snapshots.len(), p.qos.phases.len());
+        }
+        // Baseline cells are quiescent throughout; the storm cell tags
+        // at least one window with the active fault.
+        let (bq, bf) =
+            res.phase_split(ScenarioKind::Baseline, AsyncMode::BestEffort, 4, MetricName::SimstepPeriod);
+        assert!(!bq.is_empty() && bf.is_empty());
+        let (_, sf) = res.phase_split(
+            ScenarioKind::CongestionStorm,
+            AsyncMode::BestEffort,
+            4,
+            MetricName::SimstepPeriod,
+        );
+        assert!(!sf.is_empty(), "storm must overlap at least one window");
+    }
+
+    #[test]
+    fn parallel_scenario_sweep_is_bitwise_identical_to_serial() {
+        let exp = tiny_scenario();
+        let serial = run_scenario_with_workers(&exp, 1);
+        let parallel = run_scenario_with_workers(&exp, 4);
+        assert_eq!(serial, parallel);
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.update_rate_hz.to_bits(), b.update_rate_hz.to_bits());
+            assert_eq!(a.failure_rate.to_bits(), b.failure_rate.to_bits());
         }
     }
 

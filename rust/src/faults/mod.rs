@@ -1,0 +1,42 @@
+//! Deterministic fault scenarios: scripted time-varying degradation with
+//! time-resolved QoS attribution.
+//!
+//! The paper's §III-G experiment plants one statically faulty node in a
+//! 256-process allocation; its central claim is that "characterizing the
+//! distribution of quality of service across processing components *and
+//! over time* is critical". This subsystem makes the *over time* half a
+//! first-class experiment input: a [`FaultScenario`] scripts degradation
+//! onset, recovery, flapping links, congestion storms, and
+//! partition-and-heal as a declarative timeline; the engine compiles it
+//! into calendar-queue wake events and consults a mutable overlay
+//! ([`FaultRuntime`]) over the static `NodeProfile`/`LinkModel` tables,
+//! so effective latency/drop/speed factors change mid-run —
+//! deterministically from `SimConfig::seed`. Every QoS snapshot window is
+//! tagged with the [`ScenarioPhase`] (set of faults) active while it was
+//! measured, so metrics can be attributed to the interference regime that
+//! produced them.
+//!
+//! ## Canned scenarios → paper sections
+//!
+//! | constructor | probes |
+//! |---|---|
+//! | [`FaultScenario::lac417`] | §III-G verbatim: the always-on faulty node (`lac-417`); scenario-subsystem equivalent of [`crate::sim::profiles_with_faulty`], which remains available and bit-identical |
+//! | [`FaultScenario::midrun_failure`] | §III-G's motivating threat, time-resolved: a node fail-stops mid-run; best-effort medians should hold while means/tails shift only after onset |
+//! | [`FaultScenario::degrade_recover`] | degradation onset *and recovery* — the transient interference Conduit (Moreno et al. 2021) targets; exercises `RestoreNode` |
+//! | [`FaultScenario::congestion_storm`] | §III-C/D's latency regime shifted in time: a fabric-wide storm (cf. Bienz et al. 2018 on time- and topology-local congestion dominating irregular point-to-point performance) |
+//! | [`FaultScenario::partition_and_heal`] | scalability under the harshest transient: the allocation splits into cliques, then heals (`PartitionCliques` + `Heal`) |
+//! | [`FaultScenario::flapping_clique`] | §III-G's outlier-generating clique made intermittent: links touching one node flap between degraded and clean |
+//!
+//! An **empty** scenario is guaranteed bit-identical to the static-profile
+//! path (the engine skips the overlay entirely); a scenario whose events
+//! never activate inside the run window is bit-identical too, because the
+//! overlay's effective tables equal the static tables whenever nothing is
+//! active — both pinned by the golden-signature tests.
+
+pub mod overlay;
+pub mod scenario;
+
+pub use overlay::{clique_of, FaultRuntime};
+pub use scenario::{
+    FaultEvent, FaultKind, FaultScenario, LinkFault, NodeFault, ScenarioPhase, ALWAYS,
+};

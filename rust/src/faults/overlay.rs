@@ -1,0 +1,420 @@
+//! The mutable fault overlay the engine consults at run time.
+//!
+//! [`FaultRuntime`] sits between the static `NodeProfile`/`LinkModel`
+//! tables and the DES hot path. The engine schedules one calendar-queue
+//! wake per scenario event (plus the chained toggles a flapping link
+//! generates); each wake calls [`FaultRuntime::on_event`], which advances
+//! that event's state machine (`Pending → Active → Done`) and pushes or
+//! pops the corresponding overlay entry. Effective per-node profiles and
+//! link modifiers are **recomputed by folding the active set from the
+//! static tables on every transition** — transitions are rare (a handful
+//! per run), queries are per-simstep — so the hot path reads cached
+//! tables and the fold is always evaluated from the identity in event
+//! order, making effective factors independent of activation history
+//! (pinned by `tests/prop_faults.rs` against a reference fold).
+//!
+//! Determinism: the runtime consumes no randomness at all — every
+//! transition time is a pure function of the scenario — so fault runs are
+//! reproducible from `SimConfig::seed` exactly like fault-free ones.
+
+use crate::net::NodeProfile;
+use crate::util::Nanos;
+
+use super::scenario::{FaultKind, FaultScenario, LinkFault, ScenarioPhase};
+
+/// Per-event state machine. Windowed degradations traverse all three
+/// states; commands jump straight to `Done`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EventState {
+    Pending,
+    Active { flap_on: bool },
+    Done,
+}
+
+/// Block-contiguous clique of `node` when the allocation is split into
+/// `cliques` blocks (every clique non-empty for `cliques <= n_nodes`).
+pub fn clique_of(node: usize, cliques: usize, n_nodes: usize) -> usize {
+    node * cliques / n_nodes.max(1)
+}
+
+/// Mutable overlay over the static per-node profile table.
+pub struct FaultRuntime {
+    scenario: FaultScenario,
+    statics: Vec<NodeProfile>,
+    state: Vec<EventState>,
+    /// Bitmask of currently-active events.
+    active: ScenarioPhase,
+    /// Overlay stack depth: count of active windowed effects. Guarded
+    /// against underflow — a pop without a matching push is a state
+    /// machine bug, not a recoverable condition.
+    depth: usize,
+    /// Cached fold of active `DegradeNode` faults over `statics`.
+    eff_nodes: Vec<NodeProfile>,
+    /// Cached per-node link modifiers from active "on" flaps.
+    node_link: Vec<LinkFault>,
+    /// Cached fold of active congestion storms (internode links).
+    storm: LinkFault,
+    /// Active partition: `(cliques, cut)`; multiple concurrent partitions
+    /// fold into the finest clique count with stacked cuts.
+    partition: Option<(usize, LinkFault)>,
+    n_nodes: usize,
+}
+
+impl FaultRuntime {
+    /// Validate and load a scenario over the static profile table.
+    pub fn new(scenario: FaultScenario, statics: Vec<NodeProfile>) -> Self {
+        scenario.validate(statics.len());
+        let n = statics.len();
+        Self {
+            state: vec![EventState::Pending; scenario.events.len()],
+            active: ScenarioPhase::QUIESCENT,
+            depth: 0,
+            eff_nodes: statics.clone(),
+            node_link: vec![LinkFault::IDENTITY; n],
+            storm: LinkFault::IDENTITY,
+            partition: None,
+            n_nodes: n,
+            statics,
+            scenario,
+        }
+    }
+
+    /// The loaded scenario (engine compile reads event start times).
+    pub fn scenario(&self) -> &FaultScenario {
+        &self.scenario
+    }
+
+    /// Events currently active.
+    pub fn phase(&self) -> ScenarioPhase {
+        self.active
+    }
+
+    /// Overlay stack depth (active windowed effects).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn is_active(&self, k: usize) -> bool {
+        matches!(self.state[k], EventState::Active { .. })
+    }
+
+    /// Is flap event `k` currently in its degraded sub-phase?
+    /// (Always false for non-flap events; test/instrumentation hook.)
+    pub fn flap_on(&self, k: usize) -> bool {
+        matches!(self.state[k], EventState::Active { flap_on: true })
+            && matches!(self.scenario.events[k].kind, FaultKind::FlapLink { .. })
+    }
+
+    /// Effective profile of `node` under the current overlay.
+    #[inline]
+    pub fn node_profile(&self, node: usize) -> &NodeProfile {
+        &self.eff_nodes[node]
+    }
+
+    /// All effective node profiles (tests / reporting).
+    pub fn effective_nodes(&self) -> &[NodeProfile] {
+        &self.eff_nodes
+    }
+
+    /// Aggregate link-level modifiers for a channel between `src_node`
+    /// and `dst_node`. Flap modifiers follow their node onto every
+    /// touching link; storms and partitions only affect internode
+    /// (`crossnode`) links.
+    #[inline]
+    pub fn link_mods(&self, src_node: usize, dst_node: usize, crossnode: bool) -> LinkFault {
+        let mut f = self.node_link[src_node];
+        if dst_node != src_node {
+            f = f.stack(&self.node_link[dst_node]);
+        }
+        if crossnode {
+            f = f.stack(&self.storm);
+            if let Some((cliques, cut)) = self.partition {
+                if clique_of(src_node, cliques, self.n_nodes)
+                    != clique_of(dst_node, cliques, self.n_nodes)
+                {
+                    f = f.stack(&cut);
+                }
+            }
+        }
+        f
+    }
+
+    /// Advance event `k`'s state machine at time `t`; returns the next
+    /// wake time the caller must schedule for this event, if any. Wakes
+    /// for events a command already deactivated are no-ops — the overlay
+    /// never pops what is not pushed.
+    pub fn on_event(&mut self, k: usize, t: Nanos) -> Option<Nanos> {
+        let ev = self.scenario.events[k];
+        match self.state[k] {
+            EventState::Done => None,
+            EventState::Pending => {
+                if ev.kind.is_instant() {
+                    self.state[k] = EventState::Done;
+                    match ev.kind {
+                        FaultKind::RestoreNode { node } => self.deactivate_node(node),
+                        FaultKind::Heal => self.deactivate_all(),
+                        _ => unreachable!("only commands are instant"),
+                    }
+                    self.recompute();
+                    return None;
+                }
+                self.state[k] = EventState::Active { flap_on: true };
+                self.active = self.active.union(ScenarioPhase::single(k));
+                self.depth += 1;
+                self.recompute();
+                let end = ev.end();
+                match ev.kind {
+                    FaultKind::FlapLink { on_for, .. } => {
+                        Some(t.saturating_add(on_for).min(end))
+                    }
+                    _ if end == Nanos::MAX => None,
+                    _ => Some(end),
+                }
+            }
+            EventState::Active { flap_on } => {
+                if t >= ev.end() {
+                    self.deactivate(k);
+                    self.recompute();
+                    return None;
+                }
+                if let FaultKind::FlapLink {
+                    on_for, off_for, ..
+                } = ev.kind
+                {
+                    let now_on = !flap_on;
+                    self.state[k] = EventState::Active { flap_on: now_on };
+                    self.recompute();
+                    let step = if now_on { on_for } else { off_for };
+                    Some(t.saturating_add(step).min(ev.end()))
+                } else {
+                    // Spurious early wake (the engine never produces one);
+                    // keep waiting for the window end.
+                    Some(ev.end())
+                }
+            }
+        }
+    }
+
+    /// Pop event `k` off the overlay if (and only if) it is active.
+    fn deactivate(&mut self, k: usize) {
+        if matches!(self.state[k], EventState::Active { .. }) {
+            self.state[k] = EventState::Done;
+            self.active = self.active.remove(k);
+            self.depth = self
+                .depth
+                .checked_sub(1)
+                .expect("overlay pop without matching push");
+        }
+    }
+
+    /// `RestoreNode`: deactivate active degradations targeting `node`.
+    fn deactivate_node(&mut self, node: usize) {
+        for k in 0..self.scenario.events.len() {
+            let hit = match self.scenario.events[k].kind {
+                FaultKind::DegradeNode { node: n, .. } | FaultKind::FlapLink { node: n, .. } => {
+                    n == node
+                }
+                _ => false,
+            };
+            if hit {
+                self.deactivate(k);
+            }
+        }
+    }
+
+    /// `Heal`: deactivate everything.
+    fn deactivate_all(&mut self) {
+        for k in 0..self.scenario.events.len() {
+            self.deactivate(k);
+        }
+    }
+
+    /// Rebuild every cached effective table as a fold of the active set
+    /// over the static tables, in event order. When nothing is active the
+    /// caches equal the static tables bit-for-bit.
+    fn recompute(&mut self) {
+        self.eff_nodes.copy_from_slice(&self.statics);
+        for f in self.node_link.iter_mut() {
+            *f = LinkFault::IDENTITY;
+        }
+        self.storm = LinkFault::IDENTITY;
+        self.partition = None;
+        for k in 0..self.scenario.events.len() {
+            let flap_on = match self.state[k] {
+                EventState::Active { flap_on } => flap_on,
+                _ => continue,
+            };
+            match self.scenario.events[k].kind {
+                FaultKind::DegradeNode { node, fault } => {
+                    let base = self.eff_nodes[node];
+                    self.eff_nodes[node] = fault.apply(&base);
+                }
+                FaultKind::FlapLink { node, fault, .. } => {
+                    if flap_on {
+                        self.node_link[node] = self.node_link[node].stack(&fault);
+                    }
+                }
+                FaultKind::CongestionStorm { fault } => {
+                    self.storm = self.storm.stack(&fault);
+                }
+                FaultKind::PartitionCliques { cliques, cut } => {
+                    self.partition = Some(match self.partition {
+                        None => (cliques, cut),
+                        Some((c, prev)) => (c.max(cliques), prev.stack(&cut)),
+                    });
+                }
+                FaultKind::RestoreNode { .. } | FaultKind::Heal => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::scenario::{FaultScenario, NodeFault, ALWAYS};
+
+    fn healthy(n: usize) -> Vec<NodeProfile> {
+        vec![NodeProfile::healthy(); n]
+    }
+
+    #[test]
+    fn clique_blocks_are_contiguous_and_complete() {
+        for (n, c) in [(4, 2), (16, 4), (7, 3), (64, 2)] {
+            let cliques: Vec<usize> = (0..n).map(|i| clique_of(i, c, n)).collect();
+            // Monotone non-decreasing (contiguous blocks)…
+            assert!(cliques.windows(2).all(|w| w[0] <= w[1]), "{cliques:?}");
+            // …covering every clique index.
+            let mut seen = cliques.clone();
+            seen.dedup();
+            assert_eq!(seen, (0..c).collect::<Vec<_>>(), "n={n} c={c}");
+        }
+    }
+
+    #[test]
+    fn degrade_window_activates_and_expires() {
+        let sc = FaultScenario::default().with(100, 50, FaultKind::DegradeNode {
+            node: 1,
+            fault: NodeFault::lac417(),
+        });
+        let mut rt = FaultRuntime::new(sc, healthy(4));
+        assert!(rt.phase().is_quiescent());
+        assert_eq!(rt.depth(), 0);
+
+        let next = rt.on_event(0, 100);
+        assert_eq!(next, Some(150));
+        assert!(rt.phase().contains(0));
+        assert_eq!(rt.depth(), 1);
+        assert_eq!(
+            rt.node_profile(1).latency_factor,
+            NodeProfile::faulty_lac417().latency_factor
+        );
+        // Untouched nodes stay bitwise static.
+        assert_eq!(
+            rt.node_profile(0).latency_factor.to_bits(),
+            NodeProfile::healthy().latency_factor.to_bits()
+        );
+
+        assert_eq!(rt.on_event(0, 150), None);
+        assert!(rt.phase().is_quiescent());
+        assert_eq!(rt.depth(), 0);
+        assert_eq!(
+            rt.node_profile(1).latency_factor.to_bits(),
+            NodeProfile::healthy().latency_factor.to_bits()
+        );
+    }
+
+    #[test]
+    fn heal_deactivates_and_stale_end_wake_is_noop() {
+        let sc = FaultScenario::default()
+            .with(10, 100, FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            })
+            .with(50, 0, FaultKind::Heal);
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 10), Some(110));
+        assert_eq!(rt.link_mods(0, 1, true).latency_factor, 25.0);
+        assert_eq!(rt.on_event(1, 50), None); // heal
+        assert!(rt.phase().is_quiescent());
+        assert_eq!(rt.depth(), 0);
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+        // The storm's own end wake still arrives at 110: must be a no-op.
+        assert_eq!(rt.on_event(0, 110), None);
+        assert_eq!(rt.depth(), 0);
+    }
+
+    #[test]
+    fn restore_node_is_selective() {
+        let sc = FaultScenario::default()
+            .with(0, ALWAYS, FaultKind::DegradeNode {
+                node: 0,
+                fault: NodeFault::lac417(),
+            })
+            .with(0, ALWAYS, FaultKind::DegradeNode {
+                node: 1,
+                fault: NodeFault::lac417(),
+            })
+            .with(20, 0, FaultKind::RestoreNode { node: 0 });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 0), None); // ALWAYS: no end wake
+        assert_eq!(rt.on_event(1, 0), None);
+        assert_eq!(rt.depth(), 2);
+        assert_eq!(rt.on_event(2, 20), None);
+        assert!(!rt.phase().contains(0));
+        assert!(rt.phase().contains(1));
+        assert_eq!(rt.depth(), 1);
+        assert_eq!(
+            rt.node_profile(0).latency_factor.to_bits(),
+            NodeProfile::healthy().latency_factor.to_bits()
+        );
+        assert!(rt.node_profile(1).latency_factor > 100.0);
+    }
+
+    #[test]
+    fn flap_toggles_until_window_end() {
+        let sc = FaultScenario::flapping_clique(0, 100, 50, 10, 5);
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        // Activation: on for 10.
+        assert_eq!(rt.on_event(0, 100), Some(110));
+        assert!(rt.link_mods(0, 1, true).extra_drop_prob > 0.0);
+        // Off for 5.
+        assert_eq!(rt.on_event(0, 110), Some(115));
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+        assert!(rt.phase().contains(0), "flap stays phase-active while off");
+        // On again for 10.
+        assert_eq!(rt.on_event(0, 115), Some(125));
+        assert!(rt.link_mods(0, 1, true).extra_drop_prob > 0.0);
+        // …and the chain clamps to the window end (150).
+        assert_eq!(rt.on_event(0, 125), Some(130));
+        assert_eq!(rt.on_event(0, 130), Some(140));
+        assert_eq!(rt.on_event(0, 140), Some(145));
+        assert_eq!(rt.on_event(0, 145), Some(150));
+        assert_eq!(rt.on_event(0, 150), None);
+        assert!(rt.phase().is_quiescent());
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+    }
+
+    #[test]
+    fn partition_cuts_cross_clique_internode_links_only() {
+        let sc = FaultScenario::partition_and_heal(2, 0, 100);
+        let mut rt = FaultRuntime::new(sc, healthy(4));
+        assert_eq!(rt.on_event(0, 0), None); // ALWAYS + explicit heal
+        // Nodes {0,1} vs {2,3}: cross-clique internode links are cut…
+        assert_eq!(rt.link_mods(0, 2, true).extra_drop_prob, 1.0);
+        assert_eq!(rt.link_mods(1, 3, true).extra_drop_prob, 1.0);
+        // …same-clique and intranode links are untouched.
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+        assert_eq!(rt.link_mods(0, 2, false), LinkFault::IDENTITY);
+        assert_eq!(rt.on_event(1, 100), None); // heal
+        assert_eq!(rt.link_mods(0, 2, true), LinkFault::IDENTITY);
+    }
+
+    #[test]
+    fn storm_hits_internode_links_only() {
+        let sc = FaultScenario::congestion_storm(0, 10);
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        rt.on_event(0, 0);
+        assert_eq!(rt.link_mods(0, 1, true).latency_factor, 25.0);
+        assert_eq!(rt.link_mods(0, 0, false), LinkFault::IDENTITY);
+    }
+}

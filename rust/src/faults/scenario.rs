@@ -1,0 +1,546 @@
+//! Declarative fault-scenario timelines.
+//!
+//! A [`FaultScenario`] is a list of [`FaultEvent`]s — each a degradation
+//! (or command) with a start time, a duration, and intensity parameters.
+//! Scenarios are *data*: the engine compiles them into calendar-queue wake
+//! events at construction ([`crate::sim::SimConfig::scenario`]) and the
+//! [`crate::faults::FaultRuntime`] overlay interprets them at run time,
+//! deterministically — the same `(scenario, seed)` pair always produces a
+//! bit-identical simulation.
+//!
+//! Two event families exist:
+//!
+//! * **windowed degradations** (`DegradeNode`, `FlapLink`,
+//!   `CongestionStorm`, `PartitionCliques`) — active over
+//!   `[start, start + duration)`, or until a command deactivates them
+//!   ([`ALWAYS`] never self-expires);
+//! * **instantaneous commands** (`RestoreNode`, `Heal`) — fire once at
+//!   `start` and deactivate currently-active degradations.
+//!
+//! [`ScenarioPhase`] is the bitmask of scenario events active at an
+//! instant (or over a snapshot window); the QoS layer carries it on every
+//! observation so metrics can be attributed to the faults in force when
+//! they were measured (the paper's "distribution of quality of service
+//! ... and over time" concern, §III-G / Conclusion).
+
+use crate::net::NodeProfile;
+use crate::util::{Nanos, MILLI};
+
+/// Duration sentinel: the effect never self-expires — it stays active
+/// until an explicit `RestoreNode`/`Heal` command or the end of the run.
+pub const ALWAYS: Nanos = Nanos::MAX;
+
+/// The set of scenario events active at an instant (or over a window),
+/// as a bitmask of event indices — scenarios are capped at 64 events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct ScenarioPhase(u64);
+
+impl ScenarioPhase {
+    /// No scenario fault active (also the phase of every static-profile
+    /// run).
+    pub const QUIESCENT: ScenarioPhase = ScenarioPhase(0);
+
+    /// Phase containing exactly scenario event `event`.
+    pub fn single(event: usize) -> Self {
+        assert!(event < 64, "scenario events are capped at 64");
+        ScenarioPhase(1 << event)
+    }
+
+    pub fn union(self, other: Self) -> Self {
+        ScenarioPhase(self.0 | other.0)
+    }
+
+    pub fn remove(self, event: usize) -> Self {
+        if event >= 64 {
+            return self;
+        }
+        ScenarioPhase(self.0 & !(1u64 << event))
+    }
+
+    pub fn contains(self, event: usize) -> bool {
+        event < 64 && self.0 & (1u64 << event) != 0
+    }
+
+    pub fn is_quiescent(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Number of active events.
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.is_quiescent()
+    }
+
+    pub fn bits(self) -> u64 {
+        self.0
+    }
+
+    /// Indices of the active events, ascending.
+    pub fn events(self) -> impl Iterator<Item = usize> {
+        (0..64).filter(move |&i| self.0 & (1u64 << i) != 0)
+    }
+}
+
+/// Node-scoped degradation factors, folded over the static
+/// [`NodeProfile`]: multiplicative speed/latency, additive (clamped)
+/// drop, max-combined jitter and stall scale. Applying the identity fold
+/// leaves a profile bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFault {
+    /// Multiplies the profile's compute-duration factor.
+    pub speed_factor: f64,
+    /// Raises (never lowers) per-update lognormal jitter.
+    pub jitter_sigma: f64,
+    /// Raises (never lowers) the mean OS-noise stall duration, ns.
+    pub stall_mean_ns: f64,
+    /// Multiplies latency of links touching the node.
+    pub latency_factor: f64,
+    /// Adds per-send drop probability on links touching the node.
+    pub extra_drop_prob: f64,
+}
+
+impl NodeFault {
+    pub fn identity() -> Self {
+        Self {
+            speed_factor: 1.0,
+            jitter_sigma: 0.0,
+            stall_mean_ns: 0.0,
+            latency_factor: 1.0,
+            extra_drop_prob: 0.0,
+        }
+    }
+
+    /// Degradation factors reproducing the paper's `lac-417` (§III-G):
+    /// over a healthy profile the effective profile equals
+    /// [`NodeProfile::faulty_lac417`] exactly.
+    pub fn lac417() -> Self {
+        Self {
+            speed_factor: 1.35,
+            jitter_sigma: 0.8,
+            stall_mean_ns: 180.0 * MILLI as f64,
+            latency_factor: 400.0,
+            extra_drop_prob: 0.35,
+        }
+    }
+
+    /// Near-total mid-run failure: the node crawls, its links drop almost
+    /// everything — fail-stop as seen by a best-effort neighbor.
+    pub fn fail_stop() -> Self {
+        Self {
+            speed_factor: 25.0,
+            jitter_sigma: 1.0,
+            stall_mean_ns: 400.0 * MILLI as f64,
+            latency_factor: 2_000.0,
+            extra_drop_prob: 0.95,
+        }
+    }
+
+    /// Fold this fault onto a base profile.
+    pub fn apply(&self, base: &NodeProfile) -> NodeProfile {
+        NodeProfile {
+            speed_factor: base.speed_factor * self.speed_factor,
+            jitter_sigma: base.jitter_sigma.max(self.jitter_sigma),
+            stall_prob: base.stall_prob,
+            stall_mean_ns: base.stall_mean_ns.max(self.stall_mean_ns),
+            latency_factor: base.latency_factor * self.latency_factor,
+            extra_drop_prob: (base.extra_drop_prob + self.extra_drop_prob).min(1.0),
+        }
+    }
+}
+
+/// Link-scoped degradation: multiplicative latency, additive (clamped)
+/// drop. Stacks associatively enough for the overlay's recompute-by-fold
+/// (the fold is always evaluated from the identity in event order, so
+/// float non-associativity never produces order-dependent results).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    pub latency_factor: f64,
+    pub extra_drop_prob: f64,
+}
+
+impl LinkFault {
+    pub const IDENTITY: LinkFault = LinkFault {
+        latency_factor: 1.0,
+        extra_drop_prob: 0.0,
+    };
+
+    /// A cluster-fabric congestion storm: heavy latency inflation plus
+    /// moderate loss on every internode link.
+    pub fn storm() -> Self {
+        Self {
+            latency_factor: 25.0,
+            extra_drop_prob: 0.15,
+        }
+    }
+
+    /// One flapping endpoint: bursts of severe latency and loss while the
+    /// link is "down-ish".
+    pub fn flap() -> Self {
+        Self {
+            latency_factor: 60.0,
+            extra_drop_prob: 0.5,
+        }
+    }
+
+    /// A clean partition cut: nothing crosses.
+    pub fn cut() -> Self {
+        Self {
+            latency_factor: 1.0,
+            extra_drop_prob: 1.0,
+        }
+    }
+
+    /// Stack another fault on top of this one.
+    pub fn stack(&self, other: &LinkFault) -> LinkFault {
+        LinkFault {
+            latency_factor: self.latency_factor * other.latency_factor,
+            extra_drop_prob: (self.extra_drop_prob + other.extra_drop_prob).min(1.0),
+        }
+    }
+}
+
+/// What one scenario event does.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Degrade one node's compute and links by `fault` for the event
+    /// window.
+    DegradeNode { node: usize, fault: NodeFault },
+    /// Command: deactivate every active `DegradeNode`/`FlapLink` targeting
+    /// `node`.
+    RestoreNode { node: usize },
+    /// Links touching `node` oscillate: degraded by `fault` for `on_for`,
+    /// clean for `off_for`, repeating across the event window.
+    FlapLink {
+        node: usize,
+        on_for: Nanos,
+        off_for: Nanos,
+        fault: LinkFault,
+    },
+    /// Degrade every internode link by `fault` for the event window.
+    CongestionStorm { fault: LinkFault },
+    /// Split the nodes into `cliques` contiguous blocks; internode links
+    /// crossing a block boundary suffer `cut` for the event window.
+    PartitionCliques { cliques: usize, cut: LinkFault },
+    /// Command: deactivate every active degradation.
+    Heal,
+}
+
+impl FaultKind {
+    /// Commands fire once and hold no window of their own.
+    pub fn is_instant(&self) -> bool {
+        matches!(self, FaultKind::RestoreNode { .. } | FaultKind::Heal)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::DegradeNode { .. } => "degrade",
+            FaultKind::RestoreNode { .. } => "restore",
+            FaultKind::FlapLink { .. } => "flap",
+            FaultKind::CongestionStorm { .. } => "storm",
+            FaultKind::PartitionCliques { .. } => "partition",
+            FaultKind::Heal => "heal",
+        }
+    }
+}
+
+/// One timed entry of a scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the event fires (window opens, or command executes).
+    pub start: Nanos,
+    /// Window length for degradations ([`ALWAYS`] never self-expires);
+    /// ignored for commands.
+    pub duration: Nanos,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// End of the event's window (saturating; [`ALWAYS`] yields
+    /// `Nanos::MAX`).
+    pub fn end(&self) -> Nanos {
+        self.start.saturating_add(self.duration)
+    }
+}
+
+/// A declarative timeline of fault events. The default (empty) scenario
+/// leaves the engine on the static-profile path, bit-identically.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultScenario {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultScenario {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Builder: append one event.
+    pub fn with(mut self, start: Nanos, duration: Nanos, kind: FaultKind) -> Self {
+        self.events.push(FaultEvent {
+            start,
+            duration,
+            kind,
+        });
+        self
+    }
+
+    /// Panic on malformed scenarios: too many events, out-of-range nodes,
+    /// degenerate flap cadences or partitions. Run by the overlay runtime
+    /// at engine construction — a bad experiment definition should fail
+    /// loudly before any simulation time is spent.
+    pub fn validate(&self, n_nodes: usize) {
+        assert!(
+            self.events.len() <= 64,
+            "scenario has {} events; the phase bitmask caps at 64",
+            self.events.len()
+        );
+        for (k, ev) in self.events.iter().enumerate() {
+            if !ev.kind.is_instant() {
+                assert!(ev.duration > 0, "event #{k}: zero-duration degradation");
+            }
+            match ev.kind {
+                FaultKind::DegradeNode { node, .. } | FaultKind::RestoreNode { node } => {
+                    assert!(node < n_nodes, "event #{k}: node {node} >= {n_nodes} nodes");
+                }
+                FaultKind::FlapLink {
+                    node,
+                    on_for,
+                    off_for,
+                    ..
+                } => {
+                    assert!(node < n_nodes, "event #{k}: node {node} >= {n_nodes} nodes");
+                    assert!(
+                        on_for > 0 && off_for > 0,
+                        "event #{k}: flap cadence must be positive (on={on_for} off={off_for})"
+                    );
+                }
+                FaultKind::PartitionCliques { cliques, .. } => {
+                    assert!(
+                        cliques >= 2 && cliques <= n_nodes,
+                        "event #{k}: {cliques} cliques over {n_nodes} nodes"
+                    );
+                }
+                FaultKind::CongestionStorm { .. } | FaultKind::Heal => {}
+            }
+        }
+    }
+
+    /// Human label for a phase mask, e.g. `"degrade#0+storm#2"`;
+    /// `"quiescent"` when empty.
+    pub fn describe(&self, phase: ScenarioPhase) -> String {
+        if phase.is_quiescent() {
+            return "quiescent".to_string();
+        }
+        phase
+            .events()
+            .map(|k| match self.events.get(k) {
+                Some(ev) => format!("{}#{k}", ev.kind.label()),
+                None => format!("event#{k}"),
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    // ---- Canned scenarios (see `faults/mod.rs` for the paper map). ----
+
+    /// §III-G static reproduction: `node` runs the lac-417 degradation
+    /// from t=0 for the whole run — the scenario-subsystem equivalent of
+    /// [`crate::sim::profiles_with_faulty`].
+    pub fn lac417(node: usize) -> Self {
+        Self::default().with(0, ALWAYS, FaultKind::DegradeNode {
+            node,
+            fault: NodeFault::lac417(),
+        })
+    }
+
+    /// Mid-run fail-stop: `node` collapses at `at` and never recovers.
+    pub fn midrun_failure(node: usize, at: Nanos) -> Self {
+        Self::default().with(at, ALWAYS, FaultKind::DegradeNode {
+            node,
+            fault: NodeFault::fail_stop(),
+        })
+    }
+
+    /// Degradation onset and recovery: `node` runs lac-417 factors from
+    /// `at`, explicitly restored `duration` later (exercises
+    /// `RestoreNode` rather than window expiry).
+    pub fn degrade_recover(node: usize, at: Nanos, duration: Nanos) -> Self {
+        Self::default()
+            .with(at, ALWAYS, FaultKind::DegradeNode {
+                node,
+                fault: NodeFault::lac417(),
+            })
+            .with(
+                at.saturating_add(duration),
+                0,
+                FaultKind::RestoreNode { node },
+            )
+    }
+
+    /// Fabric-wide congestion storm over `[at, at + duration)`.
+    pub fn congestion_storm(at: Nanos, duration: Nanos) -> Self {
+        Self::default().with(at, duration, FaultKind::CongestionStorm {
+            fault: LinkFault::storm(),
+        })
+    }
+
+    /// Partition-and-heal: the allocation splits into `cliques` blocks at
+    /// `at`; an explicit `Heal` reunites it `duration` later.
+    pub fn partition_and_heal(cliques: usize, at: Nanos, duration: Nanos) -> Self {
+        Self::default()
+            .with(at, ALWAYS, FaultKind::PartitionCliques {
+                cliques,
+                cut: LinkFault::cut(),
+            })
+            .with(at.saturating_add(duration), 0, FaultKind::Heal)
+    }
+
+    /// Flapping faulty endpoint: links touching `node` oscillate between
+    /// degraded (`on_for`) and clean (`off_for`) across the window.
+    pub fn flapping_clique(
+        node: usize,
+        at: Nanos,
+        duration: Nanos,
+        on_for: Nanos,
+        off_for: Nanos,
+    ) -> Self {
+        Self::default().with(at, duration, FaultKind::FlapLink {
+            node,
+            on_for,
+            off_for,
+            fault: LinkFault::flap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_mask_operations() {
+        let p = ScenarioPhase::single(3).union(ScenarioPhase::single(17));
+        assert!(p.contains(3) && p.contains(17));
+        assert!(!p.contains(4));
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_quiescent());
+        assert_eq!(p.remove(3), ScenarioPhase::single(17));
+        assert_eq!(p.events().collect::<Vec<_>>(), vec![3, 17]);
+        assert!(ScenarioPhase::QUIESCENT.is_quiescent());
+        assert!(!ScenarioPhase::QUIESCENT.contains(0));
+    }
+
+    #[test]
+    fn lac417_factors_reproduce_static_profile() {
+        let eff = NodeFault::lac417().apply(&NodeProfile::healthy());
+        let want = NodeProfile::faulty_lac417();
+        assert_eq!(eff.speed_factor.to_bits(), want.speed_factor.to_bits());
+        assert_eq!(eff.jitter_sigma.to_bits(), want.jitter_sigma.to_bits());
+        assert_eq!(eff.stall_mean_ns.to_bits(), want.stall_mean_ns.to_bits());
+        assert_eq!(eff.latency_factor.to_bits(), want.latency_factor.to_bits());
+        assert_eq!(
+            eff.extra_drop_prob.to_bits(),
+            want.extra_drop_prob.to_bits()
+        );
+    }
+
+    #[test]
+    fn identity_fault_is_bitwise_invisible() {
+        for base in [
+            NodeProfile::healthy(),
+            NodeProfile::faulty_lac417(),
+        ] {
+            let eff = NodeFault::identity().apply(&base);
+            assert_eq!(eff.speed_factor.to_bits(), base.speed_factor.to_bits());
+            assert_eq!(eff.jitter_sigma.to_bits(), base.jitter_sigma.to_bits());
+            assert_eq!(eff.stall_mean_ns.to_bits(), base.stall_mean_ns.to_bits());
+            assert_eq!(eff.latency_factor.to_bits(), base.latency_factor.to_bits());
+            assert_eq!(eff.extra_drop_prob.to_bits(), base.extra_drop_prob.to_bits());
+        }
+        let f = LinkFault {
+            latency_factor: 7.5,
+            extra_drop_prob: 0.25,
+        };
+        let stacked = f.stack(&LinkFault::IDENTITY);
+        assert_eq!(stacked.latency_factor.to_bits(), f.latency_factor.to_bits());
+        assert_eq!(
+            stacked.extra_drop_prob.to_bits(),
+            f.extra_drop_prob.to_bits()
+        );
+    }
+
+    #[test]
+    fn link_fault_stack_clamps_drop() {
+        let a = LinkFault {
+            latency_factor: 2.0,
+            extra_drop_prob: 0.7,
+        };
+        let b = LinkFault {
+            latency_factor: 3.0,
+            extra_drop_prob: 0.6,
+        };
+        let s = a.stack(&b);
+        assert_eq!(s.latency_factor, 6.0);
+        assert_eq!(s.extra_drop_prob, 1.0);
+    }
+
+    #[test]
+    fn event_end_saturates() {
+        let ev = FaultEvent {
+            start: 100,
+            duration: ALWAYS,
+            kind: FaultKind::Heal,
+        };
+        assert_eq!(ev.end(), Nanos::MAX);
+        let ev = FaultEvent {
+            start: 100,
+            duration: 50,
+            kind: FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            },
+        };
+        assert_eq!(ev.end(), 150);
+    }
+
+    #[test]
+    fn canned_scenarios_validate() {
+        FaultScenario::lac417(5).validate(16);
+        FaultScenario::midrun_failure(3, 1_000).validate(4);
+        FaultScenario::degrade_recover(0, 10, 20).validate(1);
+        FaultScenario::congestion_storm(5, 10).validate(2);
+        FaultScenario::partition_and_heal(2, 5, 10).validate(4);
+        FaultScenario::flapping_clique(1, 0, 100, 5, 5).validate(2);
+        FaultScenario::default().validate(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "node 7")]
+    fn validate_rejects_out_of_range_node() {
+        FaultScenario::lac417(7).validate(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "flap cadence")]
+    fn validate_rejects_zero_flap_cadence() {
+        FaultScenario::flapping_clique(0, 0, 100, 0, 5).validate(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "cliques")]
+    fn validate_rejects_degenerate_partition() {
+        FaultScenario::partition_and_heal(1, 0, 10).validate(4);
+    }
+
+    #[test]
+    fn describe_names_active_events() {
+        let s = FaultScenario::partition_and_heal(2, 5, 10);
+        assert_eq!(s.describe(ScenarioPhase::QUIESCENT), "quiescent");
+        assert_eq!(s.describe(ScenarioPhase::single(0)), "partition#0");
+        let storm = FaultScenario::congestion_storm(0, 10);
+        let both = ScenarioPhase::single(0);
+        assert_eq!(storm.describe(both), "storm#0");
+    }
+}

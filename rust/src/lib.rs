@@ -12,6 +12,9 @@
 //!   machinery (simstep period, simstep latency, walltime latency,
 //!   delivery failure rate, delivery clumpiness);
 //! * [`net`] — cluster topology and link/fault models;
+//! * [`faults`] — deterministic fault scenarios: scripted time-varying
+//!   degradation (onset/recovery, flapping links, congestion storms,
+//!   partition-and-heal) with per-window QoS phase attribution;
 //! * [`sim`] — a deterministic discrete-event simulator of a multi-node
 //!   allocation running the paper's asynchronicity modes 0–4;
 //! * [`exec`] — a real `std::thread` executor over the same workload API;
@@ -31,6 +34,7 @@
 pub mod conduit;
 pub mod coordinator;
 pub mod exec;
+pub mod faults;
 pub mod net;
 pub mod qos;
 pub mod runtime;

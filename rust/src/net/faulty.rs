@@ -5,6 +5,14 @@
 //! extreme QoS outlier in the weak-scaling data) against an allocation
 //! without it. A [`NodeProfile`] captures the degradation knobs the DES
 //! applies to a node's processes and links.
+//!
+//! Profiles here are *static* — fixed for a whole run. Time-varying
+//! degradation (onset, recovery, flapping, storms, partitions) is layered
+//! on top by the [`crate::faults`] scenario subsystem, whose overlay folds
+//! [`crate::faults::NodeFault`] factors over these profiles mid-run; an
+//! always-on `lac417` scenario reproduces this module's
+//! [`NodeProfile::faulty_lac417`] exactly, and the static path remains
+//! available and bit-identical.
 
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::{Nanos, MICRO, MILLI};

@@ -25,6 +25,7 @@
 //! advances it by two.
 
 use crate::conduit::CounterTranche;
+use crate::faults::ScenarioPhase;
 use crate::util::Nanos;
 
 /// One endpoint observation: channel counters plus the owning process's
@@ -34,16 +35,32 @@ pub struct QosObservation {
     pub counters: CounterTranche,
     pub update_count: u64,
     pub wall_ns: Nanos,
+    /// Scenario faults in force when the observation was captured
+    /// (quiescent for static-profile runs and the real-thread executor).
+    /// Window-closing observations carry the union over the whole window,
+    /// so faults that started *and* ended inside it are not lost.
+    pub phase: ScenarioPhase,
 }
 
 impl QosObservation {
     /// Record one endpoint observation (a counter tranche bracketed with
     /// the owning process's update count and wall clock).
     pub fn capture(counters: CounterTranche, update_count: u64, wall_ns: Nanos) -> Self {
+        Self::capture_phased(counters, update_count, wall_ns, ScenarioPhase::QUIESCENT)
+    }
+
+    /// [`Self::capture`] tagged with the scenario phase in force.
+    pub fn capture_phased(
+        counters: CounterTranche,
+        update_count: u64,
+        wall_ns: Nanos,
+        phase: ScenarioPhase,
+    ) -> Self {
         Self {
             counters,
             update_count,
             wall_ns,
+            phase,
         }
     }
 }
@@ -225,6 +242,7 @@ mod tests {
             },
             update_count: updates,
             wall_ns: wall,
+            phase: ScenarioPhase::QUIESCENT,
         }
     }
 

@@ -5,3 +5,7 @@ pub mod snapshot;
 
 pub use metrics::{MetricName, QosMetrics, QosObservation, TouchCounter};
 pub use snapshot::{ReplicateQos, SnapshotSchedule, SnapshotWindow};
+
+/// Re-exported for convenience: every QoS window carries the scenario
+/// phase (set of active faults) it was measured under.
+pub use crate::faults::ScenarioPhase;

@@ -9,6 +9,7 @@
 //! regressions.
 
 use super::metrics::{MetricName, QosMetrics, QosObservation};
+use crate::faults::ScenarioPhase;
 use crate::stats::descriptive::{mean, median};
 use crate::util::{Nanos, SECOND};
 
@@ -90,6 +91,17 @@ impl SnapshotWindow {
     pub fn outlet_metrics(&self) -> QosMetrics {
         QosMetrics::from_window(&self.outlet_before, &self.outlet_after)
     }
+
+    /// Scenario faults active at any point during this window: the union
+    /// of the four observations' phase tags (the engine folds mid-window
+    /// fault transitions into the closing observations).
+    pub fn phase(&self) -> ScenarioPhase {
+        self.inlet_before
+            .phase
+            .union(self.inlet_after.phase)
+            .union(self.outlet_before.phase)
+            .union(self.outlet_after.phase)
+    }
 }
 
 /// All snapshots collected from one replicate run, flattened across
@@ -97,23 +109,60 @@ impl SnapshotWindow {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ReplicateQos {
     pub snapshots: Vec<QosMetrics>,
+    /// Scenario faults active during each window, parallel to
+    /// `snapshots` (all quiescent for static-profile runs).
+    pub phases: Vec<ScenarioPhase>,
 }
 
 impl ReplicateQos {
     pub fn push(&mut self, m: QosMetrics) {
+        self.push_phased(m, ScenarioPhase::QUIESCENT);
+    }
+
+    /// [`Self::push`] with the window's scenario-phase tag.
+    pub fn push_phased(&mut self, m: QosMetrics, phase: ScenarioPhase) {
         self.snapshots.push(m);
+        self.phases.push(phase);
     }
 
     /// Scan completed windows into per-window metrics (inlet/outlet
-    /// averaged), in window order — the engine's end-of-run QoS pass.
+    /// averaged) and phase tags, in window order — the engine's
+    /// end-of-run QoS pass.
     pub fn from_windows(windows: &[SnapshotWindow]) -> Self {
         Self {
             snapshots: windows.iter().map(SnapshotWindow::metrics).collect(),
+            phases: windows.iter().map(SnapshotWindow::phase).collect(),
         }
     }
 
     pub fn values(&self, metric: MetricName) -> Vec<f64> {
         self.snapshots.iter().map(|m| m.get(metric)).collect()
+    }
+
+    /// Metric values restricted to windows whose phase satisfies `pred` —
+    /// the time-resolved attribution query ("how did delivery failure
+    /// look *while the storm was active*?").
+    pub fn values_where<F: Fn(ScenarioPhase) -> bool>(
+        &self,
+        metric: MetricName,
+        pred: F,
+    ) -> Vec<f64> {
+        self.snapshots
+            .iter()
+            .zip(self.phases.iter())
+            .filter(|&(_, &ph)| pred(ph))
+            .map(|(m, _)| m.get(metric))
+            .collect()
+    }
+
+    /// Mean over windows selected by `pred` (0 when none match).
+    pub fn mean_where<F: Fn(ScenarioPhase) -> bool>(&self, metric: MetricName, pred: F) -> f64 {
+        mean(&self.values_where(metric, pred))
+    }
+
+    /// Median over windows selected by `pred` (0 when none match).
+    pub fn median_where<F: Fn(ScenarioPhase) -> bool>(&self, metric: MetricName, pred: F) -> f64 {
+        median(&self.values_where(metric, pred))
     }
 
     /// Replicate-level mean (captures extreme outliers, §II-E).
@@ -149,6 +198,7 @@ mod tests {
             counters: CounterTranche::default(),
             update_count: updates,
             wall_ns: wall,
+            phase: ScenarioPhase::QUIESCENT,
         };
         let w = SnapshotWindow {
             inlet_before: zero,
@@ -167,6 +217,7 @@ mod tests {
             counters: CounterTranche::default(),
             update_count: updates,
             wall_ns: wall,
+            phase: ScenarioPhase::QUIESCENT,
         };
         let windows = vec![
             SnapshotWindow {
@@ -188,6 +239,56 @@ mod tests {
             reference.push(w.metrics());
         }
         assert_eq!(batch, reference);
+    }
+
+    #[test]
+    fn window_phase_is_union_of_observation_phases() {
+        let mut w = SnapshotWindow {
+            inlet_before: QosObservation::default(),
+            inlet_after: QosObservation::default(),
+            outlet_before: QosObservation::default(),
+            outlet_after: QosObservation::default(),
+        };
+        assert!(w.phase().is_quiescent());
+        w.inlet_before.phase = ScenarioPhase::single(1);
+        w.outlet_after.phase = ScenarioPhase::single(3);
+        let p = w.phase();
+        assert!(p.contains(1) && p.contains(3) && p.len() == 2);
+    }
+
+    #[test]
+    fn values_where_splits_by_phase() {
+        let mk = |period| QosMetrics {
+            simstep_period_ns: period,
+            simstep_latency: 1.0,
+            walltime_latency_ns: period,
+            delivery_failure_rate: 0.0,
+            delivery_clumpiness: 0.0,
+        };
+        let mut rq = ReplicateQos::default();
+        rq.push_phased(mk(10.0), ScenarioPhase::QUIESCENT);
+        rq.push_phased(mk(500.0), ScenarioPhase::single(0));
+        rq.push_phased(mk(20.0), ScenarioPhase::QUIESCENT);
+        rq.push_phased(mk(700.0), ScenarioPhase::single(0).union(ScenarioPhase::single(1)));
+        assert_eq!(
+            rq.values_where(MetricName::SimstepPeriod, |p| p.is_quiescent()),
+            vec![10.0, 20.0]
+        );
+        assert_eq!(
+            rq.values_where(MetricName::SimstepPeriod, |p| p.contains(0)),
+            vec![500.0, 700.0]
+        );
+        assert_eq!(
+            rq.median_where(MetricName::SimstepPeriod, |p| p.is_quiescent()),
+            15.0
+        );
+        assert_eq!(
+            rq.mean_where(MetricName::SimstepPeriod, |p| p.contains(1)),
+            700.0
+        );
+        // Full-window queries see everything, phases stay parallel.
+        assert_eq!(rq.values(MetricName::SimstepPeriod).len(), 4);
+        assert_eq!(rq.phases.len(), 4);
     }
 
     #[test]

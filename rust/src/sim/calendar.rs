@@ -487,6 +487,44 @@ mod tests {
     }
 
     #[test]
+    fn sparse_control_events_amid_dense_wakes() {
+        // The fault-scenario compile pattern: a handful of far-future
+        // control events (fault windows, snapshot edges) pushed up front,
+        // then dense steady-cadence wakes churning beneath them. The
+        // controls must surface in exact (t, seq) order on both
+        // schedulers despite living many bucket-laps ahead of the cursor.
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapScheduler::new();
+        let mut seq = 0u64;
+        // Sparse controls: 40 ms, 70 ms, 10 s (a dormant fault).
+        for &t in &[40_000_000u64, 70_000_000, 10_000_000_000] {
+            cal.push(t, seq, u64::MAX - t);
+            heap.push(t, seq, u64::MAX - t);
+            seq += 1;
+        }
+        // Dense wakes: 64 processes at ~8 µs cadence.
+        for p in 0..64u64 {
+            cal.push(p * 13, seq, p);
+            heap.push(p * 13, seq, p);
+            seq += 1;
+        }
+        for i in 0..20_000 {
+            let a = cal.pop().unwrap();
+            let b = heap.pop().unwrap();
+            assert_eq!(a, b, "iter {i}");
+            let (t, _, p) = a;
+            if p < 64 {
+                // Only process wakes reschedule; controls are one-shot.
+                let next = t + 8_000 + (p * 97) % 512;
+                cal.push(next, seq, p);
+                heap.push(next, seq, p);
+                seq += 1;
+            }
+        }
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
     fn sched_kind_env_selection() {
         // from_env defaults to calendar when unset or unrecognized; the
         // explicit constructors cover both arms without touching the

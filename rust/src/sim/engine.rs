@@ -26,6 +26,7 @@ use super::calendar::{SchedKind, Scheduler};
 use super::lanes::EnvelopeLanes;
 use super::modes::{AsyncMode, ModeTiming};
 use crate::conduit::{CounterTranche, LocalChannelStats, SendOutcome, StatsSink};
+use crate::faults::{FaultRuntime, FaultScenario, ScenarioPhase};
 use crate::net::{LinkModel, NodeProfile, Topology};
 #[cfg(test)]
 use crate::net::PlacementKind;
@@ -115,6 +116,11 @@ pub struct SimConfig {
     /// `EBCOMM_SCHED` env var (`"heap"` / `"calendar"`); both produce
     /// bit-identical simulations — see `sim::calendar`.
     pub sched: SchedKind,
+    /// Scripted time-varying fault timeline (see [`crate::faults`]).
+    /// Compiled into calendar-queue wake events at construction; the
+    /// default empty scenario leaves the engine on the static-profile
+    /// path, bit-identically.
+    pub scenario: FaultScenario,
 }
 
 impl SimConfig {
@@ -135,6 +141,7 @@ impl SimConfig {
             snapshots: None,
             coalesce_override: None,
             sched: SchedKind::from_env(),
+            scenario: FaultScenario::default(),
         }
     }
 
@@ -153,7 +160,17 @@ struct SimChannel<M> {
     src_ch: usize,
     /// Channel index within the destination's channel list (reciprocal).
     dst_ch: usize,
+    /// Hosting nodes of the endpoints (cached off the topology so the
+    /// fault overlay's per-send effective-parameter lookup is O(1)).
+    src_node: usize,
+    dst_node: usize,
+    /// Endpoints on distinct nodes (storms/partitions only touch these).
+    crossnode: bool,
     link: LinkModel,
+    /// `link.service_ns` before the static endpoint-health scaling — the
+    /// fault overlay rescales from this base when effective health
+    /// changes mid-run.
+    service_unscaled_ns: f64,
     latency_factor: f64,
     extra_drop: f64,
     last_depart: Nanos,
@@ -233,6 +250,10 @@ enum Ev {
     SnapOpen(usize),
     SnapClose(usize),
     Wake(usize),
+    /// Scenario-event transition (index into `SimConfig::scenario`):
+    /// window open/close or a flap toggle, driven by the fault overlay's
+    /// state machine.
+    Fault(usize),
 }
 
 /// Result of one simulated replicate.
@@ -290,6 +311,13 @@ pub struct Engine<W: ShardWorkload> {
     /// Snapshot capture: per-channel observations at window open.
     snap_open: Vec<(QosObservation, QosObservation)>,
     windows: Vec<SnapshotWindow>,
+    /// Fault-scenario overlay; `None` for empty scenarios, which keeps
+    /// the static-profile path bit-identical (no overlay reads, no extra
+    /// scheduled events).
+    faults: Option<FaultRuntime>,
+    /// Union of fault phases observed while the current snapshot window
+    /// is open (folds mid-window transitions into the window tag).
+    window_phase: ScenarioPhase,
     /// Engine-level randomness (barrier tails etc.).
     engine_rng: Xoshiro256,
     /// Reusable pull-phase message buffer: one allocation serves every
@@ -345,6 +373,7 @@ impl<W: ShardWorkload> Engine<W> {
                         )
                     });
                 let mut link = link_for(&cfg, &topo, src, spec.peer);
+                let service_unscaled_ns = link.service_ns;
                 let pf_src = profiles[topo.node_of(src)];
                 let pf_dst = profiles[topo.node_of(spec.peer)];
                 // A degraded endpoint slows the send-buffer drain too: MPI
@@ -358,7 +387,11 @@ impl<W: ShardWorkload> Engine<W> {
                     dst: spec.peer,
                     src_ch,
                     dst_ch,
+                    src_node: topo.node_of(src),
+                    dst_node: topo.node_of(spec.peer),
+                    crossnode: !topo.same_node(src, spec.peer),
                     link,
+                    service_unscaled_ns,
                     latency_factor: pf_src.latency_factor.max(pf_dst.latency_factor),
                     extra_drop: (pf_src.extra_drop_prob + pf_dst.extra_drop_prob).min(1.0),
                     last_depart: 0,
@@ -429,6 +462,26 @@ impl<W: ShardWorkload> Engine<W> {
 
         let mut sched = cfg.sched.make::<Ev>();
         let mut seq = 0u64;
+
+        // Compile the fault scenario: one initial wake per event (the
+        // overlay chains follow-up wakes — window ends, flap toggles —
+        // through `Ev::Fault` reschedules). Fault wakes are pushed
+        // *before* process wakes so an onset at t=0 — e.g. the always-on
+        // lac-417 scenario — is in force for the very first simstep,
+        // matching the static-profile path's semantics. Empty scenarios
+        // compile to nothing at all, keeping the wake/seq stream
+        // bit-identical to pre-scenario engines.
+        let faults = if cfg.scenario.is_empty() {
+            None
+        } else {
+            let rt = FaultRuntime::new(cfg.scenario.clone(), profiles.clone());
+            for (k, ev) in rt.scenario().events.iter().enumerate() {
+                sched.push(ev.start, seq, Ev::Fault(k));
+                seq += 1;
+            }
+            Some(rt)
+        };
+
         for p in 0..n {
             sched.push(0, seq, Ev::Wake(p));
             seq += 1;
@@ -456,6 +509,8 @@ impl<W: ShardWorkload> Engine<W> {
             barrier_max_arrival: 0,
             snap_open: Vec::new(),
             windows: Vec::new(),
+            faults,
+            window_phase: ScenarioPhase::QUIESCENT,
             engine_rng,
             pull_scratch: Vec::new(),
         }
@@ -476,6 +531,7 @@ impl<W: ShardWorkload> Engine<W> {
                 Ev::Wake(p) => self.step_process(p, t),
                 Ev::SnapOpen(_) => self.snapshot_open(t),
                 Ev::SnapClose(_) => self.snapshot_close(t),
+                Ev::Fault(k) => self.fault_event(k, t),
             }
         }
 
@@ -543,7 +599,13 @@ impl<W: ShardWorkload> Engine<W> {
 
         // ---- Compute phase. ----
         let node = self.topo.node_of(p);
-        let profile = self.profiles[node];
+        // The fault overlay's effective profile when a scenario is
+        // loaded; the static table otherwise (bit-identical paths when
+        // nothing is active — the overlay caches equal the statics).
+        let profile = match &self.faults {
+            Some(rt) => *rt.node_profile(node),
+            None => self.profiles[node],
+        };
         let co_resident = self.topo.procs_on_node_of(p);
         let nominal = self.procs[p].workload.step_cost_ns()
             + self.cfg.added_work_units as f64 * crate::workloads::workunit::WORK_UNIT_WALL_NS;
@@ -567,17 +629,38 @@ impl<W: ShardWorkload> Engine<W> {
                 let outcome = {
                     let ch = &mut self.channels[cid];
                     now += ch.link.send_overhead_ns as Nanos;
+                    // Effective link parameters: the static bake, or the
+                    // fault overlay's current view when a scenario is
+                    // loaded (degraded endpoints slow the send-buffer
+                    // drain exactly like the static path's health
+                    // scaling, so occupancy-driven drops emerge mid-run
+                    // when a node degrades).
+                    let (latency_factor, extra_drop, service_ns) = match &self.faults {
+                        None => (ch.latency_factor, ch.extra_drop, ch.link.service_ns),
+                        Some(rt) => {
+                            let ps = rt.node_profile(ch.src_node);
+                            let pd = rt.node_profile(ch.dst_node);
+                            let health = ps.latency_factor.max(pd.latency_factor);
+                            let mods = rt.link_mods(ch.src_node, ch.dst_node, ch.crossnode);
+                            (
+                                health * mods.latency_factor,
+                                (ps.extra_drop_prob + pd.extra_drop_prob).min(1.0)
+                                    + mods.extra_drop_prob,
+                                ch.service_unscaled_ns * health,
+                            )
+                        }
+                    };
                     let full = ch.occupancy(now) >= self.cfg.send_buffer;
                     let dropped = full
                         || self.procs[p]
                             .rng
-                            .chance(ch.link.base_drop_prob + ch.extra_drop);
+                            .chance(ch.link.base_drop_prob + extra_drop);
                     if dropped {
                         SendOutcome::Dropped
                     } else {
-                        let depart = now.max(ch.last_depart + ch.link.service_ns as Nanos);
+                        let depart = now.max(ch.last_depart + service_ns as Nanos);
                         let latency = (ch.link.sample_latency(&mut self.procs[p].rng) as f64
-                            * ch.latency_factor) as Nanos;
+                            * latency_factor) as Nanos;
                         let arrival = ch.link.coalesce(depart + latency).max(ch.last_arrival);
                         ch.last_depart = depart;
                         ch.last_arrival = arrival;
@@ -638,14 +721,23 @@ impl<W: ShardWorkload> Engine<W> {
     }
 
     fn snapshot_open(&mut self, t: Nanos) {
+        // Start accumulating the window's fault-phase tag from the
+        // instantaneous phase; `fault_event` folds in any transition that
+        // fires while the window is open.
+        self.window_phase = self
+            .faults
+            .as_ref()
+            .map(|rt| rt.phase())
+            .unwrap_or(ScenarioPhase::QUIESCENT);
+        let phase = self.window_phase;
         self.snap_open = self
             .channels
             .iter()
             .map(|ch| {
                 let counters = ch.stats.tranche();
                 (
-                    QosObservation::capture(counters, self.procs[ch.src].updates, t),
-                    QosObservation::capture(counters, self.procs[ch.dst].updates, t),
+                    QosObservation::capture_phased(counters, self.procs[ch.src].updates, t, phase),
+                    QosObservation::capture_phased(counters, self.procs[ch.dst].updates, t, phase),
                 )
             })
             .collect();
@@ -655,17 +747,54 @@ impl<W: ShardWorkload> Engine<W> {
         if self.snap_open.is_empty() {
             return;
         }
+        // Closing observations carry the union of everything active at
+        // any point during the window, so `SnapshotWindow::phase()` (the
+        // union over all four observations) attributes the window to
+        // every fault that overlapped it.
+        let phase = match &self.faults {
+            Some(rt) => self.window_phase.union(rt.phase()),
+            None => ScenarioPhase::QUIESCENT,
+        };
         for (cid, ch) in self.channels.iter().enumerate() {
             let counters = ch.stats.tranche();
             let (inlet_before, outlet_before) = self.snap_open[cid];
             self.windows.push(SnapshotWindow {
                 inlet_before,
-                inlet_after: QosObservation::capture(counters, self.procs[ch.src].updates, t),
+                inlet_after: QosObservation::capture_phased(
+                    counters,
+                    self.procs[ch.src].updates,
+                    t,
+                    phase,
+                ),
                 outlet_before,
-                outlet_after: QosObservation::capture(counters, self.procs[ch.dst].updates, t),
+                outlet_after: QosObservation::capture_phased(
+                    counters,
+                    self.procs[ch.dst].updates,
+                    t,
+                    phase,
+                ),
             });
         }
         self.snap_open.clear();
+    }
+
+    /// Advance scenario event `k`'s overlay state machine and schedule
+    /// its next transition, folding the phase change into any open
+    /// snapshot window.
+    fn fault_event(&mut self, k: usize, t: Nanos) {
+        let window_open = !self.snap_open.is_empty();
+        let Some(rt) = self.faults.as_mut() else {
+            return;
+        };
+        let pre = rt.phase();
+        let next = rt.on_event(k, t);
+        let post = rt.phase();
+        if window_open {
+            self.window_phase = self.window_phase.union(pre).union(post);
+        }
+        if let Some(tn) = next {
+            self.schedule(tn, Ev::Fault(k));
+        }
     }
 }
 
@@ -768,7 +897,11 @@ mod tests {
             dst: 1,
             src_ch: 0,
             dst_ch: 0,
+            src_node: 0,
+            dst_node: 1,
+            crossnode: true,
             link: LinkModel::intranode(),
+            service_unscaled_ns: LinkModel::intranode().service_ns,
             latency_factor: 1.0,
             extra_drop: 0.0,
             last_depart: 0,
@@ -991,6 +1124,50 @@ mod tests {
         f.sort_unstable();
         let (hm, fm) = (h[8] as f64, f[8] as f64);
         assert!(fm > 0.8 * hm, "median degraded: healthy={hm} faulty={fm}");
+    }
+
+    /// Loading a scenario routes every hot-path read through the fault
+    /// overlay; with nothing active the overlay caches equal the static
+    /// tables, so results must stay bit-identical — the overlay is free
+    /// until a fault actually fires.
+    #[test]
+    fn never_active_scenario_is_bit_identical_to_static() {
+        let run = |scenario: FaultScenario| {
+            let topo = Topology::new(4, PlacementKind::OnePerNode);
+            let mut rng = Xoshiro256::new(0xFA17);
+            let shards: Vec<_> = (0..4)
+                .map(|r| {
+                    GraphColoringShard::new(
+                        GcConfig {
+                            simels_per_proc: 16,
+                            ..GcConfig::default()
+                        },
+                        &topo,
+                        r,
+                        &mut rng,
+                    )
+                })
+                .collect();
+            let mut cfg = SimConfig::new(
+                AsyncMode::BestEffort,
+                ModeTiming::graph_coloring(4),
+                30 * MILLI,
+            );
+            cfg.seed = 0xFA17;
+            cfg.send_buffer = 4;
+            cfg.scenario = scenario;
+            Engine::new(cfg, topo.clone(), heterogeneous_profiles(&topo, 0xFA17, 0.20), shards)
+                .run()
+        };
+        let a = run(FaultScenario::default());
+        // Fires 10 s in — far beyond the 30 ms run window.
+        let b = run(FaultScenario::midrun_failure(2, 10 * SECOND));
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.attempted_sends, b.attempted_sends);
+        assert_eq!(a.successful_sends, b.successful_sends);
+        let ca: Vec<u8> = a.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        let cb: Vec<u8> = b.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+        assert_eq!(ca, cb);
     }
 
     #[test]

@@ -5,9 +5,22 @@
 //! out over `std::thread::scope` workers (no external dependencies).
 //! Results are returned **in input order** regardless of which worker
 //! finished when, so a parallel sweep is bit-identical to a serial one.
+//!
+//! Two scheduling refinements for lopsided grids (a 256-proc cell costs
+//! ~100× a 1-proc cell):
+//!
+//! * **LPT claim order** ([`parallel_map_lpt`]): cells are claimed in
+//!   longest-processing-time-first order by a caller-supplied cost hint,
+//!   so stragglers start first instead of serializing at the tail of the
+//!   sweep. Output order (and hence results) is unaffected.
+//! * **Per-cell telemetry**: every map records per-cell wall times
+//!   ([`CellTiming`]); [`log_telemetry`] prints them to stderr when
+//!   `EBCOMM_SWEEP_TELEMETRY=1`, for identifying the next split-scheduling
+//!   candidate.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Worker count to use by default: `EBCOMM_WORKERS` if set (≥1),
 /// otherwise the host's available parallelism.
@@ -22,13 +35,21 @@ pub fn default_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Wall time one sweep cell took on its worker, by input index.
+#[derive(Clone, Copy, Debug)]
+pub struct CellTiming {
+    /// Index of the cell in the caller's item slice.
+    pub index: usize,
+    pub wall: Duration,
+}
+
 /// Apply `f` to every item on up to `workers` scoped threads.
 ///
-/// Items are claimed dynamically (an atomic cursor), so stragglers don't
-/// serialize behind a static partition; each result is written to its
-/// item's slot, so the output order equals the input order. With
-/// `workers <= 1` (or fewer than two items) everything runs on the
-/// calling thread — the serial reference path.
+/// Items are claimed dynamically (an atomic cursor) in input order, so
+/// stragglers don't serialize behind a static partition; each result is
+/// written to its item's slot, so the output order equals the input
+/// order. With `workers <= 1` (or fewer than two items) everything runs
+/// on the calling thread — the serial reference path.
 ///
 /// `f` must be a pure function of the item for run-to-run determinism
 /// (sweep cells are independently seeded, satisfying this). A panic in
@@ -39,34 +60,106 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_lpt(workers, items, |_| 0, f).0
+}
+
+/// [`parallel_map`] with longest-processing-time-first claiming: items
+/// are claimed in descending `cost` order (ties keep input order —
+/// uniform costs reduce to plain input-order claiming), so the most
+/// expensive cells start before the cheap tail instead of landing on an
+/// otherwise-drained pool. Results still come back in input order,
+/// bit-identical to any other claim order; per-cell wall times are
+/// returned alongside (in input order).
+pub fn parallel_map_lpt<T, R, F, C>(
+    workers: usize,
+    items: &[T],
+    cost: C,
+    f: F,
+) -> (Vec<R>, Vec<CellTiming>)
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    C: Fn(&T) -> u64,
+{
+    // Claim order: descending cost, stable on ties (so a uniform-cost
+    // grid is claimed exactly in input order, as before LPT existed).
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(cost(&items[i])));
+
     let workers = workers.max(1).min(items.len());
     if workers <= 1 {
-        return items.iter().map(&f).collect();
+        let mut slots: Vec<Option<(R, Duration)>> = (0..items.len()).map(|_| None).collect();
+        for &i in &order {
+            let t0 = Instant::now();
+            let r = f(&items[i]);
+            slots[i] = Some((r, t0.elapsed()));
+        }
+        return unzip_slots(slots);
     }
 
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<(R, Duration)>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let order = &order;
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
+                let pos = next.fetch_add(1, Ordering::Relaxed);
+                if pos >= order.len() {
                     break;
                 }
+                let i = order[pos];
+                let t0 = Instant::now();
                 let r = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+                *slots[i].lock().unwrap() = Some((r, t0.elapsed()));
             });
         }
     });
-    slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, slot)| {
-            slot.into_inner()
-                .unwrap()
-                .unwrap_or_else(|| panic!("worker never filled slot {i}"))
-        })
-        .collect()
+    unzip_slots(
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap())
+            .collect(),
+    )
+}
+
+fn unzip_slots<R>(slots: Vec<Option<(R, Duration)>>) -> (Vec<R>, Vec<CellTiming>) {
+    let mut results = Vec::with_capacity(slots.len());
+    let mut timings = Vec::with_capacity(slots.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let (r, wall) = slot.unwrap_or_else(|| panic!("worker never filled slot {i}"));
+        results.push(r);
+        timings.push(CellTiming { index: i, wall });
+    }
+    (results, timings)
+}
+
+/// Print per-cell sweep telemetry to stderr when
+/// `EBCOMM_SWEEP_TELEMETRY=1`: each cell's wall time plus the
+/// total/max/imbalance summary that motivates LPT ordering.
+pub fn log_telemetry(label: &str, timings: &[CellTiming]) {
+    if std::env::var("EBCOMM_SWEEP_TELEMETRY").map(|v| v == "1") != Ok(true) {
+        return;
+    }
+    if timings.is_empty() {
+        eprintln!("[sweep {label}] no cells");
+        return;
+    }
+    let total: Duration = timings.iter().map(|t| t.wall).sum();
+    let max = timings.iter().map(|t| t.wall).max().unwrap_or_default();
+    let mean = total / timings.len() as u32;
+    for t in timings {
+        eprintln!("[sweep {label}] cell {:>4}: {:>10.3?}", t.index, t.wall);
+    }
+    eprintln!(
+        "[sweep {label}] {} cells, total {:.3?}, mean {:.3?}, max {:.3?} ({:.1}x mean)",
+        timings.len(),
+        total,
+        mean,
+        max,
+        max.as_secs_f64() / mean.as_secs_f64().max(1e-12),
+    );
 }
 
 #[cfg(test)]
@@ -103,5 +196,55 @@ mod tests {
     #[test]
     fn default_workers_is_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn lpt_output_order_is_input_order() {
+        // Costs deliberately anti-sorted vs input order.
+        let items: Vec<u64> = (0..50).collect();
+        for workers in [1, 4] {
+            let (out, timings) = parallel_map_lpt(workers, &items, |&x| x, |&x| x * 2);
+            assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+            assert_eq!(timings.len(), 50);
+            for (i, t) in timings.iter().enumerate() {
+                assert_eq!(t.index, i, "timings come back in input order");
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_matches_uniform_claiming_results() {
+        let items: Vec<u64> = (0..31).collect();
+        let f = |&x: &u64| x.wrapping_mul(0xDEAD_BEEF).rotate_left(11);
+        let plain = parallel_map(4, &items, f);
+        let (lpt, _) = parallel_map_lpt(4, &items, |&x| 1_000 - x, f);
+        assert_eq!(plain, lpt);
+    }
+
+    #[test]
+    fn lpt_claims_expensive_cells_first_serially() {
+        // On the serial path the claim order is observable through a
+        // side-channel log: descending cost, ties in input order.
+        let log = Mutex::new(Vec::new());
+        let items: Vec<(usize, u64)> = vec![(0, 5), (1, 9), (2, 5), (3, 1)];
+        let (out, _) = parallel_map_lpt(
+            1,
+            &items,
+            |&(_, c)| c,
+            |&(i, _)| {
+                log.lock().unwrap().push(i);
+                i
+            },
+        );
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(*log.lock().unwrap(), vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn telemetry_log_does_not_panic() {
+        let (_, timings) = parallel_map_lpt(2, &[1u32, 2, 3], |_| 0, |&x| x);
+        // Env-gated: off in tests, but the formatting path must be sound.
+        log_telemetry("test", &timings);
+        log_telemetry("empty", &[]);
     }
 }

@@ -1,0 +1,295 @@
+//! End-to-end fault-scenario integration: scripted time-varying
+//! degradation driven through the full engine, with time-resolved QoS
+//! attribution checked window by window.
+
+use ebcomm::faults::{FaultScenario, ScenarioPhase};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::sim::{
+    healthy_profiles, profiles_with_faulty, AsyncMode, Engine, ModeTiming, SimConfig, SimResult,
+};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{Nanos, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+/// A QoS-style run (1 simel/CPU, buffer 64, homogeneous-healthy
+/// profiles) with the given scenario and snapshot schedule.
+fn scenario_run(
+    n_procs: usize,
+    run_for: Nanos,
+    seed: u64,
+    scenario: FaultScenario,
+    snapshots: Option<SnapshotSchedule>,
+) -> SimResult<GraphColoringShard> {
+    let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..n_procs)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
+    cfg.seed = seed;
+    cfg.send_buffer = 64;
+    cfg.snapshots = snapshots;
+    cfg.scenario = scenario;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+/// The three-window schedule the timing-sensitive tests share: windows at
+/// 10–18 ms (pre-fault), 55–63 ms (mid-fault for a 40–70 ms fault), and
+/// 100–108 ms (post-fault).
+fn three_windows() -> SnapshotSchedule {
+    SnapshotSchedule::compressed(10 * MILLI, 45 * MILLI, 8 * MILLI, 3)
+}
+
+/// Per-chronological-window phase tags (one per snapshot, all channels of
+/// one window share a tag).
+fn window_phases(r: &SimResult<GraphColoringShard>, n_channels: usize) -> Vec<ScenarioPhase> {
+    assert_eq!(r.qos.phases.len() % n_channels, 0);
+    r.qos
+        .phases
+        .chunks(n_channels)
+        .map(|chunk| {
+            let first = chunk[0];
+            assert!(
+                chunk.iter().all(|&p| p == first),
+                "channels of one window must share a phase tag"
+            );
+            first
+        })
+        .collect()
+}
+
+/// The always-on lac-417 scenario reproduces the static faulty-profile
+/// shape: the degraded node's own process collapses while the allocation
+/// median barely moves — and the scenario path tracks the static path's
+/// magnitudes (same degradation factors through the overlay).
+#[test]
+fn lac417_scenario_matches_static_fault_shape() {
+    let n = 16;
+    let healthy = scenario_run(n, 300 * MILLI, 9, FaultScenario::default(), None);
+    let scenario = scenario_run(n, 300 * MILLI, 9, FaultScenario::lac417(5), None);
+
+    // Static-profile reference (identical treatment via NodeProfile swap).
+    let topo = Topology::new(n, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(9);
+    let shards: Vec<_> = (0..n)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n), 300 * MILLI);
+    cfg.seed = 9;
+    cfg.send_buffer = 64;
+    let profiles = profiles_with_faulty(&topo, 5);
+    let statics = Engine::new(cfg, topo, profiles, shards).run();
+
+    // Degraded node's own process does far fewer updates than healthy...
+    assert!(
+        (scenario.updates[5] as f64) < 0.7 * (healthy.updates[5] as f64),
+        "scenario={} healthy={}",
+        scenario.updates[5],
+        healthy.updates[5]
+    );
+    // ...the allocation median stays healthy (paper's robustness headline)...
+    let median_of = |r: &SimResult<GraphColoringShard>| {
+        let mut u = r.updates.clone();
+        u.sort_unstable();
+        u[n / 2] as f64
+    };
+    assert!(
+        median_of(&scenario) > 0.8 * median_of(&healthy),
+        "median degraded: scenario={} healthy={}",
+        median_of(&scenario),
+        median_of(&healthy)
+    );
+    // ...and the scenario path lands in the same regime as the static
+    // path (same factors, different injection mechanism).
+    let (s5, f5) = (scenario.updates[5] as f64, statics.updates[5] as f64);
+    assert!(
+        s5 < 1.5 * f5 && f5 < 1.5 * s5,
+        "scenario faulty proc {s5} vs static faulty proc {f5}"
+    );
+}
+
+#[test]
+fn congestion_storm_windows_are_tagged_and_degraded() {
+    let r = scenario_run(
+        2,
+        120 * MILLI,
+        11,
+        FaultScenario::congestion_storm(40 * MILLI, 30 * MILLI),
+        Some(three_windows()),
+    );
+    // 1x2 mesh: each proc has E+W channels => 4 channels, 3 windows.
+    assert_eq!(r.windows.len(), 12);
+    let phases = window_phases(&r, 4);
+    assert_eq!(phases.len(), 3);
+    assert!(phases[0].is_quiescent(), "pre-storm window must be quiescent");
+    assert!(phases[1].contains(0), "mid-storm window must carry the storm tag");
+    assert!(phases[2].is_quiescent(), "post-storm window must be quiescent");
+
+    // Time-resolved attribution: delivery failure and walltime latency
+    // concentrate in the storm window.
+    let quiet_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, ScenarioPhase::is_quiescent);
+    let storm_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, |p| p.contains(0));
+    assert!(
+        storm_fail > 0.05 && quiet_fail < 0.02,
+        "storm fail {storm_fail} vs quiet fail {quiet_fail}"
+    );
+    let quiet_lat = r
+        .qos
+        .median_where(MetricName::WalltimeLatency, ScenarioPhase::is_quiescent);
+    let storm_lat = r
+        .qos
+        .median_where(MetricName::WalltimeLatency, |p| p.contains(0));
+    assert!(
+        storm_lat > 2.0 * quiet_lat,
+        "storm latency {storm_lat} vs quiet latency {quiet_lat}"
+    );
+}
+
+#[test]
+fn partition_and_heal_cuts_cross_clique_traffic_then_recovers() {
+    let r = scenario_run(
+        4,
+        120 * MILLI,
+        13,
+        FaultScenario::partition_and_heal(2, 40 * MILLI, 30 * MILLI),
+        Some(three_windows()),
+    );
+    // 2x2 mesh: every proc has N/E/S/W channels => 16 channels, 3 windows.
+    assert_eq!(r.windows.len(), 48);
+    let phases = window_phases(&r, 16);
+    assert!(phases[0].is_quiescent());
+    assert!(phases[1].contains(0), "partition window tagged");
+    assert!(
+        phases[2].is_quiescent(),
+        "heal must clear the phase for the post window"
+    );
+
+    // Mid-partition, cross-clique channels (half of the mesh's links)
+    // drop everything: mean failure over all channels jumps towards 0.5,
+    // then recovers after the heal.
+    let part_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, |p| p.contains(0));
+    let quiet_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, ScenarioPhase::is_quiescent);
+    assert!(
+        part_fail > 0.2,
+        "cross-clique cut must show up in windowed failure: {part_fail}"
+    );
+    assert!(
+        quiet_fail < 0.05,
+        "pre/post windows must be (nearly) loss-free: {quiet_fail}"
+    );
+    // The allocation keeps making progress through the partition
+    // (best-effort: no process stalls waiting on the cut links).
+    assert!(r.updates.iter().all(|&u| u > 1_000), "{:?}", r.updates);
+}
+
+#[test]
+fn flapping_clique_degrades_intermittently_and_recovers() {
+    let r = scenario_run(
+        4,
+        120 * MILLI,
+        17,
+        FaultScenario::flapping_clique(1, 30 * MILLI, 60 * MILLI, 5 * MILLI, 5 * MILLI),
+        Some(three_windows()),
+    );
+    let phases = window_phases(&r, 16);
+    assert!(phases[0].is_quiescent(), "flap starts after window 0");
+    assert!(phases[1].contains(0), "mid-flap window tagged");
+    assert!(phases[2].is_quiescent(), "flap window closed before window 2");
+    let flap_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, |p| p.contains(0));
+    let quiet_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, ScenarioPhase::is_quiescent);
+    assert!(
+        flap_fail > quiet_fail + 0.03,
+        "flap windows must show elevated loss: flap={flap_fail} quiet={quiet_fail}"
+    );
+    assert!(r.updates.iter().all(|&u| u > 1_000));
+}
+
+#[test]
+fn midrun_failure_degrades_only_after_onset() {
+    let n = 16;
+    let baseline = scenario_run(n, 300 * MILLI, 21, FaultScenario::default(), None);
+    let failed = scenario_run(
+        n,
+        300 * MILLI,
+        21,
+        FaultScenario::midrun_failure(2, 150 * MILLI),
+        None,
+    );
+    // The failing process completes roughly the first half at full speed,
+    // then crawls: well below baseline, well above zero.
+    let (b, f) = (baseline.updates[2] as f64, failed.updates[2] as f64);
+    assert!(f < 0.75 * b, "fail-stop node must lose ground: {f} vs {b}");
+    assert!(f > 0.25 * b, "pre-onset half must still count: {f} vs {b}");
+    // Everyone else barely notices (best-effort decoupling).
+    let others = |r: &SimResult<GraphColoringShard>| -> u64 {
+        r.updates
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != 2)
+            .map(|(_, &u)| u)
+            .sum()
+    };
+    let (others_b, others_f) = (others(&baseline), others(&failed));
+    assert!(
+        others_f as f64 > 0.85 * others_b as f64,
+        "peers degraded: {others_f} vs {others_b}"
+    );
+}
+
+/// Explicit `RestoreNode` recovery: degradation windows tag, recovery
+/// windows do not, and post-recovery QoS returns to baseline.
+#[test]
+fn degrade_recover_round_trip() {
+    let r = scenario_run(
+        2,
+        120 * MILLI,
+        23,
+        FaultScenario::degrade_recover(1, 40 * MILLI, 30 * MILLI),
+        Some(three_windows()),
+    );
+    let phases = window_phases(&r, 4);
+    assert!(phases[0].is_quiescent());
+    assert!(phases[1].contains(0));
+    assert!(phases[2].is_quiescent(), "restore must clear the overlay");
+    let mid_fail = r
+        .qos
+        .mean_where(MetricName::DeliveryFailureRate, |p| p.contains(0));
+    assert!(
+        mid_fail > 0.1,
+        "lac-417 factors include +0.35 drop on the degraded node: {mid_fail}"
+    );
+}

@@ -307,8 +307,12 @@ fn engine_signature(r: &SimResult<GraphColoringShard>) -> u64 {
 /// The fixed engine scenario behind the golden signature, under an
 /// explicit scheduler (the same pair `EBCOMM_SCHED` selects between —
 /// set programmatically here so concurrently running tests never race on
-/// the process environment).
-fn golden_engine_run_with(sched: SchedKind) -> SimResult<GraphColoringShard> {
+/// the process environment) and an explicit fault scenario (empty for
+/// the recorded golden).
+fn golden_engine_run_scenario(
+    sched: SchedKind,
+    scenario: ebcomm::faults::FaultScenario,
+) -> SimResult<GraphColoringShard> {
     let topo = Topology::new(4, PlacementKind::OnePerNode);
     let mut rng = Xoshiro256::new(0x601D);
     let shards: Vec<_> = (0..4)
@@ -328,6 +332,7 @@ fn golden_engine_run_with(sched: SchedKind) -> SimResult<GraphColoringShard> {
     cfg.seed = 0x601D;
     cfg.send_buffer = 4;
     cfg.sched = sched;
+    cfg.scenario = scenario;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         30 * MILLI,
         30 * MILLI,
@@ -336,6 +341,10 @@ fn golden_engine_run_with(sched: SchedKind) -> SimResult<GraphColoringShard> {
     ));
     let profiles = ebcomm::sim::heterogeneous_profiles(&topo, 0x601D, 0.20);
     Engine::new(cfg, topo, profiles, shards).run()
+}
+
+fn golden_engine_run_with(sched: SchedKind) -> SimResult<GraphColoringShard> {
+    golden_engine_run_scenario(sched, ebcomm::faults::FaultScenario::default())
 }
 
 /// Same seed ⇒ bit-identical updates, send accounting, and QoS windows,
@@ -380,6 +389,39 @@ fn engine_signature_is_reproducible_and_matches_golden() {
             recorded.trim(),
             "engine results diverged from recorded golden (re-bless only if \
              the change is intentional)"
+        );
+    }
+}
+
+/// The fault-scenario subsystem must be invisible until a fault actually
+/// fires: the golden scenario run under (a) no scenario, (b) an
+/// explicitly-loaded empty scenario, and (c) a loaded scenario whose
+/// only event starts beyond the run window must all produce the **same
+/// golden signature**, under both scheduler kinds. (a)≡(b) pins the
+/// `Engine::new` empty-scenario gate; (a)≡(c) pins the overlay path's
+/// bitwise equivalence to the static path when nothing is active —
+/// effective tables equal to statics, identical RNG draw sequences, and
+/// unchanged wake/seq ordering.
+#[test]
+fn empty_and_never_active_scenarios_preserve_golden_signature() {
+    use ebcomm::faults::FaultScenario;
+    for sched in [SchedKind::Heap, SchedKind::Calendar] {
+        let baseline = engine_signature(&golden_engine_run_with(sched));
+        let empty = engine_signature(&golden_engine_run_scenario(
+            sched,
+            FaultScenario::default(),
+        ));
+        // Fires at 10 s; the golden run lasts 120 ms.
+        let dormant = engine_signature(&golden_engine_run_scenario(
+            sched,
+            FaultScenario::midrun_failure(2, 10 * SECOND),
+        ));
+        assert_eq!(baseline, empty, "{}: empty scenario diverged", sched.label());
+        assert_eq!(
+            baseline,
+            dormant,
+            "{}: never-active scenario diverged from the static path",
+            sched.label()
         );
     }
 }

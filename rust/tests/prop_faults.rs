@@ -1,0 +1,292 @@
+//! Property tests for the fault-overlay state machine
+//! (`faults::overlay`): randomized scenarios driven through a
+//! `(t, seq)`-ordered scheduler exactly the way the engine drives them,
+//! checking after **every** transition that
+//!
+//! * overlay push/pop nesting never underflows — depth always equals the
+//!   number of active events (`deactivate` guards with `checked_sub`, so
+//!   an unmatched pop panics rather than wrapping);
+//! * cached effective node profiles and link modifiers equal an
+//!   independent reference fold over the active set, bit for bit;
+//! * wake chains strictly advance and terminate (flap toggles clamp at
+//!   the window end — no same-time reschedule loops).
+//!
+//! The same machine was validated against `python/fault_model_fuzz.py`'s
+//! invariant harness before porting (no Rust toolchain in the authoring
+//! container — the PR 2 calendar-queue workflow).
+
+use ebcomm::faults::{
+    clique_of, FaultKind, FaultRuntime, FaultScenario, LinkFault, NodeFault, ALWAYS,
+};
+use ebcomm::net::NodeProfile;
+use ebcomm::sim::{HeapScheduler, Scheduler};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen, PropResult};
+use ebcomm::util::Nanos;
+
+const HORIZON: Nanos = 20_000;
+
+fn profile_bits(p: &NodeProfile) -> [u64; 6] {
+    [
+        p.speed_factor.to_bits(),
+        p.jitter_sigma.to_bits(),
+        p.stall_prob.to_bits(),
+        p.stall_mean_ns.to_bits(),
+        p.latency_factor.to_bits(),
+        p.extra_drop_prob.to_bits(),
+    ]
+}
+
+fn link_bits(f: &LinkFault) -> [u64; 2] {
+    [f.latency_factor.to_bits(), f.extra_drop_prob.to_bits()]
+}
+
+/// A random well-formed scenario (passes `FaultScenario::validate`).
+fn random_scenario(g: &mut Gen, n_nodes: usize) -> FaultScenario {
+    let mut sc = FaultScenario::default();
+    let n_events = g.usize_in(1, 10);
+    for _ in 0..n_events {
+        let start = g.u64_in(0, 5_000);
+        let duration = if g.chance(0.25) {
+            ALWAYS
+        } else {
+            g.u64_in(1, 2_000)
+        };
+        let node = g.usize_in(0, n_nodes - 1);
+        let fault_factor = 1.0 + g.usize_in(1, 8) as f64;
+        let kind = match g.usize_in(0, if n_nodes >= 2 { 6 } else { 5 }) {
+            0 | 1 => FaultKind::DegradeNode {
+                node,
+                fault: NodeFault {
+                    speed_factor: fault_factor,
+                    jitter_sigma: 0.5,
+                    stall_mean_ns: 1_000.0,
+                    latency_factor: fault_factor,
+                    extra_drop_prob: 0.25,
+                },
+            },
+            2 => FaultKind::FlapLink {
+                node,
+                on_for: g.u64_in(5, 80),
+                off_for: g.u64_in(5, 80),
+                fault: LinkFault {
+                    latency_factor: fault_factor,
+                    extra_drop_prob: 0.5,
+                },
+            },
+            3 => FaultKind::CongestionStorm {
+                fault: LinkFault {
+                    latency_factor: fault_factor,
+                    extra_drop_prob: 0.1,
+                },
+            },
+            4 => FaultKind::RestoreNode { node },
+            5 => FaultKind::Heal,
+            _ => FaultKind::PartitionCliques {
+                cliques: g.usize_in(2, n_nodes),
+                cut: LinkFault::cut(),
+            },
+        };
+        let duration = if kind.is_instant() { 0 } else { duration };
+        sc = sc.with(start, duration, kind);
+    }
+    sc
+}
+
+/// Independent fold of the runtime's active set over the static tables —
+/// the reference `recompute` is checked against.
+fn reference_eff_nodes(
+    sc: &FaultScenario,
+    rt: &FaultRuntime,
+    statics: &[NodeProfile],
+) -> Vec<NodeProfile> {
+    let mut eff = statics.to_vec();
+    for (k, ev) in sc.events.iter().enumerate() {
+        if !rt.phase().contains(k) {
+            continue;
+        }
+        if let FaultKind::DegradeNode { node, fault } = ev.kind {
+            let base = eff[node];
+            eff[node] = fault.apply(&base);
+        }
+    }
+    eff
+}
+
+/// Reference link modifier for one node pair, folded from scratch.
+fn reference_link_mods(
+    sc: &FaultScenario,
+    rt: &FaultRuntime,
+    src: usize,
+    dst: usize,
+    crossnode: bool,
+    n_nodes: usize,
+) -> LinkFault {
+    let mut per_node = vec![LinkFault::IDENTITY; n_nodes];
+    let mut storm = LinkFault::IDENTITY;
+    let mut partition: Option<(usize, LinkFault)> = None;
+    for (k, ev) in sc.events.iter().enumerate() {
+        if !rt.phase().contains(k) {
+            continue;
+        }
+        match ev.kind {
+            FaultKind::FlapLink { node, fault, .. } => {
+                if rt.flap_on(k) {
+                    per_node[node] = per_node[node].stack(&fault);
+                }
+            }
+            FaultKind::CongestionStorm { fault } => storm = storm.stack(&fault),
+            FaultKind::PartitionCliques { cliques, cut } => {
+                partition = Some(match partition {
+                    None => (cliques, cut),
+                    Some((c, prev)) => (c.max(cliques), prev.stack(&cut)),
+                });
+            }
+            _ => {}
+        }
+    }
+    let mut f = per_node[src];
+    if dst != src {
+        f = f.stack(&per_node[dst]);
+    }
+    if crossnode {
+        f = f.stack(&storm);
+        if let Some((cliques, cut)) = partition {
+            if clique_of(src, cliques, n_nodes) != clique_of(dst, cliques, n_nodes) {
+                f = f.stack(&cut);
+            }
+        }
+    }
+    f
+}
+
+/// Drive one random scenario to the horizon, checking every invariant at
+/// every transition.
+fn drive_and_check(g: &mut Gen) -> PropResult {
+    let n_nodes = g.usize_in(1, 8);
+    let sc = random_scenario(g, n_nodes);
+    let statics: Vec<NodeProfile> = (0..n_nodes)
+        .map(|i| {
+            if i % 3 == 2 {
+                NodeProfile::faulty_lac417()
+            } else {
+                NodeProfile::healthy()
+            }
+        })
+        .collect();
+    let mut rt = FaultRuntime::new(sc.clone(), statics.clone());
+    let mut sched: HeapScheduler<usize> = HeapScheduler::new();
+    let mut seq = 0u64;
+    for (k, ev) in sc.events.iter().enumerate() {
+        sched.push(ev.start, seq, k);
+        seq += 1;
+    }
+    let mut steps = 0usize;
+    while let Some((t, _, k)) = sched.pop() {
+        if t > HORIZON {
+            break;
+        }
+        steps += 1;
+        prop_assert(steps < 60_000, "runaway wake chain (flap loop?)")?;
+        let next = rt.on_event(k, t);
+
+        // Nesting: depth is exactly the active count, and by the
+        // checked_sub guard it can never have gone negative.
+        prop_assert(
+            rt.depth() == rt.phase().len(),
+            format!("depth {} != |active| {}", rt.depth(), rt.phase().len()),
+        )?;
+
+        // Effective node profiles == reference fold, bitwise.
+        let eff = reference_eff_nodes(&sc, &rt, &statics);
+        for node in 0..n_nodes {
+            prop_assert(
+                profile_bits(&eff[node]) == profile_bits(rt.node_profile(node)),
+                format!("node {node} effective profile diverged at t={t}"),
+            )?;
+        }
+
+        // Link modifiers == reference fold for every pair, both
+        // placements.
+        for src in 0..n_nodes {
+            for dst in 0..n_nodes {
+                for crossnode in [false, true] {
+                    let got = rt.link_mods(src, dst, crossnode);
+                    let want = reference_link_mods(&sc, &rt, src, dst, crossnode, n_nodes);
+                    prop_assert(
+                        link_bits(&got) == link_bits(&want),
+                        format!("link mods ({src},{dst},{crossnode}) diverged at t={t}"),
+                    )?;
+                }
+            }
+        }
+
+        if let Some(tn) = next {
+            prop_assert(tn > t, format!("non-advancing wake {t} -> {tn}"))?;
+            sched.push(tn, seq, k);
+            seq += 1;
+        }
+    }
+
+    // Drained: every finite-window event reachable within the horizon is
+    // no longer active.
+    if sched.is_empty() {
+        for (k, ev) in sc.events.iter().enumerate() {
+            if !ev.kind.is_instant() && ev.end() <= HORIZON {
+                prop_assert(
+                    !rt.is_active(k),
+                    format!("event {k} leaked past its window end {}", ev.end()),
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_overlay_matches_reference_fold_and_never_underflows() {
+    forall(Config::default().cases(100), drive_and_check);
+}
+
+#[test]
+fn prop_quiescent_overlay_is_bitwise_static() {
+    // Whenever the active set is empty mid-run, every effective table
+    // must equal the static one bit-for-bit — the property the engine's
+    // never-active bit-identity rests on.
+    forall(Config::default().cases(100).seed(0xFA_0715), |g| {
+        let n_nodes = g.usize_in(1, 6);
+        let sc = random_scenario(g, n_nodes);
+        let statics = vec![NodeProfile::healthy(); n_nodes];
+        let mut rt = FaultRuntime::new(sc.clone(), statics.clone());
+        let mut sched: HeapScheduler<usize> = HeapScheduler::new();
+        let mut seq = 0u64;
+        for (k, ev) in sc.events.iter().enumerate() {
+            sched.push(ev.start, seq, k);
+            seq += 1;
+        }
+        let mut steps = 0usize;
+        while let Some((t, _, k)) = sched.pop() {
+            if t > HORIZON || steps > 60_000 {
+                break;
+            }
+            steps += 1;
+            if let Some(tn) = rt.on_event(k, t) {
+                sched.push(tn, seq, k);
+                seq += 1;
+            }
+            if rt.phase().is_quiescent() {
+                for node in 0..n_nodes {
+                    prop_assert(
+                        profile_bits(rt.node_profile(node)) == profile_bits(&statics[node]),
+                        format!("quiescent overlay differs from statics at node {node}"),
+                    )?;
+                    prop_assert(
+                        link_bits(&rt.link_mods(node, (node + 1) % n_nodes.max(1), true))
+                            == link_bits(&LinkFault::IDENTITY),
+                        "quiescent link mods not identity",
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
