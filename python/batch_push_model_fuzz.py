@@ -1,0 +1,290 @@
+#!/usr/bin/env python3
+"""Pre-port fuzz of the calendar queue's batched same-timestamp push.
+
+The authoring environment has no Rust toolchain, so (like the calendar
+queue itself in PR 2 and the fault state machine in PR 3) the batched
+barrier-release insertion algorithm is validated here first, as a
+faithful Python port, before the Rust port lands:
+
+* ``CalendarModel`` mirrors ``rust/src/sim/calendar.rs`` operation for
+  operation — power-of-two buckets each kept sorted *descending* by
+  ``(t, seq)``, day cursor with lap-scan pop and direct-search fallback,
+  lazy power-of-two resize with width recomputed from the live span.
+* ``push_batch_same_t`` is the algorithm under test: one cursor check,
+  one binary search for the block position (all batch keys are
+  contiguous because seqs are fresh and consecutive), a single block
+  splice, then at most one resize straight to the final bucket count.
+
+Three-way equivalence on randomized schedules (singles, batches, pops,
+full drains): batch-mode calendar == loop-mode calendar == heapq
+reference, including exact ties, far-future jumps past the day-cursor
+lap, pushes into the past, and batches that cross grow thresholds
+mid-schedule ("mid-resize") under deliberately bad initial geometries.
+
+Usage: python3 python/batch_push_model_fuzz.py [schedules] [seed]
+"""
+
+import heapq
+import random
+import sys
+
+MIN_BUCKETS = 4
+MAX_WIDTH_LOG2 = 40
+
+
+class CalendarModel:
+    """Line-for-line model of ``CalendarQueue`` (see module docstring)."""
+
+    def __init__(self, nbuckets=16, width_log2=13):
+        assert nbuckets >= 1 and (nbuckets & (nbuckets - 1)) == 0
+        self.buckets = [[] for _ in range(nbuckets)]
+        self.width_log2 = width_log2
+        self.len = 0
+        self.cur_day = 0
+
+    def day(self, t):
+        return t >> self.width_log2
+
+    @staticmethod
+    def _find_idx(bucket, key):
+        """Rust ``binary_search_by(|probe| key.cmp(probe))`` insertion
+        point in a bucket sorted descending by (t, seq)."""
+        lo, hi = 0, len(bucket)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            probe = (bucket[mid][0], bucket[mid][1])
+            if key < probe:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def _insert(self, t, seq, item):
+        b = self.buckets[self.day(t) & (len(self.buckets) - 1)]
+        b.insert(self._find_idx(b, (t, seq)), (t, seq, item))
+
+    def _resize(self, new_count):
+        entries = [e for b in self.buckets for e in b]
+        assert len(entries) == self.len
+        if self.len >= 2:
+            tmin = min(e[0] for e in entries)
+            tmax = max(e[0] for e in entries)
+            span = tmax - tmin
+            if span > 0:
+                gap = max(span // self.len, 1)
+                self.width_log2 = min(gap.bit_length(), MAX_WIDTH_LOG2)
+        self.buckets = [[] for _ in range(new_count)]
+        min_key = None
+        for t, seq, item in entries:
+            if min_key is None or (t, seq) < min_key:
+                min_key = (t, seq)
+            self._insert(t, seq, item)
+        if min_key is not None:
+            self.cur_day = self.day(min_key[0])
+
+    def _maybe_shrink(self):
+        nb = len(self.buckets)
+        if self.len < nb // 2 and nb > MIN_BUCKETS:
+            self._resize(nb // 2)
+
+    def push(self, t, seq, item):
+        day = self.day(t)
+        if self.len == 0 or day < self.cur_day:
+            self.cur_day = day
+        self._insert(t, seq, item)
+        self.len += 1
+        if self.len > 2 * len(self.buckets):
+            self._resize(len(self.buckets) * 2)
+
+    def push_batch_same_t(self, t, first_seq, items):
+        """The algorithm under test (contract: fresh consecutive seqs)."""
+        k = len(items)
+        if k == 0:
+            return
+        day = self.day(t)
+        if self.len == 0 or day < self.cur_day:
+            self.cur_day = day
+        b = self.buckets[day & (len(self.buckets) - 1)]
+        hi_key = (t, first_seq + k - 1)
+        idx = self._find_idx(b, hi_key)
+        # Block splice: descending seqs at idx (the Rust port rotates idx
+        # to the deque front, push_fronts the batch, rotates back).
+        block = [
+            (t, first_seq + i, items[i]) for i in range(k - 1, -1, -1)
+        ]
+        b[idx:idx] = block
+        self.len += k
+        if self.len > 2 * len(self.buckets):
+            target = len(self.buckets)
+            while self.len > 2 * target:
+                target *= 2
+            self._resize(target)
+
+    def pop(self):
+        if self.len == 0:
+            return None
+        nb = len(self.buckets)
+        mask = nb - 1
+        for _ in range(nb):
+            b = self.buckets[self.cur_day & mask]
+            if b and (b[-1][0] >> self.width_log2) == self.cur_day:
+                e = b.pop()
+                self.len -= 1
+                self._maybe_shrink()
+                return e
+            self.cur_day += 1
+        best = None
+        for i, b in enumerate(self.buckets):
+            if b:
+                t, seq, _ = b[-1]
+                if best is None or (t, seq) < (best[1], best[2]):
+                    best = (i, t, seq)
+        assert best is not None
+        i, t, _ = best
+        self.cur_day = t >> self.width_log2
+        e = self.buckets[i].pop()
+        self.len -= 1
+        self._maybe_shrink()
+        return e
+
+
+class HeapModel:
+    def __init__(self):
+        self.h = []
+
+    def push(self, t, seq, item):
+        heapq.heappush(self.h, (t, seq, item))
+
+    def push_batch_same_t(self, t, first_seq, items):
+        for i, item in enumerate(items):
+            self.push(t, first_seq + i, item)
+
+    def pop(self):
+        return heapq.heappop(self.h) if self.h else None
+
+    @property
+    def len(self):
+        return len(self.h)
+
+
+def run_schedule(rng, case):
+    nbuckets = 1 << rng.randint(0, 4)
+    width = rng.randint(0, 16)
+    cal_batch = CalendarModel(nbuckets, width)
+    cal_loop = CalendarModel(nbuckets, width)
+    heap = HeapModel()
+    seq = 0
+    last_t = 0
+
+    def gen_t():
+        style = rng.random()
+        if style < 0.45:
+            return last_t + rng.randint(0, 64)
+        if style < 0.6:
+            return last_t  # exact tie
+        if style < 0.85:
+            return last_t + rng.randint(0, 1 << 20)  # past the lap
+        return rng.randint(0, max(last_t, 1))  # into the past
+
+    for op in range(rng.randint(1, 300)):
+        r = rng.random()
+        if r < 0.35:
+            t = gen_t()
+            cal_batch.push(t, seq, seq)
+            cal_loop.push(t, seq, seq)
+            heap.push(t, seq, seq)
+            seq += 1
+        elif r < 0.55:
+            # Same-t batch (a barrier release): sizes cross the grow
+            # threshold of even the largest geometry, so batches land
+            # mid-resize; ~one in eight is empty or singleton.
+            k = rng.choice([0, 1, 2, 3, 7, 33, 150, 600])
+            t = gen_t()
+            items = list(range(seq, seq + k))
+            cal_batch.push_batch_same_t(t, seq, items)
+            # Loop reference: individual pushes, identical seq stream.
+            for i in range(k):
+                cal_loop.push(t, seq + i, seq + i)
+                heap.push(t, seq + i, seq + i)
+            seq += k
+        else:
+            a = cal_batch.pop()
+            b = cal_loop.pop()
+            c = heap.pop()
+            assert a == b == c, (
+                f"case {case} op {op}: batch={a} loop={b} heap={c}"
+            )
+            if c is not None:
+                last_t = c[0]
+        assert cal_batch.len == cal_loop.len == heap.len, (
+            f"case {case} op {op}: lens "
+            f"{cal_batch.len}/{cal_loop.len}/{heap.len}"
+        )
+    while True:
+        a = cal_batch.pop()
+        b = cal_loop.pop()
+        c = heap.pop()
+        assert a == b == c, f"case {case} drain: batch={a} loop={b} heap={c}"
+        if c is None:
+            return
+
+
+def targeted_cases():
+    """Deterministic shapes the random mix might under-sample."""
+    # Batch lands in a bucket already holding later-day events (the
+    # splice position is mid-bucket, not the front).
+    cal = CalendarModel(4, 0)  # width 1 ns: day == t, bucket = t & 3
+    heap = HeapModel()
+    for s, t in enumerate([100, 104, 108]):  # all land in bucket 0
+        cal.push(t, s, s)
+        heap.push(t, s, s)
+    # t=104 ties an existing entry's time with smaller seq, and (108, 2)
+    # sorts above the block: splice index 1, inside the bucket.
+    cal.push_batch_same_t(104, 10, [10, 11, 12])
+    heap.push_batch_same_t(104, 10, [10, 11, 12])
+    while True:
+        a, b = cal.pop(), heap.pop()
+        assert a == b, f"mid-bucket splice: {a} != {b}"
+        if b is None:
+            break
+
+    # Day-cursor wrap: cursor far ahead after a pop, batch into the past.
+    cal = CalendarModel(4, 2)
+    heap = HeapModel()
+    cal.push(4000, 0, 0)
+    heap.push(4000, 0, 0)
+    assert cal.pop() == heap.pop()
+    cal.push_batch_same_t(8, 1, [1, 2, 3, 4])
+    heap.push_batch_same_t(8, 1, [1, 2, 3, 4])
+    cal.push(4000, 5, 5)
+    heap.push(4000, 5, 5)
+    while True:
+        a, b = cal.pop(), heap.pop()
+        assert a == b, f"cursor wrap: {a} != {b}"
+        if b is None:
+            break
+
+    # One giant batch from empty: single resize straight to target.
+    cal = CalendarModel(4, 0)
+    heap = HeapModel()
+    cal.push_batch_same_t(77, 0, list(range(5000)))
+    heap.push_batch_same_t(77, 0, list(range(5000)))
+    assert len(cal.buckets) >= 2048 and cal.len == 5000
+    for _ in range(5001):
+        a, b = cal.pop(), heap.pop()
+        assert a == b, f"giant batch: {a} != {b}"
+
+
+def main():
+    schedules = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+    seed = int(sys.argv[2]) if len(sys.argv) > 2 else 0xBA7C
+    targeted_cases()
+    rng = random.Random(seed)
+    for case in range(schedules):
+        run_schedule(rng, case)
+    print(f"batch-push model fuzz: targeted cases + {schedules} "
+          f"randomized schedules OK (seed {seed:#x})")
+
+
+if __name__ == "__main__":
+    main()

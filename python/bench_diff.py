@@ -1,25 +1,33 @@
 #!/usr/bin/env python3
-"""Gate BENCH_hotpath.json: baseline regression diff + scheduler A/B bar.
+"""Gate BENCH_hotpath.json: baseline regression diff + scheduler A/B bars.
 
 Usage:
     python3 python/bench_diff.py CURRENT.json [--baseline BASELINE.json]
                                  [--threshold 0.25] [--ab-margin 0.10]
+                                 [--release-margin 0.10]
 
-Two independent checks:
+Three independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
    procs)`` median must not exceed the heap's by more than
-   ``--ab-margin`` at 256 procs / ``--ab-margin-1024`` at 1024 procs —
-   the tentpole's acceptance bar (the printed ratios document the
-   expected calendar win at 1024). The end-to-end ``scheduler DES 256p``
-   pair is reported for context but never gated (few-sample wall-clock
-   timings), in this check and in the baseline diff alike.
+   ``--ab-margin`` at 256 procs / ``--ab-margin-1024`` at 1024 and 4096
+   procs — the calendar tentpole's acceptance bar (the printed ratios
+   document the expected calendar win at scale). The end-to-end
+   ``scheduler DES 256p`` pair is reported for context but never gated
+   (few-sample wall-clock timings), in this check and in the baseline
+   diff alike.
 
-2. **Baseline regression diff** (with ``--baseline``): ns-unit entries in
-   the gated sections (name prefixes ``DES hot loop`` / ``scheduler``)
-   fail when ``current_median > baseline_median * (1 + threshold)``.
-   Entries present on only one side are reported but never fail the diff.
+2. **Batched-release parity bar** (always runs): ``scheduler calendar
+   release batch (N procs)`` must be at parity or better vs ``release
+   loop`` at 1024 and 4096 procs, within ``--release-margin`` — the
+   batched-barrier tentpole's acceptance bar.
+
+3. **Baseline regression diff** (with ``--baseline``): ns-unit entries in
+   the gated sections (name prefixes ``DES hot loop`` / ``scheduler`` /
+   ``engine construction``) fail when ``current_median >
+   baseline_median * (1 + threshold)``. Entries present on only one side
+   are reported but never fail the diff.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -28,7 +36,7 @@ import argparse
 import json
 import sys
 
-GATED_PREFIXES = ("DES hot loop", "scheduler")
+GATED_PREFIXES = ("DES hot loop", "scheduler", "engine construction")
 # Few-sample end-to-end wall-clock entries: reported, never gated.
 UNGATED_PREFIXES = ("scheduler DES",)
 
@@ -57,10 +65,10 @@ def ab_check(cur, margin, margin_1024):
     failures = []
     checked = 0
     # (procs, allowed calendar/heap ratio). The calendar should *win* at
-    # 1024, but the bar only enforces "not meaningfully slower" — a hard
+    # 1024+, but the bar only enforces "not meaningfully slower" — a hard
     # faster-than bar on an unmeasured ratio could redden CI with no
     # recourse; the printed ratio documents the actual win.
-    bars = [(256, 1.0 + margin), (1024, 1.0 + margin_1024)]
+    bars = [(256, 1.0 + margin), (1024, 1.0 + margin_1024), (4096, 1.0 + margin_1024)]
     for procs, allowed in bars:
         heap = median_of(cur, f"scheduler heap pop+push ({procs} procs)")
         cal = median_of(cur, f"scheduler calendar pop+push ({procs} procs)")
@@ -86,6 +94,32 @@ def ab_check(cur, margin, margin_1024):
             f"  [a/b info] DES 256p: calendar {cal / heap:.2f}x heap "
             "(not gated; few-sample)"
         )
+    return failures, checked
+
+
+def release_check(cur, margin):
+    """Batched vs looped barrier-release bar inside one results file."""
+    failures = []
+    checked = 0
+    for procs in (1024, 4096):
+        loop = median_of(cur, f"scheduler calendar release loop ({procs} procs)")
+        batch = median_of(cur, f"scheduler calendar release batch ({procs} procs)")
+        if loop is None or batch is None:
+            print(f"  [release]  {procs} procs: pair missing, skipped")
+            continue
+        ratio = batch / loop
+        allowed = 1.0 + margin
+        checked += 1
+        verdict = "ok" if ratio <= allowed else "FAIL"
+        print(
+            f"  [release]  {procs} procs: batch {batch:.1f} vs loop "
+            f"{loop:.1f} ns (ratio {ratio:.2f}, allowed {allowed:.2f}) {verdict}"
+        )
+        if ratio > allowed:
+            failures.append(
+                f"batched release {ratio:.2f}x looped at {procs} procs "
+                f"(allowed {allowed:.2f}x)"
+            )
     return failures, checked
 
 
@@ -140,7 +174,13 @@ def main():
         "--ab-margin-1024",
         type=float,
         default=0.10,
-        help="calendar-vs-heap slack at 1024 procs (default 0.10)",
+        help="calendar-vs-heap slack at 1024/4096 procs (default 0.10)",
+    )
+    ap.add_argument(
+        "--release-margin",
+        type=float,
+        default=0.10,
+        help="batched-vs-looped release slack at 1024/4096 procs (default 0.10)",
     )
     args = ap.parse_args()
 
@@ -155,6 +195,15 @@ def main():
         failed = True
         for f in ab_failures:
             print(f"bench-diff: A/B bar failed: {f}", file=sys.stderr)
+
+    print("== batched-release parity bar ==")
+    rel_failures, rel_checked = release_check(cur, args.release_margin)
+    if rel_checked == 0:
+        print("bench-diff: no release loop/batch pairs found — bar not enforced")
+    if rel_failures:
+        failed = True
+        for f in rel_failures:
+            print(f"bench-diff: release bar failed: {f}", file=sys.stderr)
 
     if args.baseline:
         print("== baseline regression diff ==")

@@ -14,7 +14,9 @@
 //! degradation to exactly the windows where a fault was active.
 //!
 //! Pass `--smoke` (or set `EBCOMM_SMOKE=1`) for the reduced CI grid;
-//! `EBCOMM_FULL=1` runs paper-scale windows.
+//! `--scale` for the 1024-proc coagulation probe
+//! ([`ScenarioExperiment::scale_suite`]); `EBCOMM_FULL=1` runs
+//! paper-scale windows (and unlocks the 4096-proc rung under `--scale`).
 
 use ebcomm::coordinator::report;
 use ebcomm::coordinator::{run_scenario, ScenarioExperiment, ScenarioKind};
@@ -24,10 +26,13 @@ use ebcomm::stats::{median, quantile, two_sample_t};
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let smoke = std::env::args().skip(1).any(|a| a == "--smoke")
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
         || std::env::var("EBCOMM_SMOKE").map(|v| v == "1").unwrap_or(false);
     let exp = if smoke {
         ScenarioExperiment::smoke()
+    } else if args.iter().any(|a| a == "--scale") {
+        ScenarioExperiment::scale_suite()
     } else {
         ScenarioExperiment::paper_suite()
     };
@@ -65,7 +70,9 @@ fn main() {
     // §III-G shape checks: always-on lac-417 scenario vs baseline.
     if exp.scenarios.contains(&ScenarioKind::Lac417Static) {
         let mode = AsyncMode::BestEffort;
-        println!("== paper shape checks (lac417_static vs baseline, mode 3, {probe_procs} procs) ==");
+        println!(
+            "== paper shape checks (lac417_static vs baseline, mode 3, {probe_procs} procs) =="
+        );
         for metric in [
             MetricName::WalltimeLatency,
             MetricName::SimstepLatency,
@@ -95,8 +102,12 @@ fn main() {
                 probe_procs,
                 metric,
             ));
-            let m_without =
-                median(&results.replicate_medians(ScenarioKind::Baseline, mode, probe_procs, metric));
+            let m_without = median(&results.replicate_medians(
+                ScenarioKind::Baseline,
+                mode,
+                probe_procs,
+                metric,
+            ));
             let rel = if m_without.abs() > 1e-12 {
                 (m_with - m_without) / m_without
             } else {

@@ -108,7 +108,9 @@ impl Recorder {
             .map(|d| PathBuf::from(d).join(".."))
             .unwrap_or_else(|_| PathBuf::from("."));
         let path = root.join("BENCH_hotpath.json");
-        let mut out = String::from("{\n  \"bench\": \"bench_hotpath\",\n  \"schema\": 1,\n  \"results\": [\n");
+        let mut out = String::from(
+            "{\n  \"bench\": \"bench_hotpath\",\n  \"schema\": 1,\n  \"results\": [\n",
+        );
         for (i, e) in self.entries.iter().enumerate() {
             let sep = if i + 1 < self.entries.len() { "," } else { "" };
             out.push_str(&format!(
@@ -149,12 +151,16 @@ fn json_number(x: f64) -> String {
     }
 }
 
-/// Build the standard 16-proc best-effort DES workload (1 simel/CPU —
-/// communication-dominated, so this times the engine, not the solver).
-fn des_16p_run() -> ebcomm::sim::SimResult<GraphColoringShard> {
-    let topo = Topology::new(16, PlacementKind::OnePerNode);
-    let mut rng = Xoshiro256::new(3);
-    let shards: Vec<_> = (0..16)
+/// Pre-built inputs for one DES engine run (shard construction is
+/// deterministic but not free, so benches build inputs untimed and time
+/// construction/run separately).
+fn des_inputs(
+    procs: usize,
+    seed: u64,
+) -> (Topology, Vec<ebcomm::net::NodeProfile>, Vec<GraphColoringShard>) {
+    let topo = Topology::new(procs, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..procs)
         .map(|r| {
             GraphColoringShard::new(
                 GcConfig {
@@ -167,14 +173,27 @@ fn des_16p_run() -> ebcomm::sim::SimResult<GraphColoringShard> {
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(
-        AsyncMode::BestEffort,
-        ModeTiming::graph_coloring(16),
-        100 * MILLI,
-    );
-    cfg.send_buffer = 64;
     let profiles = healthy_profiles(&topo);
+    (topo, profiles, shards)
+}
+
+/// One DES run at `procs` scale (1 simel/CPU — communication-dominated,
+/// so this times the engine, not the solver).
+fn des_run(
+    procs: usize,
+    mode: AsyncMode,
+    run_for: u64,
+    seed: u64,
+) -> ebcomm::sim::SimResult<GraphColoringShard> {
+    let (topo, profiles, shards) = des_inputs(procs, seed);
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(procs), run_for);
+    cfg.send_buffer = 64;
     Engine::new(cfg, topo, profiles, shards).run()
+}
+
+/// Build the standard 16-proc best-effort DES workload.
+fn des_16p_run() -> ebcomm::sim::SimResult<GraphColoringShard> {
+    des_run(16, AsyncMode::BestEffort, 100 * MILLI, 3)
 }
 
 fn main() {
@@ -270,6 +289,66 @@ fn main() {
         );
     }
 
+    // DES at ROADMAP scale, smoke-capped for CI: sync cells are barrier
+    // *storms* (every simstep ends in a full release — the batched
+    // push_batch_same_t path), best-effort cells are raw event
+    // throughput at 1024 procs. Virtual windows are sized so each cell
+    // stays in low single-digit wall seconds. Deliberately named OUTSIDE
+    // the gated "DES hot loop" prefix: 3-sample whole-engine wall-clock
+    // cells are too noisy for the 25% cross-PR bar (same reasoning as
+    // the ungated "scheduler DES" pair) — they document the trajectory.
+    println!("== DES at scale (info only, few-sample) ==");
+    for &(procs, mode, virt, tag) in &[
+        (1024usize, AsyncMode::Sync, 50 * MILLI, "sync storm"),
+        (1024, AsyncMode::BestEffort, 5 * MILLI, "best-effort"),
+        (4096, AsyncMode::Sync, 25 * MILLI, "sync storm"),
+    ] {
+        let mut total_updates = 0u64;
+        let s = time_batched(1, 3, 1, || {
+            let result = des_run(procs, mode, virt, 0x5CA1E);
+            total_updates = result.updates.iter().sum();
+            std::hint::black_box(result.updates);
+        });
+        rec.report(
+            &format!("DES scale ({procs}p {tag}, {}ms virtual)", virt / MILLI),
+            &s,
+        );
+        let throughput: Vec<f64> = s
+            .iter()
+            .map(|&wall_ns| total_updates as f64 / (wall_ns / 1e9))
+            .collect();
+        rec.report_value(
+            &format!("DES {procs}p {tag} simstep throughput"),
+            "simsteps_per_sec",
+            &throughput,
+        );
+    }
+
+    // Engine construction alone at scale: flat channel wiring + batched
+    // initial wakes (the costs that dominated short-run sweep cells
+    // before the flattening). Shards are rebuilt untimed per sample;
+    // sample counts are sized for a stable gated median (construction is
+    // milliseconds, so samples are cheap).
+    println!("== engine construction ==");
+    for &(procs, samples) in &[(1024usize, 9usize), (4096, 5)] {
+        let mut s = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let (topo, profiles, shards) = des_inputs(procs, 0xC0);
+            let mut cfg = SimConfig::new(
+                AsyncMode::BestEffort,
+                ModeTiming::graph_coloring(procs),
+                MILLI,
+            );
+            cfg.send_buffer = 64;
+            let t = Instant::now();
+            let engine = Engine::new(cfg, topo, profiles, shards);
+            s.push(t.elapsed().as_nanos() as f64);
+            std::hint::black_box(&engine);
+            drop(engine);
+        }
+        rec.report(&format!("engine construction ({procs} procs)"), &s);
+    }
+
     // Scheduler shoot-out: the wake queue alone, heap vs calendar, under
     // the engine's steady-state cadence (pop the earliest wake, push the
     // process's next wake a near-constant stride later) at 64/256/1024
@@ -278,7 +357,7 @@ fn main() {
     // dequeue-order equivalence is enforced by tests/prop_calendar.rs,
     // here we only time it.
     println!("== scheduler (heap vs calendar) ==");
-    for &procs in &[64usize, 256, 1024] {
+    for &procs in &[64usize, 256, 1024, 4096] {
         for kind in [SchedKind::Heap, SchedKind::Calendar] {
             let mut sched = kind.make::<usize>();
             let mut rng = Xoshiro256::new(0x5C4ED);
@@ -294,6 +373,51 @@ fn main() {
                 std::hint::black_box(p);
             });
             rec.report(&format!("scheduler {} pop+push ({procs} procs)", kind.label()), &s);
+        }
+    }
+
+    // Barrier release burst, looped vs batched: drain one generation of
+    // wakes, then reschedule all of them at a single release timestamp —
+    // via N independent pushes (the pre-batch engine) or one
+    // `push_batch_same_t` splice (what `release_barrier` now does). One
+    // sample covers a full drain+release cycle; `python/bench_diff.py`
+    // gates batch-at-parity-or-better against the looped entry at 1024
+    // procs (the tentpole's acceptance bar).
+    println!("== scheduler barrier release (loop vs batch, calendar) ==");
+    for &procs in &[1024usize, 4096] {
+        for batch in [false, true] {
+            let mut sched = SchedKind::Calendar.make::<usize>();
+            let mut seq = 0u64;
+            for p in 0..procs {
+                sched.push((p as u64) % 97, seq, p);
+                seq += 1;
+            }
+            let mut release_t: u64 = 8_192;
+            let mut scratch: Vec<usize> = Vec::with_capacity(procs);
+            let s = time_batched(5, 40, 10, || {
+                for _ in 0..procs {
+                    std::hint::black_box(sched.pop().expect("generation present"));
+                }
+                if batch {
+                    scratch.clear();
+                    scratch.extend(0..procs);
+                    sched.push_batch_same_t(release_t, seq, &mut scratch);
+                    seq += procs as u64;
+                } else {
+                    for p in 0..procs {
+                        sched.push(release_t, seq, p);
+                        seq += 1;
+                    }
+                }
+                release_t += 8_192;
+            });
+            rec.report(
+                &format!(
+                    "scheduler calendar release {} ({procs} procs)",
+                    if batch { "batch" } else { "loop" }
+                ),
+                &s,
+            );
         }
     }
 
@@ -379,6 +503,37 @@ fn main() {
             "256-proc sweep parallel speedup",
             "x",
             &[serial_ns / parallel_ns.max(1.0)],
+        );
+    }
+
+    // ROADMAP scale sweep: the coordinator grid with 1024-proc cells
+    // (4096 under EBCOMM_FULL=1), smoke-capped virtual windows. Serial
+    // vs parallel must stay bit-identical; LPT claiming starts the
+    // 1024-proc stragglers first (see coordinator::runner cost hints).
+    println!("== scale sweep (1024-proc cells) ==");
+    {
+        let exp = BenchmarkExperiment::scale_multiprocess_gc();
+        let t = Instant::now();
+        let serial = run_benchmark_serial(&exp);
+        let serial_ns = t.elapsed().as_nanos() as f64;
+
+        let workers = default_workers();
+        let t = Instant::now();
+        let parallel = run_benchmark_with_workers(&exp, workers);
+        let parallel_ns = t.elapsed().as_nanos() as f64;
+
+        assert_eq!(
+            serial, parallel,
+            "scale sweep diverged from serial reference"
+        );
+        let max_procs = exp.cpu_counts.iter().max().copied().unwrap_or(0);
+        rec.report(
+            &format!("scale sweep (<= {max_procs} procs), serial"),
+            &[serial_ns],
+        );
+        rec.report(
+            &format!("scale sweep (<= {max_procs} procs), parallel ({workers} workers)"),
+            &[parallel_ns],
         );
     }
 

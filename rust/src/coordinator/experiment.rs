@@ -100,6 +100,29 @@ impl BenchmarkExperiment {
         Self::base("fig3c_multiprocess_digital_evolution", Workload::DigitalEvolution, false)
     }
 
+    /// ROADMAP scale push beyond the paper's 64-proc ceiling: 256-,
+    /// 1024-, and 4096-proc graph-coloring cells at 1 simel/CPU
+    /// (communication-dominated, so the cells time the engine — barrier
+    /// releases and channel wiring — not the solver). Smoke-capped by
+    /// default: short virtual windows, one replicate, sync + best-effort
+    /// only, and the 4096-proc rung reserved for `EBCOMM_FULL=1`, so CI
+    /// exercises the 1024-proc path in seconds.
+    pub fn scale_multiprocess_gc() -> Self {
+        let full = full_scale();
+        let mut e = Self::base("scale_multiprocess_graph_coloring", Workload::GraphColoring, false);
+        e.cpu_counts = if full {
+            vec![256, 1024, 4096]
+        } else {
+            vec![256, 1024]
+        };
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.replicates = if full { 3 } else { 1 };
+        e.run_for = if full { SECOND } else { 8 * MILLI };
+        e.simels_per_cpu = 1;
+        e.cost_scale = 1.0;
+        e
+    }
+
     pub fn placement(&self) -> PlacementKind {
         if self.multithread {
             PlacementKind::SingleNode
@@ -419,6 +442,27 @@ impl ScenarioExperiment {
         }
     }
 
+    /// Scale rung of the scenario sweep: baseline + congestion storm at
+    /// 256 and 1024 procs (4096 under `EBCOMM_FULL=1`), sync vs
+    /// best-effort, one replicate, trimmed windows — the "communication
+    /// coagulation at scale" probe the paper's QoS suite exists for,
+    /// kept small enough to run outside CI without an allocation.
+    pub fn scale_suite() -> Self {
+        let mut e = Self::paper_suite();
+        e.name = "fault_scenarios_scale";
+        e.scenarios = vec![ScenarioKind::Baseline, ScenarioKind::CongestionStorm];
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.proc_counts = if full_scale() {
+            vec![256, 1024, 4096]
+        } else {
+            vec![256, 1024]
+        };
+        e.replicates = 1;
+        e.schedule = SnapshotSchedule::compressed(150 * MILLI, 150 * MILLI, 50 * MILLI, 3);
+        e.run_for = 600 * MILLI;
+        e
+    }
+
     /// CI-smoke grid: two shapes per family, 16 procs, modes 0 and 3,
     /// one replicate — exercises compile/overlay/attribution end to end
     /// in seconds.
@@ -551,6 +595,25 @@ mod tests {
         }
         let node = ScenarioKind::fault_node(64);
         assert!(node > 0 && node < 64, "mid-allocation node, got {node}");
+    }
+
+    #[test]
+    fn scale_presets_reach_1024_procs() {
+        // Without EBCOMM_FULL these are the smoke-capped grids CI runs:
+        // the 1024-proc rung is always present, 4096 is full-scale only.
+        let e = BenchmarkExperiment::scale_multiprocess_gc();
+        assert!(e.cpu_counts.contains(&1024));
+        assert_eq!(e.simels_per_cpu, 1, "communication-dominated cells");
+        assert_eq!(e.placement(), PlacementKind::OnePerNode);
+        assert!(e.modes.contains(&AsyncMode::Sync), "barrier storms at scale");
+        let s = ScenarioExperiment::scale_suite();
+        assert!(s.proc_counts.contains(&1024));
+        assert_eq!(s.replicates, 1);
+        assert!(s.scenarios.contains(&ScenarioKind::CongestionStorm));
+        if !full_scale() {
+            assert!(!e.cpu_counts.contains(&4096), "4096 is full-scale only");
+            assert!(!s.proc_counts.contains(&4096), "4096 is full-scale only");
+        }
     }
 
     #[test]

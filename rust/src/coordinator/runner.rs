@@ -61,6 +61,24 @@ impl BenchmarkResults {
     }
 }
 
+/// LPT cost hint for one sweep cell. Wall-clock cost tracks events
+/// processed: proportional to process count, scaled by how many simsteps
+/// the mode completes per virtual second — barrier-bound cells spend
+/// much of the window waiting out releases (few events), best-effort
+/// cells run at full cadence (the most events). Process count spans the
+/// grid in ≥4× rungs (1, 4, …, 1024, 4096) while mode weights span only
+/// 2–4×, so the scale axis still dominates the claim order: 1024/4096-
+/// proc stragglers start first, and within one rung the expensive
+/// asynchronous cells lead.
+fn cell_cost_hint(n_procs: usize, mode: AsyncMode) -> u64 {
+    let mode_weight: u64 = match mode {
+        AsyncMode::Sync => 2,
+        AsyncMode::RollingBarrier | AsyncMode::FixedBarrier | AsyncMode::NoComm => 3,
+        AsyncMode::BestEffort => 4,
+    };
+    (n_procs as u64).saturating_mul(mode_weight)
+}
+
 fn sim_config(
     exp: &BenchmarkExperiment,
     mode: AsyncMode,
@@ -140,9 +158,10 @@ pub fn run_benchmark_serial(exp: &BenchmarkExperiment) -> BenchmarkResults {
 /// Run a benchmark experiment on up to `workers` threads. Points come
 /// back in grid order (cpu count, then mode, then replicate) whatever
 /// the worker count — results are bit-identical across worker counts.
-/// Cells are *claimed* in longest-processing-time order (cost ∝ CPU
-/// count) so 64/256-proc stragglers start first; per-cell wall times log
-/// under `EBCOMM_SWEEP_TELEMETRY=1`.
+/// Cells are *claimed* in longest-processing-time order (see
+/// [`cell_cost_hint`]: CPU count dominates, mode breaks ties) so
+/// 1024/4096-proc stragglers start first; per-cell wall times log under
+/// `EBCOMM_SWEEP_TELEMETRY=1`.
 pub fn run_benchmark_with_workers(
     exp: &BenchmarkExperiment,
     workers: usize,
@@ -158,7 +177,7 @@ pub fn run_benchmark_with_workers(
     let (points, timings) = parallel_map_lpt(
         workers,
         &cells,
-        |&(n_cpus, _, _)| n_cpus as u64,
+        |&(n_cpus, mode, _)| cell_cost_hint(n_cpus, mode),
         |&(n_cpus, mode, rep)| run_benchmark_cell(exp, mode, n_cpus, rep),
     );
     log_telemetry(exp.name, &timings);
@@ -426,8 +445,8 @@ pub fn run_scenario(exp: &ScenarioExperiment) -> ScenarioResults {
 }
 
 /// [`run_scenario`] on up to `workers` threads. Cells come back in grid
-/// order whatever the worker count; claiming is LPT-ordered (cost ∝
-/// process count) so 256-proc cells start first.
+/// order whatever the worker count; claiming is LPT-ordered
+/// ([`cell_cost_hint`]) so the largest-scale cells start first.
 pub fn run_scenario_with_workers(exp: &ScenarioExperiment, workers: usize) -> ScenarioResults {
     let mut cells: Vec<(ScenarioKind, AsyncMode, usize, usize)> = Vec::new();
     for &kind in &exp.scenarios {
@@ -442,7 +461,7 @@ pub fn run_scenario_with_workers(exp: &ScenarioExperiment, workers: usize) -> Sc
     let (points, timings) = parallel_map_lpt(
         workers,
         &cells,
-        |&(_, _, n_procs, _)| n_procs as u64,
+        |&(_, mode, n_procs, _)| cell_cost_hint(n_procs, mode),
         |&(kind, mode, n_procs, rep)| run_scenario_cell(exp, kind, mode, n_procs, rep),
     );
     log_telemetry(exp.name, &timings);
@@ -466,6 +485,24 @@ mod tests {
         e.simels_per_cpu = 16;
         e.cost_scale = 1.0;
         e
+    }
+
+    #[test]
+    fn cost_hints_rank_scale_above_mode() {
+        // Across the grid's ≥4× proc rungs, scale dominates the claim
+        // order; within one rung, best-effort (full-cadence, most
+        // events) outranks sync (barrier-bound).
+        for &(lo, hi) in &[(1usize, 4usize), (64, 256), (256, 1024), (1024, 4096)] {
+            assert!(
+                cell_cost_hint(hi, AsyncMode::Sync)
+                    > cell_cost_hint(lo, AsyncMode::BestEffort),
+                "{hi}-proc sync must outrank {lo}-proc best-effort"
+            );
+        }
+        assert!(
+            cell_cost_hint(1024, AsyncMode::BestEffort)
+                > cell_cost_hint(1024, AsyncMode::Sync)
+        );
     }
 
     #[test]
@@ -551,8 +588,12 @@ mod tests {
         }
         // Baseline cells are quiescent throughout; the storm cell tags
         // at least one window with the active fault.
-        let (bq, bf) =
-            res.phase_split(ScenarioKind::Baseline, AsyncMode::BestEffort, 4, MetricName::SimstepPeriod);
+        let (bq, bf) = res.phase_split(
+            ScenarioKind::Baseline,
+            AsyncMode::BestEffort,
+            4,
+            MetricName::SimstepPeriod,
+        );
         assert!(!bq.is_empty() && bf.is_empty());
         let (_, sf) = res.phase_split(
             ScenarioKind::CongestionStorm,

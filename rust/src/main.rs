@@ -132,7 +132,11 @@ fn cmd_qos(args: &[String]) -> CliResult {
             println!("{}", report::qos_summary("internode (2 procs, 2 nodes)", &inter));
             println!(
                 "{}",
-                report::qos_comparison("SIII-D placement", ("intranode", &intra), ("internode", &inter))
+                report::qos_comparison(
+                    "SIII-D placement",
+                    ("intranode", &intra),
+                    ("internode", &inter)
+                )
             );
             report::qos_csv(&intra).write_to("results/qos_intranode.csv")?;
             report::qos_csv(&inter).write_to("results/qos_internode.csv")?;
@@ -157,7 +161,10 @@ fn cmd_qos(args: &[String]) -> CliResult {
                 points.push((procs, run_qos(&exp)));
             }
             for metric in MetricName::ALL {
-                println!("{}", report::scaling_regression("SIII-F (1 cpu/node, 1 simel)", &points, metric));
+                println!(
+                    "{}",
+                    report::scaling_regression("SIII-F (1 cpu/node, 1 simel)", &points, metric)
+                );
             }
         }
         "faulty" => {

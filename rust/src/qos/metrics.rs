@@ -108,7 +108,8 @@ impl QosMetrics {
             1.0 - d.successful_sends as f64 / d.attempted_sends as f64
         };
 
-        let delivery_clumpiness = 1.0 - steadiness(d.laden_pulls, d.messages_received, d.pull_attempts);
+        let delivery_clumpiness =
+            1.0 - steadiness(d.laden_pulls, d.messages_received, d.pull_attempts);
 
         QosMetrics {
             simstep_period_ns,

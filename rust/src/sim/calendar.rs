@@ -36,6 +36,26 @@ use crate::util::Nanos;
 pub trait Scheduler<T> {
     /// Enqueue `item` at time `t` with tie-breaker `seq`.
     fn push(&mut self, t: Nanos, seq: u64, item: T);
+    /// Enqueue every item of `batch` at the single time `t`, draining the
+    /// vector; the `i`-th drained item takes seq `first_seq + i`.
+    ///
+    /// Semantically identical to the push loop the default impl is —
+    /// pinned by batch-vs-loop property schedules in
+    /// `tests/prop_calendar.rs` — but overridable so a bucketed scheduler
+    /// can splice the whole block in one operation. This is the barrier
+    /// release's shape: N wakes at one release timestamp with
+    /// consecutive fresh seqs, the per-wake cost of which dominates
+    /// 1024+-proc synchronous sweeps.
+    ///
+    /// Contract (the engine's monotone event counter satisfies it): the
+    /// batch's seqs `first_seq..first_seq + batch.len()` are fresh —
+    /// strictly greater than every seq previously pushed — so the block
+    /// occupies contiguous positions in `(t, seq)` order.
+    fn push_batch_same_t(&mut self, t: Nanos, first_seq: u64, batch: &mut Vec<T>) {
+        for (i, item) in batch.drain(..).enumerate() {
+            self.push(t, first_seq + i as u64, item);
+        }
+    }
     /// Dequeue the entry with the smallest `(t, seq)`.
     fn pop(&mut self) -> Option<(Nanos, u64, T)>;
     /// Entries currently queued.
@@ -290,6 +310,53 @@ impl<T> Scheduler<T> for CalendarQueue<T> {
         }
     }
 
+    /// One bucket lookup + one binary search + one block splice for the
+    /// whole batch, instead of N independent pushes (N searches, N
+    /// threshold checks, and up to log N incremental grow-resizes during
+    /// a 1024-proc release burst). The freshness contract means every
+    /// batch key is strictly greater than any queued key at time `t`, so
+    /// the block is contiguous in the bucket's descending order; any
+    /// grow happens once, straight to the final bucket count.
+    ///
+    /// Dequeue order is identical to the default's push loop whatever
+    /// the intermediate geometry — order depends only on `(t, seq)` —
+    /// pinned by batch-vs-loop schedules in `tests/prop_calendar.rs` and
+    /// pre-validated in `python/batch_push_model_fuzz.py`.
+    fn push_batch_same_t(&mut self, t: Nanos, first_seq: u64, batch: &mut Vec<T>) {
+        let k = batch.len();
+        if k == 0 {
+            return;
+        }
+        let day = self.day(t);
+        if self.len == 0 || day < self.cur_day {
+            self.cur_day = day;
+        }
+        let mask = (self.buckets.len() - 1) as u64;
+        let b = &mut self.buckets[(day & mask) as usize];
+        // The block's largest key leads it in the descending bucket.
+        let hi = (t, first_seq + (k as u64 - 1));
+        let idx = match b.binary_search_by(|probe| hi.cmp(&(probe.0, probe.1))) {
+            Ok(i) | Err(i) => i,
+        };
+        // Splice: rotate the insertion point to the front, push the
+        // batch (ascending drain ⇒ descending block), rotate back —
+        // O(min(idx, len-idx) + k), with idx = 0 in the common barrier
+        // case (the release is the bucket's latest timestamp).
+        b.rotate_left(idx);
+        for (i, item) in batch.drain(..).enumerate() {
+            b.push_front((t, first_seq + i as u64, item));
+        }
+        b.rotate_right(idx);
+        self.len += k;
+        if self.len > 2 * self.buckets.len() {
+            let mut target = self.buckets.len();
+            while self.len > 2 * target {
+                target *= 2;
+            }
+            self.resize(target);
+        }
+    }
+
     fn pop(&mut self) -> Option<(Nanos, u64, T)> {
         if self.len == 0 {
             return None;
@@ -522,6 +589,90 @@ mod tests {
             }
         }
         assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    /// Batch and loop must yield identical pop streams on identically
+    /// pre-loaded queues — including a splice into the middle of a
+    /// bucket that already holds a same-time smaller seq *and* a later
+    /// timestamp (width 1 ns, 4 buckets: 100/104/108 all map to bucket
+    /// 0, so the t=104 block lands at interior index 1).
+    #[test]
+    fn batch_push_matches_loop_mid_bucket_splice() {
+        let mut batched = CalendarQueue::with_params(4, 0);
+        let mut looped = CalendarQueue::with_params(4, 0);
+        let mut heap = HeapScheduler::new();
+        for (seq, t) in [100u64, 104, 108].into_iter().enumerate() {
+            batched.push(t, seq as u64, seq as u64);
+            looped.push(t, seq as u64, seq as u64);
+            heap.push(t, seq as u64, seq as u64);
+        }
+        let mut block: Vec<u64> = vec![10, 11, 12];
+        batched.push_batch_same_t(104, 10, &mut block);
+        assert!(block.is_empty(), "batch must drain its input");
+        for seq in 10u64..13 {
+            looped.push(104, seq, seq);
+            heap.push(104, seq, seq);
+        }
+        let b = drain(&mut batched);
+        assert_eq!(b, drain(&mut looped));
+        assert_eq!(b, drain(&mut heap));
+    }
+
+    /// A batch pushed behind the day cursor (after the queue emptied far
+    /// in the future) must rewind it, exactly like a single past push.
+    #[test]
+    fn batch_push_rewinds_cursor_like_single_push() {
+        let mut cal = CalendarQueue::with_params(4, 2);
+        let mut heap = HeapScheduler::new();
+        cal.push(4000, 0, 0u64);
+        heap.push(4000, 0, 0u64);
+        assert_eq!(cal.pop(), heap.pop());
+        let mut block: Vec<u64> = vec![1, 2, 3, 4];
+        cal.push_batch_same_t(8, 1, &mut block);
+        heap.push_batch_same_t(8, 1, &mut vec![1, 2, 3, 4]);
+        cal.push(4000, 5, 5);
+        heap.push(4000, 5, 5);
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    /// A 4096-wake release from a small queue grows in ONE resize to the
+    /// final geometry, and still drains in exact (t, seq) order.
+    #[test]
+    fn giant_batch_resizes_once_to_target() {
+        let mut cal = CalendarQueue::with_params(4, 0);
+        let mut heap = HeapScheduler::new();
+        let mut block: Vec<u64> = (0..4096).collect();
+        let mut block_ref: Vec<u64> = (0..4096).collect();
+        cal.push_batch_same_t(123_456, 0, &mut block);
+        heap.push_batch_same_t(123_456, 0, &mut block_ref);
+        assert_eq!(cal.len(), 4096);
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    /// Empty batches are no-ops; the trait-object path (the engine's
+    /// view) dispatches the override for the calendar and the push loop
+    /// for the heap.
+    #[test]
+    fn batch_push_through_trait_objects() {
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut s = kind.make::<u64>();
+            s.push_batch_same_t(50, 0, &mut Vec::new());
+            assert!(s.is_empty(), "{}", kind.label());
+            s.push(99, 0, 0);
+            let mut block: Vec<u64> = vec![1, 2, 3];
+            s.push_batch_same_t(70, 1, &mut block);
+            let mut got = Vec::new();
+            while let Some((t, seq, item)) = s.pop() {
+                assert_eq!(seq, item);
+                got.push((t, seq));
+            }
+            assert_eq!(
+                got,
+                vec![(70, 1), (70, 2), (70, 3), (99, 0)],
+                "{}",
+                kind.label()
+            );
+        }
     }
 
     #[test]

@@ -20,8 +20,6 @@
 //! * barrier semantics per asynchronicity mode (Table I), with barrier
 //!   cost growing logarithmically in process count.
 
-use std::collections::HashMap;
-
 use super::calendar::{SchedKind, Scheduler};
 use super::lanes::EnvelopeLanes;
 use super::modes::{AsyncMode, ModeTiming};
@@ -324,6 +322,11 @@ pub struct Engine<W: ShardWorkload> {
     /// channel of every simstep (absorb drains it), instead of a fresh
     /// `Vec` per laden channel per simstep.
     pull_scratch: Vec<W::Msg>,
+    /// Reusable barrier-release buffer: the N same-timestamp wakes of a
+    /// release are staged here and handed to the scheduler as one
+    /// [`Scheduler::push_batch_same_t`] call (which drains it back to
+    /// empty), instead of N independent pushes per barrier.
+    wake_batch: Vec<Ev>,
 }
 
 impl<W: ShardWorkload> Engine<W> {
@@ -341,32 +344,49 @@ impl<W: ShardWorkload> Engine<W> {
 
         // Gather channel specs per process.
         let specs: Vec<Vec<ChannelSpec>> = shards.iter().map(|s| s.channels()).collect();
+        let total_specs: usize = specs.iter().map(|s| s.len()).sum();
 
-        // Index each process's specs by (peer, layer) so reciprocal
-        // wiring is O(1) per channel instead of an O(channels) scan —
-        // the former O(channels²) build dominated construction beyond a
-        // few hundred processes. `or_insert` keeps first-match semantics
-        // identical to the `.position()` scan it replaces.
-        let spec_index: Vec<HashMap<(usize, usize), usize>> = specs
+        // Flat sorted spec index replacing the former per-process
+        // HashMaps: one `(peer, layer, spec idx)` entry per directed
+        // spec in a single arena, grouped by source process (CSR-style
+        // offsets) with each group sorted. Reciprocal lookup is a
+        // `partition_point` lower bound — the smallest spec index of a
+        // (peer, layer) run, i.e. the same first-match semantics as the
+        // `or_insert` build it replaces — with no per-process
+        // allocations and no hashing, which at 1024–4096 procs made
+        // construction the dominant cost of short-run sweep cells.
+        let mut spec_offsets: Vec<usize> = Vec::with_capacity(specs.len() + 1);
+        let mut spec_flat: Vec<(usize, usize, usize)> = Vec::with_capacity(total_specs);
+        spec_offsets.push(0);
+        for specs_p in &specs {
+            let base = spec_flat.len();
+            for (i, s) in specs_p.iter().enumerate() {
+                spec_flat.push((s.peer, s.layer, i));
+            }
+            spec_flat[base..].sort_unstable();
+            spec_offsets.push(spec_flat.len());
+        }
+        let spec_lookup = |proc: usize, peer: usize, layer: usize| -> Option<usize> {
+            let group = &spec_flat[spec_offsets[proc]..spec_offsets[proc + 1]];
+            let at = group.partition_point(|&(p, l, _)| (p, l) < (peer, layer));
+            match group.get(at) {
+                Some(&(p, l, i)) if p == peer && l == layer => Some(i),
+                _ => None,
+            }
+        };
+
+        // Create directed channels and index them, sized in one pass:
+        // the channel count is exactly the spec count, and each source's
+        // outgoing list is exactly its spec list's length.
+        let mut channels: Vec<SimChannel<W::Msg>> = Vec::with_capacity(total_specs);
+        let mut outgoing: Vec<Vec<usize>> = specs
             .iter()
-            .map(|specs_p| {
-                let mut index = HashMap::with_capacity(specs_p.len());
-                for (i, s) in specs_p.iter().enumerate() {
-                    index.entry((s.peer, s.layer)).or_insert(i);
-                }
-                index
-            })
+            .map(|specs_p| Vec::with_capacity(specs_p.len()))
             .collect();
-
-        // Create directed channels and index them.
-        let mut channels: Vec<SimChannel<W::Msg>> = Vec::new();
-        let mut outgoing: Vec<Vec<usize>> = vec![Vec::new(); shards.len()];
         for (src, specs_p) in specs.iter().enumerate() {
             for (src_ch, spec) in specs_p.iter().enumerate() {
                 // Find the reciprocal channel index on the destination.
-                let dst_ch = spec_index[spec.peer]
-                    .get(&(src, reciprocal_layer(spec.layer)))
-                    .copied()
+                let dst_ch = spec_lookup(spec.peer, src, reciprocal_layer(spec.layer))
                     .unwrap_or_else(|| {
                         panic!(
                             "no reciprocal channel: src={src} spec={spec:?}"
@@ -406,8 +426,15 @@ impl<W: ShardWorkload> Engine<W> {
             }
         }
 
-        // Incoming lists.
-        let mut incoming: Vec<Vec<(usize, usize)>> = vec![Vec::new(); shards.len()];
+        // Incoming lists, sized by a degree-count pass before filling.
+        let mut in_degree = vec![0usize; shards.len()];
+        for ch in &channels {
+            in_degree[ch.dst] += 1;
+        }
+        let mut incoming: Vec<Vec<(usize, usize)>> = in_degree
+            .iter()
+            .map(|&d| Vec::with_capacity(d))
+            .collect();
         for (cid, ch) in channels.iter().enumerate() {
             incoming[ch.dst].push((cid, ch.dst_ch));
         }
@@ -426,22 +453,27 @@ impl<W: ShardWorkload> Engine<W> {
                 let n_out = outgoing[p].len();
                 let my_outgoing = std::mem::take(&mut outgoing[p]);
                 let my_incoming = std::mem::take(&mut incoming[p]);
-                // O(1) reciprocal-outgoing lookup per incoming channel
-                // (same first-match semantics as the scan it replaces;
-                // keys are unique anyway — src_ch is an index).
-                let mut out_index: HashMap<(usize, usize), usize> =
-                    HashMap::with_capacity(my_outgoing.len());
-                for (oi, &oc) in my_outgoing.iter().enumerate() {
-                    out_index
-                        .entry((channels[oc].dst, channels[oc].src_ch))
-                        .or_insert(oi);
-                }
+                // Sorted `(dst, src_ch, oi)` index for the reciprocal
+                // lookup: lower-bound on the unique (dst, src_ch) key
+                // (ascending `oi` on the impossible duplicate keeps the
+                // first-match semantics of the HashMap `or_insert` and
+                // the scan before it).
+                let mut out_index: Vec<(usize, usize, usize)> = my_outgoing
+                    .iter()
+                    .enumerate()
+                    .map(|(oi, &oc)| (channels[oc].dst, channels[oc].src_ch, oi))
+                    .collect();
+                out_index.sort_unstable();
                 let reciprocal_out = my_incoming
                     .iter()
                     .map(|&(cid, _)| {
-                        out_index
-                            .get(&(channels[cid].src, channels[cid].dst_ch))
-                            .copied()
+                        let key = (channels[cid].src, channels[cid].dst_ch);
+                        let at =
+                            out_index.partition_point(|&(d, c, _)| (d, c) < key);
+                        match out_index.get(at) {
+                            Some(&(d, c, oi)) if (d, c) == key => Some(oi),
+                            _ => None,
+                        }
                     })
                     .collect();
                 ProcState {
@@ -482,10 +514,13 @@ impl<W: ShardWorkload> Engine<W> {
             Some(rt)
         };
 
-        for p in 0..n {
-            sched.push(0, seq, Ev::Wake(p));
-            seq += 1;
-        }
+        // Initial wakes: one batch at t=0 — the same same-timestamp
+        // burst shape as a barrier release, with the same seq stream as
+        // the loop it replaces. The drained vector is kept as the
+        // engine's reusable release scratch.
+        let mut wake_batch: Vec<Ev> = (0..n).map(Ev::Wake).collect();
+        sched.push_batch_same_t(0, seq, &mut wake_batch);
+        seq += n as u64;
         if let Some(s) = cfg.snapshots {
             for i in 0..s.count {
                 sched.push(s.open_at(i), seq, Ev::SnapOpen(i));
@@ -513,6 +548,7 @@ impl<W: ShardWorkload> Engine<W> {
             window_phase: ScenarioPhase::QUIESCENT,
             engine_rng,
             pull_scratch: Vec::new(),
+            wake_batch,
         }
     }
 
@@ -701,22 +737,33 @@ impl<W: ShardWorkload> Engine<W> {
         self.barrier_count += 1;
         self.barrier_max_arrival = self.barrier_max_arrival.max(t);
         if self.barrier_count == self.procs.len() {
-            // Release everyone.
+            // Release everyone: N wakes at one timestamp with
+            // consecutive seqs — handed to the scheduler as a single
+            // batch (same seq stream as the former push loop, so the
+            // event order is bit-identical; the batched-vs-looped
+            // equivalence is pinned by `tests/prop_calendar.rs` and the
+            // 1024-proc barrier-storm signature test).
             let release = self.barrier_max_arrival
                 + self.cfg.barrier_cost(self.procs.len(), &mut self.engine_rng);
             self.barrier_count = 0;
             self.barrier_max_arrival = 0;
+            let mut batch = std::mem::take(&mut self.wake_batch);
+            debug_assert!(batch.is_empty());
             for q in 0..self.procs.len() {
                 self.barrier_waiting[q] = false;
-                self.procs[q].clock = release;
-                self.procs[q].chunk_start = release;
-                // Advance the fixed sync point past the release.
                 let proc = &mut self.procs[q];
+                proc.clock = release;
+                proc.chunk_start = release;
+                // Advance the fixed sync point past the release.
                 while proc.next_fixed_sync <= release {
                     proc.next_fixed_sync += self.cfg.timing.fixed_epoch;
                 }
-                self.schedule(release, Ev::Wake(q));
+                batch.push(Ev::Wake(q));
             }
+            let n = batch.len() as u64;
+            self.sched.push_batch_same_t(release, self.seq, &mut batch);
+            self.seq += n;
+            self.wake_batch = batch;
         }
     }
 

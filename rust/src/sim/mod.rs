@@ -7,8 +7,8 @@ pub mod modes;
 
 pub use calendar::{CalendarQueue, HeapScheduler, SchedKind, Scheduler};
 pub use engine::{
-    healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel, Engine, SimConfig,
-    SimResult,
+    healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel,
+    Engine, SimConfig, SimResult,
 };
 pub use lanes::{DrainSummary, EnvelopeLanes};
 pub use modes::{AsyncMode, ModeTiming};

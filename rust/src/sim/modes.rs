@@ -145,7 +145,10 @@ mod tests {
 
     #[test]
     fn skew_scales_and_saturates() {
-        assert!(ModeTiming::graph_coloring(4).fixed_skew_max < ModeTiming::graph_coloring(64).fixed_skew_max);
+        assert!(
+            ModeTiming::graph_coloring(4).fixed_skew_max
+                < ModeTiming::graph_coloring(64).fixed_skew_max
+        );
         assert_eq!(
             ModeTiming::graph_coloring(64).fixed_skew_max,
             ModeTiming::graph_coloring(256).fixed_skew_max

@@ -430,7 +430,11 @@ mod tests {
     use super::*;
     use crate::net::PlacementKind;
 
-    fn mk(n_procs: usize, simels: usize, seed: u64) -> (Topology, Vec<GraphColoringShard>, Xoshiro256) {
+    fn mk(
+        n_procs: usize,
+        simels: usize,
+        seed: u64,
+    ) -> (Topology, Vec<GraphColoringShard>, Xoshiro256) {
         let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
         let mut rng = Xoshiro256::new(seed);
         let cfg = GcConfig {

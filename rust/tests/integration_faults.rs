@@ -36,7 +36,8 @@ fn scenario_run(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
+    let mut cfg =
+        SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
     cfg.seed = seed;
     cfg.send_buffer = 64;
     cfg.snapshots = snapshots;

@@ -484,6 +484,62 @@ fn scheduler_choice_is_bit_invisible_across_modes() {
     }
 }
 
+/// A 1024-proc mode-0 (Sync) run is a barrier *storm*: every simstep
+/// ends in a full barrier whose release pushes 1024 same-timestamp wakes
+/// at once. The calendar queue services the release through its batched
+/// splice (`push_batch_same_t` override) while the heap reference takes
+/// the trait-default push loop — so equal signatures here pin the
+/// batched release against the looped one at engine level, at the scale
+/// the tentpole targets. Heterogeneous profiles spread barrier arrivals
+/// (the worst case for release bookkeeping); a snapshot schedule keeps
+/// QoS windows in the signature.
+#[test]
+fn barrier_storm_1024_procs_batched_release_matches_looped_reference() {
+    let run = |sched: SchedKind| {
+        let n = 1024usize;
+        let topo = Topology::new(n, PlacementKind::PerNode(4));
+        let mut rng = Xoshiro256::new(0xB44);
+        let shards: Vec<_> = (0..n)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg =
+            SimConfig::new(AsyncMode::Sync, ModeTiming::graph_coloring(n), 12 * MILLI);
+        cfg.seed = 0xB44;
+        cfg.send_buffer = 2;
+        cfg.sched = sched;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            3 * MILLI,
+            3 * MILLI,
+            2 * MILLI,
+            2,
+        ));
+        let profiles = ebcomm::sim::heterogeneous_profiles(&topo, 0xB44, 0.20);
+        Engine::new(cfg, topo, profiles, shards).run()
+    };
+    let heap = run(SchedKind::Heap);
+    // Sanity: barriers actually fired and kept the procs in lockstep.
+    let min = *heap.updates.iter().min().unwrap();
+    let max = *heap.updates.iter().max().unwrap();
+    assert!(min >= 2, "storm too short to exercise releases: min={min}");
+    assert!(max - min <= 1, "lockstep violated: {min}..{max}");
+    let calendar = run(SchedKind::Calendar);
+    assert_eq!(
+        engine_signature(&heap),
+        engine_signature(&calendar),
+        "batched barrier release diverged from the looped reference"
+    );
+}
+
 /// A benchmark sweep must be bit-identical whether it runs on 1 worker
 /// or N — mode/cpu/replicate cells are independently seeded, and the
 /// runner reassembles them in grid order.

@@ -105,6 +105,148 @@ fn sched_kind_factories_are_equivalent() {
     });
 }
 
+// ---- Batched same-timestamp pushes (barrier releases). ----------------
+
+/// One randomized schedule mixing single pushes, *batched* same-t pushes
+/// (the barrier-release shape: consecutive fresh seqs at one timestamp),
+/// and pops, applied to three queues at once:
+///
+/// * `cal_batch` — calendar, batches via [`Scheduler::push_batch_same_t`]
+///   (the spliced fast path under test);
+/// * `cal_loop` — calendar, the same batches as individual `push` calls
+///   (the semantics the fast path must reproduce bit-for-bit);
+/// * `heap` — the `BinaryHeap` reference (trait-default looped batches).
+///
+/// Batch sizes deliberately cross the grow threshold of every geometry
+/// the cases start from, so blocks land mid-resize; batch times reuse
+/// the same mixture as `drive_schedule` (ties with earlier singles,
+/// far-future jumps past the day-cursor lap, rewinds into the past).
+fn drive_batched_schedule<A, B, C>(
+    g: &mut Gen,
+    cal_batch: &mut A,
+    cal_loop: &mut B,
+    heap: &mut C,
+) -> Result<(), String>
+where
+    A: Scheduler<u64> + ?Sized,
+    B: Scheduler<u64> + ?Sized,
+    C: Scheduler<u64> + ?Sized,
+{
+    let ops = g.usize_in(1, 250);
+    let mut seq = 0u64;
+    let mut last_t: Nanos = 0;
+    let mut batch: Vec<u64> = Vec::new();
+    for op in 0..ops {
+        let style = g.f64_in(0.0, 1.0);
+        let gen_t = |g: &mut Gen, last_t: Nanos| {
+            let s = g.f64_in(0.0, 1.0);
+            if s < 0.5 {
+                last_t + g.u64_in(0, 64)
+            } else if s < 0.7 {
+                last_t // exact tie with an earlier push
+            } else if s < 0.9 {
+                last_t + g.u64_in(0, 1 << 20) // beyond a bucket lap
+            } else {
+                g.u64_in(0, last_t.max(1)) // into the past: cursor rewind
+            }
+        };
+        if style < 0.35 {
+            let t = gen_t(g, last_t);
+            cal_batch.push(t, seq, seq);
+            cal_loop.push(t, seq, seq);
+            heap.push(t, seq, seq);
+            seq += 1;
+        } else if style < 0.6 {
+            // Batch push: 0..=600 items (0 and 1 are legal degenerate
+            // batches; 600 outgrows a 256-bucket calendar in one call).
+            let k = [0usize, 1, 2, 3, 7, 33, 150, 600][g.usize_in(0, 7)];
+            let t = gen_t(g, last_t);
+            batch.clear();
+            batch.extend(seq..seq + k as u64);
+            cal_batch.push_batch_same_t(t, seq, &mut batch);
+            prop_assert(batch.is_empty(), format!("op {op}: batch not drained"))?;
+            for i in 0..k as u64 {
+                cal_loop.push(t, seq + i, seq + i);
+                heap.push(t, seq + i, seq + i);
+            }
+            seq += k as u64;
+        } else {
+            let a = cal_batch.pop();
+            let b = cal_loop.pop();
+            let c = heap.pop();
+            prop_assert(
+                a == b && b == c,
+                format!("op {op}: batch {a:?} / loop {b:?} / heap {c:?}"),
+            )?;
+            if let Some((t, _, _)) = c {
+                last_t = t;
+            }
+        }
+        prop_assert(
+            cal_batch.len() == heap.len() && cal_loop.len() == heap.len(),
+            format!(
+                "op {op}: len {}/{}/{}",
+                cal_batch.len(),
+                cal_loop.len(),
+                heap.len()
+            ),
+        )?;
+    }
+    loop {
+        let a = cal_batch.pop();
+        let b = cal_loop.pop();
+        let c = heap.pop();
+        prop_assert(
+            a == b && b == c,
+            format!("drain: batch {a:?} / loop {b:?} / heap {c:?}"),
+        )?;
+        if c.is_none() {
+            break;
+        }
+    }
+    prop_assert(cal_batch.is_empty(), "batched calendar not empty after drain")
+}
+
+/// 600 randomized batched schedules under the default geometry: batching
+/// must be invisible in the dequeue stream.
+#[test]
+fn batched_pushes_match_looped_on_random_schedules() {
+    forall(Config::default().cases(600).seed(0xBA7C), |g| {
+        let mut cal_batch = CalendarQueue::new();
+        let mut cal_loop = CalendarQueue::new();
+        let mut heap = HeapScheduler::new();
+        drive_batched_schedule(g, &mut cal_batch, &mut cal_loop, &mut heap)
+    });
+}
+
+/// Same equivalence from deliberately bad initial geometries, so batches
+/// arrive mid-resize (tiny bucket counts that must grow in one splice)
+/// and the far-future/past time mixture crosses the day-cursor wrap
+/// while blocks are in flight.
+#[test]
+fn batched_pushes_match_looped_across_resize_and_cursor_wrap() {
+    forall(Config::default().cases(300).seed(0xB4D6), |g| {
+        let nbuckets = 1usize << g.usize_in(0, 4); // 1..16 buckets
+        let width_log2 = g.usize_in(0, 16) as u32;
+        let mut cal_batch = CalendarQueue::with_params(nbuckets, width_log2);
+        let mut cal_loop = CalendarQueue::with_params(nbuckets, width_log2);
+        let mut heap = HeapScheduler::new();
+        drive_batched_schedule(g, &mut cal_batch, &mut cal_loop, &mut heap)
+    });
+}
+
+/// Trait-object dispatch (the engine's exact view of the scheduler pair):
+/// batched calendar vs looped-default heap.
+#[test]
+fn batched_factory_schedulers_are_equivalent() {
+    forall(Config::default().cases(100).seed(0xFAB1), |g| {
+        let mut cal = SchedKind::Calendar.make::<u64>();
+        let mut cal_loop = CalendarQueue::new();
+        let mut heap = SchedKind::Heap.make::<u64>();
+        drive_batched_schedule(g, cal.as_mut(), &mut cal_loop, heap.as_mut())
+    });
+}
+
 // ---- SoA envelope lanes vs the AoS reference model. -------------------
 
 /// The former AoS channel queue, kept as the behavioural reference.
