@@ -5,8 +5,9 @@ Usage:
     python3 python/bench_diff.py CURRENT.json [--baseline BASELINE.json]
                                  [--threshold 0.25] [--ab-margin 0.10]
                                  [--release-margin 0.10]
+                                 [--thread-qos THREAD_QOS.json]
 
-Three independent checks:
+Four independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -28,6 +29,15 @@ Three independent checks:
    ``engine construction``) fail when ``current_median >
    baseline_median * (1 + threshold)``. Entries present on only one side
    are reported but never fail the diff.
+
+4. **Thread-QoS section** (with ``--thread-qos``): the real-thread QoS
+   bench's JSON (``bench_thread_qos --json``) must contain a well-formed
+   ``thread QoS`` section — entries present, names prefixed
+   ``thread QoS``, finite non-negative medians, units set. The section is
+   **report-only**: hardware wall-clock numbers are far too noisy to gate
+   on magnitude (>25% swings are routine on shared runners), so the check
+   fails only on a missing or malformed section, and the printed medians
+   document the trajectory in the CI log.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -123,6 +133,32 @@ def release_check(cur, margin):
     return failures, checked
 
 
+def thread_qos_check(path):
+    """Presence/shape check of the report-only 'thread QoS' section."""
+    entries = load(path)
+    failures = []
+    rows = sorted(
+        (e for name, e in entries.items() if name.startswith("thread QoS")),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        failures.append(f"no 'thread QoS' entries in {path}")
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        print(f"  [qos]      {e['name']}: median {m} {unit} (report-only)")
+        if not well_formed:
+            failures.append(f"malformed thread-QoS entry {e['name']!r}")
+    return failures
+
+
 def gated(name, unit):
     if unit != "ns" or any(name.startswith(p) for p in UNGATED_PREFIXES):
         return False
@@ -182,6 +218,11 @@ def main():
         default=0.10,
         help="batched-vs-looped release slack at 1024/4096 procs (default 0.10)",
     )
+    ap.add_argument(
+        "--thread-qos",
+        help="bench_thread_qos JSON whose 'thread QoS' section must be "
+        "present and well-formed (report-only: values never gate)",
+    )
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -204,6 +245,14 @@ def main():
         failed = True
         for f in rel_failures:
             print(f"bench-diff: release bar failed: {f}", file=sys.stderr)
+
+    if args.thread_qos:
+        print("== thread QoS section (report-only) ==")
+        qos_failures = thread_qos_check(args.thread_qos)
+        if qos_failures:
+            failed = True
+            for f in qos_failures:
+                print(f"bench-diff: thread-QoS section check failed: {f}", file=sys.stderr)
 
     if args.baseline:
         print("== baseline regression diff ==")

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Model-check the hardware fault-timeline compiler (exec/hw_faults.rs).
+
+The real-thread executor cannot run the DES overlay's event-driven state
+machine (workers consult wall clocks, not a scheduler), so
+`HwFaultTimeline::compile` resolves RestoreNode/Heal commands into
+*effective end times* at compile time:
+
+    effective_end(k) = min(natural_end(k),
+                           earliest command c that targets k with
+                           (c.start > start(k))
+                           or (c.start == start(k) and c.index > k))
+
+and activity becomes the pure predicate `start <= t < effective_end`.
+
+This fuzz compares that closed form against an event-driven replay of the
+DES overlay semantics (events fire in (time, index) order; commands
+deactivate only *currently active* events) over randomized scenarios, on
+a dense probe grid of time points. Run before porting changes to the Rust
+compiler; exits nonzero on the first divergence.
+"""
+
+import random
+import sys
+
+ALWAYS = (1 << 64) - 1
+
+# Event kinds. Windowed: DEGRADE(node), FLAP(node), STORM, PARTITION.
+# Commands: RESTORE(node), HEAL.
+WINDOWED = ("degrade", "flap", "storm", "partition")
+COMMANDS = ("restore", "heal")
+
+
+def natural_end(ev):
+    if ev["dur"] == ALWAYS:
+        return ALWAYS
+    return min(ALWAYS, ev["start"] + ev["dur"])
+
+
+def targets(cmd, ev):
+    """Does command `cmd` deactivate windowed event `ev` (if active)?"""
+    if cmd["kind"] == "heal":
+        return True
+    # restore(node): only node-scoped degradations on that node.
+    return ev["kind"] in ("degrade", "flap") and ev["node"] == cmd["node"]
+
+
+def compile_effective_ends(events):
+    ends = []
+    for k, ev in enumerate(events):
+        if ev["kind"] in COMMANDS:
+            ends.append(ev["start"])  # never active
+            continue
+        end = natural_end(ev)
+        for j, c in enumerate(events):
+            if c["kind"] not in COMMANDS or not targets(c, ev):
+                continue
+            after_onset = c["start"] > ev["start"] or (
+                c["start"] == ev["start"] and j > k
+            )
+            if after_onset:
+                end = min(end, c["start"])
+        ends.append(end)
+    return ends
+
+
+def replay_active_at(events, t):
+    """Event-driven replay of the overlay semantics: fire transitions in
+    (time, index) order up to and including time t, tracking the active
+    set. Returns the set of active windowed event indices at time t."""
+    transitions = []  # (time, index, action)
+    for k, ev in enumerate(events):
+        transitions.append((ev["start"], k, "fire"))
+        if ev["kind"] in WINDOWED and natural_end(ev) != ALWAYS:
+            transitions.append((natural_end(ev), k, "expire"))
+    transitions.sort(key=lambda x: (x[0], x[1]))
+
+    active = set()
+    done = set()
+    for time, k, action in transitions:
+        if time > t:
+            break
+        ev = events[k]
+        if action == "fire":
+            if ev["kind"] in COMMANDS:
+                for a in sorted(active):
+                    if targets(ev, events[a]):
+                        active.discard(a)
+                        done.add(a)
+            elif k not in done:
+                active.add(k)
+        elif action == "expire":
+            active.discard(k)
+            done.add(k)
+    # Window ends are exclusive: an expiry exactly at t has already fired.
+    return active
+
+
+def gen_scenario(rng, n_nodes):
+    n_events = rng.randint(1, 8)
+    events = []
+    for _ in range(n_events):
+        kind = rng.choice(WINDOWED + COMMANDS)
+        start = rng.randint(0, 100)
+        if kind in COMMANDS:
+            events.append({"kind": kind, "start": start, "dur": 0,
+                           "node": rng.randrange(n_nodes)})
+        else:
+            dur = ALWAYS if rng.random() < 0.25 else rng.randint(1, 80)
+            events.append({"kind": kind, "start": start, "dur": dur,
+                           "node": rng.randrange(n_nodes)})
+    return events
+
+
+def main():
+    rng = random.Random(0x5EED5)
+    cases = 4000
+    for case in range(cases):
+        events = gen_scenario(rng, n_nodes=4)
+        ends = compile_effective_ends(events)
+        for t in range(0, 205):
+            want = replay_active_at(events, t)
+            got = {
+                k for k, ev in enumerate(events)
+                if ev["kind"] in WINDOWED and ev["start"] <= t < ends[k]
+            }
+            if want != got:
+                print(f"case {case} t={t}: replay={sorted(want)} "
+                      f"compiled={sorted(got)}")
+                for k, ev in enumerate(events):
+                    print(f"  #{k} {ev} -> effective_end {ends[k]}")
+                return 1
+    print(f"hw-fault-timeline fuzz: {cases} scenarios x 205 probe points OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,7 @@
 
 use ebcomm::coordinator::experiment::BenchmarkExperiment;
 use ebcomm::coordinator::report;
-use ebcomm::coordinator::run_benchmark;
+use ebcomm::coordinator::{run_benchmark, run_hardware, HardwareExperiment};
 use ebcomm::sim::AsyncMode;
 
 fn main() {
@@ -79,6 +79,34 @@ fn main() {
         m3_64 / m0_64
     );
     report::benchmark_csv(&de).write_to("results/fig2c_de.csv").unwrap();
+
+    // ---- §III-E companion: windowed QoS measured on REAL threads ----
+    // The sweeps above are DES predictions of the multithread modality;
+    // this section runs the same mode comparison on actual hardware
+    // threads (windowed QoS via exec/, EBCOMM_THREADS-capped) so the
+    // printed tables put prediction and measurement side by side.
+    // Wall-clock numbers: report-only, never gated.
+    let hw = HardwareExperiment::smoke();
+    eprintln!("[fig2 hw-qos] running {} on real threads ...", hw.name);
+    let hw_res = run_hardware(&hw);
+    println!(
+        "{}",
+        report::hardware_table(
+            "Fig 2 companion — real-thread windowed QoS (hardware, report-only)",
+            &hw,
+            &hw_res
+        )
+    );
+    for &n_shards in &hw.shard_counts {
+        let sync = hw_res.rates(AsyncMode::Sync, n_shards);
+        let be = hw_res.rates(AsyncMode::BestEffort, n_shards);
+        if !sync.is_empty() && !be.is_empty() {
+            println!(
+                "hw shape @{n_shards} shards: mode3/mode0 update-rate ratio {:.2} (paper: >1)",
+                ebcomm::stats::mean(&be) / ebcomm::stats::mean(&sync).max(1e-9)
+            );
+        }
+    }
 
     eprintln!("bench_fig2_multithread done in {:.1}s", t0.elapsed().as_secs_f64());
 }

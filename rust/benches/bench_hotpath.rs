@@ -24,6 +24,7 @@ use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::sim::{
     healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, Scheduler, SimConfig,
 };
+use ebcomm::util::benchjson::BenchJson;
 use ebcomm::util::parallel::default_workers;
 use ebcomm::util::rng::{Rng, Xoshiro256};
 use ebcomm::util::{fmt_ns, MILLI};
@@ -52,19 +53,12 @@ fn time_batched(
     samples
 }
 
-/// One recorded measurement (summary statistics over per-op samples).
-struct Entry {
-    name: String,
-    unit: &'static str,
-    mean: f64,
-    median: f64,
-    p95: f64,
-}
-
-/// Prints results as they arrive and accumulates them for `--json`.
+/// Prints results as they arrive and accumulates them for `--json`
+/// (storage + serialization shared with the other benches via
+/// [`ebcomm::util::benchjson::BenchJson`]).
 #[derive(Default)]
 struct Recorder {
-    entries: Vec<Entry>,
+    json: BenchJson,
 }
 
 impl Recorder {
@@ -79,7 +73,7 @@ impl Recorder {
             fmt_ns(med),
             fmt_ns(p95)
         );
-        self.push(name, "ns", mean, med, p95);
+        self.json.push(name, "ns", mean, med, p95);
     }
 
     /// Record samples in an arbitrary unit (throughputs, speedups).
@@ -88,66 +82,13 @@ impl Recorder {
         let med = ebcomm::stats::median(samples);
         let p95 = ebcomm::stats::quantile(samples, 0.95);
         println!("{name:<44} mean {mean:>10.1} {unit}");
-        self.push(name, unit, mean, med, p95);
-    }
-
-    fn push(&mut self, name: &str, unit: &'static str, mean: f64, median: f64, p95: f64) {
-        self.entries.push(Entry {
-            name: name.to_string(),
-            unit,
-            mean,
-            median,
-            p95,
-        });
+        self.json.push(name, unit, mean, med, p95);
     }
 
     /// Serialize every entry to `BENCH_hotpath.json` at the repo root
     /// (one level above the crate manifest).
     fn write_json(&self) -> std::io::Result<PathBuf> {
-        let root = std::env::var("CARGO_MANIFEST_DIR")
-            .map(|d| PathBuf::from(d).join(".."))
-            .unwrap_or_else(|_| PathBuf::from("."));
-        let path = root.join("BENCH_hotpath.json");
-        let mut out = String::from(
-            "{\n  \"bench\": \"bench_hotpath\",\n  \"schema\": 1,\n  \"results\": [\n",
-        );
-        for (i, e) in self.entries.iter().enumerate() {
-            let sep = if i + 1 < self.entries.len() { "," } else { "" };
-            out.push_str(&format!(
-                "    {{\"name\": {}, \"unit\": \"{}\", \"mean\": {}, \"median\": {}, \"p95\": {}}}{sep}\n",
-                json_string(&e.name),
-                e.unit,
-                json_number(e.mean),
-                json_number(e.median),
-                json_number(e.p95),
-            ));
-        }
-        out.push_str("  ]\n}\n");
-        std::fs::write(&path, out)?;
-        Ok(path)
-    }
-}
-
-fn json_string(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-fn json_number(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:.3}")
-    } else {
-        "null".to_string()
+        self.json.write("bench_hotpath", "BENCH_hotpath.json")
     }
 }
 

@@ -1,0 +1,133 @@
+//! Real-thread windowed QoS bench: the hardware counterpart of the DES
+//! QoS sweeps (§III-E on metal), covering the oversubscription rung the
+//! ROADMAP called for (64–256 shards multiplexed onto ≤4 hardware
+//! threads) and a scenario-driven fault probe with time-resolved
+//! attribution.
+//!
+//! Hardware numbers are wall-clock measurements on whatever box runs
+//! this — too noisy to gate on magnitude. The JSON section this bench
+//! emits (`BENCH_thread_qos.json`, with `--json`) is therefore
+//! **report-only**: `python/bench_diff.py --thread-qos` checks the
+//! "thread QoS" section is present and well-formed, and prints the
+//! medians for the CI log, but never fails on their values.
+//!
+//! Pass `--smoke` (or `EBCOMM_SMOKE=1`) for the reduced CI grid: one
+//! 256-shard oversubscribed best-effort cell plus the 16-shard mid-run
+//! failure attribution probe — the acceptance shape of the hardware
+//! lane. The full grid adds the 64-shard rung, sync cells, and more
+//! replicates. `EBCOMM_THREADS` caps the real thread count.
+
+use std::time::Duration;
+
+use ebcomm::coordinator::{report, run_hardware, HardwareExperiment};
+use ebcomm::qos::MetricName;
+use ebcomm::sim::AsyncMode;
+use ebcomm::stats::{mean, median, quantile};
+use ebcomm::util::benchjson::BenchJson;
+
+/// Prints one line per distribution and accumulates "thread QoS …"
+/// entries (the section bench_diff.py validates) for `--json`.
+#[derive(Default)]
+struct Recorder {
+    json: BenchJson,
+}
+
+impl Recorder {
+    fn record(&mut self, name: &str, unit: &'static str, values: &[f64]) {
+        let (m, md, p95) = if values.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (mean(values), median(values), quantile(values, 0.95))
+        };
+        println!("{name:<56} median {md:>12.1} {unit} (n={})", values.len());
+        self.json.push(name, unit, m, md, p95);
+    }
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || std::env::var("EBCOMM_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let json = args.iter().any(|a| a == "--json")
+        || std::env::var("EBCOMM_BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let mut rec = Recorder::default();
+
+    // ---- Oversubscription rung: 64–256 shards on ≤4 hardware threads.
+    let mut exp = HardwareExperiment::oversubscribed();
+    if smoke {
+        exp.shard_counts = vec![256];
+        exp.replicates = 1;
+    } else {
+        exp.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        exp.replicates = 3;
+        exp.run_for = Duration::from_millis(300);
+    }
+    eprintln!(
+        "[thread-qos] {}: modes {:?} x shards {:?} x {} replicates ...",
+        exp.name, exp.modes, exp.shard_counts, exp.replicates
+    );
+    let results = run_hardware(&exp);
+    println!(
+        "{}",
+        report::hardware_table("thread QoS — oversubscribed real-thread sweep", &exp, &results)
+    );
+    for &mode in &exp.modes {
+        for &n_shards in &exp.shard_counts {
+            let label = |metric: &str| {
+                format!("thread QoS {metric} ({n_shards} shards, mode {})", mode.index())
+            };
+            rec.record(
+                &label("period"),
+                "ns",
+                &results.all_values(mode, n_shards, MetricName::SimstepPeriod),
+            );
+            rec.record(
+                &label("walltime latency"),
+                "ns",
+                &results.all_values(mode, n_shards, MetricName::WalltimeLatency),
+            );
+            rec.record(
+                &label("delivery failure"),
+                "rate",
+                &results.all_values(mode, n_shards, MetricName::DeliveryFailureRate),
+            );
+            rec.record(
+                &label("clumpiness"),
+                "rate",
+                &results.all_values(mode, n_shards, MetricName::DeliveryClumpiness),
+            );
+        }
+    }
+    report::hardware_csv(&results)
+        .write_to("results/thread_qos.csv")
+        .unwrap();
+
+    // ---- Scenario probe: mid-run fail-stop with phase attribution.
+    let probe = HardwareExperiment::scenario_probe();
+    eprintln!("[thread-qos] {}: scenario attribution probe ...", probe.name);
+    let probe_results = run_hardware(&probe);
+    let mode = AsyncMode::BestEffort;
+    let n_shards = probe.shard_counts[0];
+    println!(
+        "{}",
+        report::hardware_phase_attribution(
+            "thread QoS — time-resolved attribution (mid-run fail-stop)",
+            &probe_results,
+            mode,
+            n_shards,
+        )
+    );
+    let (quiet, faulted) =
+        probe_results.phase_split(mode, n_shards, MetricName::DeliveryFailureRate);
+    rec.record("thread QoS baseline-phase delivery failure", "rate", &quiet);
+    rec.record("thread QoS degraded-phase delivery failure", "rate", &faulted);
+
+    if json {
+        match rec.json.write("bench_thread_qos", "BENCH_thread_qos.json") {
+            Ok(p) => eprintln!("wrote {}", p.display()),
+            Err(e) => eprintln!("failed to write BENCH_thread_qos.json: {e}"),
+        }
+    }
+    eprintln!("bench_thread_qos done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,358 @@
+//! Hardware (real-thread) experiment sweeps — the on-metal counterpart
+//! of the DES sweeps in [`super::runner`].
+//!
+//! A [`HardwareExperiment`] fans (mode × shard count × replicate) cells
+//! over [`crate::exec::run_threads`], each cell a real wall-clock run
+//! with windowed QoS capture, oversubscribed shard multiplexing, and an
+//! optional scripted fault scenario. Cells reuse the DES sweeps' LPT
+//! fan-out machinery ([`crate::util::parallel::parallel_map_lpt`]) —
+//! but, unlike DES cells, each hardware cell spawns its own real
+//! threads, so the sweep defaults to **one cell at a time**
+//! (`EBCOMM_WORKERS` raises it explicitly on big boxes); LPT ordering
+//! still claims the expensive large-shard-count cells first.
+//!
+//! Hardware results are wall-clock measurements: never bit-reproducible,
+//! never golden-gated (see `rust/tests/golden/README.md`). Use them for
+//! the ordinal cross-validation the reproduction exists for — the DES
+//! predicts, hardware confirms.
+
+use std::time::Duration;
+
+use crate::conduit::ChannelConfig;
+use crate::exec::{run_threads, ThreadExecConfig};
+use crate::net::{PlacementKind, Topology};
+use crate::qos::{MetricName, ReplicateQos, SnapshotSchedule};
+use crate::sim::AsyncMode;
+use crate::util::parallel::{log_telemetry, parallel_map_lpt};
+use crate::util::rng::Xoshiro256;
+use crate::util::Nanos;
+use crate::workloads::{GcConfig, GraphColoringShard};
+
+use super::experiment::ScenarioKind;
+use super::runner::{QosReplicate, QosResults};
+
+/// Worker count for fanning hardware cells: `EBCOMM_WORKERS` if set,
+/// otherwise 1 — each cell already owns real threads, so parallel cells
+/// on a small box would contend with the measurement itself.
+fn hw_sweep_workers() -> usize {
+    std::env::var("EBCOMM_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1)
+}
+
+/// A real-thread experiment: modes × shard counts × replicates on
+/// hardware, with windowed QoS and optional scenario faults.
+#[derive(Clone, Debug)]
+pub struct HardwareExperiment {
+    pub name: &'static str,
+    pub modes: Vec<AsyncMode>,
+    pub shard_counts: Vec<usize>,
+    /// Hardware-thread budget per cell (further capped by
+    /// `EBCOMM_THREADS`); `None` = one thread per shard.
+    pub threads: Option<usize>,
+    pub replicates: usize,
+    /// Wall-clock run window per cell (extended to cover `schedule`).
+    pub run_for: Duration,
+    /// Wall-clock QoS snapshot schedule.
+    pub schedule: SnapshotSchedule,
+    /// Scripted fault shape, built per shard count over the run window
+    /// ([`ScenarioKind::build`]); `None` = fault-free cells.
+    pub scenario_kind: Option<ScenarioKind>,
+    pub added_work_units: u64,
+    pub channel: ChannelConfig,
+    pub simels_per_shard: usize,
+    /// See [`ThreadExecConfig::degrade_spin_units`].
+    pub degrade_spin_units: u64,
+    pub seed: u64,
+}
+
+impl HardwareExperiment {
+    fn base(name: &'static str) -> Self {
+        Self {
+            name,
+            modes: vec![AsyncMode::Sync, AsyncMode::BestEffort],
+            shard_counts: vec![4, 16],
+            threads: Some(4),
+            replicates: 1,
+            run_for: Duration::from_millis(180),
+            schedule: SnapshotSchedule::hardware_smoke(),
+            scenario_kind: None,
+            added_work_units: 0,
+            channel: ChannelConfig::qos(),
+            simels_per_shard: 4,
+            degrade_spin_units: 4_000,
+            seed: 0x4A4D,
+        }
+    }
+
+    /// CI-smoke grid: sync vs best-effort at 4/16 shards on ≤4 threads —
+    /// exercises wiring, windowed capture, and multiplexing end to end
+    /// in under a second of wall time.
+    pub fn smoke() -> Self {
+        Self::base("hw_smoke")
+    }
+
+    /// The oversubscription probe: 64- and 256-shard best-effort runs
+    /// multiplexed onto ≤4 hardware threads with the paper's
+    /// benchmarking channel (capacity 2, so drops are real) — the
+    /// "real-thread runs past 64 threads" rung the ROADMAP called for,
+    /// sized for a 2-core CI box.
+    pub fn oversubscribed() -> Self {
+        let mut e = Self::base("hw_oversubscribed");
+        e.modes = vec![AsyncMode::BestEffort];
+        e.shard_counts = vec![64, 256];
+        e.channel = ChannelConfig::benchmarking();
+        e.simels_per_shard = 1;
+        e.run_for = Duration::from_millis(220);
+        e
+    }
+
+    /// Scenario-driven real-thread probe: a mid-run fail-stop on one
+    /// shard of a 16-shard best-effort run, with windows tagged for
+    /// degraded-phase vs baseline-phase attribution.
+    pub fn scenario_probe() -> Self {
+        let mut e = Self::base("hw_scenario_midrun_failure");
+        e.modes = vec![AsyncMode::BestEffort];
+        e.shard_counts = vec![16];
+        e.scenario_kind = Some(ScenarioKind::MidrunFailure);
+        // Make the degraded shard's slowdown visible against real step
+        // costs on a busy CI box.
+        e.degrade_spin_units = 8_000;
+        e
+    }
+}
+
+/// One hardware sweep cell's measurements.
+#[derive(Clone, Debug)]
+pub struct HardwarePoint {
+    pub mode: AsyncMode,
+    pub n_shards: usize,
+    pub replicate: usize,
+    /// Real threads the cell ran on (after `EBCOMM_THREADS` capping).
+    pub threads: usize,
+    /// Windowed QoS with phase tags — the same [`ReplicateQos`] the DES
+    /// produces, so `values_where`/report queries work unchanged.
+    pub qos: ReplicateQos,
+    pub updates: Vec<u64>,
+    /// Mean per-shard update rate over measured worker spans (Hz).
+    pub update_rate_hz: f64,
+    /// Whole-run delivery failure fraction.
+    pub failure_rate: f64,
+    /// Measured wall span (mean per-worker first→last step), ns.
+    pub span_ns: Nanos,
+}
+
+/// All cells from one [`HardwareExperiment`], grid order
+/// (shard count, mode, replicate).
+#[derive(Clone, Debug, Default)]
+pub struct HardwareResults {
+    pub points: Vec<HardwarePoint>,
+}
+
+impl HardwareResults {
+    /// Cells of one (mode, shards) treatment, replicate order.
+    pub fn select(&self, mode: AsyncMode, n_shards: usize) -> Vec<&HardwarePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.mode == mode && p.n_shards == n_shards)
+            .collect()
+    }
+
+    /// All snapshot values of a metric for one treatment, flattened.
+    pub fn all_values(&self, mode: AsyncMode, n_shards: usize, metric: MetricName) -> Vec<f64> {
+        self.select(mode, n_shards)
+            .iter()
+            .flat_map(|p| p.qos.values(metric))
+            .collect()
+    }
+
+    /// Per-replicate update rates for one treatment.
+    pub fn rates(&self, mode: AsyncMode, n_shards: usize) -> Vec<f64> {
+        self.select(mode, n_shards)
+            .iter()
+            .map(|p| p.update_rate_hz)
+            .collect()
+    }
+
+    /// Per-replicate whole-run failure rates for one treatment.
+    pub fn failure_rates(&self, mode: AsyncMode, n_shards: usize) -> Vec<f64> {
+        self.select(mode, n_shards)
+            .iter()
+            .map(|p| p.failure_rate)
+            .collect()
+    }
+
+    /// Snapshot values split into (quiescent-window, fault-active-window)
+    /// populations — hardware-side time-resolved attribution.
+    pub fn phase_split(
+        &self,
+        mode: AsyncMode,
+        n_shards: usize,
+        metric: MetricName,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut quiet = Vec::new();
+        let mut faulted = Vec::new();
+        for p in self.select(mode, n_shards) {
+            quiet.extend(p.qos.values_where(metric, |ph| ph.is_quiescent()));
+            faulted.extend(p.qos.values_where(metric, |ph| !ph.is_quiescent()));
+        }
+        (quiet, faulted)
+    }
+
+    /// Bridge one treatment into the DES sweeps' [`QosResults`] shape so
+    /// `report::qos_summary`/`qos_comparison`/`qos_csv` work unchanged
+    /// on hardware runs.
+    pub fn qos_results(&self, mode: AsyncMode, n_shards: usize) -> QosResults {
+        QosResults {
+            replicates: self
+                .select(mode, n_shards)
+                .iter()
+                .map(|p| QosReplicate {
+                    replicate: p.replicate,
+                    qos: p.qos.clone(),
+                    updates: p.updates.clone(),
+                    run_for: p.span_ns,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Run one hardware cell: build shards, compile the scenario for this
+/// scale, execute on real threads.
+fn run_hardware_cell(
+    exp: &HardwareExperiment,
+    mode: AsyncMode,
+    n_shards: usize,
+    rep: usize,
+) -> HardwarePoint {
+    let topo = Topology::new(n_shards, PlacementKind::SingleNode);
+    let gc_cfg = GcConfig {
+        simels_per_proc: exp.simels_per_shard,
+        ..GcConfig::default()
+    };
+    let seed = exp
+        .seed
+        .wrapping_add((rep as u64) << 32)
+        .wrapping_add((mode.index() as u64) << 16)
+        .wrapping_add(n_shards as u64);
+    let mut rng = Xoshiro256::new(seed ^ 0x4A4D);
+    let shards: Vec<_> = (0..n_shards)
+        .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+        .collect();
+    let scenario = match exp.scenario_kind {
+        Some(kind) => kind.build(exp.run_for.as_nanos() as Nanos, n_shards),
+        None => Default::default(),
+    };
+    let result = run_threads(
+        ThreadExecConfig {
+            mode,
+            run_for: exp.run_for,
+            added_work_units: exp.added_work_units,
+            channel: exp.channel,
+            threads: exp.threads,
+            snapshots: Some(exp.schedule),
+            scenario,
+            degrade_spin_units: exp.degrade_spin_units,
+            seed,
+            ..Default::default()
+        },
+        shards,
+    );
+    HardwarePoint {
+        mode,
+        n_shards,
+        replicate: rep,
+        threads: result.threads,
+        update_rate_hz: result.update_rate_per_cpu_hz(),
+        failure_rate: result.overall_failure_rate(),
+        span_ns: result.elapsed.as_nanos() as Nanos,
+        updates: result.updates,
+        qos: result.qos,
+    }
+}
+
+/// Run a hardware experiment's full grid. Cells claim in LPT order
+/// (shard count dominates — the 256-shard stragglers start first) and
+/// come back in grid order; see [`hw_sweep_workers`] for why the fan-out
+/// defaults to one cell at a time.
+pub fn run_hardware(exp: &HardwareExperiment) -> HardwareResults {
+    let mut cells: Vec<(usize, AsyncMode, usize)> = Vec::new();
+    for &n_shards in &exp.shard_counts {
+        for &mode in &exp.modes {
+            for rep in 0..exp.replicates {
+                cells.push((n_shards, mode, rep));
+            }
+        }
+    }
+    let (points, timings) = parallel_map_lpt(
+        hw_sweep_workers(),
+        &cells,
+        |&(n_shards, _, _)| n_shards as u64,
+        |&(n_shards, mode, rep)| run_hardware_cell(exp, mode, n_shards, rep),
+    );
+    log_telemetry(exp.name, &timings);
+    HardwareResults { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_shaped_for_their_probes() {
+        let s = HardwareExperiment::smoke();
+        assert!(s.modes.contains(&AsyncMode::Sync));
+        assert!(s.shard_counts.iter().all(|&n| n <= 16));
+
+        let o = HardwareExperiment::oversubscribed();
+        assert!(o.shard_counts.contains(&256), "the 64+-shard rung");
+        assert!(o.threads.unwrap() <= 4, "must fit a small-core CI box");
+        assert_eq!(o.channel.capacity, 2, "paper benchmarking buffer: real drops");
+        assert_eq!(o.modes, vec![AsyncMode::BestEffort]);
+
+        let p = HardwareExperiment::scenario_probe();
+        assert_eq!(p.scenario_kind, Some(ScenarioKind::MidrunFailure));
+        // The scenario must build and validate at the preset's scale.
+        for &n in &p.shard_counts {
+            p.scenario_kind
+                .unwrap()
+                .build(p.run_for.as_nanos() as Nanos, n)
+                .validate(n);
+        }
+    }
+
+    #[test]
+    fn tiny_hardware_sweep_produces_grid_with_qos() {
+        let mut exp = HardwareExperiment::smoke();
+        exp.shard_counts = vec![4];
+        exp.modes = vec![AsyncMode::BestEffort];
+        exp.replicates = 2;
+        exp.run_for = Duration::from_millis(60);
+        exp.schedule = SnapshotSchedule::compressed(
+            10 * crate::util::MILLI,
+            20 * crate::util::MILLI,
+            10 * crate::util::MILLI,
+            2,
+        );
+        let res = run_hardware(&exp);
+        assert_eq!(res.points.len(), 2);
+        for (i, p) in res.points.iter().enumerate() {
+            assert_eq!(p.replicate, i, "grid order");
+            assert_eq!(p.updates.len(), 4);
+            assert!(p.update_rate_hz > 0.0);
+            assert!(!p.qos.snapshots.is_empty());
+            assert_eq!(p.qos.snapshots.len(), p.qos.phases.len());
+        }
+        assert_eq!(res.rates(AsyncMode::BestEffort, 4).len(), 2);
+        assert!(!res
+            .all_values(AsyncMode::BestEffort, 4, MetricName::SimstepPeriod)
+            .is_empty());
+        // Bridge to the DES report shape.
+        let qr = res.qos_results(AsyncMode::BestEffort, 4);
+        assert_eq!(qr.replicates.len(), 2);
+        assert!(!qr.replicate_means(MetricName::SimstepPeriod).is_empty());
+    }
+}

@@ -2,12 +2,14 @@
 //! replicate sweeps, and report rendering.
 
 pub mod experiment;
+pub mod hardware;
 pub mod report;
 pub mod runner;
 
 pub use experiment::{
     BenchmarkExperiment, QosExperiment, ScenarioExperiment, ScenarioKind, Workload,
 };
+pub use hardware::{run_hardware, HardwareExperiment, HardwarePoint, HardwareResults};
 pub use runner::{
     run_benchmark, run_benchmark_serial, run_benchmark_with_workers, run_qos,
     run_qos_with_workers, run_scenario, run_scenario_with_workers, ScenarioPoint,

@@ -8,6 +8,7 @@ use crate::util::csv::CsvTable;
 use crate::util::fmt_ns;
 
 use super::experiment::{ScenarioExperiment, ScenarioKind};
+use super::hardware::{HardwareExperiment, HardwareResults};
 use super::runner::{BenchmarkResults, QosResults, ScenarioResults};
 
 /// Render a Fig-2/3-style table: per-CPU update rate (or quality) by mode
@@ -306,6 +307,122 @@ pub fn scenario_csv(results: &ScenarioResults) -> CsvTable {
     t
 }
 
+/// Overview table for a hardware (real-thread) sweep: per (mode, shard
+/// count) treatment, the real thread count, measured update rate,
+/// whole-run delivery failure, and median windowed period/clumpiness —
+/// the same columns the DES tables report, measured on metal.
+pub fn hardware_table(
+    title: &str,
+    exp: &HardwareExperiment,
+    results: &HardwareResults,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<34} {:>7} {:>8} {:>12} {:>10} {:>14} {:>10}\n",
+        "mode", "shards", "threads", "rate/shard", "fail", "med period", "med clump"
+    ));
+    for &mode in &exp.modes {
+        for &n_shards in &exp.shard_counts {
+            let cells = results.select(mode, n_shards);
+            if cells.is_empty() {
+                continue;
+            }
+            let threads = cells[0].threads;
+            let rate = mean(&cells.iter().map(|p| p.update_rate_hz).collect::<Vec<_>>());
+            let fail = mean(&cells.iter().map(|p| p.failure_rate).collect::<Vec<_>>());
+            let period = median(&results.all_values(mode, n_shards, MetricName::SimstepPeriod));
+            let clump =
+                median(&results.all_values(mode, n_shards, MetricName::DeliveryClumpiness));
+            out.push_str(&format!(
+                "{:<34} {:>7} {:>8} {:>12.1} {:>10.4} {:>14} {:>10.4}\n",
+                mode.label(),
+                n_shards,
+                threads,
+                rate,
+                fail,
+                fmt_ns(period),
+                clump,
+            ));
+        }
+    }
+    out
+}
+
+/// Hardware-side time-resolved attribution: every QoS metric's median
+/// over quiescent vs fault-active windows for one (mode, shards)
+/// treatment — the same query [`phase_attribution`] answers for DES
+/// scenario sweeps.
+pub fn hardware_phase_attribution(
+    title: &str,
+    results: &HardwareResults,
+    mode: AsyncMode,
+    n_shards: usize,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== {title}: {n_shards} shards, {} ==\n",
+        mode.label()
+    ));
+    out.push_str(&format!(
+        "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+        "metric", "n(quiet)", "med(quiet)", "n(fault)", "med(fault)"
+    ));
+    for metric in MetricName::ALL {
+        let (quiet, fault) = results.phase_split(mode, n_shards, metric);
+        let (mq, mf) = (median(&quiet), median(&fault));
+        let (sq, sf) = match metric {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => (fmt_ns(mq), fmt_ns(mf)),
+            _ => (format!("{mq:.4}"), format!("{mf:.4}")),
+        };
+        out.push_str(&format!(
+            "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+            metric.label(),
+            quiet.len(),
+            sq,
+            fault.len(),
+            sf,
+        ));
+    }
+    out
+}
+
+/// Dump hardware sweep points to CSV (one row per window snapshot with
+/// its phase bitmask), mirroring [`scenario_csv`].
+pub fn hardware_csv(results: &HardwareResults) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "mode",
+        "shards",
+        "threads",
+        "replicate",
+        "snapshot",
+        "phase_bits",
+        "simstep_period_ns",
+        "simstep_latency",
+        "walltime_latency_ns",
+        "delivery_failure_rate",
+        "delivery_clumpiness",
+    ]);
+    for p in &results.points {
+        for (w, (m, ph)) in p.qos.snapshots.iter().zip(p.qos.phases.iter()).enumerate() {
+            t.push_row(vec![
+                p.mode.index().to_string(),
+                p.n_shards.to_string(),
+                p.threads.to_string(),
+                p.replicate.to_string(),
+                w.to_string(),
+                format!("{:#x}", ph.bits()),
+                format!("{}", m.simstep_period_ns),
+                format!("{}", m.simstep_latency),
+                format!("{}", m.walltime_latency_ns),
+                format!("{}", m.delivery_failure_rate),
+                format!("{}", m.delivery_clumpiness),
+            ]);
+        }
+    }
+    t
+}
+
 /// Dump benchmark points to CSV for external analysis.
 pub fn benchmark_csv(results: &BenchmarkResults) -> CsvTable {
     let mut t = CsvTable::new(vec![
@@ -485,6 +602,58 @@ mod tests {
         assert!(attr.contains("10ns"), "quiet median missing: {attr}");
         assert!(attr.contains("900ns"), "fault median missing: {attr}");
         assert_eq!(scenario_csv(&results).n_rows(), 2);
+    }
+
+    #[test]
+    fn hardware_report_renders_and_attributes_phases() {
+        use crate::coordinator::hardware::{HardwarePoint, HardwareResults};
+        use crate::coordinator::HardwareExperiment;
+        use crate::faults::ScenarioPhase;
+
+        let mk_metrics = |period| QosMetrics {
+            simstep_period_ns: period,
+            simstep_latency: 2.0,
+            walltime_latency_ns: 2.0 * period,
+            delivery_failure_rate: 0.1,
+            delivery_clumpiness: 0.2,
+        };
+        let mut qos = ReplicateQos::default();
+        qos.push_phased(mk_metrics(25.0), ScenarioPhase::QUIESCENT);
+        qos.push_phased(mk_metrics(800.0), ScenarioPhase::single(0));
+        let results = HardwareResults {
+            points: vec![HardwarePoint {
+                mode: AsyncMode::BestEffort,
+                n_shards: 16,
+                replicate: 0,
+                threads: 2,
+                qos,
+                updates: vec![10; 16],
+                update_rate_hz: 500.0,
+                failure_rate: 0.02,
+                span_ns: 150_000_000,
+            }],
+        };
+        let mut exp = HardwareExperiment::smoke();
+        exp.modes = vec![AsyncMode::BestEffort];
+        exp.shard_counts = vec![16];
+        let table = hardware_table("hardware sweep", &exp, &results);
+        assert!(table.contains("mode 3"), "{table}");
+        assert!(table.contains("16"), "{table}");
+        let attr = hardware_phase_attribution(
+            "hardware attribution",
+            &results,
+            AsyncMode::BestEffort,
+            16,
+        );
+        assert!(attr.contains("25ns"), "quiet median missing: {attr}");
+        assert!(attr.contains("800ns"), "fault median missing: {attr}");
+        assert_eq!(hardware_csv(&results).n_rows(), 2);
+        // The QoS-results bridge feeds the DES summary table unchanged.
+        let s = qos_summary(
+            "hardware qos",
+            &results.qos_results(AsyncMode::BestEffort, 16),
+        );
+        assert!(s.contains("Simstep Period"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! Wall-clock compilation of [`FaultScenario`]s for the real-thread
+//! executor.
+//!
+//! The DES interprets scenarios through an event-driven overlay
+//! ([`crate::faults::FaultRuntime`]): commands (`RestoreNode`/`Heal`) pop
+//! currently-active degradations off a state machine advanced by
+//! scheduler wakes. Real threads have no scheduler — workers consult a
+//! wall clock between simsteps — so this module resolves the whole
+//! timeline at compile time into *onset/expiry checkpoints*: each
+//! windowed event gets an **effective end** (its natural window end,
+//! truncated by the earliest command that would have deactivated it),
+//! after which activity is the pure predicate `start <= t < end`. The
+//! closed form is equivalent to replaying the overlay's `(time, index)`
+//! event order — model-checked against an event-driven replay in
+//! `python/hw_fault_timeline_fuzz.py` (4k randomized scenarios) before
+//! this port, mirroring how the overlay itself was validated in PR 3.
+//!
+//! Interpretation on hardware:
+//!
+//! * scenario *node* indices address **shard ranks** (the thread executor
+//!   places every shard on one host node, so the DES's node axis
+//!   collapses onto the rank axis — like `PlacementKind::OnePerNode`);
+//! * every shard↔shard link counts as *crossnode* for storms and
+//!   partitions (there is no second hierarchy level to exempt);
+//! * event times are **wall-clock nanoseconds from run start**;
+//! * effects are realized by the worker loop (`exec/threads.rs`):
+//!   `DegradeNode.speed_factor` becomes extra spin work on the degraded
+//!   shard, link-fault `extra_drop_prob` becomes forced put failures, and
+//!   link-fault `latency_factor` becomes a pre-send spin delay.
+//!
+//! Wall-clock runs are inherently non-reproducible (see
+//! `rust/tests/golden/README.md`), but the timeline itself is pure data:
+//! `phase_at`/`drop_prob`/`speed_factor` are deterministic functions of
+//! `(scenario, t)`, so QoS attribution tags are exact even though the
+//! metric values jitter.
+
+use crate::faults::{clique_of, FaultKind, FaultScenario, ScenarioPhase};
+use crate::util::Nanos;
+
+/// One compiled scenario event: its activity window with commands
+/// resolved. Commands themselves compile to empty windows (`start ==
+/// end`) so event indices — and hence [`ScenarioPhase`] bits — stay
+/// aligned with the source scenario.
+#[derive(Clone, Copy, Debug)]
+struct HwEvent {
+    start: Nanos,
+    /// Effective end: natural window end, truncated by the earliest
+    /// `RestoreNode`/`Heal` at-or-after onset that targets this event.
+    end: Nanos,
+    kind: FaultKind,
+}
+
+impl HwEvent {
+    #[inline]
+    fn active(&self, t: Nanos) -> bool {
+        t >= self.start && t < self.end
+    }
+
+    /// Is a flap event in its degraded sub-phase at `t`? (The DES starts
+    /// flaps "on" and toggles every `on_for`/`off_for`; the closed form
+    /// below reproduces that cadence.) Always true for non-flap events —
+    /// their whole window is the degraded phase.
+    #[inline]
+    fn degraded_sub_phase(&self, t: Nanos) -> bool {
+        if let FaultKind::FlapLink { on_for, off_for, .. } = self.kind {
+            let period = on_for.saturating_add(off_for);
+            if period == 0 {
+                return true;
+            }
+            (t - self.start) % period < on_for
+        } else {
+            true
+        }
+    }
+}
+
+/// Does command `cmd` deactivate windowed event `kind` when active?
+fn command_targets(cmd: &FaultKind, kind: &FaultKind) -> bool {
+    match cmd {
+        FaultKind::Heal => true,
+        FaultKind::RestoreNode { node } => matches!(
+            kind,
+            FaultKind::DegradeNode { node: n, .. } | FaultKind::FlapLink { node: n, .. }
+                if n == node
+        ),
+        _ => false,
+    }
+}
+
+/// A [`FaultScenario`] compiled to wall-clock checkpoints for the
+/// real-thread executor. Cheap to consult per worker pass: every query is
+/// `O(events)` over a `<= 64`-entry table of pure arithmetic — orders of
+/// magnitude below one workload step.
+#[derive(Clone, Debug)]
+pub struct HwFaultTimeline {
+    events: Vec<HwEvent>,
+    n_ranks: usize,
+}
+
+impl HwFaultTimeline {
+    /// Compile `scenario` for an allocation of `n_ranks` shards.
+    /// Validates the scenario (panics loudly on malformed input, like the
+    /// DES path) and resolves commands into effective end times.
+    pub fn compile(scenario: &FaultScenario, n_ranks: usize) -> Self {
+        scenario.validate(n_ranks);
+        let evs = &scenario.events;
+        let events = evs
+            .iter()
+            .enumerate()
+            .map(|(k, ev)| {
+                if ev.kind.is_instant() {
+                    // Commands hold no window of their own.
+                    return HwEvent {
+                        start: ev.start,
+                        end: ev.start,
+                        kind: ev.kind,
+                    };
+                }
+                let mut end = ev.end();
+                for (j, c) in evs.iter().enumerate() {
+                    if !command_targets(&c.kind, &ev.kind) {
+                        continue;
+                    }
+                    // A command deactivates only *currently active*
+                    // events: it must fire at-or-after this event's
+                    // onset. On a start-time tie the overlay fires in
+                    // event-index order, so a lower-indexed command
+                    // fires before the onset and misses it.
+                    let after_onset =
+                        c.start > ev.start || (c.start == ev.start && j > k);
+                    if after_onset {
+                        end = end.min(c.start);
+                    }
+                }
+                HwEvent {
+                    start: ev.start,
+                    end,
+                    kind: ev.kind,
+                }
+            })
+            .collect();
+        Self { events, n_ranks }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The set of scenario events active at wall offset `t` — the tag
+    /// QoS windows carry for time-resolved attribution. Flap events count
+    /// as active across their whole window (degraded or clean
+    /// sub-phase), matching the DES overlay's phase semantics.
+    pub fn phase_at(&self, t: Nanos) -> ScenarioPhase {
+        let mut p = ScenarioPhase::QUIESCENT;
+        for (k, ev) in self.events.iter().enumerate() {
+            if ev.active(t) {
+                p = p.union(ScenarioPhase::single(k));
+            }
+        }
+        p
+    }
+
+    /// Earliest compiled checkpoint strictly after `t` (onset, expiry, or
+    /// flap toggle), if any — lets callers cache derived state between
+    /// transitions instead of recomputing per pass.
+    pub fn next_checkpoint_after(&self, t: Nanos) -> Option<Nanos> {
+        let mut next: Option<Nanos> = None;
+        let mut fold = |c: Nanos| {
+            if c > t {
+                next = Some(next.map_or(c, |n| n.min(c)));
+            }
+        };
+        for ev in &self.events {
+            fold(ev.start);
+            if ev.end != Nanos::MAX {
+                fold(ev.end);
+            }
+            if let FaultKind::FlapLink { on_for, off_for, .. } = ev.kind {
+                if ev.active(t) && t >= ev.start {
+                    let period = on_for.saturating_add(off_for);
+                    if period > 0 {
+                        let into = (t - ev.start) % period;
+                        let boundary = if into < on_for { on_for } else { period };
+                        fold((t - into).saturating_add(boundary).min(ev.end));
+                    }
+                }
+            }
+        }
+        next
+    }
+
+    /// Added per-send drop probability on the directed link `a -> b` at
+    /// wall offset `t` (clamped to 1), folding every active link-scoped
+    /// fault: node degradations and flaps touching either endpoint,
+    /// storms on every link, partition cuts on clique-crossing links.
+    pub fn drop_prob(&self, t: Nanos, a: usize, b: usize) -> f64 {
+        let mut p = 0.0;
+        for ev in &self.events {
+            if !ev.active(t) {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::DegradeNode { node, fault } if node == a || node == b => {
+                    p += fault.extra_drop_prob;
+                }
+                FaultKind::FlapLink { node, fault, .. } if node == a || node == b => {
+                    if ev.degraded_sub_phase(t) {
+                        p += fault.extra_drop_prob;
+                    }
+                }
+                FaultKind::CongestionStorm { fault } => {
+                    p += fault.extra_drop_prob;
+                }
+                FaultKind::PartitionCliques { cliques, cut } => {
+                    if clique_of(a, cliques, self.n_ranks)
+                        != clique_of(b, cliques, self.n_ranks)
+                    {
+                        p += cut.extra_drop_prob;
+                    }
+                }
+                _ => {}
+            }
+        }
+        p.min(1.0)
+    }
+
+    /// Combined latency inflation on the directed link `a -> b` at wall
+    /// offset `t` (`1.0` when quiescent). Matches the DES composition:
+    /// node degradations fold multiplicatively *within* each endpoint
+    /// and the link takes the **max** of the two endpoints' health
+    /// (`sim/engine.rs` scales service/latency by
+    /// `max(src_profile, dst_profile)`), while link-scoped modifiers
+    /// (flap, storm, partition) stack multiplicatively on top. The
+    /// worker realizes the result as pre-send spin.
+    pub fn latency_factor(&self, t: Nanos, a: usize, b: usize) -> f64 {
+        let mut health_a = 1.0;
+        let mut health_b = 1.0;
+        let mut mods = 1.0;
+        for ev in &self.events {
+            if !ev.active(t) {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::DegradeNode { node, fault } => {
+                    if node == a {
+                        health_a *= fault.latency_factor;
+                    }
+                    if node == b {
+                        health_b *= fault.latency_factor;
+                    }
+                }
+                FaultKind::FlapLink { node, fault, .. } if node == a || node == b => {
+                    if ev.degraded_sub_phase(t) {
+                        mods *= fault.latency_factor;
+                    }
+                }
+                FaultKind::CongestionStorm { fault } => {
+                    mods *= fault.latency_factor;
+                }
+                FaultKind::PartitionCliques { cliques, cut } => {
+                    if clique_of(a, cliques, self.n_ranks)
+                        != clique_of(b, cliques, self.n_ranks)
+                    {
+                        mods *= cut.latency_factor;
+                    }
+                }
+                _ => {}
+            }
+        }
+        health_a.max(health_b) * mods
+    }
+
+    /// Combined compute slowdown for shard `rank` at wall offset `t`
+    /// (product of active `DegradeNode.speed_factor`s; `1.0` when
+    /// healthy). The worker realizes it as extra spin work per update.
+    pub fn speed_factor(&self, t: Nanos, rank: usize) -> f64 {
+        let mut f = 1.0;
+        for ev in &self.events {
+            if !ev.active(t) {
+                continue;
+            }
+            if let FaultKind::DegradeNode { node, fault } = ev.kind {
+                if node == rank {
+                    f *= fault.speed_factor;
+                }
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{LinkFault, NodeFault, ALWAYS};
+    use crate::util::MILLI;
+
+    #[test]
+    fn empty_scenario_is_quiescent_everywhere() {
+        let tl = HwFaultTimeline::compile(&FaultScenario::default(), 4);
+        assert!(tl.is_empty());
+        for t in [0, 1, MILLI, Nanos::MAX - 1] {
+            assert!(tl.phase_at(t).is_quiescent());
+            assert_eq!(tl.drop_prob(t, 0, 1), 0.0);
+            assert_eq!(tl.speed_factor(t, 0), 1.0);
+            assert_eq!(tl.latency_factor(t, 0, 1), 1.0);
+        }
+        assert_eq!(tl.next_checkpoint_after(0), None);
+    }
+
+    #[test]
+    fn windowed_degrade_activates_and_expires() {
+        let sc = FaultScenario::default().with(10, 20, FaultKind::DegradeNode {
+            node: 1,
+            fault: NodeFault::lac417(),
+        });
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        assert!(tl.phase_at(9).is_quiescent());
+        assert!(tl.phase_at(10).contains(0));
+        assert!(tl.phase_at(29).contains(0));
+        assert!(tl.phase_at(30).is_quiescent(), "window end is exclusive");
+        // Degrade effects: shard 1's compute and its links only.
+        assert!(tl.speed_factor(15, 1) > 1.0);
+        assert_eq!(tl.speed_factor(15, 0), 1.0);
+        assert!(tl.drop_prob(15, 0, 1) > 0.0);
+        assert!(tl.drop_prob(15, 1, 2) > 0.0);
+        assert_eq!(tl.drop_prob(15, 0, 2), 0.0);
+        assert_eq!(tl.next_checkpoint_after(0), Some(10));
+        assert_eq!(tl.next_checkpoint_after(10), Some(30));
+        assert_eq!(tl.next_checkpoint_after(30), None);
+    }
+
+    #[test]
+    fn restore_truncates_always_on_degrade() {
+        // degrade_recover: ALWAYS degrade at t=10 restored at t=50.
+        let sc = FaultScenario::degrade_recover(2, 10, 40);
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        assert!(tl.phase_at(10).contains(0));
+        assert!(tl.phase_at(49).contains(0));
+        assert!(tl.phase_at(50).is_quiescent(), "restore deactivates");
+        // The command event itself never appears in a phase.
+        assert!(!tl.phase_at(50).contains(1));
+    }
+
+    #[test]
+    fn restore_only_hits_its_node_and_heal_hits_all() {
+        let degrade = |node| FaultKind::DegradeNode {
+            node,
+            fault: NodeFault::lac417(),
+        };
+        let sc = FaultScenario::default()
+            .with(0, ALWAYS, degrade(0))
+            .with(0, ALWAYS, degrade(1))
+            .with(20, 0, FaultKind::RestoreNode { node: 0 })
+            .with(40, 0, FaultKind::Heal);
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        assert!(tl.phase_at(10).contains(0) && tl.phase_at(10).contains(1));
+        assert!(!tl.phase_at(25).contains(0), "restore hit node 0");
+        assert!(tl.phase_at(25).contains(1), "node 1 untouched by restore");
+        assert!(tl.phase_at(45).is_quiescent(), "heal hit everything");
+    }
+
+    #[test]
+    fn command_before_onset_is_a_no_op() {
+        let sc = FaultScenario::default()
+            .with(5, 0, FaultKind::Heal)
+            .with(10, ALWAYS, FaultKind::DegradeNode {
+                node: 0,
+                fault: NodeFault::fail_stop(),
+            });
+        let tl = HwFaultTimeline::compile(&sc, 2);
+        assert!(tl.phase_at(100).contains(1), "later onset survives");
+    }
+
+    #[test]
+    fn same_instant_tie_follows_event_index_order() {
+        // Heal at the same instant as an onset: a higher-indexed command
+        // fires after the onset and kills it; a lower-indexed one misses.
+        let degrade = FaultKind::DegradeNode {
+            node: 0,
+            fault: NodeFault::lac417(),
+        };
+        let killed = FaultScenario::default()
+            .with(10, ALWAYS, degrade)
+            .with(10, 0, FaultKind::Heal);
+        let tl = HwFaultTimeline::compile(&killed, 2);
+        assert!(tl.phase_at(10).is_quiescent() && tl.phase_at(50).is_quiescent());
+
+        let survives = FaultScenario::default()
+            .with(10, 0, FaultKind::Heal)
+            .with(10, ALWAYS, degrade);
+        let tl = HwFaultTimeline::compile(&survives, 2);
+        assert!(tl.phase_at(50).contains(1));
+    }
+
+    #[test]
+    fn storm_hits_every_link_and_partition_only_crossings() {
+        let sc = FaultScenario::default()
+            .with(0, 100, FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            })
+            .with(0, 100, FaultKind::PartitionCliques {
+                cliques: 2,
+                cut: LinkFault::cut(),
+            });
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        let storm_drop = LinkFault::storm().extra_drop_prob;
+        // Ranks 0,1 vs 2,3 (contiguous cliques). Within a clique only the
+        // storm applies; across, the cut (p=1) clamps the sum at 1.
+        assert!((tl.drop_prob(5, 0, 1) - storm_drop).abs() < 1e-12);
+        assert_eq!(tl.drop_prob(5, 0, 2), 1.0);
+        assert!(tl.latency_factor(5, 0, 1) > 1.0);
+        assert!(tl.phase_at(5).len() == 2);
+    }
+
+    #[test]
+    fn degrade_latency_takes_endpoint_max_like_the_des() {
+        let degrade = |node, lf| FaultKind::DegradeNode {
+            node,
+            fault: NodeFault {
+                speed_factor: 1.0,
+                jitter_sigma: 0.0,
+                stall_mean_ns: 0.0,
+                latency_factor: lf,
+                extra_drop_prob: 0.0,
+            },
+        };
+        let storm = FaultKind::CongestionStorm {
+            fault: LinkFault {
+                latency_factor: 5.0,
+                extra_drop_prob: 0.0,
+            },
+        };
+        let sc = FaultScenario::default()
+            .with(0, 100, degrade(0, 2.0))
+            .with(0, 100, degrade(1, 3.0))
+            .with(0, 100, storm);
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        // Endpoint healths take the max (DES: `max(src, dst)` profile
+        // scaling), link mods multiply on top: max(2,3) * 5, not 2*3*5.
+        assert_eq!(tl.latency_factor(10, 0, 1), 15.0);
+        // One degraded endpoint: max(2, 1) * 5.
+        assert_eq!(tl.latency_factor(10, 0, 2), 10.0);
+        // Two degrades on the SAME node fold multiplicatively first.
+        let sc2 = FaultScenario::default()
+            .with(0, 100, degrade(0, 2.0))
+            .with(0, 100, degrade(0, 4.0));
+        let tl2 = HwFaultTimeline::compile(&sc2, 2);
+        assert_eq!(tl2.latency_factor(10, 0, 1), 8.0);
+    }
+
+    #[test]
+    fn flap_sub_phase_cadence_matches_overlay() {
+        // on 10 / off 5 from t=100: degraded [100,110), clean [110,115)…
+        let sc = FaultScenario::flapping_clique(1, 100, 60, 10, 5);
+        let tl = HwFaultTimeline::compile(&sc, 4);
+        for (t, on) in [
+            (100, true),
+            (109, true),
+            (110, false),
+            (114, false),
+            (115, true),
+            (129, false),
+        ] {
+            assert!(tl.phase_at(t).contains(0), "flap active across window");
+            let p = tl.drop_prob(t, 0, 1);
+            assert_eq!(p > 0.0, on, "t={t}: drop={p}");
+        }
+        // Whole window expires at 160.
+        assert!(tl.phase_at(160).is_quiescent());
+        // Next checkpoint from inside an on-phase is the toggle.
+        assert_eq!(tl.next_checkpoint_after(101), Some(110));
+        assert_eq!(tl.next_checkpoint_after(110), Some(115));
+    }
+
+    #[test]
+    #[should_panic(expected = "node 9")]
+    fn compile_validates_like_the_des_path() {
+        HwFaultTimeline::compile(&FaultScenario::lac417(9), 4);
+    }
+}

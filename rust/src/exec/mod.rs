@@ -1,5 +1,30 @@
-//! Real `std::thread` executor over the same workload API as the DES.
+//! Real `std::thread` executors over the same workload API as the DES.
+//!
+//! The paper's measurements are taken on *hardware* — real threads,
+//! real clocks, real mutex-mediated shared memory (§III-A/E) — while
+//! the DES predicts the same quantities in virtual time. This module is
+//! the hardware half of that cross-validation axis:
+//!
+//! * [`threads::run_threads`] drives [`crate::workloads::ShardWorkload`]
+//!   shards on real threads, with windowed QoS capture (reusing the
+//!   [`crate::qos`] types, so every metric query and report table works
+//!   on hardware runs), shard-multiplexed oversubscription for 64–256
+//!   shard runs on small-core boxes (`EBCOMM_THREADS` caps the real
+//!   thread count), and scripted fault scenarios;
+//! * [`hw_faults::HwFaultTimeline`] compiles a
+//!   [`crate::faults::FaultScenario`] into wall-clock onset/expiry
+//!   checkpoints the worker loops consult between simsteps.
+//!
+//! **Determinism contract** (see `rust/tests/golden/README.md`): DES
+//! runs are bit-reproducible and golden-gated; hardware runs are
+//! *never* golden-gated — wall clocks, OS scheduling, and mutex
+//! contention make every run unique. Tests against hardware runs assert
+//! ordinal relations (mode 0 slower than mode 3), structural facts
+//! (window/phase-tag shapes, zero sync-mode drops), and tolerance-based
+//! bounds only.
 
+pub mod hw_faults;
 pub mod threads;
 
-pub use threads::{ThreadExecConfig, ThreadExecResult};
+pub use hw_faults::HwFaultTimeline;
+pub use threads::{run_threads, ThreadExecConfig, ThreadExecResult};

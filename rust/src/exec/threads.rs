@@ -3,20 +3,55 @@
 //! Runs the same [`ShardWorkload`] shards as the DES, but on real
 //! `std::thread`s with real wall clocks, real `std::sync::Barrier`s, and
 //! shared-memory mutex ducts ([`crate::conduit::thread_duct`]) — the
-//! multithreading modality of paper §III-A/E. Used by the quickstart
-//! example and by integration tests that cross-validate the DES process
-//! model; the paper-scale experiments run on the DES (this machine cannot
-//! host 64 hardware threads).
+//! multithreading modality of paper §III-A/E. Since the QoS-parity pass
+//! it measures the same things the DES does, on metal:
+//!
+//! * **Windowed QoS** (§II-D/E): an optional wall-clock
+//!   [`SnapshotSchedule`] brackets counter tranches per channel endpoint
+//!   into [`SnapshotWindow`]s, reusing the `qos/` types unchanged — so
+//!   update period, per-channel latency (via the [`TouchCounter`] touch
+//!   protocol), delivery failure, and delivery coagulation come back as
+//!   windowed distributions and every `ReplicateQos` query
+//!   (`values_where`, `mean_where`, `report::` tables) works on hardware
+//!   runs. Inlet observations are captured by the sending worker and
+//!   outlet observations by the receiving worker — each endpoint's owner
+//!   observes it, like the paper's per-process snapshot apparatus — so
+//!   the two sides of a window are bracketed at slightly different wall
+//!   instants (observation "motion blur", accepted in §II-E; the metric
+//!   layer saturates).
+//! * **Oversubscription**: [`ThreadExecConfig::threads`] multiplexes many
+//!   shards onto few hardware threads (round-robin stepping per pass), so
+//!   64–256-shard runs fit a 2-core CI box. `EBCOMM_THREADS` caps the
+//!   real thread count from the environment. Reciprocal channel wiring
+//!   uses the same sorted flat CSR-style index as `Engine::new` (the
+//!   former `position()` scan was O(channels²)).
+//! * **Scenario faults**: a [`FaultScenario`] compiles to wall-clock
+//!   checkpoints ([`crate::exec::hw_faults::HwFaultTimeline`]) consulted
+//!   each worker pass — degradation becomes extra spin work, link faults
+//!   become forced put failures and pre-send spin delays — and QoS
+//!   windows carry [`ScenarioPhase`] tags for the same time-resolved
+//!   attribution the DES has.
+//!
+//! Wall-clock runs are **never** golden-gated and all assertions on them
+//! are tolerance- or ordinal-based — see `rust/tests/golden/README.md`
+//! for the determinism contract.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
-use crate::conduit::{thread_duct, ChannelConfig, InletLike, OutletLike, ThreadInlet, ThreadOutlet};
-use crate::qos::TouchCounter;
+use crate::conduit::{
+    thread_duct, ChannelConfig, CounterTranche, InletLike, OutletLike, ThreadInlet,
+    ThreadOutlet,
+};
+use crate::faults::{FaultScenario, ScenarioPhase};
+use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
 use crate::sim::AsyncMode;
-use crate::util::rng::Xoshiro256;
-use crate::workloads::{ShardWorkload, WorkUnitSpinner};
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::Nanos;
+use crate::workloads::{reciprocal_layer, ChannelSpec, ShardWorkload, SpecIndex, WorkUnitSpinner};
+
+use super::hw_faults::HwFaultTimeline;
 
 /// Message envelope carrying the touch counter (QoS latency protocol).
 #[derive(Clone)]
@@ -29,7 +64,8 @@ struct Envelope<M> {
 #[derive(Clone, Debug)]
 pub struct ThreadExecConfig {
     pub mode: AsyncMode,
-    /// Real wall-clock run duration.
+    /// Real wall-clock run duration. Extended automatically to cover
+    /// `snapshots` when the schedule's runtime is longer.
     pub run_for: Duration,
     /// Synthetic work units spun per update (real mt19937 calls).
     pub added_work_units: u64,
@@ -39,6 +75,27 @@ pub struct ThreadExecConfig {
     pub rolling_chunk: Duration,
     /// Mode-2 epoch.
     pub fixed_epoch: Duration,
+    /// Hardware threads to host the shards: `None` = one per shard
+    /// (the pre-oversubscription behaviour). Shards are multiplexed onto
+    /// threads in contiguous rank blocks and stepped round-robin, one
+    /// update per shard per pass. Clamped to the shard count; the
+    /// `EBCOMM_THREADS` environment variable caps it further (CI boxes
+    /// pin it to the core count).
+    pub threads: Option<usize>,
+    /// Wall-clock QoS snapshot windows (times are nanoseconds from run
+    /// start); `None` disables windowed capture.
+    pub snapshots: Option<SnapshotSchedule>,
+    /// Scripted fault timeline. Event times are wall-clock ns from run
+    /// start; node indices address shard ranks (see
+    /// [`crate::exec::hw_faults`]). The default empty scenario adds no
+    /// per-pass work at all.
+    pub scenario: FaultScenario,
+    /// Spin units injected per update per unit of active
+    /// `DegradeNode.speed_factor` above 1 (and, scaled down 64×, per unit
+    /// of link `latency_factor` above 1 per send). At ~35 ns/unit the
+    /// default makes a lac-417-grade degradation clearly visible in
+    /// windowed metrics without freezing a CI worker.
+    pub degrade_spin_units: u64,
     pub seed: u64,
 }
 
@@ -51,24 +108,65 @@ impl Default for ThreadExecConfig {
             channel: ChannelConfig::qos(),
             rolling_chunk: Duration::from_millis(10),
             fixed_epoch: Duration::from_secs(1),
+            threads: None,
+            snapshots: None,
+            scenario: FaultScenario::default(),
+            degrade_spin_units: 4_000,
             seed: 1,
         }
     }
 }
 
+/// Resolve the hardware thread count: the requested count (default one
+/// per shard), capped by `env_cap` (`EBCOMM_THREADS`), clamped to
+/// `[1, n_shards]`.
+fn resolve_threads(requested: Option<usize>, env_cap: Option<usize>, n_shards: usize) -> usize {
+    let mut t = requested.unwrap_or(n_shards).max(1);
+    if let Some(cap) = env_cap {
+        if cap >= 1 {
+            t = t.min(cap);
+        }
+    }
+    t.clamp(1, n_shards.max(1))
+}
+
+fn env_thread_cap() -> Option<usize> {
+    std::env::var("EBCOMM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+}
+
 /// Result of an on-hardware run.
 pub struct ThreadExecResult<W> {
     pub shards: Vec<W>,
+    /// Updates completed per shard (global rank order).
     pub updates: Vec<u64>,
+    /// Mean per-worker first-step→last-step span. (Formerly measured
+    /// from before thread spawn to after join, which inflated
+    /// `update_rate_per_cpu_hz` denominators on slow-spawn boxes.)
     pub elapsed: Duration,
+    /// Spawn-to-join wall time (diagnostics; includes spawn/join skew).
+    pub wall_elapsed: Duration,
+    /// Per-worker first-step→last-step spans.
+    pub worker_spans: Vec<Duration>,
     pub attempted_sends: u64,
     pub successful_sends: u64,
+    /// Hardware threads actually used (after `EBCOMM_THREADS` capping).
+    pub threads: usize,
+    /// Completed QoS windows, one per directed channel per schedule
+    /// window (channel-major), when `snapshots` was configured.
+    pub windows: Vec<SnapshotWindow>,
+    /// The windows scanned into per-window metrics + phase tags — the
+    /// same [`ReplicateQos`] the DES returns, so every downstream QoS
+    /// query and report table works unchanged on hardware runs.
+    pub qos: ReplicateQos,
 }
 
 impl<W> ThreadExecResult<W> {
-    /// Mean per-thread update rate (updates per second of wall time).
+    /// Mean per-shard update rate (updates per second of measured worker
+    /// span).
     pub fn update_rate_per_cpu_hz(&self) -> f64 {
-        if self.updates.is_empty() {
+        if self.updates.is_empty() || self.elapsed.is_zero() {
             return 0.0;
         }
         let mean = self.updates.iter().sum::<u64>() as f64 / self.updates.len() as f64;
@@ -84,42 +182,99 @@ impl<W> ThreadExecResult<W> {
     }
 }
 
-/// Run `shards` on one hardware thread each until the deadline.
+/// Per-shard state a worker owns: the shard plus its channel endpoints
+/// in the shard's `channels()` order. `inlets[ch]`/`outlets[ch]`/
+/// `touch[ch]` all address the same peer relationship; the `usize` in
+/// each endpoint pair is the directed channel's global id (for pairing
+/// inlet- and outlet-side window observations after join).
+struct ShardSlot<W: ShardWorkload> {
+    rank: usize,
+    shard: W,
+    rng: Xoshiro256,
+    spinner: WorkUnitSpinner,
+    inlets: Vec<(usize, ThreadInlet<Envelope<W::Msg>>)>,
+    outlets: Vec<(usize, ThreadOutlet<Envelope<W::Msg>>)>,
+    /// Peer rank per channel (fault-timeline link lookups).
+    peers: Vec<usize>,
+    touch: Vec<TouchCounter>,
+    updates: u64,
+}
+
+/// An open/close observation pair for one endpoint of one window.
+type ObsPair = (QosObservation, QosObservation);
+/// Completed windows per endpoint, keyed by global channel id.
+type EndpointLog = Vec<(usize, Vec<ObsPair>)>;
+
+struct WorkerOut<W> {
+    shards: Vec<(usize, W)>,
+    updates: Vec<(usize, u64)>,
+    attempted: u64,
+    successful: u64,
+    span: Duration,
+    inlet_logs: EndpointLog,
+    outlet_logs: EndpointLog,
+}
+
+struct WorkerCtx<W: ShardWorkload> {
+    slots: Vec<ShardSlot<W>>,
+    barrier: Arc<Barrier>,
+    stop: Arc<AtomicBool>,
+    decision: Arc<AtomicBool>,
+    cfg: ThreadExecConfig,
+    start: Instant,
+    deadline: Instant,
+    timeline: Option<Arc<HwFaultTimeline>>,
+}
+
+/// Run `shards` on hardware threads until the deadline. One thread per
+/// shard by default; see [`ThreadExecConfig::threads`] for
+/// oversubscribed (multiplexed) runs.
 pub fn run_threads<W>(cfg: ThreadExecConfig, shards: Vec<W>) -> ThreadExecResult<W>
 where
     W: ShardWorkload + Send + 'static,
     W::Msg: Send + 'static,
 {
     let n = shards.len();
-    let specs: Vec<_> = shards.iter().map(|s| s.channels()).collect();
+    let n_threads = resolve_threads(cfg.threads, env_thread_cap(), n);
+    let specs: Vec<Vec<ChannelSpec>> = shards.iter().map(|s| s.channels()).collect();
+    let total_specs: usize = specs.iter().map(|s| s.len()).sum();
 
-    // Build one duct per directed channel; distribute endpoints.
-    // inlets[p][local_ch], outlets[p][local_ch in peer's spec order].
-    let mut inlets: Vec<Vec<Option<ThreadInlet<Envelope<W::Msg>>>>> =
-        (0..n).map(|p| (0..specs[p].len()).map(|_| None).collect()).collect();
-    let mut outlets: Vec<Vec<Option<ThreadOutlet<Envelope<W::Msg>>>>> =
-        (0..n).map(|p| (0..specs[p].len()).map(|_| None).collect()).collect();
+    // Reciprocal wiring via the shared sorted flat CSR spec index
+    // ([`SpecIndex`], same structure `Engine::new` wires with) — the
+    // former `position()` scan here was O(channels²) overall.
+    let spec_index = SpecIndex::build(&specs);
 
+    // Global channel id for the duct created from `src`'s spec
+    // `src_ch`: the flattened (src, src_ch) position.
+    type InletSlot<M> = Option<(usize, ThreadInlet<Envelope<M>>)>;
+    type OutletSlot<M> = Option<(usize, ThreadOutlet<Envelope<M>>)>;
+    let mut inlets: Vec<Vec<InletSlot<W::Msg>>> =
+        specs.iter().map(|sp| (0..sp.len()).map(|_| None).collect()).collect();
+    let mut outlets: Vec<Vec<OutletSlot<W::Msg>>> =
+        specs.iter().map(|sp| (0..sp.len()).map(|_| None).collect()).collect();
     for (src, specs_p) in specs.iter().enumerate() {
         for (src_ch, spec) in specs_p.iter().enumerate() {
+            let cid = spec_index.flat_id(src, src_ch);
             let (inlet, outlet) = thread_duct::<Envelope<W::Msg>>(cfg.channel);
-            inlets[src][src_ch] = Some(inlet);
+            inlets[src][src_ch] = Some((cid, inlet));
             // The receiver reads this duct via its reciprocal channel slot.
-            let dst_ch = specs[spec.peer]
-                .iter()
-                .position(|s| s.peer == src && s.layer == reciprocal_layer(spec.layer))
+            let dst_ch = spec_index
+                .lookup(spec.peer, src, reciprocal_layer(spec.layer))
                 .expect("reciprocal channel");
-            outlets[spec.peer][dst_ch] = Some(outlet);
+            outlets[spec.peer][dst_ch] = Some((cid, outlet));
         }
     }
 
-    let barrier = Arc::new(Barrier::new(n));
-    let stop = Arc::new(AtomicBool::new(false));
-    let decision = Arc::new(AtomicBool::new(false));
-    let start = Instant::now();
-    let deadline = start + cfg.run_for;
+    let timeline = if cfg.scenario.is_empty() {
+        None
+    } else {
+        Some(Arc::new(HwFaultTimeline::compile(&cfg.scenario, n)))
+    };
 
-    let mut handles = Vec::with_capacity(n);
+    // Contiguous-block shard→thread assignment: thread `k` hosts ranks
+    // where `rank * n_threads / n == k` (sizes differ by at most one).
+    let mut slot_groups: Vec<Vec<ShardSlot<W>>> =
+        (0..n_threads).map(|_| Vec::new()).collect();
     for (rank, shard) in shards.into_iter().enumerate() {
         let my_inlets: Vec<_> = std::mem::take(&mut inlets[rank])
             .into_iter()
@@ -129,125 +284,344 @@ where
             .into_iter()
             .map(Option::unwrap)
             .collect();
-        let barrier = Arc::clone(&barrier);
-        let stop = Arc::clone(&stop);
-        let decision = Arc::clone(&decision);
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || {
-            worker(rank, shard, my_inlets, my_outlets, barrier, stop, decision, cfg, deadline)
-        }));
+        let n_ch = my_inlets.len();
+        slot_groups[rank * n_threads / n].push(ShardSlot {
+            rank,
+            shard,
+            rng: Xoshiro256::new(cfg.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9)),
+            spinner: WorkUnitSpinner::new(cfg.seed as u32 ^ rank as u32),
+            inlets: my_inlets,
+            outlets: my_outlets,
+            peers: specs[rank].iter().map(|s| s.peer).collect(),
+            touch: vec![TouchCounter::default(); n_ch],
+            updates: 0,
+        });
+    }
+
+    let barrier = Arc::new(Barrier::new(n_threads));
+    let stop = Arc::new(AtomicBool::new(false));
+    let decision = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    // The run must cover the snapshot schedule, or trailing windows never
+    // close.
+    let run_for = match cfg.snapshots {
+        Some(s) => cfg.run_for.max(Duration::from_nanos(s.runtime())),
+        None => cfg.run_for,
+    };
+    let deadline = start + run_for;
+
+    let mut handles = Vec::with_capacity(n_threads);
+    for slots in slot_groups {
+        let ctx = WorkerCtx {
+            slots,
+            barrier: Arc::clone(&barrier),
+            stop: Arc::clone(&stop),
+            decision: Arc::clone(&decision),
+            cfg: cfg.clone(),
+            start,
+            deadline,
+            timeline: timeline.clone(),
+        };
+        handles.push(std::thread::spawn(move || worker_loop(ctx)));
     }
 
     let mut shards_out: Vec<(usize, W)> = Vec::with_capacity(n);
     let mut updates = vec![0u64; n];
     let mut attempted = 0u64;
     let mut successful = 0u64;
+    let mut worker_spans = Vec::with_capacity(n_threads);
+    type WindowLog = Vec<ObsPair>;
+    let mut inlet_map: Vec<Option<WindowLog>> = (0..total_specs).map(|_| None).collect();
+    let mut outlet_map: Vec<Option<WindowLog>> = (0..total_specs).map(|_| None).collect();
     for h in handles {
         let out = h.join().expect("worker panicked");
-        updates[out.rank] = out.updates;
+        for (rank, u) in out.updates {
+            updates[rank] = u;
+        }
         attempted += out.attempted;
         successful += out.successful;
-        shards_out.push((out.rank, out.shard));
+        worker_spans.push(out.span);
+        shards_out.extend(out.shards);
+        for (cid, log) in out.inlet_logs {
+            inlet_map[cid] = Some(log);
+        }
+        for (cid, log) in out.outlet_logs {
+            outlet_map[cid] = Some(log);
+        }
     }
     shards_out.sort_by_key(|(r, _)| *r);
+    let wall_elapsed = start.elapsed();
+    let elapsed = if worker_spans.is_empty() {
+        wall_elapsed
+    } else {
+        worker_spans.iter().sum::<Duration>() / worker_spans.len() as u32
+    };
+
+    // Pair each channel's inlet- and outlet-side observation streams
+    // into SnapshotWindows (channel-major, window order). The two sides
+    // close windows independently, so pair the common prefix.
+    let mut windows = Vec::new();
+    for cid in 0..total_specs {
+        if let (Some(ins), Some(outs)) = (&inlet_map[cid], &outlet_map[cid]) {
+            for (i, o) in ins.iter().zip(outs.iter()) {
+                windows.push(SnapshotWindow {
+                    inlet_before: i.0,
+                    inlet_after: i.1,
+                    outlet_before: o.0,
+                    outlet_after: o.1,
+                });
+            }
+        }
+    }
+    let qos = ReplicateQos::from_windows(&windows);
 
     ThreadExecResult {
         shards: shards_out.into_iter().map(|(_, s)| s).collect(),
         updates,
-        elapsed: start.elapsed(),
+        elapsed,
+        wall_elapsed,
+        worker_spans,
         attempted_sends: attempted,
         successful_sends: successful,
+        threads: n_threads,
+        windows,
+        qos,
     }
 }
 
-struct WorkerOut<W> {
-    rank: usize,
-    shard: W,
-    updates: u64,
-    attempted: u64,
-    successful: u64,
+/// Wall-clock snapshot-window state for one worker: opens and closes the
+/// schedule's windows over every endpoint the worker hosts.
+struct WindowState {
+    schedule: SnapshotSchedule,
+    next: usize,
+    open: bool,
+    /// Union of scenario phases seen while the current window is open
+    /// (folds mid-window transitions into the tag, like the engine's
+    /// `window_phase`).
+    phase_accum: ScenarioPhase,
+    inlet_open: Vec<QosObservation>,
+    outlet_open: Vec<QosObservation>,
+    inlet_windows: Vec<Vec<ObsPair>>,
+    outlet_windows: Vec<Vec<ObsPair>>,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker<W>(
-    rank: usize,
-    mut shard: W,
-    inlets: Vec<ThreadInlet<Envelope<W::Msg>>>,
-    outlets: Vec<ThreadOutlet<Envelope<W::Msg>>>,
-    barrier: Arc<Barrier>,
-    stop: Arc<AtomicBool>,
-    decision: Arc<AtomicBool>,
-    cfg: ThreadExecConfig,
-    deadline: Instant,
-) -> WorkerOut<W>
+impl WindowState {
+    fn new(schedule: SnapshotSchedule, n_inlets: usize, n_outlets: usize) -> Self {
+        Self {
+            schedule,
+            next: 0,
+            open: false,
+            phase_accum: ScenarioPhase::QUIESCENT,
+            inlet_open: Vec::new(),
+            outlet_open: Vec::new(),
+            inlet_windows: (0..n_inlets).map(|_| Vec::new()).collect(),
+            outlet_windows: (0..n_outlets).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+/// One observation per endpoint the worker hosts (inlets, then outlets),
+/// each bracketing its channel's shared counter tranche with the owning
+/// shard's update count.
+fn capture_endpoints<W: ShardWorkload>(
+    slots: &[ShardSlot<W>],
+    t: Nanos,
+    phase: ScenarioPhase,
+) -> (Vec<QosObservation>, Vec<QosObservation>) {
+    let mut ins = Vec::new();
+    let mut outs = Vec::new();
+    for s in slots {
+        for (_, inlet) in &s.inlets {
+            ins.push(QosObservation::capture_phased(
+                inlet.stats().tranche(),
+                s.updates,
+                t,
+                phase,
+            ));
+        }
+        for (_, outlet) in &s.outlets {
+            outs.push(QosObservation::capture_phased(
+                outlet.stats().tranche(),
+                s.updates,
+                t,
+                phase,
+            ));
+        }
+    }
+    (ins, outs)
+}
+
+/// Advance the window state machine to wall offset `t`: open a due
+/// window, close an elapsed one (possibly several in a long gap —
+/// degenerate zero-width windows are well-defined, the metric layer
+/// saturates). Open observations carry the instantaneous phase, closing
+/// observations the union over the window, as in the engine.
+fn tick_windows<W: ShardWorkload>(
+    ws: &mut WindowState,
+    slots: &[ShardSlot<W>],
+    t: Nanos,
+    phase: ScenarioPhase,
+) {
+    if ws.open {
+        ws.phase_accum = ws.phase_accum.union(phase);
+    }
+    while ws.next < ws.schedule.count {
+        if !ws.open {
+            if t < ws.schedule.open_at(ws.next) {
+                return;
+            }
+            let (ins, outs) = capture_endpoints(slots, t, phase);
+            ws.inlet_open = ins;
+            ws.outlet_open = outs;
+            ws.open = true;
+            ws.phase_accum = phase;
+        }
+        if t < ws.schedule.close_at(ws.next) {
+            return;
+        }
+        let close_phase = ws.phase_accum.union(phase);
+        let (ins, outs) = capture_endpoints(slots, t, close_phase);
+        for (i, obs) in ins.into_iter().enumerate() {
+            ws.inlet_windows[i].push((ws.inlet_open[i], obs));
+        }
+        for (i, obs) in outs.into_iter().enumerate() {
+            ws.outlet_windows[i].push((ws.outlet_open[i], obs));
+        }
+        ws.open = false;
+        ws.next += 1;
+    }
+}
+
+fn worker_loop<W>(mut ctx: WorkerCtx<W>) -> WorkerOut<W>
 where
     W: ShardWorkload,
 {
-    let mut rng = Xoshiro256::new(cfg.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9));
-    let mut spinner = WorkUnitSpinner::new(cfg.seed as u32 ^ rank as u32);
-    let mut touch: Vec<TouchCounter> = vec![TouchCounter::default(); inlets.len()];
-    let mut updates = 0u64;
+    let cfg = ctx.cfg.clone();
+    let communicate = cfg.mode.communicates();
     let mut chunk_start = Instant::now();
     let mut next_fixed = Instant::now() + cfg.fixed_epoch;
-    let communicate = cfg.mode.communicates();
-    // Both scratch buffers are reused across channels and iterations
-    // (absorb drains `pull_scratch`; `env_scratch` is drained below), so
-    // the pull path allocates nothing in steady state — the real-thread
-    // counterpart of the DES engine's scratch buffer.
+    let mut windows = cfg.snapshots.map(|s| {
+        let n_in: usize = ctx.slots.iter().map(|sl| sl.inlets.len()).sum();
+        let n_out: usize = ctx.slots.iter().map(|sl| sl.outlets.len()).sum();
+        WindowState::new(s, n_in, n_out)
+    });
+    // Reused across channels, shards, and passes: the pull path
+    // allocates nothing in steady state (the real-thread counterpart of
+    // the DES engine's scratch buffer).
     let mut pull_scratch: Vec<W::Msg> = Vec::new();
     let mut env_scratch: Vec<Envelope<W::Msg>> = Vec::new();
 
+    let first_step = Instant::now();
+    let mut last_step = first_step;
+    // Phase cache: the timeline's compiled checkpoints (onset, expiry,
+    // flap toggle) are the only instants the active set can change, so
+    // the per-pass phase lookup is a cached read between them.
+    let mut phase_cache = ScenarioPhase::QUIESCENT;
+    let mut next_ckpt: Option<Nanos> = Some(0);
+
     loop {
-        // Pull/absorb phase.
-        if communicate {
-            for (ch, outlet) in outlets.iter().enumerate() {
-                env_scratch.clear();
-                outlet.pull_all_into(&mut env_scratch);
-                if env_scratch.is_empty() {
-                    continue;
+        let t_ns = ctx.start.elapsed().as_nanos() as Nanos;
+        let phase = match &ctx.timeline {
+            None => ScenarioPhase::QUIESCENT,
+            Some(tl) => {
+                if next_ckpt.is_some_and(|c| t_ns >= c) {
+                    phase_cache = tl.phase_at(t_ns);
+                    next_ckpt = tl.next_checkpoint_after(t_ns);
                 }
-                let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
-                touch[ch].on_receive(max_touch);
-                pull_scratch.clear();
-                pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
-                shard.absorb(ch, &mut pull_scratch);
+                phase_cache
             }
+        };
+        if let Some(ws) = windows.as_mut() {
+            tick_windows(ws, &ctx.slots, t_ns, phase);
         }
 
-        // Compute phase (real synthetic work + real algorithm step).
-        if cfg.added_work_units > 0 {
-            std::hint::black_box(spinner.spin(cfg.added_work_units));
-        }
-        let outputs = shard.step(&mut rng);
-
-        // Send phase.
-        if communicate {
-            for (ch, payload) in outputs {
-                inlets[ch].put(Envelope {
-                    touch: touch[ch].outgoing(),
-                    payload,
-                });
+        // One pass: every hosted shard advances exactly one update
+        // (round-robin multiplexing).
+        for slot in &mut ctx.slots {
+            // ---- Pull/absorb phase. ----
+            if communicate {
+                for ch in 0..slot.outlets.len() {
+                    env_scratch.clear();
+                    slot.outlets[ch].1.pull_all_into(&mut env_scratch);
+                    if env_scratch.is_empty() {
+                        continue;
+                    }
+                    let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
+                    slot.touch[ch].on_receive(max_touch);
+                    // Publish the advanced counter on the reciprocal
+                    // outgoing channel's stats so window tranches carry
+                    // it (the engine does the same via `set_touches`).
+                    slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
+                    pull_scratch.clear();
+                    pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
+                    slot.shard.absorb(ch, &mut pull_scratch);
+                }
             }
-        }
-        updates += 1;
 
-        // Termination: any thread past the deadline raises the stop flag.
-        if Instant::now() >= deadline {
-            stop.store(true, Ordering::SeqCst);
+            // ---- Compute phase (real synthetic work + real step). ----
+            let mut work = cfg.added_work_units;
+            if let Some(tl) = &ctx.timeline {
+                let f = tl.speed_factor(t_ns, slot.rank);
+                if f > 1.0 {
+                    work += ((f - 1.0) * cfg.degrade_spin_units as f64) as u64;
+                }
+            }
+            if work > 0 {
+                std::hint::black_box(slot.spinner.spin(work));
+            }
+            let outputs = slot.shard.step(&mut slot.rng);
+
+            // ---- Send phase. ----
+            if communicate {
+                for (ch, payload) in outputs {
+                    if let Some(tl) = &ctx.timeline {
+                        let peer = slot.peers[ch];
+                        let p = tl.drop_prob(t_ns, slot.rank, peer);
+                        if p > 0.0 && slot.rng.chance(p) {
+                            // Forced congestion/partition failure: counts
+                            // as an attempted-but-dropped send.
+                            slot.inlets[ch].1.stats().on_send_attempt(false);
+                            continue;
+                        }
+                        let lf = tl.latency_factor(t_ns, slot.rank, peer);
+                        if lf > 1.0 {
+                            // Latency inflation as pre-send spin, scaled
+                            // down so a 25× storm delays rather than
+                            // freezes a send (~(lf-1)/64 of the degrade
+                            // budget per send, capped at 8× worth).
+                            let units = ((lf - 1.0).min(8.0)
+                                * (cfg.degrade_spin_units / 64).max(1) as f64)
+                                as u64;
+                            std::hint::black_box(slot.spinner.spin(units));
+                        }
+                    }
+                    slot.inlets[ch].1.put(Envelope {
+                        touch: slot.touch[ch].outgoing(),
+                        payload,
+                    });
+                }
+            }
+            slot.updates += 1;
+        }
+        last_step = Instant::now();
+
+        // Termination: any worker past the deadline raises the stop flag.
+        if last_step >= ctx.deadline {
+            ctx.stop.store(true, Ordering::SeqCst);
         }
 
         if cfg.mode.uses_barriers() {
-            // Deadlock-free exit protocol. A thread enters the barrier
-            // when its mode calls for one OR when stop has been raised, so
-            // all threads execute the same barrier sequence. Whether to
-            // exit is decided by consensus: the barrier leader latches the
-            // stop flag between two waits, so every thread observes the
-            // identical decision for this generation. (A plain post-wait
-            // `stop` check races: one thread can raise `stop` after its
-            // release and re-enter the next barrier while a peer, reading
-            // the freshly-raised flag after the *previous* release, exits
-            // — deadlocking the re-entrant thread.)
-            let stopping = stop.load(Ordering::SeqCst);
+            // Deadlock-free exit protocol. A worker enters the barrier
+            // when its mode calls for one OR when stop has been raised,
+            // so all workers execute the same barrier sequence. Whether
+            // to exit is decided by consensus: the barrier leader latches
+            // the stop flag between two waits, so every worker observes
+            // the identical decision for this generation. (A plain
+            // post-wait `stop` check races: one worker can raise `stop`
+            // after its release and re-enter the next barrier while a
+            // peer, reading the freshly-raised flag after the *previous*
+            // release, exits — deadlocking the re-entrant worker.)
+            let stopping = ctx.stop.load(Ordering::SeqCst);
             let due = match cfg.mode {
                 AsyncMode::Sync => true,
                 AsyncMode::RollingBarrier => chunk_start.elapsed() >= cfg.rolling_chunk,
@@ -255,43 +629,87 @@ where
                 _ => unreachable!(),
             };
             if due || stopping {
-                let res = barrier.wait();
+                let res = ctx.barrier.wait();
                 if res.is_leader() {
-                    decision.store(stop.load(Ordering::SeqCst), Ordering::SeqCst);
+                    ctx.decision
+                        .store(ctx.stop.load(Ordering::SeqCst), Ordering::SeqCst);
                 }
-                barrier.wait();
+                ctx.barrier.wait();
                 chunk_start = Instant::now();
                 if cfg.mode == AsyncMode::FixedBarrier {
                     next_fixed += cfg.fixed_epoch;
                 }
-                if decision.load(Ordering::SeqCst) {
+                if ctx.decision.load(Ordering::SeqCst) {
                     break;
                 }
             }
-        } else if stop.load(Ordering::SeqCst) {
+        } else if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
     }
 
-    let mut totals = crate::conduit::CounterTranche::default();
-    for inlet in &inlets {
-        totals.add(&inlet.stats().tranche());
+    // Final tick: the deadline coincides with the last window's close
+    // time whenever run_for was auto-extended to the schedule runtime,
+    // and in-loop ticks happen before the deadline check raises stop —
+    // so close anything still due rather than silently dropping the
+    // schedule's tail window. Stamped at no earlier than the scheduled
+    // end of run: a worker that breaks on the stop consensus a few µs
+    // before the deadline must close it too.
+    if let Some(ws) = windows.as_mut() {
+        let end_ns =
+            ctx.deadline.saturating_duration_since(ctx.start).as_nanos() as Nanos;
+        let t_ns = (ctx.start.elapsed().as_nanos() as Nanos).max(end_ns);
+        let phase = ctx
+            .timeline
+            .as_ref()
+            .map(|tl| tl.phase_at(t_ns))
+            .unwrap_or(phase_cache);
+        tick_windows(ws, &ctx.slots, t_ns, phase);
     }
+
+    let mut totals = CounterTranche::default();
+    for slot in &ctx.slots {
+        for (_, inlet) in &slot.inlets {
+            totals.add(&inlet.stats().tranche());
+        }
+    }
+    let (inlet_logs, outlet_logs) = match windows {
+        Some(ws) => {
+            let mut in_iter = ws.inlet_windows.into_iter();
+            let mut out_iter = ws.outlet_windows.into_iter();
+            let mut ins: EndpointLog = Vec::new();
+            let mut outs: EndpointLog = Vec::new();
+            for slot in &ctx.slots {
+                for (cid, _) in &slot.inlets {
+                    ins.push((*cid, in_iter.next().expect("inlet log")));
+                }
+                for (cid, _) in &slot.outlets {
+                    outs.push((*cid, out_iter.next().expect("outlet log")));
+                }
+            }
+            (ins, outs)
+        }
+        None => (Vec::new(), Vec::new()),
+    };
+    let span = last_step.duration_since(first_step);
     WorkerOut {
-        rank,
-        shard,
-        updates,
+        updates: ctx.slots.iter().map(|s| (s.rank, s.updates)).collect(),
+        shards: ctx.slots.into_iter().map(|s| (s.rank, s.shard)).collect(),
         attempted: totals.attempted_sends,
         successful: totals.successful_sends,
+        span,
+        inlet_logs,
+        outlet_logs,
     }
 }
-
-use crate::workloads::reciprocal_layer;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{FaultKind, NodeFault};
     use crate::net::{PlacementKind, Topology};
+    use crate::qos::MetricName;
+    use crate::util::MILLI;
     use crate::workloads::{GcConfig, GraphColoringShard};
 
     fn gc_shards(n: usize, simels: usize, seed: u64) -> (Topology, Vec<GraphColoringShard>) {
@@ -431,5 +849,176 @@ mod tests {
             crate::workloads::graph_coloring::global_conflicts(&topo, &result.shards);
         let random_baseline = 128 * 2 / 3;
         assert!(conflicts < random_baseline + 10, "conflicts={conflicts}");
+    }
+
+    #[test]
+    fn resolve_threads_clamps_and_caps() {
+        // Default: one thread per shard.
+        assert_eq!(resolve_threads(None, None, 8), 8);
+        // Requested count clamps to the shard count.
+        assert_eq!(resolve_threads(Some(64), None, 8), 8);
+        assert_eq!(resolve_threads(Some(0), None, 8), 1);
+        // Env cap binds below the request, never above the shard count.
+        assert_eq!(resolve_threads(Some(4), Some(2), 256), 2);
+        assert_eq!(resolve_threads(None, Some(2), 256), 2);
+        assert_eq!(resolve_threads(Some(2), Some(4), 256), 2);
+        // A zero cap is ignored.
+        assert_eq!(resolve_threads(Some(4), Some(0), 256), 4);
+        assert_eq!(resolve_threads(None, None, 0), 1);
+    }
+
+    #[test]
+    fn oversubscribed_multiplexing_steps_every_shard() {
+        // 10 shards on 2 hardware threads: round-robin passes must
+        // advance every shard, in both barriered and best-effort modes.
+        for mode in [AsyncMode::Sync, AsyncMode::BestEffort] {
+            let (_, shards) = gc_shards(10, 4, 8);
+            let result = run_threads(
+                ThreadExecConfig {
+                    mode,
+                    threads: Some(2),
+                    run_for: Duration::from_millis(80),
+                    ..Default::default()
+                },
+                shards,
+            );
+            assert!(result.threads <= 2);
+            assert_eq!(result.updates.len(), 10);
+            assert!(
+                result.updates.iter().all(|&u| u > 0),
+                "{mode:?}: {:?}",
+                result.updates
+            );
+            if mode == AsyncMode::Sync {
+                // Per-pass barriers keep every shard's count within one
+                // pass of every other, whatever thread hosts it.
+                let lo = result.updates.iter().min().unwrap();
+                let hi = result.updates.iter().max().unwrap();
+                assert!(hi - lo <= 1, "lockstep: {:?}", result.updates);
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_qos_produces_paper_metrics() {
+        let (_, shards) = gc_shards(4, 4, 9);
+        let schedule = SnapshotSchedule::compressed(20 * MILLI, 30 * MILLI, 15 * MILLI, 3);
+        let result = run_threads(
+            ThreadExecConfig {
+                run_for: Duration::from_millis(120),
+                snapshots: Some(schedule),
+                ..Default::default()
+            },
+            shards,
+        );
+        // 4 shards × 4 channels × 3 windows, minus any window a worker
+        // missed entirely (tolerance: at least one full round).
+        assert!(!result.windows.is_empty());
+        assert!(result.windows.len() <= 16 * 3);
+        assert_eq!(result.qos.snapshots.len(), result.windows.len());
+        assert_eq!(result.qos.phases.len(), result.windows.len());
+        for metric in MetricName::ALL {
+            let vals = result.qos.values(metric);
+            assert_eq!(vals.len(), result.windows.len());
+            assert!(vals.iter().all(|v| v.is_finite()), "{metric:?}");
+        }
+        // Real time elapses and real updates complete inside windows.
+        assert!(result.qos.values(MetricName::SimstepPeriod).iter().any(|&v| v > 0.0));
+        // No scenario => every window quiescent.
+        assert!(result.qos.phases.iter().all(|p| p.is_quiescent()));
+    }
+
+    #[test]
+    fn tail_window_closes_when_run_ends_at_schedule_runtime() {
+        // run_for shorter than the schedule => auto-extended to exactly
+        // the schedule runtime, making the deadline coincide with the
+        // last window's close time. The workers' post-loop tick (stamped
+        // at the scheduled end) must still close every window.
+        let (_, shards) = gc_shards(2, 4, 12);
+        let n_channels: usize = shards.iter().map(|s| s.channels().len()).sum();
+        let schedule = SnapshotSchedule::compressed(10 * MILLI, 20 * MILLI, 10 * MILLI, 3);
+        let result = run_threads(
+            ThreadExecConfig {
+                run_for: Duration::from_millis(1),
+                snapshots: Some(schedule),
+                ..Default::default()
+            },
+            shards,
+        );
+        assert_eq!(
+            result.windows.len(),
+            n_channels * schedule.count,
+            "every window of every channel must close, tail included"
+        );
+    }
+
+    #[test]
+    fn per_worker_spans_tighter_than_wall() {
+        let (_, shards) = gc_shards(2, 4, 10);
+        let result = run_threads(
+            ThreadExecConfig {
+                run_for: Duration::from_millis(60),
+                ..Default::default()
+            },
+            shards,
+        );
+        assert_eq!(result.worker_spans.len(), result.threads);
+        // Spans exclude spawn/join overhead, so the mean span can never
+        // exceed the spawn-to-join wall time.
+        assert!(result.elapsed <= result.wall_elapsed);
+        assert!(result.elapsed > Duration::ZERO);
+    }
+
+    #[test]
+    fn degrade_scenario_tags_windows_and_slows_shard() {
+        // Shard 1 degraded from 25 ms to 95 ms with heavy extra spin and
+        // a 60% link drop; windows 0–1 overlap the fault, window 2 is
+        // past it.
+        let scenario = FaultScenario::default().with(
+            25 * MILLI,
+            70 * MILLI,
+            FaultKind::DegradeNode {
+                node: 1,
+                fault: NodeFault {
+                    speed_factor: 16.0,
+                    jitter_sigma: 0.0,
+                    stall_mean_ns: 0.0,
+                    latency_factor: 2.0,
+                    extra_drop_prob: 0.6,
+                },
+            },
+        );
+        let (_, shards) = gc_shards(4, 4, 11);
+        let result = run_threads(
+            ThreadExecConfig {
+                run_for: Duration::from_millis(140),
+                snapshots: Some(SnapshotSchedule::compressed(
+                    30 * MILLI,
+                    40 * MILLI,
+                    20 * MILLI,
+                    3,
+                )),
+                scenario,
+                degrade_spin_units: 20_000,
+                ..Default::default()
+            },
+            shards,
+        );
+        let active = result.qos.values_where(MetricName::SimstepPeriod, |p| !p.is_quiescent());
+        let quiet = result.qos.values_where(MetricName::SimstepPeriod, |p| p.is_quiescent());
+        assert!(!active.is_empty(), "fault overlapped no window");
+        assert!(!quiet.is_empty(), "no quiescent window");
+        // Forced drops on links touching shard 1 must register as
+        // delivery failures in fault-tagged windows.
+        let fail_active =
+            result.qos.mean_where(MetricName::DeliveryFailureRate, |p| !p.is_quiescent());
+        let fail_quiet =
+            result.qos.mean_where(MetricName::DeliveryFailureRate, |p| p.is_quiescent());
+        assert!(
+            fail_active > fail_quiet,
+            "failure attribution: active {fail_active} vs quiet {fail_quiet}"
+        );
+        // Whole-run accounting sees the forced drops too.
+        assert!(result.overall_failure_rate() > 0.0);
     }
 }

@@ -36,9 +36,11 @@ pub struct QosObservation {
     pub update_count: u64,
     pub wall_ns: Nanos,
     /// Scenario faults in force when the observation was captured
-    /// (quiescent for static-profile runs and the real-thread executor).
-    /// Window-closing observations carry the union over the whole window,
-    /// so faults that started *and* ended inside it are not lost.
+    /// (quiescent for static-profile runs; the real-thread executor tags
+    /// its observations from the compiled wall-clock timeline the same
+    /// way the DES tags from the overlay). Window-closing observations
+    /// carry the union over the whole window, so faults that started
+    /// *and* ended inside it are not lost.
     pub phase: ScenarioPhase,
 }
 

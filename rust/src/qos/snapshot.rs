@@ -11,7 +11,7 @@
 use super::metrics::{MetricName, QosMetrics, QosObservation};
 use crate::faults::ScenarioPhase;
 use crate::stats::descriptive::{mean, median};
-use crate::util::{Nanos, SECOND};
+use crate::util::{Nanos, MILLI, SECOND};
 
 /// Schedule of snapshot windows over a replicate.
 #[derive(Clone, Copy, Debug)]
@@ -46,6 +46,20 @@ impl SnapshotSchedule {
             every,
             window,
             count,
+        }
+    }
+
+    /// Wall-clock smoke schedule for real-thread (`exec/`) runs: four
+    /// 20 ms windows every 40 ms starting at 30 ms (~170 ms of runtime).
+    /// Windows are kept wide so a worker descheduled by the OS for a
+    /// timeslice still lands many updates inside each one on a 2-core
+    /// CI box.
+    pub fn hardware_smoke() -> Self {
+        Self {
+            first_at: 30 * MILLI,
+            every: 40 * MILLI,
+            window: 20 * MILLI,
+            count: 4,
         }
     }
 
@@ -189,6 +203,14 @@ mod tests {
         assert_eq!(s.open_at(4), 300 * SECOND);
         assert_eq!(s.runtime(), 301 * SECOND);
         assert_eq!(s.count, 5);
+    }
+
+    #[test]
+    fn hardware_smoke_schedule_fits_a_smoke_run() {
+        let s = SnapshotSchedule::hardware_smoke();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.open_at(0), 30 * MILLI);
+        assert_eq!(s.runtime(), 170 * MILLI);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::net::PlacementKind;
 use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::{Nanos, MICRO};
-use crate::workloads::{ChannelSpec, ShardWorkload};
+use crate::workloads::{ChannelSpec, ShardWorkload, SpecIndex};
 
 /// Which transport backs inter-CPU channels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -347,33 +347,13 @@ impl<W: ShardWorkload> Engine<W> {
         let total_specs: usize = specs.iter().map(|s| s.len()).sum();
 
         // Flat sorted spec index replacing the former per-process
-        // HashMaps: one `(peer, layer, spec idx)` entry per directed
-        // spec in a single arena, grouped by source process (CSR-style
-        // offsets) with each group sorted. Reciprocal lookup is a
-        // `partition_point` lower bound — the smallest spec index of a
-        // (peer, layer) run, i.e. the same first-match semantics as the
-        // `or_insert` build it replaces — with no per-process
-        // allocations and no hashing, which at 1024–4096 procs made
-        // construction the dominant cost of short-run sweep cells.
-        let mut spec_offsets: Vec<usize> = Vec::with_capacity(specs.len() + 1);
-        let mut spec_flat: Vec<(usize, usize, usize)> = Vec::with_capacity(total_specs);
-        spec_offsets.push(0);
-        for specs_p in &specs {
-            let base = spec_flat.len();
-            for (i, s) in specs_p.iter().enumerate() {
-                spec_flat.push((s.peer, s.layer, i));
-            }
-            spec_flat[base..].sort_unstable();
-            spec_offsets.push(spec_flat.len());
-        }
-        let spec_lookup = |proc: usize, peer: usize, layer: usize| -> Option<usize> {
-            let group = &spec_flat[spec_offsets[proc]..spec_offsets[proc + 1]];
-            let at = group.partition_point(|&(p, l, _)| (p, l) < (peer, layer));
-            match group.get(at) {
-                Some(&(p, l, i)) if p == peer && l == layer => Some(i),
-                _ => None,
-            }
-        };
+        // HashMaps — see [`SpecIndex`] (shared with the real-thread
+        // executor's wiring): `partition_point` lower-bound lookup with
+        // the same first-match semantics as the `or_insert` build it
+        // replaces, no per-process allocations, no hashing, which at
+        // 1024–4096 procs made construction the dominant cost of
+        // short-run sweep cells.
+        let spec_index = SpecIndex::build(&specs);
 
         // Create directed channels and index them, sized in one pass:
         // the channel count is exactly the spec count, and each source's
@@ -386,7 +366,8 @@ impl<W: ShardWorkload> Engine<W> {
         for (src, specs_p) in specs.iter().enumerate() {
             for (src_ch, spec) in specs_p.iter().enumerate() {
                 // Find the reciprocal channel index on the destination.
-                let dst_ch = spec_lookup(spec.peer, src, reciprocal_layer(spec.layer))
+                let dst_ch = spec_index
+                    .lookup(spec.peer, src, reciprocal_layer(spec.layer))
                     .unwrap_or_else(|| {
                         panic!(
                             "no reciprocal channel: src={src} spec={spec:?}"

@@ -1,0 +1,137 @@
+//! Shared JSON emission for the self-contained bench harnesses.
+//!
+//! Criterion is unavailable offline, so benches are plain `main()`s that
+//! print as they go and optionally serialize their measurements to a
+//! `BENCH_*.json` at the repository root for `python/bench_diff.py`.
+//! The serialization lives here so the gate's parser has exactly one
+//! producer format to agree with:
+//!
+//! ```json
+//! {"bench": "<name>", "schema": 1,
+//!  "results": [{"name", "unit", "mean", "median", "p95"}, ...]}
+//! ```
+//!
+//! Printing stays at the call sites (each bench has its own layout);
+//! only entry storage and serialization are shared.
+
+use std::path::PathBuf;
+
+/// One recorded measurement: summary statistics over per-op samples.
+pub struct BenchEntry {
+    pub name: String,
+    pub unit: &'static str,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+/// Accumulates [`BenchEntry`]s and serializes them to the repo root.
+#[derive(Default)]
+pub struct BenchJson {
+    entries: Vec<BenchEntry>,
+}
+
+impl BenchJson {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, unit: &'static str, mean: f64, median: f64, p95: f64) {
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            unit,
+            mean,
+            median,
+            p95,
+        });
+    }
+
+    pub fn entries(&self) -> &[BenchEntry] {
+        &self.entries
+    }
+
+    fn render(&self, bench: &str) -> String {
+        let mut out = format!(
+            "{{\n  \"bench\": {},\n  \"schema\": 1,\n  \"results\": [\n",
+            json_string(bench)
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"unit\": \"{}\", \"mean\": {}, \"median\": {}, \"p95\": {}}}{sep}\n",
+                json_string(&e.name),
+                e.unit,
+                json_number(e.mean),
+                json_number(e.median),
+                json_number(e.p95),
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Serialize every entry to `<repo root>/<file>` (the root is one
+    /// level above the crate manifest) under bench name `bench`.
+    pub fn write(&self, bench: &str, file: &str) -> std::io::Result<PathBuf> {
+        let root = std::env::var("CARGO_MANIFEST_DIR")
+            .map(|d| PathBuf::from(d).join(".."))
+            .unwrap_or_else(|_| PathBuf::from("."));
+        let path = root.join(file);
+        std::fs::write(&path, self.render(bench))?;
+        Ok(path)
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_number(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_strings_and_nan() {
+        assert_eq!(json_string("plain"), "\"plain\"");
+        assert_eq!(json_string("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_string("x\ny"), "\"x\\u000ay\"");
+        assert_eq!(json_number(1.5), "1.500");
+        assert_eq!(json_number(f64::NAN), "null");
+        assert_eq!(json_number(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn serializes_the_gate_schema() {
+        let mut j = BenchJson::new();
+        j.push("thread QoS period (256 shards, mode 3)", "ns", 1.0, 2.0, 3.0);
+        j.push("plain", "rate", 0.5, 0.25, 0.75);
+        assert_eq!(j.entries().len(), 2);
+        let out = j.render("t");
+        assert!(out.starts_with("{\n  \"bench\": \"t\",\n  \"schema\": 1,"));
+        assert!(out.contains("\"median\": 2.000"));
+        assert!(out.contains("\"unit\": \"rate\""));
+        // Entries comma-separated, no trailing comma on the last one.
+        assert!(out.contains("\"p95\": 3.000},\n"));
+        assert!(out.contains("\"p95\": 0.750}\n"));
+        assert!(out.ends_with("  ]\n}\n"));
+    }
+}

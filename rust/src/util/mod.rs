@@ -1,6 +1,7 @@
 //! Foundation utilities: PRNGs, ring buffers, CSV emission, and the
 //! scoped-thread parallel map behind sweep fan-out.
 
+pub mod benchjson;
 pub mod csv;
 pub mod parallel;
 pub mod ring;

@@ -91,6 +91,103 @@ pub fn reciprocal_layer(layer: usize) -> usize {
     }
 }
 
+/// Sorted flat CSR-style index over per-shard channel specs, shared by
+/// the executors' reciprocal-channel wiring (`Engine::new` and
+/// `exec::run_threads`): one `(peer, layer, spec idx)` entry per
+/// directed spec in a single arena, grouped by source shard with each
+/// group sorted, so a reciprocal lookup is a `partition_point` lower
+/// bound — first-match semantics, no per-shard allocations, no hashing
+/// (the per-shard `HashMap`s it replaced made construction the dominant
+/// cost of short-run sweep cells at 1024–4096 procs).
+pub struct SpecIndex {
+    offsets: Vec<usize>,
+    flat: Vec<(usize, usize, usize)>,
+}
+
+impl SpecIndex {
+    pub fn build(specs: &[Vec<ChannelSpec>]) -> Self {
+        let total: usize = specs.iter().map(|s| s.len()).sum();
+        let mut offsets: Vec<usize> = Vec::with_capacity(specs.len() + 1);
+        let mut flat: Vec<(usize, usize, usize)> = Vec::with_capacity(total);
+        offsets.push(0);
+        for specs_p in specs {
+            let base = flat.len();
+            for (i, s) in specs_p.iter().enumerate() {
+                flat.push((s.peer, s.layer, i));
+            }
+            flat[base..].sort_unstable();
+            offsets.push(flat.len());
+        }
+        Self { offsets, flat }
+    }
+
+    /// Smallest spec index of `shard`'s `(peer, layer)` run, if any —
+    /// the same first-match semantics as a `HashMap` `or_insert` build
+    /// or a forward `position()` scan.
+    pub fn lookup(&self, shard: usize, peer: usize, layer: usize) -> Option<usize> {
+        let group = &self.flat[self.offsets[shard]..self.offsets[shard + 1]];
+        let at = group.partition_point(|&(p, l, _)| (p, l) < (peer, layer));
+        match group.get(at) {
+            Some(&(p, l, i)) if p == peer && l == layer => Some(i),
+            _ => None,
+        }
+    }
+
+    /// Globally unique id of `shard`'s channel `ch`: the flattened
+    /// `(shard, ch)` position.
+    pub fn flat_id(&self, shard: usize, ch: usize) -> usize {
+        self.offsets[shard] + ch
+    }
+}
+
+#[cfg(test)]
+mod spec_index_tests {
+    use super::*;
+
+    #[test]
+    fn lookup_matches_forward_position_scan() {
+        // Duplicated (peer, layer) pairs must resolve to the FIRST spec
+        // index, exactly like the scan the index replaced.
+        let specs = vec![
+            vec![
+                ChannelSpec { peer: 1, layer: 0 },
+                ChannelSpec { peer: 1, layer: 2 },
+                ChannelSpec { peer: 1, layer: 0 },
+                ChannelSpec { peer: 0, layer: 3 },
+            ],
+            vec![ChannelSpec { peer: 0, layer: 2 }],
+            vec![],
+        ];
+        let idx = SpecIndex::build(&specs);
+        for (shard, specs_p) in specs.iter().enumerate() {
+            for &ChannelSpec { peer, layer } in specs_p {
+                let want = specs_p
+                    .iter()
+                    .position(|s| s.peer == peer && s.layer == layer);
+                assert_eq!(idx.lookup(shard, peer, layer), want);
+            }
+        }
+        assert_eq!(idx.lookup(0, 2, 0), None);
+        assert_eq!(idx.lookup(2, 0, 0), None);
+        assert_eq!(idx.lookup(1, 0, 3), None, "layer must match exactly");
+    }
+
+    #[test]
+    fn flat_ids_are_globally_unique_and_contiguous() {
+        let specs = vec![
+            vec![ChannelSpec { peer: 1, layer: 0 }, ChannelSpec { peer: 1, layer: 2 }],
+            vec![ChannelSpec { peer: 0, layer: 2 }],
+        ];
+        let idx = SpecIndex::build(&specs);
+        let ids: Vec<usize> = specs
+            .iter()
+            .enumerate()
+            .flat_map(|(p, sp)| (0..sp.len()).map(move |c| idx.flat_id(p, c)))
+            .collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+}
+
 #[cfg(test)]
 mod layer_tests {
     use super::*;
