@@ -6,8 +6,9 @@ Usage:
                                  [--threshold 0.25] [--ab-margin 0.10]
                                  [--release-margin 0.10]
                                  [--thread-qos THREAD_QOS.json]
+                                 [--churn-csv FAULT_SCENARIOS.csv]
 
-Four independent checks:
+Six independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -38,6 +39,17 @@ Four independent checks:
    on magnitude (>25% swings are routine on shared runners), so the check
    fails only on a missing or malformed section, and the printed medians
    document the trajectory in the CI log.
+
+5. **Checkpoint section** (always runs, report-only): ``checkpoint …``
+   entries in CURRENT (snapshot size, serialize, restore at 256 procs)
+   are printed and shape-checked (finite non-negative medians). Absent
+   entries are noted, never failed — older baselines predate the cells —
+   and values never gate (tooling path, not a hot path).
+
+6. **Churn section** (with ``--churn-csv``): the ``bench_fault_scenarios
+   --churn`` CSV must contain ``leave_join_storm`` rows both inside and
+   outside churn phases (phase_bits != 0 and == 0); steady vs churn-phase
+   median delivery failure is printed, report-only.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -159,6 +171,63 @@ def thread_qos_check(path):
     return failures
 
 
+def checkpoint_check(cur):
+    """Shape check of the report-only 'checkpoint' section in CURRENT."""
+    failures = []
+    rows = sorted(
+        (e for name, e in cur.items() if name.startswith("checkpoint")),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        print("  [ckpt]     no checkpoint entries (older bench JSON?) — skipped")
+        return failures
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        print(f"  [ckpt]     {e['name']}: median {m} {unit} (report-only)")
+        if not well_formed:
+            failures.append(f"malformed checkpoint entry {e['name']!r}")
+    return failures
+
+
+def churn_check(path):
+    """Presence check of churn-phase attribution rows in the scenario CSV."""
+    import csv
+
+    failures = []
+    try:
+        with open(path, newline="") as f:
+            rows = [r for r in csv.DictReader(f) if r.get("scenario") == "leave_join_storm"]
+    except OSError as e:
+        return [f"cannot read churn CSV {path}: {e}"]
+    if not rows:
+        return [f"no leave_join_storm rows in {path}"]
+
+    def fails(rs):
+        vals = sorted(float(r["delivery_failure_rate"]) for r in rs)
+        return vals[len(vals) // 2] if vals else float("nan")
+
+    churn = [r for r in rows if int(r["phase_bits"], 16) != 0]
+    steady = [r for r in rows if int(r["phase_bits"], 16) == 0]
+    print(
+        f"  [churn]    {len(rows)} leave_join_storm windows: "
+        f"{len(churn)} churn-tagged (median fail {fails(churn):.4f}), "
+        f"{len(steady)} steady (median fail {fails(steady):.4f}) (report-only)"
+    )
+    if not churn:
+        failures.append("no churn-phase-tagged windows — phase attribution broken?")
+    if not steady:
+        failures.append("no steady windows — schedule never leaves the churn phase?")
+    return failures
+
+
 def gated(name, unit):
     if unit != "ns" or any(name.startswith(p) for p in UNGATED_PREFIXES):
         return False
@@ -223,6 +292,12 @@ def main():
         help="bench_thread_qos JSON whose 'thread QoS' section must be "
         "present and well-formed (report-only: values never gate)",
     )
+    ap.add_argument(
+        "--churn-csv",
+        help="bench_fault_scenarios --churn CSV that must contain "
+        "leave_join_storm windows inside and outside churn phases "
+        "(report-only: values never gate)",
+    )
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -253,6 +328,21 @@ def main():
             failed = True
             for f in qos_failures:
                 print(f"bench-diff: thread-QoS section check failed: {f}", file=sys.stderr)
+
+    print("== checkpoint section (report-only) ==")
+    ckpt_failures = checkpoint_check(cur)
+    if ckpt_failures:
+        failed = True
+        for f in ckpt_failures:
+            print(f"bench-diff: checkpoint section check failed: {f}", file=sys.stderr)
+
+    if args.churn_csv:
+        print("== churn section (report-only) ==")
+        churn_failures = churn_check(args.churn_csv)
+        if churn_failures:
+            failed = True
+            for f in churn_failures:
+                print(f"bench-diff: churn section check failed: {f}", file=sys.stderr)
 
     if args.baseline:
         print("== baseline regression diff ==")

@@ -9,7 +9,13 @@ checks:
 
   * depth == popcount(active mask), and never underflows;
   * an event is never active outside [start, end) and never survives a
-    later Heal / matching RestoreNode;
+    later Heal / matching RestoreNode / matching ProcJoin;
+  * a command also cancels *same-batch pending* onsets: immediately after
+    a Heal/RestoreNode/ProcJoin at time t, no onset it covers with
+    start <= t is active — even when onset and command share a timestamp
+    and the command's wake popped first (the `cancel_pending` edge);
+  * membership churn (ProcLeave windows, ProcJoin commands) drives the
+    same nesting machinery but never touches the effective tables;
   * flap wake chains strictly advance and clamp at the window end
     (termination — no same-time reschedule loops);
   * effective node/link tables equal an independent fold over the active
@@ -28,8 +34,8 @@ ALWAYS = (1 << 64) - 1  # u64::MAX stand-in
 
 # ---- mirrored data model ---------------------------------------------------
 
-DEGRADE, RESTORE, FLAP, STORM, PARTITION, HEAL = range(6)
-INSTANT = {RESTORE, HEAL}
+DEGRADE, RESTORE, FLAP, STORM, PARTITION, HEAL, LEAVE, JOIN = range(8)
+INSTANT = {RESTORE, HEAL, JOIN}
 
 
 class Event:
@@ -74,6 +80,17 @@ class Runtime:
             assert self.depth > 0, "overlay pop without matching push"
             self.depth -= 1
 
+    def cancel_pending(self, k, t):
+        # A command covers a window whose own onset wake sits later in
+        # the same same-timestamp batch: mark it Done before it can
+        # activate (it was never pushed, so depth is untouched).
+        if self.state[k] == PENDING and self.events[k].start <= t:
+            self.state[k] = DONE
+
+    def is_departed(self, proc):
+        return any(ev.kind == LEAVE and ev.node == proc and self.is_active(k)
+                   for k, ev in enumerate(self.events))
+
     def on_event(self, k, t):
         ev = self.events[k]
         if self.state[k] == DONE:
@@ -85,9 +102,18 @@ class Runtime:
                     for k2, e2 in enumerate(self.events):
                         if e2.kind in (DEGRADE, FLAP) and e2.node == ev.node:
                             self.deactivate(k2)
+                            self.cancel_pending(k2, t)
+                elif ev.kind == JOIN:
+                    for k2, e2 in enumerate(self.events):
+                        if e2.kind == LEAVE and e2.node == ev.node:
+                            self.deactivate(k2)
+                            self.cancel_pending(k2, t)
                 else:  # HEAL
-                    for k2 in range(len(self.events)):
+                    for k2, e2 in enumerate(self.events):
+                        if e2.kind in INSTANT:
+                            continue
                         self.deactivate(k2)
+                        self.cancel_pending(k2, t)
                 self.recompute()
                 return None
             self.state[k] = ACTIVE
@@ -171,8 +197,14 @@ def reference_tables(events, active_bits, flap_on, n_nodes):
 def random_scenario(rng, n_nodes):
     events = []
     for _ in range(rng.randint(1, 12)):
-        kind = rng.choice([DEGRADE, DEGRADE, FLAP, STORM, PARTITION, RESTORE, HEAL])
-        start = rng.randint(0, 5000)
+        kind = rng.choice([DEGRADE, DEGRADE, FLAP, STORM, PARTITION,
+                           RESTORE, HEAL, LEAVE, JOIN])
+        # A third of starts collide with an earlier event's, so commands
+        # race the onsets they cancel inside one same-timestamp batch.
+        if events and rng.random() < 0.33:
+            start = rng.choice(events).start
+        else:
+            start = rng.randint(0, 5000)
         duration = rng.choice([rng.randint(1, 2000), ALWAYS - start])
         events.append(Event(
             start,
@@ -198,9 +230,12 @@ def drive(events, n_nodes, horizon=20_000, max_wakes=60_000):
     # Track kill times for the independent activity-window check.
     heal_times = sorted(ev.start for ev in events if ev.kind == HEAL)
     restore = {}
+    joins = {}
     for ev in events:
         if ev.kind == RESTORE:
             restore.setdefault(ev.node, []).append(ev.start)
+        elif ev.kind == JOIN:
+            joins.setdefault(ev.node, []).append(ev.start)
     last_wake_per_event = {}
     wakes = 0
     while heap:
@@ -234,6 +269,29 @@ def drive(events, n_nodes, horizon=20_000, max_wakes=60_000):
                     for rt_t in restore.get(ev2.node, []):
                         assert not (ev2.start < rt_t < t), \
                             f"event {k2} survived restore at {rt_t}"
+                if ev2.kind == LEAVE:
+                    for jt in joins.get(ev2.node, []):
+                        assert not (ev2.start < jt < t), \
+                            f"event {k2} survived join at {jt}"
+
+        # The command-cancels-pending model: immediately after a command
+        # fires at t, no onset it covers with start <= t may be active —
+        # including onsets whose own wake shares this exact timestamp.
+        if events[k].kind == HEAL and rt.state[k] == DONE:
+            for k2, ev2 in enumerate(events):
+                if ev2.kind not in INSTANT and ev2.start <= t:
+                    assert not rt.is_active(k2), \
+                        f"event {k2} active right after heal at t={t}"
+        elif events[k].kind == RESTORE and rt.state[k] == DONE:
+            for k2, ev2 in enumerate(events):
+                if ev2.kind in (DEGRADE, FLAP) and ev2.node == events[k].node \
+                        and ev2.start <= t:
+                    assert not rt.is_active(k2), \
+                        f"event {k2} active right after restore at t={t}"
+        elif events[k].kind == JOIN and rt.state[k] == DONE:
+            assert not rt.is_departed(events[k].node), \
+                f"proc {events[k].node} departed right after join at t={t}"
+
         ref = reference_tables(events, rt.active, rt.flap_on, n_nodes)
         got = (rt.eff_node, rt.node_link, rt.storm, rt.partition)
         assert got == ref, f"effective tables diverge from reference fold: {got} vs {ref}"

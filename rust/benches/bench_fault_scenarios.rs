@@ -15,8 +15,11 @@
 //!
 //! Pass `--smoke` (or set `EBCOMM_SMOKE=1`) for the reduced CI grid;
 //! `--scale` for the 1024-proc coagulation probe
-//! ([`ScenarioExperiment::scale_suite`]); `EBCOMM_FULL=1` runs
-//! paper-scale windows (and unlocks the 4096-proc rung under `--scale`).
+//! ([`ScenarioExperiment::scale_suite`]); `--churn` for the
+//! membership-churn rung ([`ScenarioExperiment::churn_suite`]:
+//! 64/256-proc leave/join storms, steady vs churn-phase medians);
+//! `EBCOMM_FULL=1` runs paper-scale windows (and unlocks the 4096-proc
+//! rung under `--scale`).
 
 use ebcomm::coordinator::report;
 use ebcomm::coordinator::{run_scenario, ScenarioExperiment, ScenarioKind};
@@ -29,10 +32,13 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke")
         || std::env::var("EBCOMM_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let churn = args.iter().any(|a| a == "--churn");
     let exp = if smoke {
         ScenarioExperiment::smoke()
     } else if args.iter().any(|a| a == "--scale") {
         ScenarioExperiment::scale_suite()
+    } else if churn {
+        ScenarioExperiment::churn_suite()
     } else {
         ScenarioExperiment::paper_suite()
     };
@@ -57,6 +63,7 @@ fn main() {
         ScenarioKind::CongestionStorm,
         ScenarioKind::PartitionHeal,
         ScenarioKind::FlappingClique,
+        ScenarioKind::LeaveJoinStorm,
     ] {
         if !exp.scenarios.contains(&kind) {
             continue;
@@ -118,6 +125,28 @@ fn main() {
                 metric.label(),
                 rel = rel * 100.0
             );
+        }
+    }
+
+    // Churn rung: steady vs churn-phase medians at every scale in the
+    // grid, both modes — the "robust under allocation shrink/regrow"
+    // claim, time-resolved. (The generic attribution block above already
+    // printed the largest-scale probe cell.)
+    if churn {
+        println!("== churn: steady vs churn-phase QoS medians ==");
+        for &mode in &exp.modes {
+            for &n_procs in &exp.proc_counts {
+                println!(
+                    "{}",
+                    report::phase_attribution(
+                        "leave/join storm",
+                        &results,
+                        ScenarioKind::LeaveJoinStorm,
+                        mode,
+                        n_procs,
+                    )
+                );
+            }
         }
     }
 

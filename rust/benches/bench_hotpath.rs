@@ -409,6 +409,40 @@ fn main() {
         }
     }
 
+    // Checkpoint/restore round trip: serialize a paused mid-run 256-proc
+    // engine to the versioned snapshot and rebuild it. Named OUTSIDE the
+    // gated prefixes on purpose — snapshotting is a tooling path, not a
+    // hot path; the cells document cost (and the blob size) without
+    // gating cross-PR noise.
+    println!("== checkpoint round-trip (256 procs, info only) ==");
+    {
+        let (topo, profiles, shards) = des_inputs(256, 0xCE);
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(256),
+            10 * MILLI,
+        );
+        cfg.send_buffer = 64;
+        let mut engine = Engine::new(cfg, topo, profiles, shards);
+        assert!(!engine.run_until(5 * MILLI), "mid-run pause point");
+        let blob = engine.checkpoint();
+        rec.report_value(
+            "checkpoint snapshot size (256 procs)",
+            "bytes",
+            &[blob.len() as f64],
+        );
+        let s = time_batched(2, 20, 5, || {
+            std::hint::black_box(engine.checkpoint());
+        });
+        rec.report("checkpoint serialize (256 procs)", &s);
+        let s = time_batched(2, 20, 5, || {
+            let restored = Engine::<GraphColoringShard>::restore(&blob)
+                .expect("own snapshot must restore");
+            std::hint::black_box(&restored);
+        });
+        rec.report("checkpoint restore (256 procs)", &s);
+    }
+
     // Parallel replicate sweeps: a 256-proc best-effort sweep cellwise
     // over the scoped worker pool vs. the serial reference path. The
     // results must be identical; only the wall clock may differ.

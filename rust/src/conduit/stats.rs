@@ -142,6 +142,19 @@ impl LocalChannelStats {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Rebuild counters from a previously captured tranche — engine
+    /// checkpoint restore (the tranche is the counters' entire state).
+    pub fn from_tranche(t: &CounterTranche) -> Self {
+        let s = Self::default();
+        s.attempted_sends.set(t.attempted_sends);
+        s.successful_sends.set(t.successful_sends);
+        s.pull_attempts.set(t.pull_attempts);
+        s.laden_pulls.set(t.laden_pulls);
+        s.messages_received.set(t.messages_received);
+        s.touches.set(t.touches);
+        s
+    }
 }
 
 impl StatsSink for LocalChannelStats {
@@ -324,6 +337,17 @@ mod tests {
         assert_eq!(t.laden_pulls, 1);
         assert_eq!(t.messages_received, 3);
         assert_eq!(t.touches, 7);
+    }
+
+    #[test]
+    fn from_tranche_round_trips() {
+        let s = LocalChannelStats::new();
+        let t = scripted(&s);
+        let restored = LocalChannelStats::from_tranche(&t);
+        assert_eq!(restored.tranche(), t);
+        // Restored counters keep counting from where they left off.
+        restored.on_send_attempt(true);
+        assert_eq!(restored.tranche().attempted_sends, t.attempted_sends + 1);
     }
 
     #[test]

@@ -329,6 +329,12 @@ pub enum ScenarioKind {
     /// Links touching one node flap between degraded and clean across
     /// the middle 60 % of the run.
     FlappingClique,
+    /// Membership churn: staggered process leave/join storm across the
+    /// middle of the run (some departures permanent, some rejoining).
+    /// Deliberately NOT in [`Self::ALL`] — it is process-scoped (DES
+    /// engine only, never hardware threads) and joined the enum after
+    /// the seed-packing grid froze; benches opt in explicitly.
+    LeaveJoinStorm,
 }
 
 impl ScenarioKind {
@@ -355,6 +361,7 @@ impl ScenarioKind {
             ScenarioKind::CongestionStorm => "congestion_storm",
             ScenarioKind::PartitionHeal => "partition_heal",
             ScenarioKind::FlappingClique => "flapping_clique",
+            ScenarioKind::LeaveJoinStorm => "leave_join_storm",
         }
     }
 
@@ -364,11 +371,12 @@ impl ScenarioKind {
         (n_nodes / 3).min(n_nodes.saturating_sub(1))
     }
 
-    /// Build the concrete scenario for an allocation of `n_nodes` nodes
-    /// and a `run_for` virtual window. Event times scale with the window
-    /// so compressed and full-scale runs share the treatment structure;
-    /// the storm clamps at the paper's 30 s.
-    pub fn build(self, run_for: Nanos, n_nodes: usize) -> FaultScenario {
+    /// Build the concrete scenario for an allocation of `n_nodes` nodes,
+    /// `n_procs` processes, and a `run_for` virtual window. Event times
+    /// scale with the window so compressed and full-scale runs share the
+    /// treatment structure; the storm clamps at the paper's 30 s. Only
+    /// the churn shape reads `n_procs` (it is process-scoped).
+    pub fn build(self, run_for: Nanos, n_nodes: usize, n_procs: usize) -> FaultScenario {
         let node = Self::fault_node(n_nodes);
         match self {
             ScenarioKind::Baseline => FaultScenario::default(),
@@ -388,6 +396,12 @@ impl ScenarioKind {
                 run_for * 3 / 5,
                 (run_for / 64).max(1),
                 (run_for / 64).max(1),
+            ),
+            ScenarioKind::LeaveJoinStorm => FaultScenario::leave_join_storm(
+                n_procs,
+                run_for / 5,
+                run_for * 2 / 5,
+                (n_procs / 16).max(2),
             ),
         }
     }
@@ -459,6 +473,25 @@ impl ScenarioExperiment {
         };
         e.replicates = 1;
         e.schedule = SnapshotSchedule::compressed(150 * MILLI, 150 * MILLI, 50 * MILLI, 3);
+        e.run_for = 600 * MILLI;
+        e
+    }
+
+    /// Membership-churn rung: baseline vs [`ScenarioKind::LeaveJoinStorm`]
+    /// at 64/256 procs (4 and 16 staggered leavers respectively), sync vs
+    /// best-effort. Snapshot windows straddle the churn phase (run 20–60 %)
+    /// and the post-rejoin steady state, so phase attribution splits
+    /// churn-transient from steady medians. Opt-in via `--churn` on
+    /// `bench_fault_scenarios` — the shape is process-scoped, so it never
+    /// joins the node-scoped `ALL` grid.
+    pub fn churn_suite() -> Self {
+        let mut e = Self::paper_suite();
+        e.name = "fault_scenarios_churn";
+        e.scenarios = vec![ScenarioKind::Baseline, ScenarioKind::LeaveJoinStorm];
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.proc_counts = vec![64, 256];
+        e.replicates = if full_scale() { 3 } else { 1 };
+        e.schedule = SnapshotSchedule::compressed(100 * MILLI, 150 * MILLI, 50 * MILLI, 4);
         e.run_for = 600 * MILLI;
         e
     }
@@ -576,7 +609,7 @@ mod tests {
     fn scenario_kinds_build_valid_scenarios_across_scales() {
         for &n_nodes in &[4usize, 16, 64] {
             for kind in ScenarioKind::ALL {
-                let sc = kind.build(2_600 * MILLI, n_nodes);
+                let sc = kind.build(2_600 * MILLI, n_nodes, n_nodes * 4);
                 sc.validate(n_nodes); // would panic on a bad build
                 if kind == ScenarioKind::Baseline {
                     assert!(sc.is_empty());
@@ -586,7 +619,7 @@ mod tests {
             }
         }
         // Paper-scale storm clamps to 30 s.
-        let storm = ScenarioKind::CongestionStorm.build(301 * SECOND, 64);
+        let storm = ScenarioKind::CongestionStorm.build(301 * SECOND, 64, 256);
         assert_eq!(storm.events[0].duration, 30 * SECOND);
         // Discriminant-as-index stays aligned with ALL's ordering (seed
         // packing depends on it).
@@ -613,6 +646,24 @@ mod tests {
         if !full_scale() {
             assert!(!e.cpu_counts.contains(&4096), "4096 is full-scale only");
             assert!(!s.proc_counts.contains(&4096), "4096 is full-scale only");
+        }
+    }
+
+    #[test]
+    fn churn_suite_builds_valid_process_scoped_storms() {
+        let e = ScenarioExperiment::churn_suite();
+        assert!(e.scenarios.contains(&ScenarioKind::LeaveJoinStorm));
+        assert_eq!(e.proc_counts, vec![64, 256]);
+        // Process-scoped shape stays out of the node-scoped seed grid…
+        assert!(!ScenarioKind::ALL.contains(&ScenarioKind::LeaveJoinStorm));
+        // …but keeps a stable discriminant index after the frozen six.
+        assert_eq!(ScenarioKind::LeaveJoinStorm.index(), ScenarioKind::ALL.len());
+        for &n_procs in &[64usize, 256] {
+            let n_nodes = n_procs / e.cpus_per_node;
+            let sc = ScenarioKind::LeaveJoinStorm.build(e.run_for, n_nodes, n_procs);
+            sc.validate(n_nodes);
+            sc.validate_procs(n_procs);
+            assert!(sc.has_churn());
         }
     }
 

@@ -243,7 +243,7 @@ fn run_hardware_cell(
         .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
         .collect();
     let scenario = match exp.scenario_kind {
-        Some(kind) => kind.build(exp.run_for.as_nanos() as Nanos, n_shards),
+        Some(kind) => kind.build(exp.run_for.as_nanos() as Nanos, n_shards, n_shards),
         None => Default::default(),
     };
     let result = run_threads(
@@ -319,7 +319,7 @@ mod tests {
         for &n in &p.shard_counts {
             p.scenario_kind
                 .unwrap()
-                .build(p.run_for.as_nanos() as Nanos, n)
+                .build(p.run_for.as_nanos() as Nanos, n, n)
                 .validate(n);
         }
     }

@@ -415,7 +415,7 @@ fn run_scenario_cell(
         .wrapping_add(n_procs as u64);
     cfg.send_buffer = exp.send_buffer;
     cfg.snapshots = Some(exp.schedule);
-    cfg.scenario = kind.build(exp.run_for, topo.n_nodes());
+    cfg.scenario = kind.build(exp.run_for, topo.n_nodes(), topo.n_procs());
 
     let gc_cfg = GcConfig {
         simels_per_proc: 1,

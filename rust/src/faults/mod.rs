@@ -26,6 +26,8 @@
 //! | [`FaultScenario::congestion_storm`] | §III-C/D's latency regime shifted in time: a fabric-wide storm (cf. Bienz et al. 2018 on time- and topology-local congestion dominating irregular point-to-point performance) |
 //! | [`FaultScenario::partition_and_heal`] | scalability under the harshest transient: the allocation splits into cliques, then heals (`PartitionCliques` + `Heal`) |
 //! | [`FaultScenario::flapping_clique`] | §III-G's outlier-generating clique made intermittent: links touching one node flap between degraded and clean |
+//! | [`FaultScenario::leave_join_storm`] | membership churn: staggered process departures (some permanent, some rejoining) over a window — the best-effort claim under allocation shrink/regrow |
+//! | [`chaos::generate_scenario`] | seeded chaos campaigns: randomized timelines over every kind, invariant-checked, failures auto-shrunk to minimal scenarios (see [`chaos`]) |
 //!
 //! An **empty** scenario is guaranteed bit-identical to the static-profile
 //! path (the engine skips the overlay entirely); a scenario whose events
@@ -33,9 +35,13 @@
 //! overlay's effective tables equal the static tables whenever nothing is
 //! active — both pinned by the golden-signature tests.
 
+pub mod chaos;
 pub mod overlay;
 pub mod scenario;
 
+pub use chaos::{
+    generate_scenario, run_chaos_cell, shrink_timeline, ChaosFailure, CHAOS_PROCS, CHAOS_RUN_FOR,
+};
 pub use overlay::{clique_of, FaultRuntime};
 pub use scenario::{
     FaultEvent, FaultKind, FaultScenario, LinkFault, NodeFault, ScenarioPhase, ALWAYS,

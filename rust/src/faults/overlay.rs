@@ -151,8 +151,9 @@ impl FaultRuntime {
                 if ev.kind.is_instant() {
                     self.state[k] = EventState::Done;
                     match ev.kind {
-                        FaultKind::RestoreNode { node } => self.deactivate_node(node),
-                        FaultKind::Heal => self.deactivate_all(),
+                        FaultKind::RestoreNode { node } => self.deactivate_node(node, t),
+                        FaultKind::Heal => self.deactivate_all(t),
+                        FaultKind::ProcJoin { proc } => self.deactivate_proc(proc, t),
                         _ => unreachable!("only commands are instant"),
                     }
                     self.recompute();
@@ -207,8 +208,22 @@ impl FaultRuntime {
         }
     }
 
-    /// `RestoreNode`: deactivate active degradations targeting `node`.
-    fn deactivate_node(&mut self, node: usize) {
+    /// Cancel event `k` if a command covers it before its own onset wake
+    /// ran: a window whose start is at (or before) the command time but
+    /// whose wake sits later in the same same-timestamp batch is still
+    /// `Pending` — mark it `Done` directly, never touching `active`/
+    /// `depth` (it was never pushed). Without this, a `Heal` sharing a
+    /// calendar wake batch with the onset it cancels left the onset to
+    /// activate afterwards and stay `Active` past the command.
+    fn cancel_pending(&mut self, k: usize, t: Nanos) {
+        if self.state[k] == EventState::Pending && self.scenario.events[k].start <= t {
+            self.state[k] = EventState::Done;
+        }
+    }
+
+    /// `RestoreNode`: deactivate active (or same-batch pending)
+    /// degradations targeting `node`.
+    fn deactivate_node(&mut self, node: usize, t: Nanos) {
         for k in 0..self.scenario.events.len() {
             let hit = match self.scenario.events[k].kind {
                 FaultKind::DegradeNode { node: n, .. } | FaultKind::FlapLink { node: n, .. } => {
@@ -218,14 +233,32 @@ impl FaultRuntime {
             };
             if hit {
                 self.deactivate(k);
+                self.cancel_pending(k, t);
             }
         }
     }
 
-    /// `Heal`: deactivate everything.
-    fn deactivate_all(&mut self) {
+    /// `ProcJoin`: deactivate active (or same-batch pending) `ProcLeave`
+    /// windows targeting `proc`.
+    fn deactivate_proc(&mut self, proc: usize, t: Nanos) {
         for k in 0..self.scenario.events.len() {
+            if matches!(self.scenario.events[k].kind, FaultKind::ProcLeave { proc: q } if q == proc)
+            {
+                self.deactivate(k);
+                self.cancel_pending(k, t);
+            }
+        }
+    }
+
+    /// `Heal`: deactivate every windowed degradation (commands hold no
+    /// window and are left to fire on their own).
+    fn deactivate_all(&mut self, t: Nanos) {
+        for k in 0..self.scenario.events.len() {
+            if self.scenario.events[k].kind.is_instant() {
+                continue;
+            }
             self.deactivate(k);
+            self.cancel_pending(k, t);
         }
     }
 
@@ -263,9 +296,69 @@ impl FaultRuntime {
                         Some((c, prev)) => (c.max(cliques), prev.stack(&cut)),
                     });
                 }
-                FaultKind::RestoreNode { .. } | FaultKind::Heal => {}
+                // Churn is interpreted by the engine's live-set
+                // reconciliation; it never touches profile/link tables.
+                FaultKind::RestoreNode { .. }
+                | FaultKind::Heal
+                | FaultKind::ProcLeave { .. }
+                | FaultKind::ProcJoin { .. } => {}
             }
         }
+    }
+
+    /// Is process `proc` currently departed (any active `ProcLeave`
+    /// naming it)? The engine reconciles its live set against this after
+    /// every scenario transition.
+    pub fn is_departed(&self, proc: usize) -> bool {
+        self.scenario.events.iter().enumerate().any(|(k, ev)| {
+            matches!(ev.kind, FaultKind::ProcLeave { proc: q } if q == proc)
+                && matches!(self.state[k], EventState::Active { .. })
+        })
+    }
+
+    /// Serialize the per-event state machine for a checkpoint (one byte
+    /// per event: 0 pending, 1 active/off, 2 active/on, 3 done).
+    pub fn export_states(&self) -> Vec<u8> {
+        self.state
+            .iter()
+            .map(|s| match s {
+                EventState::Pending => 0,
+                EventState::Active { flap_on: false } => 1,
+                EventState::Active { flap_on: true } => 2,
+                EventState::Done => 3,
+            })
+            .collect()
+    }
+
+    /// Restore the per-event state machine from [`Self::export_states`]
+    /// bytes, rebuilding the active mask, depth, and cached tables.
+    /// Returns `false` (leaving the runtime untouched) on malformed
+    /// input.
+    pub fn restore_states(&mut self, states: &[u8]) -> bool {
+        if states.len() != self.scenario.events.len() {
+            return false;
+        }
+        let mut decoded = Vec::with_capacity(states.len());
+        for &b in states {
+            decoded.push(match b {
+                0 => EventState::Pending,
+                1 => EventState::Active { flap_on: false },
+                2 => EventState::Active { flap_on: true },
+                3 => EventState::Done,
+                _ => return false,
+            });
+        }
+        self.state = decoded;
+        self.active = ScenarioPhase::QUIESCENT;
+        self.depth = 0;
+        for (k, s) in self.state.iter().enumerate() {
+            if matches!(s, EventState::Active { .. }) {
+                self.active = self.active.union(ScenarioPhase::single(k));
+                self.depth += 1;
+            }
+        }
+        self.recompute();
+        true
     }
 }
 
@@ -416,5 +509,146 @@ mod tests {
         rt.on_event(0, 0);
         assert_eq!(rt.link_mods(0, 1, true).latency_factor, 25.0);
         assert_eq!(rt.link_mods(0, 0, false), LinkFault::IDENTITY);
+    }
+
+    /// The depth-guard edge the same-timestamp batch exposes: a `Heal`
+    /// whose wake is processed *before* the onset it cancels (same t,
+    /// lower seq) must leave the onset `Done`, not let it activate and
+    /// stay `Active` forever.
+    #[test]
+    fn heal_cancels_same_timestamp_pending_onset() {
+        // Event 0: heal at t=100. Event 1: ALWAYS storm also at t=100.
+        let sc = FaultScenario::default()
+            .with(100, 0, FaultKind::Heal)
+            .with(100, ALWAYS, FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 100), None); // heal first in the batch
+        assert_eq!(rt.on_event(1, 100), None); // cancelled onset: no-op
+        assert!(rt.phase().is_quiescent());
+        assert_eq!(rt.depth(), 0);
+        assert!(!rt.is_active(1));
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+    }
+
+    #[test]
+    fn restore_node_cancels_same_timestamp_pending_onset_selectively() {
+        let sc = FaultScenario::default()
+            .with(50, 0, FaultKind::RestoreNode { node: 1 })
+            .with(50, ALWAYS, FaultKind::DegradeNode {
+                node: 1,
+                fault: NodeFault::lac417(),
+            })
+            .with(50, ALWAYS, FaultKind::DegradeNode {
+                node: 0,
+                fault: NodeFault::lac417(),
+            });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 50), None);
+        assert_eq!(rt.on_event(1, 50), None); // cancelled (node 1)
+        rt.on_event(2, 50); // unrelated node: activates normally
+        assert!(!rt.is_active(1));
+        assert!(rt.is_active(2));
+        assert_eq!(rt.depth(), 1);
+        assert_eq!(
+            rt.node_profile(1).latency_factor.to_bits(),
+            NodeProfile::healthy().latency_factor.to_bits()
+        );
+        assert!(rt.node_profile(0).latency_factor > 100.0);
+    }
+
+    /// Commands must not cancel *future* onsets: a window opening after
+    /// the command time still activates.
+    #[test]
+    fn heal_leaves_future_onsets_pending() {
+        let sc = FaultScenario::default()
+            .with(100, 0, FaultKind::Heal)
+            .with(200, 50, FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 100), None);
+        assert_eq!(rt.on_event(1, 200), Some(250));
+        assert!(rt.is_active(1));
+        assert_eq!(rt.depth(), 1);
+    }
+
+    #[test]
+    fn proc_leave_window_and_join_command() {
+        let sc = FaultScenario::default()
+            .with(100, 50, FaultKind::ProcLeave { proc: 3 })
+            .with(100, ALWAYS, FaultKind::ProcLeave { proc: 5 })
+            .with(200, 0, FaultKind::ProcJoin { proc: 5 });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert!(!rt.is_departed(3));
+        assert_eq!(rt.on_event(0, 100), Some(150));
+        assert_eq!(rt.on_event(1, 100), None); // ALWAYS: no end wake
+        assert!(rt.is_departed(3) && rt.is_departed(5));
+        assert_eq!(rt.depth(), 2);
+        // Churn never touches the profile/link tables.
+        assert_eq!(
+            rt.node_profile(0).latency_factor.to_bits(),
+            NodeProfile::healthy().latency_factor.to_bits()
+        );
+        assert_eq!(rt.link_mods(0, 1, true), LinkFault::IDENTITY);
+        // Window expiry rejoins proc 3.
+        assert_eq!(rt.on_event(0, 150), None);
+        assert!(!rt.is_departed(3));
+        // Explicit join re-admits proc 5.
+        assert_eq!(rt.on_event(2, 200), None);
+        assert!(!rt.is_departed(5));
+        assert_eq!(rt.depth(), 0);
+        assert!(rt.phase().is_quiescent());
+    }
+
+    #[test]
+    fn join_cancels_same_timestamp_pending_leave() {
+        let sc = FaultScenario::default()
+            .with(100, 0, FaultKind::ProcJoin { proc: 2 })
+            .with(100, ALWAYS, FaultKind::ProcLeave { proc: 2 });
+        let mut rt = FaultRuntime::new(sc, healthy(2));
+        assert_eq!(rt.on_event(0, 100), None);
+        assert_eq!(rt.on_event(1, 100), None);
+        assert!(!rt.is_departed(2));
+        assert!(rt.phase().is_quiescent());
+    }
+
+    #[test]
+    fn overlay_states_round_trip() {
+        let sc = FaultScenario::default()
+            .with(0, ALWAYS, FaultKind::DegradeNode {
+                node: 1,
+                fault: NodeFault::lac417(),
+            })
+            .with(10, 100, FaultKind::FlapLink {
+                node: 0,
+                on_for: 10,
+                off_for: 5,
+                fault: LinkFault::flap(),
+            })
+            .with(500, 0, FaultKind::Heal);
+        let mut rt = FaultRuntime::new(sc.clone(), healthy(2));
+        rt.on_event(0, 0);
+        rt.on_event(1, 10); // flap on
+        rt.on_event(1, 20); // flap off
+        let states = rt.export_states();
+        let mut rt2 = FaultRuntime::new(sc, healthy(2));
+        assert!(rt2.restore_states(&states));
+        assert_eq!(rt2.depth(), rt.depth());
+        assert_eq!(rt2.phase(), rt.phase());
+        assert_eq!(rt2.flap_on(1), rt.flap_on(1));
+        for n in 0..2 {
+            assert_eq!(
+                rt2.node_profile(n).latency_factor.to_bits(),
+                rt.node_profile(n).latency_factor.to_bits()
+            );
+            assert_eq!(
+                rt2.link_mods(n, 1 - n, true).latency_factor.to_bits(),
+                rt.link_mods(n, 1 - n, true).latency_factor.to_bits()
+            );
+        }
+        assert!(!rt2.restore_states(&[0]), "length mismatch rejected");
+        assert!(!rt2.restore_states(&[9, 9, 9]), "bad tag rejected");
     }
 }

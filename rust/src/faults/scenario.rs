@@ -226,12 +226,35 @@ pub enum FaultKind {
     PartitionCliques { cliques: usize, cut: LinkFault },
     /// Command: deactivate every active degradation.
     Heal,
+    /// Membership churn: process `proc` leaves the allocation for the
+    /// event window (its channels stop accepting sends; barrier
+    /// protocols exclude it), rejoining when the window closes —
+    /// [`ALWAYS`] models a permanent crash unless a [`FaultKind::ProcJoin`]
+    /// re-admits it. Scoped to *processes*, not nodes — validated against
+    /// the process count by [`FaultScenario::validate_procs`].
+    ProcLeave { proc: usize },
+    /// Command: re-admit a departed process immediately (deactivates
+    /// every active `ProcLeave` targeting `proc`).
+    ProcJoin { proc: usize },
 }
 
 impl FaultKind {
     /// Commands fire once and hold no window of their own.
     pub fn is_instant(&self) -> bool {
-        matches!(self, FaultKind::RestoreNode { .. } | FaultKind::Heal)
+        matches!(
+            self,
+            FaultKind::RestoreNode { .. } | FaultKind::Heal | FaultKind::ProcJoin { .. }
+        )
+    }
+
+    /// Membership-churn events live in process space (not node space) and
+    /// are interpreted by the engine's live-set reconciliation rather
+    /// than the profile/link fold.
+    pub fn is_churn(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::ProcLeave { .. } | FaultKind::ProcJoin { .. }
+        )
     }
 
     pub fn label(&self) -> &'static str {
@@ -242,6 +265,8 @@ impl FaultKind {
             FaultKind::CongestionStorm { .. } => "storm",
             FaultKind::PartitionCliques { .. } => "partition",
             FaultKind::Heal => "heal",
+            FaultKind::ProcLeave { .. } => "leave",
+            FaultKind::ProcJoin { .. } => "join",
         }
     }
 }
@@ -324,8 +349,33 @@ impl FaultScenario {
                     );
                 }
                 FaultKind::CongestionStorm { .. } | FaultKind::Heal => {}
+                // Churn events index processes, not nodes: their bounds
+                // are checked by `validate_procs` (the engine knows the
+                // process count; the overlay only knows nodes).
+                FaultKind::ProcLeave { .. } | FaultKind::ProcJoin { .. } => {}
             }
         }
+    }
+
+    /// Panic on churn events naming out-of-range processes. Run by the
+    /// engine at construction (complementing [`FaultScenario::validate`],
+    /// which covers the node-indexed events).
+    pub fn validate_procs(&self, n_procs: usize) {
+        for (k, ev) in self.events.iter().enumerate() {
+            if let FaultKind::ProcLeave { proc } | FaultKind::ProcJoin { proc } = ev.kind {
+                assert!(
+                    proc < n_procs,
+                    "event #{k}: proc {proc} >= {n_procs} procs"
+                );
+            }
+        }
+    }
+
+    /// Does the timeline contain membership-churn events? The engine only
+    /// materializes live-set bookkeeping when this holds, keeping
+    /// churn-free scenario runs bit-identical to pre-churn engines.
+    pub fn has_churn(&self) -> bool {
+        self.events.iter().any(|ev| ev.kind.is_churn())
     }
 
     /// Human label for a phase mask, e.g. `"degrade#0+storm#2"`;
@@ -413,6 +463,41 @@ impl FaultScenario {
             off_for,
             fault: LinkFault::flap(),
         })
+    }
+
+    /// Membership-churn storm: `leavers` processes (spread evenly over
+    /// the allocation) crash with staggered onsets across
+    /// `[at, at + duration)`. Even-indexed leavers rejoin when their
+    /// window closes (transient crash-recovery); odd-indexed ones crash
+    /// permanently ([`ALWAYS`]) and are re-admitted by an explicit
+    /// [`FaultKind::ProcJoin`] — exercising both rejoin paths.
+    pub fn leave_join_storm(
+        n_procs: usize,
+        at: Nanos,
+        duration: Nanos,
+        leavers: usize,
+    ) -> Self {
+        // Two events per odd leaver: cap well under the 64-event mask.
+        let leavers = leavers.clamp(1, 21).min(n_procs.saturating_sub(1).max(1));
+        let stride = (n_procs / leavers).max(1);
+        let stagger = duration / (2 * leavers as Nanos);
+        let mut sc = Self::default();
+        for i in 0..leavers {
+            let proc = i * stride;
+            let start = at + i as Nanos * stagger;
+            if i % 2 == 0 {
+                sc = sc.with(start, duration, FaultKind::ProcLeave { proc });
+            } else {
+                sc = sc
+                    .with(start, ALWAYS, FaultKind::ProcLeave { proc })
+                    .with(
+                        start.saturating_add(duration),
+                        0,
+                        FaultKind::ProcJoin { proc },
+                    );
+            }
+        }
+        sc
     }
 }
 
@@ -514,6 +599,60 @@ mod tests {
         FaultScenario::partition_and_heal(2, 5, 10).validate(4);
         FaultScenario::flapping_clique(1, 0, 100, 5, 5).validate(2);
         FaultScenario::default().validate(0);
+        let storm = FaultScenario::leave_join_storm(64, 100, 1_000, 8);
+        storm.validate(1); // churn is node-agnostic
+        storm.validate_procs(64);
+    }
+
+    #[test]
+    fn leave_join_storm_shape() {
+        let sc = FaultScenario::leave_join_storm(64, 100, 1_000, 8);
+        assert!(sc.has_churn());
+        // 8 leavers, half permanent-with-explicit-join: 8 + 4 events.
+        assert_eq!(sc.events.len(), 12);
+        let leaves = sc
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::ProcLeave { .. }))
+            .count();
+        let joins = sc
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::ProcJoin { .. }))
+            .count();
+        assert_eq!((leaves, joins), (8, 4));
+        // Distinct procs, staggered monotone onsets.
+        let mut procs: Vec<usize> = sc
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::ProcLeave { proc } => Some(proc),
+                _ => None,
+            })
+            .collect();
+        procs.sort_unstable();
+        procs.dedup();
+        assert_eq!(procs.len(), 8);
+        assert!(!FaultScenario::congestion_storm(0, 10).has_churn());
+    }
+
+    #[test]
+    #[should_panic(expected = "proc 9")]
+    fn validate_procs_rejects_out_of_range() {
+        FaultScenario::default()
+            .with(0, 10, FaultKind::ProcLeave { proc: 9 })
+            .validate_procs(8);
+    }
+
+    #[test]
+    fn churn_kinds_classify() {
+        assert!(!FaultKind::ProcLeave { proc: 0 }.is_instant());
+        assert!(FaultKind::ProcJoin { proc: 0 }.is_instant());
+        assert!(FaultKind::ProcLeave { proc: 0 }.is_churn());
+        assert!(FaultKind::ProcJoin { proc: 0 }.is_churn());
+        assert!(!FaultKind::Heal.is_churn());
+        assert_eq!(FaultKind::ProcLeave { proc: 0 }.label(), "leave");
+        assert_eq!(FaultKind::ProcJoin { proc: 0 }.label(), "join");
     }
 
     #[test]

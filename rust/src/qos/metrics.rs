@@ -217,6 +217,13 @@ impl TouchCounter {
     pub fn value(&self) -> u64 {
         self.value
     }
+
+    /// Rebuild a counter from a previously read [`Self::value`] —
+    /// checkpoint restore (the value is the counter's entire state).
+    #[inline]
+    pub fn from_value(value: u64) -> Self {
+        Self { value }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,848 @@
+//! Versioned binary checkpoint format for mid-run engine snapshots.
+//!
+//! A checkpoint captures the *complete* deterministic state of a
+//! [`crate::sim::Engine`] between events — scheduler contents, in-flight
+//! envelopes, per-process RNG streams and clocks, fault-overlay state,
+//! QoS windows — such that `checkpoint at t` + `restore` + `run to end`
+//! is **bit-identical** to the straight-through run (same QoS values,
+//! same counters, same golden signature). The property holds under both
+//! scheduler kinds because dequeue order depends only on `(t, seq)` keys.
+//!
+//! The format is deliberately hand-rolled (the offline environment ships
+//! no serde): a `b"EBCK"` magic, a `u32` format version, then a flat
+//! little-endian field stream written and read in one fixed order by the
+//! [`Persist`] implementations. There is no per-field tagging — version
+//! bumps are the only compatibility mechanism (see
+//! `rust/tests/golden/README.md` for the bump rules). Floats round-trip
+//! via `to_bits`/`from_bits` so restores are bitwise, not approximate.
+//!
+//! Only the discrete-event engine is checkpointable. Real-thread
+//! (`exec/`) runs are deliberately not: their state lives in OS thread
+//! schedules and wall-clock time, which cannot be serialized or
+//! deterministically resumed.
+
+use crate::conduit::CounterTranche;
+use crate::faults::{
+    FaultEvent, FaultKind, FaultScenario, LinkFault, NodeFault, ScenarioPhase,
+};
+use crate::net::{LinkModel, NodeProfile, PlacementKind};
+use crate::qos::{QosObservation, SnapshotSchedule, SnapshotWindow};
+use crate::sim::calendar::SchedKind;
+use crate::sim::modes::{AsyncMode, ModeTiming};
+use crate::workloads::{ChannelSpec, TilePartition};
+
+/// Format magic: identifies a byte blob as an engine checkpoint.
+pub const SNAP_MAGIC: [u8; 4] = *b"EBCK";
+
+/// Current checkpoint format version. Bump on ANY change to what is
+/// serialized or in what order (there is no per-field tagging to absorb
+/// drift); readers reject other versions outright.
+pub const SNAP_VERSION: u32 = 1;
+
+/// Why a checkpoint blob could not be decoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapError {
+    /// Byte stream ended before the expected field.
+    Truncated,
+    /// Leading bytes are not [`SNAP_MAGIC`] — not a checkpoint at all.
+    BadMagic,
+    /// Checkpoint written by a different format version.
+    BadVersion(u32),
+    /// Structurally invalid content (bad enum tag, absurd length, …).
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for SnapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapError::Truncated => write!(f, "checkpoint truncated"),
+            SnapError::BadMagic => write!(f, "not an engine checkpoint (bad magic)"),
+            SnapError::BadVersion(v) => {
+                write!(f, "checkpoint version {v} != supported {SNAP_VERSION}")
+            }
+            SnapError::Corrupt(what) => write!(f, "checkpoint corrupt: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapError {}
+
+/// Append-only little-endian byte sink. [`SnapWriter::new`] stamps the
+/// magic + version header.
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        let mut w = Self { buf: Vec::with_capacity(4096) };
+        w.buf.extend_from_slice(&SNAP_MAGIC);
+        w.buf.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        w
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for SnapWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cursor over a checkpoint byte blob. [`SnapReader::new`] validates the
+/// magic + version header before any field is read.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Result<Self, SnapError> {
+        let mut r = Self { buf, at: 0 };
+        let magic = r.take(4)?;
+        if magic != SNAP_MAGIC {
+            return Err(SnapError::BadMagic);
+        }
+        let version = r.get_u32()?;
+        if version != SNAP_VERSION {
+            return Err(SnapError::BadVersion(version));
+        }
+        Ok(r)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapError> {
+        let end = self.at.checked_add(n).ok_or(SnapError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(SnapError::Truncated);
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, SnapError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, SnapError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, SnapError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], SnapError> {
+        let n = self.get_u64()?;
+        let n = usize::try_from(n).map_err(|_| SnapError::Corrupt("byte run too long"))?;
+        self.take(n)
+    }
+
+    /// All header + fields consumed? Engine restore asserts this so a
+    /// trailing-garbage blob fails loudly instead of loading.
+    pub fn is_exhausted(&self) -> bool {
+        self.at == self.buf.len()
+    }
+}
+
+/// A type with a fixed binary checkpoint encoding. `save` and `load`
+/// must agree exactly on field order; round-trips are bitwise.
+pub trait Persist: Sized {
+    fn save(&self, w: &mut SnapWriter);
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError>;
+}
+
+// ---- primitives ----------------------------------------------------
+
+impl Persist for u8 {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(*self);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        r.get_u8()
+    }
+}
+
+impl Persist for u32 {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u32(*self);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        r.get_u32()
+    }
+}
+
+impl Persist for u64 {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(*self);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        r.get_u64()
+    }
+}
+
+impl Persist for usize {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(*self as u64);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        usize::try_from(r.get_u64()?).map_err(|_| SnapError::Corrupt("usize overflow"))
+    }
+}
+
+impl Persist for f64 {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(self.to_bits());
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(f64::from_bits(r.get_u64()?))
+    }
+}
+
+impl Persist for bool {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(*self as u8);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(SnapError::Corrupt("bool tag")),
+        }
+    }
+}
+
+impl Persist for [u64; 4] {
+    fn save(&self, w: &mut SnapWriter) {
+        for v in self {
+            w.put_u64(*v);
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok([r.get_u64()?, r.get_u64()?, r.get_u64()?, r.get_u64()?])
+    }
+}
+
+impl<T: Persist> Persist for Vec<T> {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(self.len() as u64);
+        for x in self {
+            x.save(w);
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let n = usize::try_from(r.get_u64()?)
+            .map_err(|_| SnapError::Corrupt("vec too long"))?;
+        // A corrupt length would otherwise make with_capacity abort on
+        // OOM before the element loop hits Truncated.
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(T::load(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Persist> Persist for Option<T> {
+    fn save(&self, w: &mut SnapWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(x) => {
+                w.put_u8(1);
+                x.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::load(r)?)),
+            _ => Err(SnapError::Corrupt("option tag")),
+        }
+    }
+}
+
+impl<A: Persist, B: Persist> Persist for (A, B) {
+    fn save(&self, w: &mut SnapWriter) {
+        self.0.save(w);
+        self.1.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok((A::load(r)?, B::load(r)?))
+    }
+}
+
+impl<A: Persist, B: Persist, C: Persist> Persist for (A, B, C) {
+    fn save(&self, w: &mut SnapWriter) {
+        self.0.save(w);
+        self.1.save(w);
+        self.2.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok((A::load(r)?, B::load(r)?, C::load(r)?))
+    }
+}
+
+// ---- fault-subsystem types ------------------------------------------
+
+impl Persist for ScenarioPhase {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(self.bits());
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let bits = r.get_u64()?;
+        // No public from-bits constructor: rebuild by unioning singles.
+        Ok((0..64)
+            .filter(|&i| bits & (1u64 << i) != 0)
+            .fold(ScenarioPhase::QUIESCENT, |p, i| {
+                p.union(ScenarioPhase::single(i))
+            }))
+    }
+}
+
+impl Persist for NodeFault {
+    fn save(&self, w: &mut SnapWriter) {
+        self.speed_factor.save(w);
+        self.jitter_sigma.save(w);
+        self.stall_mean_ns.save(w);
+        self.latency_factor.save(w);
+        self.extra_drop_prob.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            speed_factor: f64::load(r)?,
+            jitter_sigma: f64::load(r)?,
+            stall_mean_ns: f64::load(r)?,
+            latency_factor: f64::load(r)?,
+            extra_drop_prob: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for LinkFault {
+    fn save(&self, w: &mut SnapWriter) {
+        self.latency_factor.save(w);
+        self.extra_drop_prob.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            latency_factor: f64::load(r)?,
+            extra_drop_prob: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for FaultKind {
+    fn save(&self, w: &mut SnapWriter) {
+        match self {
+            FaultKind::DegradeNode { node, fault } => {
+                w.put_u8(0);
+                node.save(w);
+                fault.save(w);
+            }
+            FaultKind::RestoreNode { node } => {
+                w.put_u8(1);
+                node.save(w);
+            }
+            FaultKind::FlapLink { node, on_for, off_for, fault } => {
+                w.put_u8(2);
+                node.save(w);
+                on_for.save(w);
+                off_for.save(w);
+                fault.save(w);
+            }
+            FaultKind::CongestionStorm { fault } => {
+                w.put_u8(3);
+                fault.save(w);
+            }
+            FaultKind::PartitionCliques { cliques, cut } => {
+                w.put_u8(4);
+                cliques.save(w);
+                cut.save(w);
+            }
+            FaultKind::Heal => w.put_u8(5),
+            FaultKind::ProcLeave { proc } => {
+                w.put_u8(6);
+                proc.save(w);
+            }
+            FaultKind::ProcJoin { proc } => {
+                w.put_u8(7);
+                proc.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(match r.get_u8()? {
+            0 => FaultKind::DegradeNode {
+                node: usize::load(r)?,
+                fault: NodeFault::load(r)?,
+            },
+            1 => FaultKind::RestoreNode { node: usize::load(r)? },
+            2 => FaultKind::FlapLink {
+                node: usize::load(r)?,
+                on_for: u64::load(r)?,
+                off_for: u64::load(r)?,
+                fault: LinkFault::load(r)?,
+            },
+            3 => FaultKind::CongestionStorm { fault: LinkFault::load(r)? },
+            4 => FaultKind::PartitionCliques {
+                cliques: usize::load(r)?,
+                cut: LinkFault::load(r)?,
+            },
+            5 => FaultKind::Heal,
+            6 => FaultKind::ProcLeave { proc: usize::load(r)? },
+            7 => FaultKind::ProcJoin { proc: usize::load(r)? },
+            _ => return Err(SnapError::Corrupt("fault-kind tag")),
+        })
+    }
+}
+
+impl Persist for FaultEvent {
+    fn save(&self, w: &mut SnapWriter) {
+        self.start.save(w);
+        self.duration.save(w);
+        self.kind.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            start: u64::load(r)?,
+            duration: u64::load(r)?,
+            kind: FaultKind::load(r)?,
+        })
+    }
+}
+
+impl Persist for FaultScenario {
+    fn save(&self, w: &mut SnapWriter) {
+        self.events.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self { events: Vec::load(r)? })
+    }
+}
+
+// ---- net / topology types -------------------------------------------
+
+impl Persist for NodeProfile {
+    fn save(&self, w: &mut SnapWriter) {
+        self.speed_factor.save(w);
+        self.jitter_sigma.save(w);
+        self.stall_prob.save(w);
+        self.stall_mean_ns.save(w);
+        self.latency_factor.save(w);
+        self.extra_drop_prob.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            speed_factor: f64::load(r)?,
+            jitter_sigma: f64::load(r)?,
+            stall_prob: f64::load(r)?,
+            stall_mean_ns: f64::load(r)?,
+            latency_factor: f64::load(r)?,
+            extra_drop_prob: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for LinkModel {
+    fn save(&self, w: &mut SnapWriter) {
+        self.wire_median_ns.save(w);
+        self.wire_sigma.save(w);
+        self.service_ns.save(w);
+        self.coalesce_ns.save(w);
+        self.base_drop_prob.save(w);
+        self.spike_prob.save(w);
+        self.spike_mean_ns.save(w);
+        self.send_overhead_ns.save(w);
+        self.pull_overhead_ns.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            wire_median_ns: f64::load(r)?,
+            wire_sigma: f64::load(r)?,
+            service_ns: f64::load(r)?,
+            coalesce_ns: u64::load(r)?,
+            base_drop_prob: f64::load(r)?,
+            spike_prob: f64::load(r)?,
+            spike_mean_ns: f64::load(r)?,
+            send_overhead_ns: f64::load(r)?,
+            pull_overhead_ns: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for PlacementKind {
+    fn save(&self, w: &mut SnapWriter) {
+        match self {
+            PlacementKind::SingleNode => w.put_u8(0),
+            PlacementKind::OnePerNode => w.put_u8(1),
+            PlacementKind::PerNode(k) => {
+                w.put_u8(2);
+                k.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(match r.get_u8()? {
+            0 => PlacementKind::SingleNode,
+            1 => PlacementKind::OnePerNode,
+            2 => PlacementKind::PerNode(usize::load(r)?),
+            _ => return Err(SnapError::Corrupt("placement tag")),
+        })
+    }
+}
+
+// ---- qos types -------------------------------------------------------
+
+impl Persist for CounterTranche {
+    fn save(&self, w: &mut SnapWriter) {
+        self.attempted_sends.save(w);
+        self.successful_sends.save(w);
+        self.pull_attempts.save(w);
+        self.laden_pulls.save(w);
+        self.messages_received.save(w);
+        self.touches.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            attempted_sends: u64::load(r)?,
+            successful_sends: u64::load(r)?,
+            pull_attempts: u64::load(r)?,
+            laden_pulls: u64::load(r)?,
+            messages_received: u64::load(r)?,
+            touches: u64::load(r)?,
+        })
+    }
+}
+
+impl Persist for QosObservation {
+    fn save(&self, w: &mut SnapWriter) {
+        self.counters.save(w);
+        self.update_count.save(w);
+        self.wall_ns.save(w);
+        self.phase.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            counters: CounterTranche::load(r)?,
+            update_count: u64::load(r)?,
+            wall_ns: u64::load(r)?,
+            phase: ScenarioPhase::load(r)?,
+        })
+    }
+}
+
+impl Persist for SnapshotWindow {
+    fn save(&self, w: &mut SnapWriter) {
+        self.inlet_before.save(w);
+        self.inlet_after.save(w);
+        self.outlet_before.save(w);
+        self.outlet_after.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            inlet_before: QosObservation::load(r)?,
+            inlet_after: QosObservation::load(r)?,
+            outlet_before: QosObservation::load(r)?,
+            outlet_after: QosObservation::load(r)?,
+        })
+    }
+}
+
+impl Persist for SnapshotSchedule {
+    fn save(&self, w: &mut SnapWriter) {
+        self.first_at.save(w);
+        self.every.save(w);
+        self.window.save(w);
+        self.count.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            first_at: u64::load(r)?,
+            every: u64::load(r)?,
+            window: u64::load(r)?,
+            count: usize::load(r)?,
+        })
+    }
+}
+
+// ---- sim / workload types --------------------------------------------
+
+impl Persist for AsyncMode {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(self.index() as u8);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        AsyncMode::from_index(r.get_u8()? as usize).ok_or(SnapError::Corrupt("async-mode tag"))
+    }
+}
+
+impl Persist for ModeTiming {
+    fn save(&self, w: &mut SnapWriter) {
+        self.rolling_chunk.save(w);
+        self.fixed_epoch.save(w);
+        self.fixed_skew_max.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            rolling_chunk: u64::load(r)?,
+            fixed_epoch: u64::load(r)?,
+            fixed_skew_max: u64::load(r)?,
+        })
+    }
+}
+
+impl Persist for SchedKind {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(match self {
+            SchedKind::Heap => 0,
+            SchedKind::Calendar => 1,
+        });
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(match r.get_u8()? {
+            0 => SchedKind::Heap,
+            1 => SchedKind::Calendar,
+            _ => return Err(SnapError::Corrupt("sched-kind tag")),
+        })
+    }
+}
+
+impl Persist for ChannelSpec {
+    fn save(&self, w: &mut SnapWriter) {
+        self.peer.save(w);
+        self.layer.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            peer: usize::load(r)?,
+            layer: usize::load(r)?,
+        })
+    }
+}
+
+impl Persist for TilePartition {
+    fn save(&self, w: &mut SnapWriter) {
+        self.mesh_rows.save(w);
+        self.mesh_cols.save(w);
+        self.tile_h.save(w);
+        self.tile_w.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            mesh_rows: usize::load(r)?,
+            mesh_cols: usize::load(r)?,
+            tile_h: usize::load(r)?,
+            tile_w: usize::load(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip<T: Persist + std::fmt::Debug + PartialEq>(x: T) {
+        let mut w = SnapWriter::new();
+        x.save(&mut w);
+        let bytes = w.finish();
+        let mut r = SnapReader::new(&bytes).unwrap();
+        let y = T::load(&mut r).unwrap();
+        assert_eq!(x, y);
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn header_validated() {
+        let empty = SnapWriter::new().finish();
+        assert!(SnapReader::new(&empty).is_ok());
+        assert_eq!(SnapReader::new(b"NOPE1234"), err_kind(SnapError::BadMagic));
+        assert_eq!(SnapReader::new(b"EB"), err_kind(SnapError::Truncated));
+        let mut bad_ver = empty.clone();
+        bad_ver[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert_eq!(
+            SnapReader::new(&bad_ver),
+            err_kind(SnapError::BadVersion(99))
+        );
+    }
+
+    fn err_kind<T>(e: SnapError) -> Result<T, SnapError> {
+        Err(e)
+    }
+
+    impl<'a> std::fmt::Debug for SnapReader<'a> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "SnapReader(at {}/{})", self.at, self.buf.len())
+        }
+    }
+
+    impl<'a> PartialEq for SnapReader<'a> {
+        fn eq(&self, _: &Self) -> bool {
+            false // only used for asserting Err cases above
+        }
+    }
+
+    #[test]
+    fn primitive_round_trips() {
+        round_trip(0u8);
+        round_trip(255u8);
+        round_trip(u32::MAX);
+        round_trip(u64::MAX);
+        round_trip(usize::MAX);
+        round_trip(true);
+        round_trip(false);
+        round_trip(-0.0f64); // bitwise: -0.0 stays -0.0
+        round_trip(f64::INFINITY);
+        round_trip(vec![1u64, 2, 3]);
+        round_trip(Vec::<u64>::new());
+        round_trip(Some(7usize));
+        round_trip(None::<u64>);
+        round_trip((1u64, 2usize));
+        round_trip((1u64, 2usize, true));
+        round_trip([1u64, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nan_round_trips_bitwise() {
+        let x = f64::NAN;
+        let mut w = SnapWriter::new();
+        x.save(&mut w);
+        let bytes = w.finish();
+        let mut r = SnapReader::new(&bytes).unwrap();
+        let y = f64::load(&mut r).unwrap();
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = SnapWriter::new();
+        vec![1u64, 2, 3].save(&mut w);
+        let bytes = w.finish();
+        // Cut the blob mid-element.
+        let cut = &bytes[..bytes.len() - 4];
+        let mut r = SnapReader::new(cut).unwrap();
+        assert_eq!(Vec::<u64>::load(&mut r), Err(SnapError::Truncated));
+    }
+
+    #[test]
+    fn bad_tags_are_corrupt() {
+        let mut w = SnapWriter::new();
+        w.put_u8(9);
+        let bytes = w.finish();
+        let mut r = SnapReader::new(&bytes).unwrap();
+        assert_eq!(bool::load(&mut r), Err(SnapError::Corrupt("bool tag")));
+        let mut r = SnapReader::new(&bytes).unwrap();
+        assert_eq!(
+            FaultKind::load(&mut r),
+            Err(SnapError::Corrupt("fault-kind tag"))
+        );
+    }
+
+    #[test]
+    fn domain_round_trips() {
+        round_trip(ScenarioPhase::single(0).union(ScenarioPhase::single(63)));
+        round_trip(ScenarioPhase::QUIESCENT);
+        round_trip(NodeFault::lac417());
+        round_trip(LinkFault::storm());
+        round_trip(FaultKind::DegradeNode { node: 3, fault: NodeFault::fail_stop() });
+        round_trip(FaultKind::FlapLink {
+            node: 1,
+            on_for: 5,
+            off_for: 7,
+            fault: LinkFault::flap(),
+        });
+        round_trip(FaultKind::Heal);
+        round_trip(FaultKind::ProcLeave { proc: 17 });
+        round_trip(FaultKind::ProcJoin { proc: 17 });
+        round_trip(FaultScenario::leave_join_storm(64, 100, 1_000, 8));
+        round_trip(FaultScenario::default());
+        round_trip(NodeProfile::healthy());
+        round_trip(CounterTranche {
+            attempted_sends: 1,
+            successful_sends: 2,
+            pull_attempts: 3,
+            laden_pulls: 4,
+            messages_received: 5,
+            touches: 6,
+        });
+        round_trip(ChannelSpec { peer: 9, layer: 102 });
+        round_trip(TilePartition {
+            mesh_rows: 8,
+            mesh_cols: 8,
+            tile_h: 4,
+            tile_w: 4,
+        });
+    }
+
+    #[test]
+    fn enum_like_round_trips() {
+        // These types lack PartialEq; compare re-serialized bytes.
+        fn bytes_of<T: Persist>(x: &T) -> Vec<u8> {
+            let mut w = SnapWriter::new();
+            x.save(&mut w);
+            w.finish()
+        }
+        for mode in AsyncMode::ALL {
+            let b = bytes_of(&mode);
+            let mut r = SnapReader::new(&b).unwrap();
+            let back = AsyncMode::load(&mut r).unwrap();
+            assert_eq!(mode, back);
+        }
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let b = bytes_of(&kind);
+            let mut r = SnapReader::new(&b).unwrap();
+            let back = SchedKind::load(&mut r).unwrap();
+            assert_eq!(bytes_of(&back), b);
+        }
+        for p in [
+            PlacementKind::SingleNode,
+            PlacementKind::OnePerNode,
+            PlacementKind::PerNode(4),
+        ] {
+            let b = bytes_of(&p);
+            let mut r = SnapReader::new(&b).unwrap();
+            let back = PlacementKind::load(&mut r).unwrap();
+            assert_eq!(bytes_of(&back), b);
+        }
+        for x in [
+            LinkModel::internode(),
+            LinkModel::intranode(),
+            LinkModel::thread_shared_memory(),
+        ] {
+            let b = bytes_of(&x);
+            let mut r = SnapReader::new(&b).unwrap();
+            let back = LinkModel::load(&mut r).unwrap();
+            assert_eq!(bytes_of(&back), b);
+        }
+        let sched = SnapshotSchedule::paper();
+        let b = bytes_of(&sched);
+        let mut r = SnapReader::new(&b).unwrap();
+        let back = SnapshotSchedule::load(&mut r).unwrap();
+        assert_eq!(bytes_of(&back), b);
+        let t = ModeTiming::graph_coloring(64);
+        let b = bytes_of(&t);
+        let mut r = SnapReader::new(&b).unwrap();
+        let back = ModeTiming::load(&mut r).unwrap();
+        assert_eq!(bytes_of(&back), b);
+    }
+}

@@ -21,13 +21,12 @@
 //!   cost growing logarithmically in process count.
 
 use super::calendar::{SchedKind, Scheduler};
+use super::checkpoint::{Persist, SnapError, SnapReader, SnapWriter};
 use super::lanes::EnvelopeLanes;
 use super::modes::{AsyncMode, ModeTiming};
 use crate::conduit::{CounterTranche, LocalChannelStats, SendOutcome, StatsSink};
-use crate::faults::{FaultRuntime, FaultScenario, ScenarioPhase};
-use crate::net::{LinkModel, NodeProfile, Topology};
-#[cfg(test)]
-use crate::net::PlacementKind;
+use crate::faults::{FaultKind, FaultRuntime, FaultScenario, ScenarioPhase};
+use crate::net::{LinkModel, NodeProfile, PlacementKind, Topology};
 use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::{Nanos, MICRO};
@@ -158,6 +157,10 @@ struct SimChannel<M> {
     src_ch: usize,
     /// Channel index within the destination's channel list (reciprocal).
     dst_ch: usize,
+    /// Workload layer tag of the source's spec — retained so membership
+    /// rejoin can re-derive the reciprocal wiring through the
+    /// [`SpecIndex`] instead of trusting possibly-stale cached indices.
+    layer: usize,
     /// Hosting nodes of the endpoints (cached off the topology so the
     /// fault overlay's per-send effective-parameter lookup is O(1)).
     src_node: usize,
@@ -270,6 +273,13 @@ pub struct SimResult<W> {
     /// Global delivery accounting.
     pub attempted_sends: u64,
     pub successful_sends: u64,
+    /// Messages actually retrieved by receiver pulls.
+    pub messages_delivered: u64,
+    /// Messages discarded from channels when their receiver departed the
+    /// allocation (membership churn). Zero for churn-free runs.
+    pub messages_purged: u64,
+    /// Messages still queued in channels at run end.
+    pub messages_in_flight: u64,
 }
 
 impl<W> SimResult<W> {
@@ -290,6 +300,15 @@ impl<W> SimResult<W> {
         } else {
             1.0 - self.successful_sends as f64 / self.attempted_sends as f64
         }
+    }
+
+    /// Message-conservation invariant: every send accepted into a channel
+    /// was delivered, purged on receiver departure, or is still in
+    /// flight. Cross-checks the per-channel stats cells against the lane
+    /// bookkeeping; chaos campaigns assert this on every timeline.
+    pub fn conserves_messages(&self) -> bool {
+        self.successful_sends
+            == self.messages_delivered + self.messages_purged + self.messages_in_flight
     }
 }
 
@@ -327,6 +346,26 @@ pub struct Engine<W: ShardWorkload> {
     /// [`Scheduler::push_batch_same_t`] call (which drains it back to
     /// empty), instead of N independent pushes per barrier.
     wake_batch: Vec<Ev>,
+    /// Membership: is process `p` currently part of the allocation?
+    /// All-true for churn-free scenarios (and never consulted on their
+    /// hot paths in a way that changes behaviour).
+    live: Vec<bool>,
+    /// `live.iter().filter(|&&l| l).count()`, maintained incrementally —
+    /// barrier releases wait for exactly the live participants.
+    live_count: usize,
+    /// Messages discarded from channels whose receiver departed.
+    purged: u64,
+    /// Is a `Ev::Wake(p)` currently in the scheduler (or an arrival
+    /// recorded at the barrier)? Rejoin schedules a wake only when this
+    /// is false, so a process can never hold two wake events at once.
+    wake_armed: Vec<bool>,
+    /// Processes named by any churn event, sorted and deduplicated —
+    /// the only ones membership reconciliation must inspect. Empty for
+    /// churn-free scenarios, which short-circuits reconciliation.
+    churn_procs: Vec<usize>,
+    /// Retained channel-spec index: rejoin re-derives reciprocal wiring
+    /// through it (the same CSR lookup construction used).
+    spec_index: SpecIndex,
 }
 
 impl<W: ShardWorkload> Engine<W> {
@@ -340,7 +379,12 @@ impl<W: ShardWorkload> Engine<W> {
     ) -> Self {
         assert_eq!(shards.len(), topo.n_procs());
         assert_eq!(profiles.len(), topo.n_nodes(), "one profile per node");
+        cfg.scenario.validate_procs(topo.n_procs());
         let mut seed_rng = Xoshiro256::new(cfg.seed);
+
+        // Processes named by churn events: the only ones membership
+        // reconciliation ever inspects after a fault transition.
+        let churn_procs = churn_procs_of(&cfg.scenario);
 
         // Gather channel specs per process.
         let specs: Vec<Vec<ChannelSpec>> = shards.iter().map(|s| s.channels()).collect();
@@ -388,6 +432,7 @@ impl<W: ShardWorkload> Engine<W> {
                     dst: spec.peer,
                     src_ch,
                     dst_ch,
+                    layer: spec.layer,
                     src_node: topo.node_of(src),
                     dst_node: topo.node_of(spec.peer),
                     crossnode: !topo.same_node(src, spec.peer),
@@ -530,6 +575,13 @@ impl<W: ShardWorkload> Engine<W> {
             engine_rng,
             pull_scratch: Vec::new(),
             wake_batch,
+            live: vec![true; n],
+            live_count: n,
+            purged: 0,
+            // Every process has its t=0 wake in the scheduler.
+            wake_armed: vec![true; n],
+            churn_procs,
+            spec_index,
         }
     }
 
@@ -540,22 +592,48 @@ impl<W: ShardWorkload> Engine<W> {
 
     /// Run to completion and return results.
     pub fn run(mut self) -> SimResult<W> {
-        while let Some((t, _, ev)) = self.sched.pop() {
+        self.run_until(Nanos::MAX);
+        self.finish()
+    }
+
+    /// Advance the event loop until the next event would fire at or after
+    /// `until` (that event stays queued, untouched) or the run ends.
+    /// Returns `true` when the run is over — the queue drained or the
+    /// next event lay beyond `run_for` (dropped, exactly as [`Self::run`]
+    /// drops the boundary event). Checkpoints are taken at the quiescent
+    /// point this leaves the engine in: strictly between events.
+    pub fn run_until(&mut self, until: Nanos) -> bool {
+        while let Some((t, sq, ev)) = self.sched.pop() {
             if t > self.cfg.run_for {
-                break;
+                return true;
+            }
+            if t >= until {
+                // Re-queue with its original key: the (t, seq) stream —
+                // and hence the simulation — is unchanged by the pause.
+                self.sched.push(t, sq, ev);
+                return false;
             }
             match ev {
-                Ev::Wake(p) => self.step_process(p, t),
+                Ev::Wake(p) => {
+                    self.wake_armed[p] = false;
+                    self.step_process(p, t);
+                }
                 Ev::SnapOpen(_) => self.snapshot_open(t),
                 Ev::SnapClose(_) => self.snapshot_close(t),
                 Ev::Fault(k) => self.fault_event(k, t),
             }
         }
+        true
+    }
 
+    /// Consume the engine and assemble the replicate result.
+    pub fn finish(self) -> SimResult<W> {
         let qos = ReplicateQos::from_windows(&self.windows);
         let mut totals = CounterTranche::default();
+        let mut in_flight = 0u64;
         for ch in &self.channels {
             totals.add(&ch.stats.tranche());
+            in_flight += ch.lanes.len() as u64;
         }
         SimResult {
             updates: self.procs.iter().map(|p| p.updates).collect(),
@@ -565,12 +643,20 @@ impl<W: ShardWorkload> Engine<W> {
             windows: self.windows,
             attempted_sends: totals.attempted_sends,
             successful_sends: totals.successful_sends,
+            messages_delivered: totals.messages_received,
+            messages_purged: self.purged,
+            messages_in_flight: in_flight,
         }
     }
 
     /// Execute one full simstep for process `p`, waking at time `t`.
     fn step_process(&mut self, p: usize, t: Nanos) {
         if self.procs[p].finished {
+            return;
+        }
+        // A departed process does nothing — its wake lapses (disarmed by
+        // the pop) and rejoin re-arms one.
+        if !self.live[p] {
             return;
         }
         let mut now = t;
@@ -624,8 +710,16 @@ impl<W: ShardWorkload> Engine<W> {
             None => self.profiles[node],
         };
         let co_resident = self.topo.procs_on_node_of(p);
-        let nominal = self.procs[p].workload.step_cost_ns()
+        let mut nominal = self.procs[p].workload.step_cost_ns()
             + self.cfg.added_work_units as f64 * crate::workloads::workunit::WORK_UNIT_WALL_NS;
+        // Membership churn re-partitions the global workload over the
+        // live set: with fewer participants each survivor owns a larger
+        // share, so per-update cost scales up proportionally. Strict
+        // inequality keeps churn-free runs on the untouched path,
+        // bit-identically.
+        if self.live_count < self.procs.len() {
+            nominal *= self.procs.len() as f64 / self.live_count as f64;
+        }
         let contention = self.cfg.contention.factor(co_resident);
         let dur = {
             let rng = &mut self.procs[p].rng;
@@ -646,6 +740,15 @@ impl<W: ShardWorkload> Engine<W> {
                 let outcome = {
                     let ch = &mut self.channels[cid];
                     now += ch.link.send_overhead_ns as Nanos;
+                    if !self.live[ch.dst] {
+                        // Departed receiver: the channel stops accepting
+                        // sends. Best-effort modes count these as
+                        // delivery failures like any other drop; sync
+                        // modes never deadlock on them because barriers
+                        // exclude departed participants.
+                        ch.stats.on_send_attempt(false);
+                        continue;
+                    }
                     // Effective link parameters: the static bake, or the
                     // fault overlay's current view when a scenario is
                     // loaded (degraded endpoints slow the send-buffer
@@ -708,6 +811,7 @@ impl<W: ShardWorkload> Engine<W> {
         if enter_barrier {
             self.arrive_barrier(p, now);
         } else {
+            self.wake_armed[p] = true;
             self.schedule(now, Ev::Wake(p));
         }
     }
@@ -717,35 +821,50 @@ impl<W: ShardWorkload> Engine<W> {
         self.barrier_waiting[p] = true;
         self.barrier_count += 1;
         self.barrier_max_arrival = self.barrier_max_arrival.max(t);
-        if self.barrier_count == self.procs.len() {
-            // Release everyone: N wakes at one timestamp with
-            // consecutive seqs — handed to the scheduler as a single
-            // batch (same seq stream as the former push loop, so the
-            // event order is bit-identical; the batched-vs-looped
-            // equivalence is pinned by `tests/prop_calendar.rs` and the
-            // 1024-proc barrier-storm signature test).
-            let release = self.barrier_max_arrival
-                + self.cfg.barrier_cost(self.procs.len(), &mut self.engine_rng);
-            self.barrier_count = 0;
-            self.barrier_max_arrival = 0;
-            let mut batch = std::mem::take(&mut self.wake_batch);
-            debug_assert!(batch.is_empty());
-            for q in 0..self.procs.len() {
-                self.barrier_waiting[q] = false;
-                let proc = &mut self.procs[q];
-                proc.clock = release;
-                proc.chunk_start = release;
-                // Advance the fixed sync point past the release.
-                while proc.next_fixed_sync <= release {
-                    proc.next_fixed_sync += self.cfg.timing.fixed_epoch;
-                }
-                batch.push(Ev::Wake(q));
-            }
-            let n = batch.len() as u64;
-            self.sched.push_batch_same_t(release, self.seq, &mut batch);
-            self.seq += n;
-            self.wake_batch = batch;
+        self.maybe_release_barrier(t);
+    }
+
+    /// Release the barrier when every *live* participant has arrived.
+    /// Called on each arrival and on each departure — a process leaving
+    /// mid-epoch can be the event that completes the barrier, so sync
+    /// modes never deadlock on departed participants.
+    fn maybe_release_barrier(&mut self, t: Nanos) {
+        if self.barrier_count == 0 || self.barrier_count != self.live_count {
+            return;
         }
+        // Release everyone waiting: N wakes at one timestamp with
+        // consecutive seqs — handed to the scheduler as a single
+        // batch (same seq stream as the former push loop, so the
+        // event order is bit-identical; the batched-vs-looped
+        // equivalence is pinned by `tests/prop_calendar.rs` and the
+        // 1024-proc barrier-storm signature test). `max(t)` matters only
+        // on departure-triggered releases, where the departure time can
+        // exceed every recorded arrival.
+        let release = self.barrier_max_arrival.max(t)
+            + self.cfg.barrier_cost(self.live_count, &mut self.engine_rng);
+        self.barrier_count = 0;
+        self.barrier_max_arrival = 0;
+        let mut batch = std::mem::take(&mut self.wake_batch);
+        debug_assert!(batch.is_empty());
+        for q in 0..self.procs.len() {
+            if !self.barrier_waiting[q] {
+                continue;
+            }
+            self.barrier_waiting[q] = false;
+            self.wake_armed[q] = true;
+            let proc = &mut self.procs[q];
+            proc.clock = release;
+            proc.chunk_start = release;
+            // Advance the fixed sync point past the release.
+            while proc.next_fixed_sync <= release {
+                proc.next_fixed_sync += self.cfg.timing.fixed_epoch;
+            }
+            batch.push(Ev::Wake(q));
+        }
+        let n = batch.len() as u64;
+        self.sched.push_batch_same_t(release, self.seq, &mut batch);
+        self.seq += n;
+        self.wake_batch = batch;
     }
 
     fn snapshot_open(&mut self, t: Nanos) {
@@ -823,10 +942,519 @@ impl<W: ShardWorkload> Engine<W> {
         if let Some(tn) = next {
             self.schedule(tn, Ev::Fault(k));
         }
+        self.reconcile_membership(t);
+    }
+
+    /// Sync the engine's live set with the overlay's view of departed
+    /// processes after a fault transition. No-op (and not even a scan)
+    /// for churn-free scenarios.
+    fn reconcile_membership(&mut self, t: Nanos) {
+        for i in 0..self.churn_procs.len() {
+            let p = self.churn_procs[i];
+            let departed = self
+                .faults
+                .as_ref()
+                .is_some_and(|rt| rt.is_departed(p));
+            if departed && self.live[p] {
+                self.leave_proc(p, t);
+            } else if !departed && !self.live[p] {
+                self.join_proc(p, t);
+            }
+        }
+    }
+
+    /// Process `p` departs the allocation at time `t`: its channels stop
+    /// accepting sends (see the send phase), queued messages addressed to
+    /// it are purged, and barrier protocols exclude it — releasing any
+    /// barrier its departure completes.
+    fn leave_proc(&mut self, p: usize, t: Nanos) {
+        self.live[p] = false;
+        self.live_count -= 1;
+        if self.barrier_waiting[p] {
+            self.barrier_waiting[p] = false;
+            self.barrier_count -= 1;
+        }
+        // Purge everything queued toward the departed process. The purge
+        // is deliberately NOT a pull (no `on_pull` stats): the messages
+        // were never received — `SimResult::messages_purged` accounts
+        // for them so conservation stays checkable.
+        let mut scratch = std::mem::take(&mut self.pull_scratch);
+        for k in 0..self.procs[p].incoming.len() {
+            let (cid, _) = self.procs[p].incoming[k];
+            let ch = &mut self.channels[cid];
+            scratch.clear();
+            let summary = ch.lanes.drain_arrived_into(Nanos::MAX, &mut scratch);
+            ch.pulled += summary.drained;
+            self.purged += summary.drained;
+        }
+        scratch.clear();
+        self.pull_scratch = scratch;
+        self.maybe_release_barrier(t);
+    }
+
+    /// Process `p` rejoins the allocation at time `t`: clocks and sync
+    /// points move to the join instant, reciprocal wiring is re-derived
+    /// from the [`SpecIndex`], touch counters restart from zero (the
+    /// crash lost their state), and a wake is armed if none is pending.
+    fn join_proc(&mut self, p: usize, t: Nanos) {
+        self.live[p] = true;
+        self.live_count += 1;
+        let proc = &mut self.procs[p];
+        proc.clock = t;
+        proc.chunk_start = t;
+        while proc.next_fixed_sync <= t {
+            proc.next_fixed_sync += self.cfg.timing.fixed_epoch;
+        }
+        self.rewire_proc(p);
+        if !self.wake_armed[p] {
+            self.wake_armed[p] = true;
+            self.schedule(t, Ev::Wake(p));
+        }
+    }
+
+    /// Re-derive `p`'s reciprocal-channel wiring through the CSR spec
+    /// index (the construction-time lookup, re-run), and reset its touch
+    /// counters — a rejoining process starts its QoS relationships fresh.
+    fn rewire_proc(&mut self, p: usize) {
+        for k in 0..self.procs[p].incoming.len() {
+            let (cid, _) = self.procs[p].incoming[k];
+            let src = self.channels[cid].src;
+            let layer = self.channels[cid].layer;
+            self.procs[p].reciprocal_out[k] =
+                self.spec_index.lookup(p, src, reciprocal_layer(layer));
+        }
+        for tc in &mut self.procs[p].touch {
+            *tc = TouchCounter::default();
+        }
     }
 }
 
 use crate::workloads::reciprocal_layer;
+
+/// Processes named by any churn event of `scenario`, sorted + deduped —
+/// shared by construction and restore so both agree on the churn set.
+fn churn_procs_of(scenario: &FaultScenario) -> Vec<usize> {
+    let mut churn_procs: Vec<usize> = scenario
+        .events
+        .iter()
+        .filter_map(|ev| match ev.kind {
+            FaultKind::ProcLeave { proc } | FaultKind::ProcJoin { proc } => Some(proc),
+            _ => None,
+        })
+        .collect();
+    churn_procs.sort_unstable();
+    churn_procs.dedup();
+    churn_procs
+}
+
+// ---- checkpoint encodings of engine-local types --------------------
+
+impl Persist for Ev {
+    fn save(&self, w: &mut SnapWriter) {
+        match *self {
+            Ev::SnapOpen(i) => {
+                w.put_u8(0);
+                i.save(w);
+            }
+            Ev::SnapClose(i) => {
+                w.put_u8(1);
+                i.save(w);
+            }
+            Ev::Wake(p) => {
+                w.put_u8(2);
+                p.save(w);
+            }
+            Ev::Fault(k) => {
+                w.put_u8(3);
+                k.save(w);
+            }
+        }
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let tag = r.get_u8()?;
+        let v = usize::load(r)?;
+        Ok(match tag {
+            0 => Ev::SnapOpen(v),
+            1 => Ev::SnapClose(v),
+            2 => Ev::Wake(v),
+            3 => Ev::Fault(v),
+            _ => return Err(SnapError::Corrupt("Ev tag")),
+        })
+    }
+}
+
+impl Persist for CommBackend {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(match self {
+            CommBackend::Mpi => 0,
+            CommBackend::SharedMemory => 1,
+        });
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(CommBackend::Mpi),
+            1 => Ok(CommBackend::SharedMemory),
+            _ => Err(SnapError::Corrupt("CommBackend tag")),
+        }
+    }
+}
+
+impl Persist for ContentionModel {
+    fn save(&self, w: &mut SnapWriter) {
+        self.a.save(w);
+        self.b.save(w);
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            a: f64::load(r)?,
+            b: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for SimConfig {
+    fn save(&self, w: &mut SnapWriter) {
+        self.mode.save(w);
+        self.timing.save(w);
+        self.backend.save(w);
+        self.seed.save(w);
+        self.run_for.save(w);
+        self.added_work_units.save(w);
+        self.send_buffer.save(w);
+        self.cores_per_node.save(w);
+        self.contention.save(w);
+        self.barrier_base_ns.save(w);
+        self.barrier_per_log2_ns.save(w);
+        self.barrier_tail_ns.save(w);
+        self.snapshots.save(w);
+        self.coalesce_override.save(w);
+        self.sched.save(w);
+        self.scenario.save(w);
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            mode: AsyncMode::load(r)?,
+            timing: ModeTiming::load(r)?,
+            backend: CommBackend::load(r)?,
+            seed: u64::load(r)?,
+            run_for: u64::load(r)?,
+            added_work_units: u64::load(r)?,
+            send_buffer: usize::load(r)?,
+            cores_per_node: usize::load(r)?,
+            contention: ContentionModel::load(r)?,
+            barrier_base_ns: f64::load(r)?,
+            barrier_per_log2_ns: f64::load(r)?,
+            barrier_tail_ns: f64::load(r)?,
+            snapshots: Option::<SnapshotSchedule>::load(r)?,
+            coalesce_override: Option::<Nanos>::load(r)?,
+            sched: SchedKind::load(r)?,
+            scenario: FaultScenario::load(r)?,
+        })
+    }
+}
+
+// ---- engine checkpoint / restore -----------------------------------
+
+impl<W> Engine<W>
+where
+    W: ShardWorkload + Persist,
+    W::Msg: Persist,
+{
+    /// Serialize the complete engine state to a versioned binary blob.
+    ///
+    /// Must be called strictly between events — i.e. after
+    /// [`Self::run_until`] paused the loop (or before the first event).
+    /// Takes `&mut self` because the scheduler's contents can only be
+    /// observed by draining: every entry is popped, recorded, and pushed
+    /// back with its original `(t, seq)` key. Dequeue order depends only
+    /// on those keys, so the drain round-trip leaves the simulation
+    /// bit-identical — and two consecutive checkpoints are byte-equal.
+    pub fn checkpoint(&mut self) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        self.cfg.save(&mut w);
+        self.topo.n_procs().save(&mut w);
+        self.topo.placement().save(&mut w);
+        self.profiles.save(&mut w);
+
+        self.procs.len().save(&mut w);
+        for p in &self.procs {
+            p.workload.save(&mut w);
+            p.rng.state().save(&mut w);
+            p.clock.save(&mut w);
+            p.updates.save(&mut w);
+            p.outgoing.save(&mut w);
+            p.incoming.save(&mut w);
+            p.reciprocal_out.save(&mut w);
+            let touch: Vec<u64> = p.touch.iter().map(|t| t.value()).collect();
+            touch.save(&mut w);
+            p.chunk_start.save(&mut w);
+            p.next_fixed_sync.save(&mut w);
+            p.finished.save(&mut w);
+        }
+
+        self.channels.len().save(&mut w);
+        for ch in &self.channels {
+            ch.src.save(&mut w);
+            ch.dst.save(&mut w);
+            ch.src_ch.save(&mut w);
+            ch.dst_ch.save(&mut w);
+            ch.layer.save(&mut w);
+            ch.src_node.save(&mut w);
+            ch.dst_node.save(&mut w);
+            ch.crossnode.save(&mut w);
+            ch.link.save(&mut w);
+            ch.service_unscaled_ns.save(&mut w);
+            ch.latency_factor.save(&mut w);
+            ch.extra_drop.save(&mut w);
+            ch.last_depart.save(&mut w);
+            ch.last_arrival.save(&mut w);
+            ch.lanes.len().save(&mut w);
+            for (depart, arrival, touch, msg) in ch.lanes.iter() {
+                depart.save(&mut w);
+                arrival.save(&mut w);
+                touch.save(&mut w);
+                msg.save(&mut w);
+            }
+            ch.pushed.save(&mut w);
+            ch.pulled.save(&mut w);
+            ch.departed.save(&mut w);
+            ch.stats.tranche().save(&mut w);
+        }
+
+        // Scheduler: drain-and-restore. Entries come out in dequeue
+        // order, which is a pure function of the (t, seq) keys — pushing
+        // them straight back reproduces the identical stream.
+        let mut entries: Vec<(Nanos, u64, Ev)> = Vec::with_capacity(self.sched.len());
+        while let Some(e) = self.sched.pop() {
+            entries.push(e);
+        }
+        entries.save(&mut w);
+        for &(t, sq, ev) in &entries {
+            self.sched.push(t, sq, ev);
+        }
+
+        self.seq.save(&mut w);
+        self.barrier_waiting.save(&mut w);
+        self.barrier_count.save(&mut w);
+        self.barrier_max_arrival.save(&mut w);
+        self.snap_open.save(&mut w);
+        self.windows.save(&mut w);
+        let overlay: Option<Vec<u8>> = self.faults.as_ref().map(|rt| rt.export_states());
+        overlay.save(&mut w);
+        self.window_phase.save(&mut w);
+        self.engine_rng.state().save(&mut w);
+        self.live.save(&mut w);
+        self.live_count.save(&mut w);
+        self.purged.save(&mut w);
+        self.wake_armed.save(&mut w);
+        w.finish()
+    }
+
+    /// Rebuild an engine from a [`Self::checkpoint`] blob. Resuming the
+    /// restored engine is bit-identical to never having paused.
+    pub fn restore(bytes: &[u8]) -> Result<Self, SnapError> {
+        Self::restore_impl(bytes, None)
+    }
+
+    /// Restore, but back the wake queue with scheduler `kind` regardless
+    /// of what the checkpointed config says. Both kinds dequeue the
+    /// same (t, seq) stream, so cross-kind restores stay bit-identical —
+    /// pinned by `tests/integration_checkpoint.rs`.
+    pub fn restore_with_sched(bytes: &[u8], kind: SchedKind) -> Result<Self, SnapError> {
+        Self::restore_impl(bytes, Some(kind))
+    }
+
+    fn restore_impl(
+        bytes: &[u8],
+        sched_override: Option<SchedKind>,
+    ) -> Result<Self, SnapError> {
+        let mut r = SnapReader::new(bytes)?;
+        let mut cfg = SimConfig::load(&mut r)?;
+        let n_procs = usize::load(&mut r)?;
+        let placement = PlacementKind::load(&mut r)?;
+        let topo = Topology::new(n_procs, placement);
+        let profiles = Vec::<NodeProfile>::load(&mut r)?;
+        if profiles.len() != topo.n_nodes() {
+            return Err(SnapError::Corrupt("profile count"));
+        }
+
+        let n = usize::load(&mut r)?;
+        if n != n_procs {
+            return Err(SnapError::Corrupt("proc count"));
+        }
+        let mut procs: Vec<ProcState<W>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let workload = W::load(&mut r)?;
+            let rng = Xoshiro256::from_state(<[u64; 4]>::load(&mut r)?);
+            let clock = Nanos::load(&mut r)?;
+            let updates = u64::load(&mut r)?;
+            let outgoing = Vec::<usize>::load(&mut r)?;
+            let incoming = Vec::<(usize, usize)>::load(&mut r)?;
+            let reciprocal_out = Vec::<Option<usize>>::load(&mut r)?;
+            let touch_vals = Vec::<u64>::load(&mut r)?;
+            if touch_vals.len() != outgoing.len() {
+                return Err(SnapError::Corrupt("touch counter count"));
+            }
+            let touch = touch_vals.into_iter().map(TouchCounter::from_value).collect();
+            let chunk_start = Nanos::load(&mut r)?;
+            let next_fixed_sync = Nanos::load(&mut r)?;
+            let finished = bool::load(&mut r)?;
+            procs.push(ProcState {
+                workload,
+                rng,
+                clock,
+                updates,
+                outgoing,
+                incoming,
+                reciprocal_out,
+                touch,
+                chunk_start,
+                next_fixed_sync,
+                finished,
+            });
+        }
+
+        let n_ch = usize::load(&mut r)?;
+        let mut channels: Vec<SimChannel<W::Msg>> = Vec::with_capacity(n_ch);
+        for _ in 0..n_ch {
+            let src = usize::load(&mut r)?;
+            let dst = usize::load(&mut r)?;
+            let src_ch = usize::load(&mut r)?;
+            let dst_ch = usize::load(&mut r)?;
+            let layer = usize::load(&mut r)?;
+            let src_node = usize::load(&mut r)?;
+            let dst_node = usize::load(&mut r)?;
+            let crossnode = bool::load(&mut r)?;
+            let link = LinkModel::load(&mut r)?;
+            let service_unscaled_ns = f64::load(&mut r)?;
+            let latency_factor = f64::load(&mut r)?;
+            let extra_drop = f64::load(&mut r)?;
+            let last_depart = Nanos::load(&mut r)?;
+            let last_arrival = Nanos::load(&mut r)?;
+            let n_lanes = usize::load(&mut r)?;
+            let mut lanes = EnvelopeLanes::new();
+            for _ in 0..n_lanes {
+                let depart = Nanos::load(&mut r)?;
+                let arrival = Nanos::load(&mut r)?;
+                let touch = u64::load(&mut r)?;
+                let msg = W::Msg::load(&mut r)?;
+                lanes.push(depart, arrival, touch, msg);
+            }
+            let pushed = u64::load(&mut r)?;
+            let pulled = u64::load(&mut r)?;
+            let departed = u64::load(&mut r)?;
+            let tranche = CounterTranche::load(&mut r)?;
+            if src >= n || dst >= n {
+                return Err(SnapError::Corrupt("channel endpoint"));
+            }
+            channels.push(SimChannel {
+                src,
+                dst,
+                src_ch,
+                dst_ch,
+                layer,
+                src_node,
+                dst_node,
+                crossnode,
+                link,
+                service_unscaled_ns,
+                latency_factor,
+                extra_drop,
+                last_depart,
+                last_arrival,
+                lanes,
+                pushed,
+                pulled,
+                departed,
+                stats: LocalChannelStats::from_tranche(&tranche),
+            });
+        }
+
+        let entries = Vec::<(Nanos, u64, Ev)>::load(&mut r)?;
+        let seq = u64::load(&mut r)?;
+        let barrier_waiting = Vec::<bool>::load(&mut r)?;
+        let barrier_count = usize::load(&mut r)?;
+        let barrier_max_arrival = Nanos::load(&mut r)?;
+        let snap_open = Vec::<(QosObservation, QosObservation)>::load(&mut r)?;
+        let windows = Vec::<SnapshotWindow>::load(&mut r)?;
+        let overlay_states = Option::<Vec<u8>>::load(&mut r)?;
+        let window_phase = ScenarioPhase::load(&mut r)?;
+        let engine_rng = Xoshiro256::from_state(<[u64; 4]>::load(&mut r)?);
+        let live = Vec::<bool>::load(&mut r)?;
+        let live_count = usize::load(&mut r)?;
+        let purged = u64::load(&mut r)?;
+        let wake_armed = Vec::<bool>::load(&mut r)?;
+        if !r.is_exhausted() {
+            return Err(SnapError::Corrupt("trailing bytes"));
+        }
+        if live.len() != n
+            || wake_armed.len() != n
+            || barrier_waiting.len() != n
+            || live.iter().filter(|&&l| l).count() != live_count
+        {
+            return Err(SnapError::Corrupt("membership vectors"));
+        }
+
+        if let Some(kind) = sched_override {
+            cfg.sched = kind;
+        }
+        let mut sched = cfg.sched.make::<Ev>();
+        for &(t, sq, ev) in &entries {
+            sched.push(t, sq, ev);
+        }
+
+        // Overlay presence must match the config's scenario exactly, and
+        // the exported per-event machine states must fit it.
+        let faults = match (overlay_states, cfg.scenario.is_empty()) {
+            (None, true) => None,
+            (Some(states), false) => {
+                let mut rt = FaultRuntime::new(cfg.scenario.clone(), profiles.clone());
+                if !rt.restore_states(&states) {
+                    return Err(SnapError::Corrupt("overlay states"));
+                }
+                Some(rt)
+            }
+            _ => return Err(SnapError::Corrupt("overlay/scenario mismatch")),
+        };
+
+        // Derived structures: rebuilt from restored state, exactly as
+        // construction builds them from fresh state.
+        let specs: Vec<Vec<ChannelSpec>> =
+            procs.iter().map(|p| p.workload.channels()).collect();
+        let spec_index = SpecIndex::build(&specs);
+        let churn_procs = churn_procs_of(&cfg.scenario);
+
+        Ok(Self {
+            cfg,
+            topo,
+            profiles,
+            procs,
+            channels,
+            sched,
+            seq,
+            barrier_waiting,
+            barrier_count,
+            barrier_max_arrival,
+            snap_open,
+            windows,
+            faults,
+            window_phase,
+            engine_rng,
+            pull_scratch: Vec::new(),
+            wake_batch: Vec::new(),
+            live,
+            live_count,
+            purged,
+            wake_armed,
+            churn_procs,
+            spec_index,
+        })
+    }
+}
 
 fn link_for(cfg: &SimConfig, topo: &Topology, a: usize, b: usize) -> LinkModel {
     let mut link = match cfg.backend {
@@ -925,6 +1553,7 @@ mod tests {
             dst: 1,
             src_ch: 0,
             dst_ch: 0,
+            layer: 0,
             src_node: 0,
             dst_node: 1,
             crossnode: true,
@@ -1215,5 +1844,297 @@ mod tests {
         let de = ContentionModel::digital_evolution_threads();
         assert!((de.factor(64) - 1.64).abs() < 0.25, "{}", de.factor(64));
         assert_eq!(ContentionModel::none().factor(64), 1.0);
+    }
+
+    // ---- membership churn ------------------------------------------
+
+    use crate::faults::ALWAYS;
+
+    fn churn_engine(
+        n_procs: usize,
+        mode: AsyncMode,
+        run_for: Nanos,
+        seed: u64,
+        scenario: FaultScenario,
+    ) -> Engine<GraphColoringShard> {
+        let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let shards: Vec<_> = (0..n_procs)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 8,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+        cfg.seed = seed;
+        cfg.send_buffer = 8;
+        cfg.scenario = scenario;
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards)
+    }
+
+    #[test]
+    fn departed_proc_stops_updating() {
+        let scenario = FaultScenario::default().with(
+            20 * MILLI,
+            ALWAYS,
+            FaultKind::ProcLeave { proc: 1 },
+        );
+        let churned = churn_engine(4, AsyncMode::BestEffort, 60 * MILLI, 11, scenario).run();
+        let baseline =
+            churn_engine(4, AsyncMode::BestEffort, 60 * MILLI, 11, FaultScenario::default())
+                .run();
+        // Proc 1 froze a third of the way in; peers kept running.
+        assert!(
+            (churned.updates[1] as f64) < 0.55 * (baseline.updates[1] as f64),
+            "departed proc kept updating: {} vs baseline {}",
+            churned.updates[1],
+            baseline.updates[1]
+        );
+        assert!(churned.updates[0] > churned.updates[1]);
+        assert!(churned.conserves_messages(), "conservation violated");
+    }
+
+    #[test]
+    fn rejoining_proc_resumes_updates() {
+        let windowed = FaultScenario::default().with(
+            15 * MILLI,
+            15 * MILLI,
+            FaultKind::ProcLeave { proc: 1 },
+        );
+        let permanent = FaultScenario::default().with(
+            15 * MILLI,
+            ALWAYS,
+            FaultKind::ProcLeave { proc: 1 },
+        );
+        let back = churn_engine(4, AsyncMode::BestEffort, 60 * MILLI, 12, windowed).run();
+        let gone = churn_engine(4, AsyncMode::BestEffort, 60 * MILLI, 12, permanent).run();
+        assert!(
+            back.updates[1] > gone.updates[1] + 50,
+            "rejoin did not resume: windowed={} permanent={}",
+            back.updates[1],
+            gone.updates[1]
+        );
+        assert!(back.conserves_messages());
+        assert!(gone.conserves_messages());
+    }
+
+    /// Sync-mode barriers must exclude departed participants: a leave
+    /// mid-epoch cannot deadlock the survivors, and a leave while the
+    /// barrier is already partially filled must itself release it.
+    #[test]
+    fn sync_mode_survives_permanent_departure() {
+        let scenario = FaultScenario::default().with(
+            10 * MILLI,
+            ALWAYS,
+            FaultKind::ProcLeave { proc: 2 },
+        );
+        let result = churn_engine(4, AsyncMode::Sync, 40 * MILLI, 13, scenario).run();
+        // Run completed (no deadlock) and survivors stayed in lockstep.
+        let live = [0usize, 1, 3];
+        let min = live.iter().map(|&p| result.updates[p]).min().unwrap();
+        let max = live.iter().map(|&p| result.updates[p]).max().unwrap();
+        assert!(max - min <= 1, "live lockstep violated: {:?}", result.updates);
+        assert!(min > 5, "survivors stalled: {:?}", result.updates);
+        assert!(result.updates[2] < min, "departed proc outran survivors");
+        assert!(result.conserves_messages());
+    }
+
+    #[test]
+    fn sync_mode_survives_leave_then_rejoin() {
+        let scenario = FaultScenario::default().with(
+            10 * MILLI,
+            10 * MILLI,
+            FaultKind::ProcLeave { proc: 2 },
+        );
+        let result = churn_engine(4, AsyncMode::Sync, 40 * MILLI, 14, scenario).run();
+        let min = *result.updates.iter().min().unwrap();
+        assert!(min > 5, "rejoin stalled the allocation: {:?}", result.updates);
+        assert!(result.conserves_messages());
+    }
+
+    #[test]
+    fn leave_join_storm_conserves_messages() {
+        let scenario = FaultScenario::leave_join_storm(8, 10 * MILLI, 20 * MILLI, 4);
+        let result = churn_engine(8, AsyncMode::BestEffort, 50 * MILLI, 15, scenario).run();
+        assert!(result.conserves_messages());
+        assert!(result.attempted_sends > 0);
+    }
+
+    // ---- checkpoint / restore --------------------------------------
+
+    fn ckpt_engine(
+        seed: u64,
+        sched: SchedKind,
+        scenario: FaultScenario,
+    ) -> Engine<GraphColoringShard> {
+        let topo = Topology::new(4, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let shards: Vec<_> = (0..4)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 8,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg =
+            SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
+        cfg.seed = seed;
+        cfg.send_buffer = 8;
+        cfg.sched = sched;
+        cfg.scenario = scenario;
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards)
+    }
+
+    fn snap_scenario_engine(
+        seed: u64,
+        sched: SchedKind,
+        scenario: FaultScenario,
+    ) -> Engine<GraphColoringShard> {
+        let topo = Topology::new(4, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(seed);
+        let shards: Vec<_> = (0..4)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 8,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg =
+            SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
+        cfg.seed = seed;
+        cfg.send_buffer = 8;
+        cfg.sched = sched;
+        cfg.snapshots = Some(SnapshotSchedule::compressed(10 * MILLI, 15 * MILLI, 8 * MILLI, 3));
+        cfg.scenario = scenario;
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards)
+    }
+
+    fn fingerprint(
+        r: &SimResult<GraphColoringShard>,
+    ) -> (Vec<u64>, u64, u64, u64, u64, u64, Vec<u8>) {
+        (
+            r.updates.clone(),
+            r.attempted_sends,
+            r.successful_sends,
+            r.messages_delivered,
+            r.messages_purged,
+            r.messages_in_flight,
+            r.shards.iter().flat_map(|s| s.colors().to_vec()).collect(),
+        )
+    }
+
+    /// Core tentpole property: checkpoint at t + restore + run == the
+    /// straight-through run, bit-identically — including QoS windows and
+    /// the mid-run fault overlay. And the checkpointed engine itself is
+    /// unperturbed by the drain round-trip.
+    #[test]
+    fn checkpoint_restore_is_bit_identical() {
+        let scenario = FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI);
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            let straight = snap_scenario_engine(21, sched, scenario.clone()).run();
+            let mut e = snap_scenario_engine(21, sched, scenario.clone());
+            let over = e.run_until(25 * MILLI);
+            assert!(!over, "run ended before the checkpoint instant");
+            let blob = e.checkpoint();
+            let resumed_orig = e.run();
+            let restored = Engine::<GraphColoringShard>::restore(&blob).unwrap();
+            let resumed = restored.run();
+            assert_eq!(fingerprint(&straight), fingerprint(&resumed_orig));
+            assert_eq!(fingerprint(&straight), fingerprint(&resumed));
+            assert_eq!(straight.qos, resumed.qos, "QoS windows diverged after restore");
+            assert_eq!(straight.qos, resumed_orig.qos);
+        }
+    }
+
+    /// Two checkpoints with no events in between must be byte-equal:
+    /// the scheduler drain round-trip is lossless.
+    #[test]
+    fn double_checkpoint_is_byte_equal() {
+        let mut e = ckpt_engine(22, SchedKind::Calendar, FaultScenario::default());
+        assert!(!e.run_until(20 * MILLI));
+        let a = e.checkpoint();
+        let b = e.checkpoint();
+        assert_eq!(a, b, "checkpoint is not a pure observation");
+    }
+
+    /// A heap-scheduler checkpoint restored onto a calendar queue (and
+    /// vice versa) resumes bit-identically: dequeue order is a pure
+    /// function of the (t, seq) keys.
+    #[test]
+    fn cross_sched_restore_is_bit_identical() {
+        let scenario = FaultScenario::congestion_storm(15 * MILLI, 20 * MILLI);
+        let straight = snap_scenario_engine(23, SchedKind::Heap, scenario.clone()).run();
+        let mut e = snap_scenario_engine(23, SchedKind::Heap, scenario);
+        assert!(!e.run_until(25 * MILLI));
+        let blob = e.checkpoint();
+        let restored =
+            Engine::<GraphColoringShard>::restore_with_sched(&blob, SchedKind::Calendar)
+                .unwrap();
+        let resumed = restored.run();
+        assert_eq!(fingerprint(&straight), fingerprint(&resumed));
+        assert_eq!(straight.qos, resumed.qos);
+    }
+
+    /// Churn state (live set, purge counters, armed wakes) survives the
+    /// round trip: checkpoint mid-departure, restore, and the rejoin
+    /// still happens on schedule.
+    #[test]
+    fn checkpoint_mid_churn_round_trips() {
+        let scenario = FaultScenario::default()
+            .with(15 * MILLI, 25 * MILLI, FaultKind::ProcLeave { proc: 1 });
+        let straight = ckpt_engine(24, SchedKind::Heap, scenario.clone()).run();
+        let mut e = ckpt_engine(24, SchedKind::Heap, scenario);
+        // 20 ms: proc 1 is departed, rejoin is still queued.
+        assert!(!e.run_until(20 * MILLI));
+        let blob = e.checkpoint();
+        let resumed = Engine::<GraphColoringShard>::restore(&blob).unwrap().run();
+        assert_eq!(fingerprint(&straight), fingerprint(&resumed));
+        assert!(resumed.conserves_messages());
+    }
+
+    #[test]
+    fn restore_rejects_malformed_blobs() {
+        let mut e = ckpt_engine(25, SchedKind::Heap, FaultScenario::default());
+        assert!(!e.run_until(10 * MILLI));
+        let blob = e.checkpoint();
+        assert!(Engine::<GraphColoringShard>::restore(&[]).is_err());
+        assert!(
+            Engine::<GraphColoringShard>::restore(&blob[..blob.len() - 1]).is_err(),
+            "truncated blob loaded"
+        );
+        let mut wrong_magic = blob.clone();
+        wrong_magic[0] ^= 0xFF;
+        assert_eq!(
+            Engine::<GraphColoringShard>::restore(&wrong_magic).err(),
+            Some(SnapError::BadMagic)
+        );
+        let mut wrong_version = blob;
+        wrong_version[4] = 0xEE;
+        assert!(matches!(
+            Engine::<GraphColoringShard>::restore(&wrong_version),
+            Err(SnapError::BadVersion(_))
+        ));
     }
 }

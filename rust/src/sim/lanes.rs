@@ -84,6 +84,20 @@ impl<M> EnvelopeLanes<M> {
         self.arrival.iter().take_while(|&&a| a <= now).count()
     }
 
+    /// Iterate queued envelopes front (oldest) to back as
+    /// `(depart, arrival, touch, &payload)` tuples — checkpoint
+    /// serialization reads lanes through this; restore rebuilds them with
+    /// [`EnvelopeLanes::push`] in the same order, preserving the
+    /// monotonicity invariants by construction.
+    pub fn iter(&self) -> impl Iterator<Item = (Nanos, Nanos, u64, &M)> + '_ {
+        self.depart
+            .iter()
+            .zip(&self.arrival)
+            .zip(&self.touch)
+            .zip(&self.payload)
+            .map(|(((&d, &a), &t), p)| (d, a, t, p))
+    }
+
     /// Drain every envelope with `arrival <= now`, appending payloads to
     /// `out` in push order, and report the count plus the maximum touch
     /// value among the drained prefix (`None` when nothing had arrived).
@@ -158,6 +172,22 @@ mod tests {
         assert_eq!(s.max_touch, None);
         assert_eq!(out, vec![7], "out must be untouched");
         assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn iter_reads_all_lanes_in_push_order() {
+        let l = laden();
+        let got: Vec<(Nanos, Nanos, u64, u32)> =
+            l.iter().map(|(d, a, t, &p)| (d, a, t, p)).collect();
+        assert_eq!(got, vec![(10, 15, 0, 100), (20, 25, 3, 101), (30, 42, 1, 102)]);
+        // Rebuilding via push reproduces the lanes exactly.
+        let mut rebuilt = EnvelopeLanes::new();
+        for (d, a, t, &p) in l.iter() {
+            rebuilt.push(d, a, t, p);
+        }
+        let again: Vec<(Nanos, Nanos, u64, u32)> =
+            rebuilt.iter().map(|(d, a, t, &p)| (d, a, t, p)).collect();
+        assert_eq!(got, again);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Discrete-event simulation of a multi-node allocation (DESIGN.md §2).
 
 pub mod calendar;
+pub mod checkpoint;
 pub mod engine;
 pub mod lanes;
 pub mod modes;
 
 pub use calendar::{CalendarQueue, HeapScheduler, SchedKind, Scheduler};
+pub use checkpoint::{Persist, SnapError, SnapReader, SnapWriter, SNAP_MAGIC, SNAP_VERSION};
 pub use engine::{
     healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel,
     Engine, SimConfig, SimResult,

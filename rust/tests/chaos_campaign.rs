@@ -1,0 +1,72 @@
+//! Seeded chaos campaign: a fixed seed range of randomized fault
+//! timelines (including membership churn), each run under both async
+//! modes and checked for the engine's global invariants — no deadlock,
+//! no panic, message conservation, well-formed QoS windows, and sync
+//! lockstep among never-churned processes. Any violation is auto-shrunk
+//! to a minimal failing timeline and written to `target/chaos/` so CI
+//! can upload it as a replay artifact.
+//!
+//! The scheduler kind follows `EBCOMM_SCHED` (the CI matrix runs both);
+//! `EBCOMM_FULL=1` extends the range nightly-style.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use ebcomm::faults::{run_chaos_cell, ChaosFailure, CHAOS_RUN_FOR};
+
+/// Where shrunk failing timelines land for CI artifact upload (cwd is
+/// the crate root when `cargo test` runs integration tests).
+fn artifact_dir() -> PathBuf {
+    PathBuf::from("target").join("chaos")
+}
+
+fn record_failure(failure: &ChaosFailure) {
+    let dir = artifact_dir();
+    if fs::create_dir_all(&dir).is_err() {
+        return; // read-only checkout: the panic message still has it all
+    }
+    let path = dir.join(format!("seed_{}.txt", failure.seed));
+    if let Ok(mut f) = fs::File::create(&path) {
+        let _ = writeln!(f, "{failure}");
+    }
+}
+
+fn campaign(seeds: std::ops::Range<u64>) {
+    let mut failures = Vec::new();
+    for seed in seeds {
+        if let Some(failure) = run_chaos_cell(seed, CHAOS_RUN_FOR) {
+            record_failure(&failure);
+            failures.push(failure);
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "{} chaos seed(s) violated invariants (shrunk timelines in {}):\n{}",
+        failures.len(),
+        artifact_dir().display(),
+        failures
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The CI smoke campaign: 200 seeded timelines, every one invariant-
+/// checked under both async modes (≥ 200 timelines is this PR's
+/// acceptance floor).
+#[test]
+fn chaos_campaign_smoke_range_holds_invariants() {
+    campaign(0..200);
+}
+
+/// Nightly-style extension: seeds 200..1000 under `EBCOMM_FULL=1`.
+#[test]
+fn chaos_campaign_extended_range_holds_invariants() {
+    if std::env::var("EBCOMM_FULL").is_err() {
+        eprintln!("EBCOMM_FULL not set; skipping extended chaos range");
+        return;
+    }
+    campaign(200..1000);
+}

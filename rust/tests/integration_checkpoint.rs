@@ -1,0 +1,288 @@
+//! Engine checkpoint/restore through the public API: pause a run at a
+//! quiescent point, serialize it to the versioned binary snapshot, and
+//! verify the restored engine is **bit-identical** to the straight-through
+//! run — scheduler stream, fault-overlay transitions, QoS window phase
+//! tags, RNG state, and message-conservation counters all included.
+//!
+//! The randomized grid property is the PR's acceptance criterion: over
+//! random `(scenario, checkpoint t, seed, sched kind)` tuples,
+//! `checkpoint-at-t + restore + run == straight-through run`, including
+//! restoring under the *other* scheduler kind (`restore_with_sched`).
+
+use ebcomm::faults::{FaultScenario, ScenarioPhase};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::SnapshotSchedule;
+use ebcomm::sim::{
+    healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, SimConfig, SimResult,
+};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen, PropResult};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{Nanos, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+use ebcomm::workloads::ShardWorkload;
+
+const N_PROCS: usize = 4;
+const RUN_FOR: Nanos = 60 * MILLI;
+
+/// Snapshot windows at 10–18, 25–33, and 40–48 ms: one before, one
+/// inside, and one after a 19–39 ms fault window.
+fn windows() -> SnapshotSchedule {
+    SnapshotSchedule::compressed(10 * MILLI, 15 * MILLI, 8 * MILLI, 3)
+}
+
+fn make_engine(
+    mode: AsyncMode,
+    seed: u64,
+    sched: SchedKind,
+    scenario: FaultScenario,
+) -> Engine<GraphColoringShard> {
+    let topo = Topology::new(N_PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..N_PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 2,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+    cfg.seed = seed;
+    cfg.send_buffer = 16;
+    cfg.sched = sched;
+    cfg.snapshots = Some(windows());
+    cfg.scenario = scenario;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards)
+}
+
+/// Everything observable about a finished run, bit-exact: per-proc
+/// updates, the five conservation counters, final colors, QoS metric
+/// streams, and per-window phase tags.
+#[allow(clippy::type_complexity)]
+fn fp(r: &SimResult<GraphColoringShard>) -> (Vec<u64>, [u64; 5], Vec<u8>, Vec<u64>) {
+    let colors: Vec<u8> = r.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+    let qos_bits: Vec<u64> = r
+        .windows
+        .iter()
+        .flat_map(|w| {
+            let m = w.metrics();
+            [
+                m.simstep_period_ns.to_bits(),
+                m.delivery_failure_rate.to_bits(),
+                m.walltime_latency_ns.to_bits(),
+                w.phase().bits(),
+            ]
+        })
+        .collect();
+    (
+        r.updates.clone(),
+        [
+            r.attempted_sends,
+            r.successful_sends,
+            r.messages_delivered,
+            r.messages_purged,
+            r.messages_in_flight,
+        ],
+        colors,
+        qos_bits,
+    )
+}
+
+/// Per-chronological-window phase tags (all channels of one window must
+/// agree).
+fn window_phases(r: &SimResult<GraphColoringShard>) -> Vec<ScenarioPhase> {
+    let n_channels: usize = r.shards.iter().map(|s| s.channels().len()).sum();
+    assert_eq!(r.qos.phases.len() % n_channels, 0);
+    r.qos
+        .phases
+        .chunks(n_channels)
+        .map(|chunk| {
+            assert!(chunk.iter().all(|&p| p == chunk[0]));
+            chunk[0]
+        })
+        .collect()
+}
+
+/// Checkpoint `at` nanoseconds into a run, restore, finish both halves,
+/// and return (straight-through, resumed-original, restored) results.
+#[allow(clippy::type_complexity)]
+fn round_trip(
+    mode: AsyncMode,
+    seed: u64,
+    sched: SchedKind,
+    scenario: FaultScenario,
+    at: Nanos,
+) -> (
+    SimResult<GraphColoringShard>,
+    SimResult<GraphColoringShard>,
+    Vec<u8>,
+) {
+    let straight = make_engine(mode, seed, sched, scenario.clone()).run();
+    let mut e = make_engine(mode, seed, sched, scenario);
+    let over = e.run_until(at);
+    assert!(!over, "checkpoint point {at} must fall mid-run");
+    let blob = e.checkpoint();
+    let resumed = e.run();
+    (straight, resumed, blob)
+}
+
+/// Checkpoint in the middle of an active `CongestionStorm` window. The
+/// restored engine must replay the remaining overlay transitions (storm
+/// end at 39 ms) and tag the remaining QoS windows identically.
+#[test]
+fn checkpoint_mid_congestion_storm_resumes_overlay_and_phase_tags() {
+    let sc = FaultScenario::congestion_storm(19 * MILLI, 20 * MILLI);
+    let (straight, resumed, blob) =
+        round_trip(AsyncMode::BestEffort, 31, SchedKind::Calendar, sc, 30 * MILLI);
+    let restored = Engine::<GraphColoringShard>::restore(&blob)
+        .expect("snapshot round-trips")
+        .run();
+
+    // The mid-storm window is tagged with the storm, the post window is
+    // quiescent again — in all three runs identically.
+    for r in [&straight, &resumed, &restored] {
+        let phases = window_phases(r);
+        assert_eq!(phases.len(), 3);
+        assert!(phases[0].is_quiescent(), "pre-storm window quiescent");
+        assert!(phases[1].contains(0), "mid-storm window carries the tag");
+        assert!(phases[2].is_quiescent(), "storm must end after restore");
+        assert!(r.conserves_messages());
+    }
+    assert_eq!(fp(&straight), fp(&resumed), "pausing must not perturb");
+    assert_eq!(fp(&straight), fp(&restored), "restore must be bit-identical");
+}
+
+/// Checkpoint while a `FlapLink` is mid-chain. The restored overlay must
+/// resume the *same* on/off toggle sequence (the pending toggle wake
+/// travels inside the snapshot's scheduler stream, and the flap
+/// sub-phase rides in the overlay state byte).
+#[test]
+fn checkpoint_mid_flap_resumes_toggle_chain() {
+    let sc = FaultScenario::flapping_clique(1, 19 * MILLI, 20 * MILLI, 3 * MILLI, 2 * MILLI);
+    let (straight, resumed, blob) =
+        round_trip(AsyncMode::BestEffort, 37, SchedKind::Heap, sc, 31 * MILLI);
+    let restored = Engine::<GraphColoringShard>::restore(&blob)
+        .expect("snapshot round-trips")
+        .run();
+    for r in [&straight, &resumed, &restored] {
+        let phases = window_phases(r);
+        assert!(phases[1].contains(0), "mid-flap window tagged");
+        assert!(phases[2].is_quiescent(), "flap closed before last window");
+        assert!(r.conserves_messages());
+    }
+    assert_eq!(fp(&straight), fp(&resumed));
+    assert_eq!(fp(&straight), fp(&restored));
+}
+
+/// Sync-mode barrier state (waiting flags, arrival clock) lives in the
+/// snapshot too: checkpointing between two collective rounds round-trips.
+#[test]
+fn checkpoint_sync_mode_round_trips() {
+    let sc = FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI);
+    let (straight, resumed, blob) =
+        round_trip(AsyncMode::Sync, 41, SchedKind::Calendar, sc, 25 * MILLI);
+    let restored = Engine::<GraphColoringShard>::restore(&blob)
+        .expect("snapshot round-trips")
+        .run();
+    assert_eq!(fp(&straight), fp(&resumed));
+    assert_eq!(fp(&straight), fp(&restored));
+}
+
+/// The acceptance-criterion grid: random scenario x checkpoint time x
+/// seed x scheduler kind, each case checking straight-through ==
+/// restored, double checkpoints byte-equal, and cross-kind restore
+/// (`Heap` snapshot resumed under `Calendar` and vice versa)
+/// bit-identical.
+#[test]
+fn prop_checkpoint_grid_is_bit_identical() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = if g.chance(0.5) {
+            SchedKind::Heap
+        } else {
+            SchedKind::Calendar
+        };
+        let other = match sched {
+            SchedKind::Heap => SchedKind::Calendar,
+            SchedKind::Calendar => SchedKind::Heap,
+        };
+        let mode = if g.chance(0.25) {
+            AsyncMode::Sync
+        } else {
+            AsyncMode::BestEffort
+        };
+        let scenario = match g.usize_in(0, 4) {
+            0 => FaultScenario::default(),
+            1 => FaultScenario::congestion_storm(20 * MILLI, 25 * MILLI),
+            2 => FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI),
+            3 => FaultScenario::flapping_clique(2, 20 * MILLI, 25 * MILLI, 3 * MILLI, 2 * MILLI),
+            _ => FaultScenario::leave_join_storm(N_PROCS, 15 * MILLI, 20 * MILLI, 2),
+        };
+        let at = g.u64_in(5 * MILLI, 55 * MILLI);
+
+        let straight = make_engine(mode, seed, sched, scenario.clone()).run();
+        let mut e = make_engine(mode, seed, sched, scenario);
+        let over = e.run_until(at);
+        prop_assert(!over, format!("t={at} landed past the run end"))?;
+        let blob = e.checkpoint();
+        prop_assert(
+            blob == e.checkpoint(),
+            "double checkpoint must be byte-equal",
+        )?;
+        let resumed = e.run();
+
+        let restored = match Engine::<GraphColoringShard>::restore(&blob) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("restore failed: {err:?}")),
+        };
+        let crossed = match Engine::<GraphColoringShard>::restore_with_sched(&blob, other) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("cross restore failed: {err:?}")),
+        };
+
+        let want = fp(&straight);
+        prop_assert(fp(&resumed) == want, "pause+resume diverged")?;
+        prop_assert(fp(&restored) == want, "restore diverged")?;
+        prop_assert(
+            fp(&crossed) == want,
+            format!("cross-kind restore ({:?} -> {:?}) diverged", sched, other),
+        )?;
+        prop_assert(straight.conserves_messages(), "conservation broken")?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() {
+        48
+    } else {
+        12
+    };
+    forall(Config::default().cases(cases).seed(0xC4EC_4EC4), case);
+}
+
+/// Snapshot blobs from one workload type must not restore into silent
+/// garbage: truncation and flipped magic/version bytes are rejected with
+/// typed errors, never a panic.
+#[test]
+fn malformed_snapshots_are_rejected_gracefully() {
+    let mut e = make_engine(
+        AsyncMode::BestEffort,
+        43,
+        SchedKind::Calendar,
+        FaultScenario::default(),
+    );
+    assert!(!e.run_until(20 * MILLI));
+    let blob = e.checkpoint();
+    assert!(Engine::<GraphColoringShard>::restore(&[]).is_err());
+    assert!(Engine::<GraphColoringShard>::restore(&blob[..blob.len() / 3]).is_err());
+    let mut bad_magic = blob.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(Engine::<GraphColoringShard>::restore(&bad_magic).is_err());
+    let mut bad_version = blob;
+    bad_version[4] = 0xEE;
+    assert!(Engine::<GraphColoringShard>::restore(&bad_version).is_err());
+}

@@ -41,11 +41,22 @@ fn link_bits(f: &LinkFault) -> [u64; 2] {
 }
 
 /// A random well-formed scenario (passes `FaultScenario::validate`).
+/// Starts deliberately collide (same-timestamp wake batches) so command
+/// events — `Heal`, `RestoreNode`, `ProcJoin` — race the onsets they
+/// cancel within one batch, in both seq orders.
 fn random_scenario(g: &mut Gen, n_nodes: usize) -> FaultScenario {
     let mut sc = FaultScenario::default();
     let n_events = g.usize_in(1, 10);
     for _ in 0..n_events {
-        let start = g.u64_in(0, 5_000);
+        let start = if g.chance(0.3) {
+            // Reuse an earlier start: a same-timestamp batch.
+            match sc.events.as_slice() {
+                [] => g.u64_in(0, 5_000),
+                evs => evs[g.usize_in(0, evs.len() - 1)].start,
+            }
+        } else {
+            g.u64_in(0, 5_000)
+        };
         let duration = if g.chance(0.25) {
             ALWAYS
         } else {
@@ -53,7 +64,7 @@ fn random_scenario(g: &mut Gen, n_nodes: usize) -> FaultScenario {
         };
         let node = g.usize_in(0, n_nodes - 1);
         let fault_factor = 1.0 + g.usize_in(1, 8) as f64;
-        let kind = match g.usize_in(0, if n_nodes >= 2 { 6 } else { 5 }) {
+        let kind = match g.usize_in(0, if n_nodes >= 2 { 8 } else { 7 }) {
             0 | 1 => FaultKind::DegradeNode {
                 node,
                 fault: NodeFault {
@@ -81,6 +92,12 @@ fn random_scenario(g: &mut Gen, n_nodes: usize) -> FaultScenario {
             },
             4 => FaultKind::RestoreNode { node },
             5 => FaultKind::Heal,
+            // Churn lives in process space; the overlay state machine
+            // treats `ProcLeave` as a plain window and `ProcJoin` as a
+            // command, so driving them here (procs == nodes) checks the
+            // same nesting/cancellation invariants.
+            6 => FaultKind::ProcLeave { proc: node },
+            7 => FaultKind::ProcJoin { proc: node },
             _ => FaultKind::PartitionCliques {
                 cliques: g.usize_in(2, n_nodes),
                 cut: LinkFault::cut(),
@@ -245,6 +262,112 @@ fn drive_and_check(g: &mut Gen) -> PropResult {
 #[test]
 fn prop_overlay_matches_reference_fold_and_never_underflows() {
     forall(Config::default().cases(100), drive_and_check);
+}
+
+#[test]
+fn prop_same_batch_command_cancels_onset() {
+    // The depth-guard edge: a command (`Heal`/`RestoreNode`/`ProcJoin`)
+    // sharing its exact timestamp with the onset it cancels — in either
+    // seq order within the wake batch — must neither underflow the
+    // overlay depth nor leave the onset `Active` after the batch.
+    forall(Config::default().cases(200).seed(0x5A_0B17), |g| {
+        let n_nodes = 4;
+        let t0 = g.u64_in(0, 1_000);
+        let node = g.usize_in(0, n_nodes - 1);
+        let duration = if g.chance(0.5) {
+            ALWAYS
+        } else {
+            g.u64_in(1, 500)
+        };
+        let (onset, command) = match g.usize_in(0, 3) {
+            0 => (
+                FaultKind::DegradeNode {
+                    node,
+                    fault: NodeFault::lac417(),
+                },
+                FaultKind::RestoreNode { node },
+            ),
+            1 => (
+                FaultKind::CongestionStorm {
+                    fault: LinkFault::storm(),
+                },
+                FaultKind::Heal,
+            ),
+            2 => (
+                FaultKind::FlapLink {
+                    node,
+                    on_for: 7,
+                    off_for: 3,
+                    fault: LinkFault::flap(),
+                },
+                FaultKind::Heal,
+            ),
+            _ => (
+                FaultKind::ProcLeave { proc: node },
+                FaultKind::ProcJoin { proc: node },
+            ),
+        };
+        let command_first = g.chance(0.5);
+        let (sc, onset_idx) = if command_first {
+            (
+                FaultScenario::default()
+                    .with(t0, 0, command)
+                    .with(t0, duration, onset),
+                1,
+            )
+        } else {
+            (
+                FaultScenario::default()
+                    .with(t0, duration, onset)
+                    .with(t0, 0, command),
+                0,
+            )
+        };
+        let statics = vec![NodeProfile::healthy(); n_nodes];
+        let mut rt = FaultRuntime::new(sc.clone(), statics.clone());
+        let mut sched: HeapScheduler<usize> = HeapScheduler::new();
+        let mut seq = 0u64;
+        for (k, ev) in sc.events.iter().enumerate() {
+            sched.push(ev.start, seq, k);
+            seq += 1;
+        }
+        let mut steps = 0usize;
+        while let Some((t, _, k)) = sched.pop() {
+            steps += 1;
+            prop_assert(steps < 10_000, "runaway wake chain")?;
+            if let Some(tn) = rt.on_event(k, t) {
+                prop_assert(tn > t, "non-advancing wake")?;
+                sched.push(tn, seq, k);
+                seq += 1;
+            }
+            // Never an underflow (checked_sub would have panicked) and
+            // the depth always equals the active count mid-batch too.
+            prop_assert(
+                rt.depth() == rt.phase().len(),
+                format!("depth {} != |active| {}", rt.depth(), rt.phase().len()),
+            )?;
+            if command_first {
+                // The command popped first in the batch: the onset it
+                // covers must never be observed active at all.
+                prop_assert(
+                    !rt.is_active(onset_idx),
+                    "cancelled onset activated after its command",
+                )?;
+            }
+        }
+        // Batch fully drained: the onset is gone and the overlay is
+        // bitwise back on the static tables.
+        prop_assert(!rt.is_active(onset_idx), "onset survived its command")?;
+        prop_assert(rt.phase().is_quiescent(), "phase not quiescent")?;
+        prop_assert(rt.depth() == 0, "depth not zero after drain")?;
+        for n in 0..n_nodes {
+            prop_assert(
+                profile_bits(rt.node_profile(n)) == profile_bits(&statics[n]),
+                "post-batch profile differs from statics",
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
