@@ -7,8 +7,9 @@ Usage:
                                  [--release-margin 0.10]
                                  [--thread-qos THREAD_QOS.json]
                                  [--churn-csv FAULT_SCENARIOS.csv]
+                                 [--weak-scaling WEAK_SCALING.json]
 
-Six independent checks:
+Seven independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -50,6 +51,14 @@ Six independent checks:
    --churn`` CSV must contain ``leave_join_storm`` rows both inside and
    outside churn phases (phase_bits != 0 and == 0); steady vs churn-phase
    median delivery failure is printed, report-only.
+
+7. **Memory-diet section** (with ``--weak-scaling``): the
+   ``bench_weak_scaling`` JSON must contain a well-formed
+   ``memory_diet/p<procs>/...`` section — bytes/proc, events/sec/proc,
+   and total footprint from the 10⁵-proc idle-skip rung. Report-only:
+   throughput is runner-dependent and the footprint is expected to
+   evolve, so only absence or malformed entries fail; the printed
+   values document the trajectory in the CI log.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -197,6 +206,42 @@ def checkpoint_check(cur):
     return failures
 
 
+def memory_diet_check(path):
+    """Shape check of the report-only 'memory diet' section: the
+    bench_weak_scaling JSON's ``memory_diet/p<procs>/...`` entries
+    (bytes/proc, events/sec/proc, total bytes at the 10^5-proc rung).
+    Report-only: wall-clock throughput is runner-dependent and the
+    footprint evolves with the engine — the check fails only on a
+    missing rung or malformed entries, and the printed values document
+    the memory-diet trajectory in the CI log."""
+    failures = []
+    entries = load(path)
+    rows = sorted(
+        (e for name, e in entries.items() if name.startswith("memory_diet/")),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        return [f"no memory_diet entries in {path} — rung did not run?"]
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        print(f"  [diet]     {e['name']}: {m} {unit} (report-only)")
+        if not well_formed:
+            failures.append(f"malformed memory-diet entry {e['name']!r}")
+    if not any("/bytes_per_proc" in e["name"] for e in rows):
+        failures.append("memory-diet section lacks a bytes_per_proc entry")
+    if not any("/events_per_sec_per_proc" in e["name"] for e in rows):
+        failures.append("memory-diet section lacks an events_per_sec_per_proc entry")
+    return failures
+
+
 def churn_check(path):
     """Presence check of churn-phase attribution rows in the scenario CSV."""
     import csv
@@ -298,6 +343,12 @@ def main():
         "leave_join_storm windows inside and outside churn phases "
         "(report-only: values never gate)",
     )
+    ap.add_argument(
+        "--weak-scaling",
+        help="bench_weak_scaling JSON whose 'memory_diet/...' section "
+        "(bytes/proc, events/sec/proc at the 10^5-proc rung) must be "
+        "present and well-formed (report-only: values never gate)",
+    )
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -343,6 +394,14 @@ def main():
             failed = True
             for f in churn_failures:
                 print(f"bench-diff: churn section check failed: {f}", file=sys.stderr)
+
+    if args.weak_scaling:
+        print("== memory diet section (report-only) ==")
+        diet_failures = memory_diet_check(args.weak_scaling)
+        if diet_failures:
+            failed = True
+            for f in diet_failures:
+                print(f"bench-diff: memory-diet section check failed: {f}", file=sys.stderr)
 
     if args.baseline:
         print("== baseline regression diff ==")

@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""Model-level fuzz of the idle-skip stepping design (PR 7) against a
+dense reference, pre-validating the algorithm before the Rust port --
+the same workflow as fault_model_fuzz.py / batch_push_model_fuzz.py.
+
+Three claims are checked, because the Rust engine relies on them for
+bit-identity between `StepPath::Dense` and `StepPath::IdleSkip`:
+
+1. **Dirty-list pulls are invisible.** Draining only channels flagged
+   dirty by an arrival (in ascending incoming-index order, at per-channel
+   horizons t + pull_cum[k] taken from prefix sums of the per-channel
+   pull overheads) observes exactly the messages the dense full scan
+   observes, and leaves `now` at the same value.
+
+2. **pull_attempts is derivable.** In the dense engine every simstep of
+   proc p attempts one pull on each of p's incoming channels before
+   bumping `updates[p]`, and snapshots/checkpoints only read counters
+   between events -- so pull_attempts(ch) == updates[dst(ch)] at every
+   read point (0 when the mode doesn't communicate). The skip path never
+   counts attempts; both paths assemble them at read time.
+
+3. **Touched-proc snapshot capture is exact.** A channel's counters
+   change only during a step of its src (send, touch publication) or dst
+   (drain) proc, so a per-channel cache refreshed only for channels
+   adjacent to procs touched since the previous capture event equals a
+   full recapture -- including the window straddling end-of-run that
+   finish() now closes at run_for (the tail-window bugfix).
+
+The model strips the engine to what matters for those claims: integer
+event times, per-proc step cadence, random sends with random arrival
+delays, per-channel pull overhead, snapshot open/close events, and a
+run_for cutoff with a tail close. Compute costs, drops, barriers and
+faults don't interact with the claims (they don't change which channels
+are drained or when counters are read) and are left out.
+"""
+
+import heapq
+import random
+import sys
+
+
+class Chan:
+    __slots__ = (
+        "src",
+        "dst",
+        "dst_in_idx",
+        "arrivals",  # list of arrival times (sorted as pushed; pushes are not monotone here, harsher than the engine)
+        "laden",
+        "messages",
+        "touches",
+        "dirty",
+    )
+
+    def __init__(self, src, dst, dst_in_idx):
+        self.src = src
+        self.dst = dst
+        self.dst_in_idx = dst_in_idx
+        self.arrivals = []
+        self.laden = 0
+        self.messages = 0
+        self.touches = 0
+        self.dirty = False
+
+
+class Model:
+    """One engine; `skip` selects dense full-scan vs dirty-list pulls."""
+
+    def __init__(self, seed, skip):
+        rng = random.Random(seed)
+        self.skip = skip
+        n = rng.randrange(2, 7)
+        self.n = n
+        self.updates = [0] * n
+        self.incoming = [[] for _ in range(n)]  # proc -> [chan ids]
+        self.outgoing = [[] for _ in range(n)]
+        self.chans = []
+        for src in range(n):
+            for _ in range(rng.randrange(0, 4)):
+                dst = rng.randrange(n)  # self-channels allowed: harsher than the mesh
+                c = Chan(src, dst, len(self.incoming[dst]))
+                cid = len(self.chans)
+                self.chans.append(c)
+                self.incoming[dst].append(cid)
+                self.outgoing[src].append(cid)
+        # Per-channel pull overhead -> per-proc prefix sums over incoming.
+        self.overhead = [rng.randrange(0, 30) for _ in self.chans]
+        self.pull_cum = []
+        for p in range(n):
+            cum = [0]
+            for cid in self.incoming[p]:
+                cum.append(cum[-1] + self.overhead[cid])
+            self.pull_cum.append(cum)
+        self.dirty_in = [[] for _ in range(n)]  # skip path: pending incoming indices
+        self.touched = [False] * n
+        # Snapshot cache: chan id -> (laden, messages, touches, upd_src, upd_dst)
+        self.cache = [self._live(cid) for cid in range(len(self.chans))]
+        self.windows = []
+        self.window_open = False
+        self.run_for = rng.randrange(200, 1200)
+        # Event stream: proc wakes at a per-proc cadence + snapshot edges.
+        self.events = []
+        seq = 0
+        for p in range(n):
+            t = rng.randrange(0, 40)
+            cadence = rng.randrange(5, 60)
+            while t <= self.run_for + 100:
+                heapq.heappush(self.events, (t, seq, "wake", p))
+                seq += 1
+                t += cadence
+        t = rng.randrange(10, 120)
+        while t <= self.run_for + 200:
+            heapq.heappush(self.events, (t, seq, "open", -1))
+            seq += 1
+            close = t + rng.randrange(5, 90)
+            heapq.heappush(self.events, (close, seq, "close", -1))
+            seq += 1
+            t = close + rng.randrange(10, 150)
+        self.rng = rng  # per-step draws below must be draw-aligned across paths
+
+    def _live(self, cid):
+        c = self.chans[cid]
+        return (c.laden, c.messages, c.touches, self.updates[c.src], self.updates[c.dst])
+
+    def _drain(self, cid, horizon):
+        c = self.chans[cid]
+        got = [a for a in c.arrivals if a <= horizon]
+        if got:
+            c.arrivals = [a for a in c.arrivals if a > horizon]
+            c.laden += 1
+            c.messages += len(got)
+            c.touches = max(c.touches, len(got))
+        return len(got)
+
+    def step(self, p, t):
+        self.touched[p] = True
+        cum = self.pull_cum[p]
+        if not self.skip:
+            for k, cid in enumerate(self.incoming[p]):
+                self._drain(cid, t + cum[k])
+        else:
+            pending = sorted(self.dirty_in[p])
+            self.dirty_in[p] = []
+            for k in pending:
+                cid = self.incoming[p][k]
+                self._drain(cid, t + cum[k])
+                if self.chans[cid].arrivals:
+                    self.dirty_in[p].append(k)  # future arrivals: stays dirty
+                else:
+                    self.chans[cid].dirty = False
+        now = t + cum[-1]
+        self.updates[p] += 1
+        # Send phase: identical draws on both paths (same rng call sequence).
+        for cid in self.outgoing[p]:
+            if self.rng.random() < 0.6:
+                arrival = now + self.rng.randrange(0, 80)
+                c = self.chans[cid]
+                c.arrivals.append(arrival)
+                if not c.dirty:
+                    c.dirty = True
+                    self.dirty_in[c.dst].append(c.dst_in_idx)
+
+    def tranche(self, cid):
+        """Read-time counter assembly: pull_attempts derived from updates."""
+        c = self.chans[cid]
+        return (self.updates[c.dst], c.laden, c.messages, c.touches)
+
+    def snap_open(self, t):
+        self.window_open = True
+        self.open_t = t
+        # Refresh the cache for channels adjacent to touched procs; the
+        # rest are untouched since the last capture, so cache == live.
+        for p in range(self.n):
+            if not self.touched[p]:
+                continue
+            self.touched[p] = False
+            for cid in self.outgoing[p] + self.incoming[p]:
+                self.cache[cid] = self._live(cid)
+        if not self.skip:
+            # Dense reference: full recapture, must equal the lazy cache.
+            for cid in range(len(self.chans)):
+                assert self.cache[cid] == self._live(cid), "stale cache at open"
+
+    def snap_close(self, t):
+        if not self.window_open:
+            return
+        for cid, c in enumerate(self.chans):
+            before = self.cache[cid]
+            after = self._live(cid) if (self.touched[c.src] or self.touched[c.dst]) else before
+            assert after == self._live(cid), "stale cache at close"
+            bl, bm, bt, bus, bud = before
+            al, am, at_, aus, aud = after
+            self.windows.append(
+                (cid, self.open_t, t, (bud, bl, bm, bt), (aud, al, am, at_), bus, aus)
+            )
+            self.cache[cid] = after
+        for p in range(self.n):
+            self.touched[p] = False
+        self.window_open = False
+
+    def run(self):
+        while self.events:
+            t, _, kind, p = heapq.heappop(self.events)
+            if t > self.run_for:
+                break
+            if kind == "wake":
+                self.step(p, t)
+            elif kind == "open":
+                self.snap_open(t)
+            else:
+                self.snap_close(t)
+        # finish(): tail-window fix -- close any straddling window at run_for.
+        self.snap_close(self.run_for)
+        return (
+            self.updates,
+            [self.tranche(cid) for cid in range(len(self.chans))],
+            [sorted(c.arrivals) for c in self.chans],
+            self.windows,
+        )
+
+
+def main():
+    iters = int(sys.argv[1]) if len(sys.argv) > 1 else 3000
+    tail_exercised = 0
+    for seed in range(iters):
+        dense = Model(seed, skip=False).run()
+        skip = Model(seed, skip=True).run()
+        if dense != skip:
+            for i, (d, s) in enumerate(zip(dense, skip)):
+                if d != s:
+                    print(f"seed {seed}: component {i} diverged\n dense={d}\n  skip={s}")
+            sys.exit(1)
+        m = Model(seed, skip=False)
+        has_straddle = any(
+            kind == "open" and t <= m.run_for
+            for (t, _, kind, _) in m.events
+        ) and any(
+            kind == "close" and t > m.run_for for (t, _, kind, _) in m.events
+        )
+        if has_straddle:
+            tail_exercised += 1
+    assert tail_exercised > iters // 20, "tail-window path under-exercised"
+    print(f"OK: {iters} seeds, dense == idle-skip (tail window exercised {tail_exercised}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,25 +1,181 @@
 //! Paper §III-F (Figs. 4–8, Suppl. Figs. 9–27, Tables II–XVII): weak
 //! scaling of quality of service, extended past the paper's 256-proc
-//! ceiling to the ROADMAP's 1024-proc rung.
+//! ceiling to the ROADMAP's 1024-proc rung — and, for the DES engine
+//! itself, a **memory-diet rung at 10⁵ processes** (10⁶ under
+//! `EBCOMM_FULL=1`) that publishes bytes/proc and events/sec/proc.
 //!
-//! 16/64/256/1024 processes × {1, 4} CPUs/node × {1, 2048} simels/CPU.
-//! For each metric, OLS (means) and quantile (medians) regressions
-//! against log₄ processor count, complete and piecewise-rightmost.
-//! Expected shape: median QoS essentially stable from 64 processes up —
-//! the paper shows 64→256, and the 256→1024 rung probes whether
-//! best-effort QoS keeps holding where barrier-bound alternatives
-//! coagulate. The 1024-proc cells lean on the batched barrier release
-//! and flat channel wiring (sim::engine); LPT sweep claiming starts them
-//! first.
+//! The QoS sweep: 16/64/256/1024 processes × {1, 4} CPUs/node ×
+//! {1, 2048} simels/CPU. For each metric, OLS (means) and quantile
+//! (medians) regressions against log₄ processor count, complete and
+//! piecewise-rightmost. Expected shape: median QoS essentially stable
+//! from 64 processes up — the paper shows 64→256, and the 256→1024 rung
+//! probes whether best-effort QoS keeps holding where barrier-bound
+//! alternatives coagulate.
+//!
+//! The memory-diet rung exercises the O(active-events) idle-skip
+//! stepping path and the hot/cold channel split at population scales
+//! the dense representation could not reach (the drfe-r study reports
+//! ~104 bytes/node for its graph state; our published figure is the
+//! whole-engine footprint — lanes, scheduler, QoS caches included — so
+//! it is an upper bound on the same notion). Virtual runtime is kept
+//! short so the rung is seconds-bounded; `EBCOMM_WEAK_SMOKE=1` runs
+//! *only* this rung (the CI bench-gate lane).
+//!
+//! Pass `--json` (or set `EBCOMM_BENCH_JSON=1`) to write
+//! `BENCH_weak_scaling.json` at the repo root — consumed by
+//! `python/bench_diff.py`'s report-only "memory diet" section.
 
 use ebcomm::coordinator::experiment::QosExperiment;
 use ebcomm::coordinator::report;
 use ebcomm::coordinator::run_qos;
+use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::qos::MetricName;
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig, StepPath};
 use ebcomm::stats::{median, quantile_regression};
+use ebcomm::util::benchjson::BenchJson;
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::Nanos;
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+/// One memory-diet rung: build a `procs`-process best-effort engine,
+/// record its construction-time memory footprint, run it for `run_for`
+/// virtual nanoseconds, and report bytes/proc plus wall-clock event
+/// throughput. Uses 1 simel/CPU (communication-dominated — this times
+/// and sizes the engine, not the solver) and a small send buffer so the
+/// footprint reflects steady state, not queue bloat.
+fn memory_diet_rung(procs: usize, run_for: Nanos, json: &mut BenchJson) {
+    eprintln!("[memory-diet] {procs} procs, {run_for} ns virtual ...");
+    let topo = Topology::new(procs, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(0xD1E7);
+    let shards: Vec<_> = (0..procs)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(
+        AsyncMode::BestEffort,
+        ModeTiming::graph_coloring(procs),
+        run_for,
+    );
+    cfg.seed = 0xD1E7;
+    cfg.send_buffer = 4;
+    cfg.step = StepPath::IdleSkip;
+    let profiles = healthy_profiles(&topo);
+
+    let t_build = std::time::Instant::now();
+    let engine = Engine::new(cfg, topo, profiles, shards);
+    let build_s = t_build.elapsed().as_secs_f64();
+
+    let fp = engine.memory_footprint();
+    let bytes_per_proc = fp.bytes_per_proc();
+
+    let t_run = std::time::Instant::now();
+    let result = engine.run();
+    let run_s = t_run.elapsed().as_secs_f64();
+
+    let total_updates: u64 = result.updates.iter().sum();
+    let events_per_sec = total_updates as f64 / run_s.max(1e-9);
+    let events_per_sec_per_proc = events_per_sec / procs as f64;
+
+    assert!(
+        result.conserves_messages(),
+        "memory-diet rung broke message conservation at {procs} procs"
+    );
+    assert_eq!(
+        result.channel_conservation_violations, 0,
+        "per-channel ledger violated at {procs} procs"
+    );
+
+    println!("memory diet @ {procs} procs ({run_for} ns virtual):");
+    println!("  build                    {build_s:>10.2} s");
+    println!("  run                      {run_s:>10.2} s wall");
+    println!(
+        "  footprint                {:>10.1} MiB total, {bytes_per_proc:.1} B/proc",
+        fp.total_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "    cold wiring {} B  hot counters {} B  lanes {} B  procs {} B  sched {} B  qos {} B",
+        fp.chan_cold_bytes,
+        fp.chan_hot_bytes,
+        fp.lane_heap_bytes,
+        fp.proc_bytes,
+        fp.sched_bytes,
+        fp.qos_bytes
+    );
+    println!(
+        "  throughput               {events_per_sec:>10.0} events/s ({events_per_sec_per_proc:.2} events/s/proc)"
+    );
+    println!("  updates                  {total_updates:>10} total");
+
+    let tag = format!("memory_diet/p{procs}");
+    json.push(
+        &format!("{tag}/bytes_per_proc"),
+        "B",
+        bytes_per_proc,
+        bytes_per_proc,
+        bytes_per_proc,
+    );
+    json.push(
+        &format!("{tag}/events_per_sec_per_proc"),
+        "ev/s",
+        events_per_sec_per_proc,
+        events_per_sec_per_proc,
+        events_per_sec_per_proc,
+    );
+    json.push(
+        &format!("{tag}/total_bytes"),
+        "B",
+        fp.total_bytes as f64,
+        fp.total_bytes as f64,
+        fp.total_bytes as f64,
+    );
+}
 
 fn main() {
     let t0 = std::time::Instant::now();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_out = args.iter().any(|a| a == "--json")
+        || std::env::var("EBCOMM_BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let smoke = std::env::var("EBCOMM_WEAK_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let full = std::env::var("EBCOMM_FULL").is_ok();
+    let mut json = BenchJson::new();
+
+    // ---- memory-diet rung: 10^5 procs (10^6 under EBCOMM_FULL) ------
+    // Virtual runtimes are tuned so each rung stays seconds-bounded on
+    // one core: ~30 updates/proc at 100 µs (3.48 µs/update nominal).
+    let micro = 1_000u64; // 1 µs in engine Nanos
+    if smoke {
+        memory_diet_rung(100_000, 100 * micro, &mut json);
+    } else {
+        memory_diet_rung(100_000, 250 * micro, &mut json);
+        if full {
+            memory_diet_rung(1_000_000, 100 * micro, &mut json);
+        }
+    }
+    if smoke {
+        // CI bench-gate lane: the diet rung only, bounded in seconds.
+        if json_out {
+            match json.write("bench_weak_scaling", "BENCH_weak_scaling.json") {
+                Ok(p) => eprintln!("wrote {}", p.display()),
+                Err(e) => eprintln!("failed to write BENCH_weak_scaling.json: {e}"),
+            }
+        }
+        eprintln!(
+            "bench_weak_scaling (smoke) done in {:.1}s",
+            t0.elapsed().as_secs_f64()
+        );
+        return;
+    }
+
+    // ---- QoS weak-scaling sweep (paper SIII-F, extended) ------------
     let proc_counts = [16usize, 64, 256, 1024];
     let conditions = [(1usize, 1usize), (1, 2048), (4, 1), (4, 2048)];
 
@@ -77,6 +233,12 @@ fn main() {
             }
         }
         println!();
+    }
+    if json_out {
+        match json.write("bench_weak_scaling", "BENCH_weak_scaling.json") {
+            Ok(p) => eprintln!("wrote {}", p.display()),
+            Err(e) => eprintln!("failed to write BENCH_weak_scaling.json: {e}"),
+        }
     }
     eprintln!("bench_weak_scaling done in {:.1}s", t0.elapsed().as_secs_f64());
 }

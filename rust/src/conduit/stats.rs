@@ -143,6 +143,25 @@ impl LocalChannelStats {
         Self::default()
     }
 
+    /// Record a laden drain's yield without counting the attempt.
+    ///
+    /// The discrete-event engine derives `pull_attempts` at read time
+    /// from the destination proc's update counter (exactly one attempt
+    /// per incoming channel per simstep), which is what lets its
+    /// idle-skip path avoid visiting clean channels entirely — an
+    /// unvisited channel's drain would have observed nothing, so only
+    /// the laden-side counters need hot-path writes. Engine-only; the
+    /// atomic [`ChannelStats`] hardware path keeps counting attempts
+    /// through [`StatsSink::on_pull`].
+    #[inline]
+    pub fn on_laden_pull(&self, n_messages: u64) {
+        if n_messages > 0 {
+            self.laden_pulls.set(self.laden_pulls.get() + 1);
+            self.messages_received
+                .set(self.messages_received.get() + n_messages);
+        }
+    }
+
     /// Rebuild counters from a previously captured tranche — engine
     /// checkpoint restore (the tranche is the counters' entire state).
     pub fn from_tranche(t: &CounterTranche) -> Self {

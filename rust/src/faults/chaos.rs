@@ -9,7 +9,10 @@
 //!
 //! 1. **No panic** anywhere in the engine.
 //! 2. **Message conservation**: `sent == delivered + purged + in-flight`
-//!    ([`SimResult::conserves_messages`]).
+//!    ([`SimResult::conserves_messages`]) — and the same ledger balances
+//!    *channel by channel*
+//!    ([`SimResult::channel_conservation_violations`]), so compensating
+//!    errors that net out globally are still caught.
 //! 3. **Well-formed QoS windows**: one window per channel per snapshot,
 //!    monotone counters/clocks within each window, phase tags naming
 //!    only real scenario events.
@@ -156,6 +159,13 @@ fn check_result(
             result.messages_delivered,
             result.messages_purged,
             result.messages_in_flight,
+        ));
+    }
+    if result.channel_conservation_violations > 0 {
+        return Err(format!(
+            "per-channel conservation violated under {mode:?}: {} channels out of balance \
+             (global ledger nets out, so the error hides in compensating channels)",
+            result.channel_conservation_violations,
         ));
     }
     let n_channels: usize = result.shards.iter().map(|s| s.channels().len()).sum();

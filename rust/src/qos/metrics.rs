@@ -30,7 +30,7 @@ use crate::util::Nanos;
 
 /// One endpoint observation: channel counters plus the owning process's
 /// update counter and wall clock.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QosObservation {
     pub counters: CounterTranche,
     pub update_count: u64,

@@ -81,7 +81,7 @@ impl SnapshotSchedule {
 
 /// One completed snapshot for one channel: inlet- and outlet-derived
 /// observations at open and close.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SnapshotWindow {
     pub inlet_before: QosObservation,
     pub inlet_after: QosObservation,

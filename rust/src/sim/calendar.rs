@@ -63,6 +63,13 @@ pub trait Scheduler<T> {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Heap bytes currently reserved by the queue's backing storage
+    /// (capacity, not length). Defaults to 0 so ad-hoc test schedulers
+    /// need not account; both real schedulers override. Feeds the
+    /// engine's bytes/proc memory accounting.
+    fn heap_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Which scheduler backs the engine's event queue.
@@ -165,6 +172,10 @@ impl<T> Scheduler<T> for HeapScheduler<T> {
 
     fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.heap.capacity() * std::mem::size_of::<HeapEntry<T>>()
     }
 }
 
@@ -400,6 +411,17 @@ impl<T> Scheduler<T> for CalendarQueue<T> {
 
     fn len(&self) -> usize {
         self.len
+    }
+
+    fn heap_bytes(&self) -> usize {
+        let per_entry = std::mem::size_of::<(Nanos, u64, T)>();
+        self.buckets.capacity()
+            * std::mem::size_of::<std::collections::VecDeque<(Nanos, u64, T)>>()
+            + self
+                .buckets
+                .iter()
+                .map(|b| b.capacity() * per_entry)
+                .sum::<usize>()
     }
 }
 

@@ -37,7 +37,14 @@ pub const SNAP_MAGIC: [u8; 4] = *b"EBCK";
 /// Current checkpoint format version. Bump on ANY change to what is
 /// serialized or in what order (there is no per-field tagging to absorb
 /// drift); readers reject other versions outright.
-pub const SNAP_VERSION: u32 = 1;
+///
+/// History: v1 = dense per-channel records with baked link parameters;
+/// v2 = hot/cold channel split (interned link table, `dst_in_idx`,
+/// per-channel `purged` counter), `StepPath` in the config, incremental
+/// snapshot cache (`window_open`/`open_t`/`open_phase`/per-channel
+/// cached observations/`touched` flags) replacing the open-observation
+/// pair list.
+pub const SNAP_VERSION: u32 = 2;
 
 /// Why a checkpoint blob could not be decoded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -684,6 +691,16 @@ mod tests {
             SnapReader::new(&bad_ver),
             err_kind(SnapError::BadVersion(99))
         );
+    }
+
+    /// Blobs from the previous format generation are rejected outright
+    /// — v2 restructured the channel section (hot/cold split, interned
+    /// links) so a v1 stream cannot be decoded field-by-field.
+    #[test]
+    fn prior_version_rejected() {
+        let mut v1 = SnapWriter::new().finish();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        assert_eq!(SnapReader::new(&v1), err_kind(SnapError::BadVersion(1)));
     }
 
     fn err_kind<T>(e: SnapError) -> Result<T, SnapError> {

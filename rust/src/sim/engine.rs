@@ -19,6 +19,29 @@
 //!   loss condition;
 //! * barrier semantics per asynchronicity mode (Table I), with barrier
 //!   cost growing logarithmically in process count.
+//!
+//! # Cost scales with activity, not with population
+//!
+//! Two structural choices keep per-simstep cost O(active events) rather
+//! than O(procs), which is what lets replicates reach 10⁵–10⁶ processes:
+//!
+//! * **Idle-skip pulls** ([`StepPath::IdleSkip`], the default): a waking
+//!   process drains only the incoming channels a sender has marked dirty
+//!   since its last visit, instead of scanning its whole in-degree. A
+//!   clean channel's drain would have observed nothing, so skipping it is
+//!   invisible — `pull_attempts` is derived from the update counter at
+//!   read time (exactly one attempt per incoming channel per simstep)
+//!   rather than counted on the hot path. Both paths are bit-identical;
+//!   `EBCOMM_STEP=dense` forces the reference scan and the parity is
+//!   pinned by unit, integration, and randomized property tests.
+//! * **Incremental snapshot capture**: window opens/closes re-read only
+//!   channels adjacent to processes that stepped since the last capture
+//!   (tracked by a per-proc touched flag); untouched channels reuse their
+//!   cached observation, which still equals a live read.
+//!
+//! Per-channel state is split hot/cold ([`ChanHot`]/[`ChanCold`]) with
+//! link models interned into a shared table, shrinking the resident
+//! bytes/proc that [`Engine::memory_footprint`] reports.
 
 use super::calendar::{SchedKind, Scheduler};
 use super::checkpoint::{Persist, SnapError, SnapReader, SnapWriter};
@@ -81,6 +104,47 @@ impl ContentionModel {
     }
 }
 
+/// Which main-loop stepping strategy drives the pull phase.
+///
+/// Both paths produce bit-identical simulations — same golden signature,
+/// same QoS windows, same checkpoint stream — under either scheduler
+/// kind; idle-skip is the default because its cost is O(laden channels)
+/// instead of O(in-degree) per simstep. Pinned by
+/// `dense_and_idle_skip_paths_are_bit_identical` below, the golden parity
+/// test in `tests/integration_sim.rs`, and the randomized grids in
+/// `tests/prop_stepping.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPath {
+    /// Scan every incoming channel of a waking process — the original
+    /// reference pull loop.
+    Dense,
+    /// Drain only the incoming channels marked dirty by a sender since
+    /// the receiver's last visit (arrival-driven dirty lists).
+    IdleSkip,
+}
+
+impl StepPath {
+    /// Resolve from the `EBCOMM_STEP` env var: `"dense"` or `"skip"`
+    /// (case-insensitive); unset means [`StepPath::IdleSkip`]. Panics on
+    /// anything else — a misspelled selector silently falling back would
+    /// invalidate a parity experiment.
+    pub fn from_env() -> Self {
+        match std::env::var("EBCOMM_STEP") {
+            Ok(v) if v.eq_ignore_ascii_case("dense") => StepPath::Dense,
+            Ok(v) if v.eq_ignore_ascii_case("skip") => StepPath::IdleSkip,
+            Ok(v) => panic!("EBCOMM_STEP must be \"dense\" or \"skip\", got {v:?}"),
+            Err(_) => StepPath::IdleSkip,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepPath::Dense => "dense",
+            StepPath::IdleSkip => "skip",
+        }
+    }
+}
+
 /// Simulation run configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -113,6 +177,10 @@ pub struct SimConfig {
     /// `EBCOMM_SCHED` env var (`"heap"` / `"calendar"`); both produce
     /// bit-identical simulations — see `sim::calendar`.
     pub sched: SchedKind,
+    /// Which pull-phase stepping strategy the main loop uses. Defaults
+    /// from the `EBCOMM_STEP` env var (`"dense"` / `"skip"`); both
+    /// produce bit-identical simulations — see [`StepPath`].
+    pub step: StepPath,
     /// Scripted time-varying fault timeline (see [`crate::faults`]).
     /// Compiled into calendar-queue wake events at construction; the
     /// default empty scenario leaves the engine on the static-profile
@@ -138,6 +206,7 @@ impl SimConfig {
             snapshots: None,
             coalesce_override: None,
             sched: SchedKind::from_env(),
+            step: StepPath::from_env(),
             scenario: FaultScenario::default(),
         }
     }
@@ -149,31 +218,39 @@ impl SimConfig {
     }
 }
 
-/// One directed inter-process channel.
-struct SimChannel<M> {
-    src: usize,
-    dst: usize,
+/// Construction-time-immutable wiring of one directed channel, packed to
+/// narrow integers and kept out of the hot counter cache lines. One copy
+/// per channel; the link model itself lives once per distinct model in
+/// the engine's interned [`LinkModel`] table.
+#[derive(Clone, Copy)]
+struct ChanCold {
+    src: u32,
+    dst: u32,
     /// Channel index within the source's channel list.
-    src_ch: usize,
+    src_ch: u32,
     /// Channel index within the destination's channel list (reciprocal).
-    dst_ch: usize,
+    dst_ch: u32,
+    /// Index of this channel's entry in `procs[dst].incoming` — what a
+    /// sender pushes onto the destination's dirty list when it lades a
+    /// clean channel (idle-skip stepping).
+    dst_in_idx: u32,
     /// Workload layer tag of the source's spec — retained so membership
     /// rejoin can re-derive the reciprocal wiring through the
     /// [`SpecIndex`] instead of trusting possibly-stale cached indices.
-    layer: usize,
+    layer: u32,
     /// Hosting nodes of the endpoints (cached off the topology so the
     /// fault overlay's per-send effective-parameter lookup is O(1)).
-    src_node: usize,
-    dst_node: usize,
+    src_node: u32,
+    dst_node: u32,
+    /// Index into the engine's interned link-model table.
+    link_id: u16,
     /// Endpoints on distinct nodes (storms/partitions only touch these).
     crossnode: bool,
-    link: LinkModel,
-    /// `link.service_ns` before the static endpoint-health scaling — the
-    /// fault overlay rescales from this base when effective health
-    /// changes mid-run.
-    service_unscaled_ns: f64,
-    latency_factor: f64,
-    extra_drop: f64,
+}
+
+/// Mutable per-channel state: the counters and lanes every send and pull
+/// actually touches, with nothing else sharing their cache lines.
+struct ChanHot<M> {
     last_depart: Nanos,
     last_arrival: Nanos,
     /// In-flight envelopes in push order, stored SoA (parallel
@@ -185,7 +262,8 @@ struct SimChannel<M> {
     lanes: EnvelopeLanes<M>,
     /// Envelopes ever accepted into the channel.
     pushed: u64,
-    /// Envelopes drained by the receiver (prefix of push order).
+    /// Envelopes drained out of the lanes — receiver pulls plus
+    /// departure purges (prefix of push order).
     pulled: u64,
     /// Monotone departed-prefix counter: how many envelopes, in push
     /// order, are known to have left the send buffer (`depart <= t` for
@@ -193,10 +271,33 @@ struct SimChannel<M> {
     /// over at most once, so occupancy is amortized O(1) instead of the
     /// former O(queue) reverse scan per send.
     departed: u64,
+    /// Of `pulled`, how many were discarded by a receiver-departure
+    /// purge rather than delivered — the per-channel side of the
+    /// send-conservation invariant (`pushed == delivered + purged +
+    /// lanes.len()`).
+    purged: u64,
+    /// Is this channel on its destination's dirty list? Set by the first
+    /// send that lades a clean channel, cleared when a drain leaves the
+    /// lanes empty. Maintained only under [`StepPath::IdleSkip`].
+    dirty: bool,
     stats: LocalChannelStats,
 }
 
-impl<M> SimChannel<M> {
+impl<M> ChanHot<M> {
+    fn new() -> Self {
+        Self {
+            last_depart: 0,
+            last_arrival: 0,
+            lanes: EnvelopeLanes::new(),
+            pushed: 0,
+            pulled: 0,
+            departed: 0,
+            purged: 0,
+            dirty: false,
+            stats: LocalChannelStats::new(),
+        }
+    }
+
     /// Messages still occupying the send buffer at time `now`.
     ///
     /// Occupants are the envelopes that neither departed (`depart <=
@@ -221,13 +322,51 @@ impl<M> SimChannel<M> {
     }
 }
 
+/// Construction-time link-model interner: channels reference models by
+/// table index instead of embedding ~80 bytes apiece. Keyed on the exact
+/// serialized bit pattern (via [`Persist`]), so two models are conflated
+/// only when no downstream computation could ever distinguish them.
+struct LinkInterner {
+    links: Vec<LinkModel>,
+    keys: Vec<Vec<u8>>,
+}
+
+impl LinkInterner {
+    fn new() -> Self {
+        Self {
+            links: Vec::new(),
+            keys: Vec::new(),
+        }
+    }
+
+    fn intern(&mut self, link: LinkModel) -> u16 {
+        let key = {
+            let mut w = SnapWriter::new();
+            link.save(&mut w);
+            w.finish()
+        };
+        for (i, k) in self.keys.iter().enumerate() {
+            if *k == key {
+                return i as u16;
+            }
+        }
+        assert!(
+            self.links.len() < u16::MAX as usize,
+            "link-model table overflow"
+        );
+        self.links.push(link);
+        self.keys.push(key);
+        (self.links.len() - 1) as u16
+    }
+}
+
 /// Per-process simulation state.
 struct ProcState<W: ShardWorkload> {
     workload: W,
     rng: Xoshiro256,
     clock: Nanos,
     updates: u64,
-    /// Outgoing channel ids (into `Engine::channels`), by workload
+    /// Outgoing channel ids (into `Engine::{cold,hot}`), by workload
     /// channel index.
     outgoing: Vec<usize>,
     /// Incoming channel ids, paired with the local workload channel index
@@ -239,6 +378,22 @@ struct ProcState<W: ShardWorkload> {
     reciprocal_out: Vec<Option<usize>>,
     /// Touch counter per outgoing channel (tracks the peer relationship).
     touch: Vec<TouchCounter>,
+    /// Prefix sums of incoming pull overheads: `pull_cum[k]` is the
+    /// virtual-time offset at which incoming channel `k` is drained
+    /// within a simstep. Derived from the wiring + link table (rebuilt on
+    /// restore, never persisted); what lets the idle-skip path drain an
+    /// arbitrary subset of channels at exactly the horizons the dense
+    /// scan would have used.
+    pull_cum: Vec<Nanos>,
+    /// Total pull-phase overhead: the dense scan's end-of-phase clock
+    /// advance, identical no matter how many channels were actually
+    /// visited.
+    pull_total: Nanos,
+    /// Indices into `incoming` of channels currently marked dirty —
+    /// pushed by senders, drained (sorted, to preserve the dense scan's
+    /// ascending visit order) by this process's next pull phase.
+    /// Maintained only under [`StepPath::IdleSkip`].
+    dirty_in: Vec<u32>,
     /// Mode-1 chunk start.
     chunk_start: Nanos,
     /// Mode-2 next fixed sync point.
@@ -255,6 +410,17 @@ enum Ev {
     /// window open/close or a flap toggle, driven by the fault overlay's
     /// state machine.
     Fault(usize),
+}
+
+/// Cached observation state for one channel: its assembled counters and
+/// both endpoints' update counts as of the channel's last capture event.
+/// Valid (equal to a live read) for as long as neither endpoint steps —
+/// which is what lets snapshot opens/closes skip untouched channels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct ChanSnapState {
+    counters: CounterTranche,
+    upd_src: u64,
+    upd_dst: u64,
 }
 
 /// Result of one simulated replicate.
@@ -280,6 +446,13 @@ pub struct SimResult<W> {
     pub messages_purged: u64,
     /// Messages still queued in channels at run end.
     pub messages_in_flight: u64,
+    /// Channels whose individual conservation check failed at finish:
+    /// `pushed != delivered + purged + still-queued` for that channel.
+    /// The global [`Self::conserves_messages`] invariant can mask
+    /// compensating per-channel errors (e.g. a purge credited to the
+    /// wrong channel); chaos campaigns assert this count is zero on
+    /// every timeline.
+    pub channel_conservation_violations: u64,
 }
 
 impl<W> SimResult<W> {
@@ -312,21 +485,78 @@ impl<W> SimResult<W> {
     }
 }
 
+/// Resident-memory accounting for one engine instance, by section —
+/// capacity × element size for every engine-owned allocation, plus the
+/// inline size of each element (so shard state embedded in `ProcState`
+/// counts, while heap owned by workload internals or queued payloads
+/// does not). Published by `bench_weak_scaling` as bytes/proc from 10³
+/// up to the 10⁵–10⁶-proc rungs, the DES analogue of the best-effort
+/// digital-evolution study's ~104 bytes/node envelope.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryFootprint {
+    pub n_procs: usize,
+    pub n_channels: usize,
+    /// Cold channel wiring plus the interned link-model table.
+    pub chan_cold_bytes: usize,
+    /// Hot per-channel counters/lanes headers (inline).
+    pub chan_hot_bytes: usize,
+    /// Heap reserved by in-flight envelope lanes.
+    pub lane_heap_bytes: usize,
+    /// Per-process state: inline struct (embedded shard included) plus
+    /// wiring/touch/dirty vectors.
+    pub proc_bytes: usize,
+    /// Event-scheduler backing storage.
+    pub sched_bytes: usize,
+    /// Snapshot cache, touched flags, and completed windows.
+    pub qos_bytes: usize,
+    /// Membership, barrier, and scratch vectors.
+    pub misc_bytes: usize,
+    pub total_bytes: usize,
+}
+
+impl MemoryFootprint {
+    pub fn bytes_per_proc(&self) -> f64 {
+        if self.n_procs == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.n_procs as f64
+        }
+    }
+}
+
 /// The discrete-event engine.
 pub struct Engine<W: ShardWorkload> {
     cfg: SimConfig,
     topo: Topology,
     profiles: Vec<NodeProfile>,
     procs: Vec<ProcState<W>>,
-    channels: Vec<SimChannel<W::Msg>>,
+    /// Per-channel wiring (parallel to `hot`), immutable after
+    /// construction.
+    cold: Vec<ChanCold>,
+    /// Per-channel mutable counters and lanes (parallel to `cold`).
+    hot: Vec<ChanHot<W::Msg>>,
+    /// Interned link models; `ChanCold::link_id` indexes here.
+    links: Vec<LinkModel>,
     sched: Box<dyn Scheduler<Ev> + Send>,
     seq: u64,
     /// Barrier bookkeeping: arrivals and max arrival time.
     barrier_waiting: Vec<bool>,
     barrier_count: usize,
     barrier_max_arrival: Nanos,
-    /// Snapshot capture: per-channel observations at window open.
-    snap_open: Vec<(QosObservation, QosObservation)>,
+    /// Is a snapshot window currently open?
+    window_open: bool,
+    /// Virtual time and fault phase at the current window's opening —
+    /// the open-side observation fields are reconstructed from these plus
+    /// the per-channel cache at close.
+    open_t: Nanos,
+    open_phase: ScenarioPhase,
+    /// Per-channel cached observation state, valid while neither endpoint
+    /// steps (empty when no snapshot schedule is configured).
+    chan_snap: Vec<ChanSnapState>,
+    /// Has process `p` stepped since its adjacent channels were last
+    /// captured? Capture events refresh exactly the channels adjacent to
+    /// touched procs and clear the flags.
+    touched: Vec<bool>,
     windows: Vec<SnapshotWindow>,
     /// Fault-scenario overlay; `None` for empty scenarios, which keeps
     /// the static-profile path bit-identical (no overlay reads, no extra
@@ -346,6 +576,10 @@ pub struct Engine<W: ShardWorkload> {
     /// [`Scheduler::push_batch_same_t`] call (which drains it back to
     /// empty), instead of N independent pushes per barrier.
     wake_batch: Vec<Ev>,
+    /// Reusable idle-skip retain buffer: the dirty entries a pull phase
+    /// keeps (channels drained but still laden) are staged here while
+    /// the taken dirty list is walked, then swapped back in.
+    dirty_scratch: Vec<u32>,
     /// Membership: is process `p` currently part of the allocation?
     /// All-true for churn-free scenarios (and never consulted on their
     /// hot paths in a way that changes behaviour).
@@ -401,8 +635,15 @@ impl<W: ShardWorkload> Engine<W> {
 
         // Create directed channels and index them, sized in one pass:
         // the channel count is exactly the spec count, and each source's
-        // outgoing list is exactly its spec list's length.
-        let mut channels: Vec<SimChannel<W::Msg>> = Vec::with_capacity(total_specs);
+        // outgoing list is exactly its spec list's length. Wiring goes in
+        // `cold`, counters/lanes in the parallel `hot`, and link models
+        // are interned into a shared table — endpoint-health scaling of
+        // the service interval is recomputed per send from the table's
+        // unscaled model (bit-identical IEEE ops to the former
+        // construction-time bake).
+        let mut interner = LinkInterner::new();
+        let mut cold: Vec<ChanCold> = Vec::with_capacity(total_specs);
+        let mut hot: Vec<ChanHot<W::Msg>> = Vec::with_capacity(total_specs);
         let mut outgoing: Vec<Vec<usize>> = specs
             .iter()
             .map(|specs_p| Vec::with_capacity(specs_p.len()))
@@ -417,52 +658,44 @@ impl<W: ShardWorkload> Engine<W> {
                             "no reciprocal channel: src={src} spec={spec:?}"
                         )
                     });
-                let mut link = link_for(&cfg, &topo, src, spec.peer);
-                let service_unscaled_ns = link.service_ns;
-                let pf_src = profiles[topo.node_of(src)];
-                let pf_dst = profiles[topo.node_of(spec.peer)];
-                // A degraded endpoint slows the send-buffer drain too: MPI
-                // progress (and hence request completion) is tied to the
-                // peer actually keeping up, so occupancy-driven drops
-                // emerge once `service x buffer` lags the send rate.
-                let health = pf_src.latency_factor.max(pf_dst.latency_factor);
-                link.service_ns *= health;
-                channels.push(SimChannel {
-                    src,
-                    dst: spec.peer,
-                    src_ch,
-                    dst_ch,
-                    layer: spec.layer,
-                    src_node: topo.node_of(src),
-                    dst_node: topo.node_of(spec.peer),
+                let link_id = interner.intern(link_for(&cfg, &topo, src, spec.peer));
+                cold.push(ChanCold {
+                    src: src as u32,
+                    dst: spec.peer as u32,
+                    src_ch: src_ch as u32,
+                    dst_ch: dst_ch as u32,
+                    dst_in_idx: 0, // filled once incoming lists exist
+                    layer: spec.layer as u32,
+                    src_node: topo.node_of(src) as u32,
+                    dst_node: topo.node_of(spec.peer) as u32,
+                    link_id,
                     crossnode: !topo.same_node(src, spec.peer),
-                    link,
-                    service_unscaled_ns,
-                    latency_factor: pf_src.latency_factor.max(pf_dst.latency_factor),
-                    extra_drop: (pf_src.extra_drop_prob + pf_dst.extra_drop_prob).min(1.0),
-                    last_depart: 0,
-                    last_arrival: 0,
-                    lanes: EnvelopeLanes::new(),
-                    pushed: 0,
-                    pulled: 0,
-                    departed: 0,
-                    stats: LocalChannelStats::new(),
                 });
-                outgoing[src].push(channels.len() - 1);
+                hot.push(ChanHot::new());
+                outgoing[src].push(cold.len() - 1);
             }
         }
+        let links = interner.links;
 
         // Incoming lists, sized by a degree-count pass before filling.
         let mut in_degree = vec![0usize; shards.len()];
-        for ch in &channels {
-            in_degree[ch.dst] += 1;
+        for c in &cold {
+            in_degree[c.dst as usize] += 1;
         }
         let mut incoming: Vec<Vec<(usize, usize)>> = in_degree
             .iter()
             .map(|&d| Vec::with_capacity(d))
             .collect();
-        for (cid, ch) in channels.iter().enumerate() {
-            incoming[ch.dst].push((cid, ch.dst_ch));
+        for (cid, c) in cold.iter().enumerate() {
+            incoming[c.dst as usize].push((cid, c.dst_ch as usize));
+        }
+        // Back-pointers: each channel knows its slot in the destination's
+        // incoming list, so a sender can push that slot onto the dirty
+        // list without any lookup.
+        for list in &incoming {
+            for (k, &(cid, _)) in list.iter().enumerate() {
+                cold[cid].dst_in_idx = k as u32;
+            }
         }
 
         let n = shards.len();
@@ -487,13 +720,15 @@ impl<W: ShardWorkload> Engine<W> {
                 let mut out_index: Vec<(usize, usize, usize)> = my_outgoing
                     .iter()
                     .enumerate()
-                    .map(|(oi, &oc)| (channels[oc].dst, channels[oc].src_ch, oi))
+                    .map(|(oi, &oc)| {
+                        (cold[oc].dst as usize, cold[oc].src_ch as usize, oi)
+                    })
                     .collect();
                 out_index.sort_unstable();
                 let reciprocal_out = my_incoming
                     .iter()
                     .map(|&(cid, _)| {
-                        let key = (channels[cid].src, channels[cid].dst_ch);
+                        let key = (cold[cid].src as usize, cold[cid].dst_ch as usize);
                         let at =
                             out_index.partition_point(|&(d, c, _)| (d, c) < key);
                         match out_index.get(at) {
@@ -502,6 +737,15 @@ impl<W: ShardWorkload> Engine<W> {
                         }
                     })
                     .collect();
+                // Pull-overhead prefix sums: the virtual-time drain
+                // horizon of each incoming channel within a simstep.
+                let mut pull_cum = Vec::with_capacity(my_incoming.len());
+                let mut pull_total: Nanos = 0;
+                for &(cid, _) in &my_incoming {
+                    pull_cum.push(pull_total);
+                    pull_total +=
+                        links[cold[cid].link_id as usize].pull_overhead_ns as Nanos;
+                }
                 ProcState {
                     workload,
                     rng,
@@ -511,6 +755,9 @@ impl<W: ShardWorkload> Engine<W> {
                     incoming: my_incoming,
                     reciprocal_out,
                     touch: vec![TouchCounter::default(); n_out],
+                    pull_cum,
+                    pull_total,
+                    dirty_in: Vec::new(),
                     chunk_start: 0,
                     next_fixed_sync: skew + cfg.timing.fixed_epoch,
                     finished: false,
@@ -556,25 +803,37 @@ impl<W: ShardWorkload> Engine<W> {
             }
         }
 
+        let chan_snap = if cfg.snapshots.is_some() {
+            vec![ChanSnapState::default(); cold.len()]
+        } else {
+            Vec::new()
+        };
         let engine_rng = Xoshiro256::new(cfg.seed ^ 0xBA44_1E44);
         Self {
             cfg,
             topo,
             profiles,
             procs,
-            channels,
+            cold,
+            hot,
+            links,
             sched,
             seq,
             barrier_waiting: vec![false; n],
             barrier_count: 0,
             barrier_max_arrival: 0,
-            snap_open: Vec::new(),
+            window_open: false,
+            open_t: 0,
+            open_phase: ScenarioPhase::QUIESCENT,
+            chan_snap,
+            touched: vec![false; n],
             windows: Vec::new(),
             faults,
             window_phase: ScenarioPhase::QUIESCENT,
             engine_rng,
             pull_scratch: Vec::new(),
             wake_batch,
+            dirty_scratch: Vec::new(),
             live: vec![true; n],
             live_count: n,
             purged: 0,
@@ -626,14 +885,60 @@ impl<W: ShardWorkload> Engine<W> {
         true
     }
 
+    /// Switch stepping path between events. The path is observationally
+    /// invisible (pinned by `tests/prop_stepping.rs`), so this is legal
+    /// at any pause point: the dirty lists are derived state, rebuilt
+    /// here from lane occupancy exactly as restore rebuilds them —
+    /// between events every laden channel is pending for its receiver
+    /// and vice versa.
+    pub fn set_step_path(&mut self, step: StepPath) {
+        self.cfg.step = step;
+        for ch in &mut self.hot {
+            ch.dirty = false;
+        }
+        for p in &mut self.procs {
+            p.dirty_in.clear();
+        }
+        if step == StepPath::IdleSkip {
+            for cid in 0..self.cold.len() {
+                if !self.hot[cid].lanes.is_empty() {
+                    self.hot[cid].dirty = true;
+                    self.procs[self.cold[cid].dst as usize]
+                        .dirty_in
+                        .push(self.cold[cid].dst_in_idx);
+                }
+            }
+        }
+    }
+
     /// Consume the engine and assemble the replicate result.
-    pub fn finish(self) -> SimResult<W> {
+    pub fn finish(mut self) -> SimResult<W> {
+        // Tail-window close (bugfix): `run_until` returns when the next
+        // event lies beyond `run_for`, which can leave the final snapshot
+        // window open with its close event past the end of the run.
+        // Formerly that partially-elapsed window was silently discarded,
+        // biasing end-of-run QoS aggregates toward the earlier windows.
+        // Close it at the run boundary instead — the observations are as
+        // real at `run_for` as at the scheduled close.
+        if self.window_open {
+            self.snapshot_close(self.cfg.run_for);
+        }
         let qos = ReplicateQos::from_windows(&self.windows);
         let mut totals = CounterTranche::default();
         let mut in_flight = 0u64;
-        for ch in &self.channels {
-            totals.add(&ch.stats.tranche());
+        let mut channel_conservation_violations = 0u64;
+        for cid in 0..self.cold.len() {
+            let tranche = self.assembled_tranche(cid);
+            let ch = &self.hot[cid];
             in_flight += ch.lanes.len() as u64;
+            // Per-channel conservation: every envelope this channel ever
+            // accepted was delivered, purged, or is still queued. The
+            // global sum can hide compensating per-channel errors.
+            if ch.pushed != tranche.messages_received + ch.purged + ch.lanes.len() as u64
+            {
+                channel_conservation_violations += 1;
+            }
+            totals.add(&tranche);
         }
         SimResult {
             updates: self.procs.iter().map(|p| p.updates).collect(),
@@ -646,6 +951,42 @@ impl<W: ShardWorkload> Engine<W> {
             messages_delivered: totals.messages_received,
             messages_purged: self.purged,
             messages_in_flight: in_flight,
+            channel_conservation_violations,
+        }
+    }
+
+    /// Drain incoming channel `k` of process `p` at its in-step horizon
+    /// `t + pull_cum[k]`, updating counters, touch tracking, and the
+    /// workload — the shared body of both stepping paths. An empty drain
+    /// leaves every observable untouched, which is exactly why idle-skip
+    /// may omit the call for clean channels.
+    fn pull_channel(&mut self, p: usize, k: usize, t: Nanos, msgs: &mut Vec<W::Msg>) {
+        let (cid, local_ch) = self.procs[p].incoming[k];
+        let horizon = t + self.procs[p].pull_cum[k];
+        msgs.clear();
+        let summary = {
+            let ch = &mut self.hot[cid];
+            // Batched SoA drain: one arrival-lane prefix scan, then lane
+            // splices into the engine scratch buffer.
+            let summary = ch.lanes.drain_arrived_into(horizon, msgs);
+            ch.pulled += summary.drained;
+            // `pull_attempts` is not counted here — it is derived from
+            // the destination's update counter at read time (one attempt
+            // per incoming channel per simstep), see `assembled_tranche`.
+            ch.stats.on_laden_pull(summary.drained);
+            summary
+        };
+        if let Some(bundled) = summary.max_touch {
+            // Update p's touch counter for this peer via the
+            // precomputed reciprocal-channel index.
+            if let Some(oi) = self.procs[p].reciprocal_out[k] {
+                self.procs[p].touch[oi].on_receive(bundled);
+                let v = self.procs[p].touch[oi].value();
+                self.hot[self.procs[p].outgoing[oi]].stats.set_touches(v);
+            }
+        }
+        if !msgs.is_empty() {
+            self.procs[p].workload.absorb(local_ch, msgs);
         }
     }
 
@@ -659,44 +1000,56 @@ impl<W: ShardWorkload> Engine<W> {
         if !self.live[p] {
             return;
         }
+        // Adjacent channel counters are about to move: snapshot capture
+        // must re-read them instead of trusting its cache.
+        self.touched[p] = true;
         let mut now = t;
 
         // ---- Pull phase: drain every arrived message, oldest first. ----
         if self.cfg.mode.communicates() {
-            // Index-based iteration: `incoming` is construction-time
-            // immutable, and cloning it per simstep was the #1 allocation
-            // in the DES hot loop (see EXPERIMENTS.md SPerf). Arrived
-            // payloads land in the engine-owned scratch buffer — absorb
-            // drains it, so one allocation serves the whole run.
+            // Arrived payloads land in the engine-owned scratch buffer —
+            // absorb drains it, so one allocation serves the whole run.
             let mut msgs = std::mem::take(&mut self.pull_scratch);
-            for k in 0..self.procs[p].incoming.len() {
-                let (cid, local_ch) = self.procs[p].incoming[k];
-                msgs.clear();
-                let summary = {
-                    let ch = &mut self.channels[cid];
-                    // Batched SoA drain: one arrival-lane prefix scan,
-                    // then lane splices into the engine scratch buffer.
-                    let summary = ch.lanes.drain_arrived_into(now, &mut msgs);
-                    ch.pulled += summary.drained;
-                    ch.stats.on_pull(summary.drained);
-                    now += ch.link.pull_overhead_ns as Nanos;
-                    summary
-                };
-                if let Some(bundled) = summary.max_touch {
-                    // Update p's touch counter for this peer via the
-                    // precomputed reciprocal-channel index.
-                    if let Some(oi) = self.procs[p].reciprocal_out[k] {
-                        self.procs[p].touch[oi].on_receive(bundled);
-                        let v = self.procs[p].touch[oi].value();
-                        self.channels[self.procs[p].outgoing[oi]]
-                            .stats
-                            .set_touches(v);
+            match self.cfg.step {
+                StepPath::Dense => {
+                    // Reference scan: every incoming channel, ascending.
+                    for k in 0..self.procs[p].incoming.len() {
+                        self.pull_channel(p, k, t, &mut msgs);
                     }
                 }
-                if !msgs.is_empty() {
-                    self.procs[p].workload.absorb(local_ch, &mut msgs);
+                StepPath::IdleSkip => {
+                    // Only channels a sender marked dirty since the last
+                    // visit. Sorting restores the dense scan's ascending
+                    // visit order; each drain happens at the same
+                    // `t + pull_cum[k]` horizon the dense path would
+                    // have used, so the two are bit-identical. Entries
+                    // whose lanes emptied (including stale entries left
+                    // by a churn purge) are dropped; still-laden
+                    // channels (arrivals beyond the horizon) stay
+                    // listed for the next visit.
+                    let mut pending = std::mem::take(&mut self.procs[p].dirty_in);
+                    pending.sort_unstable();
+                    let mut retained = std::mem::take(&mut self.dirty_scratch);
+                    debug_assert!(retained.is_empty());
+                    for &ki in &pending {
+                        let k = ki as usize;
+                        self.pull_channel(p, k, t, &mut msgs);
+                        let cid = self.procs[p].incoming[k].0;
+                        if self.hot[cid].lanes.is_empty() {
+                            self.hot[cid].dirty = false;
+                        } else {
+                            retained.push(ki);
+                        }
+                    }
+                    pending.clear();
+                    self.dirty_scratch = pending;
+                    self.procs[p].dirty_in = retained;
                 }
             }
+            // The pull phase costs the full in-degree's overhead in
+            // virtual time regardless of how many channels were laden —
+            // the CPU walks its channel list either way.
+            now += self.procs[p].pull_total;
             self.pull_scratch = msgs;
         }
 
@@ -734,62 +1087,90 @@ impl<W: ShardWorkload> Engine<W> {
 
         // ---- Send phase. ----
         if self.cfg.mode.communicates() {
+            let mark_dirty = self.cfg.step == StepPath::IdleSkip;
             for (local_ch, payload) in outputs {
                 let cid = self.procs[p].outgoing[local_ch];
                 let touch = self.procs[p].touch[local_ch].outgoing();
-                let outcome = {
-                    let ch = &mut self.channels[cid];
-                    now += ch.link.send_overhead_ns as Nanos;
-                    if !self.live[ch.dst] {
-                        // Departed receiver: the channel stops accepting
-                        // sends. Best-effort modes count these as
-                        // delivery failures like any other drop; sync
-                        // modes never deadlock on them because barriers
-                        // exclude departed participants.
-                        ch.stats.on_send_attempt(false);
-                        continue;
+                let cold = self.cold[cid];
+                let link = &self.links[cold.link_id as usize];
+                now += link.send_overhead_ns as Nanos;
+                if !self.live[cold.dst as usize] {
+                    // Departed receiver: the channel stops accepting
+                    // sends. Best-effort modes count these as
+                    // delivery failures like any other drop; sync
+                    // modes never deadlock on them because barriers
+                    // exclude departed participants.
+                    self.hot[cid].stats.on_send_attempt(false);
+                    continue;
+                }
+                // Effective link parameters: recomputed per send from
+                // the unscaled interned model. Static path: the same
+                // endpoint-health scaling the construction-time bake
+                // used to apply (same IEEE ops on the same inputs, so
+                // bit-identical results). Overlay path: the fault
+                // overlay's current view (degraded endpoints slow the
+                // send-buffer drain, so occupancy-driven drops emerge
+                // mid-run when a node degrades).
+                let (latency_factor, extra_drop, service_ns) = match &self.faults {
+                    None => {
+                        let ps = self.profiles[cold.src_node as usize];
+                        let pd = self.profiles[cold.dst_node as usize];
+                        let health = ps.latency_factor.max(pd.latency_factor);
+                        (
+                            health,
+                            (ps.extra_drop_prob + pd.extra_drop_prob).min(1.0),
+                            link.service_ns * health,
+                        )
                     }
-                    // Effective link parameters: the static bake, or the
-                    // fault overlay's current view when a scenario is
-                    // loaded (degraded endpoints slow the send-buffer
-                    // drain exactly like the static path's health
-                    // scaling, so occupancy-driven drops emerge mid-run
-                    // when a node degrades).
-                    let (latency_factor, extra_drop, service_ns) = match &self.faults {
-                        None => (ch.latency_factor, ch.extra_drop, ch.link.service_ns),
-                        Some(rt) => {
-                            let ps = rt.node_profile(ch.src_node);
-                            let pd = rt.node_profile(ch.dst_node);
-                            let health = ps.latency_factor.max(pd.latency_factor);
-                            let mods = rt.link_mods(ch.src_node, ch.dst_node, ch.crossnode);
-                            (
-                                health * mods.latency_factor,
-                                (ps.extra_drop_prob + pd.extra_drop_prob).min(1.0)
-                                    + mods.extra_drop_prob,
-                                ch.service_unscaled_ns * health,
-                            )
-                        }
-                    };
+                    Some(rt) => {
+                        let ps = rt.node_profile(cold.src_node as usize);
+                        let pd = rt.node_profile(cold.dst_node as usize);
+                        let health = ps.latency_factor.max(pd.latency_factor);
+                        let mods = rt.link_mods(
+                            cold.src_node as usize,
+                            cold.dst_node as usize,
+                            cold.crossnode,
+                        );
+                        (
+                            health * mods.latency_factor,
+                            (ps.extra_drop_prob + pd.extra_drop_prob).min(1.0)
+                                + mods.extra_drop_prob,
+                            link.service_ns * health,
+                        )
+                    }
+                };
+                let mut newly_dirty = false;
+                let outcome = {
+                    let ch = &mut self.hot[cid];
                     let full = ch.occupancy(now) >= self.cfg.send_buffer;
                     let dropped = full
                         || self.procs[p]
                             .rng
-                            .chance(ch.link.base_drop_prob + extra_drop);
+                            .chance(link.base_drop_prob + extra_drop);
                     if dropped {
                         SendOutcome::Dropped
                     } else {
                         let depart = now.max(ch.last_depart + service_ns as Nanos);
-                        let latency = (ch.link.sample_latency(&mut self.procs[p].rng) as f64
+                        let latency = (link.sample_latency(&mut self.procs[p].rng) as f64
                             * latency_factor) as Nanos;
-                        let arrival = ch.link.coalesce(depart + latency).max(ch.last_arrival);
+                        let arrival = link.coalesce(depart + latency).max(ch.last_arrival);
                         ch.last_depart = depart;
                         ch.last_arrival = arrival;
                         ch.lanes.push(depart, arrival, touch, payload);
                         ch.pushed += 1;
+                        if mark_dirty && !ch.dirty {
+                            ch.dirty = true;
+                            newly_dirty = true;
+                        }
                         SendOutcome::Accepted
                     }
                 };
-                self.channels[cid]
+                if newly_dirty {
+                    // First envelope into a clean channel: tell the
+                    // receiver's next pull phase to visit it.
+                    self.procs[cold.dst as usize].dirty_in.push(cold.dst_in_idx);
+                }
+                self.hot[cid]
                     .stats
                     .on_send_attempt(outcome.delivered_to_channel());
             }
@@ -867,6 +1248,54 @@ impl<W: ShardWorkload> Engine<W> {
         self.wake_batch = batch;
     }
 
+    /// Channel `cid`'s counters as an external observer sees them:
+    /// the live stats cells plus the derived `pull_attempts`. The dense
+    /// reference loop attempted one pull per incoming channel per
+    /// simstep, so at any between-events observation point the attempt
+    /// count *is* the destination's update count (zero when the mode
+    /// never communicates) — deriving it here is what frees the
+    /// idle-skip path from visiting clean channels at all.
+    fn assembled_tranche(&self, cid: usize) -> CounterTranche {
+        let mut t = self.hot[cid].stats.tranche();
+        t.pull_attempts = if self.cfg.mode.communicates() {
+            self.procs[self.cold[cid].dst as usize].updates
+        } else {
+            0
+        };
+        t
+    }
+
+    /// Live observation state of channel `cid` (both endpoints' views).
+    fn capture_chan(&self, cid: usize) -> ChanSnapState {
+        ChanSnapState {
+            counters: self.assembled_tranche(cid),
+            upd_src: self.procs[self.cold[cid].src as usize].updates,
+            upd_dst: self.procs[self.cold[cid].dst as usize].updates,
+        }
+    }
+
+    /// Bring the per-channel observation cache up to date and clear the
+    /// touched flags. A channel's observables move only inside a step of
+    /// one of its endpoints, so the channels adjacent to touched procs
+    /// are exactly the stale ones — everything else still caches a value
+    /// equal to a live read.
+    fn refresh_snap_cache(&mut self) {
+        for p in 0..self.procs.len() {
+            if !self.touched[p] {
+                continue;
+            }
+            self.touched[p] = false;
+            for &(cid, _) in &self.procs[p].incoming {
+                let st = self.capture_chan(cid);
+                self.chan_snap[cid] = st;
+            }
+            for &cid in &self.procs[p].outgoing {
+                let st = self.capture_chan(cid);
+                self.chan_snap[cid] = st;
+            }
+        }
+    }
+
     fn snapshot_open(&mut self, t: Nanos) {
         // Start accumulating the window's fault-phase tag from the
         // instantaneous phase; `fault_event` folds in any transition that
@@ -876,22 +1305,17 @@ impl<W: ShardWorkload> Engine<W> {
             .as_ref()
             .map(|rt| rt.phase())
             .unwrap_or(ScenarioPhase::QUIESCENT);
-        let phase = self.window_phase;
-        self.snap_open = self
-            .channels
-            .iter()
-            .map(|ch| {
-                let counters = ch.stats.tranche();
-                (
-                    QosObservation::capture_phased(counters, self.procs[ch.src].updates, t, phase),
-                    QosObservation::capture_phased(counters, self.procs[ch.dst].updates, t, phase),
-                )
-            })
-            .collect();
+        self.open_phase = self.window_phase;
+        self.open_t = t;
+        self.window_open = true;
+        // The refreshed cache *is* the opening observation for every
+        // channel — untouched channels reuse their previous capture,
+        // which still equals the live read the dense open would take.
+        self.refresh_snap_cache();
     }
 
     fn snapshot_close(&mut self, t: Nanos) {
-        if self.snap_open.is_empty() {
+        if !self.window_open {
             return;
         }
         // Closing observations carry the union of everything active at
@@ -902,34 +1326,60 @@ impl<W: ShardWorkload> Engine<W> {
             Some(rt) => self.window_phase.union(rt.phase()),
             None => ScenarioPhase::QUIESCENT,
         };
-        for (cid, ch) in self.channels.iter().enumerate() {
-            let counters = ch.stats.tranche();
-            let (inlet_before, outlet_before) = self.snap_open[cid];
+        let open_t = self.open_t;
+        let open_phase = self.open_phase;
+        for cid in 0..self.cold.len() {
+            let cold = self.cold[cid];
+            // Stale iff an endpoint stepped while the window was open;
+            // otherwise the cached state still equals a live read.
+            let stale =
+                self.touched[cold.src as usize] || self.touched[cold.dst as usize];
+            let before = self.chan_snap[cid];
+            let after = if stale { self.capture_chan(cid) } else { before };
             self.windows.push(SnapshotWindow {
-                inlet_before,
+                inlet_before: QosObservation::capture_phased(
+                    before.counters,
+                    before.upd_src,
+                    open_t,
+                    open_phase,
+                ),
                 inlet_after: QosObservation::capture_phased(
-                    counters,
-                    self.procs[ch.src].updates,
+                    after.counters,
+                    after.upd_src,
                     t,
                     phase,
                 ),
-                outlet_before,
+                outlet_before: QosObservation::capture_phased(
+                    before.counters,
+                    before.upd_dst,
+                    open_t,
+                    open_phase,
+                ),
                 outlet_after: QosObservation::capture_phased(
-                    counters,
-                    self.procs[ch.dst].updates,
+                    after.counters,
+                    after.upd_dst,
                     t,
                     phase,
                 ),
             });
+            self.chan_snap[cid] = after;
         }
-        self.snap_open.clear();
+        self.touched.fill(false);
+        self.window_open = false;
+        // Structural reset (bugfix hardening): the union accumulated for
+        // this window must not leak into a later window's tag — the
+        // accumulator only has meaning while a window is open, and
+        // checkpoints persist it, so park it at quiescent between
+        // windows. (`snapshot_open` also re-seeds it, so the reset is
+        // what keeps the between-windows state canonical.)
+        self.window_phase = ScenarioPhase::QUIESCENT;
     }
 
     /// Advance scenario event `k`'s overlay state machine and schedule
     /// its next transition, folding the phase change into any open
     /// snapshot window.
     fn fault_event(&mut self, k: usize, t: Nanos) {
-        let window_open = !self.snap_open.is_empty();
+        let window_open = self.window_open;
         let Some(rt) = self.faults.as_mut() else {
             return;
         };
@@ -975,16 +1425,20 @@ impl<W: ShardWorkload> Engine<W> {
             self.barrier_count -= 1;
         }
         // Purge everything queued toward the departed process. The purge
-        // is deliberately NOT a pull (no `on_pull` stats): the messages
-        // were never received — `SimResult::messages_purged` accounts
-        // for them so conservation stays checkable.
+        // is deliberately NOT a pull (no received-message stats): the
+        // messages were never received — the global and per-channel
+        // purge counters account for them so conservation stays
+        // checkable at both granularities. Dirty flags are left as-is:
+        // a stale dirty entry drains nothing and clears itself on the
+        // receiver's next visit.
         let mut scratch = std::mem::take(&mut self.pull_scratch);
         for k in 0..self.procs[p].incoming.len() {
             let (cid, _) = self.procs[p].incoming[k];
-            let ch = &mut self.channels[cid];
+            let ch = &mut self.hot[cid];
             scratch.clear();
             let summary = ch.lanes.drain_arrived_into(Nanos::MAX, &mut scratch);
             ch.pulled += summary.drained;
+            ch.purged += summary.drained;
             self.purged += summary.drained;
         }
         scratch.clear();
@@ -1018,13 +1472,67 @@ impl<W: ShardWorkload> Engine<W> {
     fn rewire_proc(&mut self, p: usize) {
         for k in 0..self.procs[p].incoming.len() {
             let (cid, _) = self.procs[p].incoming[k];
-            let src = self.channels[cid].src;
-            let layer = self.channels[cid].layer;
+            let src = self.cold[cid].src as usize;
+            let layer = self.cold[cid].layer as usize;
             self.procs[p].reciprocal_out[k] =
                 self.spec_index.lookup(p, src, reciprocal_layer(layer));
         }
         for tc in &mut self.procs[p].touch {
             *tc = TouchCounter::default();
+        }
+    }
+
+    /// Measure the engine's resident memory by section: capacity ×
+    /// element size over every engine-owned allocation, plus inline
+    /// element sizes. Heap owned by workload internals or by queued
+    /// payload values (`W::Msg` with owned storage) is not visible from
+    /// here and is excluded — the report is the *engine's* footprint,
+    /// the part the hot/cold split and link interning shrink.
+    pub fn memory_footprint(&self) -> MemoryFootprint {
+        use std::mem::size_of;
+        let chan_cold_bytes = self.cold.capacity() * size_of::<ChanCold>()
+            + self.links.capacity() * size_of::<LinkModel>();
+        let chan_hot_bytes = self.hot.capacity() * size_of::<ChanHot<W::Msg>>();
+        let lane_heap_bytes: usize =
+            self.hot.iter().map(|ch| ch.lanes.heap_bytes()).sum();
+        let mut proc_bytes = self.procs.capacity() * size_of::<ProcState<W>>();
+        for p in &self.procs {
+            proc_bytes += p.outgoing.capacity() * size_of::<usize>()
+                + p.incoming.capacity() * size_of::<(usize, usize)>()
+                + p.reciprocal_out.capacity() * size_of::<Option<usize>>()
+                + p.touch.capacity() * size_of::<TouchCounter>()
+                + p.pull_cum.capacity() * size_of::<Nanos>()
+                + p.dirty_in.capacity() * size_of::<u32>();
+        }
+        let sched_bytes = self.sched.heap_bytes();
+        let qos_bytes = self.chan_snap.capacity() * size_of::<ChanSnapState>()
+            + self.touched.capacity() * size_of::<bool>()
+            + self.windows.capacity() * size_of::<SnapshotWindow>();
+        let misc_bytes = self.barrier_waiting.capacity() * size_of::<bool>()
+            + self.live.capacity() * size_of::<bool>()
+            + self.wake_armed.capacity() * size_of::<bool>()
+            + self.churn_procs.capacity() * size_of::<usize>()
+            + self.wake_batch.capacity() * size_of::<Ev>()
+            + self.dirty_scratch.capacity() * size_of::<u32>()
+            + self.pull_scratch.capacity() * size_of::<W::Msg>();
+        let total_bytes = chan_cold_bytes
+            + chan_hot_bytes
+            + lane_heap_bytes
+            + proc_bytes
+            + sched_bytes
+            + qos_bytes
+            + misc_bytes;
+        MemoryFootprint {
+            n_procs: self.procs.len(),
+            n_channels: self.cold.len(),
+            chan_cold_bytes,
+            chan_hot_bytes,
+            lane_heap_bytes,
+            proc_bytes,
+            sched_bytes,
+            qos_bytes,
+            misc_bytes,
+            total_bytes,
         }
     }
 }
@@ -1101,6 +1609,23 @@ impl Persist for CommBackend {
     }
 }
 
+impl Persist for StepPath {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(match self {
+            StepPath::Dense => 0,
+            StepPath::IdleSkip => 1,
+        });
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(StepPath::Dense),
+            1 => Ok(StepPath::IdleSkip),
+            _ => Err(SnapError::Corrupt("StepPath tag")),
+        }
+    }
+}
+
 impl Persist for ContentionModel {
     fn save(&self, w: &mut SnapWriter) {
         self.a.save(w);
@@ -1111,6 +1636,22 @@ impl Persist for ContentionModel {
         Ok(Self {
             a: f64::load(r)?,
             b: f64::load(r)?,
+        })
+    }
+}
+
+impl Persist for ChanSnapState {
+    fn save(&self, w: &mut SnapWriter) {
+        self.counters.save(w);
+        self.upd_src.save(w);
+        self.upd_dst.save(w);
+    }
+
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            counters: CounterTranche::load(r)?,
+            upd_src: u64::load(r)?,
+            upd_dst: u64::load(r)?,
         })
     }
 }
@@ -1132,6 +1673,7 @@ impl Persist for SimConfig {
         self.snapshots.save(w);
         self.coalesce_override.save(w);
         self.sched.save(w);
+        self.step.save(w);
         self.scenario.save(w);
     }
 
@@ -1152,9 +1694,20 @@ impl Persist for SimConfig {
             snapshots: Option::<SnapshotSchedule>::load(r)?,
             coalesce_override: Option::<Nanos>::load(r)?,
             sched: SchedKind::load(r)?,
+            step: StepPath::load(r)?,
             scenario: FaultScenario::load(r)?,
         })
     }
+}
+
+/// Range-checked narrowing for wiring fields stored as `usize` in the
+/// checkpoint stream.
+fn u32_field(v: usize) -> Result<u32, SnapError> {
+    u32::try_from(v).map_err(|_| SnapError::Corrupt("u32 field range"))
+}
+
+fn u16_field(v: usize) -> Result<u16, SnapError> {
+    u16::try_from(v).map_err(|_| SnapError::Corrupt("u16 field range"))
 }
 
 // ---- engine checkpoint / restore -----------------------------------
@@ -1173,6 +1726,11 @@ where
     /// back with its original `(t, seq)` key. Dequeue order depends only
     /// on those keys, so the drain round-trip leaves the simulation
     /// bit-identical — and two consecutive checkpoints are byte-equal.
+    ///
+    /// Derived state is never persisted: pull prefix sums, dirty flags,
+    /// and dirty lists are rebuilt from the wiring at restore (channel
+    /// tranches are saved *assembled*, with the derived `pull_attempts`
+    /// folded in, so older observers of the blob see final counters).
     pub fn checkpoint(&mut self) -> Vec<u8> {
         let mut w = SnapWriter::new();
         self.cfg.save(&mut w);
@@ -1196,20 +1754,21 @@ where
             p.finished.save(&mut w);
         }
 
-        self.channels.len().save(&mut w);
-        for ch in &self.channels {
-            ch.src.save(&mut w);
-            ch.dst.save(&mut w);
-            ch.src_ch.save(&mut w);
-            ch.dst_ch.save(&mut w);
-            ch.layer.save(&mut w);
-            ch.src_node.save(&mut w);
-            ch.dst_node.save(&mut w);
-            ch.crossnode.save(&mut w);
-            ch.link.save(&mut w);
-            ch.service_unscaled_ns.save(&mut w);
-            ch.latency_factor.save(&mut w);
-            ch.extra_drop.save(&mut w);
+        self.links.save(&mut w);
+        self.cold.len().save(&mut w);
+        for cid in 0..self.cold.len() {
+            let c = &self.cold[cid];
+            (c.src as usize).save(&mut w);
+            (c.dst as usize).save(&mut w);
+            (c.src_ch as usize).save(&mut w);
+            (c.dst_ch as usize).save(&mut w);
+            (c.dst_in_idx as usize).save(&mut w);
+            (c.layer as usize).save(&mut w);
+            (c.src_node as usize).save(&mut w);
+            (c.dst_node as usize).save(&mut w);
+            (c.link_id as usize).save(&mut w);
+            c.crossnode.save(&mut w);
+            let ch = &self.hot[cid];
             ch.last_depart.save(&mut w);
             ch.last_arrival.save(&mut w);
             ch.lanes.len().save(&mut w);
@@ -1222,7 +1781,8 @@ where
             ch.pushed.save(&mut w);
             ch.pulled.save(&mut w);
             ch.departed.save(&mut w);
-            ch.stats.tranche().save(&mut w);
+            ch.purged.save(&mut w);
+            self.assembled_tranche(cid).save(&mut w);
         }
 
         // Scheduler: drain-and-restore. Entries come out in dequeue
@@ -1241,7 +1801,11 @@ where
         self.barrier_waiting.save(&mut w);
         self.barrier_count.save(&mut w);
         self.barrier_max_arrival.save(&mut w);
-        self.snap_open.save(&mut w);
+        self.window_open.save(&mut w);
+        self.open_t.save(&mut w);
+        self.open_phase.save(&mut w);
+        self.chan_snap.save(&mut w);
+        self.touched.save(&mut w);
         self.windows.save(&mut w);
         let overlay: Option<Vec<u8>> = self.faults.as_ref().map(|rt| rt.export_states());
         overlay.save(&mut w);
@@ -1315,24 +1879,27 @@ where
                 chunk_start,
                 next_fixed_sync,
                 finished,
+                pull_cum: Vec::new(),
+                pull_total: 0,
+                dirty_in: Vec::new(),
             });
         }
 
+        let links = Vec::<LinkModel>::load(&mut r)?;
         let n_ch = usize::load(&mut r)?;
-        let mut channels: Vec<SimChannel<W::Msg>> = Vec::with_capacity(n_ch);
+        let mut cold: Vec<ChanCold> = Vec::with_capacity(n_ch);
+        let mut hot: Vec<ChanHot<W::Msg>> = Vec::with_capacity(n_ch);
         for _ in 0..n_ch {
             let src = usize::load(&mut r)?;
             let dst = usize::load(&mut r)?;
             let src_ch = usize::load(&mut r)?;
             let dst_ch = usize::load(&mut r)?;
+            let dst_in_idx = usize::load(&mut r)?;
             let layer = usize::load(&mut r)?;
             let src_node = usize::load(&mut r)?;
             let dst_node = usize::load(&mut r)?;
+            let link_id = usize::load(&mut r)?;
             let crossnode = bool::load(&mut r)?;
-            let link = LinkModel::load(&mut r)?;
-            let service_unscaled_ns = f64::load(&mut r)?;
-            let latency_factor = f64::load(&mut r)?;
-            let extra_drop = f64::load(&mut r)?;
             let last_depart = Nanos::load(&mut r)?;
             let last_arrival = Nanos::load(&mut r)?;
             let n_lanes = usize::load(&mut r)?;
@@ -1347,29 +1914,35 @@ where
             let pushed = u64::load(&mut r)?;
             let pulled = u64::load(&mut r)?;
             let departed = u64::load(&mut r)?;
+            let purged = u64::load(&mut r)?;
             let tranche = CounterTranche::load(&mut r)?;
             if src >= n || dst >= n {
                 return Err(SnapError::Corrupt("channel endpoint"));
             }
-            channels.push(SimChannel {
-                src,
-                dst,
-                src_ch,
-                dst_ch,
-                layer,
-                src_node,
-                dst_node,
+            if link_id >= links.len() {
+                return Err(SnapError::Corrupt("link id"));
+            }
+            cold.push(ChanCold {
+                src: u32_field(src)?,
+                dst: u32_field(dst)?,
+                src_ch: u32_field(src_ch)?,
+                dst_ch: u32_field(dst_ch)?,
+                dst_in_idx: u32_field(dst_in_idx)?,
+                layer: u32_field(layer)?,
+                src_node: u32_field(src_node)?,
+                dst_node: u32_field(dst_node)?,
+                link_id: u16_field(link_id)?,
                 crossnode,
-                link,
-                service_unscaled_ns,
-                latency_factor,
-                extra_drop,
+            });
+            hot.push(ChanHot {
                 last_depart,
                 last_arrival,
                 lanes,
                 pushed,
                 pulled,
                 departed,
+                purged,
+                dirty: false,
                 stats: LocalChannelStats::from_tranche(&tranche),
             });
         }
@@ -1379,7 +1952,11 @@ where
         let barrier_waiting = Vec::<bool>::load(&mut r)?;
         let barrier_count = usize::load(&mut r)?;
         let barrier_max_arrival = Nanos::load(&mut r)?;
-        let snap_open = Vec::<(QosObservation, QosObservation)>::load(&mut r)?;
+        let window_open = bool::load(&mut r)?;
+        let open_t = Nanos::load(&mut r)?;
+        let open_phase = ScenarioPhase::load(&mut r)?;
+        let chan_snap = Vec::<ChanSnapState>::load(&mut r)?;
+        let touched = Vec::<bool>::load(&mut r)?;
         let windows = Vec::<SnapshotWindow>::load(&mut r)?;
         let overlay_states = Option::<Vec<u8>>::load(&mut r)?;
         let window_phase = ScenarioPhase::load(&mut r)?;
@@ -1397,6 +1974,61 @@ where
             || live.iter().filter(|&&l| l).count() != live_count
         {
             return Err(SnapError::Corrupt("membership vectors"));
+        }
+        if touched.len() != n {
+            return Err(SnapError::Corrupt("touched flags"));
+        }
+        let want_snap = if cfg.snapshots.is_some() { n_ch } else { 0 };
+        if chan_snap.len() != want_snap {
+            return Err(SnapError::Corrupt("snapshot cache size"));
+        }
+        if window_open && cfg.snapshots.is_none() {
+            return Err(SnapError::Corrupt("open window without schedule"));
+        }
+        for p in &procs {
+            for &cid in &p.outgoing {
+                if cid >= n_ch {
+                    return Err(SnapError::Corrupt("outgoing channel id"));
+                }
+            }
+            for &(cid, _) in &p.incoming {
+                if cid >= n_ch {
+                    return Err(SnapError::Corrupt("incoming channel id"));
+                }
+            }
+        }
+        for (cid, c) in cold.iter().enumerate() {
+            let expect = Some(&(cid, c.dst_ch as usize));
+            if procs[c.dst as usize].incoming.get(c.dst_in_idx as usize) != expect {
+                return Err(SnapError::Corrupt("incoming index"));
+            }
+        }
+
+        // Derived pull costs: rebuilt from restored wiring exactly as
+        // construction builds them.
+        for p in procs.iter_mut() {
+            let mut acc: Nanos = 0;
+            p.pull_cum = p
+                .incoming
+                .iter()
+                .map(|&(cid, _)| {
+                    acc += links[cold[cid].link_id as usize].pull_overhead_ns as Nanos;
+                    acc
+                })
+                .collect();
+            p.pull_total = acc;
+        }
+        // Derived dirty lists: any laden channel is pending for its
+        // receiver (a superset of what a live run would carry is never
+        // possible — dense pulls drain every laden channel they visit, so
+        // "laden" and "pending" coincide between events).
+        if cfg.step == StepPath::IdleSkip {
+            for cid in 0..n_ch {
+                if !hot[cid].lanes.is_empty() {
+                    hot[cid].dirty = true;
+                    procs[cold[cid].dst as usize].dirty_in.push(cold[cid].dst_in_idx);
+                }
+            }
         }
 
         if let Some(kind) = sched_override {
@@ -1433,19 +2065,26 @@ where
             topo,
             profiles,
             procs,
-            channels,
+            cold,
+            hot,
+            links,
             sched,
             seq,
             barrier_waiting,
             barrier_count,
             barrier_max_arrival,
-            snap_open,
+            window_open,
+            open_t,
+            open_phase,
+            chan_snap,
+            touched,
             windows,
             faults,
             window_phase,
             engine_rng,
             pull_scratch: Vec::new(),
             wake_batch: Vec::new(),
+            dirty_scratch: Vec::new(),
             live,
             live_count,
             purged,
@@ -1548,27 +2187,7 @@ mod tests {
     /// the SoA lanes, with a shadow AoS departure list as the reference.
     #[test]
     fn occupancy_matches_reference_scan() {
-        let mut ch = SimChannel::<u8> {
-            src: 0,
-            dst: 1,
-            src_ch: 0,
-            dst_ch: 0,
-            layer: 0,
-            src_node: 0,
-            dst_node: 1,
-            crossnode: true,
-            link: LinkModel::intranode(),
-            service_unscaled_ns: LinkModel::intranode().service_ns,
-            latency_factor: 1.0,
-            extra_drop: 0.0,
-            last_depart: 0,
-            last_arrival: 0,
-            lanes: EnvelopeLanes::new(),
-            pushed: 0,
-            pulled: 0,
-            departed: 0,
-            stats: LocalChannelStats::new(),
-        };
+        let mut ch = ChanHot::<u8>::new();
         // Shadow copy of the queued departure times, AoS-style.
         let mut shadow: std::collections::VecDeque<Nanos> = std::collections::VecDeque::new();
         let mut rng = Xoshiro256::new(0x0CC);
@@ -1968,6 +2587,24 @@ mod tests {
         assert!(result.attempted_sends > 0);
     }
 
+    /// The global send-conservation ledger must also balance channel by
+    /// channel under a leave/join storm: for every channel,
+    /// `pushed == delivered + purged + in_flight`. A counter that merely
+    /// nets out globally (one channel over, another under) is caught
+    /// here and surfaced through `channel_conservation_violations`.
+    #[test]
+    fn churn_storm_conserves_messages_per_channel() {
+        let scenario = FaultScenario::leave_join_storm(8, 10 * MILLI, 20 * MILLI, 4);
+        let result = churn_engine(8, AsyncMode::BestEffort, 50 * MILLI, 15, scenario).run();
+        assert!(result.conserves_messages());
+        assert_eq!(
+            result.channel_conservation_violations, 0,
+            "per-channel ledger violated on {} channels",
+            result.channel_conservation_violations
+        );
+        assert!(result.messages_purged > 0, "storm purged nothing");
+    }
+
     // ---- checkpoint / restore --------------------------------------
 
     fn ckpt_engine(
@@ -2136,5 +2773,165 @@ mod tests {
             Engine::<GraphColoringShard>::restore(&wrong_version),
             Err(SnapError::BadVersion(_))
         ));
+    }
+
+    // ---- idle-skip stepping / memory diet --------------------------
+
+    /// Tentpole gate: the idle-skip path must be observationally
+    /// indistinguishable from dense stepping — same fingerprint, same
+    /// snapshot windows bit for bit, under both scheduler kinds, through
+    /// a mid-run leave/rejoin that exercises dirty-list purges.
+    #[test]
+    fn dense_and_idle_skip_paths_are_bit_identical() {
+        let scenario = FaultScenario::default().with(
+            15 * MILLI,
+            15 * MILLI,
+            FaultKind::ProcLeave { proc: 1 },
+        );
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut a = snap_scenario_engine(31, sched, scenario.clone());
+            let mut b = snap_scenario_engine(31, sched, scenario.clone());
+            a.cfg.step = StepPath::Dense;
+            b.cfg.step = StepPath::IdleSkip;
+            let ra = a.run();
+            let rb = b.run();
+            assert_eq!(fingerprint(&ra), fingerprint(&rb), "sched {sched:?}");
+            assert_eq!(ra.windows, rb.windows, "windows diverged on {sched:?}");
+            assert_eq!(ra.qos, rb.qos);
+            assert_eq!(ra.channel_conservation_violations, 0);
+            assert_eq!(rb.channel_conservation_violations, 0);
+        }
+    }
+
+    /// Bugfix pin: a window whose close event lands past `run_for` used
+    /// to be dropped entirely (the open-side tranche was captured, then
+    /// the loop exited before the close event fired). `finish()` must
+    /// close it at `run_for` — on the pre-fix engine this produces zero
+    /// windows and fails.
+    #[test]
+    fn tail_window_straddling_run_end_closes_at_run_for() {
+        let topo = Topology::new(2, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(33);
+        let shards: Vec<_> = (0..2)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 4,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(2),
+            15 * MILLI,
+        );
+        cfg.seed = 33;
+        cfg.send_buffer = 8;
+        // One window: opens at 10 ms, scheduled to close at 20 ms — past
+        // the 15 ms end of run.
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            10 * MILLI,
+            10 * MILLI,
+            10 * MILLI,
+            1,
+        ));
+        let result = Engine::new(cfg, topo, vec![NodeProfile::healthy(); 2], shards).run();
+        // 2 procs x 2 channels: the straddling window must still appear.
+        assert_eq!(result.windows.len(), 4, "tail window dropped");
+        for w in &result.windows {
+            assert_eq!(w.inlet_before.wall_ns, 10 * MILLI);
+            assert_eq!(w.inlet_after.wall_ns, 15 * MILLI, "not closed at run_for");
+            assert!(
+                w.inlet_after.update_count > w.inlet_before.update_count,
+                "truncated window observed no progress"
+            );
+        }
+    }
+
+    /// Bugfix pin: the fault-phase accumulator must reset between
+    /// windows. A fault active only during window 0 must not tag window
+    /// 1 — two windows bracketing a degrade/recover flap get distinct
+    /// phases.
+    #[test]
+    fn window_phase_does_not_leak_across_windows() {
+        let topo = Topology::new(4, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(34);
+        let shards: Vec<_> = (0..4)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 8,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(4),
+            50 * MILLI,
+        );
+        cfg.seed = 34;
+        cfg.send_buffer = 8;
+        // Windows [10,20] and [30,40] ms; fault active 12–18 ms, i.e.
+        // wholly inside the first window.
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            10 * MILLI,
+            20 * MILLI,
+            10 * MILLI,
+            2,
+        ));
+        cfg.scenario = FaultScenario::degrade_recover(1, 12 * MILLI, 6 * MILLI);
+        let result =
+            Engine::new(cfg, topo.clone(), healthy_profiles(&topo), shards).run();
+        let n_ch = result.windows.len() / 2;
+        assert!(n_ch > 0, "no windows produced");
+        for (i, w) in result.windows.iter().enumerate() {
+            if i < n_ch {
+                assert!(
+                    w.phase().contains(0),
+                    "window 0 missed the active fault (channel {i})"
+                );
+            } else {
+                assert!(
+                    w.phase().is_quiescent(),
+                    "fault phase leaked into window 1 (index {i}): {:?}",
+                    w.phase()
+                );
+            }
+        }
+    }
+
+    /// Every section of the memory footprint must be accounted: the
+    /// per-section byte counts sum exactly to the published total, and
+    /// the cold wiring record stays within its cache-dense budget.
+    #[test]
+    fn memory_footprint_accounts_every_section() {
+        let engine = gc_engine(8, 4, AsyncMode::BestEffort, MILLI, 77);
+        let fp = engine.memory_footprint();
+        assert_eq!(fp.n_procs, 8);
+        assert!(fp.n_channels > 0);
+        let section_sum = fp.chan_cold_bytes
+            + fp.chan_hot_bytes
+            + fp.lane_heap_bytes
+            + fp.proc_bytes
+            + fp.sched_bytes
+            + fp.qos_bytes
+            + fp.misc_bytes;
+        assert_eq!(section_sum, fp.total_bytes, "unaccounted section");
+        assert!(fp.bytes_per_proc() > 0.0);
+        assert!(
+            std::mem::size_of::<ChanCold>() <= 48,
+            "cold wiring record grew past its cache budget: {} B",
+            std::mem::size_of::<ChanCold>()
+        );
     }
 }

@@ -98,6 +98,18 @@ impl<M> EnvelopeLanes<M> {
             .map(|(((&d, &a), &t), p)| (d, a, t, p))
     }
 
+    /// Heap bytes currently reserved by the four lanes (capacity, not
+    /// length — what the allocator actually holds). Feeds the engine's
+    /// [`memory_footprint`](crate::sim::Engine::memory_footprint)
+    /// bytes/proc accounting; the payload term uses `size_of::<M>()`, so
+    /// payload-owned heap (e.g. pooled `Vec`s) is not visible here.
+    pub fn heap_bytes(&self) -> usize {
+        self.depart.capacity() * std::mem::size_of::<Nanos>()
+            + self.arrival.capacity() * std::mem::size_of::<Nanos>()
+            + self.touch.capacity() * std::mem::size_of::<u64>()
+            + self.payload.capacity() * std::mem::size_of::<M>()
+    }
+
     /// Drain every envelope with `arrival <= now`, appending payloads to
     /// `out` in push order, and report the count plus the maximum touch
     /// value among the drained prefix (`None` when nothing had arrived).

@@ -10,7 +10,7 @@ pub use calendar::{CalendarQueue, HeapScheduler, SchedKind, Scheduler};
 pub use checkpoint::{Persist, SnapError, SnapReader, SnapWriter, SNAP_MAGIC, SNAP_VERSION};
 pub use engine::{
     healthy_profiles, heterogeneous_profiles, profiles_with_faulty, CommBackend, ContentionModel,
-    Engine, SimConfig, SimResult,
+    Engine, MemoryFootprint, SimConfig, SimResult, StepPath,
 };
 pub use lanes::{DrainSummary, EnvelopeLanes};
 pub use modes::{AsyncMode, ModeTiming};

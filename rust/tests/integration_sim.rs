@@ -9,7 +9,7 @@ use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::qos::{MetricName, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SchedKind, SimConfig,
-    SimResult,
+    SimResult, StepPath,
 };
 use ebcomm::util::rng::Xoshiro256;
 use ebcomm::util::{MILLI, SECOND};
@@ -313,6 +313,16 @@ fn golden_engine_run_scenario(
     sched: SchedKind,
     scenario: ebcomm::faults::FaultScenario,
 ) -> SimResult<GraphColoringShard> {
+    golden_engine_run_full(sched, scenario, StepPath::from_env())
+}
+
+/// [`golden_engine_run_scenario`] with the stepping path also pinned
+/// programmatically (the same pair `EBCOMM_STEP` selects between).
+fn golden_engine_run_full(
+    sched: SchedKind,
+    scenario: ebcomm::faults::FaultScenario,
+    step: StepPath,
+) -> SimResult<GraphColoringShard> {
     let topo = Topology::new(4, PlacementKind::OnePerNode);
     let mut rng = Xoshiro256::new(0x601D);
     let shards: Vec<_> = (0..4)
@@ -332,6 +342,7 @@ fn golden_engine_run_scenario(
     cfg.seed = 0x601D;
     cfg.send_buffer = 4;
     cfg.sched = sched;
+    cfg.step = step;
     cfg.scenario = scenario;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         30 * MILLI,
@@ -421,6 +432,37 @@ fn empty_and_never_active_scenarios_preserve_golden_signature() {
             baseline,
             dormant,
             "{}: never-active scenario diverged from the static path",
+            sched.label()
+        );
+    }
+}
+
+/// The stepping path must be invisible to the golden signature: the
+/// O(active-events) idle-skip loop (arrival-driven dirty lists,
+/// incremental snapshot capture) and the dense reference loop (one pull
+/// attempt per incoming channel per simstep, full snapshot recapture)
+/// must produce the **same golden signature and the same windows**,
+/// under both scheduler kinds — the tentpole gate for the memory-diet
+/// engine. Window equality is checked bit-for-bit on top of the
+/// signature (which already folds QoS metrics in) so a divergence
+/// pinpoints the snapshot path rather than just "something changed".
+#[test]
+fn step_path_choice_preserves_golden_signature() {
+    use ebcomm::faults::FaultScenario;
+    for sched in [SchedKind::Heap, SchedKind::Calendar] {
+        let dense =
+            golden_engine_run_full(sched, FaultScenario::default(), StepPath::Dense);
+        let skip =
+            golden_engine_run_full(sched, FaultScenario::default(), StepPath::IdleSkip);
+        assert_eq!(
+            dense.windows, skip.windows,
+            "{}: snapshot windows diverged between stepping paths",
+            sched.label()
+        );
+        assert_eq!(
+            engine_signature(&dense),
+            engine_signature(&skip),
+            "{}: idle-skip stepping diverged from the dense reference",
             sched.label()
         );
     }

@@ -1,0 +1,260 @@
+//! Idle-skip stepping equivalence through the public API: over a
+//! randomized grid of `(scenario incl. churn, mode, seed, sched kind)`
+//! tuples, a run stepped with the O(active-events) dirty-list path
+//! (`StepPath::IdleSkip`) must be **bit-identical** to the dense
+//! reference path (`StepPath::Dense`) — same per-proc updates, same
+//! conservation counters, same colors, same QoS windows down to the
+//! float bits and phase tags.
+//!
+//! The second property closes the loop with the checkpoint format: an
+//! idle-skip run checkpointed mid-flight round-trips through the v2
+//! snapshot (dirty lists are *derived* state, rebuilt at restore), and
+//! a dense-path snapshot restores into an idle-skip finish (and vice
+//! versa) without perturbing a bit — the step path is simulation-
+//! invisible, so even *mixing* paths across the checkpoint boundary
+//! must reproduce the straight-through run.
+
+use ebcomm::faults::FaultScenario;
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::SnapshotSchedule;
+use ebcomm::sim::{
+    healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, SimConfig, SimResult, StepPath,
+    SNAP_VERSION,
+};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen, PropResult};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{Nanos, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+use ebcomm::workloads::ShardWorkload;
+
+const N_PROCS: usize = 4;
+const RUN_FOR: Nanos = 60 * MILLI;
+
+fn make_engine(
+    mode: AsyncMode,
+    seed: u64,
+    sched: SchedKind,
+    step: StepPath,
+    scenario: FaultScenario,
+) -> Engine<GraphColoringShard> {
+    let topo = Topology::new(N_PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..N_PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 2,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+    cfg.seed = seed;
+    cfg.send_buffer = 16;
+    cfg.sched = sched;
+    cfg.step = step;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        10 * MILLI,
+        15 * MILLI,
+        8 * MILLI,
+        3,
+    ));
+    cfg.scenario = scenario;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards)
+}
+
+/// Everything observable about a finished run, bit-exact.
+#[allow(clippy::type_complexity)]
+fn fp(r: &SimResult<GraphColoringShard>) -> (Vec<u64>, [u64; 6], Vec<u8>, Vec<u64>) {
+    let colors: Vec<u8> = r.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+    let qos_bits: Vec<u64> = r
+        .windows
+        .iter()
+        .flat_map(|w| {
+            let m = w.metrics();
+            [
+                m.simstep_period_ns.to_bits(),
+                m.simstep_latency.to_bits(),
+                m.walltime_latency_ns.to_bits(),
+                m.delivery_failure_rate.to_bits(),
+                m.delivery_clumpiness.to_bits(),
+                w.phase().bits(),
+            ]
+        })
+        .collect();
+    (
+        r.updates.clone(),
+        [
+            r.attempted_sends,
+            r.successful_sends,
+            r.messages_delivered,
+            r.messages_purged,
+            r.messages_in_flight,
+            r.channel_conservation_violations,
+        ],
+        colors,
+        qos_bits,
+    )
+}
+
+fn random_scenario(g: &mut Gen) -> FaultScenario {
+    match g.usize_in(0, 5) {
+        0 => FaultScenario::default(),
+        1 => FaultScenario::congestion_storm(20 * MILLI, 25 * MILLI),
+        2 => FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI),
+        3 => FaultScenario::flapping_clique(2, 20 * MILLI, 25 * MILLI, 3 * MILLI, 2 * MILLI),
+        4 => FaultScenario::leave_join_storm(N_PROCS, 15 * MILLI, 20 * MILLI, 2),
+        _ => FaultScenario::midrun_failure(2, 25 * MILLI),
+    }
+}
+
+/// Tentpole acceptance grid: dense == idle-skip, bit for bit, across
+/// random scenarios (including churn, which exercises dirty-list purge
+/// paths), modes, seeds, and both scheduler kinds.
+#[test]
+fn prop_idle_skip_is_bit_identical_to_dense() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = if g.chance(0.5) {
+            SchedKind::Heap
+        } else {
+            SchedKind::Calendar
+        };
+        let mode = if g.chance(0.25) {
+            AsyncMode::Sync
+        } else {
+            AsyncMode::BestEffort
+        };
+        let scenario = random_scenario(g);
+
+        let dense = make_engine(mode, seed, sched, StepPath::Dense, scenario.clone()).run();
+        let skip = make_engine(mode, seed, sched, StepPath::IdleSkip, scenario).run();
+
+        prop_assert(
+            fp(&dense) == fp(&skip),
+            format!("paths diverged under {mode:?}/{sched:?} seed {seed}"),
+        )?;
+        prop_assert(dense.conserves_messages(), "dense conservation broken")?;
+        prop_assert(
+            skip.channel_conservation_violations == 0,
+            "per-channel ledger broken on idle-skip path",
+        )?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() {
+        48
+    } else {
+        12
+    };
+    forall(Config::default().cases(cases).seed(0x51D_E511), case);
+}
+
+/// Idle-skip state survives the v2 checkpoint: dirty lists are derived,
+/// not serialized, so a mid-run snapshot restores and finishes
+/// bit-identically — including when the restore flips the step path,
+/// because the path is observationally invisible.
+#[test]
+fn prop_idle_skip_checkpoint_round_trips() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = if g.chance(0.5) {
+            SchedKind::Heap
+        } else {
+            SchedKind::Calendar
+        };
+        let step = if g.chance(0.5) {
+            StepPath::IdleSkip
+        } else {
+            StepPath::Dense
+        };
+        let other = match step {
+            StepPath::IdleSkip => StepPath::Dense,
+            StepPath::Dense => StepPath::IdleSkip,
+        };
+        let scenario = random_scenario(g);
+        let at = g.u64_in(5 * MILLI, 55 * MILLI);
+
+        let straight = make_engine(AsyncMode::BestEffort, seed, sched, step, scenario.clone())
+            .run();
+        let mut e = make_engine(AsyncMode::BestEffort, seed, sched, step, scenario);
+        let over = e.run_until(at);
+        prop_assert(!over, format!("t={at} landed past the run end"))?;
+        let mut blob = e.checkpoint();
+        let resumed = e.run();
+
+        let restored = match Engine::<GraphColoringShard>::restore(&blob) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("restore failed: {err:?}")),
+        };
+        // Flip the step path inside the blob: the StepPath byte is the
+        // only difference between the two configs, and the simulation
+        // must not be able to tell.
+        let flipped = match flip_step_path(&blob, other) {
+            Some(b) => b,
+            None => return prop_assert(false, "StepPath byte not found in blob"),
+        };
+        blob = flipped;
+        let crossed = match Engine::<GraphColoringShard>::restore(&blob) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("cross-path restore: {err:?}")),
+        };
+
+        let want = fp(&straight);
+        prop_assert(fp(&resumed) == want, "pause+resume diverged")?;
+        prop_assert(fp(&restored) == want, "restore diverged")?;
+        prop_assert(
+            fp(&crossed) == want,
+            format!("cross-path restore ({step:?} -> {other:?}) diverged"),
+        )?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() {
+        24
+    } else {
+        8
+    };
+    forall(Config::default().cases(cases).seed(0x51D_E512), case);
+}
+
+/// Rewrite the config's `StepPath` tag inside a checkpoint blob. The
+/// config is the first section after the 8-byte header and the tag is
+/// its penultimate field, so rather than chase a fixed offset we
+/// re-encode: restore the engine, set the path, and re-checkpoint.
+fn flip_step_path(blob: &[u8], to: StepPath) -> Option<Vec<u8>> {
+    let mut e = Engine::<GraphColoringShard>::restore(blob).ok()?;
+    e.set_step_path(to);
+    Some(e.checkpoint())
+}
+
+/// Snapshot format v2 is current, and blobs stamped with the prior
+/// version are rejected with `BadVersion` — the channel section was
+/// restructured (hot/cold split, interned links), so v1 streams cannot
+/// be decoded.
+#[test]
+fn v2_format_rejects_prior_versions() {
+    assert_eq!(SNAP_VERSION, 2, "version bump regressed");
+    let mut e = make_engine(
+        AsyncMode::BestEffort,
+        7,
+        SchedKind::Heap,
+        StepPath::IdleSkip,
+        FaultScenario::default(),
+    );
+    assert!(!e.run_until(20 * MILLI));
+    let blob = e.checkpoint();
+    assert_eq!(&blob[..4], b"EBCK");
+    assert_eq!(u32::from_le_bytes(blob[4..8].try_into().unwrap()), 2);
+    for old in [0u32, 1] {
+        let mut v = blob.clone();
+        v[4..8].copy_from_slice(&old.to_le_bytes());
+        match Engine::<GraphColoringShard>::restore(&v) {
+            Err(ebcomm::sim::SnapError::BadVersion(got)) => assert_eq!(got, old),
+            other => panic!("v{old} blob not rejected with BadVersion: {other:?}"),
+        }
+    }
+}
