@@ -15,7 +15,7 @@
 //! ```
 
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::qos::{MetricName, QosStorage, SnapshotSchedule};
 use ebcomm::runtime::{ArtifactManifest, RuntimeClient};
 use ebcomm::sim::{heterogeneous_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
 use ebcomm::util::rng::Xoshiro256;
@@ -73,6 +73,8 @@ fn main() -> anyhow::Result<()> {
         cfg.seed = 0xD15E;
         cfg.send_buffer = 64;
         if slice == slices {
+            // This walkthrough reads the exact QoS stream; ignore `EBCOMM_QOS`.
+            cfg.qos_storage = QosStorage::Exact;
             cfg.snapshots = Some(SnapshotSchedule::compressed(
                 200 * MILLI,
                 150 * MILLI,

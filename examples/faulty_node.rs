@@ -10,7 +10,7 @@
 //! ```
 
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::qos::{MetricName, QosStorage, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, profiles_with_faulty, AsyncMode, Engine, ModeTiming, SimConfig,
 };
@@ -45,6 +45,8 @@ fn run(faulty: bool) -> ebcomm::sim::SimResult<GraphColoringShard> {
     );
     cfg.seed = 0xFA017;
     cfg.send_buffer = 64;
+    // This walkthrough reads the exact QoS stream; ignore `EBCOMM_QOS`.
+    cfg.qos_storage = QosStorage::Exact;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         200 * MILLI,
         150 * MILLI,

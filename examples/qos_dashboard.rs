@@ -1,110 +1,195 @@
-//! QoS dashboard: watch the five metrics respond to runtime conditions.
+//! Live-tailing QoS dashboard: watch the sketch-backed telemetry of a
+//! running sweep, DES and hardware side by side.
 //!
-//! Runs a small matrix of conditions (placement × compute intensity) and
-//! prints a live-style table of the paper's five QoS metrics for each —
-//! a compact tour of §III-C/D behaviour.
+//! The DES column tails a sketch-mode best-effort run *while it
+//! executes*: the engine advances in virtual-time slices
+//! ([`Engine::run_until`]) and between slices the dashboard reads the
+//! partial [`SketchQos`] through [`Engine::qos_sketch`] — overall and
+//! per-phase medians straight out of the mergeable quantile sketches,
+//! distinct-channel/sender estimates out of the cardinality sketches,
+//! and the O(1) byte census that makes tailing free at any scale. A
+//! scripted mid-run degrade and a congestion storm give the phase
+//! breakdown something to show.
+//!
+//! The hardware column runs one real-thread cell
+//! ([`run_hardware`], the same bridge the QoS parity tests use) and
+//! folds its windowed metrics into a sketch of its own — the two
+//! columns are the paper's DES-predicts/hardware-confirms pairing.
 //!
 //! ```sh
-//! cargo run --release --example qos_dashboard
+//! cargo run --release --example qos_dashboard            # live (ANSI)
+//! cargo run --release --example qos_dashboard -- --once  # one frame (CI)
 //! ```
 
+use ebcomm::coordinator::{run_hardware, HardwareExperiment};
+use ebcomm::faults::{FaultKind, FaultScenario, LinkFault, NodeFault};
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::{MetricName, SnapshotSchedule};
-use ebcomm::sim::{healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SimConfig};
+use ebcomm::qos::{MetricName, QosStorage, SketchQos, SnapshotSchedule};
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
 use ebcomm::util::rng::Xoshiro256;
-use ebcomm::util::{fmt_ns, MILLI, SECOND};
+use ebcomm::util::{fmt_ns, Nanos, MILLI, SECOND};
 use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
 
-struct Condition {
-    label: &'static str,
-    placement: PlacementKind,
-    backend: CommBackend,
-    work_units: u64,
+const PROCS: usize = 16;
+const RUN_FOR: Nanos = 2 * SECOND;
+/// Virtual time advanced per dashboard frame.
+const SLICE: Nanos = 50 * MILLI;
+
+fn scenario() -> FaultScenario {
+    FaultScenario::default()
+        .with(
+            400 * MILLI,
+            500 * MILLI,
+            FaultKind::DegradeNode {
+                node: 1,
+                fault: NodeFault::lac417(),
+            },
+        )
+        .with(
+            1_200 * MILLI,
+            400 * MILLI,
+            FaultKind::CongestionStorm {
+                fault: LinkFault::storm(),
+            },
+        )
+}
+
+fn des_engine() -> Engine<GraphColoringShard> {
+    let topo = Topology::new(PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(0xDA5B);
+    let shards: Vec<_> = (0..PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 1,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::new(
+        AsyncMode::BestEffort,
+        ModeTiming::graph_coloring(PROCS),
+        RUN_FOR,
+    );
+    cfg.seed = 0xDA5B;
+    cfg.send_buffer = 8;
+    // The whole point of the dashboard: tail the sketches, never
+    // materialize per-channel windows.
+    cfg.qos_storage = QosStorage::Sketch;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        100 * MILLI,
+        100 * MILLI,
+        60 * MILLI,
+        18,
+    ));
+    cfg.scenario = scenario();
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards)
+}
+
+/// One real-thread cell, folded into a sketch so both columns speak the
+/// same summary language.
+fn hardware_sketch() -> SketchQos {
+    let mut exp = HardwareExperiment::smoke();
+    exp.modes = vec![AsyncMode::BestEffort];
+    exp.shard_counts = vec![PROCS];
+    let results = run_hardware(&exp);
+    let qr = results.qos_results(AsyncMode::BestEffort, PROCS);
+    let mut sk = SketchQos::new();
+    for rep in &qr.replicates {
+        for (m, &phase) in rep.qos.snapshots.iter().zip(&rep.qos.phases) {
+            sk.absorb_metrics(m, phase);
+        }
+    }
+    sk
+}
+
+fn render(t: Nanos, des: &SketchQos, hw: &SketchQos, scn: &FaultScenario, live: bool) {
+    if live {
+        // Home the cursor and clear to end of screen: flicker-free redraw.
+        print!("\x1b[H\x1b[J");
+    }
+    println!("qos dashboard — DES (sketch-tailed, live) vs hardware threads");
+    println!(
+        "virtual t {:>8} / {} | windows {:>4} | sketch {:>6} B | channels ~{:.0} | senders ~{:.0}",
+        fmt_ns(t as f64),
+        fmt_ns(RUN_FOR as f64),
+        des.window_count(),
+        des.heap_bytes(),
+        des.distinct_channels(),
+        des.distinct_senders(),
+    );
+    println!();
+    println!(
+        "{:<26} {:>12} {:>12} {:>12}",
+        "metric", "DES median", "DES p95", "hw median"
+    );
+    for m in MetricName::ALL {
+        let fmt = |v: f64| match m {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => fmt_ns(v),
+            _ => format!("{v:.3}"),
+        };
+        println!(
+            "{:<26} {:>12} {:>12} {:>12}",
+            m.label(),
+            fmt(des.median(m)),
+            fmt(des.p95(m)),
+            fmt(hw.median(m)),
+        );
+    }
+    println!();
+    println!("phase breakdown (DES, windowed medians):");
+    for phase in des.phases() {
+        let n = des.window_count_where(|p| p == phase);
+        println!(
+            "  {:<28} windows {:>4}  lat {:>10}  fail {:.3}  clump {:.3}",
+            scn.describe(phase),
+            n,
+            fmt_ns(des.median_where(MetricName::WalltimeLatency, |p| p == phase)),
+            des.median_where(MetricName::DeliveryFailureRate, |p| p == phase),
+            des.median_where(MetricName::DeliveryClumpiness, |p| p == phase),
+        );
+    }
 }
 
 fn main() {
-    let conditions = [
-        Condition {
-            label: "intranode MPI, no work",
-            placement: PlacementKind::SingleNode,
-            backend: CommBackend::Mpi,
-            work_units: 0,
-        },
-        Condition {
-            label: "internode MPI, no work",
-            placement: PlacementKind::OnePerNode,
-            backend: CommBackend::Mpi,
-            work_units: 0,
-        },
-        Condition {
-            label: "internode MPI, 4096 work units",
-            placement: PlacementKind::OnePerNode,
-            backend: CommBackend::Mpi,
-            work_units: 4_096,
-        },
-        Condition {
-            label: "internode MPI, 262144 work units",
-            placement: PlacementKind::OnePerNode,
-            backend: CommBackend::Mpi,
-            work_units: 262_144,
-        },
-        Condition {
-            label: "shared-memory threads, no work",
-            placement: PlacementKind::SingleNode,
-            backend: CommBackend::SharedMemory,
-            work_units: 0,
-        },
-    ];
+    let once = std::env::args().skip(1).any(|a| a == "--once");
+    let scn = scenario();
 
-    println!(
-        "{:<34} {:>11} {:>10} {:>11} {:>9} {:>9}",
-        "condition", "period", "lat(steps)", "lat(wall)", "fail", "clump"
-    );
-    for cond in conditions {
-        let topo = Topology::new(2, cond.placement);
-        let mut rng = Xoshiro256::new(0xDA5B);
-        let shards: Vec<_> = (0..2)
-            .map(|r| {
-                GraphColoringShard::new(
-                    GcConfig {
-                        simels_per_proc: 1,
-                        ..GcConfig::default()
-                    },
-                    &topo,
-                    r,
-                    &mut rng,
-                )
-            })
-            .collect();
-        let mut cfg = SimConfig::new(
-            AsyncMode::BestEffort,
-            ModeTiming::graph_coloring(2),
-            2 * SECOND,
-        );
-        cfg.backend = cond.backend;
-        cfg.send_buffer = 64;
-        cfg.added_work_units = cond.work_units;
-        cfg.snapshots = Some(SnapshotSchedule::compressed(
-            400 * MILLI,
-            400 * MILLI,
-            200 * MILLI,
-            4,
-        ));
-        let profiles = healthy_profiles(&topo);
-        let r = Engine::new(cfg, topo, profiles, shards).run();
-        println!(
-            "{:<34} {:>11} {:>10.2} {:>11} {:>9.3} {:>9.3}",
-            cond.label,
-            fmt_ns(r.qos.median(MetricName::SimstepPeriod)),
-            r.qos.median(MetricName::SimstepLatency),
-            fmt_ns(r.qos.median(MetricName::WalltimeLatency)),
-            r.qos.median(MetricName::DeliveryFailureRate),
-            r.qos.median(MetricName::DeliveryClumpiness),
-        );
+    // Hardware column first: one short real-thread cell, sketched.
+    eprintln!("[dashboard] running hardware cell ({PROCS} shards, best-effort) ...");
+    let hw = hardware_sketch();
+
+    let mut engine = des_engine();
+    let empty = SketchQos::new();
+    let mut t: Nanos = 0;
+    if !once {
+        print!("\x1b[2J"); // full clear once, then home-and-redraw per frame
     }
+    loop {
+        t = (t + SLICE).min(RUN_FOR);
+        let over = engine.run_until(t);
+        let des = engine.qos_sketch().unwrap_or(&empty);
+        if !once {
+            render(t, des, &hw, &scn, true);
+            std::thread::sleep(std::time::Duration::from_millis(40));
+        }
+        if over || t >= RUN_FOR {
+            break;
+        }
+    }
+    let result = engine.finish();
+    let des = result.qos_sketch.expect("dashboard runs in sketch mode");
+    render(RUN_FOR, &des, &hw, &scn, !once);
+    println!();
     println!(
-        "\nExpected shapes (paper SIII-C/D): internode latency ~50x intranode;\n\
-         heavy compute collapses simstep latency toward 1 and clumpiness toward 0;\n\
-         intranode MPI drops ~0.3 of sends while threads drop none."
+        "Expected shapes (paper §III-C/D): the degrade phase lifts walltime\n\
+         latency on the faulted node's clique; the congestion storm lifts\n\
+         failure rate and clumpiness everywhere; quiescent windows recover.\n\
+         The sketch column costs O(1) memory regardless of windows tailed."
     );
 }

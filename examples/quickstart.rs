@@ -15,7 +15,7 @@ use std::time::Duration;
 use ebcomm::conduit::{thread_duct, ChannelConfig, InletLike, OutletLike};
 use ebcomm::exec::threads::{run_threads, ThreadExecConfig};
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::SnapshotSchedule;
+use ebcomm::qos::{QosStorage, SnapshotSchedule};
 use ebcomm::sim::{heterogeneous_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
 use ebcomm::util::rng::Xoshiro256;
 use ebcomm::util::{fmt_ns, MILLI, SECOND};
@@ -58,6 +58,8 @@ fn main() {
             .collect();
         let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(8), SECOND);
         cfg.send_buffer = 64;
+        // This walkthrough reads the exact QoS stream; ignore `EBCOMM_QOS`.
+        cfg.qos_storage = QosStorage::Exact;
         cfg.snapshots = Some(SnapshotSchedule::compressed(
             200 * MILLI,
             200 * MILLI,

@@ -8,8 +8,9 @@ Usage:
                                  [--thread-qos THREAD_QOS.json]
                                  [--churn-csv FAULT_SCENARIOS.csv]
                                  [--weak-scaling WEAK_SCALING.json]
+                                 [--qos-sketch WEAK_SCALING.json]
 
-Seven independent checks:
+Eight independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -59,6 +60,18 @@ Seven independent checks:
    throughput is runner-dependent and the footprint is expected to
    evolve, so only absence or malformed entries fail; the printed
    values document the trajectory in the CI log.
+
+8. **QoS-sketch section** (with ``--qos-sketch``): the
+   ``bench_weak_scaling`` JSON must contain a well-formed
+   ``qos_sketch/p<procs>/...`` section — per-metric sketch
+   medians/p95s, the byte census (``bytes_per_window_per_metric`` pins
+   the O(1) storage claim), and sketch-vs-exact relative errors
+   (``<metric>_relerr``: median in the JSON ``median`` slot, p95 error
+   in ``p95``). Report-only on magnitudes: the error *bound* is
+   property-tested in Rust (``tests/prop_qos_sketch.rs``); gating the
+   measured errors here would double-gate one contract and redden CI on
+   distribution shape, not on a sketch bug. Only absence, non-finite, or
+   negative entries fail.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -242,6 +255,51 @@ def memory_diet_check(path):
     return failures
 
 
+def qos_sketch_check(path):
+    """Shape check of the report-only 'qos sketch' section: the
+    bench_weak_scaling JSON's ``qos_sketch/p<procs>/...`` entries. The
+    relative-error magnitudes never gate (the bound is property-tested
+    in Rust); the check fails only on a missing rung, malformed
+    entries, or negative/non-finite error values."""
+    failures = []
+    entries = load(path)
+    rows = sorted(
+        (e for name, e in entries.items() if name.startswith("qos_sketch/")),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        return [f"no qos_sketch entries in {path} — sketch rung did not run?"]
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and abs(m) != float("inf")
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        if e["name"].endswith("_relerr"):
+            p95 = e.get("p95")
+            well_formed = well_formed and isinstance(p95, (int, float)) and p95 == p95 and p95 >= 0
+            print(
+                f"  [sketch]   {e['name']}: median-err {m} p95-err {p95} (report-only)"
+            )
+        else:
+            print(f"  [sketch]   {e['name']}: {m} {unit} (report-only)")
+        if not well_formed:
+            failures.append(f"malformed qos-sketch entry {e['name']!r}")
+    for needle, what in [
+        ("/sketch_bytes", "sketch_bytes"),
+        ("/bytes_per_window_per_metric", "bytes_per_window_per_metric"),
+        ("/windows", "windows"),
+    ]:
+        if not any(needle in e["name"] for e in rows):
+            failures.append(f"qos-sketch section lacks a {what} entry")
+    return failures
+
+
 def churn_check(path):
     """Presence check of churn-phase attribution rows in the scenario CSV."""
     import csv
@@ -344,6 +402,12 @@ def main():
         "(report-only: values never gate)",
     )
     ap.add_argument(
+        "--qos-sketch",
+        help="bench_weak_scaling JSON whose 'qos_sketch/...' section "
+        "(sketch medians, byte census, sketch-vs-exact relative errors) "
+        "must be present and well-formed (report-only: values never gate)",
+    )
+    ap.add_argument(
         "--weak-scaling",
         help="bench_weak_scaling JSON whose 'memory_diet/...' section "
         "(bytes/proc, events/sec/proc at the 10^5-proc rung) must be "
@@ -402,6 +466,14 @@ def main():
             failed = True
             for f in diet_failures:
                 print(f"bench-diff: memory-diet section check failed: {f}", file=sys.stderr)
+
+    if args.qos_sketch:
+        print("== qos sketch section (report-only) ==")
+        sketch_failures = qos_sketch_check(args.qos_sketch)
+        if sketch_failures:
+            failed = True
+            for f in sketch_failures:
+                print(f"bench-diff: qos-sketch section check failed: {f}", file=sys.stderr)
 
     if args.baseline:
         print("== baseline regression diff ==")

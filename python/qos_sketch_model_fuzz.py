@@ -1,0 +1,321 @@
+#!/usr/bin/env python3
+"""Model fuzz for rust/src/qos/sketch.rs (PR 8).
+
+Validates, ahead of the Rust port, the two streaming sketches behind
+`QosStorage::Sketch`:
+
+* `QuantileSketch` — a DDSketch-style log-linear bucketed histogram whose
+  bucket index is computed with *integer math only* over the IEEE-754 bit
+  pattern of the value (HdrHistogram-style exponent + top-mantissa-bits
+  sub-bucket).  Claims checked:
+    - nearest-rank quantile estimates stay within the documented relative
+      error bound (1/64) of the exact nearest-rank quantile, for in-range
+      positive values, across adversarial mixtures (zeros, huge dynamic
+      range, heavy tails);
+    - merge is associative, commutative, and idempotent on empties, and
+      the merged state is bit-identical (bucket-count-identical) to the
+      straight-through insert order — the property that makes sketch
+      state checkpointable and shard-mergeable;
+    - the bucket index is monotone non-decreasing in the value.
+* `CardinalitySketch` — an HLL with 2^10 registers fed by a fixed-seed
+  splitmix64 finalizer.  Claims checked: relative error envelope over
+  cardinalities 1..2*10^5 stays within 10% (documented bound; the
+  asymptotic sigma for m=1024 is ~3.25%), and merges are exact unions.
+
+Mirrors the Rust constants; any change here must be mirrored there.
+"""
+
+import math
+import random
+import struct
+import sys
+
+# ---- QuantileSketch constants (mirror sketch.rs) -----------------------
+
+SUB_BITS = 5
+SUBS = 1 << SUB_BITS  # 32 sub-buckets per octave
+MIN_EXP = 983  # biased exponent of 2^-40: values below collapse to zero
+N_OCTAVES = 88  # covers [2^-40, 2^48) before saturating the top bucket
+N_BUCKETS = N_OCTAVES * SUBS
+REL_BOUND = 1.0 / 64.0  # half of one sub-bucket width, midpoint repr
+
+MASK64 = (1 << 64) - 1
+
+
+def f64_bits(x: float) -> int:
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def f64_from_bits(b: int) -> float:
+    return struct.unpack("<d", struct.pack("<Q", b))[0]
+
+
+def bucket_index(x: float):
+    """None => not counted in a log bucket (zero/negative/tiny => 'zero',
+    NaN => 'skip'). Otherwise an integer bucket in [0, N_BUCKETS)."""
+    if math.isnan(x):
+        return "skip"
+    bits = f64_bits(x)
+    if bits >> 63 or x == 0.0:
+        return "zero"
+    exp = (bits >> 52) & 0x7FF
+    if exp < MIN_EXP:
+        return "zero"
+    if exp == 0x7FF:  # +inf saturates
+        return N_BUCKETS - 1
+    sub = (bits >> (52 - SUB_BITS)) & (SUBS - 1)
+    idx = (exp - MIN_EXP) * SUBS + sub
+    return min(idx, N_BUCKETS - 1)
+
+
+def representative(idx: int) -> float:
+    """Midpoint of bucket idx, constructed purely from bits."""
+    exp = MIN_EXP + idx // SUBS
+    sub = idx % SUBS
+    bits = (exp << 52) | (sub << (52 - SUB_BITS)) | (1 << (52 - SUB_BITS - 1))
+    return f64_from_bits(bits)
+
+
+class QuantileSketch:
+    def __init__(self):
+        self.counts = [0] * N_BUCKETS
+        self.zero = 0
+        self.skipped = 0
+        self.total = 0
+
+    def insert(self, x: float):
+        idx = bucket_index(x)
+        if idx == "skip":
+            self.skipped += 1
+            return
+        self.total += 1
+        if idx == "zero":
+            self.zero += 1
+        else:
+            self.counts[idx] += 1
+
+    def merge(self, other: "QuantileSketch"):
+        self.zero += other.zero
+        self.skipped += other.skipped
+        self.total += other.total
+        for i in range(N_BUCKETS):
+            self.counts[i] += other.counts[i]
+
+    def quantile(self, q: float) -> float:
+        """Nearest-rank: value of the ceil(q*n)-th smallest observation."""
+        if self.total == 0:
+            return 0.0
+        rank = max(1, math.ceil(q * self.total))
+        rank = min(rank, self.total)
+        if rank <= self.zero:
+            return 0.0
+        seen = self.zero
+        for i in range(N_BUCKETS):
+            seen += self.counts[i]
+            if seen >= rank:
+                return representative(i)
+        return representative(N_BUCKETS - 1)
+
+    def state(self):
+        return (self.zero, self.skipped, self.total, tuple(self.counts))
+
+
+def exact_nearest_rank(xs, q):
+    v = sorted(x for x in xs if not math.isnan(x))
+    if not v:
+        return 0.0
+    rank = max(1, math.ceil(q * len(v)))
+    return v[min(rank, len(v)) - 1]
+
+
+# ---- CardinalitySketch (HLL) constants ---------------------------------
+
+HLL_P = 10
+HLL_M = 1 << HLL_P
+HLL_SEED = 0xEBC0444451E7C4D1
+
+
+def splitmix64(x: int) -> int:
+    z = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+class CardinalitySketch:
+    def __init__(self):
+        self.regs = [0] * HLL_M
+
+    def insert(self, item: int):
+        h = splitmix64((item ^ HLL_SEED) & MASK64)
+        idx = h >> (64 - HLL_P)
+        w = (h << HLL_P) & MASK64
+        if w == 0:
+            rank = 64 - HLL_P + 1
+        else:
+            # leading zeros of the 64-bit value w, + 1
+            rank = 64 - w.bit_length() + 1
+        if rank > self.regs[idx]:
+            self.regs[idx] = rank
+
+    def merge(self, other):
+        for i in range(HLL_M):
+            if other.regs[i] > self.regs[i]:
+                self.regs[i] = other.regs[i]
+
+    def estimate(self) -> float:
+        alpha = 0.7213 / (1.0 + 1.079 / HLL_M)
+        s = sum(2.0 ** -r for r in self.regs)
+        e = alpha * HLL_M * HLL_M / s
+        zeros = self.regs.count(0)
+        if e <= 2.5 * HLL_M and zeros > 0:
+            return HLL_M * math.log(HLL_M / zeros)
+        return e
+
+
+# ---- fuzz campaigns ----------------------------------------------------
+
+
+def stream(rng, n):
+    """Adversarial mixture resembling QoS metric values: zeros, rates in
+    [0,1], ns-scale latencies, heavy tails, occasional NaN."""
+    out = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.15:
+            out.append(0.0)
+        elif r < 0.30:
+            out.append(rng.random())  # rates/clumpiness
+        elif r < 0.55:
+            out.append(rng.expovariate(1.0 / 2.0e6))  # ~2 ms latencies
+        elif r < 0.80:
+            out.append(rng.lognormvariate(14.0, 2.5))  # heavy-tailed ns
+        elif r < 0.95:
+            out.append(rng.uniform(1.0, 1e12))
+        elif r < 0.97:
+            out.append(float("nan"))
+        else:
+            out.append(rng.uniform(-5.0, 5.0))  # some negatives -> zero
+    return out
+
+
+def fuzz_quantile(trials=300, seed=0x5EED):
+    rng = random.Random(seed)
+    worst = 0.0
+    for t in range(trials):
+        n = rng.randint(1, 4000)
+        xs = stream(rng, n)
+        sk = QuantileSketch()
+        for x in xs:
+            sk.insert(x)
+        finite = [x for x in xs if not math.isnan(x)]
+        assert sk.total == len(finite), "total mismatch"
+        for q in (0.0, 0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0):
+            est = sk.quantile(q)
+            # Exact comparator maps the same out-of-range values the
+            # sketch collapses (negatives/tiny -> 0) so the bound is
+            # about bucketing error, not range policy.
+            mapped = [0.0 if (x <= 0 or x < 2.0 ** -40) else min(x, 2.0 ** 48) for x in finite]
+            exact = exact_nearest_rank(mapped, q)
+            if exact == 0.0:
+                assert est == 0.0, f"zero quantile missed: est={est}"
+                continue
+            rel = abs(est - exact) / exact
+            worst = max(worst, rel)
+            assert rel <= REL_BOUND + 1e-12, (
+                f"trial {t} q={q}: rel={rel:.5f} > {REL_BOUND:.5f} "
+                f"(est={est}, exact={exact})"
+            )
+    print(f"quantile rel-error OK over {trials} trials; worst={worst:.6f} "
+          f"(bound {REL_BOUND:.6f})")
+
+
+def fuzz_merge(trials=120, seed=0xA11A):
+    rng = random.Random(seed)
+    for t in range(trials):
+        xs = stream(rng, rng.randint(0, 2000))
+        k = rng.randint(1, 6)
+        parts = [[] for _ in range(k)]
+        for x in xs:
+            parts[rng.randrange(k)].append(x)
+        whole = QuantileSketch()
+        for x in xs:
+            whole.insert(x)
+        # merge in two different random orders -> identical state
+        for _ in range(2):
+            order = list(range(k))
+            rng.shuffle(order)
+            acc = QuantileSketch()
+            for i in order:
+                p = QuantileSketch()
+                for x in parts[i]:
+                    p.insert(x)
+                acc.merge(p)
+            assert acc.state() == whole.state(), f"merge not order-invariant, trial {t}"
+        # idempotent empty
+        before = whole.state()
+        whole.merge(QuantileSketch())
+        assert whole.state() == before, "empty merge mutated state"
+    print(f"merge algebra OK over {trials} trials")
+
+
+def fuzz_monotone(trials=20000, seed=0xB0B):
+    rng = random.Random(seed)
+    prev_order = []
+    for _ in range(trials):
+        a = rng.choice([rng.random(), rng.expovariate(1e-6), rng.uniform(0, 1e13)])
+        b = a * (1.0 + rng.random())
+        ia, ib = bucket_index(a), bucket_index(b)
+        if isinstance(ia, int) and isinstance(ib, int):
+            assert ia <= ib, f"index not monotone: {a} -> {ia}, {b} -> {ib}"
+    del prev_order
+    print(f"bucket-index monotonicity OK over {trials} pairs")
+
+
+def fuzz_hll(seed=0xCAFE):
+    rng = random.Random(seed)
+    worst = 0.0
+    for n in [1, 2, 5, 17, 100, 500, 1000, 5000, 20000, 100000, 200000]:
+        for rep in range(3):
+            sk = CardinalitySketch()
+            items = set()
+            while len(items) < n:
+                items.add(rng.getrandbits(64))
+            for it in items:
+                sk.insert(it)
+                if rep == 0:
+                    sk.insert(it)  # duplicates must not move the estimate
+            est = sk.estimate()
+            rel = abs(est - n) / n
+            # Documented bound: 10% relative, with a few-counts absolute
+            # floor at tiny cardinalities (register collisions under
+            # linear counting cost ~1 count each).
+            if abs(est - n) > 4.0:
+                worst = max(worst, rel)
+                assert rel <= 0.10, f"HLL error {rel:.4f} at n={n}"
+    # merge == union
+    a, b = CardinalitySketch(), CardinalitySketch()
+    u = CardinalitySketch()
+    sa = {rng.getrandbits(64) for _ in range(3000)}
+    sb = {rng.getrandbits(64) for _ in range(4000)} | set(list(sa)[:1000])
+    for it in sa:
+        a.insert(it)
+        u.insert(it)
+    for it in sb:
+        b.insert(it)
+        u.insert(it)
+    a.merge(b)
+    assert a.regs == u.regs, "HLL merge != union"
+    print(f"HLL OK; worst rel error {worst:.4f} (bound 0.10)")
+
+
+def main():
+    fuzz_monotone()
+    fuzz_quantile()
+    fuzz_merge()
+    fuzz_hll()
+    print("all qos-sketch model fuzzes passed")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,6 +81,8 @@ fn main() {
         );
         cfg.send_buffer = 64;
         cfg.coalesce_override = Some(if coalesce { 150 * ebcomm::util::MICRO } else { 0 });
+        // Reports exact QoS medians; pin the storage mode against the env.
+        cfg.qos_storage = ebcomm::qos::QosStorage::Exact;
         cfg.snapshots = Some(ebcomm::qos::SnapshotSchedule::compressed(
             500 * ebcomm::util::MILLI,
             500 * ebcomm::util::MILLI,

@@ -21,15 +21,23 @@
 //! short so the rung is seconds-bounded; `EBCOMM_WEAK_SMOKE=1` runs
 //! *only* this rung (the CI bench-gate lane).
 //!
+//! A **sketch-telemetry rung at 10⁴ processes** (10⁵ under
+//! `EBCOMM_FULL=1`) runs the same engine under `QosStorage::Sketch`:
+//! per-metric medians/p95s come out of the mergeable quantile sketches,
+//! the byte census pins the O(1)-per-window-per-metric storage claim,
+//! and (below the largest scale) an exact-storage twin yields relative
+//! errors for `bench_diff.py --qos-sketch`.
+//!
 //! Pass `--json` (or set `EBCOMM_BENCH_JSON=1`) to write
 //! `BENCH_weak_scaling.json` at the repo root — consumed by
-//! `python/bench_diff.py`'s report-only "memory diet" section.
+//! `python/bench_diff.py`'s report-only "memory diet" and "qos sketch"
+//! sections.
 
 use ebcomm::coordinator::experiment::QosExperiment;
 use ebcomm::coordinator::report;
 use ebcomm::coordinator::run_qos;
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::MetricName;
+use ebcomm::qos::{MetricName, QosStorage, SnapshotSchedule};
 use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig, StepPath};
 use ebcomm::stats::{median, quantile_regression};
 use ebcomm::util::benchjson::BenchJson;
@@ -139,6 +147,178 @@ fn memory_diet_rung(procs: usize, run_for: Nanos, json: &mut BenchJson) {
     );
 }
 
+/// Exact nearest-rank quantile — the semantics the sketch implements —
+/// over the raw per-window metric values of an exact-storage run.
+fn nearest_rank(mut vals: Vec<f64>, q: f64) -> f64 {
+    vals.retain(|v| !v.is_nan());
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    vals.sort_by(f64::total_cmp);
+    let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+    vals[rank - 1]
+}
+
+/// One sketch-telemetry rung: a `procs`-process best-effort run with a
+/// real snapshot schedule under `QosStorage::Sketch`, publishing
+/// per-metric sketch medians/p95s and the sketch byte census — the O(1)
+/// claim is `bytes_per_window_per_metric`, which shrinks as windows
+/// accumulate because the sketch never grows past its fixed bucket
+/// budget. With `exact_too`, an exact-storage twin (same seed, same
+/// schedule — the simulation is bit-identical across storage modes) is
+/// run and per-metric relative errors of the sketch median/p95 against
+/// the exact nearest-rank values are published for `bench_diff.py
+/// --qos-sketch`. The twin is skipped at the largest scale, where
+/// materializing every per-channel window is exactly what sketch mode
+/// exists to avoid.
+fn qos_sketch_rung(procs: usize, run_for: Nanos, exact_too: bool, json: &mut BenchJson) {
+    eprintln!("[qos-sketch] {procs} procs, {run_for} ns virtual, exact twin: {exact_too} ...");
+    let build = |storage: QosStorage| {
+        let topo = Topology::new(procs, PlacementKind::OnePerNode);
+        let mut rng = Xoshiro256::new(0x5CE7);
+        let shards: Vec<_> = (0..procs)
+            .map(|r| {
+                GraphColoringShard::new(
+                    GcConfig {
+                        simels_per_proc: 1,
+                        ..GcConfig::default()
+                    },
+                    &topo,
+                    r,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let mut cfg = SimConfig::new(
+            AsyncMode::BestEffort,
+            ModeTiming::graph_coloring(procs),
+            run_for,
+        );
+        cfg.seed = 0x5CE7;
+        cfg.send_buffer = 4;
+        cfg.step = StepPath::IdleSkip;
+        cfg.qos_storage = storage;
+        // Four windows spread across the run; every channel contributes
+        // one observation per window.
+        cfg.snapshots = Some(SnapshotSchedule::compressed(
+            run_for / 6,
+            run_for / 5,
+            run_for / 8,
+            4,
+        ));
+        let profiles = healthy_profiles(&topo);
+        Engine::new(cfg, topo, profiles, shards)
+    };
+
+    let mut engine = build(QosStorage::Sketch);
+    let n_channels = engine.memory_footprint().n_channels;
+    let t_run = std::time::Instant::now();
+    engine.run_until(Nanos::MAX);
+    let run_s = t_run.elapsed().as_secs_f64();
+    let fp = engine.memory_footprint();
+    let result = engine.finish();
+    let sketch = result
+        .qos_sketch
+        .as_ref()
+        .expect("sketch storage produced no sketch");
+    assert!(
+        result.windows.is_empty(),
+        "sketch mode retained raw windows"
+    );
+    let windows = sketch.window_count();
+    assert!(windows > 0, "sketch rung captured no windows");
+    let sketch_bytes = fp.qos_sketch_bytes as f64;
+    let per_window_per_metric = sketch_bytes / (windows as f64 * MetricName::ALL.len() as f64);
+
+    println!("qos sketch @ {procs} procs ({run_for} ns virtual):");
+    println!("  run                      {run_s:>10.2} s wall");
+    println!(
+        "  windows absorbed         {windows:>10}  ({n_channels} channels, raw windows kept: 0)"
+    );
+    println!(
+        "  sketch census            {sketch_bytes:>10.0} B total, {per_window_per_metric:.1} B/window/metric"
+    );
+    println!(
+        "  distinct channels (HLL)  {:>10.0}  (exact {n_channels})",
+        sketch.distinct_channels()
+    );
+
+    let tag = format!("qos_sketch/p{procs}");
+    json.push(&format!("{tag}/windows"), "n", windows as f64, windows as f64, windows as f64);
+    json.push(
+        &format!("{tag}/sketch_bytes"),
+        "B",
+        sketch_bytes,
+        sketch_bytes,
+        sketch_bytes,
+    );
+    json.push(
+        &format!("{tag}/bytes_per_window_per_metric"),
+        "B",
+        per_window_per_metric,
+        per_window_per_metric,
+        per_window_per_metric,
+    );
+    let ch_relerr = (sketch.distinct_channels() - n_channels as f64).abs() / n_channels as f64;
+    json.push(
+        &format!("{tag}/distinct_channels_est"),
+        "n",
+        sketch.distinct_channels(),
+        sketch.distinct_channels(),
+        sketch.distinct_channels(),
+    );
+    json.push(
+        &format!("{tag}/distinct_channels_relerr"),
+        "rel",
+        ch_relerr,
+        ch_relerr,
+        ch_relerr,
+    );
+    for m in MetricName::ALL {
+        json.push(
+            &format!("{tag}/{}", m.key()),
+            m.unit(),
+            sketch.approx_mean(m),
+            sketch.median(m),
+            sketch.p95(m),
+        );
+    }
+
+    if !exact_too {
+        return;
+    }
+    let exact = build(QosStorage::Exact).run();
+    assert_eq!(
+        exact.windows.len() as u64,
+        windows,
+        "exact twin diverged from the sketch run"
+    );
+    println!("  sketch vs exact (nearest-rank) relative error:");
+    for m in MetricName::ALL {
+        let vals = exact.qos.values(m);
+        let rel = |est: f64, ex: f64| {
+            if ex.abs() < 1e-12 {
+                (est - ex).abs()
+            } else {
+                (est - ex).abs() / ex.abs()
+            }
+        };
+        let med_err = rel(sketch.median(m), nearest_rank(vals.clone(), 0.5));
+        let p95_err = rel(sketch.p95(m), nearest_rank(vals, 0.95));
+        println!(
+            "    {:<26} median {med_err:.4e}  p95 {p95_err:.4e}",
+            m.label()
+        );
+        json.push(
+            &format!("{tag}/{}_relerr", m.key()),
+            "rel",
+            med_err,
+            med_err,
+            p95_err,
+        );
+    }
+}
+
 fn main() {
     let t0 = std::time::Instant::now();
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -158,6 +338,19 @@ fn main() {
         memory_diet_rung(100_000, 250 * micro, &mut json);
         if full {
             memory_diet_rung(1_000_000, 100 * micro, &mut json);
+        }
+    }
+
+    // ---- sketch-telemetry rung: 10^4 procs (10^5 under EBCOMM_FULL) --
+    // The exact twin materializes every per-channel window for the
+    // relative-error cross-check; it is skipped at 10^5, where that
+    // materialization is the thing sketch mode exists to avoid.
+    if smoke {
+        qos_sketch_rung(1_024, 300 * micro, true, &mut json);
+    } else {
+        qos_sketch_rung(10_000, 300 * micro, true, &mut json);
+        if full {
+            qos_sketch_rung(100_000, 200 * micro, false, &mut json);
         }
     }
     if smoke {

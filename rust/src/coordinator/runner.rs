@@ -254,6 +254,10 @@ fn run_qos_replicate(exp: &QosExperiment, rep: usize) -> QosReplicate {
     cfg.seed = exp.seed.wrapping_add((rep as u64) << 24);
     cfg.send_buffer = exp.send_buffer;
     cfg.added_work_units = exp.added_work_units;
+    // These sweeps aggregate through the exact `ReplicateQos` pipeline;
+    // pin the storage mode so `EBCOMM_QOS=sketch` cannot empty it. The
+    // sketch pipeline is engine-level (`SimResult::qos_sketch`).
+    cfg.qos_storage = crate::qos::QosStorage::Exact;
     cfg.snapshots = Some(exp.schedule);
     cfg.scenario = exp.scenario.clone();
 
@@ -414,6 +418,10 @@ fn run_scenario_cell(
         .wrapping_add((mode.index() as u64) << 16)
         .wrapping_add(n_procs as u64);
     cfg.send_buffer = exp.send_buffer;
+    // These sweeps aggregate through the exact `ReplicateQos` pipeline;
+    // pin the storage mode so `EBCOMM_QOS=sketch` cannot empty it. The
+    // sketch pipeline is engine-level (`SimResult::qos_sketch`).
+    cfg.qos_storage = crate::qos::QosStorage::Exact;
     cfg.snapshots = Some(exp.schedule);
     cfg.scenario = kind.build(exp.run_for, topo.n_nodes(), topo.n_procs());
 

@@ -124,6 +124,9 @@ fn chaos_engine(
     cfg.seed = seed;
     cfg.send_buffer = 4;
     cfg.scenario = scenario;
+    // Chaos invariants walk the exact per-window stream; pin the storage
+    // mode so `EBCOMM_QOS=sketch` cannot empty it.
+    cfg.qos_storage = crate::qos::QosStorage::Exact;
     cfg.snapshots = Some(crate::qos::SnapshotSchedule::compressed(
         run_for / 6,
         run_for / 4,

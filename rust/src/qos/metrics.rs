@@ -176,6 +176,39 @@ impl MetricName {
             MetricName::DeliveryClumpiness => "Delivery Clumpiness",
         }
     }
+
+    /// Snake-case identifier for machine-readable outputs (bench JSON
+    /// entry names, dashboard keys).
+    pub fn key(&self) -> &'static str {
+        match self {
+            MetricName::SimstepPeriod => "simstep_period_ns",
+            MetricName::SimstepLatency => "simstep_latency",
+            MetricName::WalltimeLatency => "walltime_latency_ns",
+            MetricName::DeliveryFailureRate => "delivery_failure_rate",
+            MetricName::DeliveryClumpiness => "delivery_clumpiness",
+        }
+    }
+
+    /// Unit string for machine-readable outputs (`BenchJson` entries).
+    pub fn unit(&self) -> &'static str {
+        match self {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => "ns",
+            MetricName::SimstepLatency => "steps",
+            MetricName::DeliveryFailureRate | MetricName::DeliveryClumpiness => "rate",
+        }
+    }
+
+    /// Dense index in [`Self::ALL`] order — the layout of the per-metric
+    /// sketch arrays in [`crate::qos::SketchQos`].
+    pub fn index(&self) -> usize {
+        match self {
+            MetricName::SimstepPeriod => 0,
+            MetricName::SimstepLatency => 1,
+            MetricName::WalltimeLatency => 2,
+            MetricName::DeliveryFailureRate => 3,
+            MetricName::DeliveryClumpiness => 4,
+        }
+    }
 }
 
 /// Steadiness component statistic (§II-D.5).

@@ -1,9 +1,13 @@
 //! Quality-of-service metrics and snapshot machinery (paper §II-D/E).
 
 pub mod metrics;
+pub mod sketch;
 pub mod snapshot;
 
 pub use metrics::{MetricName, QosMetrics, QosObservation, TouchCounter};
+pub use sketch::{
+    CardinalitySketch, QosStorage, QuantileSketch, SketchQos, QUANTILE_REL_ERROR_BOUND,
+};
 pub use snapshot::{ReplicateQos, SnapshotSchedule, SnapshotWindow};
 
 /// Re-exported for convenience: every QoS window carries the scenario

@@ -1,0 +1,798 @@
+//! Mergeable streaming sketches for QoS telemetry at scale.
+//!
+//! Exact QoS storage keeps one [`SnapshotWindow`] per channel per window
+//! — O(channels × windows) memory, the first thing to blow up on the
+//! 10⁴–10⁵-proc runs the memory-diet engine otherwise fits. Sketch
+//! storage replaces that with O(1) state per window per metric:
+//!
+//! * [`QuantileSketch`] — a DDSketch-style log-linear bucketed histogram.
+//!   The bucket index is computed with **integer math only** over the
+//!   IEEE-754 bit pattern of the value (exponent field + top mantissa
+//!   bits), so indices — and therefore sketch state — are bit-identical
+//!   across platforms and across merge orders. Nearest-rank quantile
+//!   estimates carry a relative error of at most
+//!   [`QUANTILE_REL_ERROR_BOUND`] (1/64 ≈ 1.6%) against the exact
+//!   nearest-rank quantile for in-range positive values.
+//! * [`CardinalitySketch`] — a HyperLogLog over a fixed-seed splitmix64
+//!   finalizer, for distinct-channel / distinct-sender counts. Register
+//!   state is integer and merge is element-wise max, so merges are exact
+//!   unions; the estimate is accurate to ~10% (±a few counts at tiny
+//!   cardinalities).
+//!
+//! [`SketchQos`] bundles one quantile sketch per QoS metric (overall and
+//! per observed scenario phase) plus the two cardinality counters, and is
+//! what the engine feeds from `snapshot_close` under
+//! [`QosStorage::Sketch`] — without ever materializing per-channel
+//! vectors. All state is integral, so `Eq` is bit-identity and the
+//! sketches ride the `EBCK` checkpoint verbatim.
+//!
+//! The algorithms are pre-validated by `python/qos_sketch_model_fuzz.py`;
+//! the constants here mirror that model exactly.
+
+use super::metrics::{MetricName, QosMetrics};
+use super::snapshot::SnapshotWindow;
+use crate::faults::ScenarioPhase;
+
+/// How a replicate stores its QoS observations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QosStorage {
+    /// One [`SnapshotWindow`] per channel per window — exact medians and
+    /// full raw-window access, O(channels × windows) memory. The default
+    /// at small scale; cross-checks the sketches in tests.
+    #[default]
+    Exact,
+    /// Fold every closed window into [`SketchQos`] and drop it — O(1)
+    /// memory per window per metric, quantiles within
+    /// [`QUANTILE_REL_ERROR_BOUND`].
+    Sketch,
+}
+
+impl QosStorage {
+    /// Resolve from `EBCOMM_QOS` (`"exact"` / `"sketch"`), defaulting to
+    /// exact. Panics on anything else — a misspelled selector silently
+    /// falling back would invalidate a storage-parity experiment.
+    pub fn from_env() -> Self {
+        match std::env::var("EBCOMM_QOS") {
+            Ok(v) if v.eq_ignore_ascii_case("exact") => QosStorage::Exact,
+            Ok(v) if v.eq_ignore_ascii_case("sketch") => QosStorage::Sketch,
+            Ok(v) => panic!("EBCOMM_QOS must be \"exact\" or \"sketch\", got {v:?}"),
+            Err(_) => QosStorage::Exact,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            QosStorage::Exact => "exact",
+            QosStorage::Sketch => "sketch",
+        }
+    }
+}
+
+// ---- quantile sketch constants (mirror qos_sketch_model_fuzz.py) ----
+
+/// Mantissa bits used for the sub-bucket: 2^5 = 32 sub-buckets per
+/// octave.
+const SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << SUB_BITS;
+/// Biased exponent of 2^-40 — positive values below collapse into the
+/// zero bucket (QoS metrics are rates in [0, 1] and ns-scale times;
+/// anything under 2^-40 is indistinguishable from zero for them).
+const MIN_EXP: usize = 983;
+/// Octaves covered before the top bucket saturates: [2^-40, 2^48) spans
+/// sub-ns rates through ~78 virtual hours.
+const N_OCTAVES: usize = 88;
+/// Fixed bucket count — the whole sketch is `N_BUCKETS` u64 counters.
+pub const N_BUCKETS: usize = N_OCTAVES * SUBS;
+
+/// Documented relative-error bound of [`QuantileSketch::quantile`]
+/// against the exact nearest-rank quantile, for in-range positives: half
+/// of one sub-bucket width with the midpoint representative.
+pub const QUANTILE_REL_ERROR_BOUND: f64 = 1.0 / 64.0;
+
+/// Where a value lands: skipped (NaN), the zero bucket, or a log bucket.
+enum Slot {
+    Skip,
+    Zero,
+    Bucket(usize),
+}
+
+/// Integer-only bucketing over the IEEE-754 bit pattern: biased exponent
+/// selects the octave, the top [`SUB_BITS`] mantissa bits the sub-bucket.
+/// Monotone non-decreasing in the value (positive f64 ordering is the
+/// unsigned ordering of the bit patterns).
+fn slot_of(x: f64) -> Slot {
+    if x.is_nan() {
+        return Slot::Skip;
+    }
+    let bits = x.to_bits();
+    if bits >> 63 != 0 {
+        // Negative (metrics are non-negative; a negative reading is a
+        // degenerate zero) and -0.0.
+        return Slot::Zero;
+    }
+    let exp = ((bits >> 52) & 0x7ff) as usize;
+    if exp < MIN_EXP {
+        // +0.0, subnormals, and positives under 2^-40.
+        return Slot::Zero;
+    }
+    if exp == 0x7ff {
+        // +inf saturates into the top bucket.
+        return Slot::Bucket(N_BUCKETS - 1);
+    }
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    Slot::Bucket(((exp - MIN_EXP) * SUBS + sub).min(N_BUCKETS - 1))
+}
+
+/// Midpoint of bucket `idx`, constructed purely from bits: lower edge
+/// `2^e · (1 + sub/32)` plus half a sub-bucket (`1` in the next mantissa
+/// bit below the sub-bucket field).
+fn representative(idx: usize) -> f64 {
+    let exp = (MIN_EXP + idx / SUBS) as u64;
+    let sub = (idx % SUBS) as u64;
+    f64::from_bits((exp << 52) | (sub << (52 - SUB_BITS)) | (1 << (52 - SUB_BITS - 1)))
+}
+
+/// Fixed-size relative-error quantile sketch (DDSketch-style log-linear
+/// histogram). All state is integral: insert order, merge order, and
+/// platform cannot change a single bit of it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantileSketch {
+    /// Log-bucket counters, ascending value order.
+    pub(crate) counts: Vec<u64>,
+    /// Observations that collapsed to zero (true zeros, negatives,
+    /// positives under 2^-40).
+    pub(crate) zero: u64,
+    /// Non-finite (NaN) observations skipped — mirrors the exact path's
+    /// NaN-filtering quantiles.
+    pub(crate) skipped: u64,
+    /// Finite observations counted (zero bucket included).
+    pub(crate) total: u64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            zero: 0,
+            skipped: 0,
+            total: 0,
+        }
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        match slot_of(x) {
+            Slot::Skip => self.skipped += 1,
+            Slot::Zero => {
+                self.zero += 1;
+                self.total += 1;
+            }
+            Slot::Bucket(i) => {
+                self.counts[i] += 1;
+                self.total += 1;
+            }
+        }
+    }
+
+    /// Fold `other` into `self`. Associative, commutative, idempotent on
+    /// empties; the merged state is bit-identical to the straight-through
+    /// insert order.
+    pub fn merge(&mut self, other: &Self) {
+        self.zero += other.zero;
+        self.skipped += other.skipped;
+        self.total += other.total;
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Finite observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Nearest-rank quantile: the representative of the bucket holding
+    /// the `ceil(q·n)`-th smallest observation. 0 for an empty sketch.
+    /// Within [`QUANTILE_REL_ERROR_BOUND`] of the exact nearest-rank
+    /// quantile whenever that quantile is a positive in-range value.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        if rank <= self.zero {
+            return 0.0;
+        }
+        let mut seen = self.zero;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(i);
+            }
+        }
+        representative(N_BUCKETS - 1)
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// Mean over bucket representatives (ascending-index summation, so
+    /// deterministic). Carries the same per-value relative error bound
+    /// as the quantiles.
+    pub fn approx_mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                sum += representative(i) * c as f64;
+            }
+        }
+        sum / self.total as f64
+    }
+
+    /// Heap owned by the bucket array.
+    pub fn heap_bytes(&self) -> usize {
+        self.counts.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// Rebuild from persisted parts: sparse `(bucket, count)` pairs in
+    /// strictly ascending bucket order. Validates structure and the
+    /// zero-bucket/total ledger — the checkpoint loader's constructor.
+    pub(crate) fn from_parts(
+        zero: u64,
+        skipped: u64,
+        total: u64,
+        pairs: &[(u32, u64)],
+    ) -> Result<Self, &'static str> {
+        let mut sk = Self::new();
+        sk.zero = zero;
+        sk.skipped = skipped;
+        sk.total = total;
+        let mut sum = zero;
+        let mut prev: Option<u32> = None;
+        for &(idx, c) in pairs {
+            if idx as usize >= N_BUCKETS {
+                return Err("sketch bucket index");
+            }
+            if prev.is_some_and(|p| idx <= p) {
+                return Err("sketch bucket order");
+            }
+            if c == 0 {
+                return Err("empty sketch bucket entry");
+            }
+            sk.counts[idx as usize] = c;
+            sum = sum.checked_add(c).ok_or("sketch count overflow")?;
+            prev = Some(idx);
+        }
+        if sum != total {
+            return Err("sketch total ledger");
+        }
+        Ok(sk)
+    }
+}
+
+// ---- cardinality sketch (HLL) ----------------------------------------
+
+/// Register-index bits: 2^10 = 1024 registers ⇒ ~3.25% asymptotic sigma.
+const HLL_P: u32 = 10;
+const HLL_M: usize = 1 << HLL_P;
+/// Fixed hash seed — never derived from run seeds, so two runs' sketches
+/// are always mergeable and cross-comparable.
+const HLL_SEED: u64 = 0xEBC0_4444_51E7_C4D1;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// HyperLogLog distinct counter over `u64` identifiers. Merge is
+/// element-wise register max — an exact union, in any order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CardinalitySketch {
+    pub(crate) regs: Vec<u8>,
+}
+
+impl Default for CardinalitySketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CardinalitySketch {
+    pub fn new() -> Self {
+        Self {
+            regs: vec![0; HLL_M],
+        }
+    }
+
+    pub fn insert(&mut self, item: u64) {
+        let h = splitmix64(item ^ HLL_SEED);
+        let idx = (h >> (64 - HLL_P)) as usize;
+        let w = h << HLL_P;
+        let rank = if w == 0 {
+            (64 - HLL_P + 1) as u8
+        } else {
+            (w.leading_zeros() + 1) as u8
+        };
+        if rank > self.regs[idx] {
+            self.regs[idx] = rank;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        for (a, &b) in self.regs.iter_mut().zip(&other.regs) {
+            if b > *a {
+                *a = b;
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regs.iter().all(|&r| r == 0)
+    }
+
+    /// Estimated distinct count, with the standard small-range linear
+    /// counting correction. ~10% accurate (±a few counts when tiny).
+    pub fn estimate(&self) -> f64 {
+        let m = HLL_M as f64;
+        let alpha = 0.7213 / (1.0 + 1.079 / m);
+        // 2^-r computed as an exact power of two — no libm involved.
+        let sum: f64 = self.regs.iter().map(|&r| 1.0 / (1u64 << r) as f64).sum();
+        let e = alpha * m * m / sum;
+        let zeros = self.regs.iter().filter(|&&r| r == 0).count();
+        if e <= 2.5 * m && zeros > 0 {
+            m * (m / zeros as f64).ln()
+        } else {
+            e
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.regs.capacity()
+    }
+
+    /// Rebuild from a persisted register file, validating shape and the
+    /// per-register rank ceiling.
+    pub(crate) fn from_registers(regs: Vec<u8>) -> Result<Self, &'static str> {
+        if regs.len() != HLL_M {
+            return Err("HLL register count");
+        }
+        let max_rank = (64 - HLL_P + 1) as u8;
+        if regs.iter().any(|&r| r > max_rank) {
+            return Err("HLL register rank");
+        }
+        Ok(Self { regs })
+    }
+}
+
+// ---- replicate-level sketch bundle ------------------------------------
+
+/// Rebuild a [`ScenarioPhase`] from its persisted bit set.
+fn phase_from_bits(bits: u64) -> ScenarioPhase {
+    (0..64)
+        .filter(|&i| bits & (1u64 << i) != 0)
+        .fold(ScenarioPhase::QUIESCENT, |p, i| {
+            p.union(ScenarioPhase::single(i))
+        })
+}
+
+/// One quantile sketch per QoS metric.
+type MetricSketches = [QuantileSketch; 5];
+
+fn new_metric_sketches() -> MetricSketches {
+    std::array::from_fn(|_| QuantileSketch::new())
+}
+
+/// Sketch-backed replicate QoS: the [`QosStorage::Sketch`] counterpart of
+/// [`super::snapshot::ReplicateQos`]. Fed one closed window at a time by
+/// the engine's capture path; never stores per-channel values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchQos {
+    /// Closed (channel, window) observations folded in.
+    pub(crate) windows: u64,
+    /// Per-metric distribution over all windows.
+    pub(crate) overall: MetricSketches,
+    /// Per-metric distributions keyed by the window's scenario-phase bit
+    /// set, ascending — one entry per *observed* phase, so quiescent
+    /// runs carry exactly one.
+    pub(crate) by_phase: Vec<(u64, MetricSketches)>,
+    /// Distinct channels that attempted at least one send inside an
+    /// observed window.
+    pub(crate) distinct_channels: CardinalitySketch,
+    /// Distinct sender processes behind those channels.
+    pub(crate) distinct_senders: CardinalitySketch,
+}
+
+impl Default for SketchQos {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SketchQos {
+    pub fn new() -> Self {
+        Self {
+            windows: 0,
+            overall: new_metric_sketches(),
+            by_phase: Vec::new(),
+            distinct_channels: CardinalitySketch::new(),
+            distinct_senders: CardinalitySketch::new(),
+        }
+    }
+
+    fn phase_entry(&mut self, bits: u64) -> &mut MetricSketches {
+        let at = match self.by_phase.binary_search_by_key(&bits, |e| e.0) {
+            Ok(i) => i,
+            Err(i) => {
+                self.by_phase.insert(i, (bits, new_metric_sketches()));
+                i
+            }
+        };
+        &mut self.by_phase[at].1
+    }
+
+    /// Fold one closed per-channel window in: exactly the values the
+    /// exact path would have pushed (`SnapshotWindow::metrics`, inlet and
+    /// outlet averaged, tagged with the window's phase union).
+    pub fn absorb_window(&mut self, w: &SnapshotWindow, chan_id: u64, sender_id: u64) {
+        let m = w.metrics();
+        let phase = w.phase().bits();
+        let mut values = [0.0f64; 5];
+        for name in MetricName::ALL {
+            values[name.index()] = m.get(name);
+        }
+        self.windows += 1;
+        for (i, &v) in values.iter().enumerate() {
+            self.overall[i].insert(v);
+        }
+        let set = self.phase_entry(phase);
+        for (i, &v) in values.iter().enumerate() {
+            set[i].insert(v);
+        }
+        if w.inlet_after.counters.attempted_sends > w.inlet_before.counters.attempted_sends {
+            self.distinct_channels.insert(chan_id);
+            self.distinct_senders.insert(sender_id);
+        }
+    }
+
+    /// As [`Self::absorb_window`] but from an already-computed metrics
+    /// row — the hardware executor's bridge, where windows are built from
+    /// wall-clock tranches rather than [`SnapshotWindow`]s.
+    pub fn absorb_metrics(&mut self, m: &QosMetrics, phase: ScenarioPhase) {
+        let mut values = [0.0f64; 5];
+        for name in MetricName::ALL {
+            values[name.index()] = m.get(name);
+        }
+        self.windows += 1;
+        for (i, &v) in values.iter().enumerate() {
+            self.overall[i].insert(v);
+        }
+        let set = self.phase_entry(phase.bits());
+        for (i, &v) in values.iter().enumerate() {
+            set[i].insert(v);
+        }
+    }
+
+    /// Fold another replicate's sketches in (shard-merge / post-restore
+    /// merge). Order-invariant: any merge tree yields bit-identical
+    /// state.
+    pub fn merge(&mut self, other: &Self) {
+        self.windows += other.windows;
+        for (a, b) in self.overall.iter_mut().zip(&other.overall) {
+            a.merge(b);
+        }
+        for (bits, set) in &other.by_phase {
+            let mine = self.phase_entry(*bits);
+            for (a, b) in mine.iter_mut().zip(set) {
+                a.merge(b);
+            }
+        }
+        self.distinct_channels.merge(&other.distinct_channels);
+        self.distinct_senders.merge(&other.distinct_senders);
+    }
+
+    /// Closed (channel, window) observations folded in so far.
+    pub fn window_count(&self) -> u64 {
+        self.windows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows == 0
+    }
+
+    pub fn quantile(&self, metric: MetricName, q: f64) -> f64 {
+        self.overall[metric.index()].quantile(q)
+    }
+
+    pub fn median(&self, metric: MetricName) -> f64 {
+        self.quantile(metric, 0.5)
+    }
+
+    pub fn p95(&self, metric: MetricName) -> f64 {
+        self.quantile(metric, 0.95)
+    }
+
+    /// Deterministic approximate mean (bucket representatives).
+    pub fn approx_mean(&self, metric: MetricName) -> f64 {
+        self.overall[metric.index()].approx_mean()
+    }
+
+    /// Observed scenario phases, ascending by bit set — quiescent first
+    /// when present.
+    pub fn phases(&self) -> Vec<ScenarioPhase> {
+        self.by_phase.iter().map(|e| phase_from_bits(e.0)).collect()
+    }
+
+    /// Quantile over the windows whose phase satisfies `pred` — the
+    /// sketch-side counterpart of `ReplicateQos::median_where`. Folds the
+    /// matching phase sketches into a scratch sketch (cheap: fixed-size
+    /// adds), so any phase predicate is queryable.
+    pub fn quantile_where<F: Fn(ScenarioPhase) -> bool>(
+        &self,
+        metric: MetricName,
+        pred: F,
+        q: f64,
+    ) -> f64 {
+        let mut acc = QuantileSketch::new();
+        for (bits, set) in &self.by_phase {
+            if pred(phase_from_bits(*bits)) {
+                acc.merge(&set[metric.index()]);
+            }
+        }
+        acc.quantile(q)
+    }
+
+    pub fn median_where<F: Fn(ScenarioPhase) -> bool>(&self, metric: MetricName, pred: F) -> f64 {
+        self.quantile_where(metric, pred, 0.5)
+    }
+
+    /// Windows recorded under phases satisfying `pred`.
+    pub fn window_count_where<F: Fn(ScenarioPhase) -> bool>(&self, pred: F) -> u64 {
+        self.by_phase
+            .iter()
+            .filter(|(bits, _)| pred(phase_from_bits(*bits)))
+            .map(|(_, set)| set[0].count() + set[0].skipped)
+            .sum()
+    }
+
+    /// Estimated distinct channels that sent during observed windows.
+    pub fn distinct_channels(&self) -> f64 {
+        self.distinct_channels.estimate()
+    }
+
+    /// Estimated distinct sender processes during observed windows.
+    pub fn distinct_senders(&self) -> f64 {
+        self.distinct_senders.estimate()
+    }
+
+    /// Heap owned by every constituent sketch — the `qos_sketch` census
+    /// line of `Engine::memory_footprint`.
+    pub fn heap_bytes(&self) -> usize {
+        let quant: usize = self
+            .overall
+            .iter()
+            .chain(self.by_phase.iter().flat_map(|(_, s)| s.iter()))
+            .map(QuantileSketch::heap_bytes)
+            .sum();
+        quant
+            + self.by_phase.capacity() * std::mem::size_of::<(u64, MetricSketches)>()
+            + self.distinct_channels.heap_bytes()
+            + self.distinct_senders.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn exact_nearest_rank(xs: &[f64], q: f64) -> f64 {
+        let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        v[rank - 1]
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_rep_in_bucket() {
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..20_000 {
+            let a = rng.uniform(1e-9, 1e12);
+            let b = a * (1.0 + rng.uniform(0.0, 2.0));
+            let (ia, ib) = match (slot_of(a), slot_of(b)) {
+                (Slot::Bucket(x), Slot::Bucket(y)) => (x, y),
+                _ => continue,
+            };
+            assert!(ia <= ib, "index not monotone: {a} -> {ia}, {b} -> {ib}");
+            let rep = representative(ia);
+            assert!(
+                (rep / a - 1.0).abs() <= QUANTILE_REL_ERROR_BOUND,
+                "representative {rep} off by more than the bound from {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_within_documented_bound() {
+        let mut rng = Xoshiro256::new(0x5EED);
+        for _ in 0..60 {
+            let n = 1 + rng.below(2000) as usize;
+            let xs: Vec<f64> = (0..n)
+                .map(|_| match rng.below(5) {
+                    0 => 0.0,
+                    1 => rng.uniform(0.0, 1.0),
+                    2 => rng.exponential(2.0e6),
+                    3 => rng.uniform(1.0, 1e12),
+                    _ => rng.uniform(1e3, 1e9),
+                })
+                .collect();
+            let mut sk = QuantileSketch::new();
+            for &x in &xs {
+                sk.insert(x);
+            }
+            for q in [0.05, 0.5, 0.95, 0.99] {
+                let est = sk.quantile(q);
+                let exact = exact_nearest_rank(&xs, q);
+                if exact == 0.0 {
+                    assert_eq!(est, 0.0);
+                } else {
+                    let rel = (est - exact).abs() / exact;
+                    assert!(
+                        rel <= QUANTILE_REL_ERROR_BOUND + 1e-12,
+                        "q={q}: rel={rel} est={est} exact={exact}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_order_invariant_and_empty_idempotent() {
+        let mut rng = Xoshiro256::new(42);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.exponential(1e6)).collect();
+        let mut whole = QuantileSketch::new();
+        for &x in &xs {
+            whole.insert(x);
+        }
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        let mut c = QuantileSketch::new();
+        for (i, &x) in xs.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].insert(x);
+        }
+        // (a+b)+c and c+(b+a) both equal the straight-through sketch.
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut c_ba = c.clone();
+        let mut ba = b.clone();
+        ba.merge(&a);
+        c_ba.merge(&ba);
+        assert_eq!(ab_c, whole);
+        assert_eq!(c_ba, whole);
+        let before = whole.clone();
+        whole.merge(&QuantileSketch::new());
+        assert_eq!(whole, before);
+    }
+
+    #[test]
+    fn nan_skipped_inf_saturates_negatives_zero() {
+        let mut sk = QuantileSketch::new();
+        sk.insert(f64::NAN);
+        sk.insert(f64::INFINITY);
+        sk.insert(-3.0);
+        sk.insert(0.0);
+        assert_eq!(sk.skipped, 1);
+        assert_eq!(sk.count(), 3);
+        assert_eq!(sk.zero, 2);
+        assert_eq!(sk.quantile(1.0), representative(N_BUCKETS - 1));
+    }
+
+    #[test]
+    fn hll_estimates_within_envelope_and_merges_as_union() {
+        for n in [1u64, 17, 500, 5_000, 100_000] {
+            let mut sk = CardinalitySketch::new();
+            for i in 0..n {
+                // splitmix64 is a bijection, so these n items are distinct.
+                let item = splitmix64(i ^ 0xD157_1AC7);
+                sk.insert(item);
+                sk.insert(item); // duplicates are free
+            }
+            let est = sk.estimate();
+            let err = (est - n as f64).abs();
+            assert!(
+                err <= 4.0 + 0.10 * n as f64,
+                "HLL err {err} at n={n} (est {est})"
+            );
+        }
+        let mut a = CardinalitySketch::new();
+        let mut b = CardinalitySketch::new();
+        let mut u = CardinalitySketch::new();
+        for i in 0..3000u64 {
+            a.insert(i);
+            u.insert(i);
+        }
+        for i in 2000..7000u64 {
+            b.insert(i);
+            u.insert(i);
+        }
+        a.merge(&b);
+        assert_eq!(a, u);
+    }
+
+    #[test]
+    fn storage_from_env_defaults_exact() {
+        // Don't touch the process env (tests run concurrently) — just pin
+        // the default and the labels.
+        assert_eq!(QosStorage::default(), QosStorage::Exact);
+        assert_eq!(QosStorage::Exact.label(), "exact");
+        assert_eq!(QosStorage::Sketch.label(), "sketch");
+    }
+
+    #[test]
+    fn sketch_qos_phase_split_and_merge() {
+        use crate::conduit::CounterTranche;
+        use crate::qos::QosObservation;
+        let mk = |updates, wall, phase| QosObservation {
+            counters: CounterTranche::default(),
+            update_count: updates,
+            wall_ns: wall,
+            phase,
+        };
+        let quiet = ScenarioPhase::QUIESCENT;
+        let storm = ScenarioPhase::single(2);
+        let w_quiet = SnapshotWindow {
+            inlet_before: mk(0, 0, quiet),
+            inlet_after: mk(10, 1_000, quiet),
+            outlet_before: mk(0, 0, quiet),
+            outlet_after: mk(10, 1_000, quiet),
+        };
+        let w_storm = SnapshotWindow {
+            inlet_before: mk(0, 0, quiet),
+            inlet_after: mk(10, 9_000, storm),
+            outlet_before: mk(0, 0, quiet),
+            outlet_after: mk(10, 9_000, storm),
+        };
+        let mut sq = SketchQos::new();
+        sq.absorb_window(&w_quiet, 0, 0);
+        sq.absorb_window(&w_storm, 1, 1);
+        assert_eq!(sq.window_count(), 2);
+        assert_eq!(sq.phases(), vec![quiet, storm]);
+        // periods: 100 ns quiet, 900 ns storm — medians land in-bucket.
+        let quiet_med = sq.median_where(MetricName::SimstepPeriod, |p| p.is_quiescent());
+        let storm_med = sq.median_where(MetricName::SimstepPeriod, |p| p.contains(2));
+        assert!((quiet_med / 100.0 - 1.0).abs() <= QUANTILE_REL_ERROR_BOUND);
+        assert!((storm_med / 900.0 - 1.0).abs() <= QUANTILE_REL_ERROR_BOUND);
+        // split-and-merge equals straight-through, bit for bit.
+        let mut p1 = SketchQos::new();
+        p1.absorb_window(&w_quiet, 0, 0);
+        let mut p2 = SketchQos::new();
+        p2.absorb_window(&w_storm, 1, 1);
+        let mut merged = SketchQos::new();
+        merged.merge(&p2);
+        merged.merge(&p1);
+        assert_eq!(merged, sq);
+        assert!(sq.heap_bytes() > 0);
+    }
+}

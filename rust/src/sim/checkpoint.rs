@@ -26,7 +26,10 @@ use crate::faults::{
     FaultEvent, FaultKind, FaultScenario, LinkFault, NodeFault, ScenarioPhase,
 };
 use crate::net::{LinkModel, NodeProfile, PlacementKind};
-use crate::qos::{QosObservation, SnapshotSchedule, SnapshotWindow};
+use crate::qos::{
+    CardinalitySketch, QosObservation, QosStorage, QuantileSketch, SketchQos, SnapshotSchedule,
+    SnapshotWindow,
+};
 use crate::sim::calendar::SchedKind;
 use crate::sim::modes::{AsyncMode, ModeTiming};
 use crate::workloads::{ChannelSpec, TilePartition};
@@ -43,8 +46,11 @@ pub const SNAP_MAGIC: [u8; 4] = *b"EBCK";
 /// per-channel `purged` counter), `StepPath` in the config, incremental
 /// snapshot cache (`window_open`/`open_t`/`open_phase`/per-channel
 /// cached observations/`touched` flags) replacing the open-observation
-/// pair list.
-pub const SNAP_VERSION: u32 = 2;
+/// pair list; v3 = `QosStorage` in the config plus sketch-backed QoS
+/// state (per-metric quantile sketches, per-phase split, HLL distinct
+/// counters) after the window list — sketch-mode resumes are bitwise
+/// because the sketches are pure integer state.
+pub const SNAP_VERSION: u32 = 3;
 
 /// Why a checkpoint blob could not be decoded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -593,6 +599,119 @@ impl Persist for SnapshotSchedule {
     }
 }
 
+impl Persist for QosStorage {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(match self {
+            QosStorage::Exact => 0,
+            QosStorage::Sketch => 1,
+        });
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(QosStorage::Exact),
+            1 => Ok(QosStorage::Sketch),
+            _ => Err(SnapError::Corrupt("qos-storage tag")),
+        }
+    }
+}
+
+/// Sparse encoding: the ledger counters, then `(bucket, count)` pairs in
+/// ascending bucket order — checkpoint size scales with *occupied*
+/// buckets, not the fixed array.
+impl Persist for QuantileSketch {
+    fn save(&self, w: &mut SnapWriter) {
+        self.zero.save(w);
+        self.skipped.save(w);
+        self.total.save(w);
+        let nonzero = self.counts.iter().filter(|&&c| c != 0).count();
+        nonzero.save(w);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c != 0 {
+                w.put_u32(i as u32);
+                c.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let zero = u64::load(r)?;
+        let skipped = u64::load(r)?;
+        let total = u64::load(r)?;
+        let n = usize::load(r)?;
+        let mut pairs = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let idx = r.get_u32()?;
+            let c = u64::load(r)?;
+            pairs.push((idx, c));
+        }
+        QuantileSketch::from_parts(zero, skipped, total, &pairs).map_err(SnapError::Corrupt)
+    }
+}
+
+impl Persist for CardinalitySketch {
+    fn save(&self, w: &mut SnapWriter) {
+        self.regs.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        CardinalitySketch::from_registers(Vec::<u8>::load(r)?).map_err(SnapError::Corrupt)
+    }
+}
+
+fn load_metric_sketches(r: &mut SnapReader) -> Result<[QuantileSketch; 5], SnapError> {
+    Ok([
+        QuantileSketch::load(r)?,
+        QuantileSketch::load(r)?,
+        QuantileSketch::load(r)?,
+        QuantileSketch::load(r)?,
+        QuantileSketch::load(r)?,
+    ])
+}
+
+impl Persist for SketchQos {
+    fn save(&self, w: &mut SnapWriter) {
+        self.windows.save(w);
+        for sk in &self.overall {
+            sk.save(w);
+        }
+        self.by_phase.len().save(w);
+        for (bits, set) in &self.by_phase {
+            bits.save(w);
+            for sk in set {
+                sk.save(w);
+            }
+        }
+        self.distinct_channels.save(w);
+        self.distinct_senders.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let windows = u64::load(r)?;
+        let overall = load_metric_sketches(r)?;
+        let n_phases = usize::load(r)?;
+        // One entry per *observed* scenario-event subset; even a long
+        // chaos timeline transitions through a tiny fraction of the
+        // possible subsets, and every entry needs at least one window.
+        if n_phases as u64 > windows {
+            return Err(SnapError::Corrupt("sketch phase count"));
+        }
+        let mut by_phase = Vec::with_capacity(n_phases.min(4096));
+        let mut prev: Option<u64> = None;
+        for _ in 0..n_phases {
+            let bits = u64::load(r)?;
+            if prev.is_some_and(|p| bits <= p) {
+                return Err(SnapError::Corrupt("sketch phase order"));
+            }
+            prev = Some(bits);
+            by_phase.push((bits, load_metric_sketches(r)?));
+        }
+        Ok(Self {
+            windows,
+            overall,
+            by_phase,
+            distinct_channels: CardinalitySketch::load(r)?,
+            distinct_senders: CardinalitySketch::load(r)?,
+        })
+    }
+}
+
 // ---- sim / workload types --------------------------------------------
 
 impl Persist for AsyncMode {
@@ -693,14 +812,18 @@ mod tests {
         );
     }
 
-    /// Blobs from the previous format generation are rejected outright
-    /// — v2 restructured the channel section (hot/cold split, interned
-    /// links) so a v1 stream cannot be decoded field-by-field.
+    /// Blobs from previous format generations are rejected outright —
+    /// v2 restructured the channel section (hot/cold split, interned
+    /// links) relative to v1, and v3 appended the `QosStorage` config
+    /// field + sketch section, so neither older stream can be decoded
+    /// field-by-field.
     #[test]
     fn prior_version_rejected() {
-        let mut v1 = SnapWriter::new().finish();
-        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
-        assert_eq!(SnapReader::new(&v1), err_kind(SnapError::BadVersion(1)));
+        for old in [1u32, 2] {
+            let mut blob = SnapWriter::new().finish();
+            blob[4..8].copy_from_slice(&old.to_le_bytes());
+            assert_eq!(SnapReader::new(&blob), err_kind(SnapError::BadVersion(old)));
+        }
     }
 
     fn err_kind<T>(e: SnapError) -> Result<T, SnapError> {
@@ -809,6 +932,56 @@ mod tests {
             tile_h: 4,
             tile_w: 4,
         });
+        round_trip(QosStorage::Exact);
+        round_trip(QosStorage::Sketch);
+    }
+
+    #[test]
+    fn sketch_round_trips_bitwise() {
+        let mut q = QuantileSketch::new();
+        for x in [0.0, 1.5e6, 1.5e6, 2.0e9, 0.25, f64::NAN, -1.0] {
+            q.insert(x);
+        }
+        round_trip(q);
+        round_trip(QuantileSketch::new());
+
+        let mut c = CardinalitySketch::new();
+        for i in 0..500u64 {
+            c.insert(i);
+        }
+        round_trip(c);
+        round_trip(CardinalitySketch::new());
+
+        let mut sq = SketchQos::new();
+        let obs = |updates, wall, phase| QosObservation {
+            counters: CounterTranche::default(),
+            update_count: updates,
+            wall_ns: wall,
+            phase,
+        };
+        let storm = ScenarioPhase::single(5);
+        sq.absorb_window(
+            &SnapshotWindow {
+                inlet_before: obs(0, 0, ScenarioPhase::QUIESCENT),
+                inlet_after: obs(12, 2_000, ScenarioPhase::QUIESCENT),
+                outlet_before: obs(0, 0, ScenarioPhase::QUIESCENT),
+                outlet_after: obs(12, 2_000, ScenarioPhase::QUIESCENT),
+            },
+            3,
+            1,
+        );
+        sq.absorb_window(
+            &SnapshotWindow {
+                inlet_before: obs(0, 0, ScenarioPhase::QUIESCENT),
+                inlet_after: obs(7, 9_000, storm),
+                outlet_before: obs(0, 0, ScenarioPhase::QUIESCENT),
+                outlet_after: obs(7, 9_000, storm),
+            },
+            4,
+            2,
+        );
+        round_trip(sq);
+        round_trip(SketchQos::new());
     }
 
     #[test]

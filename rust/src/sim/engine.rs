@@ -50,7 +50,10 @@ use super::modes::{AsyncMode, ModeTiming};
 use crate::conduit::{CounterTranche, LocalChannelStats, SendOutcome, StatsSink};
 use crate::faults::{FaultKind, FaultRuntime, FaultScenario, ScenarioPhase};
 use crate::net::{LinkModel, NodeProfile, PlacementKind, Topology};
-use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
+use crate::qos::{
+    QosObservation, QosStorage, ReplicateQos, SketchQos, SnapshotSchedule, SnapshotWindow,
+    TouchCounter,
+};
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::{Nanos, MICRO};
 use crate::workloads::{ChannelSpec, ShardWorkload, SpecIndex};
@@ -186,6 +189,13 @@ pub struct SimConfig {
     /// default empty scenario leaves the engine on the static-profile
     /// path, bit-identically.
     pub scenario: FaultScenario,
+    /// How QoS observations are stored: exact per-channel windows (the
+    /// default; O(channels × windows) memory) or mergeable streaming
+    /// sketches (O(1) per window per metric — the 10⁴⁺-proc mode).
+    /// Defaults from the `EBCOMM_QOS` env var (`"exact"` / `"sketch"`).
+    /// The simulation itself is bit-identical either way: storage only
+    /// decides what the capture path retains.
+    pub qos_storage: QosStorage,
 }
 
 impl SimConfig {
@@ -208,6 +218,7 @@ impl SimConfig {
             sched: SchedKind::from_env(),
             step: StepPath::from_env(),
             scenario: FaultScenario::default(),
+            qos_storage: QosStorage::from_env(),
         }
     }
 
@@ -432,10 +443,15 @@ pub struct SimResult<W> {
     /// Virtual runtime simulated.
     pub run_for: Nanos,
     /// All QoS snapshot metrics (per channel per window, inlet/outlet
-    /// averaged).
+    /// averaged). Empty under [`QosStorage::Sketch`] — query
+    /// [`Self::qos_sketch`] instead.
     pub qos: ReplicateQos,
     /// Per-window per-channel raw windows (for mean/median splits).
+    /// Empty under [`QosStorage::Sketch`].
     pub windows: Vec<SnapshotWindow>,
+    /// Sketch-backed QoS aggregation — `Some` exactly when the run used
+    /// [`QosStorage::Sketch`] with a snapshot schedule.
+    pub qos_sketch: Option<SketchQos>,
     /// Global delivery accounting.
     pub attempted_sends: u64,
     pub successful_sends: u64,
@@ -507,8 +523,12 @@ pub struct MemoryFootprint {
     pub proc_bytes: usize,
     /// Event-scheduler backing storage.
     pub sched_bytes: usize,
-    /// Snapshot cache, touched flags, and completed windows.
+    /// Snapshot cache, touched flags, and completed windows (the exact
+    /// path's O(channels × windows) retention shows up here).
     pub qos_bytes: usize,
+    /// Sketch-backed QoS state: fixed-size bucket arrays + HLL registers,
+    /// O(1) per window per metric. Zero on exact-storage runs.
+    pub qos_sketch_bytes: usize,
     /// Membership, barrier, and scratch vectors.
     pub misc_bytes: usize,
     pub total_bytes: usize,
@@ -558,6 +578,11 @@ pub struct Engine<W: ShardWorkload> {
     /// touched procs and clear the flags.
     touched: Vec<bool>,
     windows: Vec<SnapshotWindow>,
+    /// Sketch-backed QoS aggregation ([`QosStorage::Sketch`] with a
+    /// snapshot schedule): closed windows fold in here instead of
+    /// accumulating in `windows`. Boxed — ~100 KB of fixed bucket arrays
+    /// that only sketch-mode runs pay for.
+    sketch: Option<Box<SketchQos>>,
     /// Fault-scenario overlay; `None` for empty scenarios, which keeps
     /// the static-profile path bit-identical (no overlay reads, no extra
     /// scheduled events).
@@ -808,6 +833,11 @@ impl<W: ShardWorkload> Engine<W> {
         } else {
             Vec::new()
         };
+        let sketch = if cfg.snapshots.is_some() && cfg.qos_storage == QosStorage::Sketch {
+            Some(Box::new(SketchQos::new()))
+        } else {
+            None
+        };
         let engine_rng = Xoshiro256::new(cfg.seed ^ 0xBA44_1E44);
         Self {
             cfg,
@@ -828,6 +858,7 @@ impl<W: ShardWorkload> Engine<W> {
             chan_snap,
             touched: vec![false; n],
             windows: Vec::new(),
+            sketch,
             faults,
             window_phase: ScenarioPhase::QUIESCENT,
             engine_rng,
@@ -946,6 +977,7 @@ impl<W: ShardWorkload> Engine<W> {
             run_for: self.cfg.run_for,
             qos,
             windows: self.windows,
+            qos_sketch: self.sketch.map(|b| *b),
             attempted_sends: totals.attempted_sends,
             successful_sends: totals.successful_sends,
             messages_delivered: totals.messages_received,
@@ -1336,7 +1368,7 @@ impl<W: ShardWorkload> Engine<W> {
                 self.touched[cold.src as usize] || self.touched[cold.dst as usize];
             let before = self.chan_snap[cid];
             let after = if stale { self.capture_chan(cid) } else { before };
-            self.windows.push(SnapshotWindow {
+            let window = SnapshotWindow {
                 inlet_before: QosObservation::capture_phased(
                     before.counters,
                     before.upd_src,
@@ -1361,7 +1393,14 @@ impl<W: ShardWorkload> Engine<W> {
                     t,
                     phase,
                 ),
-            });
+            };
+            // Storage mode decides what the capture retains: the exact
+            // path accumulates the raw window, the sketch path folds the
+            // identical window into fixed-size sketches and drops it.
+            match &mut self.sketch {
+                Some(sk) => sk.absorb_window(&window, cid as u64, cold.src as u64),
+                None => self.windows.push(window),
+            }
             self.chan_snap[cid] = after;
         }
         self.touched.fill(false);
@@ -1508,6 +1547,11 @@ impl<W: ShardWorkload> Engine<W> {
         let qos_bytes = self.chan_snap.capacity() * size_of::<ChanSnapState>()
             + self.touched.capacity() * size_of::<bool>()
             + self.windows.capacity() * size_of::<SnapshotWindow>();
+        let qos_sketch_bytes = self
+            .sketch
+            .as_ref()
+            .map(|s| size_of::<SketchQos>() + s.heap_bytes())
+            .unwrap_or(0);
         let misc_bytes = self.barrier_waiting.capacity() * size_of::<bool>()
             + self.live.capacity() * size_of::<bool>()
             + self.wake_armed.capacity() * size_of::<bool>()
@@ -1521,6 +1565,7 @@ impl<W: ShardWorkload> Engine<W> {
             + proc_bytes
             + sched_bytes
             + qos_bytes
+            + qos_sketch_bytes
             + misc_bytes;
         MemoryFootprint {
             n_procs: self.procs.len(),
@@ -1531,9 +1576,18 @@ impl<W: ShardWorkload> Engine<W> {
             proc_bytes,
             sched_bytes,
             qos_bytes,
+            qos_sketch_bytes,
             misc_bytes,
             total_bytes,
         }
+    }
+
+    /// Live view of the sketch-backed QoS state (`None` on exact-storage
+    /// runs or when no snapshot schedule is configured). Valid between
+    /// events — the dashboard tails this while `run_until` slices the
+    /// run.
+    pub fn qos_sketch(&self) -> Option<&SketchQos> {
+        self.sketch.as_deref()
     }
 }
 
@@ -1675,6 +1729,7 @@ impl Persist for SimConfig {
         self.sched.save(w);
         self.step.save(w);
         self.scenario.save(w);
+        self.qos_storage.save(w);
     }
 
     fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
@@ -1696,6 +1751,7 @@ impl Persist for SimConfig {
             sched: SchedKind::load(r)?,
             step: StepPath::load(r)?,
             scenario: FaultScenario::load(r)?,
+            qos_storage: QosStorage::load(r)?,
         })
     }
 }
@@ -1807,6 +1863,12 @@ where
         self.chan_snap.save(&mut w);
         self.touched.save(&mut w);
         self.windows.save(&mut w);
+        // v3: sketch-backed QoS state rides the checkpoint verbatim (all
+        // integral, so restore is bitwise by construction).
+        self.sketch.is_some().save(&mut w);
+        if let Some(sk) = &self.sketch {
+            sk.save(&mut w);
+        }
         let overlay: Option<Vec<u8>> = self.faults.as_ref().map(|rt| rt.export_states());
         overlay.save(&mut w);
         self.window_phase.save(&mut w);
@@ -1958,6 +2020,11 @@ where
         let chan_snap = Vec::<ChanSnapState>::load(&mut r)?;
         let touched = Vec::<bool>::load(&mut r)?;
         let windows = Vec::<SnapshotWindow>::load(&mut r)?;
+        let sketch = if bool::load(&mut r)? {
+            Some(Box::new(SketchQos::load(&mut r)?))
+        } else {
+            None
+        };
         let overlay_states = Option::<Vec<u8>>::load(&mut r)?;
         let window_phase = ScenarioPhase::load(&mut r)?;
         let engine_rng = Xoshiro256::from_state(<[u64; 4]>::load(&mut r)?);
@@ -1984,6 +2051,13 @@ where
         }
         if window_open && cfg.snapshots.is_none() {
             return Err(SnapError::Corrupt("open window without schedule"));
+        }
+        let want_sketch = cfg.snapshots.is_some() && cfg.qos_storage == QosStorage::Sketch;
+        if sketch.is_some() != want_sketch {
+            return Err(SnapError::Corrupt("sketch presence/storage mismatch"));
+        }
+        if want_sketch && !windows.is_empty() {
+            return Err(SnapError::Corrupt("raw windows under sketch storage"));
         }
         for p in &procs {
             for &cid in &p.outgoing {
@@ -2079,6 +2153,7 @@ where
             chan_snap,
             touched,
             windows,
+            sketch,
             faults,
             window_phase,
             engine_rng,
@@ -2154,6 +2229,7 @@ pub fn profiles_with_faulty(topo: &Topology, faulty_node: usize) -> Vec<NodeProf
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::qos::{MetricName, QUANTILE_REL_ERROR_BOUND};
     use crate::util::{MILLI, SECOND};
     use crate::workloads::{GcConfig, GraphColoringShard};
 
@@ -2309,6 +2385,9 @@ mod tests {
             200 * MILLI,
         );
         cfg.send_buffer = 64;
+        // Asserts exact window contents: pin the storage mode so an
+        // `EBCOMM_QOS=sketch` environment cannot empty `windows`.
+        cfg.qos_storage = QosStorage::Exact;
         cfg.snapshots = Some(SnapshotSchedule::compressed(
             50 * MILLI,
             50 * MILLI,
@@ -2642,6 +2721,18 @@ mod tests {
         sched: SchedKind,
         scenario: FaultScenario,
     ) -> Engine<GraphColoringShard> {
+        // The checkpoint tests below assert on exact window/QoS content;
+        // pin the storage mode so `EBCOMM_QOS=sketch` cannot empty them.
+        // Sketch-mode round-trips get their own dedicated tests.
+        snap_engine_with_storage(seed, sched, scenario, QosStorage::Exact)
+    }
+
+    fn snap_engine_with_storage(
+        seed: u64,
+        sched: SchedKind,
+        scenario: FaultScenario,
+        storage: QosStorage,
+    ) -> Engine<GraphColoringShard> {
         let topo = Topology::new(4, PlacementKind::OnePerNode);
         let mut rng = Xoshiro256::new(seed);
         let shards: Vec<_> = (0..4)
@@ -2662,6 +2753,7 @@ mod tests {
         cfg.seed = seed;
         cfg.send_buffer = 8;
         cfg.sched = sched;
+        cfg.qos_storage = storage;
         cfg.snapshots = Some(SnapshotSchedule::compressed(10 * MILLI, 15 * MILLI, 8 * MILLI, 3));
         cfg.scenario = scenario;
         let profiles = healthy_profiles(&topo);
@@ -2775,6 +2867,73 @@ mod tests {
         ));
     }
 
+    // ---- sketch-backed QoS storage ---------------------------------
+
+    /// Storage mode only decides what the capture path retains: a
+    /// sketch-mode run is bit-identical to the exact run on every
+    /// simulation output, keeps no raw windows, and its sketch saw
+    /// exactly the windows the exact run retained — with per-metric
+    /// medians inside the documented relative-error bound of the exact
+    /// nearest-rank medians.
+    #[test]
+    fn sketch_storage_is_simulation_invariant_and_cross_checks() {
+        let scenario = FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI);
+        let exact = snap_scenario_engine(41, SchedKind::Heap, scenario.clone()).run();
+        let mut engine =
+            snap_engine_with_storage(41, SchedKind::Heap, scenario, QosStorage::Sketch);
+        let fp = engine.memory_footprint();
+        assert!(fp.qos_sketch_bytes > 0, "sketch census line missing");
+        engine.run_until(Nanos::MAX);
+        let sk = engine.finish();
+        assert_eq!(
+            fingerprint(&exact),
+            fingerprint(&sk),
+            "storage mode perturbed the simulation"
+        );
+        assert!(sk.windows.is_empty(), "sketch mode retained raw windows");
+        assert!(sk.qos.snapshots.is_empty());
+        let sketch = sk.qos_sketch.expect("sketch storage produced no sketch");
+        assert_eq!(sketch.window_count(), exact.windows.len() as u64);
+        for m in MetricName::ALL {
+            let mut vals = exact.qos.values(m);
+            vals.sort_by(f64::total_cmp);
+            assert!(!vals.is_empty());
+            let rank = ((0.5 * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let ex = vals[rank - 1];
+            let est = sketch.median(m);
+            assert!(
+                (est - ex).abs() <= QUANTILE_REL_ERROR_BOUND * ex.abs() + 1e-12,
+                "{m:?}: sketch median {est} vs exact nearest-rank {ex}"
+            );
+        }
+    }
+
+    /// Sketch state rides the checkpoint: resume-after-restore equals
+    /// the straight-through run bit for bit (`SketchQos` is `Eq`; all
+    /// state is integer) under both scheduler kinds.
+    #[test]
+    fn sketch_checkpoint_resume_matches_straight_through() {
+        let scenario = FaultScenario::congestion_storm(15 * MILLI, 20 * MILLI);
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            let straight =
+                snap_engine_with_storage(42, sched, scenario.clone(), QosStorage::Sketch).run();
+            let mut e =
+                snap_engine_with_storage(42, sched, scenario.clone(), QosStorage::Sketch);
+            assert!(!e.run_until(25 * MILLI), "run ended before the checkpoint instant");
+            let blob = e.checkpoint();
+            let resumed = Engine::<GraphColoringShard>::restore(&blob).unwrap().run();
+            assert_eq!(fingerprint(&straight), fingerprint(&resumed), "sched {sched:?}");
+            assert_eq!(
+                straight.qos_sketch, resumed.qos_sketch,
+                "sketch state diverged after restore on {sched:?}"
+            );
+            assert!(
+                straight.qos_sketch.as_ref().is_some_and(|s| !s.is_empty()),
+                "straight-through sketch run captured nothing"
+            );
+        }
+    }
+
     // ---- idle-skip stepping / memory diet --------------------------
 
     /// Tentpole gate: the idle-skip path must be observationally
@@ -2832,6 +2991,7 @@ mod tests {
         );
         cfg.seed = 33;
         cfg.send_buffer = 8;
+        cfg.qos_storage = QosStorage::Exact; // asserts exact window contents
         // One window: opens at 10 ms, scheduled to close at 20 ms — past
         // the 15 ms end of run.
         cfg.snapshots = Some(SnapshotSchedule::compressed(
@@ -2881,6 +3041,7 @@ mod tests {
         );
         cfg.seed = 34;
         cfg.send_buffer = 8;
+        cfg.qos_storage = QosStorage::Exact; // asserts exact window phases
         // Windows [10,20] and [30,40] ms; fault active 12–18 ms, i.e.
         // wholly inside the first window.
         cfg.snapshots = Some(SnapshotSchedule::compressed(
@@ -2925,6 +3086,7 @@ mod tests {
             + fp.proc_bytes
             + fp.sched_bytes
             + fp.qos_bytes
+            + fp.qos_sketch_bytes
             + fp.misc_bytes;
         assert_eq!(section_sum, fp.total_bytes, "unaccounted section");
         assert!(fp.bytes_per_proc() > 0.0);

@@ -11,7 +11,7 @@
 
 use ebcomm::faults::{FaultScenario, ScenarioPhase};
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::SnapshotSchedule;
+use ebcomm::qos::{QosStorage, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, SimConfig, SimResult,
 };
@@ -55,6 +55,9 @@ fn make_engine(
     cfg.seed = seed;
     cfg.send_buffer = 16;
     cfg.sched = sched;
+    // The fingerprints below fold exact QoS streams and phase tags; pin
+    // the storage mode so `EBCOMM_QOS=sketch` cannot empty them.
+    cfg.qos_storage = QosStorage::Exact;
     cfg.snapshots = Some(windows());
     cfg.scenario = scenario;
     let profiles = healthy_profiles(&topo);

@@ -4,7 +4,7 @@
 
 use ebcomm::faults::{FaultScenario, ScenarioPhase};
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::qos::{MetricName, QosStorage, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, profiles_with_faulty, AsyncMode, Engine, ModeTiming, SimConfig, SimResult,
 };
@@ -40,6 +40,9 @@ fn scenario_run(
         SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
     cfg.seed = seed;
     cfg.send_buffer = 64;
+    // Phase-tag and per-window assertions need the exact QoS stream; pin
+    // the storage mode so `EBCOMM_QOS=sketch` cannot empty it.
+    cfg.qos_storage = QosStorage::Exact;
     cfg.snapshots = snapshots;
     cfg.scenario = scenario;
     let profiles = healthy_profiles(&topo);

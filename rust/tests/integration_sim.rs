@@ -6,7 +6,7 @@ use ebcomm::coordinator::{
     run_benchmark_with_workers, run_qos_with_workers, BenchmarkExperiment, QosExperiment,
 };
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::{MetricName, SnapshotSchedule};
+use ebcomm::qos::{MetricName, QosStorage, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, AsyncMode, CommBackend, Engine, ModeTiming, SchedKind, SimConfig,
     SimResult, StepPath,
@@ -167,6 +167,9 @@ fn internode_latency_exceeds_intranode() {
             SECOND,
         );
         cfg.send_buffer = 64;
+        // Asserts on exact QoS medians: pin the storage mode so an
+        // `EBCOMM_QOS=sketch` environment cannot empty the windows.
+        cfg.qos_storage = QosStorage::Exact;
         cfg.snapshots = Some(SnapshotSchedule::compressed(
             300 * MILLI,
             200 * MILLI,
@@ -344,6 +347,9 @@ fn golden_engine_run_full(
     cfg.sched = sched;
     cfg.step = step;
     cfg.scenario = scenario;
+    // The golden signature folds every window and QoS metric; pin the
+    // storage mode so `EBCOMM_QOS=sketch` cannot empty them.
+    cfg.qos_storage = QosStorage::Exact;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         30 * MILLI,
         30 * MILLI,
@@ -495,6 +501,7 @@ fn scheduler_choice_is_bit_invisible_across_modes() {
             cfg.seed = 0x5EED;
             cfg.send_buffer = 4;
             cfg.sched = sched;
+            cfg.qos_storage = QosStorage::Exact; // compares exact QoS bits
             cfg.snapshots = Some(SnapshotSchedule::compressed(
                 10 * MILLI,
                 10 * MILLI,
@@ -559,6 +566,7 @@ fn barrier_storm_1024_procs_batched_release_matches_looped_reference() {
         cfg.seed = 0xB44;
         cfg.send_buffer = 2;
         cfg.sched = sched;
+        cfg.qos_storage = QosStorage::Exact; // signature folds the windows
         cfg.snapshots = Some(SnapshotSchedule::compressed(
             3 * MILLI,
             3 * MILLI,

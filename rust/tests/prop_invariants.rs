@@ -227,6 +227,9 @@ fn prop_qos_metrics_in_range_for_random_windows() {
         );
         cfg.seed = seed;
         cfg.send_buffer = 64;
+        // Asserts on the exact snapshot stream: pin the storage mode so
+        // `EBCOMM_QOS=sketch` cannot empty it.
+        cfg.qos_storage = ebcomm::qos::QosStorage::Exact;
         cfg.snapshots = Some(SnapshotSchedule::compressed(
             30 * MILLI,
             30 * MILLI,

@@ -1,0 +1,364 @@
+//! Sketch-backed QoS telemetry properties through the public API.
+//!
+//! Four contracts, each over randomized inputs:
+//!
+//! 1. **Error bound**: for engine runs across all six fault-scenario
+//!    families (quiescent, congestion storm, degrade/restore, flapping,
+//!    churn storm, mid-run failure), every sketch quantile — overall and
+//!    per-phase — lands within [`QUANTILE_REL_ERROR_BOUND`] of the exact
+//!    nearest-rank quantile computed from the raw windows of an
+//!    exact-storage twin (same seed: storage cannot perturb the
+//!    simulation, so the twins see identical window streams).
+//! 2. **Merge algebra**: sketch merging is associative, commutative,
+//!    and idempotent on empties — and a partitioned stream merged in
+//!    any order is *bit-identical* (`Eq`) to the straight-through
+//!    insert order. This is what makes the sketches shard-mergeable.
+//! 3. **Path/scheduler invariance**: a sketch-mode run produces the
+//!    bit-identical `SketchQos` under heap vs calendar scheduling and
+//!    dense vs idle-skip stepping, set programmatically (so concurrently
+//!    running tests never race on the process environment).
+//! 4. **Checkpoint continuity**: checkpoint at a random mid-run instant,
+//!    restore, finish — the resumed sketch equals the straight-through
+//!    sketch bit for bit (merge-after-restore == straight-through).
+
+use ebcomm::faults::{FaultScenario, ScenarioPhase};
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::{
+    MetricName, QosMetrics, QosStorage, QuantileSketch, SketchQos, SnapshotSchedule,
+    QUANTILE_REL_ERROR_BOUND,
+};
+use ebcomm::sim::{
+    healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, SimConfig, SimResult, StepPath,
+};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen, PropResult};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{Nanos, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+const N_PROCS: usize = 4;
+const RUN_FOR: Nanos = 60 * MILLI;
+
+fn make_engine(
+    seed: u64,
+    sched: SchedKind,
+    step: StepPath,
+    scenario: FaultScenario,
+    storage: QosStorage,
+) -> Engine<GraphColoringShard> {
+    let topo = Topology::new(N_PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..N_PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 2,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg =
+        SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+    cfg.seed = seed;
+    cfg.send_buffer = 16;
+    cfg.sched = sched;
+    cfg.step = step;
+    cfg.qos_storage = storage;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        10 * MILLI,
+        15 * MILLI,
+        8 * MILLI,
+        3,
+    ));
+    cfg.scenario = scenario;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards)
+}
+
+/// All six fault-scenario families the engine's chaos campaigns cover.
+fn random_scenario(g: &mut Gen) -> FaultScenario {
+    match g.usize_in(0, 5) {
+        0 => FaultScenario::default(),
+        1 => FaultScenario::congestion_storm(20 * MILLI, 25 * MILLI),
+        2 => FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI),
+        3 => FaultScenario::flapping_clique(2, 20 * MILLI, 25 * MILLI, 3 * MILLI, 2 * MILLI),
+        4 => FaultScenario::leave_join_storm(N_PROCS, 15 * MILLI, 20 * MILLI, 2),
+        _ => FaultScenario::midrun_failure(2, 25 * MILLI),
+    }
+}
+
+/// Exact nearest-rank quantile — the semantics the sketch implements.
+/// NaNs are dropped, mirroring the sketch's skip accounting.
+fn nearest_rank(vals: &[f64], q: f64) -> f64 {
+    let mut v: Vec<f64> = vals.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    v[rank - 1]
+}
+
+/// `est` within the documented relative error of `exact` (tiny absolute
+/// slack covers exact zeros, which the sketch returns exactly, and
+/// sub-representable values that fold into the zero bucket).
+fn within_bound(est: f64, exact: f64) -> bool {
+    (est - exact).abs() <= QUANTILE_REL_ERROR_BOUND * exact.abs() + 1e-12
+}
+
+/// Per-window metric values of an exact-storage run, with phase tags.
+fn exact_values(
+    r: &SimResult<GraphColoringShard>,
+    metric: MetricName,
+) -> Vec<(f64, ScenarioPhase)> {
+    r.windows
+        .iter()
+        .map(|w| (w.metrics().get(metric), w.phase()))
+        .collect()
+}
+
+/// Contract 1: sketch quantiles vs the exact twin, overall and
+/// per-phase, across every scenario family × both scheds × both steps.
+#[test]
+fn prop_sketch_quantiles_within_bound_of_exact_twin() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = *g.choose(&[SchedKind::Heap, SchedKind::Calendar]);
+        let step = *g.choose(&[StepPath::Dense, StepPath::IdleSkip]);
+        let scenario = random_scenario(g);
+        let q = *g.choose(&[0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99]);
+
+        let exact = make_engine(seed, sched, step, scenario.clone(), QosStorage::Exact).run();
+        let sk_run = make_engine(seed, sched, step, scenario, QosStorage::Sketch).run();
+        let sketch = match &sk_run.qos_sketch {
+            Some(s) => s,
+            None => return prop_assert(false, "sketch storage produced no sketch"),
+        };
+        prop_assert(sk_run.windows.is_empty(), "sketch mode retained raw windows")?;
+        prop_assert(
+            sketch.window_count() == exact.windows.len() as u64,
+            format!(
+                "window census diverged: sketch {} vs exact {} (seed {seed})",
+                sketch.window_count(),
+                exact.windows.len()
+            ),
+        )?;
+
+        for metric in MetricName::ALL {
+            let tagged = exact_values(&exact, metric);
+            let all: Vec<f64> = tagged.iter().map(|(v, _)| *v).collect();
+            let est = sketch.quantile(metric, q);
+            let ex = nearest_rank(&all, q);
+            prop_assert(
+                within_bound(est, ex),
+                format!("{metric:?} q{q}: sketch {est} vs exact {ex} (seed {seed})"),
+            )?;
+            // Per-phase: every phase the sketch observed, against the
+            // exact values carrying the same tag.
+            for phase in sketch.phases() {
+                let vals: Vec<f64> = tagged
+                    .iter()
+                    .filter(|(_, p)| *p == phase)
+                    .map(|(v, _)| *v)
+                    .collect();
+                let est = sketch.quantile_where(metric, |p| p == phase, q);
+                let ex = nearest_rank(&vals, q);
+                prop_assert(
+                    within_bound(est, ex),
+                    format!(
+                        "{metric:?} q{q} phase {phase:?}: sketch {est} vs exact {ex} (seed {seed})"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() { 24 } else { 8 };
+    forall(Config::default().cases(cases).seed(0x5CE7_0001), case);
+}
+
+/// Contract 2a: `QuantileSketch` merge is associative, commutative,
+/// idempotent on empties, and order-invariant vs straight-through
+/// insertion — bit-identically (`Eq` is integer-state identity).
+#[test]
+fn prop_quantile_merge_algebra() {
+    fn case(g: &mut Gen) -> PropResult {
+        // Adversarial value mix: zeros, negatives, NaN, inf, huge/tiny.
+        let mut value = |g: &mut Gen| -> f64 {
+            match g.usize_in(0, 7) {
+                0 => 0.0,
+                1 => -g.f64_in(0.0, 1e6),
+                2 => f64::NAN,
+                3 => f64::INFINITY,
+                4 => g.f64_in(1e-45, 1e-40),
+                5 => g.f64_in(1e12, 1e15),
+                _ => g.f64_in(1e-3, 1e9),
+            }
+        };
+        let xs = g.vec_of(200, &mut value);
+        let ys = g.vec_of(200, &mut value);
+        let zs = g.vec_of(200, &mut value);
+        let fill = |vals: &[f64]| {
+            let mut s = QuantileSketch::new();
+            for &v in vals {
+                s.insert(v);
+            }
+            s
+        };
+        let (a, b, c) = (fill(&xs), fill(&ys), fill(&zs));
+
+        // Associativity: (a+b)+c == a+(b+c).
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        prop_assert(left == right, "merge not associative")?;
+
+        // Commutativity: a+b == b+a.
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        prop_assert(ab == ba, "merge not commutative")?;
+
+        // Empty is identity.
+        let mut a_e = a.clone();
+        a_e.merge(&QuantileSketch::new());
+        prop_assert(a_e == a, "empty merge not identity")?;
+
+        // Partition-merge == straight-through insert.
+        let straight = fill(&[xs.clone(), ys, zs].concat());
+        prop_assert(left == straight, "partitioned merge != straight-through")?;
+        Ok(())
+    }
+    forall(Config::default().cases(64).seed(0x5CE7_0002), case);
+}
+
+/// Contract 2b: the same algebra holds for whole [`SketchQos`] states
+/// fed from randomized windowed metrics with random phase tags.
+#[test]
+fn prop_sketch_qos_merge_algebra() {
+    fn case(g: &mut Gen) -> PropResult {
+        let mut metrics = |g: &mut Gen| -> (QosMetrics, ScenarioPhase) {
+            let m = QosMetrics {
+                simstep_period_ns: g.f64_in(1.0, 1e9),
+                simstep_latency: g.f64_in(0.0, 64.0),
+                walltime_latency_ns: g.f64_in(0.0, 1e9),
+                delivery_failure_rate: g.f64_in(0.0, 1.0),
+                delivery_clumpiness: g.f64_in(0.0, 1.0),
+            };
+            let phase = if g.chance(0.5) {
+                ScenarioPhase::QUIESCENT
+            } else {
+                ScenarioPhase::single(g.usize_in(0, 3))
+            };
+            (m, phase)
+        };
+        let xs = g.vec_of(60, &mut metrics);
+        let ys = g.vec_of(60, &mut metrics);
+        let fill = |vals: &[(QosMetrics, ScenarioPhase)]| {
+            let mut s = SketchQos::new();
+            for (m, p) in vals {
+                s.absorb_metrics(m, *p);
+            }
+            s
+        };
+        let (a, b) = (fill(&xs), fill(&ys));
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        prop_assert(ab == ba, "SketchQos merge not commutative")?;
+
+        let mut a_e = a.clone();
+        a_e.merge(&SketchQos::new());
+        prop_assert(a_e == a, "SketchQos empty merge not identity")?;
+
+        let straight = fill(&[xs, ys].concat());
+        prop_assert(ab == straight, "SketchQos partitioned merge != straight-through")?;
+        prop_assert(
+            ab.window_count() == straight.window_count(),
+            "window census diverged under merge",
+        )?;
+        Ok(())
+    }
+    forall(Config::default().cases(48).seed(0x5CE7_0003), case);
+}
+
+/// Contract 3: scheduler kind and stepping path are invisible to the
+/// sketch — all four combinations produce the bit-identical state.
+#[test]
+fn prop_sketch_invariant_across_sched_and_step() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let scenario = random_scenario(g);
+        let mut runs = Vec::new();
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            for step in [StepPath::Dense, StepPath::IdleSkip] {
+                let r = make_engine(seed, sched, step, scenario.clone(), QosStorage::Sketch)
+                    .run();
+                match r.qos_sketch {
+                    Some(s) => runs.push(((sched, step), s)),
+                    None => return prop_assert(false, "sketch missing"),
+                }
+            }
+        }
+        let ((base_sched, base_step), base) = &runs[0];
+        prop_assert(!base.is_empty(), "sketch run captured nothing")?;
+        for ((sched, step), s) in &runs[1..] {
+            prop_assert(
+                s == base,
+                format!(
+                    "sketch diverged: {sched:?}/{step:?} vs {base_sched:?}/{base_step:?} \
+                     (seed {seed})"
+                ),
+            )?;
+        }
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() { 16 } else { 6 };
+    forall(Config::default().cases(cases).seed(0x5CE7_0004), case);
+}
+
+/// Contract 4: sketch state rides the checkpoint — restore at a random
+/// mid-run instant and finish; the resumed sketch is bit-identical to
+/// the straight-through run's.
+#[test]
+fn prop_sketch_checkpoint_round_trips() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = *g.choose(&[SchedKind::Heap, SchedKind::Calendar]);
+        let step = *g.choose(&[StepPath::Dense, StepPath::IdleSkip]);
+        let scenario = random_scenario(g);
+        let at = g.u64_in(5 * MILLI, 55 * MILLI);
+
+        let straight =
+            make_engine(seed, sched, step, scenario.clone(), QosStorage::Sketch).run();
+        let mut e = make_engine(seed, sched, step, scenario, QosStorage::Sketch);
+        let over = e.run_until(at);
+        prop_assert(!over, format!("t={at} landed past the run end"))?;
+        let blob = e.checkpoint();
+        let resumed = match Engine::<GraphColoringShard>::restore(&blob) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("restore failed: {err:?}")),
+        };
+        prop_assert(
+            straight.qos_sketch == resumed.qos_sketch,
+            format!("sketch diverged after restore (seed {seed}, t {at})"),
+        )?;
+        prop_assert(
+            resumed.qos_sketch.is_some_and(|s| !s.is_empty()),
+            "resumed run captured no windows",
+        )?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() { 16 } else { 6 };
+    forall(Config::default().cases(cases).seed(0x5CE7_0005), case);
+}

@@ -7,7 +7,7 @@
 //! float bits and phase tags.
 //!
 //! The second property closes the loop with the checkpoint format: an
-//! idle-skip run checkpointed mid-flight round-trips through the v2
+//! idle-skip run checkpointed mid-flight round-trips through the v3
 //! snapshot (dirty lists are *derived* state, rebuilt at restore), and
 //! a dense-path snapshot restores into an idle-skip finish (and vice
 //! versa) without perturbing a bit — the step path is simulation-
@@ -16,7 +16,7 @@
 
 use ebcomm::faults::FaultScenario;
 use ebcomm::net::{PlacementKind, Topology};
-use ebcomm::qos::SnapshotSchedule;
+use ebcomm::qos::{QosStorage, SnapshotSchedule};
 use ebcomm::sim::{
     healthy_profiles, AsyncMode, Engine, ModeTiming, SchedKind, SimConfig, SimResult, StepPath,
     SNAP_VERSION,
@@ -57,6 +57,9 @@ fn make_engine(
     cfg.send_buffer = 16;
     cfg.sched = sched;
     cfg.step = step;
+    // The fingerprint folds exact window metrics; pin the storage mode
+    // so `EBCOMM_QOS=sketch` cannot empty them.
+    cfg.qos_storage = QosStorage::Exact;
     cfg.snapshots = Some(SnapshotSchedule::compressed(
         10 * MILLI,
         15 * MILLI,
@@ -154,7 +157,7 @@ fn prop_idle_skip_is_bit_identical_to_dense() {
     forall(Config::default().cases(cases).seed(0x51D_E511), case);
 }
 
-/// Idle-skip state survives the v2 checkpoint: dirty lists are derived,
+/// Idle-skip state survives the v3 checkpoint: dirty lists are derived,
 /// not serialized, so a mid-run snapshot restores and finishes
 /// bit-identically — including when the restore flips the step path,
 /// because the path is observationally invisible.
@@ -231,13 +234,14 @@ fn flip_step_path(blob: &[u8], to: StepPath) -> Option<Vec<u8>> {
     Some(e.checkpoint())
 }
 
-/// Snapshot format v2 is current, and blobs stamped with the prior
-/// version are rejected with `BadVersion` — the channel section was
-/// restructured (hot/cold split, interned links), so v1 streams cannot
-/// be decoded.
+/// Snapshot format v3 is current, and blobs stamped with prior
+/// versions are rejected with `BadVersion` — v2 restructured the
+/// channel section (hot/cold split, interned links), v3 added the
+/// `QosStorage` config field and sketch-backed QoS state, so older
+/// streams cannot be decoded.
 #[test]
-fn v2_format_rejects_prior_versions() {
-    assert_eq!(SNAP_VERSION, 2, "version bump regressed");
+fn v3_format_rejects_prior_versions() {
+    assert_eq!(SNAP_VERSION, 3, "version bump regressed");
     let mut e = make_engine(
         AsyncMode::BestEffort,
         7,
@@ -248,8 +252,8 @@ fn v2_format_rejects_prior_versions() {
     assert!(!e.run_until(20 * MILLI));
     let blob = e.checkpoint();
     assert_eq!(&blob[..4], b"EBCK");
-    assert_eq!(u32::from_le_bytes(blob[4..8].try_into().unwrap()), 2);
-    for old in [0u32, 1] {
+    assert_eq!(u32::from_le_bytes(blob[4..8].try_into().unwrap()), 3);
+    for old in [0u32, 1, 2] {
         let mut v = blob.clone();
         v[4..8].copy_from_slice(&old.to_le_bytes());
         match Engine::<GraphColoringShard>::restore(&v) {
