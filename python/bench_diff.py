@@ -8,9 +8,11 @@ Usage:
                                  [--thread-qos THREAD_QOS.json]
                                  [--churn-csv FAULT_SCENARIOS.csv]
                                  [--weak-scaling WEAK_SCALING.json]
+                                 [--weak-scaling-baseline WEAK_BASELINE.json]
                                  [--qos-sketch WEAK_SCALING.json]
+                                 [--multiproc MULTIPROC.json]
 
-Eight independent checks:
+Ten independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -61,7 +63,28 @@ Eight independent checks:
    evolve, so only absence or malformed entries fail; the printed
    values document the trajectory in the CI log.
 
-8. **QoS-sketch section** (with ``--qos-sketch``): the
+8. **Memory-diet bytes/proc bar** (with ``--weak-scaling-baseline``):
+   the current weak-scaling JSON's ``memory_diet/p<procs>/bytes_per_proc``
+   entries are **gated** against the committed baseline — growth beyond
+   ``--diet-threshold`` (default 0.25) fails. Bytes/proc is a counted
+   quantity (allocator census, not wall clock), so it is stable across
+   runners and safe to gate; ``events_per_sec_per_proc`` and total
+   footprint stay report-only. Rungs present on only one side are
+   reported, never failed. Unarmed (flag absent) until a baseline is
+   committed on main — the CI arms it on the first green push.
+
+9. **Multiproc section** (with ``--multiproc``): the real-process
+   executor bench's JSON (``bench_multiproc --json``) must contain a
+   well-formed ``multiproc`` section — all four windowed QoS metrics
+   (period, walltime latency, delivery failure, clumpiness) for at
+   least one (mode, procs) cell, and all four per-message stage
+   sketches (serialize, enqueue, transport, drain). **Report-only**:
+   multi-process wall-clock numbers are the noisiest in the suite
+   (scheduler placement, socket buffering, and runner load all move
+   them), so the check fails only on a missing or malformed section,
+   and the printed medians document the trajectory in the CI log.
+
+10. **QoS-sketch section** (with ``--qos-sketch``): the
    ``bench_weak_scaling`` JSON must contain a well-formed
    ``qos_sketch/p<procs>/...`` section — per-metric sketch
    medians/p95s, the byte census (``bytes_per_window_per_metric`` pins
@@ -255,6 +278,97 @@ def memory_diet_check(path):
     return failures
 
 
+def memory_diet_gate(cur_path, base_path, threshold):
+    """Gated bytes/proc bar: current ``memory_diet/p<procs>/bytes_per_proc``
+    vs the committed weak-scaling baseline. Bytes/proc is an allocator
+    census (counted, not timed), so runner noise does not excuse growth;
+    anything beyond ``threshold`` fails. Throughput entries stay
+    report-only in memory_diet_check — only the footprint gates here."""
+    failures = []
+    compared = 0
+    cur = load(cur_path)
+    base = load(base_path)
+
+    def bytes_rungs(entries):
+        return {
+            name: e
+            for name, e in entries.items()
+            if name.startswith("memory_diet/") and name.endswith("/bytes_per_proc")
+        }
+
+    cur_rungs, base_rungs = bytes_rungs(cur), bytes_rungs(base)
+    if not base_rungs:
+        return [f"baseline {base_path} has no memory_diet bytes_per_proc rungs"], 0
+    for name in sorted(base_rungs):
+        bm = median_of(base, name)
+        cm = median_of(cur, name)
+        if cm is None:
+            print(f"  [diet gate] {name}: missing in current run — skipped")
+            continue
+        if bm is None:
+            print(f"  [diet gate] {name}: unusable baseline median — skipped")
+            continue
+        ratio = cm / bm
+        allowed = 1.0 + threshold
+        compared += 1
+        verdict = "ok" if ratio <= allowed else "FAIL"
+        print(
+            f"  [diet gate] {name}: {bm:.1f} -> {cm:.1f} bytes/proc "
+            f"(ratio {ratio:.2f}, allowed {allowed:.2f}) {verdict}"
+        )
+        if ratio > allowed:
+            failures.append(
+                f"bytes/proc grew {ratio:.2f}x at {name} (allowed {allowed:.2f}x)"
+            )
+    for name in sorted(set(cur_rungs) - set(base_rungs)):
+        print(f"  [diet gate] {name}: new rung, not in baseline (info)")
+    return failures, compared
+
+
+def multiproc_check(path):
+    """Presence/shape check of the report-only 'multiproc' section: the
+    bench_multiproc JSON must carry all four windowed QoS metrics for at
+    least one (mode, procs) cell plus the four per-message stage
+    sketches. Magnitudes never gate — real-process wall-clock numbers
+    swing wildly on shared runners; the printed medians document the
+    trajectory in the CI log."""
+    entries = load(path)
+    failures = []
+    rows = sorted(
+        (e for name, e in entries.items() if name.startswith("multiproc")),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        return [f"no 'multiproc' entries in {path} — bench did not run?"]
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and abs(m) != float("inf")
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        print(f"  [mp]       {e['name']}: median {m} {unit} (report-only)")
+        if not well_formed:
+            failures.append(f"malformed multiproc entry {e['name']!r}")
+    for needle, what in [
+        ("multiproc period (", "windowed simstep-period"),
+        ("multiproc walltime latency (", "windowed walltime-latency"),
+        ("multiproc delivery failure (", "windowed delivery-failure"),
+        ("multiproc clumpiness (", "windowed clumpiness"),
+        ("multiproc update rate (", "update-rate"),
+    ]:
+        if not any(e["name"].startswith(needle) for e in rows):
+            failures.append(f"multiproc section lacks a {what} entry")
+    for stage in ("serialize", "enqueue", "transport", "drain"):
+        if not any(e["name"] == f"multiproc stage {stage}" for e in rows):
+            failures.append(f"multiproc section lacks the {stage} stage sketch")
+    return failures
+
+
 def qos_sketch_check(path):
     """Shape check of the report-only 'qos sketch' section: the
     bench_weak_scaling JSON's ``qos_sketch/p<procs>/...`` entries. The
@@ -413,6 +527,25 @@ def main():
         "(bytes/proc, events/sec/proc at the 10^5-proc rung) must be "
         "present and well-formed (report-only: values never gate)",
     )
+    ap.add_argument(
+        "--weak-scaling-baseline",
+        help="committed bench_weak_scaling baseline JSON: gates the "
+        "memory_diet bytes/proc rungs in --weak-scaling against it "
+        "(growth beyond --diet-threshold fails; throughput never gates)",
+    )
+    ap.add_argument(
+        "--diet-threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional bytes/proc growth vs the weak-scaling "
+        "baseline (default 0.25)",
+    )
+    ap.add_argument(
+        "--multiproc",
+        help="bench_multiproc JSON whose 'multiproc' section (windowed "
+        "QoS metrics per mode x procs cell, per-message stage sketches) "
+        "must be present and well-formed (report-only: values never gate)",
+    )
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -466,6 +599,34 @@ def main():
             failed = True
             for f in diet_failures:
                 print(f"bench-diff: memory-diet section check failed: {f}", file=sys.stderr)
+
+    if args.weak_scaling_baseline:
+        print("== memory diet bytes/proc bar (gated) ==")
+        if not args.weak_scaling:
+            failed = True
+            print(
+                "bench-diff: --weak-scaling-baseline needs --weak-scaling "
+                "for the current run",
+                file=sys.stderr,
+            )
+        else:
+            gate_failures, gate_compared = memory_diet_gate(
+                args.weak_scaling, args.weak_scaling_baseline, args.diet_threshold
+            )
+            if gate_compared == 0 and not gate_failures:
+                print("bench-diff: no bytes/proc rungs in common — bar not enforced")
+            if gate_failures:
+                failed = True
+                for f in gate_failures:
+                    print(f"bench-diff: memory-diet bar failed: {f}", file=sys.stderr)
+
+    if args.multiproc:
+        print("== multiproc section (report-only) ==")
+        mp_failures = multiproc_check(args.multiproc)
+        if mp_failures:
+            failed = True
+            for f in mp_failures:
+                print(f"bench-diff: multiproc section check failed: {f}", file=sys.stderr)
 
     if args.qos_sketch:
         print("== qos sketch section (report-only) ==")

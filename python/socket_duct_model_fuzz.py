@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Model-check the socket duct's framing/backlog/flush state machine.
+
+`rust/src/conduit/socket.rs` moves best-effort messages between real OS
+processes over nonblocking unix-domain streams. Three pieces of state
+machinery there are easy to get subtly wrong and hard to exercise
+deterministically from Rust tests (the kernel picks write-acceptance and
+read-chunk boundaries):
+
+* the **send window**: each directed channel may hold at most `capacity`
+  frames that have not yet been fully written to the OS; a put that
+  would exceed the window is *dropped* (that is the best-effort
+  semantics — the paper's "send buffer full" failure);
+* the **flush loop**: frames are written front-to-back per link, each
+  possibly accepted by the OS in several partial writes; a frame's slot
+  in the window frees only when its last byte is accepted;
+* the **parser**: the receiver sees an arbitrary re-chunking of the
+  byte stream and must reassemble `[len][wire id][touch][t_sent][payload]`
+  frames exactly, over any fragmentation.
+
+This script fuzzes a faithful Python model of that machinery against a
+trivial oracle (a lossless in-order queue of the frames the sender
+*accepted*), with the kernel's nondeterminism replaced by seeded random
+partial-write acceptance and read-chunk sizes:
+
+    invariant 1: the receiver decodes exactly the accepted frames, in
+                 order, bytewise intact (wire id, touch, payload);
+    invariant 2: a put is dropped iff its channel's window held
+                 `capacity` unflushed frames at put time;
+    invariant 3: the per-channel pending count never exceeds capacity
+                 and always returns to 0 once the link drains;
+    invariant 4: killing the link mid-frame loses only frames that were
+                 still (partially) backlogged — everything fully flushed
+                 before death still parses on the receiver side.
+
+Run before porting changes into the Rust flush/parse logic:
+
+    python3 python/socket_duct_model_fuzz.py            # 2000 scenarios
+    python3 python/socket_duct_model_fuzz.py --trials 20000
+"""
+
+import argparse
+import random
+import struct
+import sys
+
+HEADER = struct.Struct("<IQQQ")  # len (of remainder), wire_id, touch, t_sent
+
+
+def encode_frame(wire_id, touch, t_sent, payload):
+    return HEADER.pack(24 + len(payload), wire_id, touch, t_sent) + payload
+
+
+def parse_frames(buf):
+    """Consume complete frames from the front of `buf` (a bytearray).
+    Returns list of (wire_id, touch, t_sent, payload). Mirrors the Rust
+    parser: a partial header or partial payload consumes nothing."""
+    out = []
+    at = 0
+    while len(buf) - at >= 4:
+        (length,) = struct.unpack_from("<I", buf, at)
+        assert length >= 24, "frame length below header size"
+        if len(buf) - at < 4 + length:
+            break
+        wire_id, touch, t_sent = struct.unpack_from("<QQQ", buf, at + 4)
+        payload = bytes(buf[at + 28 : at + 4 + length])
+        out.append((wire_id, touch, t_sent, payload))
+        at += 4 + length
+    del buf[:at]
+    return out
+
+
+class ModelLink:
+    """Sender-side model: bounded per-channel windows over one shared
+    backlog, partial-write flush, and a wire capturing accepted bytes."""
+
+    def __init__(self, capacities):
+        self.capacities = capacities  # per-channel window sizes
+        self.pending = [0] * len(capacities)
+        self.backlog = []  # list of [chan, bytes, written]
+        self.wire = bytearray()  # bytes the "OS" accepted
+        self.alive = True
+        self.os_budget = 0  # bytes the OS will accept before WouldBlock
+
+    def flush(self):
+        while self.alive and self.backlog:
+            chan, data, written = self.backlog[0]
+            if self.os_budget == 0:
+                return  # WouldBlock
+            n = min(self.os_budget, len(data) - written)
+            self.wire += data[written : written + n]
+            self.os_budget -= n
+            written += n
+            if written < len(data):
+                self.backlog[0][2] = written
+                return
+            self.backlog.pop(0)
+            self.pending[chan] -= 1
+
+    def put(self, chan, frame):
+        """Returns True if accepted into the channel, False if dropped."""
+        if not self.alive:
+            return False
+        self.flush()
+        if self.pending[chan] >= self.capacities[chan]:
+            return False
+        self.pending[chan] += 1
+        self.backlog.append([chan, frame, 0])
+        self.flush()
+        return True
+
+    def kill(self):
+        """Peer died: drop the link and everything still backlogged."""
+        self.alive = False
+        for chan, _, _ in self.backlog:
+            self.pending[chan] -= 1
+        self.backlog.clear()
+
+
+def run_scenario(seed):
+    rng = random.Random(seed)
+    n_chans = rng.randint(1, 4)
+    capacities = [rng.randint(1, 4) for _ in range(n_chans)]
+    link = ModelLink(capacities)
+
+    accepted = [[] for _ in range(n_chans)]  # oracle: frames put() accepted
+    decoded = [[] for _ in range(n_chans)]
+    rx = bytearray()
+    touch = 0
+    killed = False
+    fully_flushed = 0  # frames whose last byte hit the wire, pre-kill
+
+    ops = rng.randint(10, 120)
+    for _ in range(ops):
+        op = rng.random()
+        if op < 0.55 and link.alive:
+            chan = rng.randrange(n_chans)
+            touch += 1
+            payload = bytes(rng.randrange(256) for _ in range(rng.randint(0, 40)))
+            frame = encode_frame(chan, touch, 0, payload)
+            window_full = link.pending[chan] >= capacities[chan]
+            # Model put(): flush first, then the window check.
+            link.flush()
+            window_full_after_flush = link.pending[chan] >= capacities[chan]
+            ok = link.put(chan, frame)
+            # invariant 2: dropped iff window full (after the flush try).
+            assert ok != window_full_after_flush, (
+                f"seed {seed}: drop disagreed with window state "
+                f"(full_before={window_full} full={window_full_after_flush} ok={ok})"
+            )
+            if ok:
+                accepted[chan].append((chan, touch, 0, payload))
+        elif op < 0.75:
+            # The OS frees some send-buffer space.
+            link.os_budget += rng.randint(1, 64)
+            link.flush()
+        elif op < 0.95:
+            # Receiver reads a random chunk off the wire.
+            n = min(len(link.wire), rng.randint(1, 48))
+            rx += link.wire[:n]
+            del link.wire[:n]
+            for wire_id, t, ts, payload in parse_frames(rx):
+                decoded[wire_id].append((wire_id, t, ts, payload))
+        elif not killed and rng.random() < 0.15:
+            # Count frames already fully on the wire, then kill the peer.
+            fully_flushed = sum(len(a) for a in accepted) - len(link.backlog)
+            link.kill()
+            killed = True
+        # invariant 3 (upper half): windows never overfill.
+        for c in range(n_chans):
+            assert 0 <= link.pending[c] <= capacities[c], f"seed {seed}"
+
+    # Drain everything that can still drain.
+    link.os_budget += 10**9
+    link.flush()
+    rx += link.wire
+    for wire_id, t, ts, payload in parse_frames(rx):
+        decoded[wire_id].append((wire_id, t, ts, payload))
+
+    if not killed:
+        # invariant 3 (lower half): drained link has no pending frames.
+        assert link.pending == [0] * n_chans, f"seed {seed}: {link.pending}"
+        # invariant 1: exact in-order delivery of accepted frames.
+        assert decoded == accepted, f"seed {seed}: delivery mismatch"
+    else:
+        # invariant 4: fully flushed pre-kill frames all parse; nothing
+        # not accepted ever appears; order and content still exact.
+        got = sum(len(d) for d in decoded)
+        assert got >= fully_flushed, f"seed {seed}: lost a flushed frame"
+        for chan in range(n_chans):
+            assert decoded[chan] == accepted[chan][: len(decoded[chan])], (
+                f"seed {seed}: post-kill prefix mismatch on chan {chan}"
+            )
+    assert len(rx) < 4 + 24 + 40 + 1, f"seed {seed}: residue beyond one partial frame"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trials", type=int, default=2000)
+    ap.add_argument("--base-seed", type=int, default=0)
+    args = ap.parse_args()
+    for i in range(args.trials):
+        run_scenario(args.base_seed + i)
+    print(f"socket-duct model fuzz: {args.trials} scenarios OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

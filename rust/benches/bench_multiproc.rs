@@ -1,0 +1,140 @@
+//! Multi-process executor bench: real OS worker processes wired by
+//! unix-socket ducts, sketch-merged windowed QoS, and the per-message
+//! serialize/enqueue/transport/drain stage breakdown the socket hub
+//! records — the numbers that calibrate the DES `LinkModel` against
+//! this box's actual IPC stack.
+//!
+//! Hardware numbers are wall-clock measurements on whatever box runs
+//! this — too noisy to gate on magnitude. The JSON section this bench
+//! emits (`BENCH_multiproc.json`, with `--json`) is therefore
+//! **report-only**: `python/bench_diff.py --multiproc` checks the
+//! "multiproc" section is present and well-formed (all four QoS metrics
+//! and all four stage sketches), and prints the medians for the CI log,
+//! but never fails on their values.
+//!
+//! Pass `--smoke` (or `EBCOMM_SMOKE=1`) for the reduced CI grid: the
+//! sync-vs-best-effort smoke cells plus the partition-heal attribution
+//! probe. `EBCOMM_PROCS` caps the real process count (CI pins it to the
+//! core count; shards oversubscribe onto the capped workers).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ebcomm::coordinator::{run_multiproc_sweep, MultiprocExperiment};
+use ebcomm::qos::MetricName;
+use ebcomm::sim::AsyncMode;
+use ebcomm::util::benchjson::BenchJson;
+use ebcomm::util::fmt_ns;
+
+/// Prints one line per distribution and accumulates "multiproc …"
+/// entries (the section bench_diff.py validates) for `--json`.
+#[derive(Default)]
+struct Recorder {
+    json: BenchJson,
+}
+
+impl Recorder {
+    fn record(&mut self, name: &str, unit: &'static str, mean: f64, median: f64, p95: f64) {
+        println!("{name:<56} median {median:>14.1} {unit}");
+        self.json.push(name, unit, mean, median, p95);
+    }
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
+        || std::env::var("EBCOMM_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let json = args.iter().any(|a| a == "--json")
+        || std::env::var("EBCOMM_BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let mut rec = Recorder::default();
+    let binary = Some(PathBuf::from(env!("CARGO_BIN_EXE_ebcomm")));
+
+    // ---- Mode grid: sync vs best-effort across real processes.
+    let mut exp = MultiprocExperiment::smoke();
+    exp.binary = binary.clone();
+    if !smoke {
+        exp.modes = vec![
+            AsyncMode::Sync,
+            AsyncMode::RollingBarrier,
+            AsyncMode::FixedBarrier,
+            AsyncMode::BestEffort,
+        ];
+        exp.proc_counts = vec![2, 4, 8];
+        exp.replicates = 3;
+        exp.run_for = Duration::from_millis(300);
+    }
+    eprintln!(
+        "[multiproc] {}: modes {:?} x procs {:?} x {} replicates ...",
+        exp.name, exp.modes, exp.proc_counts, exp.replicates
+    );
+    let results = run_multiproc_sweep(&exp).expect("multiproc sweep failed");
+    for &mode in &exp.modes {
+        for &procs in &exp.proc_counts {
+            let qos = results.merged_qos(mode, procs);
+            let used: Vec<usize> =
+                results.select(mode, procs).iter().map(|p| p.procs_used).collect();
+            eprintln!(
+                "[multiproc] mode {} x {procs} shards: {} windows on {used:?} workers",
+                mode.index(),
+                qos.window_count(),
+            );
+            let label =
+                |metric: &str| format!("multiproc {metric} ({procs} procs, mode {})", mode.index());
+            for (metric, name, unit) in [
+                (MetricName::SimstepPeriod, "period", "ns"),
+                (MetricName::WalltimeLatency, "walltime latency", "ns"),
+                (MetricName::DeliveryFailureRate, "delivery failure", "rate"),
+                (MetricName::DeliveryClumpiness, "clumpiness", "rate"),
+            ] {
+                rec.record(
+                    &label(name),
+                    unit,
+                    qos.approx_mean(metric),
+                    qos.median(metric),
+                    qos.p95(metric),
+                );
+            }
+            let rates = results.rates(mode, procs);
+            let rate = rates.iter().sum::<f64>() / rates.len().max(1) as f64;
+            rec.record(&label("update rate"), "Hz", rate, rate, rate);
+        }
+    }
+
+    // ---- Stage breakdown: where a cross-process message spends time.
+    let stages = results.merged_stages();
+    for (name, sketch) in stages.named() {
+        rec.record(
+            &format!("multiproc stage {name}"),
+            "ns",
+            sketch.approx_mean(),
+            sketch.median(),
+            sketch.p95(),
+        );
+        eprintln!(
+            "[multiproc] stage {name:<10} median {} p95 {} (n={})",
+            fmt_ns(sketch.median()),
+            fmt_ns(sketch.p95()),
+            sketch.count(),
+        );
+    }
+
+    // ---- Partition-heal probe: phase-attributed failure across procs.
+    let mut probe = MultiprocExperiment::scenario_probe();
+    probe.binary = binary;
+    eprintln!("[multiproc] {}: partition attribution probe ...", probe.name);
+    let probe_results = run_multiproc_sweep(&probe).expect("multiproc probe failed");
+    let qos = probe_results.merged_qos(AsyncMode::BestEffort, probe.proc_counts[0]);
+    let quiet = qos.median_where(MetricName::DeliveryFailureRate, |ph| ph.is_quiescent());
+    let fault = qos.median_where(MetricName::DeliveryFailureRate, |ph| !ph.is_quiescent());
+    rec.record("multiproc baseline-phase delivery failure", "rate", quiet, quiet, quiet);
+    rec.record("multiproc partition-phase delivery failure", "rate", fault, fault, fault);
+
+    if json {
+        match rec.json.write("bench_multiproc", "BENCH_multiproc.json") {
+            Ok(p) => eprintln!("wrote {}", p.display()),
+            Err(e) => eprintln!("failed to write BENCH_multiproc.json: {e}"),
+        }
+    }
+    eprintln!("bench_multiproc done in {:.1}s", t0.elapsed().as_secs_f64());
+}

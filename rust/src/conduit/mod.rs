@@ -21,12 +21,20 @@
 //! instrumentation and [`crate::util::ring::RingBuffer`] storage so the
 //! QoS layer is backend-agnostic.
 //!
+//! [`socket`] provides the *real* inter-process transport: nonblocking
+//! unix-domain stream sockets multiplexed by a per-process
+//! [`SocketHub`], carrying [`WireEnvelope`]s between OS processes with
+//! genuine best-effort drops (kernel buffer full, peer dead) and a
+//! per-stage latency breakdown ([`StageLatencies`]) for calibrating the
+//! DES link model.
+//!
 //! [`pooling`] and [`aggregation`] provide the message-consolidation
 //! helpers the paper's workloads rely on (§II-A).
 
 pub mod aggregation;
 pub mod intra;
 pub mod pooling;
+pub mod socket;
 pub mod stats;
 pub mod thread;
 
@@ -127,6 +135,7 @@ pub trait OutletLike<T> {
 }
 
 pub use intra::{intra_duct, IntraInlet, IntraOutlet};
+pub use socket::{SocketHub, SocketInlet, SocketOutlet, StageLatencies, WireEnvelope};
 pub use thread::{thread_duct, ThreadInlet, ThreadOutlet};
 
 #[cfg(test)]

@@ -16,12 +16,14 @@
 //! the ordinal cross-validation the reproduction exists for — the DES
 //! predicts, hardware confirms.
 
+use std::io;
+use std::path::PathBuf;
 use std::time::Duration;
 
-use crate::conduit::ChannelConfig;
-use crate::exec::{run_threads, ThreadExecConfig};
+use crate::conduit::{ChannelConfig, StageLatencies};
+use crate::exec::{run_multiproc, run_threads, MultiprocConfig, ThreadExecConfig};
 use crate::net::{PlacementKind, Topology};
-use crate::qos::{MetricName, ReplicateQos, SnapshotSchedule};
+use crate::qos::{MetricName, ReplicateQos, SketchQos, SnapshotSchedule};
 use crate::sim::AsyncMode;
 use crate::util::parallel::{log_telemetry, parallel_map_lpt};
 use crate::util::rng::Xoshiro256;
@@ -297,9 +299,240 @@ pub fn run_hardware(exp: &HardwareExperiment) -> HardwareResults {
     HardwareResults { points }
 }
 
+// ---- multi-process sweeps -------------------------------------------
+
+/// A real-process experiment: modes × process counts × replicates over
+/// [`crate::exec::run_multiproc`]. Each cell runs `procs` graph-coloring
+/// shards partitioned across (up to) `procs` real OS worker processes
+/// wired by unix-socket ducts, so best-effort sends fail against real
+/// kernel buffers and real dead peers. `EBCOMM_PROCS` caps the spawned
+/// process count, so big grids oversubscribe shards per process exactly
+/// like the thread sweeps oversubscribe shards per thread.
+#[derive(Clone, Debug)]
+pub struct MultiprocExperiment {
+    pub name: &'static str,
+    pub modes: Vec<AsyncMode>,
+    /// Shard counts; each cell requests one worker process per shard
+    /// (before the `EBCOMM_PROCS` cap).
+    pub proc_counts: Vec<usize>,
+    pub replicates: usize,
+    /// Wall-clock run window per cell (extended to cover `schedule`).
+    pub run_for: Duration,
+    /// Wall-clock QoS snapshot schedule, captured inside every worker.
+    pub schedule: SnapshotSchedule,
+    /// Scripted fault shape, built per cell scale; `None` = fault-free.
+    pub scenario_kind: Option<ScenarioKind>,
+    pub added_work_units: u64,
+    pub channel: ChannelConfig,
+    pub simels_per_shard: usize,
+    pub degrade_spin_units: u64,
+    pub seed: u64,
+    /// Worker binary override (tests and benches pass
+    /// `env!("CARGO_BIN_EXE_ebcomm")`); `None` resolves `EBCOMM_MP_BIN`
+    /// or the current executable.
+    pub binary: Option<PathBuf>,
+}
+
+impl MultiprocExperiment {
+    fn mp_base(name: &'static str) -> Self {
+        Self {
+            name,
+            modes: vec![AsyncMode::Sync, AsyncMode::BestEffort],
+            proc_counts: vec![2, 4],
+            replicates: 1,
+            run_for: Duration::from_millis(180),
+            schedule: SnapshotSchedule::hardware_smoke(),
+            scenario_kind: None,
+            added_work_units: 0,
+            channel: ChannelConfig::qos(),
+            simels_per_shard: 4,
+            degrade_spin_units: 4_000,
+            seed: 0x4D50,
+            binary: None,
+        }
+    }
+
+    /// CI-smoke grid: sync vs best-effort at 2 and 4 shards — with
+    /// `EBCOMM_PROCS=2` the 4-shard cells oversubscribe two shards per
+    /// process, exercising both intra-process and socket ducts.
+    pub fn smoke() -> Self {
+        Self::mp_base("mp_smoke")
+    }
+
+    /// Scenario-driven real-process probe: the allocation splits into
+    /// two cliques mid-run and heals ([`ScenarioKind::PartitionHeal`]),
+    /// so cross-process sends are force-failed while the partition is
+    /// up and QoS windows carry the phase tags to prove it.
+    pub fn scenario_probe() -> Self {
+        let mut e = Self::mp_base("mp_partition_heal");
+        e.modes = vec![AsyncMode::BestEffort];
+        e.proc_counts = vec![4];
+        e.scenario_kind = Some(ScenarioKind::PartitionHeal);
+        e
+    }
+}
+
+/// One multi-process sweep cell's measurements.
+#[derive(Clone, Debug)]
+pub struct MultiprocPoint {
+    pub mode: AsyncMode,
+    /// Requested process count (= shard count for the cell).
+    pub procs: usize,
+    pub replicate: usize,
+    /// Worker processes actually spawned (after `EBCOMM_PROCS` capping).
+    pub procs_used: usize,
+    pub updates: Vec<u64>,
+    /// Mean per-shard update rate over measured worker spans (Hz).
+    pub update_rate_hz: f64,
+    /// Whole-run delivery failure fraction.
+    pub failure_rate: f64,
+    /// Measured wall span (mean per-worker first→last step), ns.
+    pub span_ns: Nanos,
+    /// Sketch-merged windowed QoS across every worker process — all
+    /// four paper metrics, queryable per channel/sender/phase.
+    pub qos: SketchQos,
+    /// Sketch-merged serialize/enqueue/transport/drain breakdown.
+    pub stages: StageLatencies,
+}
+
+/// All cells from one [`MultiprocExperiment`], grid order
+/// (proc count, mode, replicate).
+#[derive(Clone, Debug, Default)]
+pub struct MultiprocResults {
+    pub points: Vec<MultiprocPoint>,
+}
+
+impl MultiprocResults {
+    /// Cells of one (mode, procs) treatment, replicate order.
+    pub fn select(&self, mode: AsyncMode, procs: usize) -> Vec<&MultiprocPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.mode == mode && p.procs == procs)
+            .collect()
+    }
+
+    /// Per-replicate update rates for one treatment.
+    pub fn rates(&self, mode: AsyncMode, procs: usize) -> Vec<f64> {
+        self.select(mode, procs).iter().map(|p| p.update_rate_hz).collect()
+    }
+
+    /// Per-replicate whole-run failure rates for one treatment.
+    pub fn failure_rates(&self, mode: AsyncMode, procs: usize) -> Vec<f64> {
+        self.select(mode, procs).iter().map(|p| p.failure_rate).collect()
+    }
+
+    /// One treatment's QoS sketches merged across replicates.
+    pub fn merged_qos(&self, mode: AsyncMode, procs: usize) -> SketchQos {
+        let mut q = SketchQos::new();
+        for p in self.select(mode, procs) {
+            q.merge(&p.qos);
+        }
+        q
+    }
+
+    /// Stage breakdown merged across the whole grid.
+    pub fn merged_stages(&self) -> StageLatencies {
+        let mut s = StageLatencies::new();
+        for p in &self.points {
+            s.merge(&p.stages);
+        }
+        s
+    }
+}
+
+/// Run one multi-process cell: compile the scenario for this scale and
+/// fan `procs` shards over real worker processes.
+fn run_multiproc_cell(
+    exp: &MultiprocExperiment,
+    mode: AsyncMode,
+    procs: usize,
+    rep: usize,
+) -> io::Result<MultiprocPoint> {
+    let seed = exp
+        .seed
+        .wrapping_add((rep as u64) << 32)
+        .wrapping_add((mode.index() as u64) << 16)
+        .wrapping_add(procs as u64);
+    let scenario = match exp.scenario_kind {
+        Some(kind) => kind.build(exp.run_for.as_nanos() as Nanos, procs, procs),
+        None => Default::default(),
+    };
+    let result = run_multiproc(
+        MultiprocConfig {
+            mode,
+            run_for: exp.run_for,
+            added_work_units: exp.added_work_units,
+            channel: exp.channel,
+            procs: Some(procs),
+            snapshots: Some(exp.schedule),
+            scenario,
+            degrade_spin_units: exp.degrade_spin_units,
+            seed,
+            workload: crate::workloads::GcConfig {
+                simels_per_proc: exp.simels_per_shard,
+                ..Default::default()
+            },
+            binary: exp.binary.clone(),
+            ..Default::default()
+        },
+        procs,
+    )?;
+    Ok(MultiprocPoint {
+        mode,
+        procs,
+        replicate: rep,
+        procs_used: result.procs,
+        update_rate_hz: result.update_rate_per_cpu_hz(),
+        failure_rate: result.overall_failure_rate(),
+        span_ns: result.elapsed.as_nanos() as Nanos,
+        updates: result.updates,
+        qos: result.qos,
+        stages: result.stages,
+    })
+}
+
+/// Run a multi-process experiment's full grid. Like [`run_hardware`],
+/// cells default to one at a time (each already owns real processes);
+/// the first cell error aborts the sweep.
+pub fn run_multiproc_sweep(exp: &MultiprocExperiment) -> io::Result<MultiprocResults> {
+    let mut cells: Vec<(usize, AsyncMode, usize)> = Vec::new();
+    for &procs in &exp.proc_counts {
+        for &mode in &exp.modes {
+            for rep in 0..exp.replicates {
+                cells.push((procs, mode, rep));
+            }
+        }
+    }
+    let (points, timings) = parallel_map_lpt(
+        hw_sweep_workers(),
+        &cells,
+        |&(procs, _, _)| procs as u64,
+        |&(procs, mode, rep)| run_multiproc_cell(exp, mode, procs, rep),
+    );
+    log_telemetry(exp.name, &timings);
+    let points: io::Result<Vec<MultiprocPoint>> = points.into_iter().collect();
+    Ok(MultiprocResults { points: points? })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn multiproc_presets_are_shaped_for_their_probes() {
+        let s = MultiprocExperiment::smoke();
+        assert!(s.modes.contains(&AsyncMode::Sync));
+        assert!(s.proc_counts.iter().all(|&n| n <= 4), "CI-box sized");
+
+        let p = MultiprocExperiment::scenario_probe();
+        assert_eq!(p.scenario_kind, Some(ScenarioKind::PartitionHeal));
+        for &n in &p.proc_counts {
+            p.scenario_kind
+                .unwrap()
+                .build(p.run_for.as_nanos() as Nanos, n, n)
+                .validate(n);
+        }
+    }
 
     #[test]
     fn presets_are_shaped_for_their_probes() {

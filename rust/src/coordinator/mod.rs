@@ -9,7 +9,10 @@ pub mod runner;
 pub use experiment::{
     BenchmarkExperiment, QosExperiment, ScenarioExperiment, ScenarioKind, Workload,
 };
-pub use hardware::{run_hardware, HardwareExperiment, HardwarePoint, HardwareResults};
+pub use hardware::{
+    run_hardware, run_multiproc_sweep, HardwareExperiment, HardwarePoint, HardwareResults,
+    MultiprocExperiment, MultiprocPoint, MultiprocResults,
+};
 pub use runner::{
     run_benchmark, run_benchmark_serial, run_benchmark_with_workers, run_qos,
     run_qos_with_workers, run_scenario, run_scenario_with_workers, ScenarioPoint,

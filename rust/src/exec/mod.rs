@@ -11,6 +11,12 @@
 //!   on hardware runs), shard-multiplexed oversubscription for 64–256
 //!   shard runs on small-core boxes (`EBCOMM_THREADS` caps the real
 //!   thread count), and scripted fault scenarios;
+//! * [`multiproc::run_multiproc`] goes one step further down the paper's
+//!   stack: shards partitioned across real OS *processes* wired by
+//!   nonblocking unix-socket ducts ([`crate::conduit::socket`]), so
+//!   best-effort sends genuinely fail against kernel buffers and dead
+//!   peers, with sketch-merged QoS and a serialize/enqueue/transport/
+//!   drain stage latency breakdown per message;
 //! * [`hw_faults::HwFaultTimeline`] compiles a
 //!   [`crate::faults::FaultScenario`] into wall-clock onset/expiry
 //!   checkpoints the worker loops consult between simsteps.
@@ -24,7 +30,9 @@
 //! bounds only.
 
 pub mod hw_faults;
+pub mod multiproc;
 pub mod threads;
 
 pub use hw_faults::HwFaultTimeline;
+pub use multiproc::{run_multiproc, ChildReport, MultiprocConfig, MultiprocResult};
 pub use threads::{run_threads, ThreadExecConfig, ThreadExecResult};

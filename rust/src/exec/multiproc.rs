@@ -1,0 +1,1303 @@
+//! On-hardware multi-process executor.
+//!
+//! The paper's headline experiments run best-effort communication
+//! *across process boundaries* on real HPC hardware. This executor is
+//! that modality's hardware counterpart in this repo (the analogue of
+//! Conduit's MPI backend): shards are partitioned across real OS
+//! processes connected by nonblocking unix-socket ducts
+//! ([`crate::conduit::socket`]), so a best-effort put genuinely fails
+//! when the peer's buffer is full or the peer process is gone — no
+//! simulation in the message path at all.
+//!
+//! # Topology
+//!
+//! The coordinator process spawns `n_procs` worker processes by
+//! re-executing the `ebcomm` binary with the hidden `__mp-child`
+//! subcommand (the [`ChildSpec`] rides along hex-encoded in
+//! `EBCOMM_MP_SPEC`). Workers own contiguous shard blocks (the same
+//! `rank * n_procs / n_shards` assignment the thread executor uses) and
+//! connect to each other with a full socket mesh under a private
+//! temporary directory: worker `r` listens on `data-r.sock`, dials every
+//! lower rank, and accepts every higher rank (each dialer introduces
+//! itself with its rank, so the mesh is deadlock-free without any
+//! coordination). Channels between shards in the *same* process use
+//! in-process [`crate::conduit::intra_duct`]s; cross-process channels
+//! use socket ducts keyed by the global flat channel id.
+//!
+//! A blocking control socket per worker carries the tiny coordination
+//! protocol: `HELLO` (worker ready), `GO` (start the clock), `BARRIER` /
+//! `RELEASE` (parent-mediated barrier consensus for modes 0–2, with the
+//! stop decision OR-folded across workers so every process exits the
+//! same generation — the cross-process equivalent of the thread
+//! executor's leader-latch protocol), and `RESULT` (the worker's
+//! end-of-run report blob).
+//!
+//! # Measurement
+//!
+//! Each worker reuses the wall-clock [`SnapshotSchedule`] machinery to
+//! bracket counter tranches per channel into [`SnapshotWindow`]s —
+//! pairing each shard's inlet and outlet for the same peer relationship,
+//! i.e. each process observes its own endpoints, exactly the paper's
+//! per-process snapshot apparatus — and folds them into a mergeable
+//! [`SketchQos`] carrying all four paper QoS metrics. The coordinator
+//! merges every worker's sketches (that is what the sketches were built
+//! for) plus the socket hub's serialize/enqueue/transport/drain
+//! [`StageLatencies`]. Fault scenarios compile to the same wall-clock
+//! [`HwFaultTimeline`] the thread executor consults, so degrade and
+//! partition scenarios drive real processes.
+//!
+//! Wall-clock runs are **never** golden-gated; all assertions on them
+//! are tolerance- or ordinal-based (`rust/tests/golden/README.md`).
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::conduit::{
+    intra_duct, ChannelConfig, ChannelStats, CounterTranche, InletLike, IntraInlet, IntraOutlet,
+    OutletLike, SendOutcome, SocketHub, SocketInlet, SocketOutlet, StageLatencies, WireEnvelope,
+};
+use crate::faults::{FaultScenario, ScenarioPhase};
+use crate::net::{PlacementKind, Topology};
+use crate::qos::{QosObservation, SketchQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
+use crate::sim::{AsyncMode, Persist, SnapError, SnapReader, SnapWriter};
+use crate::util::ring::Overflow;
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::Nanos;
+use crate::workloads::{
+    reciprocal_layer, ChannelSpec, GcConfig, GcMsg, GraphColoringShard, ShardWorkload, SpecIndex,
+    WorkUnitSpinner,
+};
+
+use super::hw_faults::HwFaultTimeline;
+
+// Control-protocol tags (one blocking stream per worker).
+const MSG_HELLO: u8 = 1;
+const MSG_BARRIER: u8 = 2;
+const MSG_RESULT: u8 = 3;
+const MSG_GO: u8 = 10;
+const MSG_RELEASE: u8 = 11;
+
+/// Mesh/handshake setup budget.
+const SETUP_TIMEOUT: Duration = Duration::from_secs(30);
+/// Extra wall time the coordinator grants workers past the nominal run
+/// (and workers grant the coordinator on barrier waits) before giving
+/// up — generous for heavily loaded CI boxes.
+const RUN_GRACE: Duration = Duration::from_secs(60);
+
+/// Hidden CLI subcommand dispatching a spawned worker process into
+/// [`child_main`].
+pub const CHILD_SUBCOMMAND: &str = "__mp-child";
+
+/// Configuration for a multi-process hardware run. Mirrors
+/// [`super::threads::ThreadExecConfig`], with processes instead of
+/// threads and a concrete (spawnable) workload description.
+#[derive(Clone, Debug)]
+pub struct MultiprocConfig {
+    pub mode: AsyncMode,
+    /// Real wall-clock run duration. Extended automatically to cover
+    /// `snapshots` when the schedule's runtime is longer.
+    pub run_for: Duration,
+    /// Synthetic work units spun per update (real mt19937 calls).
+    pub added_work_units: u64,
+    /// Channel configuration. Socket ducts always reject on overflow;
+    /// `capacity` bounds the per-channel send window.
+    pub channel: ChannelConfig,
+    /// Mode-1 chunk duration.
+    pub rolling_chunk: Duration,
+    /// Mode-2 epoch.
+    pub fixed_epoch: Duration,
+    /// Worker processes to host the shards: `None` = one per shard.
+    /// Clamped to the shard count; `EBCOMM_PROCS` caps it further (CI
+    /// boxes pin it to the core count).
+    pub procs: Option<usize>,
+    /// Wall-clock QoS snapshot windows; `None` disables windowed capture.
+    pub snapshots: Option<SnapshotSchedule>,
+    /// Scripted fault timeline (wall-clock ns from run start; node
+    /// indices address shard ranks). Compiled per worker.
+    pub scenario: FaultScenario,
+    /// Spin units injected per update per unit of active degradation
+    /// (same semantics as the thread executor).
+    pub degrade_spin_units: u64,
+    pub seed: u64,
+    /// Workload the workers rebuild deterministically from the seed.
+    /// Graph coloring only for now: its messages are already `Vec<u8>`,
+    /// so they cross the wire without a serialization layer.
+    pub workload: GcConfig,
+    /// Worker binary override. `None` resolves `EBCOMM_MP_BIN`, then the
+    /// current executable (tests and benches pass
+    /// `env!("CARGO_BIN_EXE_ebcomm")` explicitly).
+    pub binary: Option<PathBuf>,
+}
+
+impl Default for MultiprocConfig {
+    fn default() -> Self {
+        Self {
+            mode: AsyncMode::BestEffort,
+            run_for: Duration::from_millis(200),
+            added_work_units: 0,
+            channel: ChannelConfig::qos(),
+            rolling_chunk: Duration::from_millis(10),
+            fixed_epoch: Duration::from_secs(1),
+            procs: None,
+            snapshots: None,
+            scenario: FaultScenario::default(),
+            degrade_spin_units: 4_000,
+            seed: 1,
+            workload: GcConfig {
+                simels_per_proc: 16,
+                ..GcConfig::default()
+            },
+            binary: None,
+        }
+    }
+}
+
+/// Resolve the worker-process count: the requested count (default one
+/// per shard), capped by `env_cap` (`EBCOMM_PROCS`), clamped to
+/// `[1, n_shards]`.
+fn resolve_procs(requested: Option<usize>, env_cap: Option<usize>, n_shards: usize) -> usize {
+    let mut p = requested.unwrap_or(n_shards).max(1);
+    if let Some(cap) = env_cap {
+        if cap >= 1 {
+            p = p.min(cap);
+        }
+    }
+    p.clamp(1, n_shards.max(1))
+}
+
+fn env_proc_cap() -> Option<usize> {
+    std::env::var("EBCOMM_PROCS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+}
+
+/// Worker process hosting shard `rank`: the contiguous-block assignment
+/// the thread executor uses for shard→thread multiplexing.
+fn proc_of(shard: usize, n_shards: usize, n_procs: usize) -> usize {
+    shard * n_procs / n_shards
+}
+
+/// Shard ranks worker `p` hosts: `[start, end)`.
+fn block_range(p: usize, n_shards: usize, n_procs: usize) -> (usize, usize) {
+    (
+        (p * n_shards).div_ceil(n_procs),
+        ((p + 1) * n_shards).div_ceil(n_procs),
+    )
+}
+
+// ---- spec / report wire blobs ---------------------------------------
+
+fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn from_hex(s: &str) -> Option<Vec<u8>> {
+    let s = s.trim();
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(s.get(2 * i..2 * i + 2)?, 16).ok())
+        .collect()
+}
+
+/// Everything a worker process needs to rebuild its world: shipped
+/// hex-encoded in `EBCOMM_MP_SPEC` (the spec is tiny — scenario events
+/// and scalars).
+#[derive(Clone, Debug)]
+pub struct ChildSpec {
+    pub rank: usize,
+    pub n_procs: usize,
+    pub n_shards: usize,
+    pub mode: AsyncMode,
+    /// Already extended to cover the snapshot schedule.
+    pub run_for_ns: u64,
+    pub added_work_units: u64,
+    pub channel_capacity: usize,
+    pub rolling_chunk_ns: u64,
+    pub fixed_epoch_ns: u64,
+    pub snapshots: Option<SnapshotSchedule>,
+    pub scenario: FaultScenario,
+    pub degrade_spin_units: u64,
+    pub seed: u64,
+    pub gc_colors: u8,
+    pub gc_b: f64,
+    pub gc_simels: usize,
+    pub gc_per_simel_cost_ns: f64,
+    pub gc_base_cost_ns: f64,
+}
+
+impl Persist for ChildSpec {
+    fn save(&self, w: &mut SnapWriter) {
+        self.rank.save(w);
+        self.n_procs.save(w);
+        self.n_shards.save(w);
+        self.mode.save(w);
+        self.run_for_ns.save(w);
+        self.added_work_units.save(w);
+        self.channel_capacity.save(w);
+        self.rolling_chunk_ns.save(w);
+        self.fixed_epoch_ns.save(w);
+        self.snapshots.save(w);
+        self.scenario.save(w);
+        self.degrade_spin_units.save(w);
+        self.seed.save(w);
+        self.gc_colors.save(w);
+        self.gc_b.save(w);
+        self.gc_simels.save(w);
+        self.gc_per_simel_cost_ns.save(w);
+        self.gc_base_cost_ns.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            rank: usize::load(r)?,
+            n_procs: usize::load(r)?,
+            n_shards: usize::load(r)?,
+            mode: AsyncMode::load(r)?,
+            run_for_ns: u64::load(r)?,
+            added_work_units: u64::load(r)?,
+            channel_capacity: usize::load(r)?,
+            rolling_chunk_ns: u64::load(r)?,
+            fixed_epoch_ns: u64::load(r)?,
+            snapshots: Option::load(r)?,
+            scenario: FaultScenario::load(r)?,
+            degrade_spin_units: u64::load(r)?,
+            seed: u64::load(r)?,
+            gc_colors: u8::load(r)?,
+            gc_b: f64::load(r)?,
+            gc_simels: usize::load(r)?,
+            gc_per_simel_cost_ns: f64::load(r)?,
+            gc_base_cost_ns: f64::load(r)?,
+        })
+    }
+}
+
+/// One worker's end-of-run report, shipped back over the control socket.
+#[derive(Clone, Debug)]
+pub struct ChildReport {
+    /// Worker (process) rank.
+    pub rank: usize,
+    /// Updates per hosted shard, block order.
+    pub updates: Vec<u64>,
+    pub attempted_sends: u64,
+    pub successful_sends: u64,
+    /// First-step→last-step span.
+    pub span_ns: u64,
+    /// Windowed paper QoS metrics, sketch form (mergeable).
+    pub qos: SketchQos,
+    /// Socket-duct stage latency breakdown (mergeable).
+    pub stages: StageLatencies,
+}
+
+impl Persist for ChildReport {
+    fn save(&self, w: &mut SnapWriter) {
+        self.rank.save(w);
+        self.updates.save(w);
+        self.attempted_sends.save(w);
+        self.successful_sends.save(w);
+        self.span_ns.save(w);
+        self.qos.save(w);
+        self.stages.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            rank: usize::load(r)?,
+            updates: Vec::load(r)?,
+            attempted_sends: u64::load(r)?,
+            successful_sends: u64::load(r)?,
+            span_ns: u64::load(r)?,
+            qos: SketchQos::load(r)?,
+            stages: StageLatencies::load(r)?,
+        })
+    }
+}
+
+fn encode_blob<T: Persist>(v: &T) -> Vec<u8> {
+    let mut w = SnapWriter::new();
+    v.save(&mut w);
+    w.finish()
+}
+
+fn decode_blob<T: Persist>(bytes: &[u8]) -> io::Result<T> {
+    let mut r = SnapReader::new(bytes).map_err(io::Error::other)?;
+    let v = T::load(&mut r).map_err(io::Error::other)?;
+    if !r.is_exhausted() {
+        return Err(io::Error::other("trailing bytes in wire blob"));
+    }
+    Ok(v)
+}
+
+// ---- endpoints -------------------------------------------------------
+
+/// Per-channel sender a worker owns: in-process for a co-hosted peer,
+/// socket duct for a remote one.
+enum MpInlet {
+    Local(IntraInlet<WireEnvelope>),
+    Remote(SocketInlet),
+}
+
+impl MpInlet {
+    fn put(&self, msg: WireEnvelope) -> SendOutcome {
+        match self {
+            MpInlet::Local(i) => i.put(msg),
+            MpInlet::Remote(i) => i.put(msg),
+        }
+    }
+    fn stats(&self) -> &ChannelStats {
+        match self {
+            MpInlet::Local(i) => i.stats(),
+            MpInlet::Remote(i) => i.stats(),
+        }
+    }
+}
+
+enum MpOutlet {
+    Local(IntraOutlet<WireEnvelope>),
+    Remote(SocketOutlet),
+}
+
+impl MpOutlet {
+    fn pull_all_into(&self, out: &mut Vec<WireEnvelope>) {
+        match self {
+            MpOutlet::Local(o) => out.extend(o.pull_all()),
+            MpOutlet::Remote(o) => o.pull_all_into(out),
+        }
+    }
+    fn stats(&self) -> &ChannelStats {
+        match self {
+            MpOutlet::Local(o) => o.stats(),
+            MpOutlet::Remote(o) => o.stats(),
+        }
+    }
+}
+
+/// Per-shard state a worker owns (see the thread executor's `ShardSlot`;
+/// the `usize` in each endpoint pair is the directed channel's global
+/// flat id).
+struct Slot {
+    rank: usize,
+    shard: GraphColoringShard,
+    rng: Xoshiro256,
+    spinner: WorkUnitSpinner,
+    inlets: Vec<(usize, MpInlet)>,
+    outlets: Vec<(usize, MpOutlet)>,
+    peers: Vec<usize>,
+    touch: Vec<TouchCounter>,
+    updates: u64,
+}
+
+// ---- control-stream helpers -----------------------------------------
+
+fn read_u8(s: &mut UnixStream) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    s.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u64(s: &mut UnixStream) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn ctrl_path(dir: &Path) -> PathBuf {
+    dir.join("ctrl.sock")
+}
+
+fn data_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("data-{rank}.sock"))
+}
+
+fn accept_deadline(listener: &UnixListener, deadline: Instant) -> io::Result<UnixStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "accept timed out"));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---- worker (child) side --------------------------------------------
+
+/// Entry point for a spawned worker process (hidden `__mp-child`
+/// subcommand). Reads its [`ChildSpec`] from `EBCOMM_MP_SPEC` and the
+/// rendezvous directory from `EBCOMM_MP_DIR`.
+pub fn child_main() -> Result<(), String> {
+    let spec_hex =
+        std::env::var("EBCOMM_MP_SPEC").map_err(|_| "EBCOMM_MP_SPEC not set".to_string())?;
+    let dir = std::env::var("EBCOMM_MP_DIR").map_err(|_| "EBCOMM_MP_DIR not set".to_string())?;
+    let blob = from_hex(&spec_hex).ok_or_else(|| "EBCOMM_MP_SPEC is not hex".to_string())?;
+    let spec: ChildSpec = decode_blob(&blob).map_err(|e| format!("bad child spec: {e}"))?;
+    let rank = spec.rank;
+    run_child(&spec, Path::new(&dir)).map_err(|e| format!("mp worker {rank}: {e}"))
+}
+
+/// Full mesh: listen on our own data socket, dial every lower rank
+/// (introducing ourselves with our rank), accept every higher rank.
+/// Returns the hub link id per peer worker.
+fn build_mesh(
+    dir: &Path,
+    rank: usize,
+    n_procs: usize,
+    hub: &SocketHub,
+) -> io::Result<Vec<Option<usize>>> {
+    let deadline = Instant::now() + SETUP_TIMEOUT;
+    let listener = UnixListener::bind(data_path(dir, rank))?;
+    let mut links: Vec<Option<usize>> = (0..n_procs).map(|_| None).collect();
+    for q in 0..rank {
+        let mut stream = loop {
+            match UnixStream::connect(data_path(dir, q)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        };
+        stream.write_all(&(rank as u64).to_le_bytes())?;
+        links[q] = Some(hub.add_link(stream)?);
+    }
+    for _ in rank + 1..n_procs {
+        let mut stream = accept_deadline(&listener, deadline)?;
+        stream.set_read_timeout(Some(SETUP_TIMEOUT))?;
+        let peer = read_u64(&mut stream)? as usize;
+        if peer <= rank || peer >= n_procs {
+            return Err(io::Error::other(format!("mesh peer {peer} out of range")));
+        }
+        stream.set_read_timeout(None)?;
+        links[peer] = Some(hub.add_link(stream)?);
+    }
+    Ok(links)
+}
+
+/// Rebuild every shard deterministically (same seed ⇒ same draw order as
+/// any other worker), keep our block, and wire endpoints: intra ducts
+/// within the block, socket ducts across blocks.
+fn build_slots(spec: &ChildSpec, hub: &SocketHub, links: &[Option<usize>]) -> Vec<Slot> {
+    let n = spec.n_shards;
+    let topo = Topology::new(n, PlacementKind::SingleNode);
+    let gc = GcConfig {
+        n_colors: spec.gc_colors,
+        b: spec.gc_b,
+        simels_per_proc: spec.gc_simels,
+        per_simel_cost_ns: spec.gc_per_simel_cost_ns,
+        base_cost_ns: spec.gc_base_cost_ns,
+    };
+    let mut rng = Xoshiro256::new(spec.seed);
+    let all: Vec<GraphColoringShard> =
+        (0..n).map(|r| GraphColoringShard::new(gc, &topo, r, &mut rng)).collect();
+    let specs: Vec<Vec<ChannelSpec>> = all.iter().map(|s| s.channels()).collect();
+    let index = SpecIndex::build(&specs);
+    let (lo, hi) = block_range(spec.rank, n, spec.n_procs);
+    let mine = |r: usize| r >= lo && r < hi;
+    let channel = ChannelConfig {
+        capacity: spec.channel_capacity,
+        overflow: Overflow::Reject,
+    };
+
+    type InletSlot = Option<(usize, MpInlet)>;
+    type OutletSlot = Option<(usize, MpOutlet)>;
+    let mut my_in: Vec<Vec<InletSlot>> =
+        (lo..hi).map(|r| (0..specs[r].len()).map(|_| None).collect()).collect();
+    let mut my_out: Vec<Vec<OutletSlot>> =
+        (lo..hi).map(|r| (0..specs[r].len()).map(|_| None).collect()).collect();
+    for (src, specs_p) in specs.iter().enumerate() {
+        for (src_ch, sp) in specs_p.iter().enumerate() {
+            let cid = index.flat_id(src, src_ch);
+            let dst = sp.peer;
+            match (mine(src), mine(dst)) {
+                (true, true) => {
+                    let dst_ch = index
+                        .lookup(dst, src, reciprocal_layer(sp.layer))
+                        .expect("reciprocal channel");
+                    let (inlet, outlet) = intra_duct::<WireEnvelope>(channel);
+                    my_in[src - lo][src_ch] = Some((cid, MpInlet::Local(inlet)));
+                    my_out[dst - lo][dst_ch] = Some((cid, MpOutlet::Local(outlet)));
+                }
+                (true, false) => {
+                    let link = links[proc_of(dst, n, spec.n_procs)].expect("link to peer proc");
+                    let inlet = hub.open_sender(link, cid as u64, channel);
+                    my_in[src - lo][src_ch] = Some((cid, MpInlet::Remote(inlet)));
+                }
+                (false, true) => {
+                    let dst_ch = index
+                        .lookup(dst, src, reciprocal_layer(sp.layer))
+                        .expect("reciprocal channel");
+                    let outlet = hub.open_receiver(cid as u64);
+                    my_out[dst - lo][dst_ch] = Some((cid, MpOutlet::Remote(outlet)));
+                }
+                (false, false) => {}
+            }
+        }
+    }
+
+    let mut slots = Vec::with_capacity(hi - lo);
+    for (rank, shard) in all.into_iter().enumerate() {
+        if !mine(rank) {
+            continue;
+        }
+        let inlets: Vec<_> =
+            std::mem::take(&mut my_in[rank - lo]).into_iter().map(Option::unwrap).collect();
+        let outlets: Vec<_> =
+            std::mem::take(&mut my_out[rank - lo]).into_iter().map(Option::unwrap).collect();
+        let n_ch = inlets.len();
+        slots.push(Slot {
+            rank,
+            shard,
+            rng: Xoshiro256::new(spec.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9)),
+            spinner: WorkUnitSpinner::new(spec.seed as u32 ^ rank as u32),
+            inlets,
+            outlets,
+            peers: specs[rank].iter().map(|s| s.peer).collect(),
+            touch: vec![TouchCounter::default(); n_ch],
+            updates: 0,
+        });
+    }
+    slots
+}
+
+/// Wall-clock snapshot-window state for one worker. Each shard's
+/// endpoint pair for channel `ch` (outgoing inlet + incoming outlet for
+/// the same peer relationship, both locally owned) brackets one
+/// [`SnapshotWindow`] per schedule window, absorbed straight into the
+/// mergeable sketch with the channel's global id and the shard's global
+/// rank as sender id.
+struct ChildWindows {
+    schedule: SnapshotSchedule,
+    next: usize,
+    open: bool,
+    phase_accum: ScenarioPhase,
+    /// `[slot][ch] -> (inlet open obs, outlet open obs)`.
+    open_obs: ObsPairs,
+    qos: SketchQos,
+}
+
+type ObsPairs = Vec<Vec<(QosObservation, QosObservation)>>;
+
+fn capture_slots(slots: &[Slot], t: Nanos, phase: ScenarioPhase) -> ObsPairs {
+    slots
+        .iter()
+        .map(|s| {
+            (0..s.inlets.len())
+                .map(|ch| {
+                    (
+                        QosObservation::capture_phased(
+                            s.inlets[ch].1.stats().tranche(),
+                            s.updates,
+                            t,
+                            phase,
+                        ),
+                        QosObservation::capture_phased(
+                            s.outlets[ch].1.stats().tranche(),
+                            s.updates,
+                            t,
+                            phase,
+                        ),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl ChildWindows {
+    fn new(schedule: SnapshotSchedule) -> Self {
+        Self {
+            schedule,
+            next: 0,
+            open: false,
+            phase_accum: ScenarioPhase::QUIESCENT,
+            open_obs: Vec::new(),
+            qos: SketchQos::new(),
+        }
+    }
+
+    /// Advance the window state machine to wall offset `t` (open due
+    /// windows, close elapsed ones — possibly several in a long gap).
+    fn tick(&mut self, slots: &[Slot], t: Nanos, phase: ScenarioPhase) {
+        if self.open {
+            self.phase_accum = self.phase_accum.union(phase);
+        }
+        while self.next < self.schedule.count {
+            if !self.open {
+                if t < self.schedule.open_at(self.next) {
+                    return;
+                }
+                self.open_obs = capture_slots(slots, t, phase);
+                self.open = true;
+                self.phase_accum = phase;
+            }
+            if t < self.schedule.close_at(self.next) {
+                return;
+            }
+            let close_phase = self.phase_accum.union(phase);
+            let close_obs = capture_slots(slots, t, close_phase);
+            for (si, slot) in slots.iter().enumerate() {
+                for ch in 0..slot.inlets.len() {
+                    let (in_open, out_open) = self.open_obs[si][ch];
+                    let (in_close, out_close) = close_obs[si][ch];
+                    let w = SnapshotWindow {
+                        inlet_before: in_open,
+                        inlet_after: in_close,
+                        outlet_before: out_open,
+                        outlet_after: out_close,
+                    };
+                    self.qos.absorb_window(&w, slot.inlets[ch].0 as u64, slot.rank as u64);
+                }
+            }
+            self.open = false;
+            self.next += 1;
+        }
+    }
+}
+
+fn run_child(spec: &ChildSpec, dir: &Path) -> io::Result<()> {
+    let hub = SocketHub::new();
+    let links = build_mesh(dir, spec.rank, spec.n_procs, &hub)?;
+    let mut slots = build_slots(spec, &hub, &links);
+    let timeline = if spec.scenario.is_empty() {
+        None
+    } else {
+        Some(HwFaultTimeline::compile(&spec.scenario, spec.n_shards))
+    };
+
+    let mut ctrl = UnixStream::connect(ctrl_path(dir))?;
+    ctrl.write_all(&[MSG_HELLO])?;
+    ctrl.write_all(&(spec.rank as u64).to_le_bytes())?;
+    ctrl.set_read_timeout(Some(SETUP_TIMEOUT))?;
+    if read_u8(&mut ctrl)? != MSG_GO {
+        return Err(io::Error::other("expected GO"));
+    }
+    // Barrier waits block on the parent; bound them so an orphaned
+    // worker dies instead of lingering.
+    ctrl.set_read_timeout(Some(Duration::from_nanos(spec.run_for_ns) + RUN_GRACE))?;
+
+    let communicate = spec.mode.communicates();
+    let mut windows = spec.snapshots.map(ChildWindows::new);
+    let start = Instant::now();
+    let run_for = Duration::from_nanos(spec.run_for_ns);
+    let deadline = start + run_for;
+    let mut chunk_start = Instant::now();
+    let mut next_fixed = Instant::now() + Duration::from_nanos(spec.fixed_epoch_ns);
+    let mut generation: u64 = 0;
+    let mut phase_cache = ScenarioPhase::QUIESCENT;
+    let mut next_ckpt: Option<Nanos> = Some(0);
+    let mut env_scratch: Vec<WireEnvelope> = Vec::new();
+    let mut pull_scratch: Vec<GcMsg> = Vec::new();
+    let first_step = Instant::now();
+    let mut last_step = first_step;
+
+    loop {
+        let t_ns = start.elapsed().as_nanos() as Nanos;
+        let phase = match &timeline {
+            None => ScenarioPhase::QUIESCENT,
+            Some(tl) => {
+                if next_ckpt.is_some_and(|c| t_ns >= c) {
+                    phase_cache = tl.phase_at(t_ns);
+                    next_ckpt = tl.next_checkpoint_after(t_ns);
+                }
+                phase_cache
+            }
+        };
+        if let Some(ws) = windows.as_mut() {
+            ws.tick(&slots, t_ns, phase);
+        }
+        // One central service pass per work-loop pass: flush send
+        // backlogs, read and route inbound frames.
+        hub.poll();
+
+        for slot in &mut slots {
+            // ---- Pull/absorb phase. ----
+            if communicate {
+                for ch in 0..slot.outlets.len() {
+                    env_scratch.clear();
+                    slot.outlets[ch].1.pull_all_into(&mut env_scratch);
+                    if env_scratch.is_empty() {
+                        continue;
+                    }
+                    let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
+                    slot.touch[ch].on_receive(max_touch);
+                    slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
+                    pull_scratch.clear();
+                    pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
+                    slot.shard.absorb(ch, &mut pull_scratch);
+                }
+            }
+
+            // ---- Compute phase. ----
+            let mut work = spec.added_work_units;
+            if let Some(tl) = &timeline {
+                let f = tl.speed_factor(t_ns, slot.rank);
+                if f > 1.0 {
+                    work += ((f - 1.0) * spec.degrade_spin_units as f64) as u64;
+                }
+            }
+            if work > 0 {
+                std::hint::black_box(slot.spinner.spin(work));
+            }
+            let outputs = slot.shard.step(&mut slot.rng);
+
+            // ---- Send phase. ----
+            if communicate {
+                for (ch, payload) in outputs {
+                    if let Some(tl) = &timeline {
+                        let peer = slot.peers[ch];
+                        let p = tl.drop_prob(t_ns, slot.rank, peer);
+                        if p > 0.0 && slot.rng.chance(p) {
+                            slot.inlets[ch].1.stats().on_send_attempt(false);
+                            continue;
+                        }
+                        let lf = tl.latency_factor(t_ns, slot.rank, peer);
+                        if lf > 1.0 {
+                            let units = ((lf - 1.0).min(8.0)
+                                * (spec.degrade_spin_units / 64).max(1) as f64)
+                                as u64;
+                            std::hint::black_box(slot.spinner.spin(units));
+                        }
+                    }
+                    slot.inlets[ch].1.put(WireEnvelope {
+                        touch: slot.touch[ch].outgoing(),
+                        payload,
+                    });
+                }
+            }
+            slot.updates += 1;
+        }
+        last_step = Instant::now();
+        let stopping = last_step >= deadline;
+
+        if spec.mode.uses_barriers() {
+            let due = match spec.mode {
+                AsyncMode::Sync => true,
+                AsyncMode::RollingBarrier => {
+                    chunk_start.elapsed() >= Duration::from_nanos(spec.rolling_chunk_ns)
+                }
+                AsyncMode::FixedBarrier => Instant::now() >= next_fixed,
+                _ => unreachable!(),
+            };
+            if due || stopping {
+                // Parent-mediated barrier: every worker that entered this
+                // generation is released together, with the stop decision
+                // OR-folded by the parent — so all workers exit the same
+                // generation (the thread executor's leader-latch
+                // consensus, stretched over the control socket).
+                ctrl.write_all(&[MSG_BARRIER])?;
+                ctrl.write_all(&generation.to_le_bytes())?;
+                ctrl.write_all(&[stopping as u8])?;
+                if read_u8(&mut ctrl)? != MSG_RELEASE {
+                    return Err(io::Error::other("expected RELEASE"));
+                }
+                let stop = read_u8(&mut ctrl)? != 0;
+                generation += 1;
+                chunk_start = Instant::now();
+                if spec.mode == AsyncMode::FixedBarrier {
+                    next_fixed += Duration::from_nanos(spec.fixed_epoch_ns);
+                }
+                if stop {
+                    break;
+                }
+            }
+        } else if stopping {
+            break;
+        }
+    }
+
+    // Final tick, stamped no earlier than the scheduled end of run, so
+    // the schedule's tail window closes (see the thread executor).
+    if let Some(ws) = windows.as_mut() {
+        let t_ns = (start.elapsed().as_nanos() as Nanos).max(spec.run_for_ns);
+        let phase = timeline.as_ref().map_or(phase_cache, |tl| tl.phase_at(t_ns));
+        ws.tick(&slots, t_ns, phase);
+    }
+
+    let mut totals = CounterTranche::default();
+    for slot in &slots {
+        for (_, inlet) in &slot.inlets {
+            totals.add(&inlet.stats().tranche());
+        }
+    }
+    let report = ChildReport {
+        rank: spec.rank,
+        updates: slots.iter().map(|s| s.updates).collect(),
+        attempted_sends: totals.attempted_sends,
+        successful_sends: totals.successful_sends,
+        span_ns: last_step.duration_since(first_step).as_nanos() as u64,
+        qos: windows.map(|w| w.qos).unwrap_or_default(),
+        stages: hub.stage_latencies(),
+    };
+    let blob = encode_blob(&report);
+    ctrl.write_all(&[MSG_RESULT])?;
+    ctrl.write_all(&(blob.len() as u64).to_le_bytes())?;
+    ctrl.write_all(&blob)?;
+    Ok(())
+}
+
+// ---- coordinator (parent) side --------------------------------------
+
+/// Result of a multi-process hardware run.
+pub struct MultiprocResult {
+    /// Worker processes actually used (after `EBCOMM_PROCS` capping).
+    pub procs: usize,
+    /// Updates completed per shard (global rank order).
+    pub updates: Vec<u64>,
+    /// Mean per-worker first-step→last-step span.
+    pub elapsed: Duration,
+    pub attempted_sends: u64,
+    pub successful_sends: u64,
+    /// All workers' windowed QoS metrics, sketch-merged.
+    pub qos: SketchQos,
+    /// All workers' stage latency breakdowns, sketch-merged.
+    pub stages: StageLatencies,
+    /// Per-worker reports (rank order).
+    pub reports: Vec<ChildReport>,
+}
+
+impl MultiprocResult {
+    /// Mean per-shard update rate (updates per second of measured span).
+    pub fn update_rate_per_cpu_hz(&self) -> f64 {
+        if self.updates.is_empty() || self.elapsed.is_zero() {
+            return 0.0;
+        }
+        let mean = self.updates.iter().sum::<u64>() as f64 / self.updates.len() as f64;
+        mean / self.elapsed.as_secs_f64()
+    }
+
+    pub fn overall_failure_rate(&self) -> f64 {
+        if self.attempted_sends == 0 {
+            0.0
+        } else {
+            1.0 - self.successful_sends as f64 / self.attempted_sends as f64
+        }
+    }
+}
+
+/// Resolve the worker binary: explicit override, `EBCOMM_MP_BIN`, the
+/// current executable when it *is* `ebcomm`, else an `ebcomm` sibling
+/// (covers `target/<profile>/deps/<test-bin>` → `target/<profile>/ebcomm`).
+fn worker_binary(explicit: Option<&Path>) -> io::Result<PathBuf> {
+    if let Some(p) = explicit {
+        return Ok(p.to_path_buf());
+    }
+    if let Ok(p) = std::env::var("EBCOMM_MP_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe()?;
+    if exe.file_name().and_then(|n| n.to_str()) == Some("ebcomm") {
+        return Ok(exe);
+    }
+    let mut dir = exe.parent();
+    while let Some(d) = dir {
+        let cand = d.join("ebcomm");
+        if cand.is_file() {
+            return Ok(cand);
+        }
+        dir = d.parent();
+    }
+    Err(io::Error::other(
+        "cannot locate the ebcomm worker binary (set EBCOMM_MP_BIN or MultiprocConfig::binary)",
+    ))
+}
+
+/// Barrier bookkeeping shared by the per-worker control reader threads.
+struct CtrlShared {
+    writers: Vec<Mutex<UnixStream>>,
+    book: Mutex<BarrierBook>,
+}
+
+struct BarrierBook {
+    alive: Vec<bool>,
+    n_alive: usize,
+    /// generation -> (workers entered, stop votes OR-folded).
+    pending: HashMap<u64, (usize, bool)>,
+}
+
+impl CtrlShared {
+    /// Release every generation all living workers have entered.
+    fn release_ready(&self, book: &mut BarrierBook) {
+        let n_alive = book.n_alive;
+        let ready: Vec<u64> =
+            book.pending.iter().filter(|(_, v)| v.0 >= n_alive).map(|(g, _)| *g).collect();
+        for g in ready {
+            let (_, stop) = book.pending.remove(&g).unwrap();
+            for (i, w) in self.writers.iter().enumerate() {
+                if book.alive[i] {
+                    let mut s = w.lock().expect("ctrl writer poisoned");
+                    let _ = s.write_all(&[MSG_RELEASE, stop as u8]);
+                }
+            }
+        }
+    }
+
+    fn on_barrier(&self, gen: u64, stopping: bool) {
+        let mut book = self.book.lock().expect("barrier book poisoned");
+        let e = book.pending.entry(gen).or_insert((0, false));
+        e.0 += 1;
+        e.1 |= stopping;
+        self.release_ready(&mut book);
+    }
+
+    /// A worker died (EOF/error on its control stream): drop it from the
+    /// quorum and release any barriers it was the last holdout for.
+    fn on_death(&self, worker: usize) {
+        let mut book = self.book.lock().expect("barrier book poisoned");
+        if book.alive[worker] {
+            book.alive[worker] = false;
+            book.n_alive -= 1;
+        }
+        if book.n_alive > 0 {
+            self.release_ready(&mut book);
+        }
+    }
+}
+
+fn reader_loop(
+    worker: usize,
+    mut stream: UnixStream,
+    shared: Arc<CtrlShared>,
+    tx: mpsc::Sender<(usize, io::Result<ChildReport>)>,
+) {
+    loop {
+        match read_u8(&mut stream) {
+            Ok(MSG_BARRIER) => {
+                let res = read_u64(&mut stream).and_then(|gen| {
+                    let stopping = read_u8(&mut stream)? != 0;
+                    shared.on_barrier(gen, stopping);
+                    Ok(())
+                });
+                if let Err(e) = res {
+                    shared.on_death(worker);
+                    let _ = tx.send((worker, Err(e)));
+                    return;
+                }
+            }
+            Ok(MSG_RESULT) => {
+                let report = read_u64(&mut stream).and_then(|len| {
+                    if len > (1u64 << 30) {
+                        return Err(io::Error::other("absurd report length"));
+                    }
+                    let mut blob = vec![0u8; len as usize];
+                    stream.read_exact(&mut blob)?;
+                    decode_blob::<ChildReport>(&blob)
+                });
+                shared.on_death(worker); // out of the barrier quorum now
+                let _ = tx.send((worker, report));
+                return;
+            }
+            Ok(tag) => {
+                shared.on_death(worker);
+                let _ = tx.send((worker, Err(io::Error::other(format!("bad ctrl tag {tag}")))));
+                return;
+            }
+            Err(e) => {
+                shared.on_death(worker);
+                let _ = tx.send((worker, Err(e)));
+                return;
+            }
+        }
+    }
+}
+
+static RUN_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Run `n_shards` graph-coloring shards across real OS processes until
+/// the deadline. Blocks until every worker reports (or errors out after
+/// a grace period, killing stragglers).
+pub fn run_multiproc(cfg: MultiprocConfig, n_shards: usize) -> io::Result<MultiprocResult> {
+    assert!(n_shards > 0, "need at least one shard");
+    let n_procs = resolve_procs(cfg.procs, env_proc_cap(), n_shards);
+    let run_for = match cfg.snapshots {
+        Some(s) => cfg.run_for.max(Duration::from_nanos(s.runtime())),
+        None => cfg.run_for,
+    };
+    let binary = worker_binary(cfg.binary.as_deref())?;
+
+    let dir = std::env::temp_dir().join(format!(
+        "ebcomm-mp-{}-{}",
+        std::process::id(),
+        RUN_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)?;
+    // Best-effort cleanup on every exit path below.
+    struct DirGuard(PathBuf);
+    impl Drop for DirGuard {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+    let _guard = DirGuard(dir.clone());
+
+    let listener = UnixListener::bind(ctrl_path(&dir))?;
+    let mut children = Vec::with_capacity(n_procs);
+    for rank in 0..n_procs {
+        let spec = ChildSpec {
+            rank,
+            n_procs,
+            n_shards,
+            mode: cfg.mode,
+            run_for_ns: run_for.as_nanos() as u64,
+            added_work_units: cfg.added_work_units,
+            channel_capacity: cfg.channel.capacity,
+            rolling_chunk_ns: cfg.rolling_chunk.as_nanos() as u64,
+            fixed_epoch_ns: cfg.fixed_epoch.as_nanos() as u64,
+            snapshots: cfg.snapshots,
+            scenario: cfg.scenario.clone(),
+            degrade_spin_units: cfg.degrade_spin_units,
+            seed: cfg.seed,
+            gc_colors: cfg.workload.n_colors,
+            gc_b: cfg.workload.b,
+            gc_simels: cfg.workload.simels_per_proc,
+            gc_per_simel_cost_ns: cfg.workload.per_simel_cost_ns,
+            gc_base_cost_ns: cfg.workload.base_cost_ns,
+        };
+        let child = std::process::Command::new(&binary)
+            .arg(CHILD_SUBCOMMAND)
+            .env("EBCOMM_MP_SPEC", to_hex(&encode_blob(&spec)))
+            .env("EBCOMM_MP_DIR", &dir)
+            .spawn()?;
+        children.push(child);
+    }
+
+    // HELLO handshake: collect one control stream per worker rank.
+    let kill_all = |children: &mut Vec<std::process::Child>| {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+        }
+        for c in children.iter_mut() {
+            let _ = c.wait();
+        }
+    };
+    let setup_deadline = Instant::now() + SETUP_TIMEOUT;
+    let mut streams: Vec<Option<UnixStream>> = (0..n_procs).map(|_| None).collect();
+    for _ in 0..n_procs {
+        let handshake = accept_deadline(&listener, setup_deadline).and_then(|mut s| {
+            s.set_read_timeout(Some(SETUP_TIMEOUT))?;
+            if read_u8(&mut s)? != MSG_HELLO {
+                return Err(io::Error::other("expected HELLO"));
+            }
+            let rank = read_u64(&mut s)? as usize;
+            if rank >= n_procs || streams[rank].is_some() {
+                return Err(io::Error::other(format!("bad hello rank {rank}")));
+            }
+            s.set_read_timeout(Some(run_for + RUN_GRACE))?;
+            Ok((rank, s))
+        });
+        match handshake {
+            Ok((rank, s)) => streams[rank] = Some(s),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(e);
+            }
+        }
+    }
+    let mut streams: Vec<UnixStream> = streams.into_iter().map(Option::unwrap).collect();
+
+    let writers: io::Result<Vec<Mutex<UnixStream>>> =
+        streams.iter().map(|s| s.try_clone().map(Mutex::new)).collect();
+    let writers = match writers {
+        Ok(w) => w,
+        Err(e) => {
+            kill_all(&mut children);
+            return Err(e);
+        }
+    };
+    let shared = Arc::new(CtrlShared {
+        writers,
+        book: Mutex::new(BarrierBook {
+            alive: vec![true; n_procs],
+            n_alive: n_procs,
+            pending: HashMap::new(),
+        }),
+    });
+
+    // Start the clock everywhere, then hand each stream to its reader.
+    for s in streams.iter_mut() {
+        if let Err(e) = s.write_all(&[MSG_GO]) {
+            kill_all(&mut children);
+            return Err(e);
+        }
+    }
+    let (tx, rx) = mpsc::channel();
+    let mut readers = Vec::with_capacity(n_procs);
+    for (worker, stream) in streams.into_iter().enumerate() {
+        let shared = Arc::clone(&shared);
+        let tx = tx.clone();
+        readers.push(std::thread::spawn(move || reader_loop(worker, stream, shared, tx)));
+    }
+    drop(tx);
+
+    let mut reports: Vec<Option<ChildReport>> = (0..n_procs).map(|_| None).collect();
+    let mut failures: Vec<String> = Vec::new();
+    let run_deadline = Instant::now() + run_for + RUN_GRACE;
+    for _ in 0..n_procs {
+        let left = run_deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left.max(Duration::from_millis(1))) {
+            Ok((worker, Ok(report))) => reports[worker] = Some(report),
+            Ok((worker, Err(e))) => failures.push(format!("worker {worker}: {e}")),
+            Err(_) => {
+                failures.push("timed out waiting for worker reports".to_string());
+                break;
+            }
+        }
+    }
+    kill_all(&mut children); // reaps the (already exited) workers
+    for r in readers {
+        let _ = r.join();
+    }
+    if !failures.is_empty() {
+        return Err(io::Error::other(failures.join("; ")));
+    }
+    let reports: Vec<ChildReport> = reports.into_iter().map(Option::unwrap).collect();
+
+    let mut updates = vec![0u64; n_shards];
+    let mut attempted = 0u64;
+    let mut successful = 0u64;
+    let mut span_sum = Duration::ZERO;
+    let mut qos = SketchQos::new();
+    let mut stages = StageLatencies::new();
+    for report in &reports {
+        let (lo, hi) = block_range(report.rank, n_shards, n_procs);
+        assert_eq!(report.updates.len(), hi - lo, "worker block size mismatch");
+        updates[lo..hi].copy_from_slice(&report.updates);
+        attempted += report.attempted_sends;
+        successful += report.successful_sends;
+        span_sum += Duration::from_nanos(report.span_ns);
+        qos.merge(&report.qos);
+        stages.merge(&report.stages);
+    }
+    Ok(MultiprocResult {
+        procs: n_procs,
+        updates,
+        elapsed: span_sum / n_procs as u32,
+        attempted_sends: attempted,
+        successful_sends: successful,
+        qos,
+        stages,
+        reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MILLI;
+
+    #[test]
+    fn resolve_procs_clamps_and_caps() {
+        assert_eq!(resolve_procs(None, None, 8), 8);
+        assert_eq!(resolve_procs(Some(64), None, 8), 8);
+        assert_eq!(resolve_procs(Some(0), None, 8), 1);
+        assert_eq!(resolve_procs(Some(4), Some(2), 256), 2);
+        assert_eq!(resolve_procs(None, Some(2), 256), 2);
+        assert_eq!(resolve_procs(Some(2), Some(4), 256), 2);
+        assert_eq!(resolve_procs(Some(4), Some(0), 256), 4);
+        assert_eq!(resolve_procs(None, None, 0), 1);
+    }
+
+    #[test]
+    fn block_assignment_is_a_contiguous_partition() {
+        for (n_shards, n_procs) in [(4, 2), (5, 2), (7, 3), (8, 8), (9, 4), (3, 1)] {
+            let mut covered = 0;
+            for p in 0..n_procs {
+                let (lo, hi) = block_range(p, n_shards, n_procs);
+                assert_eq!(lo, covered, "blocks must be contiguous");
+                for r in lo..hi {
+                    assert_eq!(proc_of(r, n_shards, n_procs), p);
+                }
+                covered = hi;
+            }
+            assert_eq!(covered, n_shards, "blocks must cover every shard");
+        }
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(from_hex(&to_hex(&bytes)).unwrap(), bytes);
+        assert_eq!(from_hex("zz"), None);
+        assert_eq!(from_hex("abc"), None);
+        assert_eq!(from_hex(""), Some(Vec::new()));
+    }
+
+    #[test]
+    fn child_spec_round_trips() {
+        let spec = ChildSpec {
+            rank: 1,
+            n_procs: 2,
+            n_shards: 4,
+            mode: AsyncMode::Sync,
+            run_for_ns: 123_456_789,
+            added_work_units: 7,
+            channel_capacity: 64,
+            rolling_chunk_ns: 10 * MILLI,
+            fixed_epoch_ns: 1_000 * MILLI,
+            snapshots: Some(SnapshotSchedule::hardware_smoke()),
+            scenario: FaultScenario::default(),
+            degrade_spin_units: 4_000,
+            seed: 42,
+            gc_colors: 3,
+            gc_b: 0.1,
+            gc_simels: 16,
+            gc_per_simel_cost_ns: 80.0,
+            gc_base_cost_ns: 3_400.0,
+        };
+        let blob = encode_blob(&spec);
+        let back: ChildSpec = decode_blob(&blob).unwrap();
+        assert_eq!(back.rank, 1);
+        assert_eq!(back.mode, AsyncMode::Sync);
+        assert_eq!(back.run_for_ns, 123_456_789);
+        assert_eq!(back.snapshots.unwrap().count, SnapshotSchedule::hardware_smoke().count);
+        assert_eq!(back.gc_simels, 16);
+        assert_eq!(back.gc_b, 0.1);
+    }
+
+    #[test]
+    fn child_report_round_trips() {
+        let mut stages = StageLatencies::new();
+        stages.serialize.insert(100.0);
+        stages.transport.insert(5_000.0);
+        let report = ChildReport {
+            rank: 0,
+            updates: vec![10, 12],
+            attempted_sends: 40,
+            successful_sends: 38,
+            span_ns: 200 * MILLI,
+            qos: SketchQos::new(),
+            stages,
+        };
+        let blob = encode_blob(&report);
+        let back: ChildReport = decode_blob(&blob).unwrap();
+        assert_eq!(back.updates, vec![10, 12]);
+        assert_eq!(back.attempted_sends, 40);
+        assert_eq!(back.successful_sends, 38);
+        assert_eq!(back.stages.serialize.count(), 1);
+        assert_eq!(back.stages.transport.count(), 1);
+        assert!(back.qos.is_empty());
+    }
+
+    #[test]
+    fn worker_binary_explicit_override_wins() {
+        let p = worker_binary(Some(Path::new("/tmp/some-ebcomm"))).unwrap();
+        assert_eq!(p, PathBuf::from("/tmp/some-ebcomm"));
+    }
+}

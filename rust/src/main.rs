@@ -34,6 +34,11 @@ fn main() -> ExitCode {
         "qos" => cmd_qos(rest),
         "run" => cmd_run(rest),
         "runtime-smoke" => cmd_runtime_smoke(),
+        // Hidden: re-exec entry point for multiprocess executor workers
+        // (spawned by `exec::multiproc::run_multiproc`, never by hand).
+        ebcomm::exec::multiproc::CHILD_SUBCOMMAND => {
+            ebcomm::exec::multiproc::child_main().map_err(Into::into)
+        }
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())

@@ -21,7 +21,7 @@
 //! schedules and wall-clock time, which cannot be serialized or
 //! deterministically resumed.
 
-use crate::conduit::CounterTranche;
+use crate::conduit::{CounterTranche, StageLatencies};
 use crate::faults::{
     FaultEvent, FaultKind, FaultScenario, LinkFault, NodeFault, ScenarioPhase,
 };
@@ -708,6 +708,26 @@ impl Persist for SketchQos {
             by_phase,
             distinct_channels: CardinalitySketch::load(r)?,
             distinct_senders: CardinalitySketch::load(r)?,
+        })
+    }
+}
+
+/// Four stage sketches in message-path order (serialize, enqueue,
+/// transport, drain) — the multiprocess executor's wire blob for
+/// shipping per-process latency breakdowns to the coordinator.
+impl Persist for StageLatencies {
+    fn save(&self, w: &mut SnapWriter) {
+        self.serialize.save(w);
+        self.enqueue.save(w);
+        self.transport.save(w);
+        self.drain.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            serialize: QuantileSketch::load(r)?,
+            enqueue: QuantileSketch::load(r)?,
+            transport: QuantileSketch::load(r)?,
+            drain: QuantileSketch::load(r)?,
         })
     }
 }

@@ -12,14 +12,15 @@
 //! which is what pins the cross-validation on both DES scheduler
 //! backends.
 
+use std::path::PathBuf;
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
 
 use ebcomm::conduit::ChannelConfig;
 use ebcomm::coordinator::{
-    report, run_benchmark, run_hardware, BenchmarkExperiment, HardwareExperiment,
+    report, run_benchmark, run_hardware, BenchmarkExperiment, HardwareExperiment, ScenarioKind,
 };
-use ebcomm::exec::{run_threads, ThreadExecConfig};
+use ebcomm::exec::{run_multiproc, run_threads, MultiprocConfig, ThreadExecConfig};
 use ebcomm::net::{PlacementKind, Topology};
 use ebcomm::qos::{MetricName, SnapshotSchedule};
 use ebcomm::sim::AsyncMode;
@@ -229,6 +230,186 @@ fn des_vs_hardware_ordinal_cross_validation() {
     assert!(
         hw_over.overall_failure_rate() > 0.0,
         "oversubscribed best-effort failure rate must be positive"
+    );
+}
+
+// ---- multi-process executor ------------------------------------------
+//
+// These tests spawn real OS worker processes (the `ebcomm` binary's
+// hidden `__mp-child` entry point, via `CARGO_BIN_EXE_ebcomm`). The
+// `exec-multiproc` CI lane filters on the `multiproc` name fragment and
+// runs them under `EBCOMM_PROCS=2`.
+
+fn mp_config(mode: AsyncMode) -> MultiprocConfig {
+    MultiprocConfig {
+        mode,
+        procs: Some(2),
+        binary: Some(PathBuf::from(env!("CARGO_BIN_EXE_ebcomm"))),
+        ..Default::default()
+    }
+}
+
+/// The acceptance run: modes 0–3 across at least two real OS processes,
+/// each capturing all four paper QoS metrics per process and merging
+/// them (plus the stage breakdown) at the coordinator.
+#[test]
+fn multiproc_modes_capture_windowed_qos_across_processes() {
+    let _guard = serial();
+    for mode in [
+        AsyncMode::Sync,
+        AsyncMode::RollingBarrier,
+        AsyncMode::FixedBarrier,
+        AsyncMode::BestEffort,
+    ] {
+        let result = run_multiproc(
+            MultiprocConfig {
+                snapshots: Some(SnapshotSchedule::hardware_smoke()),
+                run_for: Duration::from_millis(120),
+                ..mp_config(mode)
+            },
+            3,
+        )
+        .expect("multiproc run");
+        assert!(result.procs >= 2, "mode {}: need real processes", mode.index());
+        assert_eq!(result.updates.len(), 3);
+        assert!(
+            result.updates.iter().all(|&u| u > 0),
+            "mode {}: every shard must advance: {:?}",
+            mode.index(),
+            result.updates
+        );
+        // Every worker contributed windows, and the merged sketch holds
+        // all four paper QoS metrics as finite distributions.
+        assert_eq!(result.reports.len(), result.procs);
+        for report in &result.reports {
+            assert!(
+                report.qos.window_count() > 0,
+                "mode {}: worker {} captured no windows",
+                mode.index(),
+                report.rank
+            );
+        }
+        for metric in [
+            MetricName::SimstepPeriod,
+            MetricName::WalltimeLatency,
+            MetricName::DeliveryFailureRate,
+            MetricName::DeliveryClumpiness,
+        ] {
+            let median = result.qos.median(metric);
+            assert!(
+                median.is_finite(),
+                "mode {}: {metric:?} median {median}",
+                mode.index()
+            );
+        }
+        assert!(result.qos.median(MetricName::SimstepPeriod) > 0.0, "wall time elapsed");
+        // Cross-process traffic flowed, so every socket stage recorded
+        // latencies on both sides of the ducts.
+        for (stage, sketch) in result.stages.named() {
+            assert!(
+                !sketch.is_empty(),
+                "mode {}: stage '{stage}' recorded nothing",
+                mode.index()
+            );
+        }
+    }
+}
+
+/// DES-vs-multiproc ordinal cross-validation, the process-backend twin
+/// of [`des_vs_hardware_ordinal_cross_validation`]: sync delivery
+/// failure ≈ 0 and mode 0 slower than mode 3 on both backends.
+#[test]
+fn des_vs_multiproc_ordinal_cross_validation() {
+    let _guard = serial();
+    const SHARDS: usize = 4;
+
+    // --- DES side: the simulated multiprocess modality, same scale. ---
+    let mut des_exp = BenchmarkExperiment::fig3_multiprocess_gc();
+    des_exp.cpu_counts = vec![SHARDS];
+    des_exp.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+    des_exp.replicates = 2;
+    des_exp.run_for = 60 * MILLI;
+    des_exp.simels_per_cpu = 16;
+    des_exp.cost_scale = 1.0;
+    let des = run_benchmark(&des_exp);
+    let des_rate = |mode| {
+        let r = des.rates(mode, SHARDS);
+        r.iter().sum::<f64>() / r.len() as f64
+    };
+    assert!(
+        des_rate(AsyncMode::Sync) < des_rate(AsyncMode::BestEffort),
+        "DES ordering: sync {} vs best-effort {}",
+        des_rate(AsyncMode::Sync),
+        des_rate(AsyncMode::BestEffort)
+    );
+
+    // --- Real-process side: same shards and modes, socket ducts. ---
+    let mp_run = |mode| {
+        run_multiproc(
+            MultiprocConfig {
+                channel: ChannelConfig::benchmarking(),
+                run_for: Duration::from_millis(150),
+                ..mp_config(mode)
+            },
+            SHARDS,
+        )
+        .expect("multiproc run")
+    };
+    let mp_sync = mp_run(AsyncMode::Sync);
+    let mp_be = mp_run(AsyncMode::BestEffort);
+
+    // Sync lockstep drains every capacity-2 buffer (in-process ring or
+    // socket send window) each generation, so delivery failure is ≈ 0.
+    assert!(
+        mp_sync.overall_failure_rate() < 0.005,
+        "multiproc sync must not drop: attempted={} successful={}",
+        mp_sync.attempted_sends,
+        mp_sync.successful_sends
+    );
+    // Mode 0 pays a coordinator round-trip per generation on top of the
+    // barrier itself; best-effort pays neither.
+    assert!(
+        mp_sync.update_rate_per_cpu_hz() < mp_be.update_rate_per_cpu_hz(),
+        "multiproc ordering: sync {} vs best-effort {}",
+        mp_sync.update_rate_per_cpu_hz(),
+        mp_be.update_rate_per_cpu_hz()
+    );
+    assert!(mp_be.attempted_sends > 0, "best-effort must attempt sends");
+}
+
+/// A partition scenario drives *real processes*: windows during the
+/// partition carry fault-phase tags and more delivery failure than
+/// baseline windows.
+#[test]
+fn multiproc_partition_scenario_attribution() {
+    let _guard = serial();
+    const SHARDS: usize = 4;
+    let run_for = Duration::from_millis(180);
+    let scenario = ScenarioKind::PartitionHeal.build(run_for.as_nanos() as u64, SHARDS, SHARDS);
+    let result = run_multiproc(
+        MultiprocConfig {
+            snapshots: Some(SnapshotSchedule::hardware_smoke()),
+            run_for,
+            scenario,
+            ..mp_config(AsyncMode::BestEffort)
+        },
+        SHARDS,
+    )
+    .expect("multiproc scenario run");
+    let quiet_windows = result.qos.window_count_where(|ph| ph.is_quiescent());
+    let fault_windows = result.qos.window_count_where(|ph| !ph.is_quiescent());
+    assert!(
+        quiet_windows > 0 && fault_windows > 0,
+        "both phases must cover windows: quiet={quiet_windows} fault={fault_windows}"
+    );
+    let q = |pred: fn(ebcomm::faults::ScenarioPhase) -> bool| {
+        result.qos.quantile_where(MetricName::DeliveryFailureRate, pred, 0.75)
+    };
+    let quiet_fail = q(|ph| ph.is_quiescent());
+    let fault_fail = q(|ph| !ph.is_quiescent());
+    assert!(
+        fault_fail > quiet_fail && fault_fail > 0.1,
+        "partition windows must carry forced failure: fault {fault_fail} vs quiet {quiet_fail}"
     );
 }
 
