@@ -11,8 +11,9 @@ Usage:
                                  [--weak-scaling-baseline WEAK_BASELINE.json]
                                  [--qos-sketch WEAK_SCALING.json]
                                  [--multiproc MULTIPROC.json]
+                                 [--adaptive ADAPTIVE.json]
 
-Ten independent checks:
+Eleven independent checks:
 
 1. **Scheduler A/B bar** (always runs, baseline not needed): within
    CURRENT, the calendar scheduler's ``scheduler calendar pop+push (N
@@ -95,6 +96,17 @@ Ten independent checks:
    measured errors here would double-gate one contract and redden CI on
    distribution shape, not on a sketch bug. Only absence, non-finite, or
    negative entries fail.
+
+11. **Adaptive-policy section** (with ``--adaptive``): the
+   ``bench_fault_scenarios --adaptive`` JSON must contain, for at least
+   one scenario cell, the ``adaptive failure …`` entry with its paired
+   ``best static failure …`` and ``adaptive flips …`` entries, all
+   well-formed. **Report-only**: the adaptive-vs-best-static comparison
+   is printed per scenario (with a win/loss marker on the medians), but
+   magnitudes never gate — whether the controller beats the best static
+   mode on a given family is the *paper-facing* acceptance question,
+   answered by the full ``adaptive_suite`` sweep and the report tables,
+   not something a smoke grid on a shared runner should redden CI over.
 
 Exit status: 0 ok / 1 gate failed / 2 usage or parse error.
 """
@@ -414,6 +426,65 @@ def qos_sketch_check(path):
     return failures
 
 
+def adaptive_check(path):
+    """Presence/shape check of the report-only 'adaptive' section: the
+    bench_fault_scenarios --adaptive JSON must pair every ``adaptive
+    failure <scenario> (<procs> procs)`` entry with its ``best static
+    failure …`` and ``adaptive flips …`` twins. The printed comparison
+    documents where the controller wins in the CI log; magnitudes never
+    gate (see module docstring, check 11)."""
+    entries = load(path)
+    failures = []
+    rows = sorted(
+        (e for name, e in entries.items() if name.startswith(("adaptive ", "best static "))),
+        key=lambda e: e["name"],
+    )
+    if not rows:
+        return [f"no adaptive entries in {path} — bench did not run?"]
+    for e in rows:
+        m = e.get("median")
+        unit = e.get("unit")
+        well_formed = (
+            isinstance(m, (int, float))
+            and m == m  # not NaN
+            and abs(m) != float("inf")
+            and m >= 0
+            and isinstance(unit, str)
+            and bool(unit)
+        )
+        if not well_formed:
+            print(f"  [adaptive] {e['name']}: median {m} {unit} (malformed)")
+            failures.append(f"malformed adaptive entry {e['name']!r}")
+    cells = [
+        name[len("adaptive failure ") :]
+        for name in entries
+        if name.startswith("adaptive failure ")
+    ]
+    if not cells:
+        failures.append("adaptive section lacks an 'adaptive failure' entry")
+    for cell in sorted(cells):
+        ad = median_of(entries, f"adaptive failure {cell}")
+        best = median_of(entries, f"best static failure {cell}")
+        flips = (entries.get(f"adaptive flips {cell}") or {}).get("median")
+        if best is None:
+            # median_of rejects 0.0, which is a legitimate failure rate —
+            # distinguish "absent" from "zero" for the pairing check.
+            if f"best static failure {cell}" not in entries:
+                failures.append(f"no 'best static failure {cell}' paired entry")
+            best = (entries.get(f"best static failure {cell}") or {}).get("median")
+        if f"adaptive flips {cell}" not in entries:
+            failures.append(f"no 'adaptive flips {cell}' paired entry")
+        ad_raw = (entries.get(f"adaptive failure {cell}") or {}).get("median")
+        marker = ""
+        if isinstance(ad_raw, (int, float)) and isinstance(best, (int, float)):
+            marker = " <= best static" if ad_raw <= best else " > best static"
+        print(
+            f"  [adaptive] {cell}: adaptive fail {ad_raw} vs best static "
+            f"{best}, flips {flips}{marker} (report-only)"
+        )
+    return failures
+
+
 def churn_check(path):
     """Presence check of churn-phase attribution rows in the scenario CSV."""
     import csv
@@ -541,6 +612,12 @@ def main():
         "baseline (default 0.25)",
     )
     ap.add_argument(
+        "--adaptive",
+        help="bench_fault_scenarios --adaptive JSON whose adaptive-vs-"
+        "best-static failure entries must be present, paired, and "
+        "well-formed (report-only: values never gate)",
+    )
+    ap.add_argument(
         "--multiproc",
         help="bench_multiproc JSON whose 'multiproc' section (windowed "
         "QoS metrics per mode x procs cell, per-message stage sketches) "
@@ -627,6 +704,14 @@ def main():
             failed = True
             for f in mp_failures:
                 print(f"bench-diff: multiproc section check failed: {f}", file=sys.stderr)
+
+    if args.adaptive:
+        print("== adaptive policy section (report-only) ==")
+        ad_failures = adaptive_check(args.adaptive)
+        if ad_failures:
+            failed = True
+            for f in ad_failures:
+                print(f"bench-diff: adaptive section check failed: {f}", file=sys.stderr)
 
     if args.qos_sketch:
         print("== qos sketch section (report-only) ==")

@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Pre-validation fuzz for the adaptive policy controller's state machine.
+
+Mirrors `rust/src/sim/policy.rs::AdaptiveController::observe_window` in
+plain Python (the RNG need not match bit-for-bit — the invariants below
+are structural, not stream-sensitive) and drives it with randomized
+windowed-metric streams, checking on every step:
+
+1. **Determinism** — same (stream, seed) reproduces the identical
+   escalation trace and flip/heal counts.
+2. **Ledger** — ``flips - heals == currently-escalated count`` always
+   (every transition is counted exactly once).
+3. **Calibration** — no decision before a channel's first finite
+   positive-latency window; that window only sets the baseline.
+4. **Trigger exactness** — a channel escalates on a window iff it was
+   calm and the degraded predicate (latency ratio vs its own baseline,
+   failure threshold, clumpiness threshold — NaNs never degraded) holds.
+5. **Hysteresis** — a heal happens only after >= heal_windows
+   consecutive healthy windows since escalation or the last relapse
+   (the seeded jitter can demand more, never fewer).
+
+Run: ``python3 python/policy_model_fuzz.py [n_cases]`` — exits nonzero
+on the first violated invariant.
+"""
+
+import math
+import random
+import sys
+
+LATENCY_RATIO = 2.5
+FAILURE_THRESHOLD = 0.25
+CLUMPINESS_THRESHOLD = 0.995
+HEAL_WINDOWS = 2
+HEAL_JITTER = 2
+
+
+class Controller:
+    """Python twin of AdaptiveController (paper_defaults thresholds)."""
+
+    def __init__(self, n_channels, seed):
+        self.rng = random.Random(seed)
+        self.escalated = [False] * n_channels
+        self.baseline = [math.nan] * n_channels
+        self.streak = [0] * n_channels
+        self.target = [0] * n_channels
+        self.flips = 0
+        self.heals = 0
+
+    def degraded(self, cid, lat, fail, clump):
+        slow = math.isfinite(lat) and lat > LATENCY_RATIO * self.baseline[cid]
+        lossy = math.isfinite(fail) and fail > FAILURE_THRESHOLD
+        clumped = math.isfinite(clump) and clump > CLUMPINESS_THRESHOLD
+        return slow or lossy or clumped
+
+    def observe(self, cid, lat, fail, clump):
+        if math.isnan(self.baseline[cid]):
+            if math.isfinite(lat) and lat > 0.0:
+                self.baseline[cid] = lat
+            return False
+        deg = self.degraded(cid, lat, fail, clump)
+        if not self.escalated[cid]:
+            if deg:
+                self.escalated[cid] = True
+                self.streak[cid] = 0
+                self.target[cid] = HEAL_WINDOWS + self.rng.randrange(HEAL_JITTER + 1)
+                self.flips += 1
+                return True
+            return False
+        if deg:
+            self.streak[cid] = 0
+            return False
+        self.streak[cid] += 1
+        if self.streak[cid] >= self.target[cid]:
+            self.escalated[cid] = False
+            self.streak[cid] = 0
+            self.heals += 1
+            return True
+        return False
+
+
+def gen_window(rng):
+    """One windowed metric triple, biased across calm/degraded/no-traffic."""
+    shape = rng.random()
+    if shape < 0.15:  # no deliveries this window
+        return (math.nan, 0.0, math.nan)
+    if shape < 0.55:  # calm
+        return (rng.uniform(500.0, 2000.0), rng.uniform(0.0, 0.1), rng.uniform(0.0, 0.5))
+    if shape < 0.8:  # latency storm
+        return (rng.uniform(5e4, 1e6), rng.uniform(0.0, 0.2), rng.uniform(0.0, 0.5))
+    if shape < 0.95:  # lossy
+        return (rng.uniform(500.0, 2000.0), rng.uniform(0.3, 1.0), rng.uniform(0.0, 0.5))
+    # pathological coagulation
+    return (rng.uniform(500.0, 2000.0), 0.0, rng.uniform(0.996, 1.0))
+
+
+def run_case(case_seed):
+    rng = random.Random(case_seed)
+    n_channels = rng.randrange(1, 9)
+    n_windows = rng.randrange(8, 120)
+    stream = [
+        [gen_window(rng) for _ in range(n_channels)] for _ in range(n_windows)
+    ]
+
+    def drive(seed):
+        c = Controller(n_channels, seed)
+        trace = []
+        # Per-channel healthy-streak shadow for invariant 5.
+        shadow = [0] * n_channels
+        for win in stream:
+            for cid, (lat, fail, clump) in enumerate(win):
+                calibrated = not math.isnan(c.baseline[cid])
+                was_escalated = c.escalated[cid]
+                deg = c.degraded(cid, lat, fail, clump) if calibrated else None
+                changed = c.observe(cid, lat, fail, clump)
+                # 3. calibration windows decide nothing
+                if not calibrated:
+                    assert not changed, "decision before calibration"
+                # 4. trigger exactness
+                if calibrated and not was_escalated:
+                    assert changed == deg, (
+                        f"escalation mismatch: degraded={deg} changed={changed}"
+                    )
+                # 5. hysteresis floor
+                if calibrated and was_escalated:
+                    if deg:
+                        shadow[cid] = 0
+                    else:
+                        shadow[cid] += 1
+                    if changed:
+                        assert shadow[cid] >= HEAL_WINDOWS, (
+                            f"healed after only {shadow[cid]} healthy windows"
+                        )
+                        shadow[cid] = 0
+                if calibrated and not was_escalated and changed:
+                    shadow[cid] = 0
+                # 2. ledger
+                assert c.flips - c.heals == sum(c.escalated), "flip/heal ledger broken"
+                trace.append(c.escalated[cid])
+        return trace, c.flips, c.heals
+
+    a = drive(case_seed ^ 0xADA7)
+    b = drive(case_seed ^ 0xADA7)
+    assert a == b, "same (stream, seed) must reproduce identically"  # 1.
+    return a[1], a[2]
+
+
+def main():
+    n_cases = int(sys.argv[1]) if len(sys.argv) > 1 else 400
+    total_flips = total_heals = 0
+    for case in range(n_cases):
+        flips, heals = run_case(0x5EED_0000 + case)
+        total_flips += flips
+        total_heals += heals
+    assert total_flips > 0, "fuzz never escalated — generator too calm"
+    assert total_heals > 0, "fuzz never healed — generator too stormy"
+    print(
+        f"policy_model_fuzz: {n_cases} cases ok "
+        f"({total_flips} flips, {total_heals} heals)"
+    )
+
+
+if __name__ == "__main__":
+    main()

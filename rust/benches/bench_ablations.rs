@@ -74,7 +74,7 @@ fn main() {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(2),
             2_600 * ebcomm::util::MILLI,
@@ -110,7 +110,7 @@ fn main() {
         for mode in [AsyncMode::Sync, AsyncMode::BestEffort] {
             let exp = BenchmarkExperiment::fig3_multiprocess_gc();
             let topo = Topology::new(16, PlacementKind::OnePerNode);
-            let mut cfg = SimConfig::new(mode, exp.timing(16), ebcomm::util::SECOND);
+            let mut cfg = SimConfig::from_env(mode, exp.timing(16), ebcomm::util::SECOND);
             cfg.send_buffer = 2;
             cfg.seed = 0xAB3;
             cfg.barrier_tail_ns = tail;

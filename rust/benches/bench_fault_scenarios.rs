@@ -18,22 +18,122 @@
 //! ([`ScenarioExperiment::scale_suite`]); `--churn` for the
 //! membership-churn rung ([`ScenarioExperiment::churn_suite`]:
 //! 64/256-proc leave/join storms, steady vs churn-phase medians);
-//! `EBCOMM_FULL=1` runs paper-scale windows (and unlocks the 4096-proc
-//! rung under `--scale`).
+//! `--adaptive` for the adaptive-controller comparison
+//! ([`ScenarioExperiment::adaptive_suite`], `adaptive_smoke` with
+//! `--smoke`; emits `BENCH_adaptive.json`); `--calibrated` for a
+//! fig-3-shaped probe under the hardware-calibrated
+//! [`LinkModel::calibrated`] (stage medians from `BENCH_multiproc.json`,
+//! builtin ballpark with a note when absent); `EBCOMM_FULL=1` runs
+//! paper-scale windows (and unlocks the 4096-proc rung under `--scale`).
 
 use ebcomm::coordinator::report;
 use ebcomm::coordinator::{run_scenario, ScenarioExperiment, ScenarioKind};
+use ebcomm::net::{LinkModel, PlacementKind, StageMedians, Topology};
 use ebcomm::qos::MetricName;
-use ebcomm::sim::AsyncMode;
-use ebcomm::stats::{median, quantile, two_sample_t};
+use ebcomm::sim::{healthy_profiles, AsyncMode, Engine, ModeTiming, SimConfig};
+use ebcomm::stats::{mean, median, quantile, two_sample_t};
+use ebcomm::util::benchjson::BenchJson;
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::MILLI;
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+/// Repo root (one level above the crate manifest), mirroring
+/// `BenchJson::write`.
+fn repo_root() -> std::path::PathBuf {
+    std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| std::path::PathBuf::from(d).join(".."))
+        .unwrap_or_else(|_| std::path::PathBuf::from("."))
+}
+
+/// One fig-3-shaped probe cell: per-CPU update rate for a mode × scale
+/// under an optional link override.
+fn probe_cell(mode: AsyncMode, n_procs: usize, link: Option<LinkModel>, seed: u64) -> f64 {
+    let topo = Topology::new(n_procs, PlacementKind::OnePerNode);
+    let profiles = healthy_profiles(&topo);
+    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), 120 * MILLI);
+    cfg.seed = seed;
+    cfg.send_buffer = 2;
+    cfg.link_override = link;
+    let gc_cfg = GcConfig {
+        simels_per_proc: 16,
+        ..GcConfig::default()
+    };
+    let mut rng = Xoshiro256::new(seed ^ 0xCA11);
+    let shards: Vec<_> = (0..n_procs)
+        .map(|r| GraphColoringShard::new(gc_cfg, &topo, r, &mut rng))
+        .collect();
+    Engine::new(cfg, topo, profiles, shards)
+        .run()
+        .update_rate_per_cpu_hz()
+}
+
+/// `--calibrated`: re-run a fig-3-shaped mode × scale sweep under the
+/// hardware-calibrated link and print it against the paper-default
+/// internode link, so the measured stage medians can be eyeballed
+/// against §III-A's shape.
+fn calibrated_probe(smoke: bool) {
+    let bench_path = repo_root().join("BENCH_multiproc.json");
+    let (medians, source) = match StageMedians::from_bench_json(&bench_path) {
+        Some(m) => (m, "BENCH_multiproc.json"),
+        None => {
+            eprintln!(
+                "[calibrated] no usable {} — falling back to StageMedians::builtin()",
+                bench_path.display()
+            );
+            (StageMedians::builtin(), "builtin ballpark")
+        }
+    };
+    let link = LinkModel::calibrated(&medians);
+    println!("== calibrated link probe (stage medians: {source}) ==");
+    println!(
+        "wire median {:.0} ns | sigma {:.3} | service {:.0} ns | send/pull overhead {:.0}/{:.0} ns",
+        link.wire_median_ns,
+        link.wire_sigma,
+        link.service_ns,
+        link.send_overhead_ns,
+        link.pull_overhead_ns,
+    );
+    let proc_counts: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 64] };
+    println!(
+        "{:<34} {:>6} {:>14} {:>14} {:>8}",
+        "mode", "procs", "default rate", "calibrated", "ratio"
+    );
+    for &mode in &AsyncMode::ALL {
+        for &n in proc_counts {
+            let seed = 0xF163 ^ ((mode.index() as u64) << 16) ^ n as u64;
+            let default_rate = probe_cell(mode, n, None, seed);
+            let calibrated_rate = probe_cell(mode, n, Some(link), seed);
+            println!(
+                "{:<34} {:>6} {:>14.1} {:>14.1} {:>8.3}",
+                mode.label(),
+                n,
+                default_rate,
+                calibrated_rate,
+                calibrated_rate / default_rate.max(1e-12),
+            );
+        }
+    }
+}
 
 fn main() {
     let t0 = std::time::Instant::now();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke")
         || std::env::var("EBCOMM_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if args.iter().any(|a| a == "--calibrated") {
+        calibrated_probe(smoke);
+        eprintln!("bench_fault_scenarios done in {:.1}s", t0.elapsed().as_secs_f64());
+        return;
+    }
     let churn = args.iter().any(|a| a == "--churn");
-    let exp = if smoke {
+    let adaptive = args.iter().any(|a| a == "--adaptive");
+    let exp = if adaptive {
+        if smoke {
+            ScenarioExperiment::adaptive_smoke()
+        } else {
+            ScenarioExperiment::adaptive_suite()
+        }
+    } else if smoke {
         ScenarioExperiment::smoke()
     } else if args.iter().any(|a| a == "--scale") {
         ScenarioExperiment::scale_suite()
@@ -147,6 +247,71 @@ fn main() {
                     )
                 );
             }
+        }
+    }
+
+    // Adaptive rung: controller-vs-static comparison, per-scenario
+    // attribution, and the BENCH_adaptive.json feed for
+    // `bench_diff.py --adaptive` (report-only).
+    if adaptive {
+        println!("{}", report::adaptive_table("adaptive vs static", &exp, &results));
+        let mut json = BenchJson::new();
+        for &kind in &exp.scenarios {
+            for &n_procs in &exp.proc_counts {
+                let ad = results.select_adaptive(kind, n_procs);
+                if ad.is_empty() {
+                    continue;
+                }
+                println!(
+                    "{}",
+                    report::adaptive_phase_attribution(
+                        "time-resolved QoS",
+                        &results,
+                        kind,
+                        n_procs,
+                    )
+                );
+                let fails: Vec<f64> = ad.iter().map(|p| p.failure_rate).collect();
+                json.push(
+                    &format!("adaptive failure {} ({n_procs} procs)", kind.label()),
+                    "rate",
+                    mean(&fails),
+                    median(&fails),
+                    quantile(&fails, 0.95),
+                );
+                let best_static = exp
+                    .modes
+                    .iter()
+                    .map(|&m| {
+                        median(
+                            &results
+                                .select(kind, m, n_procs)
+                                .iter()
+                                .map(|p| p.failure_rate)
+                                .collect::<Vec<_>>(),
+                        )
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                json.push(
+                    &format!("best static failure {} ({n_procs} procs)", kind.label()),
+                    "rate",
+                    best_static,
+                    best_static,
+                    best_static,
+                );
+                let flips: Vec<f64> = ad.iter().map(|p| p.policy_flips as f64).collect();
+                json.push(
+                    &format!("adaptive flips {} ({n_procs} procs)", kind.label()),
+                    "count",
+                    mean(&flips),
+                    median(&flips),
+                    quantile(&flips, 0.95),
+                );
+            }
+        }
+        match json.write("bench_fault_scenarios_adaptive", "BENCH_adaptive.json") {
+            Ok(p) => eprintln!("[scenarios] wrote {}", p.display()),
+            Err(e) => eprintln!("failed to write BENCH_adaptive.json: {e}"),
         }
     }
 

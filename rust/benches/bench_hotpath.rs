@@ -127,7 +127,7 @@ fn des_run(
     seed: u64,
 ) -> ebcomm::sim::SimResult<GraphColoringShard> {
     let (topo, profiles, shards) = des_inputs(procs, seed);
-    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(procs), run_for);
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(procs), run_for);
     cfg.send_buffer = 64;
     Engine::new(cfg, topo, profiles, shards).run()
 }
@@ -275,7 +275,7 @@ fn main() {
         let mut s = Vec::with_capacity(samples);
         for _ in 0..samples {
             let (topo, profiles, shards) = des_inputs(procs, 0xC0);
-            let mut cfg = SimConfig::new(
+            let mut cfg = SimConfig::from_env(
                 AsyncMode::BestEffort,
                 ModeTiming::graph_coloring(procs),
                 MILLI,
@@ -381,7 +381,7 @@ fn main() {
                     )
                 })
                 .collect();
-            let mut cfg = SimConfig::new(
+            let mut cfg = SimConfig::from_env(
                 AsyncMode::BestEffort,
                 ModeTiming::graph_coloring(256),
                 10 * MILLI,
@@ -417,7 +417,7 @@ fn main() {
     println!("== checkpoint round-trip (256 procs, info only) ==");
     {
         let (topo, profiles, shards) = des_inputs(256, 0xCE);
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(256),
             10 * MILLI,

@@ -68,7 +68,7 @@ fn memory_diet_rung(procs: usize, run_for: Nanos, json: &mut BenchJson) {
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(
+    let mut cfg = SimConfig::from_env(
         AsyncMode::BestEffort,
         ModeTiming::graph_coloring(procs),
         run_for,
@@ -189,7 +189,7 @@ fn qos_sketch_rung(procs: usize, run_for: Nanos, exact_too: bool, json: &mut Ben
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(procs),
             run_for,

@@ -6,17 +6,19 @@
 //! uses `RefCell` storage — zero synchronization cost, same semantics and
 //! instrumentation as the other ducts.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 use std::sync::Arc;
 
 use super::stats::ChannelStats;
-use super::{ChannelConfig, SendOutcome};
+use super::{ChannelConfig, Discipline, SendOutcome};
 use crate::util::ring::{PushOutcome, RingBuffer};
 
 struct Shared<T> {
     buffer: RefCell<RingBuffer<T>>,
     stats: Arc<ChannelStats>,
+    /// Channel discipline, shared by both (same-thread) endpoints.
+    discipline: Cell<u8>,
 }
 
 /// Sender endpoint of an intra-thread duct (not `Send`).
@@ -34,6 +36,7 @@ pub fn intra_duct<T>(config: ChannelConfig) -> (IntraInlet<T>, IntraOutlet<T>) {
     let shared = Rc::new(Shared {
         buffer: RefCell::new(RingBuffer::new(config.capacity, config.overflow)),
         stats: ChannelStats::new(),
+        discipline: Cell::new(Discipline::BestEffort.as_u8()),
     });
     (
         IntraInlet {
@@ -60,6 +63,16 @@ impl<T> IntraInlet<T> {
     pub fn stats(&self) -> &ChannelStats {
         &self.shared.stats
     }
+
+    /// This channel's communication discipline.
+    pub fn discipline(&self) -> Discipline {
+        Discipline::from_u8(self.shared.discipline.get()).unwrap_or(Discipline::BestEffort)
+    }
+
+    /// Restamp the channel's discipline (visible to both endpoints).
+    pub fn set_discipline(&self, d: Discipline) {
+        self.shared.discipline.set(d.as_u8());
+    }
 }
 
 impl<T> IntraOutlet<T> {
@@ -84,11 +97,29 @@ impl<T> IntraOutlet<T> {
     pub fn stats(&self) -> &ChannelStats {
         &self.shared.stats
     }
+
+    /// This channel's communication discipline.
+    pub fn discipline(&self) -> Discipline {
+        Discipline::from_u8(self.shared.discipline.get()).unwrap_or(Discipline::BestEffort)
+    }
+
+    /// Restamp the channel's discipline (visible to both endpoints).
+    pub fn set_discipline(&self, d: Discipline) {
+        self.shared.discipline.set(d.as_u8());
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn discipline_restamp_is_shared() {
+        let (inlet, outlet) = intra_duct::<u8>(ChannelConfig::qos());
+        assert_eq!(outlet.discipline(), Discipline::BestEffort);
+        inlet.set_discipline(Discipline::Barriered);
+        assert_eq!(outlet.discipline(), Discipline::Barriered);
+    }
 
     #[test]
     fn roundtrip() {

@@ -107,12 +107,62 @@ impl ChannelConfig {
     }
 }
 
+/// Per-channel communication discipline, as the transport layer sees
+/// it. The DES derives one per channel from its `PolicyConfig`; the
+/// thread and multi-process executors stamp one onto each duct endpoint
+/// at setup (and the adaptive policy may restamp at runtime). The
+/// `uniform(mode)` constructor lives in `crate::sim::policy`, next to
+/// the mode vocabulary it maps from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Discipline {
+    /// Endpoints of this channel take part in barrier synchronization.
+    Barriered,
+    /// The channel free-runs: sends may fail, pulls never block.
+    BestEffort,
+    /// The channel carries no traffic at all (mode 4).
+    Muted,
+}
+
+impl Discipline {
+    /// Stable numeric encoding for atomic / serialized storage.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Discipline::Barriered => 0,
+            Discipline::BestEffort => 1,
+            Discipline::Muted => 2,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Discipline> {
+        match v {
+            0 => Some(Discipline::Barriered),
+            1 => Some(Discipline::BestEffort),
+            2 => Some(Discipline::Muted),
+            _ => None,
+        }
+    }
+
+    /// Does this channel carry traffic at all?
+    pub fn carries_traffic(self) -> bool {
+        self != Discipline::Muted
+    }
+}
+
 /// Generic sender endpoint.
 pub trait InletLike<T> {
     /// Best-effort put. Never blocks.
     fn put(&self, msg: T) -> SendOutcome;
     /// Instrumentation handle.
     fn stats(&self) -> &ChannelStats;
+    /// This channel's communication discipline. Backends that do not
+    /// store one report best-effort — the only semantics a conduit
+    /// guarantees by itself.
+    fn discipline(&self) -> Discipline {
+        Discipline::BestEffort
+    }
+    /// Restamp the channel's discipline. Backends without storage for
+    /// it ignore the call.
+    fn set_discipline(&self, _d: Discipline) {}
 }
 
 /// Generic receiver endpoint.
@@ -132,6 +182,12 @@ pub trait OutletLike<T> {
     fn pull_latest(&self) -> Option<T>;
     /// Instrumentation handle.
     fn stats(&self) -> &ChannelStats;
+    /// This channel's communication discipline (see [`InletLike`]).
+    fn discipline(&self) -> Discipline {
+        Discipline::BestEffort
+    }
+    /// Restamp the channel's discipline (ignored without storage).
+    fn set_discipline(&self, _d: Discipline) {}
 }
 
 pub use intra::{intra_duct, IntraInlet, IntraOutlet};

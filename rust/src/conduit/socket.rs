@@ -49,10 +49,11 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
-use super::{ChannelConfig, ChannelStats, InletLike, OutletLike, SendOutcome};
+use super::{ChannelConfig, ChannelStats, Discipline, InletLike, OutletLike, SendOutcome};
 use crate::qos::QuantileSketch;
 
 /// Fixed frame bytes after the length prefix: wire id, touch, t_sent.
@@ -347,6 +348,7 @@ impl SocketHub {
             core: Arc::clone(&self.core),
             tx: core.tx.len() - 1,
             stats,
+            discipline: AtomicU8::new(Discipline::BestEffort.as_u8()),
         }
     }
 
@@ -365,6 +367,7 @@ impl SocketHub {
             core: Arc::clone(&self.core),
             rx: idx,
             stats,
+            discipline: AtomicU8::new(Discipline::BestEffort.as_u8()),
         }
     }
 
@@ -444,10 +447,15 @@ impl SocketHub {
 }
 
 /// Sender endpoint of a socket duct.
+///
+/// Discipline is stored per endpoint (the peer endpoint lives in a
+/// different OS process); each executor stamps its own side from the
+/// same policy, so the two ends agree without wire traffic.
 pub struct SocketInlet {
     core: Arc<Mutex<HubCore>>,
     tx: usize,
     stats: Arc<ChannelStats>,
+    discipline: AtomicU8,
 }
 
 impl InletLike<WireEnvelope> for SocketInlet {
@@ -492,14 +500,25 @@ impl InletLike<WireEnvelope> for SocketInlet {
     fn stats(&self) -> &ChannelStats {
         &self.stats
     }
+
+    fn discipline(&self) -> Discipline {
+        Discipline::from_u8(self.discipline.load(Ordering::Relaxed))
+            .unwrap_or(Discipline::BestEffort)
+    }
+
+    fn set_discipline(&self, d: Discipline) {
+        self.discipline.store(d.as_u8(), Ordering::Relaxed);
+    }
 }
 
 /// Receiver endpoint of a socket duct. [`SocketHub::poll`] moves parsed
-/// frames into its queue; pulls never touch the stream.
+/// frames into its queue; pulls never touch the stream. Discipline is
+/// per-endpoint, like [`SocketInlet`]'s.
 pub struct SocketOutlet {
     core: Arc<Mutex<HubCore>>,
     rx: usize,
     stats: Arc<ChannelStats>,
+    discipline: AtomicU8,
 }
 
 impl SocketOutlet {
@@ -538,6 +557,15 @@ impl OutletLike<WireEnvelope> for SocketOutlet {
     fn stats(&self) -> &ChannelStats {
         &self.stats
     }
+
+    fn discipline(&self) -> Discipline {
+        Discipline::from_u8(self.discipline.load(Ordering::Relaxed))
+            .unwrap_or(Discipline::BestEffort)
+    }
+
+    fn set_discipline(&self, d: Discipline) {
+        self.discipline.store(d.as_u8(), Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -551,6 +579,20 @@ mod tests {
         let hub_b = SocketHub::new();
         let lb = hub_b.add_link(b).expect("add link b");
         (hub_a, la, hub_b, lb)
+    }
+
+    #[test]
+    fn discipline_stamp_is_per_endpoint() {
+        let (hub_a, la, hub_b, _lb) = linked_hubs();
+        let inlet = hub_a.open_sender(la, 11, ChannelConfig::qos());
+        let outlet = hub_b.open_receiver(11);
+        assert_eq!(inlet.discipline(), Discipline::BestEffort);
+        assert_eq!(outlet.discipline(), Discipline::BestEffort);
+        inlet.set_discipline(Discipline::Barriered);
+        assert_eq!(inlet.discipline(), Discipline::Barriered);
+        // Cross-process endpoints do not share storage: each executor
+        // stamps its own side.
+        assert_eq!(outlet.discipline(), Discipline::BestEffort);
     }
 
     #[test]

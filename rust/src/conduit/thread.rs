@@ -7,10 +7,11 @@
 //! failures cannot occur (§III-E.5) — but pulls contend on the mutex, and
 //! arrival can be clumpy when the reader is descheduled.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::stats::ChannelStats;
-use super::{ChannelConfig, InletLike, OutletLike, SendOutcome};
+use super::{ChannelConfig, Discipline, InletLike, OutletLike, SendOutcome};
 use crate::util::ring::{PushOutcome, RingBuffer};
 #[cfg(test)]
 use crate::util::ring::Overflow;
@@ -18,6 +19,20 @@ use crate::util::ring::Overflow;
 struct Shared<T> {
     buffer: Mutex<RingBuffer<T>>,
     stats: Arc<ChannelStats>,
+    /// Channel discipline, shared by both endpoints (relaxed atomics:
+    /// a restamp only steers *future* pull/send gating decisions).
+    discipline: AtomicU8,
+}
+
+impl<T> Shared<T> {
+    fn discipline(&self) -> Discipline {
+        Discipline::from_u8(self.discipline.load(Ordering::Relaxed))
+            .unwrap_or(Discipline::BestEffort)
+    }
+
+    fn set_discipline(&self, d: Discipline) {
+        self.discipline.store(d.as_u8(), Ordering::Relaxed);
+    }
 }
 
 /// Sender endpoint of a thread duct.
@@ -35,6 +50,7 @@ pub fn thread_duct<T>(config: ChannelConfig) -> (ThreadInlet<T>, ThreadOutlet<T>
     let shared = Arc::new(Shared {
         buffer: Mutex::new(RingBuffer::new(config.capacity, config.overflow)),
         stats: ChannelStats::new(),
+        discipline: AtomicU8::new(Discipline::BestEffort.as_u8()),
     });
     (
         ThreadInlet {
@@ -63,6 +79,14 @@ impl<T> InletLike<T> for ThreadInlet<T> {
 
     fn stats(&self) -> &ChannelStats {
         &self.shared.stats
+    }
+
+    fn discipline(&self) -> Discipline {
+        self.shared.discipline()
+    }
+
+    fn set_discipline(&self, d: Discipline) {
+        self.shared.set_discipline(d);
     }
 }
 
@@ -97,6 +121,14 @@ impl<T> OutletLike<T> for ThreadOutlet<T> {
 
     fn stats(&self) -> &ChannelStats {
         &self.shared.stats
+    }
+
+    fn discipline(&self) -> Discipline {
+        self.shared.discipline()
+    }
+
+    fn set_discipline(&self, d: Discipline) {
+        self.shared.set_discipline(d);
     }
 }
 
@@ -133,6 +165,17 @@ mod tests {
             });
         });
         assert_eq!(outlet.pull_all().len(), 8);
+    }
+
+    #[test]
+    fn discipline_is_shared_between_endpoints() {
+        let (inlet, outlet) = thread_duct::<u64>(ChannelConfig::qos());
+        assert_eq!(inlet.discipline(), Discipline::BestEffort);
+        inlet.set_discipline(Discipline::Barriered);
+        assert_eq!(outlet.discipline(), Discipline::Barriered);
+        outlet.set_discipline(Discipline::Muted);
+        assert_eq!(inlet.discipline(), Discipline::Muted);
+        assert!(!inlet.discipline().carries_traffic());
     }
 
     #[test]

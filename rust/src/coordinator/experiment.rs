@@ -423,6 +423,13 @@ pub struct ScenarioExperiment {
     pub run_for: Nanos,
     pub send_buffer: usize,
     pub seed: u64,
+    /// When set, the sweep appends one adaptive-controller cell family
+    /// per (scenario, procs, replicate) on top of the static `modes`
+    /// grid: base mode 0 (Sync) under
+    /// `PolicyConfig::Adaptive(AdaptiveConfig::paper_defaults(..))`.
+    /// Static cells keep their historical seed packing bit-identically;
+    /// adaptive cells get a disjoint seed slot (bit 40).
+    pub adaptive: bool,
 }
 
 impl ScenarioExperiment {
@@ -453,7 +460,48 @@ impl ScenarioExperiment {
             run_for,
             send_buffer: 64,
             seed: 0xFA57,
+            adaptive: false,
         }
+    }
+
+    /// Adaptive-vs-static sweep: every canned shape (plus the
+    /// process-scoped leave/join storm) × static modes 0–3 × one
+    /// adaptive cell family (base mode 0, paper-default controller
+    /// thresholds) at the §III-G 64-proc allocation. The comparison the
+    /// controller exists for: does flipping only the degraded channels
+    /// to best-effort match — or beat — the best static mode's median
+    /// failure rate per scenario family, without giving up mode 0's
+    /// quiescent discipline?
+    pub fn adaptive_suite() -> Self {
+        let mut e = Self::paper_suite();
+        e.name = "fault_scenarios_adaptive";
+        let mut scenarios = ScenarioKind::ALL.to_vec();
+        scenarios.push(ScenarioKind::LeaveJoinStorm);
+        e.scenarios = scenarios;
+        e.proc_counts = vec![64];
+        e.replicates = if full_scale() { 5 } else { 2 };
+        e.adaptive = true;
+        e
+    }
+
+    /// CI-sized rung of [`Self::adaptive_suite`]: three shapes, modes 0
+    /// and 3 static, 16 procs, one replicate — exercises controller
+    /// escalation, heal-back, and the adaptive report section in
+    /// seconds.
+    pub fn adaptive_smoke() -> Self {
+        let mut e = Self::adaptive_suite();
+        e.name = "fault_scenarios_adaptive_smoke";
+        e.scenarios = vec![
+            ScenarioKind::Baseline,
+            ScenarioKind::Lac417Static,
+            ScenarioKind::FlappingClique,
+        ];
+        e.modes = vec![AsyncMode::Sync, AsyncMode::BestEffort];
+        e.proc_counts = vec![16];
+        e.replicates = 1;
+        e.schedule = SnapshotSchedule::compressed(150 * MILLI, 150 * MILLI, 50 * MILLI, 4);
+        e.run_for = 700 * MILLI;
+        e
     }
 
     /// Scale rung of the scenario sweep: baseline + congestion storm at
@@ -679,5 +727,22 @@ mod tests {
         let s = ScenarioExperiment::smoke();
         assert!(s.scenarios.len() < e.scenarios.len());
         assert_eq!(s.replicates, 1);
+    }
+
+    #[test]
+    fn adaptive_suite_extends_static_grid() {
+        let e = ScenarioExperiment::adaptive_suite();
+        assert!(e.adaptive);
+        assert_eq!(e.modes.len(), 4, "static comparison arms stay intact");
+        assert!(e.scenarios.contains(&ScenarioKind::LeaveJoinStorm));
+        assert_eq!(e.proc_counts, vec![64]);
+        assert!(
+            !ScenarioExperiment::paper_suite().adaptive,
+            "historical suites stay static (seed grid frozen)"
+        );
+        let s = ScenarioExperiment::adaptive_smoke();
+        assert!(s.adaptive);
+        assert_eq!(s.replicates, 1);
+        assert!(s.scenarios.len() < e.scenarios.len());
     }
 }

@@ -228,6 +228,36 @@ pub fn scenario_table(title: &str, exp: &ScenarioExperiment, results: &ScenarioR
     out
 }
 
+/// Shared body of every phase-attribution table: per QoS metric, count
+/// and median over quiescent vs fault-active window populations.
+/// `split` supplies the two populations for one metric; the DES,
+/// adaptive, and hardware attribution blocks all render through here so
+/// their column layouts cannot drift apart.
+fn phase_attribution_body(split: impl Fn(MetricName) -> (Vec<f64>, Vec<f64>)) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+        "metric", "n(quiet)", "med(quiet)", "n(fault)", "med(fault)"
+    ));
+    for metric in MetricName::ALL {
+        let (quiet, fault) = split(metric);
+        let (mq, mf) = (median(&quiet), median(&fault));
+        let (sq, sf) = match metric {
+            MetricName::SimstepPeriod | MetricName::WalltimeLatency => (fmt_ns(mq), fmt_ns(mf)),
+            _ => (format!("{mq:.4}"), format!("{mf:.4}")),
+        };
+        out.push_str(&format!(
+            "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
+            metric.label(),
+            quiet.len(),
+            sq,
+            fault.len(),
+            sf,
+        ));
+    }
+    out
+}
+
 /// Time-resolved attribution block for one treatment: every QoS metric's
 /// median over quiescent windows vs fault-active windows — the query the
 /// scenario subsystem exists to answer.
@@ -245,25 +275,99 @@ pub fn phase_attribution(
         n_procs,
         mode.label()
     ));
+    out.push_str(&phase_attribution_body(|metric| {
+        results.phase_split(scenario, mode, n_procs, metric)
+    }));
+    out
+}
+
+/// [`phase_attribution`] for the adaptive-controller treatment of one
+/// (scenario, procs) cell family.
+pub fn adaptive_phase_attribution(
+    title: &str,
+    results: &ScenarioResults,
+    scenario: ScenarioKind,
+    n_procs: usize,
+) -> String {
+    let mut out = String::new();
     out.push_str(&format!(
-        "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
-        "metric", "n(quiet)", "med(quiet)", "n(fault)", "med(fault)"
+        "== {title}: {} @ {} procs, adaptive ==\n",
+        scenario.label(),
+        n_procs,
     ));
-    for metric in MetricName::ALL {
-        let (quiet, fault) = results.phase_split(scenario, mode, n_procs, metric);
-        let (mq, mf) = (median(&quiet), median(&fault));
-        let (sq, sf) = match metric {
-            MetricName::SimstepPeriod | MetricName::WalltimeLatency => (fmt_ns(mq), fmt_ns(mf)),
-            _ => (format!("{mq:.4}"), format!("{mf:.4}")),
-        };
-        out.push_str(&format!(
-            "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
-            metric.label(),
-            quiet.len(),
-            sq,
-            fault.len(),
-            sf,
-        ));
+    out.push_str(&phase_attribution_body(|metric| {
+        results.phase_split_adaptive(scenario, n_procs, metric)
+    }));
+    out
+}
+
+/// Adaptive-vs-static comparison: per (scenario, procs), the best
+/// static mode by median whole-run delivery failure against the
+/// adaptive controller's cells, with controller activity (escalations,
+/// heal-backs, channels still escalated at run end). The acceptance
+/// question for the controller: does it match or beat the best static
+/// mode per fault family?
+pub fn adaptive_table(
+    title: &str,
+    exp: &ScenarioExperiment,
+    results: &ScenarioResults,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<18} {:>6} {:<12} {:>11} {:>11} {:>6} {:>6} {:>8} {:>9}\n",
+        "scenario",
+        "procs",
+        "best static",
+        "stat fail",
+        "adpt fail",
+        "flips",
+        "heals",
+        "esc@end",
+        "verdict"
+    ));
+    for &kind in &exp.scenarios {
+        for &n_procs in &exp.proc_counts {
+            let ad = results.select_adaptive(kind, n_procs);
+            if ad.is_empty() {
+                continue;
+            }
+            let mut best: Option<(AsyncMode, f64)> = None;
+            for &mode in &exp.modes {
+                let cells = results.select(kind, mode, n_procs);
+                if cells.is_empty() {
+                    continue;
+                }
+                let f = median(&cells.iter().map(|p| p.failure_rate).collect::<Vec<_>>());
+                if best.is_none() || f < best.unwrap().1 {
+                    best = Some((mode, f));
+                }
+            }
+            let Some((best_mode, best_fail)) = best else {
+                continue;
+            };
+            let adpt_fail = median(&ad.iter().map(|p| p.failure_rate).collect::<Vec<_>>());
+            let flips: u64 = ad.iter().map(|p| p.policy_flips).sum();
+            let heals: u64 = ad.iter().map(|p| p.policy_heals).sum();
+            let esc: u64 = ad.iter().map(|p| p.policy_escalated_final).sum();
+            let verdict = if adpt_fail <= best_fail {
+                "<= best"
+            } else {
+                "> best"
+            };
+            out.push_str(&format!(
+                "{:<18} {:>6} {:<12} {:>11.4} {:>11.4} {:>6} {:>6} {:>8} {:>9}\n",
+                kind.label(),
+                n_procs,
+                format!("mode {}", best_mode.index()),
+                best_fail,
+                adpt_fail,
+                flips,
+                heals,
+                esc,
+                verdict,
+            ));
+        }
     }
     out
 }
@@ -286,6 +390,7 @@ pub fn scenario_csv(results: &ScenarioResults) -> CsvTable {
         "walltime_latency_ns",
         "delivery_failure_rate",
         "delivery_clumpiness",
+        "adaptive",
     ]);
     for p in &results.points {
         for (w, (m, ph)) in p.qos.snapshots.iter().zip(p.qos.phases.iter()).enumerate() {
@@ -301,6 +406,7 @@ pub fn scenario_csv(results: &ScenarioResults) -> CsvTable {
                 format!("{}", m.walltime_latency_ns),
                 format!("{}", m.delivery_failure_rate),
                 format!("{}", m.delivery_clumpiness),
+                u8::from(p.adaptive).to_string(),
             ]);
         }
     }
@@ -364,26 +470,9 @@ pub fn hardware_phase_attribution(
         "== {title}: {n_shards} shards, {} ==\n",
         mode.label()
     ));
-    out.push_str(&format!(
-        "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
-        "metric", "n(quiet)", "med(quiet)", "n(fault)", "med(fault)"
-    ));
-    for metric in MetricName::ALL {
-        let (quiet, fault) = results.phase_split(mode, n_shards, metric);
-        let (mq, mf) = (median(&quiet), median(&fault));
-        let (sq, sf) = match metric {
-            MetricName::SimstepPeriod | MetricName::WalltimeLatency => (fmt_ns(mq), fmt_ns(mf)),
-            _ => (format!("{mq:.4}"), format!("{mf:.4}")),
-        };
-        out.push_str(&format!(
-            "{:<26} {:>8} {:>14} {:>8} {:>14}\n",
-            metric.label(),
-            quiet.len(),
-            sq,
-            fault.len(),
-            sf,
-        ));
-    }
+    out.push_str(&phase_attribution_body(|metric| {
+        results.phase_split(mode, n_shards, metric)
+    }));
     out
 }
 
@@ -580,6 +669,10 @@ mod tests {
                 mode: AsyncMode::BestEffort,
                 n_procs: 4,
                 replicate: 0,
+                adaptive: false,
+                policy_flips: 0,
+                policy_heals: 0,
+                policy_escalated_final: 0,
                 qos,
                 updates: vec![10; 4],
                 update_rate_hz: 1000.0,
@@ -602,6 +695,69 @@ mod tests {
         assert!(attr.contains("10ns"), "quiet median missing: {attr}");
         assert!(attr.contains("900ns"), "fault median missing: {attr}");
         assert_eq!(scenario_csv(&results).n_rows(), 2);
+    }
+
+    #[test]
+    fn adaptive_report_compares_against_best_static() {
+        use crate::coordinator::runner::{ScenarioPoint, ScenarioResults};
+        use crate::faults::ScenarioPhase;
+
+        let mk_metrics = |period| QosMetrics {
+            simstep_period_ns: period,
+            simstep_latency: 2.0,
+            walltime_latency_ns: 2.0 * period,
+            delivery_failure_rate: 0.1,
+            delivery_clumpiness: 0.2,
+        };
+        let mk_point = |mode, adaptive, failure_rate, flips| {
+            let mut qos = ReplicateQos::default();
+            qos.push_phased(mk_metrics(10.0), ScenarioPhase::QUIESCENT);
+            qos.push_phased(mk_metrics(500.0), ScenarioPhase::single(0));
+            ScenarioPoint {
+                scenario: ScenarioKind::Lac417Static,
+                mode,
+                n_procs: 4,
+                replicate: 0,
+                adaptive,
+                policy_flips: flips,
+                policy_heals: 0,
+                policy_escalated_final: flips,
+                qos,
+                updates: vec![10; 4],
+                update_rate_hz: 1000.0,
+                failure_rate,
+            }
+        };
+        let results = ScenarioResults {
+            points: vec![
+                mk_point(AsyncMode::Sync, false, 0.20, 0),
+                mk_point(AsyncMode::BestEffort, false, 0.08, 0),
+                mk_point(AsyncMode::Sync, true, 0.05, 3),
+            ],
+        };
+        let mut exp = ScenarioExperiment::adaptive_smoke();
+        exp.scenarios = vec![ScenarioKind::Lac417Static];
+        exp.proc_counts = vec![4];
+
+        // Static selectors must not leak the adaptive cell.
+        assert_eq!(results.select(ScenarioKind::Lac417Static, AsyncMode::Sync, 4).len(), 1);
+        assert_eq!(results.select_adaptive(ScenarioKind::Lac417Static, 4).len(), 1);
+
+        let t = adaptive_table("adaptive vs static", &exp, &results);
+        // Best static arm is mode 3 (0.08); adaptive (0.05) beats it.
+        assert!(t.contains("mode 3"), "{t}");
+        assert!(t.contains("<= best"), "{t}");
+        assert!(t.contains("0.0500"), "{t}");
+
+        let attr =
+            adaptive_phase_attribution("adaptive attribution", &results, ScenarioKind::Lac417Static, 4);
+        assert!(attr.contains("adaptive"), "{attr}");
+        assert!(attr.contains("500ns"), "fault median missing: {attr}");
+
+        // CSV tags adaptive rows.
+        let csv = scenario_csv(&results).render();
+        assert!(csv.lines().next().unwrap().ends_with("adaptive"), "{csv}");
+        assert!(csv.lines().any(|l| l.ends_with(",1")), "{csv}");
     }
 
     #[test]

@@ -10,7 +10,10 @@
 use crate::faults::ScenarioPhase;
 use crate::net::{NodeProfile, Topology};
 use crate::qos::{MetricName, ReplicateQos};
-use crate::sim::{healthy_profiles, heterogeneous_profiles, AsyncMode, Engine, SimConfig, SimResult};
+use crate::sim::{
+    healthy_profiles, heterogeneous_profiles, AdaptiveConfig, AsyncMode, Engine, ModeTiming,
+    PolicyConfig, SimConfig, SimResult,
+};
 use crate::util::parallel::{default_workers, log_telemetry, parallel_map_lpt};
 use crate::util::rng::Xoshiro256;
 use crate::util::Nanos;
@@ -79,13 +82,44 @@ fn cell_cost_hint(n_procs: usize, mode: AsyncMode) -> u64 {
     (n_procs as u64).saturating_mul(mode_weight)
 }
 
+/// One `ModeTiming` per distinct CPU count, interned once before a sweep
+/// fans out. Cells used to re-derive the timing — and, for benchmark
+/// sweeps, re-read the `EBCOMM_FULL` env — once per cell; interning
+/// makes every cell of a rung share a single copy and keeps env reads
+/// out of the parallel fan-out. Lookup is a linear scan: sweeps have a
+/// handful of distinct rungs.
+struct TimingInterner {
+    entries: Vec<(usize, ModeTiming)>,
+}
+
+impl TimingInterner {
+    fn build(counts: &[usize], derive: impl Fn(usize) -> ModeTiming) -> Self {
+        let mut entries: Vec<(usize, ModeTiming)> = Vec::new();
+        for &n in counts {
+            if !entries.iter().any(|(c, _)| *c == n) {
+                entries.push((n, derive(n)));
+            }
+        }
+        Self { entries }
+    }
+
+    fn get(&self, n: usize) -> ModeTiming {
+        self.entries
+            .iter()
+            .find(|(c, _)| *c == n)
+            .map(|(_, t)| *t)
+            .expect("CPU count interned before fan-out")
+    }
+}
+
 fn sim_config(
     exp: &BenchmarkExperiment,
+    timing: ModeTiming,
     mode: AsyncMode,
     n_cpus: usize,
     replicate: usize,
 ) -> SimConfig {
-    let mut cfg = SimConfig::new(mode, exp.timing(n_cpus), exp.run_for);
+    let mut cfg = SimConfig::from_env(mode, timing, exp.run_for);
     cfg.backend = exp.backend();
     cfg.seed = exp
         .seed
@@ -102,11 +136,12 @@ fn sim_config(
 /// in any order.
 fn run_benchmark_cell(
     exp: &BenchmarkExperiment,
+    timings: &TimingInterner,
     mode: AsyncMode,
     n_cpus: usize,
     rep: usize,
 ) -> BenchmarkPoint {
-    let cfg = sim_config(exp, mode, n_cpus, rep);
+    let cfg = sim_config(exp, timings.get(n_cpus), mode, n_cpus, rep);
     let topo = Topology::new(n_cpus, exp.placement());
     // Heterogeneous node speeds (paper SII-F1) drive the straggler
     // effects the benchmarks measure.
@@ -174,11 +209,12 @@ pub fn run_benchmark_with_workers(
             }
         }
     }
+    let interned = TimingInterner::build(&exp.cpu_counts, |n| exp.timing(n));
     let (points, timings) = parallel_map_lpt(
         workers,
         &cells,
         |&(n_cpus, mode, _)| cell_cost_hint(n_cpus, mode),
-        |&(n_cpus, mode, rep)| run_benchmark_cell(exp, mode, n_cpus, rep),
+        |&(n_cpus, mode, rep)| run_benchmark_cell(exp, &interned, mode, n_cpus, rep),
     );
     log_telemetry(exp.name, &timings);
     BenchmarkResults { points }
@@ -249,7 +285,7 @@ fn run_qos_replicate(exp: &QosExperiment, rep: usize) -> QosReplicate {
         }
     }
     let timing = crate::sim::ModeTiming::graph_coloring(exp.n_procs);
-    let mut cfg = SimConfig::new(AsyncMode::BestEffort, timing, exp.run_for);
+    let mut cfg = SimConfig::from_env(AsyncMode::BestEffort, timing, exp.run_for);
     cfg.backend = exp.backend;
     cfg.seed = exp.seed.wrapping_add((rep as u64) << 24);
     cfg.send_buffer = exp.send_buffer;
@@ -299,9 +335,19 @@ pub fn run_qos_with_workers(exp: &QosExperiment, workers: usize) -> QosResults {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScenarioPoint {
     pub scenario: ScenarioKind,
+    /// Static mode of the cell, or the *base* mode when `adaptive`.
     pub mode: AsyncMode,
     pub n_procs: usize,
     pub replicate: usize,
+    /// Cell ran under the adaptive per-channel controller rather than a
+    /// static uniform mode.
+    pub adaptive: bool,
+    /// Controller escalations (channel → best-effort) over the run.
+    pub policy_flips: u64,
+    /// Controller heal-backs (channel → base discipline) over the run.
+    pub policy_heals: u64,
+    /// Channels still escalated when the run ended.
+    pub policy_escalated_final: u64,
     /// Per-window QoS with scenario-phase tags (time-resolved
     /// attribution).
     pub qos: ReplicateQos,
@@ -320,7 +366,10 @@ pub struct ScenarioResults {
 }
 
 impl ScenarioResults {
-    /// Cells of one (scenario, mode, procs) treatment, replicate order.
+    /// Cells of one *static* (scenario, mode, procs) treatment,
+    /// replicate order. Adaptive cells share a base mode with a static
+    /// arm, so they are excluded here — fetch them with
+    /// [`Self::select_adaptive`].
     pub fn select(
         &self,
         scenario: ScenarioKind,
@@ -329,8 +378,48 @@ impl ScenarioResults {
     ) -> Vec<&ScenarioPoint> {
         self.points
             .iter()
-            .filter(|p| p.scenario == scenario && p.mode == mode && p.n_procs == n_procs)
+            .filter(|p| {
+                p.scenario == scenario && p.mode == mode && p.n_procs == n_procs && !p.adaptive
+            })
             .collect()
+    }
+
+    /// Adaptive-controller cells of one (scenario, procs) treatment,
+    /// replicate order.
+    pub fn select_adaptive(&self, scenario: ScenarioKind, n_procs: usize) -> Vec<&ScenarioPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.scenario == scenario && p.n_procs == n_procs && p.adaptive)
+            .collect()
+    }
+
+    /// Per-replicate medians of a metric for the adaptive treatment.
+    pub fn replicate_medians_adaptive(
+        &self,
+        scenario: ScenarioKind,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> Vec<f64> {
+        self.select_adaptive(scenario, n_procs)
+            .iter()
+            .map(|p| p.qos.median(metric))
+            .collect()
+    }
+
+    /// [`Self::phase_split`] for the adaptive treatment.
+    pub fn phase_split_adaptive(
+        &self,
+        scenario: ScenarioKind,
+        n_procs: usize,
+        metric: MetricName,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut quiescent = Vec::new();
+        let mut faulted = Vec::new();
+        for p in self.select_adaptive(scenario, n_procs) {
+            quiescent.extend(p.qos.values_where(metric, ScenarioPhase::is_quiescent));
+            faulted.extend(p.qos.values_where(metric, |ph| !ph.is_quiescent()));
+        }
+        (quiescent, faulted)
     }
 
     /// All snapshot values of a metric for one treatment, flattened
@@ -402,17 +491,24 @@ impl ScenarioResults {
 /// control.
 fn run_scenario_cell(
     exp: &ScenarioExperiment,
+    timings: &TimingInterner,
     kind: ScenarioKind,
     mode: AsyncMode,
     n_procs: usize,
     rep: usize,
+    adaptive: bool,
 ) -> ScenarioPoint {
     let topo = Topology::new(n_procs, exp.placement());
     let profiles = healthy_profiles(&topo);
-    let timing = crate::sim::ModeTiming::graph_coloring(n_procs);
-    let mut cfg = SimConfig::new(mode, timing, exp.run_for);
+    let mut cfg = SimConfig::from_env(mode, timings.get(n_procs), exp.run_for);
+    if adaptive {
+        cfg = cfg.with_policy(PolicyConfig::Adaptive(AdaptiveConfig::paper_defaults(mode)));
+    }
+    // Static cells keep the historical packing bit-identically; adaptive
+    // cells take a disjoint slot (bit 40, above every static field).
     cfg.seed = exp
         .seed
+        .wrapping_add((adaptive as u64) << 40)
         .wrapping_add((rep as u64) << 32)
         .wrapping_add((kind.index() as u64) << 24)
         .wrapping_add((mode.index() as u64) << 16)
@@ -439,6 +535,10 @@ fn run_scenario_cell(
         mode,
         n_procs,
         replicate: rep,
+        adaptive,
+        policy_flips: result.policy_flips,
+        policy_heals: result.policy_heals,
+        policy_escalated_final: result.policy_escalated_final,
         update_rate_hz: result.update_rate_per_cpu_hz(),
         failure_rate: result.overall_failure_rate(),
         updates: result.updates,
@@ -456,12 +556,22 @@ pub fn run_scenario(exp: &ScenarioExperiment) -> ScenarioResults {
 /// order whatever the worker count; claiming is LPT-ordered
 /// ([`cell_cost_hint`]) so the largest-scale cells start first.
 pub fn run_scenario_with_workers(exp: &ScenarioExperiment, workers: usize) -> ScenarioResults {
-    let mut cells: Vec<(ScenarioKind, AsyncMode, usize, usize)> = Vec::new();
+    let interned = TimingInterner::build(&exp.proc_counts, ModeTiming::graph_coloring);
+    let mut cells: Vec<(ScenarioKind, AsyncMode, usize, usize, bool)> = Vec::new();
     for &kind in &exp.scenarios {
         for &mode in &exp.modes {
             for &n_procs in &exp.proc_counts {
                 for rep in 0..exp.replicates {
-                    cells.push((kind, mode, n_procs, rep));
+                    cells.push((kind, mode, n_procs, rep, false));
+                }
+            }
+        }
+        if exp.adaptive {
+            // Adaptive arm rides behind the scenario's static modes:
+            // base mode 0 under the paper-default controller.
+            for &n_procs in &exp.proc_counts {
+                for rep in 0..exp.replicates {
+                    cells.push((kind, AsyncMode::Sync, n_procs, rep, true));
                 }
             }
         }
@@ -469,8 +579,14 @@ pub fn run_scenario_with_workers(exp: &ScenarioExperiment, workers: usize) -> Sc
     let (points, timings) = parallel_map_lpt(
         workers,
         &cells,
-        |&(_, mode, n_procs, _)| cell_cost_hint(n_procs, mode),
-        |&(kind, mode, n_procs, rep)| run_scenario_cell(exp, kind, mode, n_procs, rep),
+        // Adaptive cells can free-run most of the window once escalated,
+        // so hint them like best-effort, not their sync base.
+        |&(_, mode, n_procs, _, adaptive)| {
+            cell_cost_hint(n_procs, if adaptive { AsyncMode::BestEffort } else { mode })
+        },
+        |&(kind, mode, n_procs, rep, adaptive)| {
+            run_scenario_cell(exp, &interned, kind, mode, n_procs, rep, adaptive)
+        },
     );
     log_telemetry(exp.name, &timings);
     ScenarioResults { points }
@@ -610,6 +726,57 @@ mod tests {
             MetricName::SimstepPeriod,
         );
         assert!(!sf.is_empty(), "storm must overlap at least one window");
+    }
+
+    fn tiny_adaptive() -> ScenarioExperiment {
+        let mut e = ScenarioExperiment::adaptive_smoke();
+        e.scenarios = vec![ScenarioKind::Baseline, ScenarioKind::CongestionStorm];
+        e.proc_counts = vec![8];
+        // Storm spans 350–600 ms of the 1 s window; snapshot windows at
+        // 100/200/300 ms calibrate healthy baselines, 400/500 ms sit in
+        // the storm (25x latency, well past the 2.5x escalation ratio),
+        // 600–800 ms give the controller room to heal.
+        e.schedule =
+            crate::qos::SnapshotSchedule::compressed(100 * MILLI, 100 * MILLI, 50 * MILLI, 8);
+        e.run_for = 1000 * MILLI;
+        e
+    }
+
+    #[test]
+    fn adaptive_cells_ride_behind_static_grid() {
+        let exp = tiny_adaptive();
+        let res = run_scenario(&exp);
+        // 2 scenarios x (2 static modes + 1 adaptive family) x 1 rep.
+        assert_eq!(res.points.len(), 2 * 3);
+        let stat = res.select(ScenarioKind::CongestionStorm, AsyncMode::Sync, 8);
+        assert_eq!(stat.len(), 1, "static select must exclude adaptive cells");
+        assert!(!stat[0].adaptive);
+        assert_eq!(stat[0].policy_flips, 0, "uniform cells never flip");
+        let ad = res.select_adaptive(ScenarioKind::CongestionStorm, 8);
+        assert_eq!(ad.len(), 1);
+        assert!(ad[0].adaptive);
+        assert_eq!(ad[0].mode, AsyncMode::Sync, "base mode recorded");
+        // A fabric-wide 25x latency storm after healthy calibration
+        // windows must trip the controller on at least one channel.
+        assert!(ad[0].policy_flips > 0, "controller never escalated");
+        assert!(!res
+            .replicate_medians_adaptive(
+                ScenarioKind::Baseline,
+                8,
+                MetricName::SimstepPeriod
+            )
+            .is_empty());
+        let (q, f) =
+            res.phase_split_adaptive(ScenarioKind::CongestionStorm, 8, MetricName::SimstepPeriod);
+        assert!(!q.is_empty() && !f.is_empty(), "storm windows tagged");
+    }
+
+    #[test]
+    fn parallel_adaptive_sweep_is_bitwise_identical_to_serial() {
+        let exp = tiny_adaptive();
+        let serial = run_scenario_with_workers(&exp, 1);
+        let parallel = run_scenario_with_workers(&exp, 4);
+        assert_eq!(serial, parallel);
     }
 
     #[test]

@@ -58,8 +58,9 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::conduit::{
-    intra_duct, ChannelConfig, ChannelStats, CounterTranche, InletLike, IntraInlet, IntraOutlet,
-    OutletLike, SendOutcome, SocketHub, SocketInlet, SocketOutlet, StageLatencies, WireEnvelope,
+    intra_duct, ChannelConfig, ChannelStats, CounterTranche, Discipline, InletLike, IntraInlet,
+    IntraOutlet, OutletLike, SendOutcome, SocketHub, SocketInlet, SocketOutlet, StageLatencies,
+    WireEnvelope,
 };
 use crate::faults::{FaultScenario, ScenarioPhase};
 use crate::net::{PlacementKind, Topology};
@@ -123,6 +124,12 @@ pub struct MultiprocConfig {
     /// Spin units injected per update per unit of active degradation
     /// (same semantics as the thread executor).
     pub degrade_spin_units: u64,
+    /// Global channel ids escalated from barriered to best-effort (same
+    /// semantics as [`super::threads::ThreadExecConfig::escalated`]).
+    /// Shipped to every worker in the [`ChildSpec`]; both endpoints of a
+    /// cross-process duct stamp their own side from it, so the two
+    /// processes agree without wire traffic.
+    pub escalated: Vec<usize>,
     pub seed: u64,
     /// Workload the workers rebuild deterministically from the seed.
     /// Graph coloring only for now: its messages are already `Vec<u8>`,
@@ -147,6 +154,7 @@ impl Default for MultiprocConfig {
             snapshots: None,
             scenario: FaultScenario::default(),
             degrade_spin_units: 4_000,
+            escalated: Vec::new(),
             seed: 1,
             workload: GcConfig {
                 simels_per_proc: 16,
@@ -234,6 +242,13 @@ pub struct ChildSpec {
     pub gc_simels: usize,
     pub gc_per_simel_cost_ns: f64,
     pub gc_base_cost_ns: f64,
+    /// Global channel ids escalated to best-effort (new fields ride at
+    /// the end of the wire layout: parent and child are the same binary,
+    /// so the blob never crosses versions, but tail placement keeps the
+    /// prefix stable anyway). Workers derive barrier participation from
+    /// this deterministically, so every process agrees without extra
+    /// coordination.
+    pub escalated: Vec<u64>,
 }
 
 impl Persist for ChildSpec {
@@ -256,6 +271,7 @@ impl Persist for ChildSpec {
         self.gc_simels.save(w);
         self.gc_per_simel_cost_ns.save(w);
         self.gc_base_cost_ns.save(w);
+        self.escalated.save(w);
     }
     fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
         Ok(Self {
@@ -277,6 +293,7 @@ impl Persist for ChildSpec {
             gc_simels: usize::load(r)?,
             gc_per_simel_cost_ns: f64::load(r)?,
             gc_base_cost_ns: f64::load(r)?,
+            escalated: Vec::load(r)?,
         })
     }
 }
@@ -358,6 +375,18 @@ impl MpInlet {
             MpInlet::Remote(i) => i.stats(),
         }
     }
+    fn discipline(&self) -> Discipline {
+        match self {
+            MpInlet::Local(i) => i.discipline(),
+            MpInlet::Remote(i) => i.discipline(),
+        }
+    }
+    fn set_discipline(&self, d: Discipline) {
+        match self {
+            MpInlet::Local(i) => i.set_discipline(d),
+            MpInlet::Remote(i) => i.set_discipline(d),
+        }
+    }
 }
 
 enum MpOutlet {
@@ -376,6 +405,18 @@ impl MpOutlet {
         match self {
             MpOutlet::Local(o) => o.stats(),
             MpOutlet::Remote(o) => o.stats(),
+        }
+    }
+    fn discipline(&self) -> Discipline {
+        match self {
+            MpOutlet::Local(o) => o.discipline(),
+            MpOutlet::Remote(o) => o.discipline(),
+        }
+    }
+    fn set_discipline(&self, d: Discipline) {
+        match self {
+            MpOutlet::Local(o) => o.set_discipline(d),
+            MpOutlet::Remote(o) => o.set_discipline(d),
         }
     }
 }
@@ -493,8 +534,15 @@ fn build_mesh(
 
 /// Rebuild every shard deterministically (same seed ⇒ same draw order as
 /// any other worker), keep our block, and wire endpoints: intra ducts
-/// within the block, socket ducts across blocks.
-fn build_slots(spec: &ChildSpec, hub: &SocketHub, links: &[Option<usize>]) -> Vec<Slot> {
+/// within the block, socket ducts across blocks. Also stamps every
+/// endpoint with its policy discipline and derives whether any channel
+/// anywhere is still barriered — from the full (identical-in-every-
+/// worker) spec set, so all processes reach the same answer.
+fn build_slots(
+    spec: &ChildSpec,
+    hub: &SocketHub,
+    links: &[Option<usize>],
+) -> (Vec<Slot>, bool) {
     let n = spec.n_shards;
     let topo = Topology::new(n, PlacementKind::SingleNode);
     let gc = GcConfig {
@@ -552,6 +600,22 @@ fn build_slots(spec: &ChildSpec, hub: &SocketHub, links: &[Option<usize>]) -> Ve
         }
     }
 
+    // Per-channel discipline: the uniform mapping of the run mode,
+    // downgraded to best-effort for escalated channels. Stamped on both
+    // locally-owned endpoint kinds; the remote side of a socket duct is
+    // stamped by its own process from the same shipped list.
+    let base = Discipline::uniform(spec.mode);
+    let stamp = |cid: usize| {
+        if base == Discipline::Barriered && spec.escalated.contains(&(cid as u64)) {
+            Discipline::BestEffort
+        } else {
+            base
+        }
+    };
+    let total_channels: usize = specs.iter().map(|s| s.len()).sum();
+    let any_barriered = base == Discipline::Barriered
+        && (0..total_channels).any(|cid| stamp(cid) == Discipline::Barriered);
+
     let mut slots = Vec::with_capacity(hi - lo);
     for (rank, shard) in all.into_iter().enumerate() {
         if !mine(rank) {
@@ -561,6 +625,12 @@ fn build_slots(spec: &ChildSpec, hub: &SocketHub, links: &[Option<usize>]) -> Ve
             std::mem::take(&mut my_in[rank - lo]).into_iter().map(Option::unwrap).collect();
         let outlets: Vec<_> =
             std::mem::take(&mut my_out[rank - lo]).into_iter().map(Option::unwrap).collect();
+        for (cid, inlet) in &inlets {
+            inlet.set_discipline(stamp(*cid));
+        }
+        for (cid, outlet) in &outlets {
+            outlet.set_discipline(stamp(*cid));
+        }
         let n_ch = inlets.len();
         slots.push(Slot {
             rank,
@@ -574,7 +644,7 @@ fn build_slots(spec: &ChildSpec, hub: &SocketHub, links: &[Option<usize>]) -> Ve
             updates: 0,
         });
     }
-    slots
+    (slots, any_barriered)
 }
 
 /// Wall-clock snapshot-window state for one worker. Each shard's
@@ -675,7 +745,7 @@ impl ChildWindows {
 fn run_child(spec: &ChildSpec, dir: &Path) -> io::Result<()> {
     let hub = SocketHub::new();
     let links = build_mesh(dir, spec.rank, spec.n_procs, &hub)?;
-    let mut slots = build_slots(spec, &hub, &links);
+    let (mut slots, any_barriered) = build_slots(spec, &hub, &links);
     let timeline = if spec.scenario.is_empty() {
         None
     } else {
@@ -693,7 +763,6 @@ fn run_child(spec: &ChildSpec, dir: &Path) -> io::Result<()> {
     // worker dies instead of lingering.
     ctrl.set_read_timeout(Some(Duration::from_nanos(spec.run_for_ns) + RUN_GRACE))?;
 
-    let communicate = spec.mode.communicates();
     let mut windows = spec.snapshots.map(ChildWindows::new);
     let start = Instant::now();
     let run_for = Duration::from_nanos(spec.run_for_ns);
@@ -728,21 +797,22 @@ fn run_child(spec: &ChildSpec, dir: &Path) -> io::Result<()> {
         hub.poll();
 
         for slot in &mut slots {
-            // ---- Pull/absorb phase. ----
-            if communicate {
-                for ch in 0..slot.outlets.len() {
-                    env_scratch.clear();
-                    slot.outlets[ch].1.pull_all_into(&mut env_scratch);
-                    if env_scratch.is_empty() {
-                        continue;
-                    }
-                    let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
-                    slot.touch[ch].on_receive(max_touch);
-                    slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
-                    pull_scratch.clear();
-                    pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
-                    slot.shard.absorb(ch, &mut pull_scratch);
+            // ---- Pull/absorb phase (per-duct discipline gate). ----
+            for ch in 0..slot.outlets.len() {
+                if !slot.outlets[ch].1.discipline().carries_traffic() {
+                    continue;
                 }
+                env_scratch.clear();
+                slot.outlets[ch].1.pull_all_into(&mut env_scratch);
+                if env_scratch.is_empty() {
+                    continue;
+                }
+                let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
+                slot.touch[ch].on_receive(max_touch);
+                slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
+                pull_scratch.clear();
+                pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
+                slot.shard.absorb(ch, &mut pull_scratch);
             }
 
             // ---- Compute phase. ----
@@ -758,36 +828,37 @@ fn run_child(spec: &ChildSpec, dir: &Path) -> io::Result<()> {
             }
             let outputs = slot.shard.step(&mut slot.rng);
 
-            // ---- Send phase. ----
-            if communicate {
-                for (ch, payload) in outputs {
-                    if let Some(tl) = &timeline {
-                        let peer = slot.peers[ch];
-                        let p = tl.drop_prob(t_ns, slot.rank, peer);
-                        if p > 0.0 && slot.rng.chance(p) {
-                            slot.inlets[ch].1.stats().on_send_attempt(false);
-                            continue;
-                        }
-                        let lf = tl.latency_factor(t_ns, slot.rank, peer);
-                        if lf > 1.0 {
-                            let units = ((lf - 1.0).min(8.0)
-                                * (spec.degrade_spin_units / 64).max(1) as f64)
-                                as u64;
-                            std::hint::black_box(slot.spinner.spin(units));
-                        }
-                    }
-                    slot.inlets[ch].1.put(WireEnvelope {
-                        touch: slot.touch[ch].outgoing(),
-                        payload,
-                    });
+            // ---- Send phase (per-duct discipline gate). ----
+            for (ch, payload) in outputs {
+                if !slot.inlets[ch].1.discipline().carries_traffic() {
+                    continue;
                 }
+                if let Some(tl) = &timeline {
+                    let peer = slot.peers[ch];
+                    let p = tl.drop_prob(t_ns, slot.rank, peer);
+                    if p > 0.0 && slot.rng.chance(p) {
+                        slot.inlets[ch].1.stats().on_send_attempt(false);
+                        continue;
+                    }
+                    let lf = tl.latency_factor(t_ns, slot.rank, peer);
+                    if lf > 1.0 {
+                        let units = ((lf - 1.0).min(8.0)
+                            * (spec.degrade_spin_units / 64).max(1) as f64)
+                            as u64;
+                        std::hint::black_box(slot.spinner.spin(units));
+                    }
+                }
+                slot.inlets[ch].1.put(WireEnvelope {
+                    touch: slot.touch[ch].outgoing(),
+                    payload,
+                });
             }
             slot.updates += 1;
         }
         last_step = Instant::now();
         let stopping = last_step >= deadline;
 
-        if spec.mode.uses_barriers() {
+        if any_barriered {
             let due = match spec.mode {
                 AsyncMode::Sync => true,
                 AsyncMode::RollingBarrier => {
@@ -1069,6 +1140,7 @@ pub fn run_multiproc(cfg: MultiprocConfig, n_shards: usize) -> io::Result<Multip
             gc_simels: cfg.workload.simels_per_proc,
             gc_per_simel_cost_ns: cfg.workload.per_simel_cost_ns,
             gc_base_cost_ns: cfg.workload.base_cost_ns,
+            escalated: cfg.escalated.iter().map(|&c| c as u64).collect(),
         };
         let child = std::process::Command::new(&binary)
             .arg(CHILD_SUBCOMMAND)
@@ -1260,6 +1332,7 @@ mod tests {
             gc_simels: 16,
             gc_per_simel_cost_ns: 80.0,
             gc_base_cost_ns: 3_400.0,
+            escalated: vec![0, 3],
         };
         let blob = encode_blob(&spec);
         let back: ChildSpec = decode_blob(&blob).unwrap();
@@ -1269,6 +1342,7 @@ mod tests {
         assert_eq!(back.snapshots.unwrap().count, SnapshotSchedule::hardware_smoke().count);
         assert_eq!(back.gc_simels, 16);
         assert_eq!(back.gc_b, 0.1);
+        assert_eq!(back.escalated, vec![0, 3]);
     }
 
     #[test]

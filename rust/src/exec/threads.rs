@@ -41,8 +41,8 @@ use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use crate::conduit::{
-    thread_duct, ChannelConfig, CounterTranche, InletLike, OutletLike, ThreadInlet,
-    ThreadOutlet,
+    thread_duct, ChannelConfig, CounterTranche, Discipline, InletLike, OutletLike,
+    ThreadInlet, ThreadOutlet,
 };
 use crate::faults::{FaultScenario, ScenarioPhase};
 use crate::qos::{QosObservation, ReplicateQos, SnapshotSchedule, SnapshotWindow, TouchCounter};
@@ -96,6 +96,15 @@ pub struct ThreadExecConfig {
     /// default makes a lac-417-grade degradation clearly visible in
     /// windowed metrics without freezing a CI worker.
     pub degrade_spin_units: u64,
+    /// Global channel ids (flat `(src, src_ch)` positions, the same ids
+    /// the DES uses) escalated from barriered to best-effort — e.g. the
+    /// channels an adaptive-policy DES run flipped. Setup stamps every
+    /// duct with `Discipline::uniform(mode)` and then downgrades these;
+    /// workers consult the duct's stamp, not the global mode, for their
+    /// pull/send gates, and the barrier only engages when at least one
+    /// channel is still barriered. Empty (the default) reproduces the
+    /// uniform-mode behaviour exactly.
+    pub escalated: Vec<usize>,
     pub seed: u64,
 }
 
@@ -112,6 +121,7 @@ impl Default for ThreadExecConfig {
             snapshots: None,
             scenario: FaultScenario::default(),
             degrade_spin_units: 4_000,
+            escalated: Vec::new(),
             seed: 1,
         }
     }
@@ -224,6 +234,11 @@ struct WorkerCtx<W: ShardWorkload> {
     start: Instant,
     deadline: Instant,
     timeline: Option<Arc<HwFaultTimeline>>,
+    /// At least one channel is still barriered — computed once by the
+    /// parent from the duct stamps so every worker runs the identical
+    /// barrier sequence (per-worker divergence would deadlock the
+    /// fixed-count `Barrier`).
+    any_barriered: bool,
 }
 
 /// Run `shards` on hardware threads until the deadline. One thread per
@@ -262,6 +277,26 @@ where
                 .lookup(spec.peer, src, reciprocal_layer(spec.layer))
                 .expect("reciprocal channel");
             outlets[spec.peer][dst_ch] = Some((cid, outlet));
+        }
+    }
+
+    // Stamp every duct with its policy discipline: the uniform mapping
+    // of the run mode, downgraded to best-effort for escalated channels.
+    // Thread ducts share discipline storage between endpoints, so the
+    // inlet-side stamp is also what the receiving worker's pull gate
+    // reads. The barrier engages only while some channel is barriered —
+    // decided here, once, so every worker agrees.
+    let base = Discipline::uniform(cfg.mode);
+    let mut any_barriered = false;
+    for row in &inlets {
+        for (cid, inlet) in row.iter().flatten() {
+            let d = if base == Discipline::Barriered && cfg.escalated.contains(cid) {
+                Discipline::BestEffort
+            } else {
+                base
+            };
+            inlet.set_discipline(d);
+            any_barriered |= d == Discipline::Barriered;
         }
     }
 
@@ -321,6 +356,7 @@ where
             start,
             deadline,
             timeline: timeline.clone(),
+            any_barriered,
         };
         handles.push(std::thread::spawn(move || worker_loop(ctx)));
     }
@@ -497,7 +533,6 @@ where
     W: ShardWorkload,
 {
     let cfg = ctx.cfg.clone();
-    let communicate = cfg.mode.communicates();
     let mut chunk_start = Instant::now();
     let mut next_fixed = Instant::now() + cfg.fixed_epoch;
     let mut windows = cfg.snapshots.map(|s| {
@@ -538,24 +573,25 @@ where
         // One pass: every hosted shard advances exactly one update
         // (round-robin multiplexing).
         for slot in &mut ctx.slots {
-            // ---- Pull/absorb phase. ----
-            if communicate {
-                for ch in 0..slot.outlets.len() {
-                    env_scratch.clear();
-                    slot.outlets[ch].1.pull_all_into(&mut env_scratch);
-                    if env_scratch.is_empty() {
-                        continue;
-                    }
-                    let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
-                    slot.touch[ch].on_receive(max_touch);
-                    // Publish the advanced counter on the reciprocal
-                    // outgoing channel's stats so window tranches carry
-                    // it (the engine does the same via `set_touches`).
-                    slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
-                    pull_scratch.clear();
-                    pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
-                    slot.shard.absorb(ch, &mut pull_scratch);
+            // ---- Pull/absorb phase (per-duct discipline gate). ----
+            for ch in 0..slot.outlets.len() {
+                if !slot.outlets[ch].1.discipline().carries_traffic() {
+                    continue;
                 }
+                env_scratch.clear();
+                slot.outlets[ch].1.pull_all_into(&mut env_scratch);
+                if env_scratch.is_empty() {
+                    continue;
+                }
+                let max_touch = env_scratch.iter().map(|e| e.touch).max().unwrap();
+                slot.touch[ch].on_receive(max_touch);
+                // Publish the advanced counter on the reciprocal
+                // outgoing channel's stats so window tranches carry
+                // it (the engine does the same via `set_touches`).
+                slot.inlets[ch].1.stats().set_touches(slot.touch[ch].value());
+                pull_scratch.clear();
+                pull_scratch.extend(env_scratch.drain(..).map(|e| e.payload));
+                slot.shard.absorb(ch, &mut pull_scratch);
             }
 
             // ---- Compute phase (real synthetic work + real step). ----
@@ -571,35 +607,36 @@ where
             }
             let outputs = slot.shard.step(&mut slot.rng);
 
-            // ---- Send phase. ----
-            if communicate {
-                for (ch, payload) in outputs {
-                    if let Some(tl) = &ctx.timeline {
-                        let peer = slot.peers[ch];
-                        let p = tl.drop_prob(t_ns, slot.rank, peer);
-                        if p > 0.0 && slot.rng.chance(p) {
-                            // Forced congestion/partition failure: counts
-                            // as an attempted-but-dropped send.
-                            slot.inlets[ch].1.stats().on_send_attempt(false);
-                            continue;
-                        }
-                        let lf = tl.latency_factor(t_ns, slot.rank, peer);
-                        if lf > 1.0 {
-                            // Latency inflation as pre-send spin, scaled
-                            // down so a 25× storm delays rather than
-                            // freezes a send (~(lf-1)/64 of the degrade
-                            // budget per send, capped at 8× worth).
-                            let units = ((lf - 1.0).min(8.0)
-                                * (cfg.degrade_spin_units / 64).max(1) as f64)
-                                as u64;
-                            std::hint::black_box(slot.spinner.spin(units));
-                        }
-                    }
-                    slot.inlets[ch].1.put(Envelope {
-                        touch: slot.touch[ch].outgoing(),
-                        payload,
-                    });
+            // ---- Send phase (per-duct discipline gate). ----
+            for (ch, payload) in outputs {
+                if !slot.inlets[ch].1.discipline().carries_traffic() {
+                    continue;
                 }
+                if let Some(tl) = &ctx.timeline {
+                    let peer = slot.peers[ch];
+                    let p = tl.drop_prob(t_ns, slot.rank, peer);
+                    if p > 0.0 && slot.rng.chance(p) {
+                        // Forced congestion/partition failure: counts
+                        // as an attempted-but-dropped send.
+                        slot.inlets[ch].1.stats().on_send_attempt(false);
+                        continue;
+                    }
+                    let lf = tl.latency_factor(t_ns, slot.rank, peer);
+                    if lf > 1.0 {
+                        // Latency inflation as pre-send spin, scaled
+                        // down so a 25× storm delays rather than
+                        // freezes a send (~(lf-1)/64 of the degrade
+                        // budget per send, capped at 8× worth).
+                        let units = ((lf - 1.0).min(8.0)
+                            * (cfg.degrade_spin_units / 64).max(1) as f64)
+                            as u64;
+                        std::hint::black_box(slot.spinner.spin(units));
+                    }
+                }
+                slot.inlets[ch].1.put(Envelope {
+                    touch: slot.touch[ch].outgoing(),
+                    payload,
+                });
             }
             slot.updates += 1;
         }
@@ -610,7 +647,7 @@ where
             ctx.stop.store(true, Ordering::SeqCst);
         }
 
-        if cfg.mode.uses_barriers() {
+        if ctx.any_barriered {
             // Deadlock-free exit protocol. A worker enters the barrier
             // when its mode calls for one OR when stop has been raised,
             // so all workers execute the same barrier sequence. Whether
@@ -849,6 +886,28 @@ mod tests {
             crate::workloads::graph_coloring::global_conflicts(&topo, &result.shards);
         let random_baseline = 128 * 2 / 3;
         assert!(conflicts < random_baseline + 10, "conflicts={conflicts}");
+    }
+
+    #[test]
+    fn escalating_every_channel_disengages_the_barrier() {
+        // Sync mode with every channel escalated to best-effort: traffic
+        // still flows, but no worker ever enters the barrier, so the run
+        // must complete via the free-run stop path (a partial barrier
+        // set with a fixed-count Barrier would deadlock — this exercises
+        // the parent-computed `any_barriered` consensus).
+        let (_, shards) = gc_shards(2, 4, 13);
+        let n_channels: usize = shards.iter().map(|s| s.channels().len()).sum();
+        let result = run_threads(
+            ThreadExecConfig {
+                mode: AsyncMode::Sync,
+                run_for: Duration::from_millis(60),
+                escalated: (0..n_channels).collect(),
+                ..Default::default()
+            },
+            shards,
+        );
+        assert!(result.updates.iter().all(|&u| u > 0));
+        assert!(result.attempted_sends > 0, "escalated channels still carry traffic");
     }
 
     #[test]

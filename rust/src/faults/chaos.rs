@@ -120,7 +120,7 @@ fn chaos_engine(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(CHAOS_PROCS), run_for);
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(CHAOS_PROCS), run_for);
     cfg.seed = seed;
     cfg.send_buffer = 4;
     cfg.scenario = scenario;

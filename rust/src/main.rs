@@ -208,7 +208,7 @@ fn cmd_run(args: &[String]) -> CliResult {
 
     match workload.as_str() {
         "gc" => {
-            let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(procs), run_for);
+            let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(procs), run_for);
             cfg.send_buffer = 64;
             let shards: Vec<_> = (0..procs)
                 .map(|r| {
@@ -228,7 +228,7 @@ fn cmd_run(args: &[String]) -> CliResult {
             println!("conflicts remaining: {}", global_conflicts(&topo, &result.shards));
         }
         "de" => {
-            let mut cfg = SimConfig::new(mode, ModeTiming::digital_evolution(procs), run_for);
+            let mut cfg = SimConfig::from_env(mode, ModeTiming::digital_evolution(procs), run_for);
             cfg.send_buffer = 64;
             let shards: Vec<_> = (0..procs)
                 .map(|r| {

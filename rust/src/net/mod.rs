@@ -11,5 +11,5 @@ pub mod model;
 pub mod topology;
 
 pub use faulty::NodeProfile;
-pub use model::LinkModel;
+pub use model::{LinkModel, StageMedians};
 pub use topology::{PlacementKind, Topology};

@@ -26,6 +26,100 @@
 use crate::util::rng::{Rng, Xoshiro256};
 use crate::util::{Nanos, MICRO};
 
+/// Measured medians of the real multi-process wire path, one per
+/// [`crate::conduit::socket::StageLatencies`] stage, used to calibrate a
+/// [`LinkModel`] from hardware instead of the paper's published numbers.
+///
+/// The canonical source is `BENCH_multiproc.json` at the repo root
+/// (entries named `multiproc stage serialize|enqueue|transport|drain`,
+/// written by `bench_multiproc --json`); [`Self::builtin`] carries a
+/// conservative localhost-TCP ballpark for trees without a measurement.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageMedians {
+    /// Frame encoding time (ns).
+    pub serialize_ns: f64,
+    /// Send-window residence until the OS took the last byte (ns).
+    pub enqueue_ns: f64,
+    /// `t_sent` to parse completion on the receiving hub (ns).
+    pub transport_ns: f64,
+    /// Parse completion until the consumer pulled the message (ns).
+    pub drain_ns: f64,
+    /// Pooled p95/median ratio over the pre-delivery stages — the jitter
+    /// handle for the lognormal latency fit.
+    pub p95_over_median: f64,
+}
+
+impl StageMedians {
+    /// Localhost-TCP ballpark for repos without a committed
+    /// `BENCH_multiproc.json` yet (CI prints a note when this is used).
+    pub fn builtin() -> Self {
+        Self {
+            serialize_ns: 650.0,
+            enqueue_ns: 2_800.0,
+            transport_ns: 28_000.0,
+            drain_ns: 3_500.0,
+            p95_over_median: 2.1,
+        }
+    }
+
+    /// Stages a message traverses before it is visible to the receiver.
+    pub fn pre_delivery_sum_ns(&self) -> f64 {
+        self.serialize_ns + self.enqueue_ns + self.transport_ns
+    }
+
+    /// Parse stage medians out of a `BENCH_multiproc.json`. The file is
+    /// the one-entry-per-line format of
+    /// [`crate::util::benchjson::BenchJson`], so a line scan suffices —
+    /// no JSON dependency. Returns `None` unless every stage is present
+    /// with a finite median.
+    pub fn from_bench_json(path: impl AsRef<std::path::Path>) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::from_bench_text(&text)
+    }
+
+    /// [`Self::from_bench_json`] on already-loaded file contents.
+    pub fn from_bench_text(text: &str) -> Option<Self> {
+        let mut medians = [f64::NAN; 4];
+        let mut p95s = [f64::NAN; 4];
+        for line in text.lines() {
+            for (i, stage) in ["serialize", "enqueue", "transport", "drain"]
+                .iter()
+                .enumerate()
+            {
+                if line.contains(&format!("\"multiproc stage {stage}\"")) {
+                    medians[i] = json_field(line, "median")?;
+                    p95s[i] = json_field(line, "p95")?;
+                }
+            }
+        }
+        if medians.iter().any(|m| !m.is_finite() || *m <= 0.0) {
+            return None;
+        }
+        let pre_median: f64 = medians[..3].iter().sum();
+        let pre_p95: f64 = p95s[..3].iter().sum();
+        Some(Self {
+            serialize_ns: medians[0],
+            enqueue_ns: medians[1],
+            transport_ns: medians[2],
+            drain_ns: medians[3],
+            p95_over_median: if pre_p95.is_finite() && pre_median > 0.0 {
+                (pre_p95 / pre_median).max(1.0)
+            } else {
+                1.0
+            },
+        })
+    }
+}
+
+/// Extract `"key": <number>` from one serialized bench-entry line.
+fn json_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
 /// Parameters of one link class.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkModel {
@@ -98,6 +192,31 @@ impl LinkModel {
         }
     }
 
+    /// Link calibrated from measured multi-process stage medians
+    /// (ROADMAP: close the loop from `bench_multiproc` hardware numbers
+    /// back into the DES). Fixed latency is the pre-delivery stage sum;
+    /// jitter comes from the pooled p95/median ratio via the lognormal
+    /// identity `p95/median = exp(1.645 * sigma)`; the enqueue median
+    /// doubles as the send-buffer drain interval, and the edge
+    /// serialize/drain stages become the per-send/per-pull CPU
+    /// overheads. Coalescing, residual drops, and spikes stay off: the
+    /// socket hub delivers eagerly and losslessly, and whatever jitter
+    /// the host injects is already in the measured ratio.
+    pub fn calibrated(m: &StageMedians) -> Self {
+        let sigma = m.p95_over_median.max(1.0).ln() / 1.645;
+        Self {
+            wire_median_ns: m.pre_delivery_sum_ns().max(1.0),
+            wire_sigma: sigma.clamp(0.05, 2.0),
+            service_ns: m.enqueue_ns.max(0.0),
+            coalesce_ns: 0,
+            base_drop_prob: 0.0,
+            spike_prob: 0.0,
+            spike_mean_ns: 0.0,
+            send_overhead_ns: m.serialize_ns.max(0.0),
+            pull_overhead_ns: m.drain_ns.max(0.0),
+        }
+    }
+
     /// Sample one delivery latency.
     pub fn sample_latency(&self, rng: &mut Xoshiro256) -> Nanos {
         if self.spike_prob > 0.0 && rng.chance(self.spike_prob) {
@@ -162,5 +281,58 @@ mod tests {
         let m = LinkModel::thread_shared_memory();
         assert_eq!(m.base_drop_prob, 0.0);
         assert_eq!(m.service_ns, 0.0);
+    }
+
+    #[test]
+    fn stage_medians_parse_bench_json_lines() {
+        let text = r#"{
+  "bench": "bench_multiproc",
+  "schema": 1,
+  "results": [
+    {"name": "multiproc stage serialize", "unit": "ns", "mean": 700.000, "median": 600.000, "p95": 1200.000},
+    {"name": "multiproc stage enqueue", "unit": "ns", "mean": 3000.000, "median": 2000.000, "p95": 5000.000},
+    {"name": "multiproc stage transport", "unit": "ns", "mean": 30000.000, "median": 27400.000, "p95": 60000.000},
+    {"name": "multiproc stage drain", "unit": "ns", "mean": 4000.000, "median": 3000.000, "p95": 9000.000},
+    {"name": "multiproc rtt (4 procs)", "unit": "ns", "mean": 1.000, "median": 1.000, "p95": 1.000}
+  ]
+}"#;
+        let m = StageMedians::from_bench_text(text).expect("parses");
+        assert_eq!(m.serialize_ns, 600.0);
+        assert_eq!(m.enqueue_ns, 2000.0);
+        assert_eq!(m.transport_ns, 27400.0);
+        assert_eq!(m.drain_ns, 3000.0);
+        // Pooled pre-delivery ratio: (1200+5000+60000)/(600+2000+27400).
+        assert!((m.p95_over_median - 66_200.0 / 30_000.0).abs() < 1e-9);
+        assert_eq!(m.pre_delivery_sum_ns(), 30_000.0);
+    }
+
+    #[test]
+    fn stage_medians_reject_incomplete_files() {
+        assert!(StageMedians::from_bench_text("{}").is_none());
+        let partial = r#"{"name": "multiproc stage serialize", "unit": "ns", "mean": 1.0, "median": 1.000, "p95": 2.000}"#;
+        assert!(StageMedians::from_bench_text(partial).is_none());
+        assert!(StageMedians::from_bench_json("/nonexistent/path.json").is_none());
+    }
+
+    #[test]
+    fn calibrated_link_matches_stage_arithmetic() {
+        let m = StageMedians::builtin();
+        let link = LinkModel::calibrated(&m);
+        assert_eq!(link.wire_median_ns, m.pre_delivery_sum_ns());
+        assert_eq!(link.service_ns, m.enqueue_ns);
+        assert_eq!(link.send_overhead_ns, m.serialize_ns);
+        assert_eq!(link.pull_overhead_ns, m.drain_ns);
+        assert_eq!(link.coalesce_ns, 0);
+        assert_eq!(link.base_drop_prob, 0.0);
+        // Lognormal identity: p95/median of samples ≈ configured ratio.
+        let expected_sigma = m.p95_over_median.ln() / 1.645;
+        assert!((link.wire_sigma - expected_sigma).abs() < 1e-12);
+        // A degenerate ratio (p95 <= median) still yields a usable link.
+        let flat = StageMedians {
+            p95_over_median: 0.5,
+            ..m
+        };
+        let l2 = LinkModel::calibrated(&flat);
+        assert_eq!(l2.wire_sigma, 0.05, "sigma floor engages");
     }
 }

@@ -49,8 +49,13 @@ pub const SNAP_MAGIC: [u8; 4] = *b"EBCK";
 /// pair list; v3 = `QosStorage` in the config plus sketch-backed QoS
 /// state (per-metric quantile sketches, per-phase split, HLL distinct
 /// counters) after the window list — sketch-mode resumes are bitwise
-/// because the sketches are pure integer state.
-pub const SNAP_VERSION: u32 = 3;
+/// because the sketches are pure integer state; v4 = per-channel
+/// communication policy (`PolicyConfig` + optional `LinkModel` override
+/// in the config, adaptive-controller state — escalation flags,
+/// per-channel baselines, hysteresis streaks, controller RNG — after
+/// the engine's membership state). Barrier-membership vectors are
+/// derived at restore, so adaptive resumes stay bitwise too.
+pub const SNAP_VERSION: u32 = 4;
 
 /// Why a checkpoint blob could not be decoded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

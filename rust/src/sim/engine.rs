@@ -47,6 +47,7 @@ use super::calendar::{SchedKind, Scheduler};
 use super::checkpoint::{Persist, SnapError, SnapReader, SnapWriter};
 use super::lanes::EnvelopeLanes;
 use super::modes::{AsyncMode, ModeTiming};
+use super::policy::{AdaptiveController, PolicyConfig};
 use crate::conduit::{CounterTranche, LocalChannelStats, SendOutcome, StatsSink};
 use crate::faults::{FaultKind, FaultRuntime, FaultScenario, ScenarioPhase};
 use crate::net::{LinkModel, NodeProfile, PlacementKind, Topology};
@@ -196,9 +197,25 @@ pub struct SimConfig {
     /// The simulation itself is bit-identical either way: storage only
     /// decides what the capture path retains.
     pub qos_storage: QosStorage,
+    /// Per-channel communication policy. `Uniform(mode)` (the default,
+    /// kept in lockstep with `mode`) reproduces the pre-policy engine
+    /// bit-identically; `Adaptive` layers the per-channel controller of
+    /// [`crate::sim::policy`] on top of the barriered base mode. Set via
+    /// [`SimConfig::with_policy`], which also syncs `mode`.
+    pub policy: PolicyConfig,
+    /// Replace every channel's preset [`LinkModel`] with this one —
+    /// the hook for calibrated models measured off the multi-process
+    /// executor (`LinkModel::calibrated`). `coalesce_override` still
+    /// applies on top.
+    pub link_override: Option<LinkModel>,
 }
 
 impl SimConfig {
+    /// Pure-default configuration: **no environment is consulted.**
+    /// Scheduler, step path, and QoS storage take their documented
+    /// defaults (calendar / idle-skip / exact); use
+    /// [`SimConfig::from_env`] to honor the `EBCOMM_*` selector
+    /// variables, or the `with_*` builders to pick explicitly.
     pub fn new(mode: AsyncMode, timing: ModeTiming, run_for: Nanos) -> Self {
         Self {
             mode,
@@ -215,11 +232,52 @@ impl SimConfig {
             barrier_tail_ns: 100.0 * MICRO as f64,
             snapshots: None,
             coalesce_override: None,
-            sched: SchedKind::from_env(),
-            step: StepPath::from_env(),
+            sched: SchedKind::Calendar,
+            step: StepPath::IdleSkip,
             scenario: FaultScenario::default(),
-            qos_storage: QosStorage::from_env(),
+            qos_storage: QosStorage::Exact,
+            policy: PolicyConfig::Uniform(mode),
+            link_override: None,
         }
+    }
+
+    /// The single entry point that reads the environment: [`Self::new`]
+    /// plus the `EBCOMM_SCHED` / `EBCOMM_STEP` / `EBCOMM_QOS` selector
+    /// variables (each panics on an unrecognized value; unset keeps the
+    /// pure default). Tests, benches, and the CLI go through here so the
+    /// CI parity lanes can steer every run from the environment; library
+    /// callers that want full isolation use `new()` + builders instead.
+    pub fn from_env(mode: AsyncMode, timing: ModeTiming, run_for: Nanos) -> Self {
+        Self::new(mode, timing, run_for)
+            .with_sched(SchedKind::from_env())
+            .with_step(StepPath::from_env())
+            .with_qos_storage(QosStorage::from_env())
+    }
+
+    /// Pick the wake-queue scheduler (bit-invisible; see `sim::calendar`).
+    pub fn with_sched(mut self, sched: SchedKind) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Pick the pull-phase stepping strategy (bit-invisible).
+    pub fn with_step(mut self, step: StepPath) -> Self {
+        self.step = step;
+        self
+    }
+
+    /// Pick the QoS observation storage (bit-invisible to the sim).
+    pub fn with_qos_storage(mut self, qos_storage: QosStorage) -> Self {
+        self.qos_storage = qos_storage;
+        self
+    }
+
+    /// Install a communication policy. Also syncs `mode` to the policy's
+    /// base mode — the two must never disagree (the engine asserts it).
+    pub fn with_policy(mut self, policy: PolicyConfig) -> Self {
+        self.mode = policy.base_mode();
+        self.policy = policy;
+        self
     }
 
     fn barrier_cost(&self, n_procs: usize, rng: &mut Xoshiro256) -> Nanos {
@@ -469,6 +527,13 @@ pub struct SimResult<W> {
     /// wrong channel); chaos campaigns assert this count is zero on
     /// every timeline.
     pub channel_conservation_violations: u64,
+    /// Adaptive-policy telemetry: lifetime channel escalations to
+    /// best-effort, lifetime heals back to the barriered base, and the
+    /// channels still escalated at run end. All zero under uniform
+    /// policies.
+    pub policy_flips: u64,
+    pub policy_heals: u64,
+    pub policy_escalated_final: u64,
 }
 
 impl<W> SimResult<W> {
@@ -625,6 +690,18 @@ pub struct Engine<W: ShardWorkload> {
     /// Retained channel-spec index: rejoin re-derives reciprocal wiring
     /// through it (the same CSR lookup construction used).
     spec_index: SpecIndex,
+    /// Adaptive per-channel policy controller; `None` under
+    /// [`PolicyConfig::Uniform`], which keeps every uniform run on the
+    /// exact pre-policy path (no allocations, no extra branches taken).
+    policy_rt: Option<AdaptiveController>,
+    /// Barrier membership under the adaptive policy: process `p`
+    /// participates in barriers while any of its incident channels still
+    /// follows the barriered base discipline. Empty under uniform
+    /// policies (all live processes are members).
+    barrier_member: Vec<bool>,
+    /// Live *members* — the adaptive barrier quorum. Equals `live_count`
+    /// under uniform policies.
+    member_live: usize,
 }
 
 impl<W: ShardWorkload> Engine<W> {
@@ -839,7 +916,18 @@ impl<W: ShardWorkload> Engine<W> {
             None
         };
         let engine_rng = Xoshiro256::new(cfg.seed ^ 0xBA44_1E44);
-        Self {
+        assert_eq!(
+            cfg.mode,
+            cfg.policy.base_mode(),
+            "SimConfig::mode must equal the policy base mode (use with_policy)"
+        );
+        let policy_rt = match cfg.policy {
+            PolicyConfig::Uniform(_) => None,
+            PolicyConfig::Adaptive(a) => {
+                Some(AdaptiveController::new(a, cold.len(), cfg.seed))
+            }
+        };
+        let mut eng = Self {
             cfg,
             topo,
             profiles,
@@ -872,7 +960,14 @@ impl<W: ShardWorkload> Engine<W> {
             wake_armed: vec![true; n],
             churn_procs,
             spec_index,
+            policy_rt,
+            barrier_member: Vec::new(),
+            member_live: n,
+        };
+        if eng.policy_rt.is_some() {
+            eng.derive_barrier_membership();
         }
+        eng
     }
 
     fn schedule(&mut self, t: Nanos, ev: Ev) {
@@ -984,6 +1079,12 @@ impl<W: ShardWorkload> Engine<W> {
             messages_purged: self.purged,
             messages_in_flight: in_flight,
             channel_conservation_violations,
+            policy_flips: self.policy_rt.as_ref().map_or(0, |c| c.flips),
+            policy_heals: self.policy_rt.as_ref().map_or(0, |c| c.heals),
+            policy_escalated_final: self
+                .policy_rt
+                .as_ref()
+                .map_or(0, |c| c.escalated_count() as u64),
         }
     }
 
@@ -1212,14 +1313,21 @@ impl<W: ShardWorkload> Engine<W> {
         self.procs[p].clock = now;
 
         // ---- Barrier / reschedule. ----
-        let enter_barrier = match self.cfg.mode {
-            AsyncMode::Sync => true,
-            AsyncMode::RollingBarrier => {
-                now.saturating_sub(self.procs[p].chunk_start) >= self.cfg.timing.rolling_chunk
-            }
-            AsyncMode::FixedBarrier => now >= self.procs[p].next_fixed_sync,
-            AsyncMode::BestEffort | AsyncMode::NoComm => false,
-        };
+        // Under the adaptive policy a process whose every incident
+        // channel has escalated to best-effort free-runs; everyone else
+        // follows the base mode's cadence exactly. `barrier_member` is
+        // empty under uniform policies, so that path is untouched.
+        let member = self.barrier_member.is_empty() || self.barrier_member[p];
+        let enter_barrier = member
+            && match self.cfg.mode {
+                AsyncMode::Sync => true,
+                AsyncMode::RollingBarrier => {
+                    now.saturating_sub(self.procs[p].chunk_start)
+                        >= self.cfg.timing.rolling_chunk
+                }
+                AsyncMode::FixedBarrier => now >= self.procs[p].next_fixed_sync,
+                AsyncMode::BestEffort | AsyncMode::NoComm => false,
+            };
 
         if enter_barrier {
             self.arrive_barrier(p, now);
@@ -1242,7 +1350,8 @@ impl<W: ShardWorkload> Engine<W> {
     /// mid-epoch can be the event that completes the barrier, so sync
     /// modes never deadlock on departed participants.
     fn maybe_release_barrier(&mut self, t: Nanos) {
-        if self.barrier_count == 0 || self.barrier_count != self.live_count {
+        let quorum = self.barrier_quorum();
+        if self.barrier_count == 0 || self.barrier_count != quorum {
             return;
         }
         // Release everyone waiting: N wakes at one timestamp with
@@ -1254,7 +1363,7 @@ impl<W: ShardWorkload> Engine<W> {
         // on departure-triggered releases, where the departure time can
         // exceed every recorded arrival.
         let release = self.barrier_max_arrival.max(t)
-            + self.cfg.barrier_cost(self.live_count, &mut self.engine_rng);
+            + self.cfg.barrier_cost(quorum, &mut self.engine_rng);
         self.barrier_count = 0;
         self.barrier_max_arrival = 0;
         let mut batch = std::mem::take(&mut self.wake_batch);
@@ -1360,6 +1469,11 @@ impl<W: ShardWorkload> Engine<W> {
         };
         let open_t = self.open_t;
         let open_phase = self.open_phase;
+        // The adaptive controller is fed from the same per-channel
+        // windows the QoS capture produces — taken out of `self` for the
+        // loop so the borrow does not overlap the capture state.
+        let mut ctl = self.policy_rt.take();
+        let mut policy_changed = false;
         for cid in 0..self.cold.len() {
             let cold = self.cold[cid];
             // Stale iff an endpoint stepped while the window was open;
@@ -1394,6 +1508,13 @@ impl<W: ShardWorkload> Engine<W> {
                     phase,
                 ),
             };
+            // Adaptive policy: every closed window is a controller
+            // observation. This loop always visits all channels in cid
+            // order regardless of step path or storage mode, so the
+            // controller's decision stream is identical across them.
+            if let Some(c) = ctl.as_mut() {
+                policy_changed |= c.observe_window(cid, &window.metrics());
+            }
             // Storage mode decides what the capture retains: the exact
             // path accumulates the raw window, the sketch path folds the
             // identical window into fixed-size sketches and drops it.
@@ -1403,6 +1524,7 @@ impl<W: ShardWorkload> Engine<W> {
             }
             self.chan_snap[cid] = after;
         }
+        self.policy_rt = ctl;
         self.touched.fill(false);
         self.window_open = false;
         // Structural reset (bugfix hardening): the union accumulated for
@@ -1412,6 +1534,68 @@ impl<W: ShardWorkload> Engine<W> {
         // windows. (`snapshot_open` also re-seeds it, so the reset is
         // what keeps the between-windows state canonical.)
         self.window_phase = ScenarioPhase::QUIESCENT;
+        if policy_changed {
+            self.apply_policy_pass(t);
+        }
+    }
+
+    /// The number of arrivals that completes a barrier: every live
+    /// process under uniform policies, every live *member* under the
+    /// adaptive policy.
+    fn barrier_quorum(&self) -> usize {
+        if self.barrier_member.is_empty() {
+            self.live_count
+        } else {
+            self.member_live
+        }
+    }
+
+    /// Recompute adaptive barrier membership from the controller's
+    /// escalation flags: a process stays in the barrier set while any of
+    /// its incident channels still follows the barriered base
+    /// discipline. Pure derivation — no events, no evictions — shared by
+    /// construction, restore, and the event-time policy pass.
+    fn derive_barrier_membership(&mut self) {
+        let Some(ctl) = &self.policy_rt else {
+            self.barrier_member = Vec::new();
+            self.member_live = self.live_count;
+            return;
+        };
+        let n = self.procs.len();
+        if self.barrier_member.len() != n {
+            self.barrier_member = vec![false; n];
+        } else {
+            self.barrier_member.fill(false);
+        }
+        for (cid, c) in self.cold.iter().enumerate() {
+            if !ctl.escalated(cid) {
+                self.barrier_member[c.src as usize] = true;
+                self.barrier_member[c.dst as usize] = true;
+            }
+        }
+        self.member_live = (0..n)
+            .filter(|&p| self.live[p] && self.barrier_member[p])
+            .count();
+    }
+
+    /// Apply a controller decision at event time `t`: re-derive the
+    /// barrier membership, evict waiters that just lost membership (they
+    /// resume free-running immediately instead of blocking a barrier
+    /// they no longer belong to), and release the barrier if the new
+    /// quorum is already met.
+    fn apply_policy_pass(&mut self, t: Nanos) {
+        self.derive_barrier_membership();
+        for q in 0..self.procs.len() {
+            if self.barrier_waiting[q] && !self.barrier_member[q] {
+                self.barrier_waiting[q] = false;
+                self.barrier_count -= 1;
+                self.wake_armed[q] = true;
+                self.procs[q].clock = t;
+                self.procs[q].chunk_start = t;
+                self.schedule(t, Ev::Wake(q));
+            }
+        }
+        self.maybe_release_barrier(t);
     }
 
     /// Advance scenario event `k`'s overlay state machine and schedule
@@ -1459,6 +1643,9 @@ impl<W: ShardWorkload> Engine<W> {
     fn leave_proc(&mut self, p: usize, t: Nanos) {
         self.live[p] = false;
         self.live_count -= 1;
+        if !self.barrier_member.is_empty() && self.barrier_member[p] {
+            self.member_live -= 1;
+        }
         if self.barrier_waiting[p] {
             self.barrier_waiting[p] = false;
             self.barrier_count -= 1;
@@ -1492,6 +1679,9 @@ impl<W: ShardWorkload> Engine<W> {
     fn join_proc(&mut self, p: usize, t: Nanos) {
         self.live[p] = true;
         self.live_count += 1;
+        if !self.barrier_member.is_empty() && self.barrier_member[p] {
+            self.member_live += 1;
+        }
         let proc = &mut self.procs[p];
         proc.clock = t;
         proc.chunk_start = t;
@@ -1730,6 +1920,9 @@ impl Persist for SimConfig {
         self.step.save(w);
         self.scenario.save(w);
         self.qos_storage.save(w);
+        // v4 config fields.
+        self.policy.save(w);
+        self.link_override.save(w);
     }
 
     fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
@@ -1752,6 +1945,8 @@ impl Persist for SimConfig {
             step: StepPath::load(r)?,
             scenario: FaultScenario::load(r)?,
             qos_storage: QosStorage::load(r)?,
+            policy: PolicyConfig::load(r)?,
+            link_override: Option::<LinkModel>::load(r)?,
         })
     }
 }
@@ -1877,6 +2072,12 @@ where
         self.live_count.save(&mut w);
         self.purged.save(&mut w);
         self.wake_armed.save(&mut w);
+        // v4: adaptive-controller state (barrier membership is derived
+        // from it at restore, never persisted).
+        self.policy_rt.is_some().save(&mut w);
+        if let Some(ctl) = &self.policy_rt {
+            ctl.save(&mut w);
+        }
         w.finish()
     }
 
@@ -2032,8 +2233,25 @@ where
         let live_count = usize::load(&mut r)?;
         let purged = u64::load(&mut r)?;
         let wake_armed = Vec::<bool>::load(&mut r)?;
+        // v4: adaptive-controller state.
+        let policy_rt = if bool::load(&mut r)? {
+            Some(AdaptiveController::load(&mut r)?)
+        } else {
+            None
+        };
         if !r.is_exhausted() {
             return Err(SnapError::Corrupt("trailing bytes"));
+        }
+        if cfg.mode != cfg.policy.base_mode() {
+            return Err(SnapError::Corrupt("mode/policy base mismatch"));
+        }
+        if policy_rt.is_some() != cfg.policy.is_adaptive() {
+            return Err(SnapError::Corrupt("controller presence/policy mismatch"));
+        }
+        if let Some(ctl) = &policy_rt {
+            if ctl.n_channels() != n_ch {
+                return Err(SnapError::Corrupt("controller channel count"));
+            }
         }
         if live.len() != n
             || wake_armed.len() != n
@@ -2134,7 +2352,8 @@ where
         let spec_index = SpecIndex::build(&specs);
         let churn_procs = churn_procs_of(&cfg.scenario);
 
-        Ok(Self {
+        let member_live = live_count;
+        let mut eng = Self {
             cfg,
             topo,
             profiles,
@@ -2166,20 +2385,35 @@ where
             wake_armed,
             churn_procs,
             spec_index,
-        })
+            policy_rt,
+            barrier_member: Vec::new(),
+            member_live,
+        };
+        // Adaptive barrier membership is derived, never persisted: the
+        // same pure recomputation construction uses (no evictions — the
+        // persisted barrier state is already consistent with it).
+        if eng.policy_rt.is_some() {
+            eng.derive_barrier_membership();
+        }
+        Ok(eng)
     }
 }
 
 fn link_for(cfg: &SimConfig, topo: &Topology, a: usize, b: usize) -> LinkModel {
-    let mut link = match cfg.backend {
-        CommBackend::SharedMemory => LinkModel::thread_shared_memory(),
-        CommBackend::Mpi => {
-            if topo.same_node(a, b) {
-                LinkModel::intranode()
-            } else {
-                LinkModel::internode()
+    let mut link = match cfg.link_override {
+        // Calibrated (or otherwise user-fixed) model: every channel gets
+        // it, replacing the placement-derived preset.
+        Some(m) => m,
+        None => match cfg.backend {
+            CommBackend::SharedMemory => LinkModel::thread_shared_memory(),
+            CommBackend::Mpi => {
+                if topo.same_node(a, b) {
+                    LinkModel::intranode()
+                } else {
+                    LinkModel::internode()
+                }
             }
-        }
+        },
     };
     if let Some(c) = cfg.coalesce_override {
         link.coalesce_ns = c;
@@ -2249,7 +2483,7 @@ mod tests {
         let shards: Vec<_> = (0..n_procs)
             .map(|r| GraphColoringShard::new(cfg_gc, &topo, r, &mut rng))
             .collect();
-        let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+        let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(n_procs), run_for);
         cfg.seed = seed;
         cfg.send_buffer = 64;
         let profiles = healthy_profiles(&topo);
@@ -2379,7 +2613,7 @@ mod tests {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(2),
             200 * MILLI,
@@ -2445,7 +2679,7 @@ mod tests {
                 })
                 .collect()
         };
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(16),
             300 * MILLI,
@@ -2503,7 +2737,7 @@ mod tests {
                     )
                 })
                 .collect();
-            let mut cfg = SimConfig::new(
+            let mut cfg = SimConfig::from_env(
                 AsyncMode::BestEffort,
                 ModeTiming::graph_coloring(4),
                 30 * MILLI,
@@ -2570,7 +2804,7 @@ mod tests {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+        let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(n_procs), run_for);
         cfg.seed = seed;
         cfg.send_buffer = 8;
         cfg.scenario = scenario;
@@ -2707,7 +2941,7 @@ mod tests {
             })
             .collect();
         let mut cfg =
-            SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
+            SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
         cfg.seed = seed;
         cfg.send_buffer = 8;
         cfg.sched = sched;
@@ -2749,7 +2983,7 @@ mod tests {
             })
             .collect();
         let mut cfg =
-            SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
+            SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 60 * MILLI);
         cfg.seed = seed;
         cfg.send_buffer = 8;
         cfg.sched = sched;
@@ -2984,7 +3218,7 @@ mod tests {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(2),
             15 * MILLI,
@@ -3034,7 +3268,7 @@ mod tests {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(4),
             50 * MILLI,

@@ -5,6 +5,7 @@ pub mod checkpoint;
 pub mod engine;
 pub mod lanes;
 pub mod modes;
+pub mod policy;
 
 pub use calendar::{CalendarQueue, HeapScheduler, SchedKind, Scheduler};
 pub use checkpoint::{Persist, SnapError, SnapReader, SnapWriter, SNAP_MAGIC, SNAP_VERSION};
@@ -14,3 +15,4 @@ pub use engine::{
 };
 pub use lanes::{DrainSummary, EnvelopeLanes};
 pub use modes::{AsyncMode, ModeTiming};
+pub use policy::{AdaptiveConfig, AdaptiveController, Discipline, PolicyConfig};

@@ -1,0 +1,430 @@
+//! Per-channel communication policy.
+//!
+//! The paper's modes 0–4 pick one global discipline for every channel in
+//! the allocation. [`PolicyConfig`] generalizes that: `Uniform(mode)` is
+//! the paper's setup (and is bit-identical to the pre-policy engine),
+//! while `Adaptive` layers a deterministic controller on top of a
+//! barriered base mode that flips *individual channels* to best-effort
+//! when their windowed QoS degrades, and back when the link heals.
+//!
+//! The controller is driven entirely by the engine's incremental QoS
+//! capture: every snapshot-window close feeds each channel's windowed
+//! metrics to [`AdaptiveController::observe_window`]. Decisions are a
+//! pure function of (windowed QoS, seeded RNG stream), with zero
+//! wall-clock input — adaptive runs are exactly as deterministic and
+//! golden-eligible as static ones, and the whole controller state rides
+//! the `EBCK` checkpoint so checkpoint-at-t + resume stays bit-identical.
+//!
+//! Escalation is per-channel and *relative to the channel's own
+//! baseline*: the first finite delivery-latency window a channel
+//! observes becomes its reference cost, making the trigger
+//! topology-aware (an internode link is judged against internode cost,
+//! an intranode link against intranode cost) in the spirit of Bienz et
+//! al.'s node-aware P2P models.
+
+use crate::conduit::Discipline;
+use crate::qos::QosMetrics;
+use crate::sim::checkpoint::{Persist, SnapError, SnapReader, SnapWriter};
+use crate::sim::modes::AsyncMode;
+use crate::util::rng::{Rng, Xoshiro256};
+
+impl Discipline {
+    /// The discipline every channel gets under a uniform global mode.
+    /// (Defined here rather than in `conduit` so the transport layer
+    /// stays independent of the simulation's mode vocabulary.)
+    pub fn uniform(mode: AsyncMode) -> Discipline {
+        if !mode.communicates() {
+            Discipline::Muted
+        } else if mode.uses_barriers() {
+            Discipline::Barriered
+        } else {
+            Discipline::BestEffort
+        }
+    }
+}
+
+/// Per-run communication policy.
+#[derive(Clone, Copy, Debug)]
+pub enum PolicyConfig {
+    /// Every channel follows one global [`AsyncMode`] — the paper's
+    /// setup. Bit-identical to the pre-policy engine for all five modes.
+    Uniform(AsyncMode),
+    /// A barriered base mode plus the adaptive per-channel controller.
+    Adaptive(AdaptiveConfig),
+}
+
+impl PolicyConfig {
+    /// The global mode the engine's send/pull/barrier cadence is built
+    /// on. `SimConfig::mode` always equals this; the adaptive layer only
+    /// subtracts channels (and their endpoints) from the barrier set.
+    pub fn base_mode(&self) -> AsyncMode {
+        match self {
+            PolicyConfig::Uniform(m) => *m,
+            PolicyConfig::Adaptive(a) => a.base,
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, PolicyConfig::Adaptive(_))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyConfig::Uniform(m) => m.label().to_string(),
+            PolicyConfig::Adaptive(a) => format!("adaptive (base {})", a.base.label()),
+        }
+    }
+}
+
+/// Thresholds and hysteresis for the adaptive controller.
+///
+/// A channel escalates to best-effort when a closed QoS window shows
+/// either delivery latency above `latency_ratio` × the channel's own
+/// baseline, delivery failure above `failure_threshold`, or coagulation
+/// (clumpiness) above `clumpiness_threshold`. It heals back to the
+/// barriered base discipline only after `heal_windows` consecutive
+/// healthy windows plus a small seeded jitter (anti-flap hysteresis).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// The barriered mode healthy channels follow. Best-effort or
+    /// no-comm bases are legal but inert (nothing to escalate from).
+    pub base: AsyncMode,
+    /// Escalate when windowed delivery latency exceeds this multiple of
+    /// the channel's first observed (baseline) latency.
+    pub latency_ratio: f64,
+    /// Escalate when windowed delivery failure rate exceeds this.
+    pub failure_threshold: f64,
+    /// Escalate when windowed delivery clumpiness exceeds this.
+    /// Defaults close to 1.0 so only pathological coagulation fires.
+    pub clumpiness_threshold: f64,
+    /// Consecutive healthy windows required before a channel heals.
+    pub heal_windows: u32,
+    /// Up to this many extra healthy windows (drawn per escalation from
+    /// the controller's seeded stream) are demanded on top, so a clique
+    /// of channels does not flap back in lockstep.
+    pub heal_jitter: u32,
+    /// Salt XORed into the run seed for the controller's RNG stream.
+    pub salt: u64,
+}
+
+impl AdaptiveConfig {
+    /// Defaults tuned for the fault-scenario families: a lac417-style
+    /// degrade multiplies link latency 4–10×, so a 2.5× baseline ratio
+    /// fires on it without tripping on healthy lognormal jitter; the
+    /// failure bar sits well above best-effort's quiescent drop floor.
+    pub fn paper_defaults(base: AsyncMode) -> Self {
+        Self {
+            base,
+            latency_ratio: 2.5,
+            failure_threshold: 0.25,
+            clumpiness_threshold: 0.995,
+            heal_windows: 2,
+            heal_jitter: 2,
+            salt: 0xADA7_71FE,
+        }
+    }
+}
+
+/// Runtime state of the adaptive controller: one escalation flag plus
+/// hysteresis bookkeeping per channel. Lives in the engine only when the
+/// policy is [`PolicyConfig::Adaptive`]; uniform runs allocate nothing.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// Channel is currently best-effort (escalated out of the barrier set).
+    escalated: Vec<bool>,
+    /// First finite windowed delivery latency seen per channel
+    /// (NaN = not yet calibrated).
+    baseline_latency: Vec<f64>,
+    /// Consecutive healthy windows while escalated.
+    healthy_streak: Vec<u32>,
+    /// Healthy windows demanded before this escalation heals.
+    heal_target: Vec<u32>,
+    rng: Xoshiro256,
+    /// Lifetime escalations (channel flips to best-effort).
+    pub flips: u64,
+    /// Lifetime heals (channel returns to the barriered base).
+    pub heals: u64,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig, n_channels: usize, run_seed: u64) -> Self {
+        Self {
+            cfg,
+            escalated: vec![false; n_channels],
+            baseline_latency: vec![f64::NAN; n_channels],
+            healthy_streak: vec![0; n_channels],
+            heal_target: vec![0; n_channels],
+            rng: Xoshiro256::new(run_seed ^ cfg.salt),
+            flips: 0,
+            heals: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.escalated.len()
+    }
+
+    /// Is this channel currently escalated to best-effort?
+    pub fn escalated(&self, cid: usize) -> bool {
+        self.escalated[cid]
+    }
+
+    pub fn escalated_count(&self) -> usize {
+        self.escalated.iter().filter(|e| **e).count()
+    }
+
+    /// Feed one closed QoS window for channel `cid`. Returns true when
+    /// the channel's discipline changed (caller must recompute the
+    /// barrier membership).
+    pub fn observe_window(&mut self, cid: usize, m: &QosMetrics) -> bool {
+        let lat = m.walltime_latency_ns;
+        if self.baseline_latency[cid].is_nan() {
+            // Calibration: the first window with real deliveries fixes
+            // the channel's reference cost; no decision is taken yet.
+            if lat.is_finite() && lat > 0.0 {
+                self.baseline_latency[cid] = lat;
+            }
+            return false;
+        }
+        let slow = lat.is_finite() && lat > self.cfg.latency_ratio * self.baseline_latency[cid];
+        let lossy = m.delivery_failure_rate.is_finite()
+            && m.delivery_failure_rate > self.cfg.failure_threshold;
+        let clumped = m.delivery_clumpiness.is_finite()
+            && m.delivery_clumpiness > self.cfg.clumpiness_threshold;
+        let degraded = slow || lossy || clumped;
+
+        if !self.escalated[cid] {
+            if degraded {
+                self.escalated[cid] = true;
+                self.healthy_streak[cid] = 0;
+                self.heal_target[cid] = self.cfg.heal_windows
+                    + self.rng.below(u64::from(self.cfg.heal_jitter) + 1) as u32;
+                self.flips += 1;
+                return true;
+            }
+            return false;
+        }
+        if degraded {
+            self.healthy_streak[cid] = 0;
+            return false;
+        }
+        self.healthy_streak[cid] += 1;
+        if self.healthy_streak[cid] >= self.heal_target[cid] {
+            self.escalated[cid] = false;
+            self.healthy_streak[cid] = 0;
+            self.heals += 1;
+            return true;
+        }
+        false
+    }
+}
+
+// ---- checkpoint encoding ---------------------------------------------
+
+impl Persist for PolicyConfig {
+    fn save(&self, w: &mut SnapWriter) {
+        match self {
+            PolicyConfig::Uniform(m) => {
+                w.put_u8(0);
+                m.save(w);
+            }
+            PolicyConfig::Adaptive(a) => {
+                w.put_u8(1);
+                a.save(w);
+            }
+        }
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        match r.get_u8()? {
+            0 => Ok(PolicyConfig::Uniform(AsyncMode::load(r)?)),
+            1 => Ok(PolicyConfig::Adaptive(AdaptiveConfig::load(r)?)),
+            _ => Err(SnapError::Corrupt("policy tag")),
+        }
+    }
+}
+
+impl Persist for AdaptiveConfig {
+    fn save(&self, w: &mut SnapWriter) {
+        self.base.save(w);
+        self.latency_ratio.save(w);
+        self.failure_threshold.save(w);
+        self.clumpiness_threshold.save(w);
+        self.heal_windows.save(w);
+        self.heal_jitter.save(w);
+        self.salt.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        Ok(Self {
+            base: AsyncMode::load(r)?,
+            latency_ratio: f64::load(r)?,
+            failure_threshold: f64::load(r)?,
+            clumpiness_threshold: f64::load(r)?,
+            heal_windows: u32::load(r)?,
+            heal_jitter: u32::load(r)?,
+            salt: u64::load(r)?,
+        })
+    }
+}
+
+impl Persist for AdaptiveController {
+    fn save(&self, w: &mut SnapWriter) {
+        self.cfg.save(w);
+        self.escalated.save(w);
+        self.baseline_latency.save(w);
+        self.healthy_streak.save(w);
+        self.heal_target.save(w);
+        self.rng.state().save(w);
+        self.flips.save(w);
+        self.heals.save(w);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self, SnapError> {
+        let cfg = AdaptiveConfig::load(r)?;
+        let escalated = Vec::<bool>::load(r)?;
+        let baseline_latency = Vec::<f64>::load(r)?;
+        let healthy_streak = Vec::<u32>::load(r)?;
+        let heal_target = Vec::<u32>::load(r)?;
+        let rng = Xoshiro256::from_state(<[u64; 4]>::load(r)?);
+        let flips = u64::load(r)?;
+        let heals = u64::load(r)?;
+        let n = escalated.len();
+        if baseline_latency.len() != n || healthy_streak.len() != n || heal_target.len() != n {
+            return Err(SnapError::Corrupt("controller vector lengths disagree"));
+        }
+        Ok(Self {
+            cfg,
+            escalated,
+            baseline_latency,
+            healthy_streak,
+            heal_target,
+            rng,
+            flips,
+            heals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(lat: f64, fail: f64, clump: f64) -> QosMetrics {
+        QosMetrics {
+            simstep_period_ns: 1000.0,
+            simstep_latency: 1.0,
+            walltime_latency_ns: lat,
+            delivery_failure_rate: fail,
+            delivery_clumpiness: clump,
+        }
+    }
+
+    fn controller() -> AdaptiveController {
+        AdaptiveController::new(AdaptiveConfig::paper_defaults(AsyncMode::Sync), 4, 0x5EED)
+    }
+
+    #[test]
+    fn uniform_discipline_matches_mode_semantics() {
+        assert_eq!(Discipline::uniform(AsyncMode::Sync), Discipline::Barriered);
+        assert_eq!(
+            Discipline::uniform(AsyncMode::RollingBarrier),
+            Discipline::Barriered
+        );
+        assert_eq!(
+            Discipline::uniform(AsyncMode::FixedBarrier),
+            Discipline::Barriered
+        );
+        assert_eq!(
+            Discipline::uniform(AsyncMode::BestEffort),
+            Discipline::BestEffort
+        );
+        assert_eq!(Discipline::uniform(AsyncMode::NoComm), Discipline::Muted);
+    }
+
+    #[test]
+    fn first_window_calibrates_without_deciding() {
+        let mut c = controller();
+        // Even an expensive first window only sets the baseline.
+        assert!(!c.observe_window(0, &metrics(1e6, 0.0, 0.1)));
+        assert!(!c.escalated(0));
+        // Second window at 3x baseline escalates (ratio 2.5).
+        assert!(c.observe_window(0, &metrics(3e6, 0.0, 0.1)));
+        assert!(c.escalated(0));
+        assert_eq!(c.flips, 1);
+    }
+
+    #[test]
+    fn failure_rate_escalates_and_hysteresis_heals() {
+        let mut c = controller();
+        c.observe_window(1, &metrics(1000.0, 0.0, 0.1));
+        assert!(c.observe_window(1, &metrics(1000.0, 0.9, 0.1)));
+        assert!(c.escalated(1));
+        // Healthy windows accumulate; a relapse resets the streak.
+        let target = c.heal_target[1];
+        assert!(target >= c.cfg.heal_windows);
+        c.observe_window(1, &metrics(1000.0, 0.0, 0.1));
+        c.observe_window(1, &metrics(1000.0, 0.9, 0.1)); // relapse
+        assert_eq!(c.healthy_streak[1], 0);
+        let mut healed = false;
+        for _ in 0..target + 1 {
+            healed = c.observe_window(1, &metrics(1000.0, 0.0, 0.1)) || healed;
+        }
+        assert!(healed && !c.escalated(1));
+        assert_eq!(c.heals, 1);
+    }
+
+    #[test]
+    fn nan_windows_are_quiet_not_degraded() {
+        let mut c = controller();
+        c.observe_window(2, &metrics(1000.0, 0.0, 0.1));
+        // A window with no deliveries (NaN latency, zero failures) must
+        // neither escalate nor count against a healthy link.
+        assert!(!c.observe_window(2, &metrics(f64::NAN, 0.0, f64::NAN)));
+        assert!(!c.escalated(2));
+    }
+
+    #[test]
+    fn controller_persist_round_trips_bitwise() {
+        let mut c = controller();
+        c.observe_window(0, &metrics(1000.0, 0.0, 0.1));
+        c.observe_window(0, &metrics(9000.0, 0.0, 0.1));
+        c.observe_window(3, &metrics(500.0, 0.5, 0.2));
+        let mut w = SnapWriter::new();
+        c.save(&mut w);
+        let bytes = w.finish();
+        let mut r = SnapReader::new(&bytes).unwrap();
+        let back = AdaptiveController::load(&mut r).unwrap();
+        assert!(r.is_exhausted());
+        let mut w2 = SnapWriter::new();
+        back.save(&mut w2);
+        assert_eq!(bytes, w2.finish());
+        assert_eq!(back.escalated, c.escalated);
+        assert_eq!(back.flips, c.flips);
+    }
+
+    #[test]
+    fn identical_streams_make_identical_decisions() {
+        let run = |seed: u64| {
+            let mut c = AdaptiveController::new(
+                AdaptiveConfig::paper_defaults(AsyncMode::Sync),
+                8,
+                seed,
+            );
+            let mut trace = Vec::new();
+            for step in 0..64u64 {
+                for cid in 0..8 {
+                    let lat = 1000.0 + ((step * 7 + cid as u64) % 13) as f64 * 400.0;
+                    let fail = if step % 11 == cid as u64 % 11 { 0.6 } else { 0.0 };
+                    c.observe_window(cid, &metrics(lat, fail, 0.1));
+                    trace.push(c.escalated(cid));
+                }
+            }
+            (trace, c.flips, c.heals)
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42).0, run(43).0, "seed must matter somewhere");
+    }
+}

@@ -37,7 +37,7 @@ fn scenario_run(
         })
         .collect();
     let mut cfg =
-        SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
+        SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(n_procs), run_for);
     cfg.seed = seed;
     cfg.send_buffer = 64;
     // Phase-tag and per-window assertions need the exact QoS stream; pin
@@ -100,7 +100,7 @@ fn lac417_scenario_matches_static_fault_shape() {
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(n), 300 * MILLI);
+    let mut cfg = SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(n), 300 * MILLI);
     cfg.seed = 9;
     cfg.send_buffer = 64;
     let profiles = profiles_with_faulty(&topo, 5);

@@ -40,7 +40,7 @@ fn gc_sim(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_for);
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(n_procs), run_for);
     cfg.seed = seed;
     cfg.send_buffer = 64;
     cfg.backend = backend;
@@ -161,7 +161,7 @@ fn internode_latency_exceeds_intranode() {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(2),
             SECOND,
@@ -239,7 +239,7 @@ fn digital_evolution_runs_under_engine_and_accrues_fitness() {
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(
+    let mut cfg = SimConfig::from_env(
         AsyncMode::BestEffort,
         ModeTiming::digital_evolution(4),
         100 * MILLI,
@@ -341,7 +341,7 @@ fn golden_engine_run_full(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 120 * MILLI);
+    let mut cfg = SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 120 * MILLI);
     cfg.seed = 0x601D;
     cfg.send_buffer = 4;
     cfg.sched = sched;
@@ -497,7 +497,7 @@ fn scheduler_choice_is_bit_invisible_across_modes() {
                 })
                 .collect();
             let mut cfg =
-                SimConfig::new(mode, ModeTiming::graph_coloring(8), 40 * MILLI);
+                SimConfig::from_env(mode, ModeTiming::graph_coloring(8), 40 * MILLI);
             cfg.seed = 0x5EED;
             cfg.send_buffer = 4;
             cfg.sched = sched;
@@ -562,7 +562,7 @@ fn barrier_storm_1024_procs_batched_release_matches_looped_reference() {
             })
             .collect();
         let mut cfg =
-            SimConfig::new(AsyncMode::Sync, ModeTiming::graph_coloring(n), 12 * MILLI);
+            SimConfig::from_env(AsyncMode::Sync, ModeTiming::graph_coloring(n), 12 * MILLI);
         cfg.seed = 0xB44;
         cfg.send_buffer = 2;
         cfg.sched = sched;

@@ -34,7 +34,7 @@ fn run_gc(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(n_procs), run_ms * MILLI);
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(n_procs), run_ms * MILLI);
     cfg.seed = seed;
     cfg.send_buffer = buffer;
     let profiles = healthy_profiles(&topo);
@@ -220,7 +220,7 @@ fn prop_qos_metrics_in_range_for_random_windows() {
                 )
             })
             .collect();
-        let mut cfg = SimConfig::new(
+        let mut cfg = SimConfig::from_env(
             AsyncMode::BestEffort,
             ModeTiming::graph_coloring(n_procs),
             120 * MILLI,

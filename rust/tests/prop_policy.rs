@@ -1,0 +1,432 @@
+//! Policy-refactor equivalence and adaptive-controller determinism.
+//!
+//! The per-channel policy layer must be invisible when uniform: a
+//! `SimConfig` built the historical way (global `AsyncMode`, no explicit
+//! policy) and one built with `with_policy(PolicyConfig::Uniform(m))`
+//! must produce **bit-identical** runs for every mode, under both
+//! scheduler kinds and both stepping paths — including on the recorded
+//! golden-signature scenario. The adaptive controller must be a pure
+//! function of `(scenario, seed)`: same inputs reproduce the same run,
+//! and `checkpoint-at-t + restore + run == straight-through run` with
+//! controller state (baselines, escalation set, hysteresis counters)
+//! carried through the snapshot.
+
+use ebcomm::faults::FaultScenario;
+use ebcomm::net::{PlacementKind, Topology};
+use ebcomm::qos::{QosStorage, SnapshotSchedule};
+use ebcomm::sim::{
+    healthy_profiles, heterogeneous_profiles, AdaptiveConfig, AsyncMode, Engine, ModeTiming,
+    PolicyConfig, SchedKind, SimConfig, SimResult, StepPath,
+};
+use ebcomm::testing::prop::{forall, prop_assert, Config, Gen, PropResult};
+use ebcomm::util::rng::Xoshiro256;
+use ebcomm::util::{Nanos, MILLI};
+use ebcomm::workloads::graph_coloring::{GcConfig, GraphColoringShard};
+
+const N_PROCS: usize = 4;
+const RUN_FOR: Nanos = 60 * MILLI;
+
+/// Snapshot windows at 10–18, 25–33, and 40–48 ms. With the storm
+/// scenarios below active roughly 20–40 ms in, the first window closes
+/// healthy (controller baseline calibration), the second closes degraded
+/// (escalation), and the third closes after the link heals.
+fn windows() -> SnapshotSchedule {
+    SnapshotSchedule::compressed(10 * MILLI, 15 * MILLI, 8 * MILLI, 3)
+}
+
+fn make_engine(
+    mode: AsyncMode,
+    seed: u64,
+    sched: SchedKind,
+    step: StepPath,
+    scenario: FaultScenario,
+    policy: Option<PolicyConfig>,
+) -> Engine<GraphColoringShard> {
+    let topo = Topology::new(N_PROCS, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(seed);
+    let shards: Vec<_> = (0..N_PROCS)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 2,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+    if let Some(p) = policy {
+        cfg = cfg.with_policy(p);
+    }
+    cfg.seed = seed;
+    cfg.send_buffer = 16;
+    cfg.sched = sched;
+    cfg.step = step;
+    // The fingerprints below fold exact QoS streams; pin the storage
+    // mode so `EBCOMM_QOS=sketch` cannot empty them.
+    cfg.qos_storage = QosStorage::Exact;
+    cfg.snapshots = Some(windows());
+    cfg.scenario = scenario;
+    let profiles = healthy_profiles(&topo);
+    Engine::new(cfg, topo, profiles, shards)
+}
+
+/// Everything observable about a finished run, bit-exact: per-proc
+/// updates, the five conservation counters, final colors, QoS metric
+/// streams, and the three policy-controller counters.
+#[allow(clippy::type_complexity)]
+fn fp(r: &SimResult<GraphColoringShard>) -> (Vec<u64>, [u64; 5], Vec<u8>, Vec<u64>, [u64; 3]) {
+    let colors: Vec<u8> = r.shards.iter().flat_map(|s| s.colors().to_vec()).collect();
+    let qos_bits: Vec<u64> = r
+        .windows
+        .iter()
+        .flat_map(|w| {
+            let m = w.metrics();
+            [
+                m.simstep_period_ns.to_bits(),
+                m.delivery_failure_rate.to_bits(),
+                m.walltime_latency_ns.to_bits(),
+                w.phase().bits(),
+            ]
+        })
+        .collect();
+    (
+        r.updates.clone(),
+        [
+            r.attempted_sends,
+            r.successful_sends,
+            r.messages_delivered,
+            r.messages_purged,
+            r.messages_in_flight,
+        ],
+        colors,
+        qos_bits,
+        [r.policy_flips, r.policy_heals, r.policy_escalated_final],
+    )
+}
+
+/// FNV-1a accumulator for building order-sensitive result signatures
+/// (mirrors the golden-value machinery in `integration_sim.rs`).
+struct Sig(u64);
+
+impl Sig {
+    fn new() -> Self {
+        Sig(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn push_f64(&mut self, x: f64) {
+        self.push_u64(x.to_bits());
+    }
+}
+
+/// Bit-exact signature matching `integration_sim.rs`'s golden fold:
+/// per-process update counts, global send accounting, every window
+/// observation, and every QoS snapshot.
+fn engine_signature(r: &SimResult<GraphColoringShard>) -> u64 {
+    let mut s = Sig::new();
+    for &u in &r.updates {
+        s.push_u64(u);
+    }
+    s.push_u64(r.attempted_sends);
+    s.push_u64(r.successful_sends);
+    for w in &r.windows {
+        for obs in [&w.inlet_before, &w.inlet_after, &w.outlet_before, &w.outlet_after] {
+            s.push_u64(obs.update_count);
+            s.push_u64(obs.wall_ns);
+            let c = obs.counters;
+            s.push_u64(c.attempted_sends);
+            s.push_u64(c.successful_sends);
+            s.push_u64(c.pull_attempts);
+            s.push_u64(c.laden_pulls);
+            s.push_u64(c.messages_received);
+            s.push_u64(c.touches);
+        }
+    }
+    for m in &r.qos.snapshots {
+        s.push_f64(m.simstep_period_ns);
+        s.push_f64(m.simstep_latency);
+        s.push_f64(m.walltime_latency_ns);
+        s.push_f64(m.delivery_failure_rate);
+        s.push_f64(m.delivery_clumpiness);
+    }
+    s.0
+}
+
+/// The exact engine scenario behind the recorded golden signature
+/// (`tests/golden/engine_signature.txt`), with the policy passed in
+/// explicitly instead of defaulted.
+fn golden_run(
+    sched: SchedKind,
+    step: StepPath,
+    policy: Option<PolicyConfig>,
+) -> SimResult<GraphColoringShard> {
+    let topo = Topology::new(4, PlacementKind::OnePerNode);
+    let mut rng = Xoshiro256::new(0x601D);
+    let shards: Vec<_> = (0..4)
+        .map(|r| {
+            GraphColoringShard::new(
+                GcConfig {
+                    simels_per_proc: 16,
+                    ..GcConfig::default()
+                },
+                &topo,
+                r,
+                &mut rng,
+            )
+        })
+        .collect();
+    let mut cfg =
+        SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(4), 120 * MILLI);
+    if let Some(p) = policy {
+        cfg = cfg.with_policy(p);
+    }
+    cfg.seed = 0x601D;
+    cfg.send_buffer = 4;
+    cfg.sched = sched;
+    cfg.step = step;
+    cfg.qos_storage = QosStorage::Exact;
+    cfg.snapshots = Some(SnapshotSchedule::compressed(
+        30 * MILLI,
+        30 * MILLI,
+        10 * MILLI,
+        3,
+    ));
+    let profiles = heterogeneous_profiles(&topo, 0x601D, 0.20);
+    Engine::new(cfg, topo, profiles, shards).run()
+}
+
+/// A fault scenario drawn from the same small family the checkpoint grid
+/// uses, all valid on a 4-node / 4-proc topology.
+fn gen_scenario(g: &mut Gen) -> FaultScenario {
+    match g.usize_in(0, 4) {
+        0 => FaultScenario::default(),
+        1 => FaultScenario::congestion_storm(20 * MILLI, 25 * MILLI),
+        2 => FaultScenario::degrade_recover(1, 15 * MILLI, 20 * MILLI),
+        3 => FaultScenario::flapping_clique(2, 20 * MILLI, 25 * MILLI, 3 * MILLI, 2 * MILLI),
+        _ => FaultScenario::lac417(2),
+    }
+}
+
+/// `PolicyConfig::Uniform(m)` is the refactor's identity element: for
+/// every mode, both scheduler kinds, and both stepping paths, an engine
+/// configured the historical way (no explicit policy) and one configured
+/// through `with_policy` produce bit-identical runs — on a faulted
+/// scenario, so the overlay and purge paths are exercised too.
+#[test]
+fn uniform_policy_is_bit_identical_to_global_mode() {
+    let scenario = || FaultScenario::congestion_storm(20 * MILLI, 25 * MILLI);
+    for mode in AsyncMode::ALL {
+        for sched in [SchedKind::Heap, SchedKind::Calendar] {
+            for step in [StepPath::Dense, StepPath::IdleSkip] {
+                let seed = 0x90_11C4 + mode.index() as u64;
+                let old = make_engine(mode, seed, sched, step, scenario(), None).run();
+                let new = make_engine(
+                    mode,
+                    seed,
+                    sched,
+                    step,
+                    scenario(),
+                    Some(PolicyConfig::Uniform(mode)),
+                )
+                .run();
+                assert_eq!(
+                    fp(&old),
+                    fp(&new),
+                    "Uniform({}) diverged from global mode under {sched:?}/{step:?}",
+                    mode.label(),
+                );
+                assert_eq!(old.policy_flips, 0, "uniform policy must never flip");
+                assert_eq!(new.policy_escalated_final, 0);
+            }
+        }
+    }
+}
+
+/// The golden-signature scenario itself is invariant under the explicit
+/// uniform policy, for both scheduler kinds and both stepping paths —
+/// and still matches `tests/golden/engine_signature.txt` where recorded.
+/// This is the refactor's headline guarantee: the API redesign did not
+/// move a single bit of the blessed run.
+#[test]
+fn uniform_policy_preserves_golden_signature() {
+    let baseline = engine_signature(&golden_run(SchedKind::Heap, StepPath::IdleSkip, None));
+    for sched in [SchedKind::Heap, SchedKind::Calendar] {
+        for step in [StepPath::Dense, StepPath::IdleSkip] {
+            let sig = engine_signature(&golden_run(
+                sched,
+                step,
+                Some(PolicyConfig::Uniform(AsyncMode::BestEffort)),
+            ));
+            assert_eq!(
+                sig, baseline,
+                "explicit Uniform policy moved the golden signature under {sched:?}/{step:?}"
+            );
+        }
+    }
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/engine_signature.txt");
+    if let Ok(recorded) = std::fs::read_to_string(&golden_path) {
+        assert_eq!(
+            format!("{baseline:016x}"),
+            recorded.trim(),
+            "policy refactor diverged from the recorded golden signature"
+        );
+    }
+}
+
+/// Randomized grid over `(mode, sched, step, seed, scenario)`: the
+/// uniform-policy equivalence holds everywhere, not just on hand-picked
+/// cells.
+#[test]
+fn prop_uniform_policy_equivalence_grid() {
+    fn case(g: &mut Gen) -> PropResult {
+        let mode = *g.choose(&AsyncMode::ALL);
+        let sched = if g.chance(0.5) {
+            SchedKind::Heap
+        } else {
+            SchedKind::Calendar
+        };
+        let step = if g.chance(0.5) {
+            StepPath::Dense
+        } else {
+            StepPath::IdleSkip
+        };
+        let seed = g.u64_in(1, 1 << 40);
+        let scenario = gen_scenario(g);
+        let old = make_engine(mode, seed, sched, step, scenario.clone(), None).run();
+        let new = make_engine(
+            mode,
+            seed,
+            sched,
+            step,
+            scenario,
+            Some(PolicyConfig::Uniform(mode)),
+        )
+        .run();
+        prop_assert(
+            fp(&old) == fp(&new),
+            format!(
+                "Uniform({}) != global mode at seed {seed:#x} under {sched:?}/{step:?}",
+                mode.label()
+            ),
+        )?;
+        prop_assert(old.conserves_messages(), "conservation broken")?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() { 40 } else { 10 };
+    forall(Config::default().cases(cases).seed(0x7011_C411), case);
+}
+
+fn adaptive_policy() -> PolicyConfig {
+    PolicyConfig::Adaptive(AdaptiveConfig::paper_defaults(AsyncMode::Sync))
+}
+
+/// The adaptive controller is a deterministic function of
+/// `(scenario, seed)`: two identical runs match bit-for-bit, including
+/// the controller's own flip/heal accounting — and on a mid-run
+/// congestion storm (25x latency against a healthy calibrated baseline)
+/// it provably acts, so the determinism claim is not vacuous.
+#[test]
+fn adaptive_controller_is_deterministic_per_scenario_and_seed() {
+    let scenario = || FaultScenario::congestion_storm(20 * MILLI, 20 * MILLI);
+    let mk = |seed, sched| {
+        make_engine(
+            AsyncMode::Sync,
+            seed,
+            sched,
+            StepPath::IdleSkip,
+            scenario(),
+            Some(adaptive_policy()),
+        )
+        .run()
+    };
+    let a = mk(0xADA7, SchedKind::Heap);
+    let b = mk(0xADA7, SchedKind::Heap);
+    assert_eq!(fp(&a), fp(&b), "same (scenario, seed) must reproduce exactly");
+    assert!(
+        a.policy_flips >= 1,
+        "a 25x mid-run congestion storm must trip the latency-ratio escalation \
+         (flips = {})",
+        a.policy_flips
+    );
+    assert!(a.conserves_messages());
+
+    // Different seeds are allowed to differ in outcome, but each must be
+    // self-reproducible.
+    let c = mk(0xADA8, SchedKind::Heap);
+    let d = mk(0xADA8, SchedKind::Heap);
+    assert_eq!(fp(&c), fp(&d));
+}
+
+/// Adaptive checkpoint/restore grid: random `(seed, sched, checkpoint
+/// t)` over a storm scenario; the controller's runtime state (baselines,
+/// escalated set, hysteresis counters, RNG) rides the `SNAP_VERSION=4`
+/// blob, so `checkpoint-at-t + restore + run == straight-through run`
+/// bit-for-bit, including under the *other* scheduler kind.
+#[test]
+fn prop_adaptive_checkpoint_restore_is_bit_identical() {
+    fn case(g: &mut Gen) -> PropResult {
+        let seed = g.u64_in(1, 1 << 40);
+        let sched = if g.chance(0.5) {
+            SchedKind::Heap
+        } else {
+            SchedKind::Calendar
+        };
+        let other = match sched {
+            SchedKind::Heap => SchedKind::Calendar,
+            SchedKind::Calendar => SchedKind::Heap,
+        };
+        // Land checkpoints before calibration, mid-storm (controller
+        // escalated), and after heal — all three regimes.
+        let at = g.u64_in(5 * MILLI, 55 * MILLI);
+        let scenario = FaultScenario::congestion_storm(20 * MILLI, 20 * MILLI);
+        let mk = |sched| {
+            make_engine(
+                AsyncMode::Sync,
+                seed,
+                sched,
+                StepPath::IdleSkip,
+                scenario.clone(),
+                Some(adaptive_policy()),
+            )
+        };
+        let straight = mk(sched).run();
+        let mut e = mk(sched);
+        let over = e.run_until(at);
+        prop_assert(!over, format!("t={at} landed past the run end"))?;
+        let blob = e.checkpoint();
+        prop_assert(
+            blob == e.checkpoint(),
+            "double checkpoint must be byte-equal",
+        )?;
+        let resumed = e.run();
+        let restored = match Engine::<GraphColoringShard>::restore(&blob) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("restore failed: {err:?}")),
+        };
+        let crossed = match Engine::<GraphColoringShard>::restore_with_sched(&blob, other) {
+            Ok(eng) => eng.run(),
+            Err(err) => return prop_assert(false, format!("cross restore failed: {err:?}")),
+        };
+        let want = fp(&straight);
+        prop_assert(fp(&resumed) == want, "adaptive pause+resume diverged")?;
+        prop_assert(fp(&restored) == want, "adaptive restore diverged")?;
+        prop_assert(
+            fp(&crossed) == want,
+            format!("adaptive cross-kind restore ({sched:?} -> {other:?}) diverged"),
+        )?;
+        Ok(())
+    }
+    let cases = if std::env::var("EBCOMM_FULL").is_ok() { 24 } else { 8 };
+    forall(Config::default().cases(cases).seed(0xADA7_C4EC), case);
+}

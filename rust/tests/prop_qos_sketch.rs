@@ -61,7 +61,7 @@ fn make_engine(
         })
         .collect();
     let mut cfg =
-        SimConfig::new(AsyncMode::BestEffort, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+        SimConfig::from_env(AsyncMode::BestEffort, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
     cfg.seed = seed;
     cfg.send_buffer = 16;
     cfg.sched = sched;

@@ -52,7 +52,7 @@ fn make_engine(
             )
         })
         .collect();
-    let mut cfg = SimConfig::new(mode, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
+    let mut cfg = SimConfig::from_env(mode, ModeTiming::graph_coloring(N_PROCS), RUN_FOR);
     cfg.seed = seed;
     cfg.send_buffer = 16;
     cfg.sched = sched;
